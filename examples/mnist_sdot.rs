@@ -1,0 +1,106 @@
+//! End-to-end driver: the full three-layer system on a real small workload.
+//!
+//! Pipeline (all layers composing):
+//!   data   — MNIST (IDX file under data/mnist/ if present, else the
+//!            matched-spectrum surrogate, d=784) partitioned over N=20 nodes;
+//!   L1/L2  — per-node covariances and OI steps through the AOT-compiled
+//!            JAX/Pallas artifacts when available (d=784 artifact shipped);
+//!   L3     — S-DOT vs SA-DOT over an Erdős–Rényi network with exact P2P
+//!            accounting (paper Table VI / Figs. 7–8 shape).
+//!
+//! Prints the error curve and the communication-cost comparison; the run
+//! is recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: `cargo run --release --example mnist_sdot [-- --to 100]`
+
+use dpsa::algorithms::sdot::{run_sdot_with_backend, SdotConfig};
+use dpsa::algorithms::SampleSetting;
+use dpsa::consensus::schedule::Schedule;
+use dpsa::data::datasets::{load_dataset, DatasetKind};
+use dpsa::graph::Graph;
+use dpsa::network::sim::SyncNetwork;
+use dpsa::runtime::{Backend, NativeBackend, XlaBackend};
+use dpsa::util::cli::Args;
+use dpsa::util::rng::Rng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let t_o = args.get_usize("to", 100);
+    let n_nodes = args.get_usize("nodes", 20);
+    let r = args.get_usize("r", 5);
+
+    println!("=== MNIST distributed PSA (d=784, N={n_nodes}, r={r}) ===");
+    let start = Instant::now();
+    let mut rng = Rng::new(args.get_u64("seed", 42));
+    let ds = load_dataset(DatasetKind::Mnist, n_nodes, Some(500), r, &mut rng);
+    println!(
+        "data: {} nodes × {} samples, d={} ({:.1}s)",
+        ds.parts.len(),
+        ds.parts[0].cols,
+        ds.d(),
+        start.elapsed().as_secs_f64()
+    );
+
+    let t = Instant::now();
+    let setting = SampleSetting::from_parts(&ds.parts, r, &mut rng);
+    println!("covariances + ground truth: {:.1}s", t.elapsed().as_secs_f64());
+
+    let g = Graph::erdos_renyi(n_nodes, 0.25, &mut rng);
+    println!("network: Erdős–Rényi p=0.25, avg degree {:.2}", g.avg_degree());
+
+    let xla;
+    let backend: &dyn Backend = {
+        let dir = XlaBackend::default_dir();
+        if XlaBackend::available(&dir) {
+            xla = XlaBackend::load(&dir)?;
+            println!("backend: xla (AOT JAX/Pallas artifacts)");
+            &xla
+        } else {
+            println!("backend: native");
+            &NativeBackend
+        }
+    };
+
+    // S-DOT, fixed T_c = 50.
+    let t = Instant::now();
+    let mut net1 = SyncNetwork::new(g.clone());
+    let mut cfg = SdotConfig::new(Schedule::fixed(50), t_o);
+    cfg.record_every = (t_o / 20).max(1);
+    let (_, tr_sdot) = run_sdot_with_backend(&mut net1, &setting, &cfg, backend);
+    let sdot_secs = t.elapsed().as_secs_f64();
+
+    // SA-DOT, T_c = min(2t+1, 50).
+    let t = Instant::now();
+    let mut net2 = SyncNetwork::new(g);
+    let mut cfg2 = SdotConfig::new(Schedule::adaptive(2.0, 1, 50), t_o);
+    cfg2.record_every = (t_o / 20).max(1);
+    let (estimates, tr_sadot) = run_sdot_with_backend(&mut net2, &setting, &cfg2, backend);
+    let sadot_secs = t.elapsed().as_secs_f64();
+
+    println!("\n  outer | S-DOT error | SA-DOT error");
+    for (a, b) in tr_sdot.records.iter().zip(tr_sadot.records.iter()) {
+        println!("  {:>5} | {:>11.3e} | {:>11.3e}", a.outer, a.error, b.error);
+    }
+    println!("\n                 S-DOT        SA-DOT");
+    println!(
+        "final error     {:.3e}   {:.3e}",
+        tr_sdot.final_error(),
+        tr_sadot.final_error()
+    );
+    println!(
+        "P2P msgs/node   {:>9.0}   {:>9.0}  ({:.0}% saved)",
+        tr_sdot.final_p2p(),
+        tr_sadot.final_p2p(),
+        100.0 * (1.0 - tr_sadot.final_p2p() / tr_sdot.final_p2p())
+    );
+    println!("wall time (s)   {sdot_secs:>9.1}   {sadot_secs:>9.1}");
+    println!(
+        "node agreement  {:.2e} (max pairwise subspace error)",
+        (1..estimates.len())
+            .map(|i| dpsa::metrics::subspace::subspace_error(&estimates[0], &estimates[i]))
+            .fold(0.0f64, f64::max)
+    );
+    println!("total wall time {:.1}s", start.elapsed().as_secs_f64());
+    Ok(())
+}

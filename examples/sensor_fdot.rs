@@ -1,0 +1,76 @@
+//! Feature-wise scenario: a sensor array observing a common signal.
+//!
+//! The paper motivates feature-wise partitioning with sensor arrays —
+//! each sensor captures *different features* (its own channel readings) of
+//! every event. Here 12 sensors each hold 4 channels of 600 shared events
+//! (d = 48 total features); F-DOT recovers the global top-r eigenspace
+//! with each sensor learning only its own 4 rows of Q, and is compared
+//! against the sequential d-PM baseline.
+//!
+//! Run: `cargo run --release --example sensor_fdot`
+
+use dpsa::algorithms::dpm_feature::{run_dpm_feature, DpmFeatureConfig};
+use dpsa::algorithms::fdot::{run_fdot, FdotConfig, FeatureSetting};
+use dpsa::data::partition::partition_features;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::graph::Graph;
+use dpsa::network::sim::SyncNetwork;
+use dpsa::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let sensors = 12;
+    let channels = 4;
+    let events = 600;
+    let r = 3;
+    let d = sensors * channels;
+
+    let mut rng = Rng::new(7);
+    // A common low-rank "scene" drives all sensors: spectrum with a clear
+    // top-r block and gap 0.4.
+    let spec = Spectrum::with_gap(d, r, 0.4);
+    let ds = SyntheticDataset::full(&spec, events, 1, &mut rng);
+    let parts = partition_features(&ds.parts[0], sensors);
+    println!(
+        "sensor array: {sensors} sensors × {channels} channels, {events} events (d={d}, r={r})"
+    );
+
+    let setting = FeatureSetting::new(parts, r, &mut rng);
+    let g = Graph::grid(3, 4); // sensors wired as a 3×4 mesh
+    println!("topology: 3×4 grid, diameter {}", g.diameter());
+
+    // F-DOT: simultaneous estimation with distributed QR.
+    let mut net = SyncNetwork::new(g.clone());
+    let cfg = FdotConfig { t_c: 40, t_ps: 40, t_o: 80, record_every: 4 };
+    let (blocks, tr_fdot) = run_fdot(&mut net, &setting, &cfg);
+    println!("\nF-DOT:");
+    for rec in tr_fdot.thin(8).records.iter() {
+        println!("  outer {:>3} | total iters {:>6} | error {:.3e}", rec.outer, rec.total_iters, rec.error);
+    }
+    println!(
+        "  each sensor holds a {}×{} block of Q; stacked error {:.2e}, {:.0} msgs/sensor",
+        blocks[0].rows,
+        blocks[0].cols,
+        tr_fdot.final_error(),
+        net.counters.avg()
+    );
+
+    // d-PM baseline: one eigenvector at a time.
+    let mut net2 = SyncNetwork::new(g);
+    let cfg2 = DpmFeatureConfig { iters_per_vec: 80, t_c: 40, record_every: 10 };
+    let (_, tr_dpm) = run_dpm_feature(&mut net2, &setting, &cfg2);
+    println!(
+        "\nd-PM (sequential baseline): final error {:.2e} after {} total iters ({} for F-DOT)",
+        tr_dpm.final_error(),
+        tr_dpm.total_iters(),
+        tr_fdot.total_iters(),
+    );
+
+    let tol = 1e-4;
+    match (tr_fdot.iters_to_error(tol), tr_dpm.iters_to_error(tol)) {
+        (Some(a), Some(b)) => println!("iters to {tol:.0e}: F-DOT {a} vs d-PM {b}"),
+        (Some(a), None) => println!("iters to {tol:.0e}: F-DOT {a}; d-PM never reached it"),
+        _ => {}
+    }
+    Ok(())
+}

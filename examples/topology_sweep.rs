@@ -1,0 +1,66 @@
+//! Topology ablation: how graph structure shapes convergence and cost.
+//!
+//! Sweeps Erdős–Rényi densities, ring, star, path, grid and complete
+//! graphs at N=16 and reports mixing diagnostics (SLEM, eq.-5 mixing
+//! time), final error and P2P per node for a fixed S-DOT budget —
+//! the Fig. 2/3 story plus extra topologies.
+//!
+//! Run: `cargo run --release --example topology_sweep`
+
+use dpsa::algorithms::sdot::{run_sdot, SdotConfig};
+use dpsa::algorithms::SampleSetting;
+use dpsa::consensus::mixing::{mixing_time, slem};
+use dpsa::consensus::schedule::Schedule;
+use dpsa::consensus::weights::local_degree_weights;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::graph::Graph;
+use dpsa::network::sim::SyncNetwork;
+use dpsa::util::rng::Rng;
+
+fn main() {
+    let n = 16;
+    let mut rng = Rng::new(123);
+    let spec = Spectrum::with_gap(20, 5, 0.7);
+    let ds = SyntheticDataset::full(&spec, 500, n, &mut rng);
+    let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+
+    println!(
+        "{:<14} {:>7} {:>6} {:>7} {:>9} {:>11}",
+        "topology", "degree", "SLEM", "τ_mix", "P2P/node", "final err"
+    );
+
+    let topologies: Vec<(String, Graph)> = vec![
+        ("er(p=0.6)".into(), Graph::erdos_renyi(n, 0.6, &mut rng)),
+        ("er(p=0.3)".into(), Graph::erdos_renyi(n, 0.3, &mut rng)),
+        ("er(p=0.15)".into(), Graph::erdos_renyi(n, 0.15, &mut rng)),
+        ("ring".into(), Graph::ring(n)),
+        ("star".into(), Graph::star(n)),
+        ("path".into(), Graph::path(n)),
+        ("grid(4x4)".into(), Graph::grid(4, 4)),
+        ("complete".into(), Graph::complete(n)),
+    ];
+
+    for (name, g) in topologies {
+        let wm = local_degree_weights(&g);
+        let s = slem(&wm);
+        let tau = mixing_time(&wm, 100_000)
+            .map(|t| t.to_string())
+            .unwrap_or_else(|| "∞".into());
+        let mut net = SyncNetwork::new(g.clone());
+        let mut cfg = SdotConfig::new(Schedule::fixed(50), 60);
+        cfg.record_every = 60;
+        let (_, trace) = run_sdot(&mut net, &setting, &cfg);
+        println!(
+            "{:<14} {:>7.2} {:>6.3} {:>7} {:>9.0} {:>11.2e}",
+            name,
+            g.avg_degree(),
+            s,
+            tau,
+            net.counters.avg(),
+            trace.final_error()
+        );
+    }
+    println!("\nReads: lower SLEM ⇒ faster consensus ⇒ lower error floor at the");
+    println!("same budget; denser graphs pay with more messages per round.");
+}

@@ -1,0 +1,94 @@
+"""AOT export: lower the L2 JAX functions to HLO **text** artifacts.
+
+Interchange is HLO text, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (behind the
+`xla` crate) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/load_hlo and the repo DESIGN.md §5).
+
+Usage:  cd python && python -m compile.aot [--out-dir ../artifacts]
+
+Python runs exactly once (`make artifacts` skips when outputs are newer
+than inputs); the Rust binary is self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def manifest_entries():
+    """(name, op, fn, arg specs) for every artifact.
+
+    Shape set: the paper's synthetic config (d=20, r=5, n_i=500), a medium
+    config for tests (d=64, r=8), and the MNIST-surrogate hot path
+    (d=784, r=5). Consensus combine is padded to K=8 neighbors.
+    """
+    entries = []
+
+    def add(op, fn, *args, tag=""):
+        shapes = [list(a.shape) for a in args]
+        name = f"{op}_" + "_".join("x".join(str(d) for d in a.shape) for a in args)
+        if tag:
+            name = f"{name}_{tag}"
+        entries.append((name, op, fn, args, shapes))
+
+    for d, r in [(20, 5), (64, 8), (784, 5)]:
+        add("sdot_step", model.sdot_step, spec(d, d), spec(d, r))
+        add("oi_step", model.oi_step, spec(d, d), spec(d, r))
+        add("qr_mgs", model.qr_mgs, spec(d, r))
+
+    for d, n in [(20, 500), (64, 256)]:
+        add("gram", model.gram_op, spec(d, n))
+
+    add("combine", model.combine_op, spec(8, 20, 5), spec(8))
+    # F-DOT locals for the Fig.-6-style config: d_i=2 features, n=500.
+    add("fdot_fwd", model.fdot_local_fwd, spec(2, 500), spec(2, 5))
+    add("fdot_back", model.fdot_local_back, spec(2, 500), spec(500, 5))
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": 1, "entries": []}
+    for name, op, fn, arg_specs, shapes in manifest_entries():
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {"name": name, "op": op, "file": fname, "shapes": shapes, "dtype": "f32"}
+        )
+        print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['entries'])} entries -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""L1 Pallas kernel: weighted neighbor combine ``Z = Σ_k w_k · stack[k]``.
+
+One consensus-averaging round at a node is a weighted sum of its own and
+its neighbors' matrices (Alg. 1 step 9). The stack is padded to a fixed
+neighbor count K (zero weights for absent neighbors), making the shape
+static for AOT. Grid iterates over K, accumulating into the output block.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(stack_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # stack_ref block is (1, d, r); w_ref block is (1,).
+    o_ref[...] += w_ref[0] * stack_ref[0]
+
+
+@jax.jit
+def combine(stack, w):
+    """``einsum('k,kdr->dr', w, stack)`` via Pallas (interpret mode)."""
+    k, d, r = stack.shape
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, d, r), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((d, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, r), stack.dtype),
+        interpret=True,
+    )(stack, w)

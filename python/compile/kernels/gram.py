@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: tiled Gram ``M = X Xᵀ / n`` (local covariance build).
+
+Runs once per node before the iterations start (the paper notes `M_i` is
+precomputed), but it is the largest single computation in the stack for
+wide data, so it gets the same VMEM-tiled treatment: grid
+``(d/bm, d/bn, n/bk)`` with the contraction over samples innermost.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _default_block
+
+
+def _gram_kernel(xa_ref, xb_ref, o_ref, *, inv_n):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += (
+        jnp.dot(xa_ref[...], xb_ref[...].T, preferred_element_type=o_ref.dtype)
+        * inv_n
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gram(x, *, bm=None, bn=None, bk=None):
+    """``x @ x.T / n`` via the tiled Pallas kernel (interpret mode)."""
+    d, n = x.shape
+    bm = bm or _default_block(d)
+    bn = bn or _default_block(d)
+    bk = bk or _default_block(n, cap=1024)
+    assert d % bm == 0 and d % bn == 0 and n % bk == 0, (x.shape, bm, bn, bk)
+    grid = (d // bm, d // bn, n // bk)
+    kernel = functools.partial(_gram_kernel, inv_n=1.0 / n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), x.dtype),
+        interpret=True,
+    )(x, x)

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: tiled matmul ``V = M @ Q`` — the S-DOT hot spot.
+
+The O(d²r) product of Alg. 1 step 5 dominates every outer iteration. TPU
+mapping (DESIGN.md §Hardware-Adaptation): `M` is streamed through VMEM in
+``(bm, bk)`` tiles over a ``(d/bm, d/bk)`` grid while the skinny ``Q``
+(r ≤ 16) keeps a full ``(bk, r)`` tile resident; the ``(bm, r)``
+accumulator lives in the output block across the contraction steps. The
+``interpret=True`` path lowers to plain HLO so the artifact runs on the
+PJRT CPU client (real TPU lowering would emit a Mosaic custom-call).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(m_ref, q_ref, o_ref):
+    # Zero the accumulator on the first contraction step.
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        m_ref[...], q_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def matmul(m, q, *, bm=None, bk=None):
+    """``m @ q`` via the tiled Pallas kernel (interpret mode).
+
+    Block sizes must divide the corresponding dims; defaults pick the
+    largest divisor ≤ 128.
+    """
+    d_out, d_in = m.shape
+    _, r = q.shape
+    bm = bm or _default_block(d_out)
+    bk = bk or _default_block(d_in)
+    assert d_out % bm == 0 and d_in % bk == 0, (m.shape, bm, bk)
+    grid = (d_out // bm, d_in // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, r), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, r), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_out, r), q.dtype),
+        interpret=True,
+    )(m, q)
+
+
+def _default_block(dim, cap=1024):
+    """Largest divisor of ``dim`` that is ≤ cap.
+
+    Perf note (§Perf, L1 iteration log): interpret-mode Pallas pays ~1 ms
+    of while-loop overhead per grid step on CPU-PJRT, so the AOT artifacts
+    use the largest block that still fits VMEM. For every shipped shape
+    (d ≤ 784, r ≤ 8) a single (d, d) tile double-buffers inside 16 MiB —
+    2·(784²·4 B) ≈ 4.9 MiB — so cap=1024 is TPU-legal too; the
+    `vmem_footprint_bytes` test enforces this for all artifact shapes.
+    """
+    best = 1
+    for b in range(1, min(dim, cap) + 1):
+        if dim % b == 0:
+            best = b
+    return best
+
+
+def vmem_footprint_bytes(d, r, bm, bk, dtype_bytes=4):
+    """Estimated VMEM residency for one grid step (DESIGN.md §Perf):
+    one M tile + one Q tile + the accumulator, double-buffered inputs."""
+    m_tile = bm * bk * dtype_bytes
+    q_tile = bk * r * dtype_bytes
+    acc = bm * r * dtype_bytes
+    return 2 * (m_tile + q_tile) + acc

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness only).
+
+Each kernel in this package is checked against these references by
+``python/tests/test_kernel.py`` (hypothesis sweeps shapes/dtypes and
+asserts allclose) before the AOT artifacts are emitted.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(m, q):
+    """V = M @ Q — the S-DOT step-5 product (Alg. 1)."""
+    return jnp.dot(m, q, preferred_element_type=jnp.float32)
+
+
+def gram_ref(x):
+    """Sample covariance M = X Xᵀ / n for X ∈ R^{d×n} (mean removed)."""
+    n = x.shape[1]
+    return jnp.dot(x, x.T, preferred_element_type=jnp.float32) / n
+
+
+def combine_ref(stack, w):
+    """Weighted neighbor combine: Z = Σ_k w_k · stack[k]  (consensus op)."""
+    return jnp.einsum("k,kdr->dr", w, stack)
+
+
+def mgs_ref(v):
+    """Modified Gram–Schmidt Q factor via jnp.linalg.qr (reference only —
+    the lowered model uses the loop form in model.py)."""
+    q, r = jnp.linalg.qr(v)
+    # Positive-diagonal convention so Q is unique.
+    signs = jnp.sign(jnp.diagonal(r))
+    signs = jnp.where(signs == 0, 1.0, signs)
+    return q * signs[None, :]

@@ -1,0 +1,77 @@
+"""L2 — the per-node compute graph of the DPSA stack, in JAX.
+
+These are the functions `python/compile/aot.py` lowers to HLO text for the
+Rust runtime. Each calls the L1 Pallas kernels where the paper's hot spot
+lives; orthonormalization uses an explicit Modified Gram–Schmidt loop (pure
+HLO ops — `jnp.linalg.qr` would lower to a LAPACK custom-call the PJRT CPU
+client of xla_extension 0.5.1 cannot run from a text round-trip).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.combine import combine
+from .kernels.gram import gram
+from .kernels.matmul import matmul
+
+
+def mgs_orthonormalize(v):
+    """Thin QR Q-factor via Modified Gram–Schmidt (fori_loop form).
+
+    Matches `linalg::qr::mgs_qr` on the Rust side: columns are normalized in
+    order and later columns are orthogonalized against each finished one,
+    with a positive-diagonal convention implied by the normalization.
+    """
+    d, r = v.shape
+
+    def body(k, acc):
+        col = jax.lax.dynamic_slice(acc, (0, k), (d, 1))
+        norm = jnp.sqrt(jnp.sum(col * col))
+        qk = col / jnp.maximum(norm, 1e-30)
+        acc = jax.lax.dynamic_update_slice(acc, qk, (0, k))
+        # Subtract the projection of every *later* column onto qk.
+        dots = (qk.T @ acc)[0]  # (r,)
+        mask = jnp.arange(r) > k
+        acc = acc - qk @ jnp.where(mask, dots, 0.0)[None, :]
+        return acc
+
+    return jax.lax.fori_loop(0, r, body, v)
+
+
+def sdot_step(m, q):
+    """Alg. 1 step 5: the local product `V = M_i Q` (Pallas matmul)."""
+    return (matmul(m, q),)
+
+
+def oi_step(m, q):
+    """One fused orthogonal-iteration update: `Q' = MGS(M Q)`.
+
+    Fusing keeps the request path at a single PJRT execution per node per
+    outer iteration (see DESIGN.md §Perf, L2 target).
+    """
+    return (mgs_orthonormalize(matmul(m, q)),)
+
+
+def qr_mgs(v):
+    """Standalone orthonormalization (Alg. 1 step 12)."""
+    return (mgs_orthonormalize(v),)
+
+
+def gram_op(x):
+    """Local covariance `M_i = X_i X_iᵀ / n_i` (Pallas gram kernel)."""
+    return (gram(x),)
+
+
+def combine_op(stack, w):
+    """One consensus combine `Z = Σ_k w_k stack[k]` (Pallas kernel)."""
+    return (combine(stack, w),)
+
+
+def fdot_local_fwd(x, q):
+    """F-DOT step 5: `Z_i = X_iᵀ Q_i` (n×r) — matmul with X transposed."""
+    return (matmul(x.T, q),)
+
+
+def fdot_local_back(x, z):
+    """F-DOT step 11: `V_i = X_i Ẑ_i` (d_i×r)."""
+    return (matmul(x, z),)

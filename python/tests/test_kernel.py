@@ -1,0 +1,141 @@
+"""L1 Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and, where meaningful, dtypes) and asserts
+allclose against ref.py — the core correctness signal before AOT export.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.combine import combine
+from compile.kernels.gram import gram
+from compile.kernels.matmul import matmul, vmem_footprint_bytes, _default_block
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# --- matmul -----------------------------------------------------------------
+
+dims = st.sampled_from([4, 8, 12, 16, 20, 24, 48, 64])
+ranks = st.integers(min_value=1, max_value=10)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d_out=dims, d_in=dims, r=ranks, seed=st.integers(0, 2**30))
+def test_matmul_matches_ref(d_out, d_in, r, seed):
+    m = rand(seed, (d_out, d_in))
+    q = rand(seed + 1, (d_in, r))
+    got = matmul(m, q)
+    want = ref.matmul_ref(m, q)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_matmul_explicit_blocks(seed):
+    m = rand(seed, (20, 20))
+    q = rand(seed + 1, (20, 5))
+    for bm, bk in [(4, 4), (10, 10), (20, 20), (5, 2)]:
+        got = matmul(m, q, bm=bm, bk=bk)
+        np.testing.assert_allclose(got, ref.matmul_ref(m, q), rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_f32_and_bf16():
+    m32 = rand(0, (16, 16))
+    q32 = rand(1, (16, 4))
+    out32 = matmul(m32, q32)
+    assert out32.dtype == jnp.float32
+    m16 = m32.astype(jnp.bfloat16)
+    q16 = q32.astype(jnp.bfloat16)
+    out16 = matmul(m16, q16)
+    assert out16.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        out16.astype(jnp.float32), out32, rtol=5e-2, atol=5e-2
+    )
+
+
+def test_matmul_identity():
+    q = rand(2, (12, 3))
+    np.testing.assert_allclose(matmul(jnp.eye(12), q), q, rtol=1e-6)
+
+
+def test_default_block_divides():
+    for dim in [20, 64, 500, 784, 1024, 2914]:
+        b = _default_block(dim)
+        assert dim % b == 0 and 1 <= b <= 1024
+        # TPU-targeted cap still available for tiling studies.
+        b128 = _default_block(dim, cap=128)
+        assert dim % b128 == 0 and 1 <= b128 <= 128
+
+
+def test_vmem_footprint_fits_vmem():
+    # DESIGN §Perf: tiles + accumulator must fit 16 MiB VMEM with
+    # double-buffering for every artifact shape.
+    for d, r in [(20, 5), (64, 8), (784, 5)]:
+        bm = bk = _default_block(d)
+        assert vmem_footprint_bytes(d, r, bm, bk) < 16 * 2**20
+
+
+# --- gram -------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    d=st.sampled_from([4, 8, 16, 20, 32]),
+    n=st.sampled_from([8, 32, 100, 256]),
+    seed=st.integers(0, 2**30),
+)
+def test_gram_matches_ref(d, n, seed):
+    x = rand(seed, (d, n))
+    np.testing.assert_allclose(gram(x), ref.gram_ref(x), rtol=1e-3, atol=1e-6)
+
+
+def test_gram_symmetric_psd():
+    x = rand(3, (16, 64))
+    m = np.array(gram(x))
+    np.testing.assert_allclose(m, m.T, atol=1e-6)
+    eig = np.linalg.eigvalsh(m)
+    assert eig.min() > -1e-6
+
+
+# --- combine ----------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(1, 8),
+    d=st.sampled_from([4, 10, 20]),
+    r=st.integers(1, 6),
+    seed=st.integers(0, 2**30),
+)
+def test_combine_matches_ref(k, d, r, seed):
+    stack = rand(seed, (k, d, r))
+    w = rand(seed + 1, (k,))
+    np.testing.assert_allclose(
+        combine(stack, w), ref.combine_ref(stack, w), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_combine_zero_weights_padding():
+    # Padding semantics: zero-weight neighbors contribute nothing.
+    stack = rand(4, (8, 10, 3))
+    w = jnp.array([0.5, 0.5, 0, 0, 0, 0, 0, 0], jnp.float32)
+    got = combine(stack, w)
+    want = 0.5 * stack[0] + 0.5 * stack[1]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_combine_doubly_stochastic_row():
+    # A consensus row: convex weights keep the result in the hull.
+    stack = jnp.stack([jnp.full((5, 2), float(i)) for i in range(4)])
+    w = jnp.array([0.25, 0.25, 0.25, 0.25], jnp.float32)
+    got = combine(stack, w)
+    np.testing.assert_allclose(got, jnp.full((5, 2), 1.5), rtol=1e-6)

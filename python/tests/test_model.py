@@ -1,0 +1,81 @@
+"""L2 model graph: MGS orthonormalization, fused OI step, F-DOT locals."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.sampled_from([6, 10, 20, 32]), r=st.integers(1, 6), seed=st.integers(0, 2**30))
+def test_mgs_orthonormal(d, r, seed):
+    v = rand(seed, (d, r))
+    q = model.mgs_orthonormalize(v)
+    np.testing.assert_allclose(np.array(q.T @ q), np.eye(r), atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_mgs_matches_qr_reference(seed):
+    v = rand(seed, (20, 5))
+    q = model.mgs_orthonormalize(v)
+    q_ref = ref.mgs_ref(v)
+    np.testing.assert_allclose(np.array(q), np.array(q_ref), atol=1e-3)
+
+
+def test_mgs_preserves_column_space():
+    v = rand(1, (16, 4))
+    q = model.mgs_orthonormalize(v)
+    # proj of V onto span(Q) equals V
+    proj = q @ (q.T @ v)
+    np.testing.assert_allclose(np.array(proj), np.array(v), rtol=1e-3, atol=1e-4)
+
+
+def test_oi_step_converges_to_top_subspace():
+    # Run the fused OI step repeatedly; it must find the dominant subspace.
+    d, r = 20, 3
+    key = jax.random.PRNGKey(7)
+    u = jnp.linalg.qr(jax.random.normal(key, (d, d)))[0]
+    lam = jnp.array([1.0, 0.9, 0.8] + [0.3 * 0.9**i for i in range(d - r)])
+    m = (u * lam) @ u.T
+    m = m.astype(jnp.float32)
+    q = jnp.linalg.qr(jax.random.normal(key, (d, r)))[0].astype(jnp.float32)
+    for _ in range(150):
+        (q,) = model.oi_step(m, q)
+    truth = u[:, :r]
+    overlap = np.linalg.svd(np.array(truth.T @ q), compute_uv=False)
+    err = 1 - (overlap**2).mean()
+    assert err < 1e-5, err
+
+
+def test_sdot_step_is_matmul():
+    m = rand(2, (20, 20))
+    q = rand(3, (20, 5))
+    (v,) = model.sdot_step(m, q)
+    np.testing.assert_allclose(np.array(v), np.array(m @ q), rtol=1e-4, atol=1e-5)
+
+
+def test_fdot_locals_compose_to_mq():
+    # X_iᵀ Q_i then X_i S reproduces the feature-wise update of eq. (4)
+    # when the network sum is exact (single node).
+    x = rand(4, (2, 500))
+    q = rand(5, (2, 5))
+    (z,) = model.fdot_local_fwd(x, q)
+    np.testing.assert_allclose(np.array(z), np.array(x.T @ q), rtol=1e-4, atol=1e-5)
+    (v,) = model.fdot_local_back(x, z)
+    np.testing.assert_allclose(np.array(v), np.array(x @ x.T @ q), rtol=1e-3, atol=1e-4)
+
+
+def test_gram_op_scaling():
+    x = rand(6, (20, 500))
+    (m,) = model.gram_op(x)
+    np.testing.assert_allclose(np.array(m), np.array(x @ x.T) / 500, rtol=1e-3, atol=1e-6)

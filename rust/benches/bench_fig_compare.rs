@@ -1,0 +1,9 @@
+//! Regenerates paper Figures 4 and 5 (baseline comparison, distinct and
+//! repeated eigenvalues).
+use dpsa::util::bench::{bench_ctx, run_and_print};
+
+fn main() {
+    let ctx = bench_ctx(0.2);
+    run_and_print("fig4", &ctx);
+    run_and_print("fig5", &ctx);
+}

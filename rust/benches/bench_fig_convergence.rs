@@ -1,0 +1,10 @@
+//! Regenerates paper Figures 1–3 (error curves: schedules, connectivity,
+//! ring & star). Curves land in results/fig{1,2,3}/trace_*.csv.
+use dpsa::util::bench::{bench_ctx, run_and_print};
+
+fn main() {
+    let ctx = bench_ctx(0.25);
+    for id in ["fig1", "fig2", "fig3"] {
+        run_and_print(id, &ctx);
+    }
+}

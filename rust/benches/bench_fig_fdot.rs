@@ -1,0 +1,7 @@
+//! Regenerates paper Figure 6 (F-DOT vs OI/SeqPM/d-PM, feature-wise).
+use dpsa::util::bench::{bench_ctx, run_and_print};
+
+fn main() {
+    let ctx = bench_ctx(0.25);
+    run_and_print("fig6", &ctx);
+}

@@ -1,0 +1,10 @@
+//! Regenerates paper Figures 7–12 (real-data communication cost and
+//! baseline comparisons on the dataset surrogates).
+use dpsa::util::bench::{bench_ctx, run_and_print};
+
+fn main() {
+    let ctx = bench_ctx(0.1);
+    for id in ["fig7", "fig8", "fig9", "fig10", "fig11", "fig12"] {
+        run_and_print(id, &ctx);
+    }
+}

@@ -1,0 +1,90 @@
+//! L3 hot-path microbenchmarks (§Perf): the per-iteration costs that
+//! bound end-to-end throughput — `M_i Q` (native vs XLA), QR, one
+//! consensus round, and a full Table-I cell.
+//!
+//! Run: `cargo bench --bench bench_hotpath`
+
+use dpsa::algorithms::sdot::{run_sdot, SdotConfig};
+use dpsa::algorithms::SampleSetting;
+use dpsa::consensus::schedule::Schedule;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::graph::Graph;
+use dpsa::linalg::{CovOp, Mat};
+use dpsa::network::sim::SyncNetwork;
+use dpsa::runtime::{Backend, NativeBackend, XlaBackend};
+use dpsa::util::bench::time_it;
+use dpsa::util::rng::Rng;
+
+fn main() {
+    println!("== L3 hot-path microbenchmarks ==\n");
+    let mut rng = Rng::new(42);
+
+    // --- cov_apply: dense d=20 and d=784, native vs XLA -----------------
+    for &(d, r, n_samp) in &[(20usize, 5usize, 500usize), (784, 5, 500)] {
+        let x = Mat::gauss(d, n_samp, &mut rng);
+        let cov_dense = CovOp::dense_from_samples(&x);
+        let q = Mat::random_orthonormal(d, r, &mut rng);
+        let native = NativeBackend;
+        let t = time_it(3, 21, || {
+            std::hint::black_box(native.cov_apply(&cov_dense, &q));
+        });
+        println!("cov_apply native  d={d:<4} r={r}: {t}");
+
+        let dir = XlaBackend::default_dir();
+        if XlaBackend::available(&dir) {
+            let be = XlaBackend::load(&dir).expect("load artifacts");
+            let t = time_it(3, 21, || {
+                std::hint::black_box(be.cov_apply(&cov_dense, &q));
+            });
+            println!("cov_apply xla     d={d:<4} r={r}: {t}");
+            let t = time_it(3, 21, || {
+                std::hint::black_box(be.oi_step(&cov_dense, &q));
+            });
+            println!("oi_step   xla     d={d:<4} r={r}: {t} (fused matmul+MGS)");
+        }
+
+        // Implicit (sample) representation.
+        let cov_lr = CovOp::Samples { x: x.clone(), scale: 1.0 / n_samp as f64 };
+        let t = time_it(3, 21, || {
+            std::hint::black_box(native.cov_apply(&cov_lr, &q));
+        });
+        println!("cov_apply samples d={d:<4} r={r}: {t}\n");
+    }
+
+    // --- QR --------------------------------------------------------------
+    for &(d, r) in &[(20usize, 5usize), (784, 5), (2914, 7)] {
+        let v = Mat::gauss(d, r, &mut rng);
+        let t = time_it(3, 21, || {
+            std::hint::black_box(dpsa::linalg::qr::orthonormalize(&v));
+        });
+        println!("householder_qr    d={d:<4} r={r}: {t}");
+    }
+    println!();
+
+    // --- one consensus round, N=20 ---------------------------------------
+    for &(d, r) in &[(20usize, 5usize), (784, 5), (2914, 7)] {
+        let g = Graph::erdos_renyi(20, 0.25, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let mut z: Vec<Mat> = (0..20).map(|_| Mat::gauss(d, r, &mut rng)).collect();
+        let t = time_it(3, 21, || {
+            net.consensus(&mut z, 1);
+        });
+        println!("consensus round   d={d:<4} r={r} N=20: {t}");
+    }
+    println!();
+
+    // --- full Table-I cell (N=20, T_o=200, T_c=50, d=20) -----------------
+    let spec = Spectrum::with_gap(20, 5, 0.7);
+    let ds = SyntheticDataset::full(&spec, 500, 20, &mut rng);
+    let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+    let g = Graph::erdos_renyi(20, 0.25, &mut rng);
+    let t = time_it(1, 5, || {
+        let mut net = SyncNetwork::new(g.clone());
+        let mut cfg = SdotConfig::new(Schedule::fixed(50), 200);
+        cfg.record_every = 200;
+        std::hint::black_box(run_sdot(&mut net, &setting, &cfg));
+    });
+    println!("full Table-I cell (N=20, T_o=200, T_c=50): {t}");
+    println!("  (§Perf target: < 2 s)");
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper Table V (straggler wall-clock on the threaded
+//! MPI-like runtime). Default scale keeps the straggled runs ~10 s;
+//! BENCH_SCALE=1.0 reproduces the paper's ~100 s cells.
+use dpsa::util::bench::{bench_ctx, run_and_print};
+
+fn main() {
+    let ctx = bench_ctx(0.1);
+    run_and_print("table5", &ctx);
+}

@@ -1,0 +1,9 @@
+//! Regenerates paper Tables VI–IX (MNIST/CIFAR-10/LFW/ImageNet P2P).
+use dpsa::util::bench::{bench_ctx, run_and_print};
+
+fn main() {
+    let ctx = bench_ctx(0.25);
+    for id in ["table6", "table7", "table8", "table9"] {
+        run_and_print(id, &ctx);
+    }
+}

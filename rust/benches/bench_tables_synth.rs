@@ -1,0 +1,10 @@
+//! Regenerates paper Tables I and II (synthetic S-DOT/SA-DOT P2P).
+//! `BENCH_SCALE=1.0 BENCH_TRIALS=20 cargo bench --bench bench_tables_synth`
+//! reproduces paper-fidelity grids.
+use dpsa::util::bench::{bench_ctx, run_and_print};
+
+fn main() {
+    let ctx = bench_ctx(0.25);
+    run_and_print("table1", &ctx);
+    run_and_print("table2", &ctx);
+}

@@ -1,0 +1,8 @@
+//! Regenerates paper Tables III and IV (ring and star topologies).
+use dpsa::util::bench::{bench_ctx, run_and_print};
+
+fn main() {
+    let ctx = bench_ctx(0.25);
+    run_and_print("table3", &ctx);
+    run_and_print("table4", &ctx);
+}

@@ -1,0 +1,284 @@
+//! B-DOT — Block-wise Distributed Orthogonal iTeration.
+//!
+//! **Extension implementing the paper's stated future work** (Section VI):
+//! *"Randomly block-wise partitioned data, i.e., data partitioned by both
+//! samples and features, can be a possible way to handle big data that is
+//! massive in both dimension and size."*
+//!
+//! Setup: a `R × C` grid of nodes; node (i, j) holds the block
+//! `X_{ij} ∈ R^{d_i × n_j}` (feature slice i of sample batch j). The OI
+//! update `V = M Q = Σ_j X_{·j} X_{·j}ᵀ Q` factors into the two consensus
+//! patterns the paper develops:
+//!
+//! 1. **column phase** (F-DOT-style, within each sample batch j): nodes of
+//!    column j hold feature slices of `X_{·j}`, so
+//!    `u_j = X_{·j}ᵀ Q = Σ_i X_{ij}ᵀ Q_i` — a consensus **sum over the
+//!    column group** with n_j×r messages;
+//! 2. **row phase** (S-DOT-style, within each feature slice i):
+//!    `V_i = Σ_j X_{ij} u_j` — each node computes its local product, then a
+//!    consensus **sum over the row group** with d_i×r messages;
+//! 3. orthonormalization of the feature-stacked V via the distributed QR
+//!    (push-sum Gram over the whole grid + local Cholesky), as in F-DOT.
+//!
+//! Each phase's consensus runs on the subgraph induced on the group (we
+//! use complete groups — the natural rack/row topology), and every message
+//! is counted by the same P2P machinery as Algorithms 1–2. With `R = 1`
+//! B-DOT degenerates to (a consensus-flavored) F-DOT; with `C = 1` each
+//! column phase is local and it behaves like a feature-sharded S-DOT.
+
+use crate::graph::Graph;
+use crate::linalg::chol::{cholesky, solve_r_right};
+use crate::linalg::Mat;
+use crate::metrics::subspace::subspace_error;
+use crate::metrics::trace::{IterRecord, RunTrace};
+use crate::network::sim::SyncNetwork;
+use crate::util::rng::Rng;
+
+/// A block-partitioned PSA instance on an `R × C` node grid.
+#[derive(Clone, Debug)]
+pub struct BlockSetting {
+    /// `blocks[i][j] = X_{ij} ∈ R^{d_i × n_j}`.
+    pub blocks: Vec<Vec<Mat>>,
+    /// Feature offsets (length R+1).
+    pub row_offsets: Vec<usize>,
+    /// Top-r eigenspace of `M = X Xᵀ` (evaluation only).
+    pub truth: Mat,
+    /// Common init (d × r); row group i uses its slice.
+    pub q_init: Mat,
+    pub r: usize,
+}
+
+impl BlockSetting {
+    /// Partition a full data matrix into an `rows × cols` block grid.
+    pub fn new(x: &Mat, rows: usize, cols: usize, r: usize, rng: &mut Rng) -> BlockSetting {
+        let feature_parts = crate::data::partition::partition_features(x, rows);
+        let mut blocks = Vec::with_capacity(rows);
+        let mut row_offsets = vec![0usize];
+        for fp in &feature_parts {
+            blocks.push(crate::data::partition::partition_samples(fp, cols));
+            row_offsets.push(row_offsets.last().unwrap() + fp.rows);
+        }
+        let cov = crate::linalg::CovOp::Samples { x: x.clone(), scale: 1.0 };
+        let truth =
+            crate::data::synthetic::empirical_truth(std::slice::from_ref(&cov), r, 600);
+        let q_init = Mat::random_orthonormal(x.rows, r, rng);
+        BlockSetting { blocks, row_offsets, truth, q_init, r }
+    }
+
+    pub fn grid(&self) -> (usize, usize) {
+        (self.blocks.len(), self.blocks[0].len())
+    }
+
+    pub fn d(&self) -> usize {
+        *self.row_offsets.last().unwrap()
+    }
+
+    /// Row-group slice of a stacked `d × r` matrix.
+    pub fn row_slice(&self, m: &Mat, i: usize) -> Mat {
+        m.rows_range(self.row_offsets[i], self.row_offsets[i + 1])
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BdotConfig {
+    /// Consensus rounds for the column (F-DOT-style) phase.
+    pub t_col: usize,
+    /// Consensus rounds for the row (S-DOT-style) phase.
+    pub t_row: usize,
+    /// Push-sum rounds for the distributed QR.
+    pub t_ps: usize,
+    pub t_o: usize,
+    pub record_every: usize,
+}
+
+impl BdotConfig {
+    pub fn new(t_o: usize) -> BdotConfig {
+        BdotConfig { t_col: 30, t_row: 30, t_ps: 40, t_o, record_every: 1 }
+    }
+}
+
+/// Result of a B-DOT run: per-row-group Q blocks (consistent across the
+/// row's nodes) and the trace.
+pub struct BdotRun {
+    pub q_rows: Vec<Mat>,
+    pub trace: RunTrace,
+    /// Total messages sent across all grid nodes.
+    pub total_messages: u64,
+}
+
+/// Run B-DOT. Group networks are complete graphs over each row / column /
+/// the full grid (the natural "rack-local" topologies); all messages are
+/// counted.
+pub fn run_bdot(setting: &BlockSetting, cfg: &BdotConfig) -> BdotRun {
+    let (rows, cols) = setting.grid();
+    let r = setting.r;
+    // One network per column group (size rows) for phase 1,
+    // one per row group (size cols) for phase 2,
+    // one over all nodes for the distributed QR.
+    let mut col_nets: Vec<SyncNetwork> =
+        (0..cols).map(|_| SyncNetwork::new(Graph::complete(rows.max(2)))).collect();
+    let mut row_nets: Vec<SyncNetwork> =
+        (0..rows).map(|_| SyncNetwork::new(Graph::complete(cols.max(2)))).collect();
+    let mut grid_net = SyncNetwork::new(Graph::complete((rows * cols).max(2)));
+
+    // Per (row, col) copy of the row's Q block — nodes in the same row
+    // keep nominally identical copies (they are exchanged in phase 2).
+    let mut q: Vec<Vec<Mat>> = (0..rows)
+        .map(|i| (0..cols).map(|_| setting.row_slice(&setting.q_init, i)).collect())
+        .collect();
+
+    let mut trace = RunTrace::new("B-DOT");
+    let mut total = 0usize;
+
+    for t in 1..=cfg.t_o {
+        // ---- phase 1 (column groups): u_j = Σ_i X_ijᵀ Q_i  (n_j × r) ----
+        let mut u: Vec<Vec<Mat>> = (0..cols)
+            .map(|j| (0..rows).map(|i| setting.blocks[i][j].t_matmul(&q[i][j])).collect())
+            .collect();
+        for (j, net) in col_nets.iter_mut().enumerate() {
+            // Pad the group to the network size if rows < 2 (degenerate).
+            while u[j].len() < net.n() {
+                let rows_u = u[j][0].rows;
+                u[j].push(Mat::zeros(rows_u, r));
+            }
+            net.consensus_sum(&mut u[j], cfg.t_col);
+        }
+        total += cfg.t_col;
+
+        // ---- phase 2 (row groups): V_i = Σ_j X_ij u_j  (d_i × r) --------
+        let mut v: Vec<Vec<Mat>> = (0..rows)
+            .map(|i| {
+                (0..cols)
+                    .map(|j| setting.blocks[i][j].matmul(&u[j][i.min(u[j].len() - 1)]))
+                    .collect()
+            })
+            .collect();
+        for (i, net) in row_nets.iter_mut().enumerate() {
+            while v[i].len() < net.n() {
+                let rows_v = v[i][0].rows;
+                v[i].push(Mat::zeros(rows_v, r));
+            }
+            net.consensus_sum(&mut v[i], cfg.t_row);
+        }
+        total += cfg.t_row;
+
+        // ---- phase 3: distributed QR over the grid ----------------------
+        // Each grid node (i, j) holds V_i (agreed within the row); the Gram
+        // K = Σ_i V_iᵀ V_i is push-summed over the whole grid with each
+        // row's contribution split across its C nodes.
+        let mut grams: Vec<Mat> = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            let gi = v[i][0].t_matmul(&v[i][0]);
+            for _j in 0..cols {
+                grams.push(gi.scale(1.0 / cols as f64));
+            }
+        }
+        while grams.len() < grid_net.n() {
+            grams.push(Mat::zeros(r, r));
+        }
+        grid_net.ratio_consensus_sum(&mut grams, cfg.t_ps);
+        total += cfg.t_ps;
+        for i in 0..rows {
+            let mut k = grams[i * cols].clone();
+            for a in 0..r {
+                for b in (a + 1)..r {
+                    let m = 0.5 * (k.get(a, b) + k.get(b, a));
+                    k.set(a, b, m);
+                    k.set(b, a, m);
+                }
+            }
+            let qi = match cholesky(&k) {
+                Some(rr) => solve_r_right(&v[i][0], &rr),
+                None => v[i][0].scale(1.0 / v[i][0].fro_norm().max(1e-300)),
+            };
+            for j in 0..cols {
+                q[i][j] = qi.clone();
+            }
+        }
+
+        if t % cfg.record_every == 0 || t == cfg.t_o {
+            let blocks: Vec<&Mat> = (0..rows).map(|i| &q[i][0]).collect();
+            let stacked = Mat::vstack(&blocks);
+            let qhat = crate::linalg::qr::orthonormalize(&stacked);
+            let msgs: u64 = col_nets.iter().map(|n| n.counters.total()).sum::<u64>()
+                + row_nets.iter().map(|n| n.counters.total()).sum::<u64>()
+                + grid_net.counters.total();
+            trace.push(IterRecord {
+                outer: t,
+                total_iters: total,
+                error: subspace_error(&setting.truth, &qhat),
+                p2p_avg: msgs as f64 / (rows * cols) as f64,
+            });
+        }
+    }
+
+    let q_rows: Vec<Mat> = (0..rows).map(|i| q[i][0].clone()).collect();
+    let total_messages = col_nets.iter().map(|n| n.counters.total()).sum::<u64>()
+        + row_nets.iter().map(|n| n.counters.total()).sum::<u64>()
+        + grid_net.counters.total();
+    BdotRun { q_rows, trace, total_messages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spectrum::Spectrum;
+    use crate::data::synthetic::SyntheticDataset;
+
+    fn setting(seed: u64, d: usize, n: usize, r: usize, rows: usize, cols: usize) -> BlockSetting {
+        let mut rng = Rng::new(seed);
+        let spec = Spectrum::with_gap(d, r, 0.5);
+        let ds = SyntheticDataset::full(&spec, n, 1, &mut rng);
+        BlockSetting::new(&ds.parts[0], rows, cols, r, &mut rng)
+    }
+
+    #[test]
+    fn bdot_converges_2x2() {
+        let s = setting(1, 12, 400, 3, 2, 2);
+        let run = run_bdot(&s, &BdotConfig::new(60));
+        assert!(run.trace.final_error() < 1e-8, "err={}", run.trace.final_error());
+        assert!(run.total_messages > 0);
+    }
+
+    #[test]
+    fn bdot_converges_3x4_grid() {
+        let s = setting(2, 12, 360, 3, 3, 4);
+        let run = run_bdot(&s, &BdotConfig::new(60));
+        assert!(run.trace.final_error() < 1e-7, "err={}", run.trace.final_error());
+    }
+
+    #[test]
+    fn bdot_row_blocks_stack_orthonormal() {
+        let s = setting(3, 10, 300, 2, 2, 3);
+        let run = run_bdot(&s, &BdotConfig::new(50));
+        let refs: Vec<&Mat> = run.q_rows.iter().collect();
+        let stacked = Mat::vstack(&refs);
+        let gram = stacked.t_matmul(&stacked);
+        assert!(gram.dist_fro(&Mat::eye(2)) < 1e-5, "{}", gram.dist_fro(&Mat::eye(2)));
+    }
+
+    #[test]
+    fn bdot_single_row_matches_fdot_accuracy() {
+        // R=1 degenerate: feature dimension is whole at each node; B-DOT
+        // should converge like F-DOT on the same data.
+        let s = setting(4, 10, 400, 3, 1, 4);
+        let run = run_bdot(&s, &BdotConfig::new(60));
+        assert!(run.trace.final_error() < 1e-8, "err={}", run.trace.final_error());
+    }
+
+    #[test]
+    fn bdot_single_col_matches_sdot_accuracy() {
+        let s = setting(5, 10, 400, 3, 4, 1);
+        let run = run_bdot(&s, &BdotConfig::new(60));
+        assert!(run.trace.final_error() < 1e-8, "err={}", run.trace.final_error());
+    }
+
+    #[test]
+    fn bdot_error_decreases_monotonically_at_scale() {
+        let s = setting(6, 16, 480, 4, 2, 2);
+        let run = run_bdot(&s, &BdotConfig::new(40));
+        let first = run.trace.records.first().unwrap().error;
+        let last = run.trace.final_error();
+        assert!(last < 1e-4 * first, "first={first} last={last}");
+    }
+}

@@ -1,0 +1,246 @@
+//! F-DOT (Algorithm 2) — distributed orthogonal iteration for
+//! **feature-wise** partitioned data, plus the distributed QR it relies on.
+//!
+//! Node i holds `X_i ∈ R^{d_i×n}` (a slice of every sample's features) and
+//! estimates the matching rows `Q_{f,i} ∈ R^{d_i×r}` of the global
+//! eigenbasis. One outer iteration (eq. 4):
+//!
+//! 1. `Z_i = X_iᵀ Q_{f,i}` (n×r), consensus-averaged over the network and
+//!    rescaled to estimate `S = Σ_j X_jᵀ Q_{f,j}`;
+//! 2. `V_i = X_i S_i` (d_i×r);
+//! 3. distributed QR [12]: push-sum the Gram `K = Σ_i V_iᵀ V_i` (r×r
+//!    messages), Cholesky `K = RᵀR` locally, `Q_{f,i} = V_i R⁻¹` —
+//!    orthonormalizing the *stacked* `V` without collating it anywhere.
+
+use crate::data::partition::feature_offsets;
+use crate::linalg::chol::{cholesky, solve_r_right};
+use crate::linalg::{CovOp, Mat};
+use crate::metrics::subspace::subspace_error;
+use crate::metrics::trace::{IterRecord, RunTrace};
+use crate::network::sim::SyncNetwork;
+use crate::util::rng::Rng;
+
+/// A feature-wise distributed PSA instance.
+#[derive(Clone, Debug)]
+pub struct FeatureSetting {
+    /// Per-node feature blocks `X_i ∈ R^{d_i×n}`.
+    pub parts: Vec<Mat>,
+    /// Row offsets of each block in the stacked `X`.
+    pub offsets: Vec<usize>,
+    /// Top-r eigenspace of `M = X Xᵀ` (ground truth for the error metric).
+    pub truth: Mat,
+    /// Common initialization `Q_init ∈ R^{d×r}` (nodes take their slices).
+    pub q_init: Mat,
+    pub r: usize,
+}
+
+impl FeatureSetting {
+    pub fn new(parts: Vec<Mat>, r: usize, rng: &mut Rng) -> FeatureSetting {
+        let d: usize = parts.iter().map(|p| p.rows).sum();
+        let n = parts[0].cols;
+        let offsets = {
+            // Not necessarily balanced; build from actual part sizes.
+            let mut offs = vec![0usize];
+            for p in &parts {
+                assert_eq!(p.cols, n, "all nodes must hold all samples");
+                offs.push(offs.last().unwrap() + p.rows);
+            }
+            offs
+        };
+        // Ground truth from the stacked data (evaluation only).
+        let refs: Vec<&Mat> = parts.iter().collect();
+        let x = Mat::vstack(&refs);
+        let cov = CovOp::Samples { x, scale: 1.0 };
+        let truth = crate::data::synthetic::empirical_truth(std::slice::from_ref(&cov), r, 600);
+        let q_init = Mat::random_orthonormal(d, r, rng);
+        FeatureSetting { parts, offsets, truth, q_init, r }
+    }
+
+    pub fn d(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Node i's slice of a stacked `d×r` matrix.
+    pub fn slice(&self, m: &Mat, i: usize) -> Mat {
+        m.rows_range(self.offsets[i], self.offsets[i + 1])
+    }
+}
+
+/// Sanity helper for `feature_offsets` consistency with balanced splits.
+pub fn balanced_offsets(d: usize, nodes: usize) -> Vec<usize> {
+    feature_offsets(d, nodes)
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct FdotConfig {
+    /// Consensus rounds for the n×r averaging (step 9).
+    pub t_c: usize,
+    /// Push-sum rounds for the distributed QR (step 12).
+    pub t_ps: usize,
+    pub t_o: usize,
+    pub record_every: usize,
+}
+
+impl FdotConfig {
+    pub fn new(t_o: usize) -> FdotConfig {
+        FdotConfig { t_c: 50, t_ps: 50, t_o, record_every: 1 }
+    }
+}
+
+/// Distributed QR of the implicitly stacked `V = [V_1; …; V_N]`:
+/// push-sum the r×r Gram, factor locally, solve. Returns per-node Q blocks.
+pub fn distributed_qr(
+    net: &mut SyncNetwork,
+    v: &[Mat],
+    t_ps: usize,
+) -> Vec<Mat> {
+    let mut grams: Vec<Mat> = v.iter().map(|vi| vi.t_matmul(vi)).collect();
+    net.ratio_consensus_sum(&mut grams, t_ps);
+    v.iter()
+        .zip(grams.iter())
+        .map(|(vi, k)| {
+            // Symmetrize (consensus noise) and factor.
+            let mut ks = k.clone();
+            for a in 0..ks.rows {
+                for b in (a + 1)..ks.cols {
+                    let m = 0.5 * (ks.get(a, b) + ks.get(b, a));
+                    ks.set(a, b, m);
+                    ks.set(b, a, m);
+                }
+            }
+            match cholesky(&ks) {
+                Some(r) => solve_r_right(vi, &r),
+                // Numerically indefinite Gram (very inexact consensus):
+                // fall back to scaling by the Frobenius norm to stay finite.
+                None => vi.scale(1.0 / vi.fro_norm().max(1e-300)),
+            }
+        })
+        .collect()
+}
+
+/// Run Algorithm 2.
+pub fn run_fdot(
+    net: &mut SyncNetwork,
+    setting: &FeatureSetting,
+    cfg: &FdotConfig,
+) -> (Vec<Mat>, RunTrace) {
+    let n = net.n();
+    assert_eq!(setting.n_nodes(), n);
+    let mut q: Vec<Mat> = (0..n).map(|i| setting.slice(&setting.q_init, i)).collect();
+    let mut trace = RunTrace::new("F-DOT");
+    let mut total = 0usize;
+
+    for t in 1..=cfg.t_o {
+        // Step 5: Z_i = X_iᵀ Q_i  (n×r).
+        let mut z: Vec<Mat> = (0..n).map(|i| setting.parts[i].t_matmul(&q[i])).collect();
+        // Steps 6–11: consensus to the sum Σ_j X_jᵀ Q_j.
+        net.consensus_sum(&mut z, cfg.t_c);
+        total += cfg.t_c;
+        // Step 11: V_i = X_i Ẑ_i.
+        let v: Vec<Mat> = (0..n).map(|i| setting.parts[i].matmul(&z[i])).collect();
+        // Step 12: distributed QR.
+        q = distributed_qr(net, &v, cfg.t_ps);
+        total += cfg.t_ps;
+
+        if t % cfg.record_every == 0 || t == cfg.t_o {
+            let refs: Vec<&Mat> = q.iter().collect();
+            let stacked = Mat::vstack(&refs);
+            // Orthonormality is only approximate under inexact consensus;
+            // orthonormalize the stacked copy for a fair angle metric.
+            let qhat = crate::linalg::qr::orthonormalize(&stacked);
+            trace.push(IterRecord {
+                outer: t,
+                total_iters: total,
+                error: subspace_error(&setting.truth, &qhat),
+                p2p_avg: net.counters.avg(),
+            });
+        }
+    }
+    (q, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::partition_features;
+    use crate::data::spectrum::Spectrum;
+    use crate::data::synthetic::SyntheticDataset;
+    use crate::graph::Graph;
+
+    fn feature_setting(seed: u64, d: usize, r: usize, nodes: usize) -> (FeatureSetting, Rng) {
+        let mut rng = Rng::new(seed);
+        let spec = Spectrum::with_gap(d, r, 0.5);
+        let ds = SyntheticDataset::full(&spec, 500, 1, &mut rng);
+        let parts = partition_features(&ds.parts[0], nodes);
+        let s = FeatureSetting::new(parts, r, &mut rng);
+        (s, rng)
+    }
+
+    #[test]
+    fn fdot_converges() {
+        let (s, mut rng) = feature_setting(1, 10, 3, 10);
+        let g = Graph::erdos_renyi(10, 0.5, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let (_, trace) = run_fdot(&mut net, &s, &FdotConfig::new(60));
+        assert!(trace.final_error() < 1e-8, "err={}", trace.final_error());
+    }
+
+    #[test]
+    fn fdot_blocks_stack_to_orthonormal() {
+        let (s, mut rng) = feature_setting(2, 12, 3, 4);
+        let g = Graph::complete(4);
+        let _ = &mut rng;
+        let mut net = SyncNetwork::new(g);
+        let (q, _) = run_fdot(&mut net, &s, &FdotConfig::new(40));
+        let refs: Vec<&Mat> = q.iter().collect();
+        let stacked = Mat::vstack(&refs);
+        let gram = stacked.t_matmul(&stacked);
+        assert!(gram.dist_fro(&Mat::eye(3)) < 1e-4, "{}", gram.dist_fro(&Mat::eye(3)));
+    }
+
+    #[test]
+    fn distributed_qr_matches_centralized() {
+        let mut rng = Rng::new(3);
+        let g = Graph::complete(5);
+        let mut net = SyncNetwork::new(g);
+        let full = Mat::gauss(20, 4, &mut rng);
+        let parts = partition_features(&full, 5);
+        let q_parts = distributed_qr(&mut net, &parts, 150);
+        let refs: Vec<&Mat> = q_parts.iter().collect();
+        let stacked = Mat::vstack(&refs);
+        let (qh, _) = crate::linalg::qr::householder_qr(&full);
+        // Same column space; Cholesky-QR and Householder agree up to signs
+        // fixed by positive-diagonal convention.
+        assert!(subspace_error(&qh, &crate::linalg::qr::orthonormalize(&stacked)) < 1e-8);
+    }
+
+    #[test]
+    fn fdot_message_sizes_tracked() {
+        // Step 9 messages are n×r; step 12 messages are r×r+1.
+        let (s, mut rng) = feature_setting(4, 8, 2, 4);
+        let _ = &mut rng;
+        let g = Graph::ring(4);
+        let mut net = SyncNetwork::new(g);
+        let cfg = FdotConfig { t_c: 3, t_ps: 2, t_o: 1, record_every: 1 };
+        let (_, _) = run_fdot(&mut net, &s, &cfg);
+        let n_samples = 500;
+        let expected_payload =
+            (3 * (n_samples * 2) + 2 * (2 * 2 + 1)) * 2; // rounds×elems×degree
+        assert_eq!(net.counters.payload[0], expected_payload as u64);
+    }
+
+    #[test]
+    fn one_feature_per_node_works() {
+        // Fig. 6 setting: d = N, each node carries exactly one feature.
+        let (s, mut rng) = feature_setting(5, 10, 2, 10);
+        assert!(s.parts.iter().all(|p| p.rows == 1));
+        let g = Graph::erdos_renyi(10, 0.5, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let (_, trace) = run_fdot(&mut net, &s, &FdotConfig::new(50));
+        assert!(trace.final_error() < 1e-6);
+    }
+}

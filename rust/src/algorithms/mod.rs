@@ -1,0 +1,27 @@
+//! The paper's algorithms and all evaluation baselines.
+//!
+//! Sample-wise partitioned data (Section III-A):
+//! * [`sdot`] — **S-DOT** (Alg. 1) and **SA-DOT** (adaptive schedule).
+//! * [`oi`] — centralized orthogonal iteration and sequential power method.
+//! * [`seqdistpm`] — sequential distributed power method ([13]-style).
+//! * [`dsa`] — distributed Sanger's algorithm [19].
+//! * [`dpgd`] — distributed projected gradient descent.
+//! * [`deepca`] — DeEPCA gradient-tracking subspace iteration [27].
+//!
+//! Feature-wise partitioned data (Section III-B):
+//! * [`fdot`] — **F-DOT** (Alg. 2) with the push-sum distributed QR.
+//! * [`dpm_feature`] — sequential distributed power method (d-PM, [10]).
+
+pub mod bdot;
+pub mod common;
+pub mod deepca;
+pub mod dpgd;
+pub mod dpm_feature;
+pub mod dsa;
+pub mod fdot;
+pub mod oi;
+pub mod sdot;
+pub mod seqdistpm;
+
+pub use common::SampleSetting;
+pub use sdot::{run_sadot, run_sdot, SdotConfig};

@@ -1,0 +1,150 @@
+//! Centralized baselines: orthogonal iteration (OI) and the sequential
+//! power method (SeqPM).
+//!
+//! OI estimates the whole r-dimensional subspace at once; SeqPM estimates
+//! the basis vectors one at a time with Hotelling deflation. The paper uses
+//! both as the centralized reference curves in Figures 4–6 and 8/10 — for
+//! them "total iterations" equals the outer count (no consensus inner loop).
+
+use super::common::SampleSetting;
+use crate::linalg::qr::orthonormalize;
+use crate::linalg::Mat;
+use crate::metrics::subspace::subspace_error;
+use crate::metrics::trace::{IterRecord, RunTrace};
+
+/// Centralized orthogonal iteration on `M = Σ_i M_i`.
+pub fn run_oi(setting: &SampleSetting, t_o: usize) -> (Mat, RunTrace) {
+    let mut q = setting.q_init.clone();
+    let mut trace = RunTrace::new("OI");
+    for t in 1..=t_o {
+        let v = setting.global_apply(&q);
+        q = orthonormalize(&v);
+        trace.push(IterRecord {
+            outer: t,
+            total_iters: t,
+            error: subspace_error(&setting.truth, &q),
+            p2p_avg: 0.0,
+        });
+    }
+    (q, trace)
+}
+
+/// Centralized sequential power method with deflation: vector j is driven
+/// by `(M − Σ_{k<j} λ_k q_k q_kᵀ)`, each for `iters_per_vec` iterations.
+/// The error trace scores the full current estimate matrix — columns not
+/// yet estimated sit at their initial values, which is why the error stays
+/// high until the last vector converges (the effect the paper highlights).
+pub fn run_seqpm(setting: &SampleSetting, iters_per_vec: usize) -> (Mat, RunTrace) {
+    let r = setting.r;
+    let mut q = setting.q_init.clone();
+    let mut trace = RunTrace::new("SeqPM");
+    let mut lambdas: Vec<f64> = Vec::with_capacity(r);
+    let mut done: Vec<Vec<f64>> = Vec::with_capacity(r);
+    let mut total = 0usize;
+
+    for j in 0..r {
+        let mut v: Vec<f64> = q.col(j);
+        normalize(&mut v);
+        for _ in 0..iters_per_vec {
+            // w = M v − Σ_k λ_k q_k (q_kᵀ v)
+            let vm = Mat::from_vec(v.len(), 1, v.clone());
+            let mut w = setting.global_apply(&vm).col(0);
+            for (k, qk) in done.iter().enumerate() {
+                let dot = dotv(qk, &v);
+                for (wi, qi) in w.iter_mut().zip(qk.iter()) {
+                    *wi -= lambdas[k] * dot * qi;
+                }
+            }
+            normalize(&mut w);
+            v = w;
+            total += 1;
+            q.set_col(j, &v);
+            trace.push(IterRecord {
+                outer: total,
+                total_iters: total,
+                error: subspace_error(&setting.truth, &orthonormalize(&q)),
+                p2p_avg: 0.0,
+            });
+        }
+        // Rayleigh quotient for the deflation weight.
+        let vm = Mat::from_vec(v.len(), 1, v.clone());
+        let mv = setting.global_apply(&vm).col(0);
+        lambdas.push(dotv(&v, &mv));
+        done.push(v);
+    }
+    (orthonormalize(&q), trace)
+}
+
+fn dotv(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spectrum::Spectrum;
+    use crate::data::synthetic::SyntheticDataset;
+    use crate::util::rng::Rng;
+
+    fn setting(seed: u64, gap: f64) -> SampleSetting {
+        let mut rng = Rng::new(seed);
+        let spec = Spectrum::with_gap(20, 5, gap);
+        let ds = SyntheticDataset::full(&spec, 500, 5, &mut rng);
+        SampleSetting::from_parts(&ds.parts, 5, &mut rng)
+    }
+
+    #[test]
+    fn oi_converges_linearly() {
+        let s = setting(1, 0.5);
+        let (q, trace) = run_oi(&s, 60);
+        assert!(subspace_error(&s.truth, &q) < 1e-12);
+        // Error after 2k iterations should be ≲ gap^k-ish: strictly smaller.
+        let e10 = trace.records[9].error;
+        let e30 = trace.records[29].error;
+        assert!(e30 < e10 * 1e-3, "e10={e10} e30={e30}");
+    }
+
+    #[test]
+    fn seqpm_converges_eventually() {
+        let s = setting(2, 0.5);
+        let (q, trace) = run_seqpm(&s, 150);
+        assert!(subspace_error(&s.truth, &q) < 1e-6, "err={}", subspace_error(&s.truth, &q));
+        assert_eq!(trace.records.len(), 5 * 150);
+    }
+
+    #[test]
+    fn seqpm_error_stays_high_until_last_vector() {
+        // The paper's observation: sequential estimation keeps overall
+        // subspace error large until the final vector is being estimated.
+        let s = setting(3, 0.5);
+        let (_, trace) = run_seqpm(&s, 100);
+        let mid = trace.records[249].error; // after 2.5 of 5 vectors
+        let end = trace.final_error();
+        assert!(mid > 10.0 * end.max(1e-14), "mid={mid} end={end}");
+    }
+
+    #[test]
+    fn oi_beats_seqpm_in_iterations() {
+        let s = setting(4, 0.5);
+        let (_, tr_oi) = run_oi(&s, 500);
+        let (_, tr_seq) = run_seqpm(&s, 100);
+        let tol = 1e-5;
+        let oi_iters = tr_oi.iters_to_error(tol);
+        let seq_iters = tr_seq.iters_to_error(tol);
+        assert!(oi_iters.is_some());
+        match (oi_iters, seq_iters) {
+            (Some(a), Some(b)) => assert!(a < b, "oi={a} seq={b}"),
+            (Some(_), None) => {} // SeqPM never got there — also fine.
+            _ => panic!("unexpected"),
+        }
+    }
+}

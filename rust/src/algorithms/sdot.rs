@@ -1,0 +1,276 @@
+//! S-DOT and SA-DOT (Algorithm 1) — the paper's core contribution for
+//! sample-wise partitioned data.
+//!
+//! Two-scale iteration: every outer orthogonal iteration computes
+//! `Z_i = M_i Q_i^{(t-1)}` locally, runs `T_c(t)` consensus-averaging rounds
+//! over the network, rescales by `[W^{T_c} e_1]_i` to estimate the network
+//! **sum** `Σ_j M_j Q_j`, and QR-orthonormalizes locally. S-DOT uses a
+//! fixed `T_c`; SA-DOT grows it with `t` (Theorem 1 gives both linear
+//! convergence to the true eigenspace of `M = Σ_i M_i`).
+
+use super::common::SampleSetting;
+use crate::consensus::schedule::Schedule;
+use crate::linalg::qr::orthonormalize;
+use crate::linalg::Mat;
+use crate::metrics::subspace::average_error;
+use crate::metrics::trace::{IterRecord, RunTrace};
+use crate::network::sim::SyncNetwork;
+use crate::runtime::Backend;
+
+/// Configuration for an S-DOT / SA-DOT run.
+#[derive(Clone, Copy, Debug)]
+pub struct SdotConfig {
+    /// Consensus rounds per outer iteration.
+    pub schedule: Schedule,
+    /// Number of outer (orthogonal) iterations `T_o`.
+    pub t_o: usize,
+    /// Record a trace point every `record_every` outer iterations
+    /// (1 = every iteration).
+    pub record_every: usize,
+}
+
+impl SdotConfig {
+    pub fn new(schedule: Schedule, t_o: usize) -> SdotConfig {
+        SdotConfig { schedule, t_o, record_every: 1 }
+    }
+}
+
+/// Run Algorithm 1 on the given network. Returns the per-node estimates and
+/// the per-iteration trace. The `backend` computes the `M_i Q` hot path
+/// (native Rust or the AOT-compiled XLA artifact).
+pub fn run_sdot_with_backend(
+    net: &mut SyncNetwork,
+    setting: &SampleSetting,
+    cfg: &SdotConfig,
+    backend: &dyn Backend,
+) -> (Vec<Mat>, RunTrace) {
+    let n = net.n();
+    assert_eq!(setting.n_nodes(), n, "setting/network size mismatch");
+    let mut q: Vec<Mat> = vec![setting.q_init.clone(); n];
+    let mut trace = RunTrace::new("S-DOT");
+    let mut total_iters = 0usize;
+
+    for t in 1..=cfg.t_o {
+        // Step 5: local products (the per-node hot path).
+        let mut z: Vec<Mat> = (0..n)
+            .map(|i| backend.cov_apply(&setting.covs[i], &q[i]))
+            .collect();
+        // Steps 6–11: consensus + rescale to a sum estimate.
+        let rounds = cfg.schedule.rounds_at(t);
+        net.consensus_sum(&mut z, rounds);
+        total_iters += rounds;
+        // Step 12: local QR.
+        for i in 0..n {
+            q[i] = backend.orthonormalize(&z[i]);
+        }
+        if t % cfg.record_every == 0 || t == cfg.t_o {
+            trace.push(IterRecord {
+                outer: t,
+                total_iters,
+                error: average_error(&setting.truth, &q),
+                p2p_avg: net.counters.avg(),
+            });
+        }
+    }
+    (q, trace)
+}
+
+/// S-DOT with the native backend (the common path for experiments).
+pub fn run_sdot(
+    net: &mut SyncNetwork,
+    setting: &SampleSetting,
+    cfg: &SdotConfig,
+) -> (Vec<Mat>, RunTrace) {
+    run_sdot_with_backend(net, setting, cfg, &crate::runtime::NativeBackend)
+}
+
+/// SA-DOT is S-DOT with an adaptive schedule; this wrapper labels the trace.
+pub fn run_sadot(
+    net: &mut SyncNetwork,
+    setting: &SampleSetting,
+    cfg: &SdotConfig,
+) -> (Vec<Mat>, RunTrace) {
+    assert!(
+        matches!(cfg.schedule, Schedule::Adaptive { .. }),
+        "SA-DOT requires an adaptive schedule"
+    );
+    let (q, mut trace) = run_sdot(net, setting, cfg);
+    trace.algorithm = "SA-DOT".into();
+    (q, trace)
+}
+
+/// Reference: exact-averaging S-DOT (T_c → ∞ limit). With perfect
+/// consensus every node performs centralized OI — used by tests.
+pub fn run_sdot_exact_consensus(
+    setting: &SampleSetting,
+    t_o: usize,
+) -> (Mat, RunTrace) {
+    let mut q = setting.q_init.clone();
+    let mut trace = RunTrace::new("S-DOT(exact)");
+    for t in 1..=t_o {
+        let v = setting.global_apply(&q);
+        q = orthonormalize(&v);
+        trace.push(IterRecord {
+            outer: t,
+            total_iters: t,
+            error: average_error(&setting.truth, std::slice::from_ref(&q)),
+            p2p_avg: 0.0,
+        });
+    }
+    (q, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spectrum::Spectrum;
+    use crate::data::synthetic::SyntheticDataset;
+    use crate::graph::Graph;
+    use crate::metrics::subspace::subspace_error;
+    use crate::util::rng::Rng;
+
+    fn setting(seed: u64, d: usize, r: usize, gap: f64, nodes: usize) -> (SampleSetting, Rng) {
+        let mut rng = Rng::new(seed);
+        let spec = Spectrum::with_gap(d, r, gap);
+        let ds = SyntheticDataset::full(&spec, 500, nodes, &mut rng);
+        let s = SampleSetting::from_parts(&ds.parts, r, &mut rng);
+        (s, rng)
+    }
+
+    #[test]
+    fn sdot_converges_to_truth() {
+        let (s, mut rng) = setting(1, 20, 5, 0.7, 10);
+        let g = Graph::erdos_renyi(10, 0.5, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let cfg = SdotConfig::new(Schedule::fixed(50), 60);
+        let (q, trace) = run_sdot(&mut net, &s, &cfg);
+        for qi in &q {
+            // Finite T_c leaves a consensus-accuracy error floor (Theorem 1's
+            // ε^{T_o} term); 1e-6 is far below any plotted value in Fig. 1.
+            assert!(subspace_error(&s.truth, qi) < 1e-6, "err={}", subspace_error(&s.truth, qi));
+        }
+        assert!(trace.final_error() < 1e-6);
+    }
+
+    #[test]
+    fn sdot_nodes_reach_consensus() {
+        let (s, mut rng) = setting(2, 20, 5, 0.7, 8);
+        let g = Graph::erdos_renyi(8, 0.4, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let cfg = SdotConfig::new(Schedule::fixed(50), 50);
+        let (q, _) = run_sdot(&mut net, &s, &cfg);
+        for i in 1..8 {
+            // Same subspace at every node.
+            assert!(subspace_error(&q[0], &q[i]) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn sadot_converges_with_adaptive_schedule() {
+        let (s, mut rng) = setting(3, 20, 5, 0.7, 10);
+        let g = Graph::erdos_renyi(10, 0.5, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let cfg = SdotConfig::new(Schedule::adaptive(1.0, 1, 50), 80);
+        let (q, trace) = run_sadot(&mut net, &s, &cfg);
+        assert_eq!(trace.algorithm, "SA-DOT");
+        for qi in &q {
+            assert!(subspace_error(&s.truth, qi) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sadot_uses_fewer_messages_than_sdot() {
+        let (s, mut rng) = setting(4, 20, 5, 0.7, 10);
+        let g = Graph::erdos_renyi(10, 0.5, &mut rng);
+
+        let mut net1 = SyncNetwork::new(g.clone());
+        let cfg1 = SdotConfig::new(Schedule::fixed(50), 40);
+        let (_, tr_s) = run_sdot(&mut net1, &s, &cfg1);
+
+        let mut net2 = SyncNetwork::new(g);
+        let cfg2 = SdotConfig::new(Schedule::adaptive(2.0, 1, 50), 40);
+        let (_, tr_a) = run_sadot(&mut net2, &s, &cfg2);
+
+        assert!(tr_a.final_p2p() < tr_s.final_p2p());
+        // …and with comparable final accuracy.
+        assert!(tr_a.final_error() < 1e-5);
+    }
+
+    #[test]
+    fn sdot_error_decreases() {
+        let (s, mut rng) = setting(5, 20, 5, 0.5, 6);
+        let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let cfg = SdotConfig::new(Schedule::fixed(40), 30);
+        let (_, trace) = run_sdot(&mut net, &s, &cfg);
+        let first = trace.records.first().unwrap().error;
+        let last = trace.final_error();
+        assert!(last < first * 1e-3, "first={first} last={last}");
+    }
+
+    #[test]
+    fn sdot_tracks_exact_consensus_oi() {
+        // With a generous consensus budget the distributed iterates track
+        // centralized OI (Lemma 1).
+        let (s, mut rng) = setting(6, 20, 4, 0.6, 6);
+        let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let t_o = 25;
+        let cfg = SdotConfig::new(Schedule::fixed(120), t_o);
+        let (q, _) = run_sdot(&mut net, &s, &cfg);
+        let (qc, _) = run_sdot_exact_consensus(&s, t_o);
+        for qi in &q {
+            assert!(subspace_error(&qc, qi) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn larger_gap_converges_slower() {
+        // Δ_r closer to 1 ⇒ slower OI convergence (rate |λ_{r+1}/λ_r|^t).
+        let (s_fast, mut rng1) = setting(7, 20, 5, 0.3, 8);
+        let g1 = Graph::erdos_renyi(8, 0.5, &mut rng1);
+        let mut net1 = SyncNetwork::new(g1);
+        let (_, tr_fast) = run_sdot(&mut net1, &s_fast, &SdotConfig::new(Schedule::fixed(50), 25));
+
+        let (s_slow, mut rng2) = setting(7, 20, 5, 0.9, 8);
+        let g2 = Graph::erdos_renyi(8, 0.5, &mut rng2);
+        let mut net2 = SyncNetwork::new(g2);
+        let (_, tr_slow) = run_sdot(&mut net2, &s_slow, &SdotConfig::new(Schedule::fixed(50), 25));
+
+        assert!(
+            tr_fast.final_error() < tr_slow.final_error(),
+            "fast={} slow={}",
+            tr_fast.final_error(),
+            tr_slow.final_error()
+        );
+    }
+
+    #[test]
+    fn p2p_equals_schedule_times_degree() {
+        let (s, mut rng) = setting(8, 20, 3, 0.5, 6);
+        let g = Graph::ring(6);
+        let _ = &mut rng;
+        let mut net = SyncNetwork::new(g);
+        let cfg = SdotConfig::new(Schedule::adaptive(2.0, 1, 50), 12);
+        let (_, _) = run_sdot(&mut net, &s, &cfg);
+        let expected: usize = (1..=12).map(|t| cfg.schedule.rounds_at(t)).sum::<usize>() * 2;
+        for i in 0..6 {
+            assert_eq!(net.counters.sent[i], expected as u64);
+        }
+    }
+
+    #[test]
+    fn works_on_repeated_top_eigenvalues() {
+        // Fig. 5 regime: λ_1 = … = λ_r; PSA (not PCA) still well-posed.
+        let mut rng = Rng::new(9);
+        let spec = Spectrum::repeated_top(20, 5, 0.7);
+        let ds = SyntheticDataset::full(&spec, 500, 8, &mut rng);
+        let s = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+        let g = Graph::erdos_renyi(8, 0.5, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let (q, _) = run_sdot(&mut net, &s, &SdotConfig::new(Schedule::fixed(50), 60));
+        for qi in &q {
+            assert!(subspace_error(&s.truth, qi) < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! SeqDistPM — sequential distributed power method.
+//!
+//! The distributed counterpart of SeqPM ([13]-style): the r basis vectors
+//! are estimated one at a time; each power iteration computes the local
+//! deflated product, consensus-averages it across the network (with
+//! rescaling to a sum estimate), and normalizes. Deflation weights λ_k are
+//! Rayleigh quotients computed once per finished vector via one extra
+//! consensus round (its messages are counted too).
+
+use super::common::SampleSetting;
+use crate::linalg::qr::orthonormalize;
+use crate::linalg::Mat;
+use crate::metrics::subspace::average_error;
+use crate::metrics::trace::{IterRecord, RunTrace};
+use crate::network::sim::SyncNetwork;
+
+/// Configuration: `iters_per_vec` power iterations per basis vector, each
+/// with `t_c` consensus rounds.
+#[derive(Clone, Copy, Debug)]
+pub struct SeqDistPmConfig {
+    pub iters_per_vec: usize,
+    pub t_c: usize,
+    pub record_every: usize,
+}
+
+pub fn run_seqdistpm(
+    net: &mut SyncNetwork,
+    setting: &SampleSetting,
+    cfg: &SeqDistPmConfig,
+) -> (Vec<Mat>, RunTrace) {
+    let n = net.n();
+    let d = setting.d();
+    let r = setting.r;
+    let mut trace = RunTrace::new("SeqDistPM");
+    // Per-node running estimate matrix (starts at the common init).
+    let mut q: Vec<Mat> = vec![setting.q_init.clone(); n];
+    // Finished vectors and deflation weights, agreed across nodes.
+    let mut lambdas: Vec<Vec<f64>> = vec![Vec::new(); n];
+    let mut total = 0usize;
+    let mut outer = 0usize;
+
+    for j in 0..r {
+        // Current working vector at each node.
+        let mut v: Vec<Vec<f64>> = (0..n).map(|i| q[i].col(j)).collect();
+        for vi in v.iter_mut() {
+            normalize(vi);
+        }
+        for it in 0..cfg.iters_per_vec {
+            // Local deflated product.
+            let mut z: Vec<Mat> = (0..n)
+                .map(|i| {
+                    let vm = Mat::from_vec(d, 1, v[i].clone());
+                    let mut w = setting.covs[i].apply(&vm);
+                    // Deflate with the previously agreed vectors: the local
+                    // share of λ_k q_k q_kᵀ v is split evenly (1/N each) so
+                    // the consensus sum reconstructs the full deflation.
+                    for k in 0..lambdas[i].len() {
+                        let qk = q[i].col(k);
+                        let dot = dotv(&qk, &v[i]);
+                        let coeff = lambdas[i][k] * dot / n as f64;
+                        for (wi, qki) in w.data.iter_mut().zip(qk.iter()) {
+                            *wi -= coeff * qki;
+                        }
+                    }
+                    w
+                })
+                .collect();
+            net.consensus_sum(&mut z, cfg.t_c);
+            total += cfg.t_c;
+            outer += 1;
+            for i in 0..n {
+                let mut w = z[i].col(0);
+                normalize(&mut w);
+                q[i].set_col(j, &w);
+                v[i] = w;
+            }
+            if outer % cfg.record_every == 0 || (j == r - 1 && it == cfg.iters_per_vec - 1) {
+                let estimates: Vec<Mat> = q.iter().map(orthonormalize).collect();
+                trace.push(IterRecord {
+                    outer,
+                    total_iters: total,
+                    error: average_error(&setting.truth, &estimates),
+                    p2p_avg: net.counters.avg(),
+                });
+            }
+        }
+        // Agree on λ_j = vᵀ M v via one consensus round over local scalars.
+        let mut lam: Vec<Mat> = (0..n)
+            .map(|i| {
+                let vm = Mat::from_vec(d, 1, v[i].clone());
+                let mv = setting.covs[i].apply(&vm);
+                Mat::from_vec(1, 1, vec![dotv(&v[i], &mv.col(0))])
+            })
+            .collect();
+        net.consensus_sum(&mut lam, cfg.t_c);
+        total += cfg.t_c;
+        for i in 0..n {
+            lambdas[i].push(lam[i].get(0, 0));
+        }
+    }
+    let qfinal: Vec<Mat> = q.iter().map(orthonormalize).collect();
+    (qfinal, trace)
+}
+
+fn dotv(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spectrum::Spectrum;
+    use crate::data::synthetic::SyntheticDataset;
+    use crate::graph::Graph;
+    use crate::metrics::subspace::subspace_error;
+    use crate::util::rng::Rng;
+
+    fn setting(seed: u64) -> (SampleSetting, Rng) {
+        let mut rng = Rng::new(seed);
+        // SeqDistPM needs distinct eigenvalues (power-method requirement).
+        let spec = Spectrum::with_gap(16, 3, 0.4);
+        let ds = SyntheticDataset::full(&spec, 800, 6, &mut rng);
+        let s = SampleSetting::from_parts(&ds.parts, 3, &mut rng);
+        (s, rng)
+    }
+
+    #[test]
+    fn seqdistpm_converges() {
+        let (s, mut rng) = setting(1);
+        let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let cfg = SeqDistPmConfig { iters_per_vec: 120, t_c: 50, record_every: 10 };
+        let (q, _) = run_seqdistpm(&mut net, &s, &cfg);
+        for qi in &q {
+            let e = subspace_error(&s.truth, qi);
+            assert!(e < 1e-4, "err={e}");
+        }
+    }
+
+    #[test]
+    fn seqdistpm_nodes_agree() {
+        let (s, mut rng) = setting(2);
+        let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let cfg = SeqDistPmConfig { iters_per_vec: 80, t_c: 50, record_every: 20 };
+        let (q, _) = run_seqdistpm(&mut net, &s, &cfg);
+        for i in 1..q.len() {
+            assert!(subspace_error(&q[0], &q[i]) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn seqdistpm_slower_than_sdot_in_total_iterations() {
+        // Fig. 4's headline: simultaneous estimation (S-DOT) beats
+        // sequential (SeqDistPM) on (inner × outer) iteration count.
+        use crate::algorithms::sdot::{run_sdot, SdotConfig};
+        use crate::consensus::schedule::Schedule;
+
+        let (s, mut rng) = setting(3);
+        let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+
+        let mut net1 = SyncNetwork::new(g.clone());
+        let (_, tr_sdot) = run_sdot(&mut net1, &s, &SdotConfig::new(Schedule::fixed(50), 100));
+
+        let mut net2 = SyncNetwork::new(g);
+        let cfg = SeqDistPmConfig { iters_per_vec: 100, t_c: 50, record_every: 5 };
+        let (_, tr_seq) = run_seqdistpm(&mut net2, &s, &cfg);
+
+        let tol = 1e-4;
+        let a = tr_sdot.iters_to_error(tol).expect("S-DOT reaches tol");
+        match tr_seq.iters_to_error(tol) {
+            Some(b) => assert!(a < b, "sdot={a} seqdistpm={b}"),
+            None => {} // sequential never reached tolerance — consistent.
+        }
+    }
+}

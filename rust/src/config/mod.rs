@@ -1,0 +1,109 @@
+//! Experiment configuration: JSON file + CLI flag merging.
+
+use crate::experiments::ExpCtx;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+/// Load an [`ExpCtx`] from an optional JSON config file, then apply CLI
+/// overrides (`--seed`, `--scale`, `--trials`, `--out`).
+///
+/// Config file format:
+/// ```json
+/// {"seed": 42, "scale": 1.0, "trials": 3, "out_dir": "results"}
+/// ```
+pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
+    let mut ctx = ExpCtx::default();
+    if let Some(path) = args.get("config") {
+        ctx = from_file(Path::new(path))?;
+    }
+    if let Some(v) = args.get("seed") {
+        ctx.seed = v.parse().map_err(|_| anyhow!("bad --seed"))?;
+    }
+    if let Some(v) = args.get("scale") {
+        ctx.scale = v.parse().map_err(|_| anyhow!("bad --scale"))?;
+    }
+    if let Some(v) = args.get("trials") {
+        ctx.trials = v.parse().map_err(|_| anyhow!("bad --trials"))?;
+    }
+    if let Some(v) = args.get("out") {
+        ctx.out_dir = PathBuf::from(v);
+    }
+    if ctx.scale <= 0.0 || ctx.scale > 10.0 {
+        return Err(anyhow!("scale must be in (0, 10]"));
+    }
+    if ctx.trials == 0 {
+        return Err(anyhow!("trials must be >= 1"));
+    }
+    Ok(ctx)
+}
+
+/// Parse a config file.
+pub fn from_file(path: &Path) -> Result<ExpCtx> {
+    let text = std::fs::read_to_string(path)?;
+    let json = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let mut ctx = ExpCtx::default();
+    if let Some(v) = json.get("seed").and_then(|v| v.as_f64()) {
+        ctx.seed = v as u64;
+    }
+    if let Some(v) = json.get("scale").and_then(|v| v.as_f64()) {
+        ctx.scale = v;
+    }
+    if let Some(v) = json.get("trials").and_then(|v| v.as_usize()) {
+        ctx.trials = v;
+    }
+    if let Some(v) = json.get("out_dir").and_then(|v| v.as_str()) {
+        ctx.out_dir = PathBuf::from(v);
+    }
+    Ok(ctx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn defaults_without_flags() {
+        let ctx = load_ctx(&args(&[])).unwrap();
+        assert_eq!(ctx.seed, 42);
+        assert_eq!(ctx.scale, 1.0);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let ctx = load_ctx(&args(&["--seed", "7", "--scale", "0.5", "--trials", "2"])).unwrap();
+        assert_eq!(ctx.seed, 7);
+        assert_eq!(ctx.scale, 0.5);
+        assert_eq!(ctx.trials, 2);
+    }
+
+    #[test]
+    fn file_then_cli_priority() {
+        let dir = std::env::temp_dir().join("dpsa_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"seed": 1, "scale": 0.25, "trials": 5}"#).unwrap();
+        let ctx = load_ctx(&args(&[
+            "--config",
+            p.to_str().unwrap(),
+            "--seed",
+            "99",
+        ]))
+        .unwrap();
+        assert_eq!(ctx.seed, 99); // CLI wins
+        assert_eq!(ctx.scale, 0.25); // file value kept
+        assert_eq!(ctx.trials, 5);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(load_ctx(&args(&["--scale", "0"])).is_err());
+        assert!(load_ctx(&args(&["--trials", "0"])).is_err());
+        assert!(load_ctx(&args(&["--seed", "xyz"])).is_err());
+    }
+}

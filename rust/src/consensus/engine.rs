@@ -1,0 +1,208 @@
+//! The consensus-averaging inner loop (Alg. 1 steps 6–11).
+//!
+//! Operates on one matrix per node and mixes them through the weight
+//! matrix using **only graph-neighbor state** — the simulator enforces the
+//! communication structure the algorithm would have on a real network, and
+//! every neighbor exchange increments the P2P counters.
+
+use super::weights::WeightMatrix;
+use crate::graph::Graph;
+use crate::linalg::Mat;
+use crate::network::counters::P2pCounters;
+
+/// Result of a consensus run.
+#[derive(Clone, Debug)]
+pub struct ConsensusOutcome {
+    pub rounds: usize,
+}
+
+/// Run `rounds` synchronous consensus iterations in place:
+/// `Z_i ← w_ii Z_i + Σ_{j∈adj(i)} w_ij Z_j`.
+///
+/// Each round, every node sends its current matrix to each neighbor
+/// (`deg(i)` messages), matching MPI blocking point-to-point exchanges.
+pub fn average_consensus(
+    g: &Graph,
+    wm: &WeightMatrix,
+    z: &mut Vec<Mat>,
+    rounds: usize,
+    counters: &mut P2pCounters,
+) -> ConsensusOutcome {
+    let n = g.n;
+    assert_eq!(z.len(), n);
+    assert_eq!(wm.n(), n);
+    if n == 0 || rounds == 0 {
+        return ConsensusOutcome { rounds: 0 };
+    }
+    let (r_, c_) = (z[0].rows, z[0].cols);
+    let elems = r_ * c_;
+    // Double buffer to keep the round synchronous.
+    let mut next: Vec<Mat> = z.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+    for _round in 0..rounds {
+        for i in 0..n {
+            let wii = wm.w.get(i, i);
+            let dst = &mut next[i];
+            dst.data.copy_from_slice(&z[i].data);
+            dst.scale_inplace(wii);
+            for &j in &g.adj[i] {
+                dst.axpy(wm.w.get(i, j), &z[j]);
+            }
+        }
+        for i in 0..n {
+            // i sends one matrix to each neighbor (the use of z[j] above is
+            // the receive side of j's send).
+            for _ in 0..g.degree(i) {
+                counters.record_send(i, elems);
+            }
+        }
+        std::mem::swap(z, &mut next);
+    }
+    ConsensusOutcome { rounds }
+}
+
+/// Alg. 1 step 11: rescale each node's consensus result by `[W^{T_c} e_1]_i`
+/// so the (approximate) network average becomes an estimate of the **sum**.
+///
+/// For very small round counts (SA-DOT's first iterations under a `0.5t+1`
+/// schedule), nodes farther than `T_c` hops from node 0 have
+/// `[W^{T_c} e_1]_i = 0`; the paper's formula is undefined there. We use
+/// the asymptotically equivalent rescale ×N in that regime — early OI
+/// iterates are dominated by consensus error anyway (the premise of
+/// SA-DOT), and the choice washes out as `T_c(t)` grows.
+pub fn rescale_to_sum(wm: &WeightMatrix, z: &mut [Mat], rounds: usize) {
+    let v = wm.pow_e1(rounds);
+    let n = z.len() as f64;
+    for (i, m) in z.iter_mut().enumerate() {
+        let s = v[i];
+        if s > 1e-9 {
+            m.scale_inplace(1.0 / s);
+        } else {
+            m.scale_inplace(n);
+        }
+    }
+}
+
+/// Exact average (what infinite consensus would produce) — used by tests
+/// and by the F-DOT push-sum fallback.
+pub fn exact_average(z: &[Mat]) -> Mat {
+    assert!(!z.is_empty());
+    let mut sum = Mat::zeros(z[0].rows, z[0].cols);
+    for m in z {
+        sum.axpy(1.0, m);
+    }
+    sum.scale_inplace(1.0 / z.len() as f64);
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::weights::local_degree_weights;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, p: f64, seed: u64) -> (Graph, WeightMatrix, Vec<Mat>, Rng) {
+        let mut rng = Rng::new(seed);
+        let g = Graph::erdos_renyi(n, p, &mut rng);
+        let wm = local_degree_weights(&g);
+        let z: Vec<Mat> = (0..n).map(|_| Mat::gauss(6, 3, &mut rng)).collect();
+        (g, wm, z, rng)
+    }
+
+    #[test]
+    fn consensus_converges_to_average() {
+        let (g, wm, mut z, _) = setup(12, 0.4, 1);
+        let avg = exact_average(&z);
+        let mut c = P2pCounters::new(12);
+        average_consensus(&g, &wm, &mut z, 400, &mut c);
+        for zi in &z {
+            assert!(zi.dist_fro(&avg) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn consensus_preserves_network_sum() {
+        let (g, wm, mut z, _) = setup(10, 0.5, 2);
+        let sum_before = {
+            let mut s = Mat::zeros(6, 3);
+            z.iter().for_each(|m| s.axpy(1.0, m));
+            s
+        };
+        let mut c = P2pCounters::new(10);
+        average_consensus(&g, &wm, &mut z, 17, &mut c);
+        let mut sum_after = Mat::zeros(6, 3);
+        z.iter().for_each(|m| sum_after.axpy(1.0, m));
+        assert!(sum_before.dist_fro(&sum_after) < 1e-9);
+    }
+
+    #[test]
+    fn p2p_counts_match_degrees() {
+        let (g, wm, mut z, _) = setup(9, 0.4, 3);
+        let rounds = 23;
+        let mut c = P2pCounters::new(9);
+        average_consensus(&g, &wm, &mut z, rounds, &mut c);
+        for i in 0..9 {
+            assert_eq!(c.sent[i], (rounds * g.degree(i)) as u64);
+        }
+    }
+
+    #[test]
+    fn zero_rounds_is_noop() {
+        let (g, wm, mut z, _) = setup(8, 0.5, 4);
+        let before = z.clone();
+        let mut c = P2pCounters::new(8);
+        average_consensus(&g, &wm, &mut z, 0, &mut c);
+        for (a, b) in z.iter().zip(before.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(c.total(), 0);
+    }
+
+    #[test]
+    fn rescale_recovers_sum() {
+        let (g, wm, mut z, _) = setup(11, 0.5, 5);
+        let mut total = Mat::zeros(6, 3);
+        z.iter().for_each(|m| total.axpy(1.0, m));
+        let rounds = 300;
+        let mut c = P2pCounters::new(11);
+        average_consensus(&g, &wm, &mut z, rounds, &mut c);
+        rescale_to_sum(&wm, &mut z, rounds);
+        for zi in &z {
+            assert!(zi.dist_fro(&total) < 1e-6 * total.fro_norm().max(1.0));
+        }
+    }
+
+    #[test]
+    fn rescale_finite_rounds_still_useful() {
+        // With few rounds the rescaled estimate is inexact but finite and
+        // in the right ballpark (Proposition 1 behaviour).
+        let (g, wm, mut z, _) = setup(10, 0.4, 6);
+        let mut total = Mat::zeros(6, 3);
+        z.iter().for_each(|m| total.axpy(1.0, m));
+        let rounds = 30;
+        let mut c = P2pCounters::new(10);
+        average_consensus(&g, &wm, &mut z, rounds, &mut c);
+        rescale_to_sum(&wm, &mut z, rounds);
+        for zi in &z {
+            assert!(zi.is_finite());
+            assert!(zi.dist_fro(&total) < 0.5 * total.fro_norm().max(1.0));
+        }
+    }
+
+    #[test]
+    fn consensus_error_decays_monotonically_in_rounds() {
+        let (g, wm, z0, _) = setup(14, 0.3, 7);
+        let avg = exact_average(&z0);
+        let mut errs = Vec::new();
+        for rounds in [5usize, 20, 80] {
+            let mut z = z0.clone();
+            let mut c = P2pCounters::new(14);
+            average_consensus(&g, &wm, &mut z, rounds, &mut c);
+            let worst = z
+                .iter()
+                .map(|m| m.dist_fro(&avg))
+                .fold(0.0f64, f64::max);
+            errs.push(worst);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+}

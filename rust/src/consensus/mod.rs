@@ -1,0 +1,10 @@
+//! Consensus averaging: weight matrices, mixing time, schedules, engine.
+pub mod engine;
+pub mod mixing;
+pub mod schedule;
+pub mod weights;
+
+pub use engine::{average_consensus, ConsensusOutcome};
+pub use mixing::{mixing_time, slem};
+pub use schedule::Schedule;
+pub use weights::{local_degree_weights, max_degree_weights, WeightMatrix};

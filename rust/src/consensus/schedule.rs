@@ -1,0 +1,175 @@
+//! Consensus-iteration schedules.
+//!
+//! S-DOT uses a fixed `T_c` per outer iteration; SA-DOT grows the budget
+//! with the outer iteration index `t` (1-based), e.g. `⌈0.5t⌉+1`, `t+1`,
+//! `2t+1` — optionally capped (`min(5t+1, 200)` in Table II). Matching the
+//! paper's MPI implementation, adaptive schedules are additionally capped
+//! at the fixed baseline budget when one is given.
+
+use std::fmt;
+
+/// Number of consensus rounds to run in outer iteration `t` (t = 1, 2, …).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    /// S-DOT: constant `T_c`.
+    Fixed(usize),
+    /// SA-DOT: `min(⌊slope·t⌋ + offset, cap)`.
+    Adaptive { slope: f64, offset: usize, cap: usize },
+}
+
+impl Schedule {
+    /// Convenience constructors mirroring the paper's notation.
+    pub fn fixed(tc: usize) -> Schedule {
+        Schedule::Fixed(tc)
+    }
+
+    /// `min(⌊slope·t⌋ + offset, cap)`.
+    pub fn adaptive(slope: f64, offset: usize, cap: usize) -> Schedule {
+        Schedule::Adaptive { slope, offset, cap }
+    }
+
+    /// Parse the paper's table notation: "50", "t+1", "2t+1", "0.5t+1",
+    /// "min(5t+1,200)".
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let s = s.trim().replace(' ', "");
+        if let Ok(v) = s.parse::<usize>() {
+            return Some(Schedule::Fixed(v));
+        }
+        let (body, cap) = if let Some(rest) = s.strip_prefix("min(") {
+            let inner = rest.strip_suffix(')')?;
+            let (body, cap) = inner.rsplit_once(',')?;
+            (body.to_string(), cap.parse::<usize>().ok()?)
+        } else {
+            (s.clone(), usize::MAX)
+        };
+        // body looks like "<slope>t+<offset>" or "t+<offset>" or "t".
+        let (slope_str, rest) = body.split_once('t')?;
+        let slope: f64 = if slope_str.is_empty() { 1.0 } else { slope_str.parse().ok()? };
+        let offset: usize = if rest.is_empty() {
+            0
+        } else {
+            rest.strip_prefix('+')?.parse().ok()?
+        };
+        Some(Schedule::Adaptive { slope, offset, cap })
+    }
+
+    /// Rounds in outer iteration `t` (1-based).
+    pub fn rounds_at(&self, t: usize) -> usize {
+        match *self {
+            Schedule::Fixed(tc) => tc,
+            Schedule::Adaptive { slope, offset, cap } => {
+                (((slope * t as f64).floor() as usize) + offset).min(cap)
+            }
+        }
+    }
+
+    /// Total consensus rounds over `t_o` outer iterations.
+    pub fn total_rounds(&self, t_o: usize) -> usize {
+        (1..=t_o).map(|t| self.rounds_at(t)).sum()
+    }
+
+    /// Cap an adaptive schedule to `cap` (used to align SA-DOT with the
+    /// S-DOT baseline budget, as in Tables I–IV).
+    pub fn with_cap(&self, new_cap: usize) -> Schedule {
+        match *self {
+            Schedule::Fixed(tc) => Schedule::Fixed(tc.min(new_cap)),
+            Schedule::Adaptive { slope, offset, cap } => Schedule::Adaptive {
+                slope,
+                offset,
+                cap: cap.min(new_cap),
+            },
+        }
+    }
+}
+
+impl fmt::Display for Schedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Schedule::Fixed(tc) => write!(f, "{tc}"),
+            Schedule::Adaptive { slope, offset, cap } => {
+                let body = if (slope - 1.0).abs() < 1e-12 {
+                    format!("t+{offset}")
+                } else {
+                    format!("{slope}t+{offset}")
+                };
+                if cap == usize::MAX {
+                    write!(f, "{body}")
+                } else {
+                    write!(f, "min({body},{cap})")
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_schedule() {
+        let s = Schedule::fixed(50);
+        assert_eq!(s.rounds_at(1), 50);
+        assert_eq!(s.rounds_at(200), 50);
+        assert_eq!(s.total_rounds(200), 10_000);
+    }
+
+    #[test]
+    fn adaptive_2t_plus_1_capped_50() {
+        let s = Schedule::adaptive(2.0, 1, 50);
+        assert_eq!(s.rounds_at(1), 3);
+        assert_eq!(s.rounds_at(24), 49);
+        assert_eq!(s.rounds_at(25), 50);
+        assert_eq!(s.rounds_at(100), 50);
+        // Matches the Table-I budget ratio check: total/10_000 ≈ 0.94
+        let total = s.total_rounds(200);
+        assert!(total > 9_300 && total < 9_500, "total={total}");
+    }
+
+    #[test]
+    fn adaptive_half_t() {
+        let s = Schedule::adaptive(0.5, 1, 50);
+        assert_eq!(s.rounds_at(1), 1); // floor(0.5)+1
+        assert_eq!(s.rounds_at(2), 2);
+        assert_eq!(s.rounds_at(98), 50);
+        let total = s.total_rounds(200);
+        assert!(total > 7_400 && total < 7_800, "total={total}");
+    }
+
+    #[test]
+    fn parse_notations() {
+        assert_eq!(Schedule::parse("50"), Some(Schedule::Fixed(50)));
+        assert_eq!(
+            Schedule::parse("t+1"),
+            Some(Schedule::Adaptive { slope: 1.0, offset: 1, cap: usize::MAX })
+        );
+        assert_eq!(
+            Schedule::parse("2t+1"),
+            Some(Schedule::Adaptive { slope: 2.0, offset: 1, cap: usize::MAX })
+        );
+        assert_eq!(
+            Schedule::parse("0.5t+1"),
+            Some(Schedule::Adaptive { slope: 0.5, offset: 1, cap: usize::MAX })
+        );
+        assert_eq!(
+            Schedule::parse("min(5t+1,200)"),
+            Some(Schedule::Adaptive { slope: 5.0, offset: 1, cap: 200 })
+        );
+        assert_eq!(Schedule::parse("garbage"), None);
+    }
+
+    #[test]
+    fn with_cap_applies() {
+        let s = Schedule::parse("2t+1").unwrap().with_cap(50);
+        assert_eq!(s.rounds_at(1000), 50);
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for txt in ["50", "t+1", "2t+1", "min(5t+1,200)"] {
+            let s = Schedule::parse(txt).unwrap();
+            let shown = s.to_string();
+            assert_eq!(Schedule::parse(&shown), Some(s), "{txt} -> {shown}");
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Doubly-stochastic consensus weight matrices.
+//!
+//! The paper designs `W` with the **local-degree** method of Xiao & Boyd
+//! [16] (a.k.a. Metropolis–Hastings weights):
+//!
+//! ```text
+//! w_ij = 1 / (1 + max(d_i, d_j))   for (i,j) ∈ E
+//! w_ii = 1 - Σ_{j∈N(i)} w_ij
+//! ```
+//!
+//! which is symmetric, doubly stochastic, and has positive diagonal —
+//! guaranteeing convergence of `W^t → (1/N)·11ᵀ` on connected, non-bipartite
+//! effective chains.
+
+use crate::graph::Graph;
+use crate::linalg::Mat;
+
+/// A consensus weight matrix tied to a graph (dense `N×N`; `N ≤` a few
+/// hundred in all paper experiments, so dense storage is the right call —
+/// but the engine only ever applies rows over `N_i`, never the full dense
+/// product).
+#[derive(Clone, Debug)]
+pub struct WeightMatrix {
+    pub w: Mat,
+}
+
+/// Local-degree (Metropolis–Hastings) weights — the paper's choice.
+pub fn local_degree_weights(g: &Graph) -> WeightMatrix {
+    let n = g.n;
+    let mut w = Mat::zeros(n, n);
+    for i in 0..n {
+        let mut diag = 1.0;
+        for &j in &g.adj[i] {
+            let wij = 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+            w.set(i, j, wij);
+            diag -= wij;
+        }
+        w.set(i, i, diag);
+    }
+    WeightMatrix { w }
+}
+
+/// Max-degree weights: `w_ij = 1/(1+Δ)` for edges, uniform alternative.
+pub fn max_degree_weights(g: &Graph) -> WeightMatrix {
+    let n = g.n;
+    let dmax = g.max_degree() as f64;
+    let mut w = Mat::zeros(n, n);
+    for i in 0..n {
+        let mut diag = 1.0;
+        for &j in &g.adj[i] {
+            let wij = 1.0 / (1.0 + dmax);
+            w.set(i, j, wij);
+            diag -= wij;
+        }
+        w.set(i, i, diag);
+    }
+    WeightMatrix { w }
+}
+
+impl WeightMatrix {
+    pub fn n(&self) -> usize {
+        self.w.rows
+    }
+
+    /// Row-stochastic check error: `max_i |Σ_j w_ij − 1|`.
+    pub fn row_sum_err(&self) -> f64 {
+        let n = self.n();
+        let mut err = 0.0f64;
+        for i in 0..n {
+            let s: f64 = self.w.row(i).iter().sum();
+            err = err.max((s - 1.0).abs());
+        }
+        err
+    }
+
+    /// Symmetry error (doubly-stochastic follows from symmetry + rows).
+    pub fn symmetry_err(&self) -> f64 {
+        let n = self.n();
+        let mut err = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                err = err.max((self.w.get(i, j) - self.w.get(j, i)).abs());
+            }
+        }
+        err
+    }
+
+    /// All entries non-negative?
+    pub fn nonnegative(&self) -> bool {
+        self.w.data.iter().all(|&v| v >= -1e-15)
+    }
+
+    /// `W^t e_1` — the rescaling vector of Alg. 1 step 11. Node `i` divides
+    /// its consensus result by entry `i` of this vector to turn the (inexact)
+    /// average into a sum estimate.
+    pub fn pow_e1(&self, t: usize) -> Vec<f64> {
+        let n = self.n();
+        let mut v = vec![0.0; n];
+        v[0] = 1.0;
+        for _ in 0..t {
+            let mut nv = vec![0.0; n];
+            for i in 0..n {
+                let row = self.w.row(i);
+                let mut s = 0.0;
+                for (wv, xv) in row.iter().zip(v.iter()) {
+                    s += wv * xv;
+                }
+                nv[i] = s;
+            }
+            v = nv;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn local_degree_doubly_stochastic() {
+        let mut rng = Rng::new(1);
+        for spec in ["erdos", "ring", "star"] {
+            let g = Graph::from_spec(spec, 12, 0.4, &mut rng);
+            let wm = local_degree_weights(&g);
+            assert!(wm.row_sum_err() < 1e-12, "{spec}");
+            assert!(wm.symmetry_err() < 1e-12, "{spec}");
+            assert!(wm.nonnegative(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn max_degree_doubly_stochastic() {
+        let mut rng = Rng::new(2);
+        let g = Graph::erdos_renyi(15, 0.3, &mut rng);
+        let wm = max_degree_weights(&g);
+        assert!(wm.row_sum_err() < 1e-12);
+        assert!(wm.symmetry_err() < 1e-12);
+        assert!(wm.nonnegative());
+    }
+
+    #[test]
+    fn sparsity_respects_graph() {
+        let g = Graph::ring(8);
+        let wm = local_degree_weights(&g);
+        for i in 0..8 {
+            for j in 0..8 {
+                if i != j && !g.adj[i].contains(&j) {
+                    assert_eq!(wm.w.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_weights_value() {
+        // Ring: all degrees 2 => w_ij = 1/3 on edges, w_ii = 1/3.
+        let g = Graph::ring(6);
+        let wm = local_degree_weights(&g);
+        assert!((wm.w.get(0, 1) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((wm.w.get(0, 0) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn star_weights_value() {
+        // Star N=5: hub degree 4, leaves degree 1 => edge weight 1/5.
+        let g = Graph::star(5);
+        let wm = local_degree_weights(&g);
+        assert!((wm.w.get(0, 1) - 0.2).abs() < 1e-12);
+        assert!((wm.w.get(0, 0) - (1.0 - 4.0 * 0.2)).abs() < 1e-12);
+        assert!((wm.w.get(1, 1) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pow_e1_converges_to_uniform() {
+        let mut rng = Rng::new(3);
+        let g = Graph::erdos_renyi(10, 0.5, &mut rng);
+        let wm = local_degree_weights(&g);
+        let v = wm.pow_e1(200);
+        for x in v {
+            assert!((x - 0.1).abs() < 1e-8, "x={x}");
+        }
+    }
+
+    #[test]
+    fn pow_e1_zero_steps_is_e1() {
+        let g = Graph::ring(5);
+        let wm = local_degree_weights(&g);
+        let v = wm.pow_e1(0);
+        assert_eq!(v[0], 1.0);
+        assert!(v[1..].iter().all(|&x| x == 0.0));
+    }
+}

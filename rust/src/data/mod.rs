@@ -1,0 +1,20 @@
+//! Data generation and partitioning.
+//!
+//! The paper's synthetic experiments draw Gaussian samples whose covariance
+//! has a controlled r-th eigengap `Δ_r = λ_{r+1}/λ_r`; real-data experiments
+//! use MNIST / CIFAR-10 / LFW / ImageNet. The sandbox has no dataset files,
+//! so [`datasets`] provides **matched-spectrum surrogates** (documented in
+//! DESIGN.md): spiked-covariance samplers with each dataset's (d, n) and a
+//! decay profile fitted to the published spectra of those datasets. The
+//! sample-wise algorithms touch data only through local covariances, so the
+//! surrogates exercise the identical code paths. If real IDX files are
+//! present under `data/` they are loaded instead.
+
+pub mod datasets;
+pub mod partition;
+pub mod spectrum;
+pub mod synthetic;
+
+pub use partition::{partition_features, partition_samples};
+pub use spectrum::Spectrum;
+pub use synthetic::SyntheticDataset;

@@ -1,0 +1,122 @@
+//! Sample-wise and feature-wise data partitioning (Section II-A).
+
+use crate::linalg::Mat;
+
+/// Split `X ∈ R^{d×n}` by **samples** (columns) into `nodes` blocks whose
+/// sizes differ by at most one (`n_i = ⌊n/N⌋` or `⌈n/N⌉`).
+pub fn partition_samples(x: &Mat, nodes: usize) -> Vec<Mat> {
+    assert!(nodes >= 1 && nodes <= x.cols, "need 1 <= nodes <= n");
+    let n = x.cols;
+    let base = n / nodes;
+    let rem = n % nodes;
+    let mut out = Vec::with_capacity(nodes);
+    let mut off = 0;
+    for i in 0..nodes {
+        let sz = base + usize::from(i < rem);
+        out.push(x.cols_range(off, off + sz));
+        off += sz;
+    }
+    assert_eq!(off, n);
+    out
+}
+
+/// Split `X ∈ R^{d×n}` by **features** (rows) into `nodes` blocks whose
+/// sizes differ by at most one (`d_i = ⌊d/N⌋` or `⌈d/N⌉`).
+pub fn partition_features(x: &Mat, nodes: usize) -> Vec<Mat> {
+    assert!(nodes >= 1 && nodes <= x.rows, "need 1 <= nodes <= d");
+    let d = x.rows;
+    let base = d / nodes;
+    let rem = d % nodes;
+    let mut out = Vec::with_capacity(nodes);
+    let mut off = 0;
+    for i in 0..nodes {
+        let sz = base + usize::from(i < rem);
+        out.push(x.rows_range(off, off + sz));
+        off += sz;
+    }
+    assert_eq!(off, d);
+    out
+}
+
+/// Row offsets of each feature block (for reassembling `Q_f`).
+pub fn feature_offsets(d: usize, nodes: usize) -> Vec<usize> {
+    let base = d / nodes;
+    let rem = d % nodes;
+    let mut offs = Vec::with_capacity(nodes + 1);
+    let mut off = 0;
+    offs.push(0);
+    for i in 0..nodes {
+        off += base + usize::from(i < rem);
+        offs.push(off);
+    }
+    offs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn samples_partition_exact() {
+        let mut rng = Rng::new(1);
+        let x = Mat::gauss(4, 23, &mut rng);
+        let parts = partition_samples(&x, 5);
+        assert_eq!(parts.len(), 5);
+        let total: usize = parts.iter().map(|p| p.cols).sum();
+        assert_eq!(total, 23);
+        // Sizes differ by at most 1.
+        let mx = parts.iter().map(|p| p.cols).max().unwrap();
+        let mn = parts.iter().map(|p| p.cols).min().unwrap();
+        assert!(mx - mn <= 1);
+        // Content preserved in order.
+        assert_eq!(parts[0].col(0), x.col(0));
+        let last = parts.last().unwrap();
+        assert_eq!(last.col(last.cols - 1), x.col(22));
+    }
+
+    #[test]
+    fn features_partition_exact() {
+        let mut rng = Rng::new(2);
+        let x = Mat::gauss(10, 6, &mut rng);
+        let parts = partition_features(&x, 3);
+        let total: usize = parts.iter().map(|p| p.rows).sum();
+        assert_eq!(total, 10);
+        // Stacking recovers X.
+        let refs: Vec<&Mat> = parts.iter().collect();
+        let back = Mat::vstack(&refs);
+        assert_eq!(back.data, x.data);
+    }
+
+    #[test]
+    fn offsets_consistent_with_partition() {
+        let mut rng = Rng::new(3);
+        let x = Mat::gauss(11, 4, &mut rng);
+        let parts = partition_features(&x, 4);
+        let offs = feature_offsets(11, 4);
+        assert_eq!(offs.len(), 5);
+        assert_eq!(*offs.last().unwrap(), 11);
+        for (i, p) in parts.iter().enumerate() {
+            assert_eq!(p.rows, offs[i + 1] - offs[i]);
+        }
+    }
+
+    #[test]
+    fn single_node_identity() {
+        let mut rng = Rng::new(4);
+        let x = Mat::gauss(5, 7, &mut rng);
+        assert_eq!(partition_samples(&x, 1)[0].data, x.data);
+        assert_eq!(partition_features(&x, 1)[0].data, x.data);
+    }
+
+    #[test]
+    fn one_feature_per_node() {
+        // Fig. 6 setting: d = N, each node carries one feature.
+        let mut rng = Rng::new(5);
+        let x = Mat::gauss(10, 20, &mut rng);
+        let parts = partition_features(&x, 10);
+        for p in &parts {
+            assert_eq!(p.rows, 1);
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Eigenvalue profiles with a controlled r-th eigengap.
+//!
+//! Section V-A: "Samples are randomly generated from the Gaussian
+//! distribution with different r-th eigengaps Δ_r = λ_{r+1}/λ_r", including
+//! the non-distinct case λ_1 = … = λ_r > λ_{r+1} (Fig. 5).
+
+/// An eigenvalue profile λ_1 ≥ … ≥ λ_d > 0.
+#[derive(Clone, Debug)]
+pub struct Spectrum {
+    pub values: Vec<f64>,
+    pub r: usize,
+}
+
+impl Spectrum {
+    /// Distinct eigenvalues: the top-r decay linearly from 1.0 to 0.85,
+    /// λ_{r+1} = Δ_r·λ_r, and the tail decays geometrically (ratio 0.9),
+    /// floored at 1e-3 so covariances stay well-conditioned.
+    pub fn with_gap(d: usize, r: usize, gap: f64) -> Spectrum {
+        assert!(r < d, "need r < d");
+        assert!(gap > 0.0 && gap < 1.0, "eigengap must be in (0,1)");
+        let mut v = Vec::with_capacity(d);
+        for i in 0..r {
+            let frac = if r > 1 { i as f64 / (r - 1) as f64 } else { 0.0 };
+            v.push(1.0 - 0.15 * frac);
+        }
+        let lr = v[r - 1];
+        let mut tail = gap * lr;
+        for _ in r..d {
+            v.push(tail.max(1e-3));
+            tail *= 0.9;
+        }
+        Spectrum { values: v, r }
+    }
+
+    /// Non-distinct top block: λ_1 = … = λ_r = 1, λ_{r+1} = Δ_r, geometric
+    /// tail (Fig. 5's regime).
+    pub fn repeated_top(d: usize, r: usize, gap: f64) -> Spectrum {
+        assert!(r < d);
+        assert!(gap > 0.0 && gap < 1.0);
+        let mut v = vec![1.0; r];
+        let mut tail = gap;
+        for _ in r..d {
+            v.push(tail.max(1e-3));
+            tail *= 0.9;
+        }
+        Spectrum { values: v, r }
+    }
+
+    /// Power-law decay λ_i = i^(-alpha), used by the dataset surrogates
+    /// (natural-image spectra are approximately power-law). The r-th gap is
+    /// whatever the law implies.
+    pub fn power_law(d: usize, r: usize, alpha: f64) -> Spectrum {
+        assert!(r < d);
+        let v: Vec<f64> = (1..=d).map(|i| (i as f64).powf(-alpha)).collect();
+        Spectrum { values: v, r }
+    }
+
+    /// The realized r-th eigengap Δ_r = λ_{r+1}/λ_r.
+    pub fn gap(&self) -> f64 {
+        self.values[self.r] / self.values[self.r - 1]
+    }
+
+    pub fn d(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Is the profile non-increasing and positive?
+    pub fn is_valid(&self) -> bool {
+        self.values.windows(2).all(|w| w[0] >= w[1] - 1e-15)
+            && self.values.iter().all(|&v| v > 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_gap_hits_requested_gap() {
+        for &gap in &[0.3, 0.7, 0.9] {
+            let s = Spectrum::with_gap(20, 5, gap);
+            assert!((s.gap() - gap).abs() < 1e-12, "gap={}", s.gap());
+            assert!(s.is_valid());
+            assert_eq!(s.d(), 20);
+        }
+    }
+
+    #[test]
+    fn with_gap_top_block_distinct() {
+        let s = Spectrum::with_gap(10, 4, 0.5);
+        for w in s.values[..4].windows(2) {
+            assert!(w[0] > w[1], "top block must be strictly decreasing");
+        }
+    }
+
+    #[test]
+    fn repeated_top_equal_values() {
+        let s = Spectrum::repeated_top(15, 5, 0.6);
+        for i in 0..5 {
+            assert_eq!(s.values[i], 1.0);
+        }
+        assert!((s.gap() - 0.6).abs() < 1e-12);
+        assert!(s.is_valid());
+    }
+
+    #[test]
+    fn power_law_monotone() {
+        let s = Spectrum::power_law(50, 7, 1.2);
+        assert!(s.is_valid());
+        assert!(s.gap() > 0.0 && s.gap() < 1.0);
+    }
+
+    #[test]
+    fn r_equals_one_supported() {
+        let s = Spectrum::with_gap(8, 1, 0.4);
+        assert!((s.gap() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_floor_keeps_positive() {
+        let s = Spectrum::with_gap(300, 5, 0.3);
+        assert!(s.values.iter().all(|&v| v >= 1e-3));
+        assert!(s.is_valid());
+    }
+}

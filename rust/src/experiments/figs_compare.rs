@@ -1,0 +1,141 @@
+//! Figures 4 and 5: S-DOT/SA-DOT vs all baselines
+//! (OI, SeqPM, SeqDistPM, DSA, DPGD, DeEPCA).
+//!
+//! Fig. 4 uses distinct eigenvalues; Fig. 5 repeats the top block
+//! (λ_1 = … = λ_r) — the regime where sequential power methods lose their
+//! convergence guarantee but S-DOT/SA-DOT (and OI) are unaffected.
+
+use super::figs_synth::save_trace;
+use super::ExpCtx;
+use crate::algorithms::deepca::{run_deepca, DeepcaConfig};
+use crate::algorithms::dpgd::{run_dpgd, DpgdConfig};
+use crate::algorithms::dsa::{run_dsa, DsaConfig};
+use crate::algorithms::oi::{run_oi, run_seqpm};
+use crate::algorithms::sdot::{run_sadot, run_sdot, SdotConfig};
+use crate::algorithms::seqdistpm::{run_seqdistpm, SeqDistPmConfig};
+use crate::algorithms::SampleSetting;
+use crate::consensus::schedule::Schedule;
+use crate::data::spectrum::Spectrum;
+use crate::data::synthetic::SyntheticDataset;
+use crate::graph::Graph;
+use crate::metrics::trace::RunTrace;
+use crate::network::sim::SyncNetwork;
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+use anyhow::Result;
+
+/// Paper config for Figs. 4/5: N=10, n_i=1000, d=20.
+const N: usize = 10;
+const N_I: usize = 1000;
+
+/// Run the full baseline suite on one setting; returns labelled traces.
+pub fn run_suite(ctx: &ExpCtx, setting: &SampleSetting, g: &Graph) -> Vec<RunTrace> {
+    let t_o = ctx.scaled(200);
+    let mut out = Vec::new();
+
+    let mut net = SyncNetwork::new(g.clone());
+    let (_, tr) = run_sdot(&mut net, setting, &SdotConfig::new(Schedule::fixed(50), t_o));
+    out.push(tr);
+
+    let mut net = SyncNetwork::new(g.clone());
+    let (_, tr) = run_sadot(
+        &mut net,
+        setting,
+        &SdotConfig::new(Schedule::adaptive(1.0, 1, 50), t_o),
+    );
+    out.push(tr);
+
+    let (_, tr) = run_oi(setting, t_o);
+    out.push(tr);
+
+    let (_, tr) = run_seqpm(setting, ctx.scaled(200));
+    out.push(tr);
+
+    let mut net = SyncNetwork::new(g.clone());
+    let cfg = SeqDistPmConfig { iters_per_vec: ctx.scaled(100), t_c: 50, record_every: 5 };
+    let (_, tr) = run_seqdistpm(&mut net, setting, &cfg);
+    out.push(tr);
+
+    let mut net = SyncNetwork::new(g.clone());
+    let (_, tr) = run_dsa(&mut net, setting, &DsaConfig::new(ctx.scaled(2000)));
+    out.push(tr);
+
+    let mut net = SyncNetwork::new(g.clone());
+    let (_, tr) = run_dpgd(&mut net, setting, &DpgdConfig::new(ctx.scaled(2000)));
+    out.push(tr);
+
+    let mut net = SyncNetwork::new(g.clone());
+    let (_, tr) = run_deepca(
+        &mut net,
+        setting,
+        &DeepcaConfig { mix_rounds: 6, t_o, record_every: 1 },
+    );
+    out.push(tr);
+
+    out
+}
+
+fn comparison_fig(ctx: &ExpCtx, id: &str, repeated: bool) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        &format!(
+            "{} — final error by algorithm ({} eigenvalues); curves in CSV",
+            id,
+            if repeated { "repeated top" } else { "distinct" }
+        ),
+        &["Δ_r", "r", "algorithm", "total iters", "P2P avg", "final error"],
+    );
+    for &(gap, r) in &[(0.5f64, 2usize), (0.8, 5)] {
+        let mut rng = Rng::new(ctx.seed);
+        let spec = if repeated {
+            Spectrum::repeated_top(20, r, gap)
+        } else {
+            Spectrum::with_gap(20, r, gap)
+        };
+        let ds = SyntheticDataset::full(&spec, N_I, N, &mut rng);
+        let setting = SampleSetting::from_parts(&ds.parts, r, &mut rng);
+        let g = Graph::erdos_renyi(N, 0.5, &mut rng);
+        for tr in run_suite(ctx, &setting, &g) {
+            save_trace(ctx, id, &format!("{id}_gap{gap}_r{r}_{}", tr.algorithm), &tr)?;
+            t.row(&[
+                fnum(gap, 1),
+                r.to_string(),
+                tr.algorithm.clone(),
+                tr.total_iters().to_string(),
+                fnum(tr.final_p2p(), 0),
+                format!("{:.2e}", tr.final_error()),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Fig. 4: distinct eigenvalues.
+pub fn fig4(ctx: &ExpCtx) -> Result<Vec<Table>> {
+    comparison_fig(ctx, "fig4", false)
+}
+
+/// Fig. 5: repeated top eigenvalues (λ_1 = … = λ_r).
+pub fn fig5(ctx: &ExpCtx) -> Result<Vec<Table>> {
+    comparison_fig(ctx, "fig5", true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_all_algorithms_present() {
+        let ctx = ExpCtx {
+            scale: 0.04,
+            trials: 1,
+            out_dir: std::env::temp_dir().join("dpsa_fig4_test"),
+            ..Default::default()
+        };
+        let tables = fig4(&ctx).unwrap();
+        let algos: std::collections::BTreeSet<String> =
+            tables[0].rows.iter().map(|r| r[2].clone()).collect();
+        for a in ["S-DOT", "SA-DOT", "OI", "SeqPM", "SeqDistPM", "DSA", "DPGD", "DeEPCA"] {
+            assert!(algos.contains(a), "missing {a}");
+        }
+    }
+}

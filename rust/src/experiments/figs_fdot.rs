@@ -1,0 +1,94 @@
+//! Figure 6: F-DOT vs OI, SeqPM and d-PM on feature-wise partitioned data.
+//!
+//! Paper config: Erdős–Rényi N=10, p=0.5, d=N (one feature per node),
+//! n=500 samples, varying r and Δ_r.
+
+use super::figs_synth::save_trace;
+use super::ExpCtx;
+use crate::algorithms::dpm_feature::{run_dpm_feature, DpmFeatureConfig};
+use crate::algorithms::fdot::{run_fdot, FdotConfig, FeatureSetting};
+use crate::algorithms::oi::{run_oi, run_seqpm};
+use crate::algorithms::SampleSetting;
+use crate::data::partition::partition_features;
+use crate::data::spectrum::Spectrum;
+use crate::data::synthetic::SyntheticDataset;
+use crate::graph::Graph;
+use crate::network::sim::SyncNetwork;
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+use anyhow::Result;
+
+pub fn fig6(ctx: &ExpCtx) -> Result<Vec<Table>> {
+    let n_nodes = 10;
+    let n_samples = 500;
+    let mut t = Table::new(
+        "Fig. 6 — F-DOT vs OI/SeqPM/d-PM, d=N=10, n=500 (curves in CSV)",
+        &["Δ_r", "r", "algorithm", "total iters", "final error"],
+    );
+    for &(gap, r) in &[(0.4f64, 2usize), (0.7, 3)] {
+        let mut rng = Rng::new(ctx.seed);
+        let spec = Spectrum::with_gap(n_nodes, r, gap);
+        let ds = SyntheticDataset::full(&spec, n_samples, 1, &mut rng);
+        let x = &ds.parts[0];
+        let parts = partition_features(x, n_nodes);
+        let fsetting = FeatureSetting::new(parts, r, &mut rng);
+        let g = Graph::erdos_renyi(n_nodes, 0.5, &mut rng);
+
+        // F-DOT.
+        let mut net = SyncNetwork::new(g.clone());
+        let (_, tr_fdot) = run_fdot(&mut net, &fsetting, &FdotConfig::new(ctx.scaled(200)));
+        save_trace(ctx, "fig6", &format!("fig6_gap{gap}_r{r}_FDOT"), &tr_fdot)?;
+
+        // d-PM (sequential, feature-wise).
+        let mut net = SyncNetwork::new(g);
+        let cfg = DpmFeatureConfig {
+            iters_per_vec: ctx.scaled(100),
+            t_c: 50,
+            record_every: 5,
+        };
+        let (_, tr_dpm) = run_dpm_feature(&mut net, &fsetting, &cfg);
+        save_trace(ctx, "fig6", &format!("fig6_gap{gap}_r{r}_dPM"), &tr_dpm)?;
+
+        // Centralized references reuse the sample-wise harness on a
+        // single "node" holding all data.
+        let ssetting = SampleSetting::from_parts(std::slice::from_ref(x), r, &mut rng);
+        let (_, tr_oi) = run_oi(&ssetting, ctx.scaled(200));
+        save_trace(ctx, "fig6", &format!("fig6_gap{gap}_r{r}_OI"), &tr_oi)?;
+        let (_, tr_seq) = run_seqpm(&ssetting, ctx.scaled(150));
+        save_trace(ctx, "fig6", &format!("fig6_gap{gap}_r{r}_SeqPM"), &tr_seq)?;
+
+        for tr in [&tr_fdot, &tr_dpm, &tr_oi, &tr_seq] {
+            t.row(&[
+                fnum(gap, 1),
+                r.to_string(),
+                tr.algorithm.clone(),
+                tr.total_iters().to_string(),
+                format!("{:.2e}", tr.final_error()),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_runs_all_algorithms() {
+        let ctx = ExpCtx {
+            scale: 0.1,
+            trials: 1,
+            out_dir: std::env::temp_dir().join("dpsa_fig6_test"),
+            ..Default::default()
+        };
+        let tables = fig6(&ctx).unwrap();
+        assert_eq!(tables[0].rows.len(), 8); // 2 configs × 4 algorithms
+        // F-DOT should be the best distributed method per config block.
+        for block in tables[0].rows.chunks(4) {
+            let fdot_err: f64 = block[0][4].parse().unwrap();
+            let dpm_err: f64 = block[1][4].parse().unwrap();
+            assert!(fdot_err <= dpm_err * 10.0, "fdot={fdot_err} dpm={dpm_err}");
+        }
+    }
+}

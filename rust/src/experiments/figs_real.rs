@@ -1,0 +1,105 @@
+//! Figures 7–12: real-data (surrogate) experiments.
+//!
+//! * `comm_cost` (Figs. 7, 9, 11, 12) — S-DOT vs SA-DOT error-vs-P2P
+//!   curves for one dataset.
+//! * `comparison` (Figs. 8, 10) — the full baseline suite (as in Fig. 4)
+//!   on the dataset, N=10.
+
+use super::figs_compare::run_suite;
+use super::figs_synth::save_trace;
+use super::ExpCtx;
+use crate::algorithms::sdot::{run_sdot, SdotConfig};
+use crate::algorithms::SampleSetting;
+use crate::consensus::schedule::Schedule;
+use crate::data::datasets::{load_dataset, DatasetKind};
+use crate::graph::Graph;
+use crate::network::sim::SyncNetwork;
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+use anyhow::Result;
+
+/// Per-dataset (N, p, r, T_o, n_per_node) for the comm-cost figures.
+fn fig_config(kind: DatasetKind) -> (usize, f64, usize, usize, usize) {
+    match kind {
+        DatasetKind::Mnist => (20, 0.25, 5, 400, 250),
+        DatasetKind::Cifar10 => (20, 0.25, 5, 400, 200),
+        DatasetKind::Lfw => (20, 0.25, 7, 200, 120),
+        DatasetKind::ImageNet => (20, 0.25, 5, 200, 200),
+    }
+}
+
+/// S-DOT vs SA-DOT on a dataset surrogate: error vs cumulative P2P.
+pub fn comm_cost(ctx: &ExpCtx, kind: DatasetKind, id: &str) -> Result<Vec<Table>> {
+    let (n, p, r, t_o_full, n_i) = fig_config(kind);
+    let t_o = ctx.scaled(t_o_full);
+    let mut rng = Rng::new(ctx.seed);
+    let ds = load_dataset(kind, n, Some(n_i), r, &mut rng);
+    let setting = SampleSetting::from_parts(&ds.parts, r, &mut rng);
+    let g = Graph::erdos_renyi(n, p, &mut rng);
+
+    let mut t = Table::new(
+        &format!("{id} — {} S-DOT vs SA-DOT (curves in CSV)", kind.name()),
+        &["schedule", "P2P avg", "final error"],
+    );
+    for (label, sched) in [
+        ("t+1", Schedule::adaptive(1.0, 1, 50)),
+        ("2t+1", Schedule::adaptive(2.0, 1, 50)),
+        ("S-DOT 50", Schedule::fixed(50)),
+    ] {
+        let mut net = SyncNetwork::new(g.clone());
+        let mut cfg = SdotConfig::new(sched, t_o);
+        cfg.record_every = (t_o / 50).max(1);
+        let (_, trace) = run_sdot(&mut net, &setting, &cfg);
+        save_trace(ctx, id, &format!("{id}_{label}"), &trace)?;
+        t.row(&[
+            label.to_string(),
+            fnum(trace.final_p2p(), 0),
+            format!("{:.2e}", trace.final_error()),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// Full baseline comparison on a dataset surrogate (N=10, as the paper).
+pub fn comparison(ctx: &ExpCtx, kind: DatasetKind, id: &str) -> Result<Vec<Table>> {
+    let r = 5;
+    let n = 10;
+    let mut rng = Rng::new(ctx.seed);
+    let ds = load_dataset(kind, n, Some(200), r, &mut rng);
+    let setting = SampleSetting::from_parts(&ds.parts, r, &mut rng);
+    let g = Graph::erdos_renyi(n, 0.5, &mut rng);
+
+    let mut t = Table::new(
+        &format!("{id} — {} baseline comparison (curves in CSV)", kind.name()),
+        &["algorithm", "total iters", "final error"],
+    );
+    for tr in run_suite(ctx, &setting, &g) {
+        save_trace(ctx, id, &format!("{id}_{}", tr.algorithm), &tr)?;
+        t.row(&[
+            tr.algorithm.clone(),
+            tr.total_iters().to_string(),
+            format!("{:.2e}", tr.final_error()),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_comm_cost_runs() {
+        let ctx = ExpCtx {
+            scale: 0.02,
+            trials: 1,
+            out_dir: std::env::temp_dir().join("dpsa_fig7_test"),
+            ..Default::default()
+        };
+        let tables = comm_cost(&ctx, DatasetKind::Mnist, "fig7").unwrap();
+        assert_eq!(tables[0].rows.len(), 3);
+        // Adaptive schedules must be cheaper than fixed 50.
+        let p2p: Vec<f64> = tables[0].rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        assert!(p2p[0] < p2p[2] && p2p[1] < p2p[2], "{p2p:?}");
+    }
+}

@@ -1,0 +1,131 @@
+//! Figures 1–3: error curves on synthetic data.
+//!
+//! Each runner saves the per-algorithm traces (CSV) under `results/<id>/`
+//! and returns a summary table of final errors — the "shape" assertions
+//! (who converges, crossovers) live in the integration tests.
+
+use super::ExpCtx;
+use crate::algorithms::sdot::{run_sdot, SdotConfig};
+use crate::algorithms::SampleSetting;
+use crate::consensus::schedule::Schedule;
+use crate::data::spectrum::Spectrum;
+use crate::data::synthetic::SyntheticDataset;
+use crate::graph::Graph;
+use crate::metrics::trace::RunTrace;
+use crate::network::sim::SyncNetwork;
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, Table};
+use anyhow::Result;
+
+use super::synth_tables::{D, N_PER_NODE};
+
+pub(crate) fn save_trace(ctx: &ExpCtx, id: &str, label: &str, trace: &RunTrace) -> Result<()> {
+    let dir = ctx.out_dir.join(id);
+    let safe: String = label
+        .chars()
+        .map(|c| if c.is_alphanumeric() { c } else { '_' })
+        .collect();
+    trace.thin(400).to_table().save(&dir, &format!("trace_{safe}"))?;
+    Ok(())
+}
+
+fn sdot_curve(
+    ctx: &ExpCtx,
+    id: &str,
+    label: &str,
+    gap: f64,
+    topology: &str,
+    p: f64,
+    schedule: Schedule,
+    t_o: usize,
+) -> Result<(String, f64)> {
+    let mut rng = Rng::new(ctx.seed);
+    let spec = Spectrum::with_gap(D, 5, gap);
+    let ds = SyntheticDataset::full(&spec, N_PER_NODE, 20, &mut rng);
+    let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+    let g = Graph::from_spec(topology, 20, p, &mut rng);
+    let mut net = SyncNetwork::new(g);
+    let (_, trace) = run_sdot(&mut net, &setting, &SdotConfig::new(schedule, t_o));
+    save_trace(ctx, id, label, &trace)?;
+    Ok((label.to_string(), trace.final_error()))
+}
+
+/// Fig. 1: S-DOT vs SA-DOT schedules for Δ ∈ {0.3, 0.9}.
+pub fn fig1(ctx: &ExpCtx) -> Result<Vec<Table>> {
+    let t_o = ctx.scaled(200);
+    let mut t = Table::new(
+        "Fig. 1 — S-DOT vs SA-DOT error (final values; curves in CSV)",
+        &["Δ_r", "schedule", "final error"],
+    );
+    for &gap in &[0.3, 0.9] {
+        for (label, sched) in [
+            ("0.5t+1", Schedule::adaptive(0.5, 1, 50)),
+            ("t+1", Schedule::adaptive(1.0, 1, 50)),
+            ("2t+1", Schedule::adaptive(2.0, 1, 50)),
+            ("S-DOT 50", Schedule::fixed(50)),
+        ] {
+            let tag = format!("fig1_gap{gap}_{label}");
+            let (_, err) = sdot_curve(ctx, "fig1", &tag, gap, "erdos", 0.25, sched, t_o)?;
+            t.row(&[fnum(gap, 1), label.to_string(), format!("{err:.2e}")]);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Fig. 2: network connectivity p ∈ {0.5, 0.25, 0.1}.
+pub fn fig2(ctx: &ExpCtx) -> Result<Vec<Table>> {
+    let t_o = ctx.scaled(200);
+    let mut t = Table::new(
+        "Fig. 2 — connectivity effect (final errors; curves in CSV)",
+        &["p", "schedule", "final error"],
+    );
+    for &p in &[0.5, 0.25, 0.1] {
+        for (label, sched) in [
+            ("2t+1", Schedule::adaptive(2.0, 1, 50)),
+            ("S-DOT 50", Schedule::fixed(50)),
+        ] {
+            let tag = format!("fig2_p{p}_{label}");
+            let (_, err) = sdot_curve(ctx, "fig2", &tag, 0.7, "erdos", p, sched, t_o)?;
+            t.row(&[fnum(p, 2), label.to_string(), format!("{err:.2e}")]);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Fig. 3: ring and star topologies.
+pub fn fig3(ctx: &ExpCtx) -> Result<Vec<Table>> {
+    let t_o = ctx.scaled(200);
+    let mut t = Table::new(
+        "Fig. 3 — ring & star error (final values; curves in CSV)",
+        &["topology", "schedule", "final error"],
+    );
+    for topo in ["ring", "star"] {
+        for (label, sched) in [
+            ("2t+1", Schedule::adaptive(2.0, 1, 50)),
+            ("S-DOT 50", Schedule::fixed(50)),
+        ] {
+            let tag = format!("fig3_{topo}_{label}");
+            let (_, err) = sdot_curve(ctx, "fig3", &tag, 0.7, topo, 0.0, sched, t_o)?;
+            t.row(&[topo.to_string(), label.to_string(), format!("{err:.2e}")]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_runs_and_saves() {
+        let ctx = ExpCtx {
+            scale: 0.05,
+            trials: 1,
+            out_dir: std::env::temp_dir().join("dpsa_fig1_test"),
+            ..Default::default()
+        };
+        let tables = fig1(&ctx).unwrap();
+        assert_eq!(tables[0].rows.len(), 8);
+        assert!(ctx.out_dir.join("fig1").exists());
+    }
+}

@@ -1,0 +1,202 @@
+//! Experiment runners — one per paper table and figure.
+//!
+//! Every runner regenerates the corresponding artifact of the paper's
+//! Section V at a configurable scale (`scale = 1.0` reproduces the paper's
+//! iteration counts; benches use smaller scales for wall-clock budget).
+//! Outputs are returned as [`Table`]s and saved under `results/<id>/`.
+//!
+//! | id      | paper artifact                                              |
+//! |---------|-------------------------------------------------------------|
+//! | table1  | S-DOT vs SA-DOT P2P across eigengaps                        |
+//! | table2  | network connectivity vs P2P                                 |
+//! | table3  | ring topology P2P                                           |
+//! | table4  | star topology center/edge P2P                               |
+//! | table5  | straggler wall-clock (threaded MPI runtime)                 |
+//! | table6–9| MNIST / CIFAR-10 / LFW / ImageNet P2P                       |
+//! | fig1–3  | error curves: schedules, connectivity, ring & star          |
+//! | fig4–5  | baseline comparison (distinct / repeated eigenvalues)       |
+//! | fig6    | F-DOT vs OI / SeqPM / d-PM                                  |
+//! | fig7–12 | real-data communication cost + baseline comparisons         |
+
+pub mod figs_compare;
+pub mod figs_fdot;
+pub mod figs_real;
+pub mod figs_synth;
+pub mod real_tables;
+pub mod straggler;
+pub mod synth_tables;
+pub mod topology_tables;
+
+use crate::util::table::Table;
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Shared experiment context.
+#[derive(Clone, Debug)]
+pub struct ExpCtx {
+    /// Base RNG seed; trial `k` uses `seed + k`.
+    pub seed: u64,
+    /// Fraction of the paper's iteration counts (1.0 = full fidelity).
+    pub scale: f64,
+    /// Monte-Carlo trials (the paper uses 20 for synthetic data).
+    pub trials: usize,
+    /// Output directory for CSV/markdown artifacts.
+    pub out_dir: PathBuf,
+}
+
+impl Default for ExpCtx {
+    fn default() -> Self {
+        ExpCtx {
+            seed: 42,
+            scale: 1.0,
+            trials: 3,
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl ExpCtx {
+    /// Scale an iteration count, keeping it at least 2.
+    pub fn scaled(&self, iters: usize) -> usize {
+        ((iters as f64 * self.scale).round() as usize).max(2)
+    }
+}
+
+/// All experiment ids in paper order, plus the future-work extensions
+/// (`bdot_ext` — block-partitioned B-DOT grid ablation; the async-gossip
+/// straggler ablation is emitted as the second table of `table5`).
+pub fn all_ids() -> Vec<&'static str> {
+    vec![
+        "table1", "table2", "table3", "table4", "table5", "table6", "table7",
+        "table8", "table9", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
+        "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "bdot_ext",
+    ]
+}
+
+/// Run one experiment by id; returns the produced tables (already saved).
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<Vec<Table>> {
+    let tables = match id {
+        "table1" => synth_tables::table1(ctx),
+        "table2" => synth_tables::table2(ctx),
+        "table3" => topology_tables::table3(ctx),
+        "table4" => topology_tables::table4(ctx),
+        "table5" => straggler::table5(ctx),
+        "table6" => real_tables::table(ctx, crate::data::datasets::DatasetKind::Mnist),
+        "table7" => real_tables::table(ctx, crate::data::datasets::DatasetKind::Cifar10),
+        "table8" => real_tables::table(ctx, crate::data::datasets::DatasetKind::Lfw),
+        "table9" => real_tables::table(ctx, crate::data::datasets::DatasetKind::ImageNet),
+        "fig1" => figs_synth::fig1(ctx),
+        "fig2" => figs_synth::fig2(ctx),
+        "fig3" => figs_synth::fig3(ctx),
+        "fig4" => figs_compare::fig4(ctx),
+        "fig5" => figs_compare::fig5(ctx),
+        "fig6" => figs_fdot::fig6(ctx),
+        "fig7" => figs_real::comm_cost(ctx, crate::data::datasets::DatasetKind::Mnist, "fig7"),
+        "fig8" => figs_real::comparison(ctx, crate::data::datasets::DatasetKind::Mnist, "fig8"),
+        "fig9" => figs_real::comm_cost(ctx, crate::data::datasets::DatasetKind::Cifar10, "fig9"),
+        "fig10" => figs_real::comparison(ctx, crate::data::datasets::DatasetKind::Cifar10, "fig10"),
+        "fig11" => figs_real::comm_cost(ctx, crate::data::datasets::DatasetKind::Lfw, "fig11"),
+        "fig12" => figs_real::comm_cost(ctx, crate::data::datasets::DatasetKind::ImageNet, "fig12"),
+        "bdot_ext" => bdot_ext(ctx),
+        other => bail!("unknown experiment id '{other}' (see `dpsa list`)"),
+    }?;
+    let dir = ctx.out_dir.join(id);
+    for (i, t) in tables.iter().enumerate() {
+        let name = if tables.len() == 1 { id.to_string() } else { format!("{id}_{i}") };
+        t.save(&dir, &name)?;
+    }
+    Ok(tables)
+}
+
+/// Extension ablation (paper §VI future work): B-DOT on block-partitioned
+/// data — error and total messages across grid shapes at a fixed budget.
+fn bdot_ext(ctx: &ExpCtx) -> Result<Vec<crate::util::table::Table>> {
+    use crate::algorithms::bdot::{run_bdot, BdotConfig, BlockSetting};
+    use crate::data::spectrum::Spectrum;
+    use crate::data::synthetic::SyntheticDataset;
+    use crate::util::rng::Rng;
+
+    let mut t = crate::util::table::Table::new(
+        "B-DOT extension — block-partitioned PSA across grid shapes (d=24, n=480, r=4)",
+        &["grid (R×C)", "nodes", "final error", "total iters", "total msgs"],
+    );
+    let t_o = ctx.scaled(60);
+    for &(rows, cols) in &[(1usize, 4usize), (4, 1), (2, 2), (2, 4), (4, 4)] {
+        let mut rng = Rng::new(ctx.seed);
+        let spec = Spectrum::with_gap(24, 4, 0.5);
+        let ds = SyntheticDataset::full(&spec, 480, 1, &mut rng);
+        let setting = BlockSetting::new(&ds.parts[0], rows, cols, 4, &mut rng);
+        let run = run_bdot(&setting, &BdotConfig::new(t_o));
+        t.row(&[
+            format!("{rows}x{cols}"),
+            (rows * cols).to_string(),
+            format!("{:.2e}", run.trace.final_error()),
+            run.trace.total_iters().to_string(),
+            run.total_messages.to_string(),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// Exact combinatorial P2P accounting: messages sent per node over a full
+/// run are `Σ_t T_c(t) × deg(i)` — validated against the live counters by
+/// property tests (`rust/tests/test_properties.rs`).
+pub fn expected_p2p(
+    g: &crate::graph::Graph,
+    schedule: &crate::consensus::schedule::Schedule,
+    t_o: usize,
+) -> Vec<u64> {
+    let rounds = schedule.total_rounds(t_o) as u64;
+    (0..g.n).map(|i| rounds * g.degree(i) as u64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::schedule::Schedule;
+    use crate::graph::Graph;
+
+    #[test]
+    fn scaled_floors_at_two() {
+        let ctx = ExpCtx { scale: 0.001, ..Default::default() };
+        assert_eq!(ctx.scaled(200), 2);
+        let full = ExpCtx::default();
+        assert_eq!(full.scaled(200), 200);
+    }
+
+    #[test]
+    fn all_ids_covers_every_table_and_figure() {
+        let ids = all_ids();
+        assert_eq!(ids.len(), 9 + 12 + 1);
+        for t in 1..=9 {
+            assert!(ids.contains(&format!("table{t}").as_str()));
+        }
+        for f in 1..=12 {
+            assert!(ids.contains(&format!("fig{f}").as_str()));
+        }
+    }
+
+    #[test]
+    fn expected_p2p_star_matches_paper_accounting() {
+        // Table IV row "50": center 190K, edge 10K for N=20, T_o=200.
+        let g = Graph::star(20);
+        let p = expected_p2p(&g, &Schedule::fixed(50), 200);
+        assert_eq!(p[0], 190_000);
+        for i in 1..20 {
+            assert_eq!(p[i], 10_000);
+        }
+    }
+
+    #[test]
+    fn expected_p2p_ring_matches_paper() {
+        // Table III row "50": 20K per node.
+        let g = Graph::ring(20);
+        let p = expected_p2p(&g, &Schedule::fixed(50), 200);
+        assert!(p.iter().all(|&x| x == 20_000));
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("table99", &ExpCtx::default()).is_err());
+    }
+}

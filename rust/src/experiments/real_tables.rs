@@ -1,0 +1,136 @@
+//! Tables VI–IX: P2P communication on the real-data workloads
+//! (MNIST / CIFAR-10 / LFW / ImageNet surrogates).
+//!
+//! The P2P columns are topology × schedule quantities — independent of the
+//! data — so each cell is computed with the exact combinatorial accounting
+//! (`expected_p2p`, property-tested against the live counters), averaged
+//! over `trials` graph realizations. Each table also reports a *measured*
+//! final error from one scaled live run per configuration, which exercises
+//! the full algorithm on the dataset surrogate.
+
+use super::{expected_p2p, ExpCtx};
+use crate::algorithms::sdot::{run_sdot, SdotConfig};
+use crate::algorithms::SampleSetting;
+use crate::consensus::schedule::Schedule;
+use crate::data::datasets::{load_dataset, DatasetKind};
+use crate::graph::Graph;
+use crate::network::sim::SyncNetwork;
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, p2p_k, Table};
+use anyhow::Result;
+
+/// Per-dataset row grids (N, p, r, T_o) from the paper's Tables VI–IX.
+fn grid(kind: DatasetKind) -> Vec<(usize, f64, usize, usize)> {
+    match kind {
+        DatasetKind::Mnist => vec![(20, 0.25, 5, 400), (20, 0.25, 10, 400), (100, 0.05, 5, 200)],
+        DatasetKind::Cifar10 => vec![(20, 0.25, 5, 400), (20, 0.25, 7, 400), (100, 0.05, 7, 400)],
+        DatasetKind::Lfw => vec![(20, 0.25, 7, 200), (20, 0.5, 7, 200)],
+        DatasetKind::ImageNet => vec![
+            (10, 0.5, 5, 200),
+            (20, 0.25, 5, 200),
+            (100, 0.05, 5, 200),
+            (200, 0.03, 5, 200),
+        ],
+    }
+}
+
+fn schedules() -> Vec<(&'static str, Schedule)> {
+    vec![
+        ("t+1", Schedule::adaptive(1.0, 1, 50)),
+        ("2t+1", Schedule::adaptive(2.0, 1, 50)),
+        ("50", Schedule::fixed(50)),
+    ]
+}
+
+/// One live (scaled) run to measure achieved error on the surrogate.
+fn measured_error(
+    ctx: &ExpCtx,
+    kind: DatasetKind,
+    n: usize,
+    p: f64,
+    r: usize,
+    t_o: usize,
+) -> f64 {
+    let mut rng = Rng::new(ctx.seed);
+    // Cap per-node samples so the live check stays cheap at N=100/200.
+    let n_i = Some((kind.n_total() / n).min(200).max(40));
+    let ds = load_dataset(kind, n, n_i, r, &mut rng);
+    let setting = SampleSetting::from_parts(&ds.parts, r, &mut rng);
+    let g = Graph::erdos_renyi(n, p, &mut rng);
+    let mut net = SyncNetwork::new(g);
+    let mut cfg = SdotConfig::new(Schedule::fixed(50), ctx.scaled(t_o / 4));
+    cfg.record_every = cfg.t_o;
+    let (_, trace) = run_sdot(&mut net, &setting, &cfg);
+    trace.final_error()
+}
+
+/// Build the P2P table for one dataset.
+pub fn table(ctx: &ExpCtx, kind: DatasetKind) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        &format!("{} — P2P communication (paper grid)", kind.name()),
+        &["N", "p", "r", "T_o", "Consensus Itr", "P2P (K)", "live err (scaled run)"],
+    );
+    for (n, p, r, t_o) in grid(kind) {
+        let err = measured_error(ctx, kind, n, p, r, t_o);
+        for (label, sched) in schedules() {
+            // Average expected P2P over graph realizations.
+            let mut avg = 0.0;
+            for trial in 0..ctx.trials {
+                let mut rng = Rng::new(ctx.seed + trial as u64);
+                let g = Graph::erdos_renyi(n, p, &mut rng);
+                let per_node = expected_p2p(&g, &sched, t_o);
+                avg += per_node.iter().sum::<u64>() as f64 / n as f64;
+            }
+            avg /= ctx.trials as f64;
+            t.row(&[
+                n.to_string(),
+                fnum(p, 2),
+                r.to_string(),
+                t_o.to_string(),
+                label.to_string(),
+                p2p_k(avg),
+                format!("{err:.2e}"),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_grid_matches_paper_rows() {
+        let g = grid(DatasetKind::Mnist);
+        assert_eq!(g.len(), 3);
+        assert_eq!(g[0], (20, 0.25, 5, 400));
+    }
+
+    #[test]
+    fn fixed_50_p2p_matches_paper_scale() {
+        // Paper Table VI, N=20, p=0.25, T_o=400, T_c=50 → 88K.
+        // E[deg] = 4.75 ⇒ E[P2P] = 400·50·4.75 = 95K; realizations vary.
+        let ctx = ExpCtx { trials: 5, ..Default::default() };
+        let mut avg = 0.0;
+        for trial in 0..ctx.trials {
+            let mut rng = Rng::new(ctx.seed + trial as u64);
+            let g = Graph::erdos_renyi(20, 0.25, &mut rng);
+            let per_node = expected_p2p(&g, &Schedule::fixed(50), 400);
+            avg += per_node.iter().sum::<u64>() as f64 / 20.0;
+        }
+        avg /= ctx.trials as f64;
+        assert!(avg > 60_000.0 && avg < 130_000.0, "avg={avg}");
+    }
+
+    #[test]
+    fn schedules_ordering_holds() {
+        let mut rng = Rng::new(7);
+        let g = Graph::erdos_renyi(20, 0.25, &mut rng);
+        let p: Vec<u64> = schedules()
+            .iter()
+            .map(|(_, s)| expected_p2p(&g, s, 400).iter().sum::<u64>())
+            .collect();
+        assert!(p[0] < p[1] && p[1] < p[2], "{p:?}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Tables I and II: S-DOT vs SA-DOT communication cost on synthetic data.
+
+use super::{expected_p2p, ExpCtx};
+use crate::algorithms::sdot::{run_sdot, SdotConfig};
+use crate::algorithms::SampleSetting;
+use crate::consensus::schedule::Schedule;
+use crate::data::spectrum::Spectrum;
+use crate::data::synthetic::SyntheticDataset;
+use crate::graph::Graph;
+use crate::network::sim::SyncNetwork;
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, p2p_k, Table};
+use anyhow::Result;
+
+/// Paper defaults for the synthetic experiments (Section V-A).
+pub const D: usize = 20;
+pub const N_PER_NODE: usize = 500;
+pub const T_O: usize = 200;
+
+/// The SA-DOT schedules of Table I, capped at the S-DOT budget of 50.
+fn table1_schedules() -> Vec<(&'static str, Schedule)> {
+    vec![
+        ("[0.5t+1]", Schedule::adaptive(0.5, 1, 50)),
+        ("t+1", Schedule::adaptive(1.0, 1, 50)),
+        ("2t+1", Schedule::adaptive(2.0, 1, 50)),
+        ("50", Schedule::fixed(50)),
+    ]
+}
+
+/// Run one (network, schedule) cell: averaged P2P and final error over
+/// `ctx.trials` Monte-Carlo trials (fresh graph + data each trial).
+pub fn run_cell(
+    ctx: &ExpCtx,
+    n: usize,
+    p: f64,
+    r: usize,
+    gap: f64,
+    schedule: Schedule,
+    t_o: usize,
+    topology: &str,
+) -> (f64, f64) {
+    let mut p2p_sum = 0.0;
+    let mut err_sum = 0.0;
+    for trial in 0..ctx.trials {
+        let mut rng = Rng::new(ctx.seed + trial as u64);
+        let spec = Spectrum::with_gap(D, r, gap);
+        let ds = SyntheticDataset::full(&spec, N_PER_NODE, n, &mut rng);
+        let setting = SampleSetting::from_parts(&ds.parts, r, &mut rng);
+        let g = Graph::from_spec(topology, n, p, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let mut cfg = SdotConfig::new(schedule, t_o);
+        cfg.record_every = t_o; // tables need only the final state
+        let (_, trace) = run_sdot(&mut net, &setting, &cfg);
+        p2p_sum += net.counters.avg();
+        err_sum += trace.final_error();
+    }
+    (p2p_sum / ctx.trials as f64, err_sum / ctx.trials as f64)
+}
+
+/// Table I: eigengap × consensus schedule.
+pub fn table1(ctx: &ExpCtx) -> Result<Vec<Table>> {
+    let t_o = ctx.scaled(T_O);
+    let mut t = Table::new(
+        &format!("Table I — S-DOT vs SA-DOT P2P, N=20, p=0.25, r=5, T_o={t_o}"),
+        &["Δ_r", "Consensus Itr T_c", "P2P (K)", "final error"],
+    );
+    for &gap in &[0.3, 0.7, 0.9] {
+        for (label, sched) in table1_schedules() {
+            let (p2p, err) = run_cell(ctx, 20, 0.25, 5, gap, sched, t_o, "erdos");
+            t.row(&[
+                fnum(gap, 1),
+                label.to_string(),
+                p2p_k(p2p),
+                format!("{err:.2e}"),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Table II: connectivity p ∈ {0.5, 0.25, 0.1}.
+pub fn table2(ctx: &ExpCtx) -> Result<Vec<Table>> {
+    let t_o = ctx.scaled(T_O);
+    let mut t = Table::new(
+        &format!("Table II — connectivity vs P2P, N=20, r=5, Δ=0.7, T_o={t_o}"),
+        &["p", "Consensus Itr T_c", "P2P (K)", "final error"],
+    );
+    let rows: Vec<(f64, &str, Schedule)> = vec![
+        (0.5, "2t+1", Schedule::adaptive(2.0, 1, 50)),
+        (0.5, "50", Schedule::fixed(50)),
+        (0.25, "2t+1", Schedule::adaptive(2.0, 1, 50)),
+        (0.25, "50", Schedule::fixed(50)),
+        (0.1, "2t+1", Schedule::adaptive(2.0, 1, 50)),
+        (0.1, "50", Schedule::fixed(50)),
+        (0.1, "min(5t+1,200)", Schedule::adaptive(5.0, 1, 200)),
+    ];
+    for (p, label, sched) in rows {
+        let (p2p, err) = run_cell(ctx, 20, p, 5, 0.7, sched, t_o, "erdos");
+        t.row(&[
+            fnum(p, 2),
+            label.to_string(),
+            p2p_k(p2p),
+            format!("{err:.2e}"),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// Shape checks used by integration tests: denser graphs cost more
+/// messages; adaptive schedules cost less than fixed at the same cap.
+pub fn p2p_sanity(n: usize, p: f64, seed: u64, t_o: usize) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let g = Graph::erdos_renyi(n, p, &mut rng);
+    let fixed: u64 = expected_p2p(&g, &Schedule::fixed(50), t_o).iter().sum();
+    let adaptive: u64 = expected_p2p(&g, &Schedule::adaptive(2.0, 1, 50), t_o)
+        .iter()
+        .sum();
+    (
+        fixed as f64 / n as f64,
+        adaptive as f64 / n as f64,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_ctx() -> ExpCtx {
+        ExpCtx { scale: 0.05, trials: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn table1_shape() {
+        let tables = table1(&quick_ctx()).unwrap();
+        assert_eq!(tables[0].rows.len(), 12); // 3 gaps × 4 schedules
+    }
+
+    #[test]
+    fn table1_adaptive_cheaper_than_fixed() {
+        let tables = table1(&quick_ctx()).unwrap();
+        // Within each gap block, rows are ordered [0.5t+1] < t+1 < 2t+1 < 50.
+        for block in tables[0].rows.chunks(4) {
+            let p2p: Vec<f64> = block.iter().map(|r| r[2].parse().unwrap()).collect();
+            assert!(p2p[0] <= p2p[1] && p2p[1] <= p2p[2] && p2p[2] <= p2p[3], "{p2p:?}");
+        }
+    }
+
+    #[test]
+    fn table2_denser_costs_more() {
+        let tables = table2(&quick_ctx()).unwrap();
+        let rows = &tables[0].rows;
+        // fixed-50 rows at p=0.5 (row 1) vs p=0.25 (row 3) vs p=0.1 (row 5)
+        let p50: f64 = rows[1][2].parse().unwrap();
+        let p25: f64 = rows[3][2].parse().unwrap();
+        let p10: f64 = rows[5][2].parse().unwrap();
+        assert!(p50 > p25 && p25 > p10, "{p50} {p25} {p10}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Tables III and IV: ring and star topologies.
+
+use super::ExpCtx;
+use crate::algorithms::sdot::{run_sdot, SdotConfig};
+use crate::algorithms::SampleSetting;
+use crate::consensus::schedule::Schedule;
+use crate::data::spectrum::Spectrum;
+use crate::data::synthetic::SyntheticDataset;
+use crate::graph::Graph;
+use crate::network::sim::SyncNetwork;
+use crate::util::rng::Rng;
+use crate::util::table::{p2p_k, Table};
+use anyhow::Result;
+
+use super::synth_tables::{D, N_PER_NODE, T_O};
+
+fn run_topology(
+    ctx: &ExpCtx,
+    topology: &str,
+    schedule: Schedule,
+    t_o: usize,
+) -> (f64, f64, f64, f64) {
+    // Returns (avg p2p, center p2p, edge p2p, final error).
+    let n = 20;
+    let (mut p2p_avg, mut p2p_center, mut p2p_edge, mut err) = (0.0, 0.0, 0.0, 0.0);
+    for trial in 0..ctx.trials {
+        let mut rng = Rng::new(ctx.seed + trial as u64);
+        let spec = Spectrum::with_gap(D, 5, 0.7);
+        let ds = SyntheticDataset::full(&spec, N_PER_NODE, n, &mut rng);
+        let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+        let g = Graph::from_spec(topology, n, 0.0, &mut rng);
+        let mut net = SyncNetwork::new(g);
+        let mut cfg = SdotConfig::new(schedule, t_o);
+        cfg.record_every = t_o;
+        let (_, trace) = run_sdot(&mut net, &setting, &cfg);
+        p2p_avg += net.counters.avg();
+        p2p_center += net.counters.sent[0] as f64;
+        let edges: Vec<usize> = (1..n).collect();
+        p2p_edge += net.counters.avg_over(&edges);
+        err += trace.final_error();
+    }
+    let k = ctx.trials as f64;
+    (p2p_avg / k, p2p_center / k, p2p_edge / k, err / k)
+}
+
+/// Table III: ring topology (N=20, r=5, Δ=0.7).
+pub fn table3(ctx: &ExpCtx) -> Result<Vec<Table>> {
+    let t_o = ctx.scaled(T_O);
+    let mut t = Table::new(
+        &format!("Table III — ring topology, N=20, r=5, Δ=0.7, T_o={t_o}"),
+        &["Consensus Itr", "P2P (K)", "final error"],
+    );
+    let rows: Vec<(&str, Schedule)> = vec![
+        ("2t+1", Schedule::adaptive(2.0, 1, 50)),
+        ("50", Schedule::fixed(50)),
+        ("min(5t+1,200)", Schedule::adaptive(5.0, 1, 200)),
+    ];
+    for (label, sched) in rows {
+        let (p2p, _, _, err) = run_topology(ctx, "ring", sched, t_o);
+        t.row(&[label.to_string(), p2p_k(p2p), format!("{err:.2e}")]);
+    }
+    Ok(vec![t])
+}
+
+/// Table IV: star topology — center and edge P2P reported separately.
+pub fn table4(ctx: &ExpCtx) -> Result<Vec<Table>> {
+    let t_o = ctx.scaled(T_O);
+    let mut t = Table::new(
+        &format!("Table IV — star topology, N=20, r=5, Δ=0.7, T_o={t_o}"),
+        &["Consensus Itr", "Center P2P (K)", "Edge P2P (K)", "final error"],
+    );
+    let rows: Vec<(&str, Schedule)> = vec![
+        ("2t+1", Schedule::adaptive(2.0, 1, 50)),
+        ("50", Schedule::fixed(50)),
+        ("min(2t+1,100)", Schedule::adaptive(2.0, 1, 100)),
+        ("min(5t+1,100)", Schedule::adaptive(5.0, 1, 100)),
+        ("100", Schedule::fixed(100)),
+    ];
+    for (label, sched) in rows {
+        let (_, center, edge, err) = run_topology(ctx, "star", sched, t_o);
+        t.row(&[
+            label.to_string(),
+            p2p_k(center),
+            p2p_k(edge),
+            format!("{err:.2e}"),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_ctx() -> ExpCtx {
+        ExpCtx { scale: 0.05, trials: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn star_center_is_bottleneck() {
+        let tables = table4(&quick_ctx()).unwrap();
+        for row in &tables[0].rows {
+            let center: f64 = row[1].parse().unwrap();
+            let edge: f64 = row[2].parse().unwrap();
+            // Center carries (N-1)× the edge traffic (ratio inexact only
+            // through the 2-decimal table formatting).
+            let ratio = center / edge;
+            assert!((17.0..=21.0).contains(&ratio), "{center} {edge}");
+        }
+    }
+
+    #[test]
+    fn ring_rows_present() {
+        let tables = table3(&quick_ctx()).unwrap();
+        assert_eq!(tables[0].rows.len(), 3);
+    }
+}

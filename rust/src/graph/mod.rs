@@ -1,0 +1,288 @@
+//! Network topologies.
+//!
+//! The paper evaluates Erdős–Rényi, ring and star topologies (Section V);
+//! we additionally provide path, complete and 2-D grid graphs for ablations.
+//! All graphs are undirected and simple; generators reject disconnected
+//! samples (the paper requires a connected network).
+
+use crate::util::rng::Rng;
+
+/// An undirected graph on nodes `0..n`, stored as sorted adjacency lists.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    pub adj: Vec<Vec<usize>>,
+    /// Human-readable topology tag ("erdos(p=0.25)", "ring", "star", …).
+    pub kind: String,
+}
+
+impl Graph {
+    fn from_edges(n: usize, edges: &[(usize, usize)], kind: String) -> Graph {
+        let mut adj = vec![Vec::new(); n];
+        for &(i, j) in edges {
+            assert!(i != j && i < n && j < n, "bad edge ({i},{j})");
+            adj[i].push(j);
+            adj[j].push(i);
+        }
+        for a in adj.iter_mut() {
+            a.sort_unstable();
+            a.dedup();
+        }
+        Graph { n, adj, kind }
+    }
+
+    /// Erdős–Rényi G(n, p), resampled until connected.
+    /// Panics after 10_000 failed attempts (p too small for connectivity).
+    pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Graph {
+        assert!(n >= 2);
+        for _attempt in 0..10_000 {
+            let mut edges = Vec::new();
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if rng.bernoulli(p) {
+                        edges.push((i, j));
+                    }
+                }
+            }
+            let g = Graph::from_edges(n, &edges, format!("erdos(p={p})"));
+            if g.is_connected() {
+                return g;
+            }
+        }
+        panic!("erdos_renyi(n={n}, p={p}): no connected sample in 10k attempts");
+    }
+
+    /// Ring: node i ↔ (i+1) mod n.
+    pub fn ring(n: usize) -> Graph {
+        assert!(n >= 3);
+        let edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        Graph::from_edges(n, &edges, "ring".into())
+    }
+
+    /// Star: node 0 is the hub.
+    pub fn star(n: usize) -> Graph {
+        assert!(n >= 2);
+        let edges: Vec<_> = (1..n).map(|i| (0, i)).collect();
+        Graph::from_edges(n, &edges, "star".into())
+    }
+
+    /// Path: 0 – 1 – … – (n-1).
+    pub fn path(n: usize) -> Graph {
+        assert!(n >= 2);
+        let edges: Vec<_> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        Graph::from_edges(n, &edges, "path".into())
+    }
+
+    /// Complete graph.
+    pub fn complete(n: usize) -> Graph {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                edges.push((i, j));
+            }
+        }
+        Graph::from_edges(n, &edges, "complete".into())
+    }
+
+    /// `rows × cols` 2-D grid.
+    pub fn grid(rows: usize, cols: usize) -> Graph {
+        let n = rows * cols;
+        let mut edges = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = r * cols + c;
+                if c + 1 < cols {
+                    edges.push((v, v + 1));
+                }
+                if r + 1 < rows {
+                    edges.push((v, v + cols));
+                }
+            }
+        }
+        Graph::from_edges(n, &edges, format!("grid({rows}x{cols})"))
+    }
+
+    /// Parse a topology spec: "erdos" (needs p), "ring", "star", "path",
+    /// "complete", "grid" (n must be a perfect square).
+    pub fn from_spec(spec: &str, n: usize, p: f64, rng: &mut Rng) -> Graph {
+        match spec {
+            "erdos" | "er" => Graph::erdos_renyi(n, p, rng),
+            "ring" => Graph::ring(n),
+            "star" => Graph::star(n),
+            "path" => Graph::path(n),
+            "complete" => Graph::complete(n),
+            "grid" => {
+                let side = (n as f64).sqrt().round() as usize;
+                assert_eq!(side * side, n, "grid needs a square node count");
+                Graph::grid(side, side)
+            }
+            other => panic!("unknown topology '{other}'"),
+        }
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).max().unwrap_or(0)
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() as f64 / self.n as f64
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// Neighbors *including self* — the `N_i` of the paper.
+    pub fn closed_neighborhood(&self, i: usize) -> Vec<usize> {
+        let mut v = self.adj[i].clone();
+        v.push(i);
+        v.sort_unstable();
+        v
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(0);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = queue.pop_front() {
+            for &w in &self.adj[v] {
+                if !seen[w] {
+                    seen[w] = true;
+                    count += 1;
+                    queue.push_back(w);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Graph diameter (max BFS eccentricity); O(n·m), fine for n ≤ few hundred.
+    pub fn diameter(&self) -> usize {
+        let mut diam = 0;
+        for s in 0..self.n {
+            let mut dist = vec![usize::MAX; self.n];
+            let mut queue = std::collections::VecDeque::new();
+            dist[s] = 0;
+            queue.push_back(s);
+            while let Some(v) = queue.pop_front() {
+                for &w in &self.adj[v] {
+                    if dist[w] == usize::MAX {
+                        dist[w] = dist[v] + 1;
+                        queue.push_back(w);
+                    }
+                }
+            }
+            diam = diam.max(*dist.iter().max().unwrap());
+        }
+        diam
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_structure() {
+        let g = Graph::ring(6);
+        assert_eq!(g.edge_count(), 6);
+        for i in 0..6 {
+            assert_eq!(g.degree(i), 2);
+        }
+        assert!(g.is_connected());
+        assert_eq!(g.diameter(), 3);
+    }
+
+    #[test]
+    fn star_structure() {
+        let g = Graph::star(20);
+        assert_eq!(g.degree(0), 19);
+        for i in 1..20 {
+            assert_eq!(g.degree(i), 1);
+        }
+        assert_eq!(g.edge_count(), 19);
+        assert_eq!(g.diameter(), 2);
+    }
+
+    #[test]
+    fn path_and_complete() {
+        let p = Graph::path(5);
+        assert_eq!(p.edge_count(), 4);
+        assert_eq!(p.diameter(), 4);
+        let k = Graph::complete(7);
+        assert_eq!(k.edge_count(), 21);
+        assert_eq!(k.diameter(), 1);
+    }
+
+    #[test]
+    fn grid_structure() {
+        let g = Graph::grid(3, 4);
+        assert_eq!(g.n, 12);
+        assert_eq!(g.edge_count(), 3 * 3 + 2 * 4); // horizontal + vertical
+        assert!(g.is_connected());
+        // corner degree 2, center degree 4
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(5), 4);
+    }
+
+    #[test]
+    fn erdos_connected_and_plausible_degree() {
+        let mut rng = Rng::new(1);
+        let g = Graph::erdos_renyi(20, 0.25, &mut rng);
+        assert!(g.is_connected());
+        // E[deg] = p(n-1) = 4.75; realized average within generous bounds.
+        let avg = g.avg_degree();
+        assert!(avg > 2.0 && avg < 9.0, "avg={avg}");
+    }
+
+    #[test]
+    fn erdos_deterministic_per_seed() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let g1 = Graph::erdos_renyi(15, 0.3, &mut a);
+        let g2 = Graph::erdos_renyi(15, 0.3, &mut b);
+        assert_eq!(g1.adj, g2.adj);
+    }
+
+    #[test]
+    fn closed_neighborhood_includes_self() {
+        let g = Graph::star(5);
+        let n0 = g.closed_neighborhood(0);
+        assert_eq!(n0, vec![0, 1, 2, 3, 4]);
+        let n3 = g.closed_neighborhood(3);
+        assert_eq!(n3, vec![0, 3]);
+    }
+
+    #[test]
+    fn from_spec_dispatch() {
+        let mut rng = Rng::new(2);
+        assert_eq!(Graph::from_spec("ring", 8, 0.0, &mut rng).kind, "ring");
+        assert_eq!(Graph::from_spec("star", 8, 0.0, &mut rng).kind, "star");
+        assert_eq!(Graph::from_spec("grid", 9, 0.0, &mut rng).n, 9);
+        assert!(Graph::from_spec("erdos", 10, 0.5, &mut rng).is_connected());
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_spec_unknown_panics() {
+        let mut rng = Rng::new(3);
+        Graph::from_spec("torus", 8, 0.0, &mut rng);
+    }
+
+    #[test]
+    fn disconnected_detection() {
+        // Build a graph manually with an isolated node via from_edges.
+        let g = Graph::from_edges(3, &[(0, 1)], "manual".into());
+        assert!(!g.is_connected());
+    }
+}

@@ -1,0 +1,21 @@
+//! # DPSA — Distributed Principal Subspace Analysis
+//!
+//! Reproduction of Gang, Xiang & Bajwa, *"Distributed Principal Subspace
+//! Analysis for Partitioned Big Data"* (IEEE TSIPN 2021): S-DOT, SA-DOT and
+//! F-DOT plus all evaluation baselines, over an in-process distributed
+//! network substrate with exact P2P communication accounting and an
+//! MPI-like threaded runtime for straggler studies.
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+pub mod consensus;
+pub mod graph;
+pub mod linalg;
+pub mod network;
+pub mod util;
+pub mod data;
+pub mod algorithms;
+pub mod metrics;
+pub mod runtime;
+pub mod experiments;
+pub mod config;

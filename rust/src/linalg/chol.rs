@@ -1,0 +1,154 @@
+//! Cholesky factorization of small SPD matrices.
+//!
+//! Used by the distributed QR inside F-DOT: nodes push-sum the Gram matrix
+//! `K = Σ_i V_iᵀ V_i ∈ R^{r×r}`, factor `K = RᵀR` locally, and apply
+//! `Q_i = V_i R⁻¹` — exactly the Cholesky-QR scheme the paper's reference
+//! [12] builds on.
+
+use super::mat::Mat;
+
+/// Upper-triangular Cholesky factor `R` with `a = Rᵀ R`.
+/// Returns `None` if `a` is not (numerically) positive definite.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols, "cholesky needs square input");
+    let mut r = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let mut s = a.get(i, j);
+            for k in 0..i {
+                s -= r.get(k, i) * r.get(k, j);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                r.set(i, j, s.sqrt());
+            } else {
+                r.set(i, j, s / r.get(i, i));
+            }
+        }
+    }
+    Some(r)
+}
+
+/// Solve `x R = b` for x given upper-triangular `R` (i.e. x = b R⁻¹),
+/// applied row-wise to a matrix `b ∈ R^{m×n}`, `R ∈ R^{n×n}`.
+pub fn solve_r_right(b: &Mat, r: &Mat) -> Mat {
+    let (m, n) = (b.rows, b.cols);
+    assert_eq!(r.rows, n);
+    assert_eq!(r.cols, n);
+    let mut x = Mat::zeros(m, n);
+    for row in 0..m {
+        for j in 0..n {
+            let mut s = b.get(row, j);
+            for k in 0..j {
+                s -= x.get(row, k) * r.get(k, j);
+            }
+            x.set(row, j, s / r.get(j, j));
+        }
+    }
+    x
+}
+
+/// Invert an upper-triangular matrix.
+pub fn inv_upper(r: &Mat) -> Mat {
+    let n = r.rows;
+    assert_eq!(r.rows, r.cols);
+    let mut inv = Mat::zeros(n, n);
+    for j in 0..n {
+        inv.set(j, j, 1.0 / r.get(j, j));
+        for i in (0..j).rev() {
+            let mut s = 0.0;
+            for k in (i + 1)..=j {
+                s += r.get(i, k) * inv.get(k, j);
+            }
+            inv.set(i, j, -s / r.get(i, i));
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+        let a = Mat::gauss(n + 3, n, rng);
+        a.t_matmul(&a) // AᵀA with more rows than cols is SPD a.s.
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::new(1);
+        for n in [1usize, 2, 5, 8] {
+            let a = random_spd(n, &mut rng);
+            let r = cholesky(&a).expect("SPD");
+            let back = r.t_matmul(&r);
+            assert!(back.dist_fro(&a) < 1e-8 * a.fro_norm().max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn factor_is_upper_triangular_positive_diag() {
+        let mut rng = Rng::new(2);
+        let a = random_spd(6, &mut rng);
+        let r = cholesky(&a).unwrap();
+        for i in 0..6 {
+            assert!(r.get(i, i) > 0.0);
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn rejects_semidefinite() {
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[1.0, 1.0]]);
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_right_matches_inverse() {
+        let mut rng = Rng::new(3);
+        let a = random_spd(5, &mut rng);
+        let r = cholesky(&a).unwrap();
+        let b = Mat::gauss(7, 5, &mut rng);
+        let x = solve_r_right(&b, &r);
+        // x R should equal b
+        assert!(x.matmul(&r).dist_fro(&b) < 1e-9);
+        // and match the explicit inverse
+        let x2 = b.matmul(&inv_upper(&r));
+        assert!(x.dist_fro(&x2) < 1e-8);
+    }
+
+    #[test]
+    fn inv_upper_identity() {
+        let mut rng = Rng::new(4);
+        let a = random_spd(6, &mut rng);
+        let r = cholesky(&a).unwrap();
+        let inv = inv_upper(&r);
+        assert!(r.matmul(&inv).dist_fro(&Mat::eye(6)) < 1e-9);
+    }
+
+    #[test]
+    fn cholesky_qr_equivalence() {
+        // Q from Cholesky-QR equals Q from Householder up to sign convention.
+        let mut rng = Rng::new(5);
+        let v = Mat::gauss(20, 4, &mut rng);
+        let k = v.t_matmul(&v);
+        let r = cholesky(&k).unwrap();
+        let q = solve_r_right(&v, &r);
+        let g = q.t_matmul(&q);
+        assert!(g.dist_fro(&Mat::eye(4)) < 1e-8);
+        let (qh, _) = crate::linalg::qr::householder_qr(&v);
+        assert!(q.dist_fro(&qh) < 1e-6);
+    }
+}

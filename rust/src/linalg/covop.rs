@@ -1,0 +1,159 @@
+//! `CovOp` — local covariance operator.
+//!
+//! Sample-wise algorithms only ever touch the local covariance through the
+//! product `M_i Q` (Alg. 1 step 5). For small `d` we hold `M_i` densely; for
+//! high-dimensional datasets (LFW d=2914) densifying all `M_i` would cost
+//! O(N d²) memory, so we keep the raw samples and apply
+//! `M_i Q = (1/s) X_i (X_iᵀ Q)` at O(d·n_i·r) — this mirrors how the MPI
+//! implementation in the paper stores data, and is also what the XLA
+//! runtime backend accelerates.
+
+use super::mat::Mat;
+
+/// A node-local covariance operator `M_i`.
+#[derive(Clone, Debug)]
+pub enum CovOp {
+    /// Explicit dense `d×d` covariance matrix.
+    Dense(Mat),
+    /// Implicit `scale · X Xᵀ` with `X ∈ R^{d×n}` the local sample block.
+    Samples { x: Mat, scale: f64 },
+}
+
+impl CovOp {
+    /// From a local sample block `X_i ∈ R^{d×n_i}`: `M_i = X Xᵀ / n_i`,
+    /// densified only when it is cheaper than keeping samples.
+    pub fn from_samples(x: Mat) -> CovOp {
+        let (d, n) = (x.rows, x.cols);
+        let scale = 1.0 / n as f64;
+        if d <= 128 || d <= n {
+            CovOp::Dense(x.syrk(scale))
+        } else {
+            CovOp::Samples { x, scale }
+        }
+    }
+
+    /// Force the dense representation (used by tests / small problems).
+    pub fn dense_from_samples(x: &Mat) -> CovOp {
+        CovOp::Dense(x.syrk(1.0 / x.cols as f64))
+    }
+
+    /// Ambient dimension `d`.
+    pub fn dim(&self) -> usize {
+        match self {
+            CovOp::Dense(m) => m.rows,
+            CovOp::Samples { x, .. } => x.rows,
+        }
+    }
+
+    /// Apply the operator: `M_i Q` (the S-DOT per-iteration hot path).
+    pub fn apply(&self, q: &Mat) -> Mat {
+        match self {
+            CovOp::Dense(m) => m.matmul(q),
+            CovOp::Samples { x, scale } => {
+                let xtq = x.t_matmul(q); // n×r
+                let mut v = x.matmul(&xtq); // d×r
+                v.scale_inplace(*scale);
+                v
+            }
+        }
+    }
+
+    /// Materialize as a dense matrix (for ground-truth computation).
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            CovOp::Dense(m) => m.clone(),
+            CovOp::Samples { x, scale } => x.syrk(*scale),
+        }
+    }
+
+    /// Operator 2-norm estimate (power iteration).
+    pub fn spectral_norm(&self, iters: usize) -> f64 {
+        match self {
+            CovOp::Dense(m) => m.spectral_norm(iters),
+            CovOp::Samples { x, scale } => {
+                let s = x.spectral_norm(iters);
+                s * s * scale
+            }
+        }
+    }
+
+    /// Sum of operators, densified: `Σ_i M_i` (global covariance up to
+    /// scaling, used for ground truth).
+    pub fn sum_dense(ops: &[CovOp]) -> Mat {
+        assert!(!ops.is_empty());
+        let d = ops[0].dim();
+        let mut m = Mat::zeros(d, d);
+        for op in ops {
+            m.axpy(1.0, &op.to_dense());
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_and_samples_apply_agree() {
+        let mut rng = Rng::new(1);
+        let x = Mat::gauss(10, 30, &mut rng);
+        let q = Mat::gauss(10, 3, &mut rng);
+        let dense = CovOp::dense_from_samples(&x);
+        let implicit = CovOp::Samples { x: x.clone(), scale: 1.0 / 30.0 };
+        let a = dense.apply(&q);
+        let b = implicit.apply(&q);
+        assert!(a.dist_fro(&b) < 1e-10);
+    }
+
+    #[test]
+    fn from_samples_picks_dense_for_small_d() {
+        let mut rng = Rng::new(2);
+        let x = Mat::gauss(20, 500, &mut rng);
+        match CovOp::from_samples(x) {
+            CovOp::Dense(_) => {}
+            _ => panic!("expected dense for d=20"),
+        }
+    }
+
+    #[test]
+    fn from_samples_keeps_samples_for_large_d() {
+        let mut rng = Rng::new(3);
+        let x = Mat::gauss(600, 50, &mut rng);
+        match CovOp::from_samples(x) {
+            CovOp::Samples { .. } => {}
+            _ => panic!("expected implicit for d=600, n=50"),
+        }
+    }
+
+    #[test]
+    fn to_dense_matches_syrk() {
+        let mut rng = Rng::new(4);
+        let x = Mat::gauss(6, 12, &mut rng);
+        let op = CovOp::Samples { x: x.clone(), scale: 1.0 / 12.0 };
+        assert!(op.to_dense().dist_fro(&x.syrk(1.0 / 12.0)) < 1e-12);
+    }
+
+    #[test]
+    fn spectral_norm_agree() {
+        let mut rng = Rng::new(5);
+        let x = Mat::gauss(8, 20, &mut rng);
+        let dense = CovOp::dense_from_samples(&x);
+        let implicit = CovOp::Samples { x, scale: 1.0 / 20.0 };
+        let a = dense.spectral_norm(300);
+        let b = implicit.spectral_norm(300);
+        assert!((a - b).abs() < 1e-6 * a.max(1.0), "{a} vs {b}");
+    }
+
+    #[test]
+    fn sum_dense_is_sum() {
+        let mut rng = Rng::new(6);
+        let x1 = Mat::gauss(5, 9, &mut rng);
+        let x2 = Mat::gauss(5, 7, &mut rng);
+        let ops = vec![CovOp::dense_from_samples(&x1), CovOp::dense_from_samples(&x2)];
+        let sum = CovOp::sum_dense(&ops);
+        let expect = &x1.syrk(1.0 / 9.0) + &x2.syrk(1.0 / 7.0);
+        assert!(sum.dist_fro(&expect) < 1e-12);
+    }
+}

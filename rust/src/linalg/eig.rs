@@ -1,0 +1,233 @@
+//! Symmetric eigendecomposition (cyclic Jacobi) and power iteration.
+//!
+//! Jacobi is exact-enough and dependency-free; it is used to compute ground
+//! truth subspaces for small/medium `d`, the mixing properties of consensus
+//! weight matrices, and the spectra of synthetic covariance constructions.
+
+use super::mat::Mat;
+
+/// Eigendecomposition of a symmetric matrix: returns `(eigenvalues, V)` with
+/// eigenvalues sorted in **descending** order and `V`'s columns the matching
+/// orthonormal eigenvectors (`a = V diag(λ) Vᵀ`).
+pub fn sym_eig(a: &Mat) -> (Vec<f64>, Mat) {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols, "sym_eig needs square input");
+    let mut m = a.clone();
+    // Symmetrize defensively (callers may carry tiny asymmetry).
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = 0.5 * (m.get(i, j) + m.get(j, i));
+            m.set(i, j, v);
+            m.set(j, i, v);
+        }
+    }
+    let mut v = Mat::eye(n);
+    let max_sweeps = 100;
+    let tol = 1e-14 * m.fro_norm().max(1.0);
+
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() < tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+
+    // Extract and sort descending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let eigvals: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let mut vsorted = Mat::zeros(n, n);
+    for (newj, &(_, oldj)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vsorted.set(i, newj, v.get(i, oldj));
+        }
+    }
+    (eigvals, vsorted)
+}
+
+/// Top eigenvector/eigenvalue of a symmetric PSD matrix via power iteration.
+/// Returns `(lambda, v)`.
+pub fn power_iteration(a: &Mat, iters: usize, seed_dir: usize) -> (f64, Vec<f64>) {
+    let n = a.rows;
+    let mut v = vec![0.0; n];
+    // Deterministic non-degenerate start.
+    for (i, x) in v.iter_mut().enumerate() {
+        *x = 1.0 + ((i + seed_dir) % 7) as f64 * 0.1;
+    }
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    for x in v.iter_mut() {
+        *x /= norm;
+    }
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let mut w = vec![0.0; n];
+        for i in 0..n {
+            let row = a.row(i);
+            let mut s = 0.0;
+            for (r, x) in row.iter().zip(v.iter()) {
+                s += r * x;
+            }
+            w[i] = s;
+        }
+        let wn = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if wn == 0.0 {
+            return (0.0, v);
+        }
+        for x in w.iter_mut() {
+            *x /= wn;
+        }
+        lambda = wn;
+        v = w;
+    }
+    (lambda, v)
+}
+
+/// Dominant r-dimensional eigenspace of a symmetric matrix via orthogonal
+/// iteration to high precision (reference subspace for error metrics when
+/// the ground truth is not known analytically).
+pub fn dominant_subspace(a: &Mat, r: usize, iters: usize) -> Mat {
+    let n = a.rows;
+    let mut q = Mat::zeros(n, r);
+    for j in 0..r {
+        // Deterministic full-rank start.
+        for i in 0..n {
+            q.set(i, j, if (i + j) % (r + 1) == 0 { 1.0 } else { 0.1 * ((i * (j + 1)) % 5) as f64 });
+        }
+    }
+    q = super::qr::orthonormalize(&q);
+    for _ in 0..iters {
+        let v = a.matmul(&q);
+        q = super::qr::orthonormalize(&v);
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sym(n: usize, rng: &mut Rng) -> Mat {
+        let a = Mat::gauss(n, n, rng);
+        let at = a.transpose();
+        (&a + &at).scale(0.5)
+    }
+
+    #[test]
+    fn eig_reconstructs() {
+        let mut rng = Rng::new(1);
+        for n in [2usize, 4, 8, 15] {
+            let a = random_sym(n, &mut rng);
+            let (vals, v) = sym_eig(&a);
+            let back = v.matmul(&Mat::diag(&vals)).matmul(&v.transpose());
+            assert!(back.dist_fro(&a) < 1e-8 * a.fro_norm().max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn eig_vectors_orthonormal() {
+        let mut rng = Rng::new(2);
+        let a = random_sym(10, &mut rng);
+        let (_vals, v) = sym_eig(&a);
+        assert!(v.t_matmul(&v).dist_fro(&Mat::eye(10)) < 1e-9);
+    }
+
+    #[test]
+    fn eig_sorted_descending() {
+        let mut rng = Rng::new(3);
+        let a = random_sym(12, &mut rng);
+        let (vals, _) = sym_eig(&a);
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn eig_diag_exact() {
+        let a = Mat::diag(&[1.0, 5.0, 3.0]);
+        let (vals, v) = sym_eig(&a);
+        assert!((vals[0] - 5.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+        assert!((vals[2] - 1.0).abs() < 1e-12);
+        // Eigenvector of 5.0 is e_2 (up to sign).
+        assert!((v.get(1, 0).abs() - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn power_iteration_matches_jacobi() {
+        let mut rng = Rng::new(4);
+        let g = Mat::gauss(9, 9, &mut rng);
+        let a = g.matmul(&g.transpose()); // PSD
+        let (vals, _) = sym_eig(&a);
+        let (lam, _) = power_iteration(&a, 500, 0);
+        assert!((lam - vals[0]).abs() < 1e-6 * vals[0].max(1.0));
+    }
+
+    #[test]
+    fn dominant_subspace_matches_eig() {
+        let mut rng = Rng::new(5);
+        let g = Mat::gauss(12, 12, &mut rng);
+        let a = g.matmul(&g.transpose());
+        let (_, v) = sym_eig(&a);
+        let truth = v.cols_range(0, 3);
+        let est = dominant_subspace(&a, 3, 500);
+        // Compare projectors.
+        let p1 = truth.matmul(&truth.transpose());
+        let p2 = est.matmul(&est.transpose());
+        assert!(p1.dist_fro(&p2) < 1e-6);
+    }
+
+    #[test]
+    fn repeated_eigenvalues_ok() {
+        // Identity block + small: eigenvalues {2,2,2,1}; Jacobi must not blow up.
+        let a = Mat::diag(&[2.0, 2.0, 2.0, 1.0]);
+        let (vals, v) = sym_eig(&a);
+        assert!((vals[0] - 2.0).abs() < 1e-12);
+        assert!((vals[3] - 1.0).abs() < 1e-12);
+        assert!(v.t_matmul(&v).dist_fro(&Mat::eye(4)) < 1e-10);
+    }
+}

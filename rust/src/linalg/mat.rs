@@ -1,0 +1,553 @@
+//! Row-major dense matrix with the operations the DPSA stack needs.
+
+use crate::util::rng::Rng;
+use std::fmt;
+use std::ops::{Add, Mul, Sub};
+
+/// Row-major dense `rows × cols` matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self.get(i, j))?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    // ---------- constructors ----------
+
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: &[f64]) -> Mat {
+        let n = d.len();
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, d[i]);
+        }
+        m
+    }
+
+    /// i.i.d. standard Gaussian entries.
+    pub fn gauss(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_gauss(&mut m.data);
+        m
+    }
+
+    /// A `rows × cols` matrix with orthonormal columns (QR of a Gaussian).
+    pub fn random_orthonormal(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        assert!(cols <= rows);
+        let g = Mat::gauss(rows, cols, rng);
+        let (q, _) = super::qr::householder_qr(&g);
+        q
+    }
+
+    // ---------- element access ----------
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self.set(i, j, v[i]);
+        }
+    }
+
+    /// Rows `lo..hi` as a new matrix.
+    pub fn rows_range(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Columns `lo..hi` as a new matrix.
+    pub fn cols_range(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.cols);
+        let mut m = Mat::zeros(self.rows, hi - lo);
+        for i in 0..self.rows {
+            m.row_mut(i).copy_from_slice(&self.row(i)[lo..hi]);
+        }
+        m
+    }
+
+    /// Vertical stack of matrices with equal column counts.
+    pub fn vstack(parts: &[&Mat]) -> Mat {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        let rows = parts.iter().map(|p| p.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for p in parts {
+            assert_eq!(p.cols, cols, "vstack column mismatch");
+            data.extend_from_slice(&p.data);
+        }
+        Mat { rows, cols, data }
+    }
+
+    // ---------- shape ops ----------
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    // ---------- arithmetic ----------
+
+    pub fn scale(&self, s: f64) -> Mat {
+        let mut m = self.clone();
+        for v in m.data.iter_mut() {
+            *v *= s;
+        }
+        m
+    }
+
+    pub fn scale_inplace(&mut self, s: f64) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// self += s * other
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+    }
+
+    /// Matrix product `self * b`.
+    ///
+    /// Two regimes: for skinny `b` (r ≲ 32 — the `M_i Q` hot path, where
+    /// the i-k-j loop's length-r inner updates are all overhead) we pack
+    /// `bᵀ` once and compute contiguous dot products; otherwise the
+    /// cache-friendly i-k-j loop over row-major storage.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        if n <= 32 && k >= 16 {
+            let bt = b.transpose();
+            return self.matmul_t(&bt);
+        }
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a_ik) in a_row.iter().enumerate().take(k) {
+                if a_ik == 0.0 {
+                    continue;
+                }
+                let b_row = &b.data[kk * n..(kk + 1) * n];
+                for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a_ik * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * b` without materializing the transpose.
+    pub fn t_matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        let mut out = Mat::zeros(m, n);
+        for kk in 0..k {
+            let a_row = self.row(kk);
+            let b_row = b.row(kk);
+            for i in 0..m {
+                let a = a_row[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * bᵀ` without materializing the transpose. Both operands are
+    /// walked contiguously; the dot product uses 4 accumulators so LLVM
+    /// can vectorize despite FP non-associativity.
+    pub fn matmul_t(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            for j in 0..n {
+                let b_row = b.row(j);
+                out.data[i * n + j] = dot4(a_row, b_row, k);
+            }
+        }
+        out
+    }
+
+    /// Symmetric rank-k update: `scale * self * selfᵀ` (the Gram/covariance
+    /// hot path). Only computes the upper triangle then mirrors.
+    pub fn syrk(&self, scale: f64) -> Mat {
+        let (d, _n) = (self.rows, self.cols);
+        let mut out = Mat::zeros(d, d);
+        for i in 0..d {
+            let ri = self.row(i);
+            for j in i..d {
+                let rj = self.row(j);
+                let s = dot4(ri, rj, self.cols) * scale;
+                out.data[i * d + j] = s;
+                out.data[j * d + i] = s;
+            }
+        }
+        out
+    }
+
+    // ---------- norms & reductions ----------
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+    }
+
+    /// Operator 2-norm via power iteration on `AᵀA` (deterministic start).
+    pub fn spectral_norm(&self, iters: usize) -> f64 {
+        let mut v = vec![1.0 / (self.cols as f64).sqrt(); self.cols];
+        let mut norm = 0.0;
+        for _ in 0..iters {
+            // w = Aᵀ (A v)
+            let mut av = vec![0.0; self.rows];
+            for i in 0..self.rows {
+                let row = self.row(i);
+                let mut s = 0.0;
+                for (a, b) in row.iter().zip(v.iter()) {
+                    s += a * b;
+                }
+                av[i] = s;
+            }
+            let mut w = vec![0.0; self.cols];
+            for i in 0..self.rows {
+                let row = self.row(i);
+                let avi = av[i];
+                for (wj, &r) in w.iter_mut().zip(row.iter()) {
+                    *wj += avi * r;
+                }
+            }
+            let wn = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if wn == 0.0 {
+                return 0.0;
+            }
+            for x in w.iter_mut() {
+                *x /= wn;
+            }
+            v = w;
+            norm = wn;
+        }
+        norm.sqrt()
+    }
+
+    /// `‖a − b‖_F`.
+    pub fn dist_fro(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// True if all entries are finite.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+/// Dot product with 4-way unrolled accumulators (vectorization-friendly).
+#[inline]
+fn dot4(a: &[f64], b: &[f64], k: usize) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let chunks = k / 4;
+    for c in 0..chunks {
+        let o = c * 4;
+        acc[0] += a[o] * b[o];
+        acc[1] += a[o + 1] * b[o + 1];
+        acc[2] += a[o + 2] * b[o + 2];
+        acc[3] += a[o + 3] * b[o + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for o in chunks * 4..k {
+        s += a[o] * b[o];
+    }
+    s
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, rhs: &Mat) -> Mat {
+        let mut m = self.clone();
+        m.axpy(1.0, rhs);
+        m
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, rhs: &Mat) -> Mat {
+        let mut m = self.clone();
+        m.axpy(-1.0, rhs);
+        m
+    }
+}
+
+impl Mul for &Mat {
+    type Output = Mat;
+    fn mul(self, rhs: &Mat) -> Mat {
+        self.matmul(rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-10
+    }
+
+    #[test]
+    fn construct_and_access() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m.get(0, 1), 2.0);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.col(0), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn identity_and_diag() {
+        let i = Mat::eye(3);
+        let d = Mat::diag(&[1.0, 2.0, 3.0]);
+        let p = i.matmul(&d);
+        assert_eq!(p, d);
+    }
+
+    #[test]
+    fn matmul_hand_checked() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Mat::from_rows(&[&[19.0, 22.0], &[43.0, 50.0]]));
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Mat::from_rows(&[&[1.0, 0.0, 2.0]]);
+        let b = Mat::from_rows(&[&[1.0], &[1.0], &[1.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.rows, 1);
+        assert_eq!(c.cols, 1);
+        assert!(approx(c.get(0, 0), 3.0));
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit() {
+        let mut rng = Rng::new(1);
+        let a = Mat::gauss(7, 4, &mut rng);
+        let b = Mat::gauss(7, 3, &mut rng);
+        let fast = a.t_matmul(&b);
+        let slow = a.transpose().matmul(&b);
+        assert!(fast.dist_fro(&slow) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gauss(5, 6, &mut rng);
+        let b = Mat::gauss(4, 6, &mut rng);
+        let fast = a.matmul_t(&b);
+        let slow = a.matmul(&b.transpose());
+        assert!(fast.dist_fro(&slow) < 1e-12);
+    }
+
+    #[test]
+    fn syrk_matches_explicit() {
+        let mut rng = Rng::new(3);
+        let x = Mat::gauss(6, 10, &mut rng);
+        let fast = x.syrk(1.0 / 10.0);
+        let slow = x.matmul(&x.transpose()).scale(1.0 / 10.0);
+        assert!(fast.dist_fro(&slow) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(4);
+        let a = Mat::gauss(9, 5, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn transpose_large_blocked() {
+        let mut rng = Rng::new(5);
+        let a = Mat::gauss(70, 45, &mut rng);
+        let t = a.transpose();
+        for i in 0..70 {
+            for j in 0..45 {
+                assert_eq!(a.get(i, j), t.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_ops() {
+        let a = Mat::from_rows(&[&[1.0, 2.0]]);
+        let b = Mat::from_rows(&[&[3.0, 5.0]]);
+        assert_eq!((&a + &b).row(0), &[4.0, 7.0]);
+        assert_eq!((&b - &a).row(0), &[2.0, 3.0]);
+        assert_eq!(a.scale(2.0).row(0), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut a = Mat::zeros(2, 2);
+        let b = Mat::eye(2);
+        a.axpy(3.0, &b);
+        a.axpy(-1.0, &b);
+        assert_eq!(a, Mat::eye(2).scale(2.0));
+    }
+
+    #[test]
+    fn fro_norm_value() {
+        let a = Mat::from_rows(&[&[3.0, 4.0]]);
+        assert!(approx(a.fro_norm(), 5.0));
+    }
+
+    #[test]
+    fn spectral_norm_diag() {
+        let d = Mat::diag(&[3.0, 1.0, 0.5]);
+        let s = d.spectral_norm(100);
+        assert!((s - 3.0).abs() < 1e-8, "s={s}");
+    }
+
+    #[test]
+    fn spectral_norm_le_fro() {
+        let mut rng = Rng::new(6);
+        let a = Mat::gauss(8, 8, &mut rng);
+        assert!(a.spectral_norm(200) <= a.fro_norm() + 1e-9);
+    }
+
+    #[test]
+    fn vstack_parts() {
+        let a = Mat::from_rows(&[&[1.0, 2.0]]);
+        let b = Mat::from_rows(&[&[3.0, 4.0], &[5.0, 6.0]]);
+        let v = Mat::vstack(&[&a, &b]);
+        assert_eq!(v.rows, 3);
+        assert_eq!(v.row(2), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn rows_cols_ranges() {
+        let m = Mat::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0], &[7.0, 8.0, 9.0]]);
+        let r = m.rows_range(1, 3);
+        assert_eq!(r.row(0), &[4.0, 5.0, 6.0]);
+        let c = m.cols_range(1, 2);
+        assert_eq!(c.col(0), vec![2.0, 5.0, 8.0]);
+    }
+
+    #[test]
+    fn random_orthonormal_has_orthonormal_cols() {
+        let mut rng = Rng::new(7);
+        let q = Mat::random_orthonormal(12, 4, &mut rng);
+        let g = q.t_matmul(&q);
+        assert!(g.dist_fro(&Mat::eye(4)) < 1e-10);
+    }
+
+    #[test]
+    fn set_col_roundtrip() {
+        let mut m = Mat::zeros(3, 2);
+        m.set_col(1, &[1.0, 2.0, 3.0]);
+        assert_eq!(m.col(1), vec![1.0, 2.0, 3.0]);
+        assert_eq!(m.col(0), vec![0.0, 0.0, 0.0]);
+    }
+}

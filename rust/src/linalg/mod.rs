@@ -1,0 +1,22 @@
+//! Dense linear algebra substrate.
+//!
+//! No LAPACK/BLAS/nalgebra is available offline, so this module implements
+//! everything the paper's algorithms need from scratch: a row-major `Mat`
+//! with blocked matmul, Householder/MGS QR, Cholesky, Jacobi symmetric
+//! eigendecomposition, small SVD, spectral norms, and `CovOp` — a covariance
+//! operator abstraction that applies `M_i Q` without densifying `M_i` for
+//! high-dimensional datasets (LFW d=2914, ImageNet d=1024).
+
+pub mod chol;
+pub mod covop;
+pub mod eig;
+pub mod mat;
+pub mod qr;
+pub mod svd;
+
+pub use chol::cholesky;
+pub use covop::CovOp;
+pub use eig::{power_iteration, sym_eig};
+pub use mat::Mat;
+pub use qr::{householder_qr, mgs_qr};
+pub use svd::{singular_values, svd_small};

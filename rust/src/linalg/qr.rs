@@ -1,0 +1,237 @@
+//! QR factorizations: Householder (thin) and Modified Gram–Schmidt.
+//!
+//! S-DOT/SA-DOT orthonormalize every outer iteration (Alg. 1 step 12);
+//! Householder is the numerically robust default. MGS mirrors the L2 JAX
+//! graph (`python/compile/model.py` uses MGS so the AOT artifact stays in
+//! pure HLO ops), so the runtime parity tests compare against `mgs_qr`.
+
+use super::mat::Mat;
+
+/// Thin Householder QR: `a = Q R` with `Q ∈ R^{m×n}` having orthonormal
+/// columns and `R ∈ R^{n×n}` upper triangular with non-negative diagonal.
+pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "householder_qr requires rows >= cols");
+    let mut r = a.clone();
+    // Householder vectors stored per reflection.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Compute the norm of the k-th column below (and including) row k.
+        let mut norm = 0.0;
+        for i in k..m {
+            let v = r.get(i, k);
+            norm += v * v;
+        }
+        let norm = norm.sqrt();
+        let mut v = vec![0.0; m - k];
+        if norm == 0.0 {
+            // Degenerate column: identity reflection.
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r.get(k, k) >= 0.0 { -norm } else { norm };
+        for (idx, i) in (k..m).enumerate() {
+            v[idx] = r.get(i, k);
+        }
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 > 0.0 {
+            // Apply H = I - 2 v vᵀ / (vᵀv) to the trailing block of R.
+            for j in k..n {
+                let mut dot = 0.0;
+                for (idx, i) in (k..m).enumerate() {
+                    dot += v[idx] * r.get(i, j);
+                }
+                let s = 2.0 * dot / vnorm2;
+                for (idx, i) in (k..m).enumerate() {
+                    let val = r.get(i, j) - s * v[idx];
+                    r.set(i, j, val);
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // Build thin Q by applying reflections to the first n columns of I.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for (idx, i) in (k..m).enumerate() {
+                dot += v[idx] * q.get(i, j);
+            }
+            let s = 2.0 * dot / vnorm2;
+            for (idx, i) in (k..m).enumerate() {
+                let val = q.get(i, j) - s * v[idx];
+                q.set(i, j, val);
+            }
+        }
+    }
+
+    // Extract upper-triangular R (n×n) and fix signs so diag(R) >= 0 —
+    // makes the factorization unique and matches the JAX MGS convention.
+    let mut rr = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rr.set(i, j, r.get(i, j));
+        }
+    }
+    for i in 0..n {
+        if rr.get(i, i) < 0.0 {
+            for j in 0..n {
+                rr.set(i, j, -rr.get(i, j));
+            }
+            for row in 0..m {
+                q.set(row, i, -q.get(row, i));
+            }
+        }
+    }
+    (q, rr)
+}
+
+/// Modified Gram–Schmidt QR (thin). Matches the L2 JAX orthonormalization.
+/// Columns that vanish (rank deficiency) are replaced by zeros in Q and R.
+pub fn mgs_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "mgs_qr requires rows >= cols");
+    let mut q = a.clone();
+    let mut r = Mat::zeros(n, n);
+    for k in 0..n {
+        let mut norm = 0.0;
+        for i in 0..m {
+            let v = q.get(i, k);
+            norm += v * v;
+        }
+        let norm = norm.sqrt();
+        r.set(k, k, norm);
+        if norm > 0.0 {
+            for i in 0..m {
+                let v = q.get(i, k) / norm;
+                q.set(i, k, v);
+            }
+        }
+        for j in (k + 1)..n {
+            let mut dot = 0.0;
+            for i in 0..m {
+                dot += q.get(i, k) * q.get(i, j);
+            }
+            r.set(k, j, dot);
+            for i in 0..m {
+                let v = q.get(i, j) - dot * q.get(i, k);
+                q.set(i, j, v);
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Orthonormalize in place (returns Q only) — the S-DOT inner step.
+pub fn orthonormalize(a: &Mat) -> Mat {
+    householder_qr(a).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn reconstruct_err(a: &Mat, q: &Mat, r: &Mat) -> f64 {
+        q.matmul(r).dist_fro(a)
+    }
+
+    fn ortho_err(q: &Mat) -> f64 {
+        q.t_matmul(q).dist_fro(&Mat::eye(q.cols))
+    }
+
+    #[test]
+    fn householder_reconstructs() {
+        let mut rng = Rng::new(1);
+        for &(m, n) in &[(4usize, 4usize), (10, 3), (25, 7), (6, 1)] {
+            let a = Mat::gauss(m, n, &mut rng);
+            let (q, r) = householder_qr(&a);
+            assert!(reconstruct_err(&a, &q, &r) < 1e-10, "{m}x{n}");
+            assert!(ortho_err(&q) < 1e-10, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn householder_r_upper_triangular_nonneg_diag() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gauss(8, 5, &mut rng);
+        let (_q, r) = householder_qr(&a);
+        for i in 0..5 {
+            assert!(r.get(i, i) >= 0.0);
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn mgs_reconstructs() {
+        let mut rng = Rng::new(3);
+        for &(m, n) in &[(5usize, 5usize), (12, 4), (30, 6)] {
+            let a = Mat::gauss(m, n, &mut rng);
+            let (q, r) = mgs_qr(&a);
+            assert!(reconstruct_err(&a, &q, &r) < 1e-9, "{m}x{n}");
+            assert!(ortho_err(&q) < 1e-9, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn mgs_and_householder_agree_up_to_sign() {
+        // Both produce diag(R) >= 0 for full-rank inputs => identical Q.
+        let mut rng = Rng::new(4);
+        let a = Mat::gauss(10, 4, &mut rng);
+        let (q1, r1) = householder_qr(&a);
+        let (q2, r2) = mgs_qr(&a);
+        assert!(q1.dist_fro(&q2) < 1e-8);
+        assert!(r1.dist_fro(&r2) < 1e-8);
+    }
+
+    #[test]
+    fn qr_of_orthonormal_is_identityish() {
+        let mut rng = Rng::new(5);
+        let q0 = Mat::random_orthonormal(9, 3, &mut rng);
+        let (q, r) = householder_qr(&q0);
+        assert!(q.dist_fro(&q0) < 1e-9);
+        assert!(r.dist_fro(&Mat::eye(3)) < 1e-9);
+    }
+
+    #[test]
+    fn rank_deficient_handled() {
+        // Two identical columns: MGS zeroes the second.
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[1.0, 1.0], &[0.0, 0.0]]);
+        let (q, r) = mgs_qr(&a);
+        assert!(q.is_finite());
+        assert!((r.get(1, 1)).abs() < 1e-12);
+        // Householder also stays finite.
+        let (q2, _r2) = householder_qr(&a);
+        assert!(q2.is_finite());
+    }
+
+    #[test]
+    fn square_identity() {
+        let (q, r) = householder_qr(&Mat::eye(4));
+        assert!(q.dist_fro(&Mat::eye(4)) < 1e-12);
+        assert!(r.dist_fro(&Mat::eye(4)) < 1e-12);
+    }
+
+    #[test]
+    fn orthonormalize_idempotent_subspace() {
+        let mut rng = Rng::new(6);
+        let a = Mat::gauss(15, 4, &mut rng);
+        let q1 = orthonormalize(&a);
+        let q2 = orthonormalize(&q1);
+        assert!(q1.dist_fro(&q2) < 1e-9);
+    }
+}

@@ -1,0 +1,149 @@
+//! Small-matrix SVD utilities.
+//!
+//! The paper's error metric (eq. 11) needs the singular values of the r×r
+//! matrix `Qᵀ Q̂` (cosines of the principal angles). We compute them via the
+//! symmetric eigendecomposition of `AᵀA` — exact for these tiny matrices.
+
+use super::eig::sym_eig;
+use super::mat::Mat;
+
+/// Singular values of `a` in descending order (via eig of `AᵀA`).
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    let gram = a.t_matmul(a);
+    let (vals, _) = sym_eig(&gram);
+    vals.iter().map(|v| v.max(0.0).sqrt()).collect()
+}
+
+/// Thin SVD `a = U diag(s) Vᵀ` for a (small) matrix with `rows >= cols`.
+/// Computed from the eigendecomposition of `AᵀA`; for singular values that
+/// vanish, the corresponding `U` columns are filled by orthogonal completion.
+pub fn svd_small(a: &Mat) -> (Mat, Vec<f64>, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "svd_small expects rows >= cols");
+    let gram = a.t_matmul(a);
+    let (vals, v) = sym_eig(&gram);
+    let s: Vec<f64> = vals.iter().map(|x| x.max(0.0).sqrt()).collect();
+    let av = a.matmul(&v);
+    let mut u = Mat::zeros(m, n);
+    for j in 0..n {
+        if s[j] > 1e-12 * s[0].max(1.0) {
+            for i in 0..m {
+                u.set(i, j, av.get(i, j) / s[j]);
+            }
+        } else {
+            // Degenerate direction: pick any unit vector orthogonal to the
+            // previous columns (Gram-Schmidt on a basis vector).
+            let mut col = vec![0.0; m];
+            'basis: for b in 0..m {
+                for (idx, c) in col.iter_mut().enumerate() {
+                    *c = if idx == b { 1.0 } else { 0.0 };
+                }
+                for jj in 0..j {
+                    let mut dot = 0.0;
+                    for i in 0..m {
+                        dot += u.get(i, jj) * col[i];
+                    }
+                    for (i, c) in col.iter_mut().enumerate() {
+                        *c -= dot * u.get(i, jj);
+                    }
+                }
+                let norm = col.iter().map(|x| x * x).sum::<f64>().sqrt();
+                if norm > 1e-6 {
+                    for c in col.iter_mut() {
+                        *c /= norm;
+                    }
+                    break 'basis;
+                }
+            }
+            for i in 0..m {
+                u.set(i, j, col[i]);
+            }
+        }
+    }
+    (u, s, v)
+}
+
+/// Polar-sign adjustment used by DeEPCA: orient the columns of `q` to align
+/// with reference `q_ref` (flip sign where the diagonal of `q_refᵀ q` < 0).
+pub fn sign_adjust(q: &Mat, q_ref: &Mat) -> Mat {
+    assert_eq!(q.cols, q_ref.cols);
+    let d = q_ref.t_matmul(q);
+    let mut out = q.clone();
+    for j in 0..q.cols {
+        if d.get(j, j) < 0.0 {
+            for i in 0..q.rows {
+                out.set(i, j, -out.get(i, j));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn singular_values_of_diag() {
+        let a = Mat::diag(&[3.0, -2.0, 1.0]);
+        let s = singular_values(&a);
+        assert!((s[0] - 3.0).abs() < 1e-9);
+        assert!((s[1] - 2.0).abs() < 1e-9);
+        assert!((s[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn svd_reconstructs() {
+        let mut rng = Rng::new(1);
+        for &(m, n) in &[(5usize, 5usize), (8, 3), (10, 4)] {
+            let a = Mat::gauss(m, n, &mut rng);
+            let (u, s, v) = svd_small(&a);
+            let back = u.matmul(&Mat::diag(&s)).matmul(&v.transpose());
+            assert!(back.dist_fro(&a) < 1e-7 * a.fro_norm().max(1.0), "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn svd_factors_orthonormal() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gauss(9, 4, &mut rng);
+        let (u, _s, v) = svd_small(&a);
+        assert!(u.t_matmul(&u).dist_fro(&Mat::eye(4)) < 1e-8);
+        assert!(v.t_matmul(&v).dist_fro(&Mat::eye(4)) < 1e-8);
+    }
+
+    #[test]
+    fn singular_values_orthonormal_matrix_all_ones() {
+        let mut rng = Rng::new(3);
+        let q = Mat::random_orthonormal(10, 4, &mut rng);
+        let s = singular_values(&q);
+        for v in s {
+            assert!((v - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rank_deficient_svd_finite() {
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[1.0, 1.0], &[1.0, 1.0]]);
+        let (u, s, v) = svd_small(&a);
+        assert!(u.is_finite() && v.is_finite());
+        assert!(s[1].abs() < 1e-9);
+        let back = u.matmul(&Mat::diag(&s)).matmul(&v.transpose());
+        assert!(back.dist_fro(&a) < 1e-8);
+        // U columns stay orthonormal even for the null direction.
+        assert!(u.t_matmul(&u).dist_fro(&Mat::eye(2)) < 1e-8);
+    }
+
+    #[test]
+    fn sign_adjust_aligns() {
+        let mut rng = Rng::new(4);
+        let q = Mat::random_orthonormal(8, 3, &mut rng);
+        let mut flipped = q.clone();
+        for i in 0..8 {
+            flipped.set(i, 1, -flipped.get(i, 1));
+        }
+        let fixed = sign_adjust(&flipped, &q);
+        assert!(fixed.dist_fro(&q) < 1e-12);
+    }
+}

@@ -1,0 +1,143 @@
+//! `dpsa` — CLI for the Distributed Principal Subspace Analysis
+//! reproduction (Gang, Xiang & Bajwa, IEEE TSIPN 2021).
+//!
+//! ```text
+//! dpsa list                         # all experiment ids (tables + figures)
+//! dpsa run <id> [<id>…] [flags]     # regenerate paper artifacts
+//! dpsa run all [flags]              # everything
+//! dpsa info                         # runtime/artifact status
+//! dpsa demo [flags]                 # 10-second S-DOT walkthrough
+//!
+//! flags: --seed N --scale F --trials N --out DIR --config FILE.json
+//! ```
+
+use anyhow::Result;
+use dpsa::config::load_ctx;
+use dpsa::experiments::{all_ids, run};
+use dpsa::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("list") => {
+            println!("experiment ids ({} total):", all_ids().len());
+            for id in all_ids() {
+                println!("  {id}");
+            }
+            Ok(())
+        }
+        Some("run") => cmd_run(args),
+        Some("info") => cmd_info(),
+        Some("demo") => cmd_demo(args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let ctx = load_ctx(args)?;
+    let mut ids: Vec<String> = args.positional[1..].to_vec();
+    if ids.iter().any(|i| i == "all") {
+        ids = all_ids().iter().map(|s| s.to_string()).collect();
+    }
+    if ids.is_empty() {
+        anyhow::bail!("no experiment ids given; try `dpsa list`");
+    }
+    for id in &ids {
+        let start = std::time::Instant::now();
+        eprintln!("── running {id} (scale={}, trials={}) ──", ctx.scale, ctx.trials);
+        let tables = run(id, &ctx)?;
+        for t in &tables {
+            println!("{}", t.to_markdown());
+        }
+        eprintln!(
+            "── {id} done in {:.1}s → {} ──",
+            start.elapsed().as_secs_f64(),
+            ctx.out_dir.join(id).display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("dpsa {} — S-DOT / SA-DOT / F-DOT reproduction", env!("CARGO_PKG_VERSION"));
+    let dir = dpsa::runtime::XlaBackend::default_dir();
+    if dpsa::runtime::XlaBackend::available(&dir) {
+        match dpsa::runtime::XlaBackend::load(&dir) {
+            Ok(be) => println!(
+                "xla backend : available ({} compiled artifacts in {:?})",
+                be.compiled_count(),
+                dir
+            ),
+            Err(e) => println!("xla backend : manifest present but failed to load: {e:#}"),
+        }
+    } else {
+        println!("xla backend : not built (run `make artifacts`); native fallback in use");
+    }
+    println!("experiments : {}", all_ids().join(", "));
+    Ok(())
+}
+
+fn cmd_demo(args: &Args) -> Result<()> {
+    use dpsa::algorithms::sdot::{run_sadot, run_sdot, SdotConfig};
+    use dpsa::algorithms::SampleSetting;
+    use dpsa::consensus::schedule::Schedule;
+    use dpsa::data::spectrum::Spectrum;
+    use dpsa::data::synthetic::SyntheticDataset;
+    use dpsa::graph::Graph;
+    use dpsa::network::sim::SyncNetwork;
+    use dpsa::util::rng::Rng;
+
+    let seed = args.get_u64("seed", 42);
+    let mut rng = Rng::new(seed);
+    let spec = Spectrum::with_gap(20, 5, 0.7);
+    let ds = SyntheticDataset::full(&spec, 500, 10, &mut rng);
+    let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+    let g = Graph::erdos_renyi(10, 0.5, &mut rng);
+    println!(
+        "network: N=10 Erdős–Rényi(p=0.5), avg degree {:.2}; data: d=20, r=5, Δ=0.7",
+        g.avg_degree()
+    );
+
+    let mut net = SyncNetwork::new(g.clone());
+    let (_, tr1) = run_sdot(&mut net, &setting, &SdotConfig::new(Schedule::fixed(50), 60));
+    println!(
+        "S-DOT  (T_c=50):           final error {:.2e}, P2P/node {:.0}",
+        tr1.final_error(),
+        tr1.final_p2p()
+    );
+
+    let mut net = SyncNetwork::new(g);
+    let (_, tr2) = run_sadot(
+        &mut net,
+        &setting,
+        &SdotConfig::new(Schedule::adaptive(2.0, 1, 50), 60),
+    );
+    println!(
+        "SA-DOT (T_c=min(2t+1,50)): final error {:.2e}, P2P/node {:.0}  ({:.0}% messages saved)",
+        tr2.final_error(),
+        tr2.final_p2p(),
+        100.0 * (1.0 - tr2.final_p2p() / tr1.final_p2p())
+    );
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "usage: dpsa <list|run|info|demo> [ids…] \
+         [--seed N] [--scale F] [--trials N] [--out DIR] [--config FILE]"
+    );
+}

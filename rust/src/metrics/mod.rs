@@ -1,0 +1,6 @@
+//! Subspace error metrics and per-iteration traces.
+pub mod subspace;
+pub mod trace;
+
+pub use subspace::{principal_angle_cosines, projection_distance, subspace_error};
+pub use trace::{IterRecord, RunTrace};

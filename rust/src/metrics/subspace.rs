@@ -1,0 +1,136 @@
+//! Subspace distances (Section V, eq. 11).
+//!
+//! The paper's error metric is the average squared sine of the principal
+//! angles between the truth `Q` and an estimate `Q̂`:
+//!
+//! ```text
+//! E = (1/r) Σ_i (1 − σ_i²(Qᵀ Q̂))
+//! ```
+//!
+//! where σ_i are the singular values of `Qᵀ Q̂` (cosines of the principal
+//! angles). This equals the squared chordal distance between the spanned
+//! subspaces, normalized by r.
+
+use crate::linalg::{singular_values, Mat};
+
+/// Cosines of the principal angles between the column spaces of `q` (truth,
+/// orthonormal) and `qhat` (estimate, orthonormal), descending.
+pub fn principal_angle_cosines(q: &Mat, qhat: &Mat) -> Vec<f64> {
+    assert_eq!(q.rows, qhat.rows);
+    assert_eq!(q.cols, qhat.cols);
+    let overlap = q.t_matmul(qhat); // r×r
+    singular_values(&overlap)
+        .into_iter()
+        .map(|s| s.min(1.0))
+        .collect()
+}
+
+/// The paper's error metric, eq. (11).
+pub fn subspace_error(q: &Mat, qhat: &Mat) -> f64 {
+    let r = q.cols as f64;
+    let cos = principal_angle_cosines(q, qhat);
+    cos.iter().map(|c| 1.0 - c * c).sum::<f64>() / r
+}
+
+/// Projection-matrix distance `‖QQᵀ − Q̂Q̂ᵀ‖_F` (the Theorem-1 quantity up
+/// to the operator-norm/Frobenius relation).
+pub fn projection_distance(q: &Mat, qhat: &Mat) -> f64 {
+    // ‖P1 − P2‖_F² = 2r − 2‖QᵀQ̂‖_F² for orthonormal Q, Q̂ — avoids d×d.
+    let overlap = q.t_matmul(qhat);
+    let r = q.cols as f64;
+    let cross = overlap.fro_norm();
+    (2.0 * r - 2.0 * cross * cross).max(0.0).sqrt()
+}
+
+/// Average of `subspace_error` over per-node estimates — the y-axis of the
+/// paper's figures ("average error across the nodes").
+pub fn average_error(q: &Mat, estimates: &[Mat]) -> f64 {
+    estimates.iter().map(|e| subspace_error(q, e)).sum::<f64>() / estimates.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_subspace_zero_error() {
+        let mut rng = Rng::new(1);
+        let q = Mat::random_orthonormal(10, 3, &mut rng);
+        assert!(subspace_error(&q, &q) < 1e-12);
+        assert!(projection_distance(&q, &q) < 1e-6);
+    }
+
+    #[test]
+    fn rotation_within_subspace_zero_error() {
+        // PSA is invariant to basis rotations: Q̂ = Q R for orthogonal R.
+        let mut rng = Rng::new(2);
+        let q = Mat::random_orthonormal(12, 3, &mut rng);
+        let rot = Mat::random_orthonormal(3, 3, &mut rng);
+        let qhat = q.matmul(&rot);
+        assert!(subspace_error(&q, &qhat) < 1e-12);
+    }
+
+    #[test]
+    fn orthogonal_subspaces_error_one() {
+        // Q spans e1..e3, Q̂ spans e4..e6.
+        let mut q = Mat::zeros(8, 3);
+        let mut qh = Mat::zeros(8, 3);
+        for j in 0..3 {
+            q.set(j, j, 1.0);
+            qh.set(j + 3, j, 1.0);
+        }
+        assert!((subspace_error(&q, &qh) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn error_in_unit_interval() {
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let q = Mat::random_orthonormal(9, 4, &mut rng);
+            let qh = Mat::random_orthonormal(9, 4, &mut rng);
+            let e = subspace_error(&q, &qh);
+            assert!((0.0..=1.0).contains(&e), "e={e}");
+        }
+    }
+
+    #[test]
+    fn projection_distance_matches_dense() {
+        let mut rng = Rng::new(4);
+        let q = Mat::random_orthonormal(7, 2, &mut rng);
+        let qh = Mat::random_orthonormal(7, 2, &mut rng);
+        let fast = projection_distance(&q, &qh);
+        let p1 = q.matmul(&q.transpose());
+        let p2 = qh.matmul(&qh.transpose());
+        let dense = p1.dist_fro(&p2);
+        assert!((fast - dense).abs() < 1e-9, "{fast} vs {dense}");
+    }
+
+    #[test]
+    fn partial_overlap_known_value() {
+        // 1-dim subspaces at angle θ: E = sin²θ.
+        let theta: f64 = 0.7;
+        let q = Mat::from_rows(&[&[1.0], &[0.0]]);
+        let qh = Mat::from_rows(&[&[theta.cos()], &[theta.sin()]]);
+        let e = subspace_error(&q, &qh);
+        assert!((e - theta.sin().powi(2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn average_error_averages() {
+        let mut rng = Rng::new(5);
+        let q = Mat::random_orthonormal(10, 3, &mut rng);
+        let qh = Mat::random_orthonormal(10, 3, &mut rng);
+        let avg = average_error(&q, &[q.clone(), qh.clone()]);
+        let expect = subspace_error(&q, &qh) / 2.0;
+        assert!((avg - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sign_flip_zero_error() {
+        let mut rng = Rng::new(6);
+        let q = Mat::random_orthonormal(11, 4, &mut rng);
+        let neg = q.scale(-1.0);
+        assert!(subspace_error(&q, &neg) < 1e-12);
+    }
+}

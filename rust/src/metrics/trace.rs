@@ -1,0 +1,154 @@
+//! Per-iteration run traces.
+//!
+//! Every algorithm emits one [`IterRecord`] per outer iteration carrying the
+//! average subspace error, the cumulative consensus rounds ("total
+//! iterations (inner × outer)" — the x-axis of the paper's comparison
+//! figures) and the cumulative average P2P messages per node. Centralized
+//! baselines have no inner loop, so their cumulative rounds equal the outer
+//! index (as the paper notes for OI / SeqPM / DSA / DPGD).
+
+use crate::util::table::Table;
+
+/// One outer iteration's snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct IterRecord {
+    /// Outer iteration index (1-based).
+    pub outer: usize,
+    /// Cumulative total iterations = Σ inner rounds (or = outer for
+    /// centralized methods).
+    pub total_iters: usize,
+    /// Average subspace error across nodes (eq. 11).
+    pub error: f64,
+    /// Cumulative average P2P messages per node.
+    pub p2p_avg: f64,
+}
+
+/// A full run trace.
+#[derive(Clone, Debug, Default)]
+pub struct RunTrace {
+    pub algorithm: String,
+    pub records: Vec<IterRecord>,
+}
+
+impl RunTrace {
+    pub fn new(algorithm: &str) -> RunTrace {
+        RunTrace { algorithm: algorithm.to_string(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: IterRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn final_error(&self) -> f64 {
+        self.records.last().map(|r| r.error).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_p2p(&self) -> f64 {
+        self.records.last().map(|r| r.p2p_avg).unwrap_or(0.0)
+    }
+
+    pub fn total_iters(&self) -> usize {
+        self.records.last().map(|r| r.total_iters).unwrap_or(0)
+    }
+
+    /// First cumulative-iteration count at which the error drops below
+    /// `tol`; `None` if never.
+    pub fn iters_to_error(&self, tol: f64) -> Option<usize> {
+        self.records.iter().find(|r| r.error <= tol).map(|r| r.total_iters)
+    }
+
+    /// Serialize as a CSV table (one row per record).
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(
+            &self.algorithm,
+            &["outer", "total_iters", "error", "p2p_avg"],
+        );
+        for r in &self.records {
+            t.row(&[
+                r.outer.to_string(),
+                r.total_iters.to_string(),
+                format!("{:.6e}", r.error),
+                format!("{:.2}", r.p2p_avg),
+            ]);
+        }
+        t
+    }
+
+    /// Downsample to at most `k` records (for plotting/CSV compactness),
+    /// always keeping the last record.
+    pub fn thin(&self, k: usize) -> RunTrace {
+        if self.records.len() <= k || k < 2 {
+            return self.clone();
+        }
+        let stride = self.records.len().div_ceil(k - 1);
+        let mut records: Vec<IterRecord> =
+            self.records.iter().copied().step_by(stride).collect();
+        let last = *self.records.last().unwrap();
+        if records.last().map(|r| r.outer) != Some(last.outer) {
+            records.push(last);
+        }
+        RunTrace { algorithm: self.algorithm.clone(), records }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize) -> RunTrace {
+        let mut t = RunTrace::new("test");
+        for i in 1..=n {
+            t.push(IterRecord {
+                outer: i,
+                total_iters: i * 10,
+                error: 1.0 / i as f64,
+                p2p_avg: (i * 5) as f64,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn finals() {
+        let t = mk(4);
+        assert!((t.final_error() - 0.25).abs() < 1e-12);
+        assert_eq!(t.total_iters(), 40);
+        assert_eq!(t.final_p2p(), 20.0);
+    }
+
+    #[test]
+    fn iters_to_error() {
+        let t = mk(10);
+        assert_eq!(t.iters_to_error(0.5), Some(20));
+        assert_eq!(t.iters_to_error(1e-9), None);
+    }
+
+    #[test]
+    fn empty_trace_nan() {
+        let t = RunTrace::new("x");
+        assert!(t.final_error().is_nan());
+        assert_eq!(t.total_iters(), 0);
+    }
+
+    #[test]
+    fn to_table_rows() {
+        let t = mk(3);
+        let tab = t.to_table();
+        assert_eq!(tab.rows.len(), 3);
+        assert_eq!(tab.header.len(), 4);
+    }
+
+    #[test]
+    fn thin_keeps_last() {
+        let t = mk(100);
+        let s = t.thin(10);
+        assert!(s.records.len() <= 11);
+        assert_eq!(s.records.last().unwrap().outer, 100);
+    }
+
+    #[test]
+    fn thin_noop_when_small() {
+        let t = mk(5);
+        assert_eq!(t.thin(10).records.len(), 5);
+    }
+}

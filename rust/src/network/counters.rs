@@ -1,0 +1,99 @@
+//! Exact point-to-point communication accounting.
+//!
+//! The paper's "P2P" columns report the **average number of point-to-point
+//! messages sent per node** over a full run (center and edge nodes reported
+//! separately for star topologies). One message = one matrix sent over one
+//! directed edge in one consensus round — exactly what an MPI blocking
+//! `Sendrecv` with each neighbor produces.
+
+/// Per-node send counters.
+#[derive(Clone, Debug, Default)]
+pub struct P2pCounters {
+    pub sent: Vec<u64>,
+    /// Total scalar payload (number of f64 entries) sent per node —
+    /// used for the F-DOT cost model where message sizes differ by step.
+    pub payload: Vec<u64>,
+}
+
+impl P2pCounters {
+    pub fn new(n: usize) -> P2pCounters {
+        P2pCounters { sent: vec![0; n], payload: vec![0; n] }
+    }
+
+    #[inline]
+    pub fn record_send(&mut self, from: usize, elems: usize) {
+        self.sent[from] += 1;
+        self.payload[from] += elems as u64;
+    }
+
+    /// Average messages sent per node.
+    pub fn avg(&self) -> f64 {
+        if self.sent.is_empty() {
+            return 0.0;
+        }
+        self.sent.iter().sum::<u64>() as f64 / self.sent.len() as f64
+    }
+
+    pub fn max(&self) -> u64 {
+        self.sent.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.sent.iter().sum()
+    }
+
+    /// Average over a subset of nodes (e.g. star edge nodes).
+    pub fn avg_over(&self, nodes: &[usize]) -> f64 {
+        if nodes.is_empty() {
+            return 0.0;
+        }
+        nodes.iter().map(|&i| self.sent[i]).sum::<u64>() as f64 / nodes.len() as f64
+    }
+
+    pub fn merge(&mut self, other: &P2pCounters) {
+        assert_eq!(self.sent.len(), other.sent.len());
+        for i in 0..self.sent.len() {
+            self.sent[i] += other.sent[i];
+            self.payload[i] += other.payload[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_aggregate() {
+        let mut c = P2pCounters::new(3);
+        c.record_send(0, 100);
+        c.record_send(0, 100);
+        c.record_send(2, 50);
+        assert_eq!(c.total(), 3);
+        assert_eq!(c.max(), 2);
+        assert!((c.avg() - 1.0).abs() < 1e-12);
+        assert_eq!(c.payload[0], 200);
+    }
+
+    #[test]
+    fn avg_over_subset() {
+        let mut c = P2pCounters::new(4);
+        c.record_send(1, 1);
+        c.record_send(1, 1);
+        c.record_send(3, 1);
+        assert!((c.avg_over(&[1, 3]) - 1.5).abs() < 1e-12);
+        assert_eq!(c.avg_over(&[]), 0.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = P2pCounters::new(2);
+        let mut b = P2pCounters::new(2);
+        a.record_send(0, 10);
+        b.record_send(0, 10);
+        b.record_send(1, 5);
+        a.merge(&b);
+        assert_eq!(a.sent, vec![2, 1]);
+        assert_eq!(a.payload, vec![20, 5]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Distributed-network substrates.
+//!
+//! Two execution paths, matching how the paper evaluates:
+//!
+//! * [`sim`] — a fast synchronous in-process simulator with exact P2P
+//!   accounting; drives every error-curve and communication-cost experiment
+//!   (Tables I–IV, VI–IX; Figures 1–12).
+//! * [`mpi`] — a threaded runtime with **blocking point-to-point channel
+//!   rendezvous** emulating MPI `Sendrecv` semantics, used for wall-clock
+//!   experiments with straggler injection (Table V). One OS thread per
+//!   node, real sleeps for stragglers.
+
+pub mod counters;
+pub mod mpi;
+pub mod sim;
+
+pub use counters::P2pCounters;
+pub use mpi::{MpiConfig, StragglerSpec};
+pub use sim::SyncNetwork;

@@ -1,0 +1,326 @@
+//! Threaded MPI-like runtime with blocking point-to-point semantics.
+//!
+//! The paper's Table V measures wall-clock execution with a straggler node
+//! (0.01 s delay at a randomly chosen node per iteration) on an Open MPI
+//! cluster with blocking `Sendrecv`. We reproduce the *semantics*: one OS
+//! thread per node, rendezvous-style blocking neighbor exchange over
+//! channels, and a deterministic per-round straggler choice with a real
+//! `thread::sleep`. Because exchanges block on all neighbors, one slow node
+//! stalls its neighbors, whose next-round stalls propagate — the same
+//! cascade that makes stragglers so costly on synchronous networks.
+
+use crate::graph::Graph;
+use crate::linalg::Mat;
+use crate::network::counters::P2pCounters;
+use crate::util::rng::SplitMix64;
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Straggler injection: in every global round, one node (chosen
+/// deterministically from `seed` and the round index) sleeps `delay`.
+#[derive(Clone, Copy, Debug)]
+pub struct StragglerSpec {
+    pub delay: Duration,
+    pub seed: u64,
+}
+
+impl StragglerSpec {
+    /// The straggler node for a given round (uniform over nodes).
+    pub fn node_for_round(&self, round: u64, n: usize) -> usize {
+        let mut sm = SplitMix64::new(self.seed ^ round.wrapping_mul(0x9E37_79B9));
+        (sm.next_u64() % n as u64) as usize
+    }
+}
+
+/// Runtime configuration.
+#[derive(Clone, Debug, Default)]
+pub struct MpiConfig {
+    pub straggler: Option<StragglerSpec>,
+}
+
+/// Per-node communication context handed to the SPMD closure.
+pub struct NodeCtx {
+    pub rank: usize,
+    pub n: usize,
+    pub neighbors: Vec<usize>,
+    senders: HashMap<usize, SyncSender<Mat>>,
+    receivers: HashMap<usize, Receiver<Mat>>,
+    straggler: Option<StragglerSpec>,
+    round: u64,
+    pub sent: u64,
+    pub payload: u64,
+}
+
+impl NodeCtx {
+    /// Blocking synchronous exchange with all neighbors: sends `m` to each
+    /// neighbor, then receives one matrix from each. Applies the straggler
+    /// delay for this round if this node is the designated straggler.
+    /// Returns `(neighbor_rank, matrix)` pairs.
+    pub fn exchange(&mut self, m: &Mat) -> Vec<(usize, Mat)> {
+        self.round += 1;
+        if let Some(s) = self.straggler {
+            if s.node_for_round(self.round, self.n) == self.rank {
+                std::thread::sleep(s.delay);
+            }
+        }
+        for (&j, tx) in self.senders.iter() {
+            tx.send(m.clone()).expect("peer hung up");
+            self.sent += 1;
+            self.payload += (m.rows * m.cols) as u64;
+            let _ = j;
+        }
+        let mut out = Vec::with_capacity(self.neighbors.len());
+        for &j in &self.neighbors {
+            let recv = self.receivers.get(&j).expect("missing channel");
+            let mat = recv.recv().expect("peer hung up");
+            out.push((j, mat));
+        }
+        out
+    }
+
+    /// Current round index (number of exchanges done).
+    pub fn rounds_done(&self) -> u64 {
+        self.round
+    }
+
+    /// Blocking receive from one neighbor with a timeout; `None` on
+    /// timeout. Used by the async runtime's per-phase pacing (bounded
+    /// staleness): a node waits at each phase boundary until every
+    /// neighbor has entered the phase, then free-runs within it.
+    pub fn recv_from_timeout(&mut self, j: usize, timeout: Duration) -> Option<Mat> {
+        let recv = self.receivers.get(&j).expect("missing channel");
+        recv.recv_timeout(timeout).ok()
+    }
+
+    /// Best-effort single send to one neighbor (dropped if its buffer is
+    /// full). Used for pacing keepalives: announcements can be dropped by
+    /// bounded buffers, so waiters periodically re-announce to break
+    /// mutual phase-wait stalls.
+    pub fn send_to(&mut self, j: usize, m: &Mat) {
+        if let Some(tx) = self.senders.get(&j) {
+            if tx.try_send(m.clone()).is_ok() {
+                self.sent += 1;
+                self.payload += (m.rows * m.cols) as u64;
+            }
+        }
+    }
+
+    /// Non-blocking gossip exchange: best-effort send to every neighbor
+    /// (dropped if the peer's buffer is full) and drain whatever has
+    /// already arrived. Never blocks — the asynchronous primitive behind
+    /// the straggler-tolerant S-DOT variant (the paper's future-work
+    /// direction on asynchronicity).
+    pub fn exchange_async(&mut self, m: &Mat) -> Vec<(usize, Mat)> {
+        self.round += 1;
+        if let Some(s) = self.straggler {
+            if s.node_for_round(self.round, self.n) == self.rank {
+                std::thread::sleep(s.delay);
+            }
+        }
+        self.gossip_poll(m)
+    }
+
+    /// The non-delaying core of [`exchange_async`]: best-effort send to all
+    /// neighbors + drain. Also used directly for phase-boundary pacing
+    /// polls, which model protocol chatter rather than algorithm rounds
+    /// (no straggler compute delay, no round increment).
+    pub fn gossip_poll(&mut self, m: &Mat) -> Vec<(usize, Mat)> {
+        for tx in self.senders.values() {
+            if tx.try_send(m.clone()).is_ok() {
+                self.sent += 1;
+                self.payload += (m.rows * m.cols) as u64;
+            }
+        }
+        let mut out = Vec::new();
+        for &j in &self.neighbors {
+            let recv = self.receivers.get(&j).expect("missing channel");
+            // Drain: keep only the freshest value from each neighbor.
+            let mut latest = None;
+            while let Ok(mat) = recv.try_recv() {
+                latest = Some(mat);
+            }
+            if let Some(mat) = latest {
+                out.push((j, mat));
+            }
+        }
+        out
+    }
+}
+
+/// Outcome of an SPMD run.
+pub struct MpiRun<R> {
+    pub results: Vec<R>,
+    pub elapsed: Duration,
+    pub counters: P2pCounters,
+}
+
+/// Run `f(rank, ctx)` on every node in its own thread; blocks until all
+/// complete. Channels are bounded (capacity 1) so sends rendezvous like
+/// MPI's synchronous mode once buffers are full.
+pub fn run_spmd<R, F>(graph: &Graph, cfg: &MpiConfig, f: F) -> MpiRun<R>
+where
+    R: Send + 'static,
+    F: Fn(&mut NodeCtx) -> R + Send + Sync + 'static,
+{
+    let n = graph.n;
+    // Build a channel for each directed edge.
+    let mut senders: Vec<HashMap<usize, SyncSender<Mat>>> = (0..n).map(|_| HashMap::new()).collect();
+    let mut receivers: Vec<HashMap<usize, Receiver<Mat>>> = (0..n).map(|_| HashMap::new()).collect();
+    for i in 0..n {
+        for &j in &graph.adj[i] {
+            // Channel i -> j; buffered so a full synchronous round can
+            // proceed without deadlock (everyone sends before receiving).
+            let (tx, rx) = std::sync::mpsc::sync_channel::<Mat>(4);
+            senders[i].insert(j, tx);
+            receivers[j].insert(i, rx);
+        }
+    }
+
+    let f = Arc::new(f);
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(n);
+    for (rank, (s, r)) in senders.into_iter().zip(receivers.into_iter()).enumerate() {
+        let mut ctx = NodeCtx {
+            rank,
+            n,
+            neighbors: graph.adj[rank].clone(),
+            senders: s,
+            receivers: r,
+            straggler: cfg.straggler,
+            round: 0,
+            sent: 0,
+            payload: 0,
+        };
+        let f = Arc::clone(&f);
+        handles.push(std::thread::spawn(move || {
+            let out = f(&mut ctx);
+            (ctx.rank, out, ctx.sent, ctx.payload)
+        }));
+    }
+
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut counters = P2pCounters::new(n);
+    for h in handles {
+        let (rank, out, sent, payload) = h.join().expect("node thread panicked");
+        results[rank] = Some(out);
+        counters.sent[rank] = sent;
+        counters.payload[rank] = payload;
+    }
+    MpiRun {
+        results: results.into_iter().map(|o| o.unwrap()).collect(),
+        elapsed: start.elapsed(),
+        counters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exchange_delivers_neighbor_values() {
+        let g = Graph::ring(4);
+        let run = run_spmd(&g, &MpiConfig::default(), |ctx| {
+            let mine = Mat::eye(2).scale(ctx.rank as f64 + 1.0);
+            let got = ctx.exchange(&mine);
+            got.iter().map(|(j, m)| (*j, m.get(0, 0))).collect::<Vec<_>>()
+        });
+        // Node 0's neighbors on ring(4) are 1 and 3.
+        let got0 = &run.results[0];
+        assert!(got0.contains(&(1, 2.0)));
+        assert!(got0.contains(&(3, 4.0)));
+    }
+
+    #[test]
+    fn counters_match_rounds_times_degree() {
+        let g = Graph::star(5);
+        let rounds = 7;
+        let run = run_spmd(&g, &MpiConfig::default(), move |ctx| {
+            let m = Mat::eye(2);
+            for _ in 0..rounds {
+                ctx.exchange(&m);
+            }
+        });
+        assert_eq!(run.counters.sent[0], (rounds * 4) as u64); // hub
+        for i in 1..5 {
+            assert_eq!(run.counters.sent[i], rounds as u64);
+        }
+    }
+
+    #[test]
+    fn mpi_consensus_matches_simulator() {
+        use crate::consensus::weights::local_degree_weights;
+        use crate::network::sim::SyncNetwork;
+        use crate::util::rng::Rng;
+
+        let mut rng = Rng::new(5);
+        let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+        let wm = local_degree_weights(&g);
+        let z0: Vec<Mat> = (0..6).map(|_| Mat::gauss(3, 2, &mut rng)).collect();
+        let rounds = 25;
+
+        // Simulator path.
+        let mut net = SyncNetwork::with_weights(g.clone(), wm.clone());
+        let mut zs = z0.clone();
+        net.consensus(&mut zs, rounds);
+
+        // Threaded MPI path: each node mixes its own row every round.
+        let z0_arc = Arc::new(z0);
+        let wm_arc = Arc::new(wm);
+        let run = run_spmd(&g, &MpiConfig::default(), move |ctx| {
+            let mut z = z0_arc[ctx.rank].clone();
+            for _ in 0..rounds {
+                let got = ctx.exchange(&z);
+                let mut nz = z.scale(wm_arc.w.get(ctx.rank, ctx.rank));
+                for (j, mj) in got {
+                    nz.axpy(wm_arc.w.get(ctx.rank, j), &mj);
+                }
+                z = nz;
+            }
+            z
+        });
+        for (a, b) in run.results.iter().zip(zs.iter()) {
+            assert!(a.dist_fro(b) < 1e-12, "MPI and simulator disagree");
+        }
+    }
+
+    #[test]
+    fn straggler_slows_wall_clock() {
+        let g = Graph::ring(4);
+        let rounds = 20;
+        let body = move |ctx: &mut NodeCtx| {
+            let m = Mat::eye(2);
+            for _ in 0..rounds {
+                ctx.exchange(&m);
+            }
+        };
+        let fast = run_spmd(&g, &MpiConfig::default(), body);
+        let slow = run_spmd(
+            &g,
+            &MpiConfig {
+                straggler: Some(StragglerSpec { delay: Duration::from_millis(5), seed: 1 }),
+            },
+            body,
+        );
+        // 20 rounds × 5 ms ≈ 100 ms floor for the straggled run.
+        assert!(slow.elapsed >= Duration::from_millis(80), "{:?}", slow.elapsed);
+        assert!(slow.elapsed > fast.elapsed);
+    }
+
+    #[test]
+    fn straggler_choice_deterministic_and_uniformish() {
+        let s = StragglerSpec { delay: Duration::from_millis(1), seed: 9 };
+        let mut counts = [0usize; 5];
+        for round in 0..500 {
+            let a = s.node_for_round(round, 5);
+            let b = s.node_for_round(round, 5);
+            assert_eq!(a, b);
+            counts[a] += 1;
+        }
+        for c in counts {
+            assert!(c > 50, "{counts:?}");
+        }
+    }
+}

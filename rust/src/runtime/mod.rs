@@ -1,0 +1,32 @@
+//! Execution backends for the per-node numerical hot path.
+//!
+//! The coordinator calls [`Backend::cov_apply`] (`M_i Q`, Alg. 1 step 5) and
+//! [`Backend::orthonormalize`] (step 12) through this trait:
+//!
+//! * [`NativeBackend`] — pure-Rust `linalg`, always available, f64.
+//! * [`xla::XlaBackend`] — loads the AOT artifacts produced by
+//!   `python/compile/aot.py` (JAX/Pallas → HLO text) and executes them on
+//!   the PJRT CPU client, f32. Shapes without a compiled artifact fall back
+//!   to native. Python never runs at request time.
+
+pub mod native;
+pub mod xla;
+
+use crate::linalg::{CovOp, Mat};
+
+/// Numerical backend for the per-node hot path.
+pub trait Backend {
+    /// `M_i Q` — the O(d²r) product dominating each outer iteration.
+    fn cov_apply(&self, cov: &CovOp, q: &Mat) -> Mat;
+    /// Thin QR orthonormalization, returning Q.
+    fn orthonormalize(&self, v: &Mat) -> Mat;
+    /// Fused OI step `QR(M_i Q)` — backends may specialize (the XLA backend
+    /// runs a single compiled module to avoid two PJRT round-trips).
+    fn oi_step(&self, cov: &CovOp, q: &Mat) -> Mat {
+        self.orthonormalize(&self.cov_apply(cov, q))
+    }
+    fn name(&self) -> &'static str;
+}
+
+pub use native::NativeBackend;
+pub use xla::XlaBackend;

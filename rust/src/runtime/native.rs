@@ -1,0 +1,53 @@
+//! Pure-Rust backend (f64, `linalg`).
+
+use super::Backend;
+use crate::linalg::{qr, CovOp, Mat};
+
+/// The default backend: exact f64 arithmetic via the in-repo linalg.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn cov_apply(&self, cov: &CovOp, q: &Mat) -> Mat {
+        cov.apply(q)
+    }
+
+    fn orthonormalize(&self, v: &Mat) -> Mat {
+        qr::orthonormalize(v)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_linalg_directly() {
+        let mut rng = Rng::new(1);
+        let x = Mat::gauss(10, 40, &mut rng);
+        let cov = CovOp::from_samples(x.clone());
+        let q = Mat::random_orthonormal(10, 3, &mut rng);
+        let b = NativeBackend;
+        assert!(b.cov_apply(&cov, &q).dist_fro(&cov.apply(&q)) < 1e-12);
+        let v = Mat::gauss(10, 3, &mut rng);
+        let qn = b.orthonormalize(&v);
+        assert!(qn.t_matmul(&qn).dist_fro(&Mat::eye(3)) < 1e-10);
+    }
+
+    #[test]
+    fn oi_step_composes() {
+        let mut rng = Rng::new(2);
+        let x = Mat::gauss(8, 30, &mut rng);
+        let cov = CovOp::from_samples(x);
+        let q = Mat::random_orthonormal(8, 2, &mut rng);
+        let b = NativeBackend;
+        let one = b.oi_step(&cov, &q);
+        let two = b.orthonormalize(&b.cov_apply(&cov, &q));
+        assert!(one.dist_fro(&two) < 1e-12);
+    }
+}

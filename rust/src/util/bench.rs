@@ -1,0 +1,124 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! `time_it` runs warmups then timed repetitions and reports
+//! median / min / max wall-clock. Bench binaries (`[[bench]]
+//! harness = false`) print paper-table regenerations plus these timings.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary over repetitions.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub reps: usize,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Timing {
+    pub fn per_op(&self, ops: usize) -> Duration {
+        self.median / ops.max(1) as u32
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:?} (min {:?}, max {:?}, n={})",
+            self.median, self.min, self.max, self.reps
+        )
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `reps` measured repetitions.
+pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+    times.sort();
+    Timing {
+        reps,
+        median: times[times.len() / 2],
+        min: times[0],
+        max: *times.last().unwrap(),
+    }
+}
+
+/// Standard header for bench binaries; reads scale/trials from env so
+/// `BENCH_SCALE=1.0 cargo bench` regenerates paper-fidelity numbers.
+pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
+    let scale = std::env::var("BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_scale);
+    let trials = std::env::var("BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    crate::experiments::ExpCtx {
+        seed: 42,
+        scale,
+        trials,
+        out_dir: std::path::PathBuf::from("results"),
+    }
+}
+
+/// Run + print one experiment id with wall-clock.
+pub fn run_and_print(id: &str, ctx: &crate::experiments::ExpCtx) {
+    let start = Instant::now();
+    match crate::experiments::run(id, ctx) {
+        Ok(tables) => {
+            for t in &tables {
+                println!("{}", t.to_markdown());
+            }
+            println!(
+                "[bench] {id}: {:.2}s (scale={}, trials={})\n",
+                start.elapsed().as_secs_f64(),
+                ctx.scale,
+                ctx.trials
+            );
+        }
+        Err(e) => {
+            eprintln!("[bench] {id} FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_reports_ordering() {
+        let t = time_it(1, 5, || std::thread::sleep(Duration::from_micros(200)));
+        assert!(t.min <= t.median && t.median <= t.max);
+        assert!(t.median >= Duration::from_micros(150));
+        assert_eq!(t.reps, 5);
+    }
+
+    #[test]
+    fn per_op_divides() {
+        let t = Timing {
+            reps: 3,
+            median: Duration::from_millis(100),
+            min: Duration::from_millis(90),
+            max: Duration::from_millis(120),
+        };
+        assert_eq!(t.per_op(10), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn bench_ctx_defaults() {
+        let ctx = bench_ctx(0.25);
+        assert!(ctx.scale > 0.0);
+        assert!(ctx.trials >= 1);
+    }
+}

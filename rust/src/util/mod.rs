@@ -1,0 +1,7 @@
+//! Shared utilities: RNG, JSON, CLI parsing, tables, property checks.
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;

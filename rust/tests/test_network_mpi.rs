@@ -1,0 +1,108 @@
+//! Threaded MPI-like runtime: semantics, determinism, straggler cascades.
+
+use dpsa::algorithms::SampleSetting;
+use dpsa::consensus::schedule::Schedule;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::experiments::straggler::run_sdot_mpi;
+use dpsa::graph::Graph;
+use dpsa::linalg::Mat;
+use dpsa::network::mpi::{run_spmd, MpiConfig, StragglerSpec};
+use dpsa::util::rng::Rng;
+use std::time::Duration;
+
+fn setting(seed: u64, nodes: usize) -> (SampleSetting, Rng) {
+    let mut rng = Rng::new(seed);
+    let spec = Spectrum::with_gap(20, 5, 0.7);
+    let ds = SyntheticDataset::full(&spec, 500, nodes, &mut rng);
+    let s = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+    (s, rng)
+}
+
+#[test]
+fn mpi_sdot_matches_simulator_exactly() {
+    // Same algorithm on the threaded runtime and the in-process simulator
+    // must produce bit-identical per-node subspace estimates.
+    use dpsa::algorithms::sdot::{run_sdot, SdotConfig};
+    use dpsa::network::sim::SyncNetwork;
+
+    let (s, mut rng) = setting(1, 6);
+    let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+    let t_o = 15;
+    let sched = Schedule::adaptive(2.0, 1, 30);
+
+    let mut net = SyncNetwork::new(g.clone());
+    let (q_sim, _) = run_sdot(&mut net, &s, &SdotConfig::new(sched, t_o));
+    let (_, _, err) = run_sdot_mpi(&s, &g, sched, t_o, None);
+    // run_sdot_mpi reports max error vs truth; compare to simulator's.
+    let sim_err = q_sim
+        .iter()
+        .map(|q| dpsa::metrics::subspace::subspace_error(&s.truth, q))
+        .fold(0.0f64, f64::max);
+    assert!(
+        (err - sim_err).abs() <= 1e-12 * sim_err.max(1e-12) + 1e-15,
+        "mpi={err} sim={sim_err}"
+    );
+}
+
+#[test]
+fn mpi_p2p_matches_schedule_accounting() {
+    let (s, mut rng) = setting(2, 5);
+    let _ = &mut rng;
+    let g = Graph::ring(5);
+    let sched = Schedule::fixed(20);
+    let t_o = 8;
+    let (_, p2p, _) = run_sdot_mpi(&s, &g, sched, t_o, None);
+    // ring degree 2: 8 outer × 20 rounds × 2 neighbors = 320 per node.
+    assert!((p2p - 320.0).abs() < 1e-9, "p2p={p2p}");
+}
+
+#[test]
+fn straggler_delay_sets_wall_clock_floor() {
+    let (s, mut rng) = setting(3, 5);
+    let _ = &mut rng;
+    let g = Graph::ring(5);
+    let sched = Schedule::fixed(10);
+    let t_o = 10; // 100 consensus rounds total
+    let delay = Duration::from_millis(3);
+    let (fast, _, _) = run_sdot_mpi(&s, &g, sched, t_o, None);
+    let (slow, _, _) =
+        run_sdot_mpi(&s, &g, sched, t_o, Some(StragglerSpec { delay, seed: 4 }));
+    // 100 rounds × 3 ms = 0.3 s serial bound; consecutive-round delays at
+    // different nodes overlap partially through the buffered channels
+    // (exactly as on a real MPI fabric), so require ≥ 60% of serial.
+    assert!(slow >= 0.18, "slow={slow}");
+    assert!(slow > fast * 2.0, "slow={slow} fast={fast}");
+}
+
+#[test]
+fn spmd_barrier_free_deadlock_free_on_star() {
+    // Star is the worst case for blocking exchanges (hub fan-in).
+    let g = Graph::star(8);
+    let run = run_spmd(&g, &MpiConfig::default(), |ctx| {
+        let m = Mat::eye(3).scale(ctx.rank as f64);
+        let mut acc = 0.0;
+        for _ in 0..50 {
+            for (_, mj) in ctx.exchange(&m) {
+                acc += mj.get(0, 0);
+            }
+        }
+        acc
+    });
+    // Hub sees Σ_{i=1..7} i = 28 per round × 50 rounds.
+    assert_eq!(run.results[0], 28.0 * 50.0);
+    // Leaves see only the hub (rank 0) → 0 contribution.
+    for i in 1..8 {
+        assert_eq!(run.results[i], 0.0);
+    }
+}
+
+#[test]
+fn spmd_deterministic_across_runs() {
+    let (s, mut rng) = setting(5, 6);
+    let g = Graph::erdos_renyi(6, 0.5, &mut rng);
+    let sched = Schedule::fixed(15);
+    let (_, _, e1) = run_sdot_mpi(&s, &g, sched, 10, None);
+    let (_, _, e2) = run_sdot_mpi(&s, &g, sched, 10, None);
+    assert_eq!(e1, e2, "threaded runtime must be deterministic");
+}

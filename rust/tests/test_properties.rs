@@ -1,0 +1,214 @@
+//! Property tests on coordinator invariants, via the in-repo `util::check`
+//! harness (proptest is unavailable offline; failing cases print a replay
+//! seed).
+
+use dpsa::consensus::engine::{average_consensus, exact_average};
+use dpsa::consensus::schedule::Schedule;
+use dpsa::consensus::weights::local_degree_weights;
+use dpsa::data::partition::{partition_features, partition_samples};
+use dpsa::experiments::expected_p2p;
+use dpsa::graph::Graph;
+use dpsa::linalg::{cholesky, Mat};
+use dpsa::network::counters::P2pCounters;
+use dpsa::network::sim::SyncNetwork;
+use dpsa::util::check::{check, close, ensure};
+use dpsa::util::rng::Rng;
+
+fn random_graph(rng: &mut Rng) -> Graph {
+    let n = 4 + rng.next_below(12);
+    match rng.next_below(4) {
+        0 => Graph::erdos_renyi(n, 0.3 + 0.4 * rng.next_f64(), rng),
+        1 => Graph::ring(n.max(3)),
+        2 => Graph::star(n),
+        _ => Graph::path(n),
+    }
+}
+
+#[test]
+fn prop_weights_doubly_stochastic_nonnegative() {
+    check("weights-ds", 11, 60, |rng| {
+        let g = random_graph(rng);
+        let wm = local_degree_weights(&g);
+        close(wm.row_sum_err(), 0.0, 1e-12, "row sums")?;
+        close(wm.symmetry_err(), 0.0, 1e-12, "symmetry")?;
+        ensure(wm.nonnegative(), "nonnegative")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_consensus_preserves_sum_and_contracts() {
+    check("consensus-sum", 12, 40, |rng| {
+        let g = random_graph(rng);
+        let n = g.n;
+        let wm = local_degree_weights(&g);
+        let mut z: Vec<Mat> = (0..n).map(|_| Mat::gauss(4, 2, rng)).collect();
+        let avg = exact_average(&z);
+        let before: f64 = z.iter().map(|m| m.dist_fro(&avg)).sum();
+        let mut c = P2pCounters::new(n);
+        let rounds = 1 + rng.next_below(30);
+        average_consensus(&g, &wm, &mut z, rounds, &mut c);
+        // Sum preserved.
+        let after_avg = exact_average(&z);
+        close(after_avg.dist_fro(&avg), 0.0, 1e-9, "sum preservation")?;
+        // Disagreement non-increasing.
+        let after: f64 = z.iter().map(|m| m.dist_fro(&avg)).sum();
+        ensure(after <= before + 1e-9, "contraction")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_p2p_counters_match_combinatorial_formula() {
+    check("p2p-formula", 13, 40, |rng| {
+        let g = random_graph(rng);
+        let n = g.n;
+        let sched = match rng.next_below(3) {
+            0 => Schedule::fixed(1 + rng.next_below(40)),
+            1 => Schedule::adaptive(1.0, 1, 1 + rng.next_below(50)),
+            _ => Schedule::adaptive(0.5 + rng.next_f64(), rng.next_below(3), 50),
+        };
+        let t_o = 1 + rng.next_below(12);
+        let mut net = SyncNetwork::new(g.clone());
+        let mut z: Vec<Mat> = (0..n).map(|_| Mat::gauss(3, 2, rng)).collect();
+        for t in 1..=t_o {
+            net.consensus(&mut z, sched.rounds_at(t));
+        }
+        let expect = expected_p2p(&g, &sched, t_o);
+        for i in 0..n {
+            ensure(
+                net.counters.sent[i] == expect[i],
+                &format!("node {i}: {} vs {}", net.counters.sent[i], expect[i]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitions_are_exact_partitions() {
+    check("partitions", 14, 50, |rng| {
+        let d = 2 + rng.next_below(30);
+        let n = 2 + rng.next_below(60);
+        let x = Mat::gauss(d, n, rng);
+        let k_s = 1 + rng.next_below(n.min(10));
+        let parts = partition_samples(&x, k_s);
+        let total: usize = parts.iter().map(|p| p.cols).sum();
+        ensure(total == n, "sample partition covers")?;
+        let k_f = 1 + rng.next_below(d.min(10));
+        let fparts = partition_features(&x, k_f);
+        let refs: Vec<&Mat> = fparts.iter().collect();
+        let back = Mat::vstack(&refs);
+        ensure(back.data == x.data, "feature partition reassembles")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qr_invariants() {
+    check("qr", 15, 60, |rng| {
+        let m = 2 + rng.next_below(30);
+        let n = 1 + rng.next_below(m.min(8));
+        let a = Mat::gauss(m, n, rng);
+        let (q, r) = dpsa::linalg::qr::householder_qr(&a);
+        close(q.matmul(&r).dist_fro(&a), 0.0, 1e-8, "QR = A")?;
+        close(
+            q.t_matmul(&q).dist_fro(&Mat::eye(n)),
+            0.0,
+            1e-8,
+            "QᵀQ = I",
+        )?;
+        for i in 0..n {
+            ensure(r.get(i, i) >= 0.0, "diag(R) >= 0")?;
+            for j in 0..i {
+                ensure(r.get(i, j) == 0.0, "R upper triangular")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cholesky_qr_equivalence() {
+    check("chol-qr", 16, 40, |rng| {
+        let m = 6 + rng.next_below(25);
+        let n = 1 + rng.next_below(5);
+        let v = Mat::gauss(m, n, rng);
+        let k = v.t_matmul(&v);
+        let r = cholesky(&k).ok_or("gram not SPD?")?;
+        let q = dpsa::linalg::chol::solve_r_right(&v, &r);
+        close(
+            q.t_matmul(&q).dist_fro(&Mat::eye(n)),
+            0.0,
+            1e-6,
+            "Cholesky-QR orthonormal",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sdot_invariant_estimates_orthonormal_every_iteration() {
+    use dpsa::algorithms::sdot::{run_sdot, SdotConfig};
+    use dpsa::algorithms::SampleSetting;
+    use dpsa::data::spectrum::Spectrum;
+    use dpsa::data::synthetic::SyntheticDataset;
+
+    check("sdot-orthonormal", 17, 10, |rng| {
+        let nodes = 4 + rng.next_below(5);
+        let r = 1 + rng.next_below(5);
+        let gap = 0.3 + 0.5 * rng.next_f64();
+        let spec = Spectrum::with_gap(12, r, gap);
+        let ds = SyntheticDataset::full(&spec, 200, nodes, rng);
+        let s = SampleSetting::from_parts(&ds.parts, r, rng);
+        let g = Graph::erdos_renyi(nodes, 0.6, rng);
+        let mut net = SyncNetwork::new(g);
+        let tc = 5 + rng.next_below(40);
+        let (q, tr) = run_sdot(&mut net, &s, &SdotConfig::new(Schedule::fixed(tc), 15));
+        for qi in &q {
+            close(
+                qi.t_matmul(qi).dist_fro(&Mat::eye(r)),
+                0.0,
+                1e-9,
+                "estimates orthonormal",
+            )?;
+            ensure(qi.is_finite(), "finite")?;
+        }
+        ensure(tr.records.len() == 15, "trace length")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mixing_time_monotone_under_edge_addition() {
+    // Adding edges (raising p) should not slow eq.-5 mixing, statistically:
+    // we assert SLEM ordering which governs the asymptotics.
+    use dpsa::consensus::mixing::slem;
+    check("mixing-monotone", 18, 20, |rng| {
+        let n = 8 + rng.next_below(10);
+        let p_lo = 0.2 + 0.2 * rng.next_f64();
+        let g_lo = Graph::erdos_renyi(n, p_lo, rng);
+        let g_hi = Graph::complete(n);
+        let s_lo = slem(&local_degree_weights(&g_lo));
+        let s_hi = slem(&local_degree_weights(&g_hi));
+        ensure(s_hi <= s_lo + 1e-9, &format!("complete {s_hi} vs er {s_lo}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_subspace_error_metric_axioms() {
+    use dpsa::metrics::subspace::subspace_error;
+    check("metric-axioms", 19, 40, |rng| {
+        let d = 5 + rng.next_below(15);
+        let r = 1 + rng.next_below(d.min(5));
+        let q1 = Mat::random_orthonormal(d, r, rng);
+        let q2 = Mat::random_orthonormal(d, r, rng);
+        let e12 = subspace_error(&q1, &q2);
+        let e21 = subspace_error(&q2, &q1);
+        close(e12, e21, 1e-9, "symmetry")?;
+        ensure((0.0..=1.0 + 1e-12).contains(&e12), "range")?;
+        close(subspace_error(&q1, &q1), 0.0, 1e-9, "identity")?;
+        Ok(())
+    });
+}

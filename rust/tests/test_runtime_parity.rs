@@ -1,0 +1,144 @@
+//! Native ↔ XLA backend parity over the AOT artifacts.
+//!
+//! These tests require `make artifacts` to have been run; they skip
+//! (successfully) when `artifacts/manifest.json` is absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use dpsa::linalg::{CovOp, Mat};
+use dpsa::runtime::{Backend, NativeBackend, XlaBackend};
+use dpsa::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load() -> Option<XlaBackend> {
+    let dir = artifacts_dir();
+    if !XlaBackend::available(&dir) {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaBackend::load(&dir).expect("artifacts exist but failed to load"))
+}
+
+#[test]
+fn backend_loads_and_compiles_all_artifacts() {
+    let Some(be) = load() else { return };
+    assert!(be.compiled_count() >= 10, "compiled={}", be.compiled_count());
+    assert_eq!(be.name(), "xla");
+}
+
+#[test]
+fn sdot_step_parity_d20() {
+    let Some(be) = load() else { return };
+    let native = NativeBackend;
+    let mut rng = Rng::new(1);
+    let x = Mat::gauss(20, 100, &mut rng);
+    let cov = CovOp::dense_from_samples(&x);
+    let q = Mat::random_orthonormal(20, 5, &mut rng);
+    let v_xla = be.cov_apply(&cov, &q);
+    let v_nat = native.cov_apply(&cov, &q);
+    let rel = v_xla.dist_fro(&v_nat) / v_nat.fro_norm().max(1e-12);
+    assert!(rel < 1e-5, "rel={rel}");
+    assert!(be.stats.borrow().xla_calls >= 1, "XLA path not taken");
+}
+
+#[test]
+fn sdot_step_parity_d64_and_d784() {
+    let Some(be) = load() else { return };
+    let native = NativeBackend;
+    let mut rng = Rng::new(2);
+    for &(d, r) in &[(64usize, 8usize), (784, 5)] {
+        let x = Mat::gauss(d, 64, &mut rng);
+        let cov = CovOp::dense_from_samples(&x);
+        let q = Mat::random_orthonormal(d, r, &mut rng);
+        let v_xla = be.cov_apply(&cov, &q);
+        let v_nat = native.cov_apply(&cov, &q);
+        let rel = v_xla.dist_fro(&v_nat) / v_nat.fro_norm().max(1e-12);
+        assert!(rel < 1e-4, "d={d} rel={rel}");
+    }
+}
+
+#[test]
+fn qr_mgs_parity() {
+    let Some(be) = load() else { return };
+    let mut rng = Rng::new(3);
+    let v = Mat::gauss(20, 5, &mut rng);
+    let q_xla = be.orthonormalize(&v);
+    let gram = q_xla.t_matmul(&q_xla);
+    assert!(gram.dist_fro(&Mat::eye(5)) < 1e-4, "{}", gram.dist_fro(&Mat::eye(5)));
+    let q_nat = NativeBackend.orthonormalize(&v);
+    let err = dpsa::metrics::subspace::subspace_error(&q_nat, &q_xla);
+    assert!(err < 1e-6, "subspace err={err}"); // f32 artifact precision
+}
+
+#[test]
+fn fused_oi_step_parity() {
+    let Some(be) = load() else { return };
+    let native = NativeBackend;
+    let mut rng = Rng::new(4);
+    let x = Mat::gauss(20, 200, &mut rng);
+    let cov = CovOp::dense_from_samples(&x);
+    let q = Mat::random_orthonormal(20, 5, &mut rng);
+    let q_xla = be.oi_step(&cov, &q);
+    let q_nat = native.oi_step(&cov, &q);
+    let err = dpsa::metrics::subspace::subspace_error(&q_nat, &q_xla);
+    assert!(err < 1e-6, "subspace err={err}"); // f32 artifact precision
+    assert!(q_xla.t_matmul(&q_xla).dist_fro(&Mat::eye(5)) < 1e-4);
+}
+
+#[test]
+fn gram_parity() {
+    let Some(be) = load() else { return };
+    let mut rng = Rng::new(5);
+    let x = Mat::gauss(20, 500, &mut rng);
+    let m_xla = be.gram(&x);
+    let m_nat = x.syrk(1.0 / 500.0);
+    let rel = m_xla.dist_fro(&m_nat) / m_nat.fro_norm();
+    assert!(rel < 1e-5, "rel={rel}");
+}
+
+#[test]
+fn unknown_shape_falls_back_to_native() {
+    let Some(be) = load() else { return };
+    let mut rng = Rng::new(6);
+    // d=33 has no artifact.
+    let x = Mat::gauss(33, 50, &mut rng);
+    let cov = CovOp::dense_from_samples(&x);
+    let q = Mat::random_orthonormal(33, 4, &mut rng);
+    let before = be.stats.borrow().fallback_calls;
+    let v = be.cov_apply(&cov, &q);
+    assert!(v.is_finite());
+    assert!(be.stats.borrow().fallback_calls > before);
+    let v_nat = NativeBackend.cov_apply(&cov, &q);
+    assert!(v.dist_fro(&v_nat) < 1e-12); // fallback is exact native
+}
+
+#[test]
+fn sdot_end_to_end_with_xla_backend() {
+    // Full Algorithm-1 run with the XLA backend in the per-node hot path.
+    let Some(be) = load() else { return };
+    use dpsa::algorithms::sdot::{run_sdot_with_backend, SdotConfig};
+    use dpsa::algorithms::SampleSetting;
+    use dpsa::consensus::schedule::Schedule;
+    use dpsa::data::spectrum::Spectrum;
+    use dpsa::data::synthetic::SyntheticDataset;
+    use dpsa::graph::Graph;
+    use dpsa::network::sim::SyncNetwork;
+
+    let mut rng = Rng::new(7);
+    let spec = Spectrum::with_gap(20, 5, 0.5);
+    let ds = SyntheticDataset::full(&spec, 500, 6, &mut rng);
+    let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+    let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+    let mut net = SyncNetwork::new(g);
+    let cfg = SdotConfig::new(Schedule::fixed(50), 40);
+    let (q, trace) = run_sdot_with_backend(&mut net, &setting, &cfg, &be);
+    assert!(trace.final_error() < 1e-4, "err={}", trace.final_error());
+    for qi in &q {
+        assert!(qi.is_finite());
+    }
+    let stats = be.stats.borrow();
+    assert!(stats.xla_calls > 0, "XLA path never used");
+}

@@ -1,0 +1,141 @@
+//! End-to-end S-DOT / SA-DOT behaviour against the paper's claims.
+
+use dpsa::algorithms::sdot::{run_sadot, run_sdot, run_sdot_exact_consensus, SdotConfig};
+use dpsa::algorithms::SampleSetting;
+use dpsa::consensus::schedule::Schedule;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::graph::Graph;
+use dpsa::metrics::subspace::subspace_error;
+use dpsa::network::sim::SyncNetwork;
+use dpsa::util::rng::Rng;
+
+fn setting(seed: u64, gap: f64, r: usize, nodes: usize) -> (SampleSetting, Rng) {
+    let mut rng = Rng::new(seed);
+    let spec = Spectrum::with_gap(20, r, gap);
+    let ds = SyntheticDataset::full(&spec, 500, nodes, &mut rng);
+    let s = SampleSetting::from_parts(&ds.parts, r, &mut rng);
+    (s, rng)
+}
+
+#[test]
+fn theorem1_linear_rate_envelope() {
+    // ‖QQᵀ − Q_iQ_iᵀ‖ ≤ c·Δ^t + c'·ε^t: on a log scale the error must fall
+    // at least geometrically with rate ≈ Δ_r until the consensus floor.
+    let gap = 0.5;
+    let (s, mut rng) = setting(1, gap, 5, 10);
+    let g = Graph::erdos_renyi(10, 0.5, &mut rng);
+    let mut net = SyncNetwork::new(g);
+    let (_, trace) = run_sdot(&mut net, &s, &SdotConfig::new(Schedule::fixed(80), 40));
+    for w in trace.records.windows(6) {
+        let (e0, e1) = (w[0].error, w[5].error);
+        if e1 < 1e-9 {
+            break; // at the consensus/f64 floor
+        }
+        let ratio = e1 / e0;
+        // Squared-sine error contracts like Δ^{2t}; allow generous slack.
+        assert!(ratio < gap.powi(5) * 50.0, "t={} ratio={ratio}", w[0].outer);
+    }
+}
+
+#[test]
+fn more_consensus_iterations_lower_floor() {
+    let (s, mut rng) = setting(2, 0.7, 5, 10);
+    let g = Graph::erdos_renyi(10, 0.3, &mut rng);
+    let mut floors = Vec::new();
+    for tc in [5usize, 15, 60] {
+        let mut net = SyncNetwork::new(g.clone());
+        let (_, tr) = run_sdot(&mut net, &s, &SdotConfig::new(Schedule::fixed(tc), 60));
+        floors.push(tr.final_error());
+    }
+    assert!(
+        floors[0] > floors[1] && floors[1] > floors[2],
+        "floors={floors:?}"
+    );
+}
+
+#[test]
+fn sadot_matches_sdot_accuracy_with_fewer_messages() {
+    let (s, mut rng) = setting(3, 0.7, 5, 20);
+    let g = Graph::erdos_renyi(20, 0.25, &mut rng);
+
+    let mut net1 = SyncNetwork::new(g.clone());
+    let (_, tr_s) = run_sdot(&mut net1, &s, &SdotConfig::new(Schedule::fixed(50), 100));
+
+    let mut net2 = SyncNetwork::new(g);
+    let (_, tr_a) = run_sadot(
+        &mut net2,
+        &s,
+        &SdotConfig::new(Schedule::adaptive(2.0, 1, 50), 100),
+    );
+
+    assert!(tr_a.final_p2p() < 0.97 * tr_s.final_p2p());
+    // Accuracy comparable (both on the consensus floor).
+    assert!(tr_a.final_error() < tr_s.final_error() * 100.0 + 1e-9);
+}
+
+#[test]
+fn tracks_centralized_oi_iterate_by_iterate() {
+    // Lemma 1: with enough consensus, per-iteration distance to the OI
+    // iterate stays bounded (and small).
+    let (s, mut rng) = setting(4, 0.6, 4, 8);
+    let g = Graph::erdos_renyi(8, 0.5, &mut rng);
+    let t_o = 20;
+    let mut net = SyncNetwork::new(g);
+    let mut cfg = SdotConfig::new(Schedule::fixed(150), t_o);
+    cfg.record_every = 1;
+    let (q, _) = run_sdot(&mut net, &s, &cfg);
+    let (qc, _) = run_sdot_exact_consensus(&s, t_o);
+    for qi in &q {
+        let d = subspace_error(&qc, qi);
+        assert!(d < 1e-8, "distributed iterate drifted: {d}");
+    }
+}
+
+#[test]
+fn invariant_to_node_count_with_balanced_split() {
+    // Same pooled data split over different node counts ⇒ same subspace
+    // ("scaling factors do not affect the eigenspace", Section III-A).
+    let mut rng = Rng::new(5);
+    let spec = Spectrum::with_gap(20, 4, 0.5);
+    let ds = SyntheticDataset::full(&spec, 1200, 1, &mut rng);
+    let x = &ds.parts[0];
+
+    let mut finals = Vec::new();
+    for nodes in [4usize, 8] {
+        let parts = dpsa::data::partition::partition_samples(x, nodes);
+        let mut rng2 = Rng::new(6);
+        let s = SampleSetting::from_parts(&parts, 4, &mut rng2);
+        let g = Graph::complete(nodes);
+        let mut net = SyncNetwork::new(g);
+        let (q, _) = run_sdot(&mut net, &s, &SdotConfig::new(Schedule::fixed(60), 60));
+        finals.push(q[0].clone());
+    }
+    let d = subspace_error(&finals[0], &finals[1]);
+    assert!(d < 1e-6, "split-dependent result: {d}");
+}
+
+#[test]
+fn handles_r_equal_one() {
+    let (s, mut rng) = setting(7, 0.5, 1, 6);
+    let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+    let mut net = SyncNetwork::new(g);
+    let (q, tr) = run_sdot(&mut net, &s, &SdotConfig::new(Schedule::fixed(50), 50));
+    assert_eq!(q[0].cols, 1);
+    assert!(tr.final_error() < 1e-8, "err={}", tr.final_error());
+}
+
+#[test]
+fn star_and_ring_converge_slower_than_er() {
+    let (s, mut rng) = setting(8, 0.7, 5, 20);
+    let ger = Graph::erdos_renyi(20, 0.5, &mut rng);
+    let mut finals = Vec::new();
+    for g in [ger, Graph::ring(20), Graph::star(20)] {
+        let mut net = SyncNetwork::new(g);
+        let (_, tr) = run_sdot(&mut net, &s, &SdotConfig::new(Schedule::fixed(30), 50));
+        finals.push(tr.final_error());
+    }
+    // Fig. 3: ring/star error floors sit above a well-connected ER graph.
+    assert!(finals[0] < finals[1], "er={} ring={}", finals[0], finals[1]);
+    assert!(finals[0] < finals[2], "er={} star={}", finals[0], finals[2]);
+}
