@@ -1,10 +1,16 @@
 //! L3 hot-path microbenchmarks (§Perf): the per-iteration costs that
 //! bound end-to-end throughput — `M_i Q` (native vs XLA), QR, one
-//! consensus round, and a full Table-I cell.
+//! consensus round, and a full Table-I cell — plus the zero-allocation
+//! proof: a counting global allocator measures heap allocations across
+//! steady-state S-DOT outer iterations (must be 0 after warm-up).
+//!
+//! Results are also written as JSON (per-kernel ns + Table-I-cell wall
+//! time + allocation counts) to `BENCH_hotpath.json` (override with
+//! `BENCH_JSON_OUT`) so CI can track the perf trajectory as an artifact.
 //!
 //! Run: `cargo bench --bench bench_hotpath`
 
-use dpsa::algorithms::sdot::{run_sdot, SdotConfig};
+use dpsa::algorithms::sdot::{run_sdot, SdotConfig, SdotRun};
 use dpsa::algorithms::SampleSetting;
 use dpsa::consensus::schedule::Schedule;
 use dpsa::data::spectrum::Spectrum;
@@ -13,12 +19,81 @@ use dpsa::graph::Graph;
 use dpsa::linalg::{CovOp, Mat};
 use dpsa::network::sim::SyncNetwork;
 use dpsa::runtime::{Backend, NativeBackend, XlaBackend};
-use dpsa::util::bench::time_it;
+use dpsa::util::bench::{time_it, Timing};
 use dpsa::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// ---- counting allocator (bench-only global) ---------------------------
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_snapshot() -> (u64, u64) {
+    (ALLOCS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+// ---- JSON report ------------------------------------------------------
+
+struct Report {
+    entries: Vec<(String, f64)>,
+}
+
+impl Report {
+    fn push(&mut self, key: &str, value: f64) {
+        self.entries.push((key.to_string(), value));
+    }
+
+    fn push_timing(&mut self, key: &str, t: &Timing) {
+        self.push(key, t.median.as_nanos() as f64);
+    }
+
+    fn save(&self) {
+        let path = std::env::var("BENCH_JSON_OUT")
+            .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+        let mut body = String::from("{\n");
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            let sep = if i + 1 == self.entries.len() { "" } else { "," };
+            body.push_str(&format!("  \"{k}\": {v}{sep}\n"));
+        }
+        body.push_str("}\n");
+        match std::fs::write(&path, body) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
+    }
+}
 
 fn main() {
     println!("== L3 hot-path microbenchmarks ==\n");
     let mut rng = Rng::new(42);
+    let mut report = Report { entries: Vec::new() };
 
     // --- cov_apply: dense d=20 and d=784, native vs XLA -----------------
     for &(d, r, n_samp) in &[(20usize, 5usize, 500usize), (784, 5, 500)] {
@@ -30,6 +105,17 @@ fn main() {
             std::hint::black_box(native.cov_apply(&cov_dense, &q));
         });
         println!("cov_apply native  d={d:<4} r={r}: {t}");
+        report.push_timing(&format!("cov_apply_native_d{d}_ns"), &t);
+
+        // Allocation-free variant through the workspace path.
+        let mut out = Mat::zeros(d, r);
+        let mut tmp = Mat::zeros(0, 0);
+        let t = time_it(3, 21, || {
+            native.cov_apply_into(&cov_dense, &q, &mut out, &mut tmp);
+            std::hint::black_box(&out);
+        });
+        println!("cov_apply into    d={d:<4} r={r}: {t}");
+        report.push_timing(&format!("cov_apply_into_d{d}_ns"), &t);
 
         let dir = XlaBackend::default_dir();
         if XlaBackend::available(&dir) {
@@ -50,6 +136,7 @@ fn main() {
             std::hint::black_box(native.cov_apply(&cov_lr, &q));
         });
         println!("cov_apply samples d={d:<4} r={r}: {t}\n");
+        report.push_timing(&format!("cov_apply_samples_d{d}_ns"), &t);
     }
 
     // --- QR --------------------------------------------------------------
@@ -58,33 +145,91 @@ fn main() {
         let t = time_it(3, 21, || {
             std::hint::black_box(dpsa::linalg::qr::orthonormalize(&v));
         });
-        println!("householder_qr    d={d:<4} r={r}: {t}");
-    }
-    println!();
+        println!("householder_qr       d={d:<4} r={r}: {t}");
+        report.push_timing(&format!("qr_d{d}_ns"), &t);
 
-    // --- one consensus round, N=20 ---------------------------------------
-    for &(d, r) in &[(20usize, 5usize), (784, 5), (2914, 7)] {
-        let g = Graph::erdos_renyi(20, 0.25, &mut rng);
-        let mut net = SyncNetwork::new(g);
-        let mut z: Vec<Mat> = (0..20).map(|_| Mat::gauss(d, r, &mut rng)).collect();
+        let mut q = Mat::zeros(d, r);
+        let mut ws = dpsa::linalg::QrScratch::new();
         let t = time_it(3, 21, || {
-            net.consensus(&mut z, 1);
+            dpsa::linalg::qr::orthonormalize_into(&v, &mut q, &mut ws);
+            std::hint::black_box(&q);
         });
-        println!("consensus round   d={d:<4} r={r} N=20: {t}");
+        println!("householder_qr into  d={d:<4} r={r}: {t}");
+        report.push_timing(&format!("qr_into_d{d}_ns"), &t);
     }
     println!();
 
-    // --- full Table-I cell (N=20, T_o=200, T_c=50, d=20) -----------------
+    // --- one consensus round, N=20, threads ∈ {1, 4} ---------------------
+    for &(d, r) in &[(20usize, 5usize), (784, 5), (2914, 7)] {
+        for &threads in &[1usize, 4] {
+            let g = Graph::erdos_renyi(20, 0.25, &mut rng);
+            let mut net = SyncNetwork::with_threads(g, threads);
+            let mut z: Vec<Mat> = (0..20).map(|_| Mat::gauss(d, r, &mut rng)).collect();
+            let t = time_it(3, 21, || {
+                net.consensus(&mut z, 1);
+            });
+            println!("consensus round   d={d:<4} r={r} N=20 threads={threads}: {t}");
+            report.push_timing(&format!("consensus_d{d}_t{threads}_ns"), &t);
+        }
+    }
+    println!();
+
+    // --- zero-allocation proof: steady-state S-DOT outer iterations -----
     let spec = Spectrum::with_gap(20, 5, 0.7);
     let ds = SyntheticDataset::full(&spec, 500, 20, &mut rng);
     let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
     let g = Graph::erdos_renyi(20, 0.25, &mut rng);
-    let t = time_it(1, 5, || {
-        let mut net = SyncNetwork::new(g.clone());
-        let mut cfg = SdotConfig::new(Schedule::fixed(50), 200);
-        cfg.record_every = 200;
-        std::hint::black_box(run_sdot(&mut net, &setting, &cfg));
-    });
-    println!("full Table-I cell (N=20, T_o=200, T_c=50): {t}");
-    println!("  (§Perf target: < 2 s)");
+    {
+        let mut net = SyncNetwork::with_threads(g.clone(), 1);
+        let mut cfg = SdotConfig::new(Schedule::fixed(50), 1_000_000);
+        cfg.record_every = usize::MAX; // no trace allocation in the loop
+        let backend = NativeBackend;
+        let mut run = SdotRun::new(&mut net, &setting, &cfg, &backend);
+        for _ in 0..3 {
+            run.step(); // warm-up: shapes the persistent workspace
+        }
+        let (a0, b0) = alloc_snapshot();
+        let steps = 5;
+        for _ in 0..steps {
+            run.step();
+        }
+        let (a1, b1) = alloc_snapshot();
+        let (q, _) = run.finish();
+        std::hint::black_box(&q);
+        println!(
+            "steady-state S-DOT outer iterations (x{steps}): {} allocations, {} bytes",
+            a1 - a0,
+            b1 - b0
+        );
+        println!("  (§Perf target: 0 — every buffer reused after warm-up)");
+        report.push("sdot_steady_state_allocs_per_5_iters", (a1 - a0) as f64);
+        report.push("sdot_steady_state_alloc_bytes_per_5_iters", (b1 - b0) as f64);
+    }
+    println!();
+
+    // --- full Table-I cell (N=20, T_o=200, T_c=50, d=20) -----------------
+    let mut serial_secs = 0.0f64;
+    for &threads in &[1usize, 4] {
+        let t = time_it(1, 5, || {
+            let mut net = SyncNetwork::with_threads(g.clone(), threads);
+            let mut cfg = SdotConfig::new(Schedule::fixed(50), 200);
+            cfg.record_every = 200;
+            std::hint::black_box(run_sdot(&mut net, &setting, &cfg));
+        });
+        let secs = t.median.as_secs_f64();
+        if threads == 1 {
+            serial_secs = secs;
+            println!("full Table-I cell (N=20, T_o=200, T_c=50) threads=1: {t}");
+        } else {
+            println!(
+                "full Table-I cell (N=20, T_o=200, T_c=50) threads={threads}: {t}  \
+                 ({:.2}x vs threads=1)",
+                serial_secs / secs.max(1e-12)
+            );
+        }
+        report.push(&format!("table1_cell_t{threads}_ns"), t.median.as_nanos() as f64);
+    }
+    println!("  (§Perf target: < 2 s; acceptance: threads=4 ≥ 2x the serial seed)");
+
+    report.save();
 }

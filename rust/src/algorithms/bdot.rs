@@ -27,7 +27,7 @@
 //! column phase is local and it behaves like a feature-sharded S-DOT.
 
 use crate::graph::Graph;
-use crate::linalg::chol::{cholesky, solve_r_right};
+use crate::linalg::chol::{cholesky_into, solve_r_right_into};
 use crate::linalg::Mat;
 use crate::metrics::subspace::subspace_error;
 use crate::metrics::trace::{IterRecord, RunTrace};
@@ -130,35 +130,54 @@ pub fn run_bdot(setting: &BlockSetting, cfg: &BdotConfig) -> BdotRun {
     let mut trace = RunTrace::new("B-DOT");
     let mut total = 0usize;
 
+    // Persistent workspace, shaped once and reused every outer iteration
+    // (padding entries for degenerate < 2-node groups are re-zeroed each
+    // pass, matching the seed's freshly-built buffers).
+    let mut u: Vec<Vec<Mat>> = (0..cols)
+        .map(|j| {
+            let n_j = setting.blocks[0][j].cols;
+            (0..col_nets[j].n()).map(|_| Mat::zeros(n_j, r)).collect()
+        })
+        .collect();
+    let mut v: Vec<Vec<Mat>> = (0..rows)
+        .map(|i| {
+            let d_i = setting.blocks[i][0].rows;
+            (0..row_nets[i].n()).map(|_| Mat::zeros(d_i, r)).collect()
+        })
+        .collect();
+    let mut grams: Vec<Mat> = (0..grid_net.n()).map(|_| Mat::zeros(r, r)).collect();
+    let mut gram_tmp = Mat::zeros(r, r);
+    let mut kbuf = Mat::zeros(r, r);
+    let mut chol_buf = Mat::zeros(r, r);
+    let mut qi_buf = Mat::zeros(0, 0);
+
     for t in 1..=cfg.t_o {
         // ---- phase 1 (column groups): u_j = Σ_i X_ijᵀ Q_i  (n_j × r) ----
-        let mut u: Vec<Vec<Mat>> = (0..cols)
-            .map(|j| (0..rows).map(|i| setting.blocks[i][j].t_matmul(&q[i][j])).collect())
-            .collect();
-        for (j, net) in col_nets.iter_mut().enumerate() {
-            // Pad the group to the network size if rows < 2 (degenerate).
-            while u[j].len() < net.n() {
-                let rows_u = u[j][0].rows;
-                u[j].push(Mat::zeros(rows_u, r));
+        for j in 0..cols {
+            for (i, slot) in u[j].iter_mut().enumerate() {
+                if i < rows {
+                    setting.blocks[i][j].t_matmul_into(&q[i][j], slot);
+                } else {
+                    // Degenerate-group padding node: zero contribution.
+                    slot.fill(0.0);
+                }
             }
-            net.consensus_sum(&mut u[j], cfg.t_col);
+            col_nets[j].consensus_sum(&mut u[j], cfg.t_col);
         }
         total += cfg.t_col;
 
         // ---- phase 2 (row groups): V_i = Σ_j X_ij u_j  (d_i × r) --------
-        let mut v: Vec<Vec<Mat>> = (0..rows)
-            .map(|i| {
-                (0..cols)
-                    .map(|j| setting.blocks[i][j].matmul(&u[j][i.min(u[j].len() - 1)]))
-                    .collect()
-            })
-            .collect();
-        for (i, net) in row_nets.iter_mut().enumerate() {
-            while v[i].len() < net.n() {
-                let rows_v = v[i][0].rows;
-                v[i].push(Mat::zeros(rows_v, r));
+        for i in 0..rows {
+            let upper = u.len(); // == cols
+            for (j, slot) in v[i].iter_mut().enumerate() {
+                if j < upper {
+                    let uj = &u[j];
+                    setting.blocks[i][j].matmul_into(&uj[i.min(uj.len() - 1)], slot);
+                } else {
+                    slot.fill(0.0);
+                }
             }
-            net.consensus_sum(&mut v[i], cfg.t_row);
+            row_nets[i].consensus_sum(&mut v[i], cfg.t_row);
         }
         total += cfg.t_row;
 
@@ -166,33 +185,36 @@ pub fn run_bdot(setting: &BlockSetting, cfg: &BdotConfig) -> BdotRun {
         // Each grid node (i, j) holds V_i (agreed within the row); the Gram
         // K = Σ_i V_iᵀ V_i is push-summed over the whole grid with each
         // row's contribution split across its C nodes.
-        let mut grams: Vec<Mat> = Vec::with_capacity(rows * cols);
         for i in 0..rows {
-            let gi = v[i][0].t_matmul(&v[i][0]);
-            for _j in 0..cols {
-                grams.push(gi.scale(1.0 / cols as f64));
+            v[i][0].t_matmul_into(&v[i][0], &mut gram_tmp);
+            gram_tmp.scale_inplace(1.0 / cols as f64);
+            for j in 0..cols {
+                grams[i * cols + j].copy_from(&gram_tmp);
             }
         }
-        while grams.len() < grid_net.n() {
-            grams.push(Mat::zeros(r, r));
+        for pad in grams.iter_mut().skip(rows * cols) {
+            pad.reshape_in_place(r, r);
+            pad.fill(0.0);
         }
         grid_net.ratio_consensus_sum(&mut grams, cfg.t_ps);
         total += cfg.t_ps;
         for i in 0..rows {
-            let mut k = grams[i * cols].clone();
+            kbuf.copy_from(&grams[i * cols]);
             for a in 0..r {
                 for b in (a + 1)..r {
-                    let m = 0.5 * (k.get(a, b) + k.get(b, a));
-                    k.set(a, b, m);
-                    k.set(b, a, m);
+                    let m = 0.5 * (kbuf.get(a, b) + kbuf.get(b, a));
+                    kbuf.set(a, b, m);
+                    kbuf.set(b, a, m);
                 }
             }
-            let qi = match cholesky(&k) {
-                Some(rr) => solve_r_right(&v[i][0], &rr),
-                None => v[i][0].scale(1.0 / v[i][0].fro_norm().max(1e-300)),
-            };
+            if cholesky_into(&kbuf, &mut chol_buf) {
+                solve_r_right_into(&v[i][0], &chol_buf, &mut qi_buf);
+            } else {
+                qi_buf.copy_from(&v[i][0]);
+                qi_buf.scale_inplace(1.0 / v[i][0].fro_norm().max(1e-300));
+            }
             for j in 0..cols {
-                q[i][j] = qi.clone();
+                q[i][j].copy_from(&qi_buf);
             }
         }
 

@@ -42,10 +42,22 @@ impl SampleSetting {
     /// `Σ_i M_i Q` — one centralized OI update direction.
     pub fn global_apply(&self, q: &Mat) -> Mat {
         let mut v = Mat::zeros(self.d(), q.cols);
-        for c in &self.covs {
-            v.axpy(1.0, &c.apply(q));
-        }
+        let mut tmp = Mat::zeros(0, 0);
+        let mut tmp2 = Mat::zeros(0, 0);
+        self.global_apply_into(q, &mut v, &mut tmp, &mut tmp2);
         v
+    }
+
+    /// Allocation-free `out = Σ_i M_i Q` into caller-provided buffers
+    /// (`tmp`/`tmp2` are per-term scratch). Arithmetic identical to
+    /// [`SampleSetting::global_apply`], which delegates here.
+    pub fn global_apply_into(&self, q: &Mat, out: &mut Mat, tmp: &mut Mat, tmp2: &mut Mat) {
+        out.reshape_in_place(self.d(), q.cols);
+        out.fill(0.0);
+        for c in &self.covs {
+            c.apply_into(q, tmp, tmp2);
+            out.axpy(1.0, tmp);
+        }
     }
 }
 

@@ -16,12 +16,14 @@
 
 use super::common::SampleSetting;
 use crate::consensus::mixing::slem;
-use crate::linalg::qr::householder_qr;
-use crate::linalg::svd::sign_adjust;
+use crate::linalg::qr::householder_qr_into;
+use crate::linalg::svd::sign_adjust_into;
 use crate::linalg::Mat;
 use crate::metrics::subspace::average_error;
 use crate::metrics::trace::{IterRecord, RunTrace};
 use crate::network::sim::SyncNetwork;
+use crate::runtime::pool::DisjointSlice;
+use crate::runtime::workspace::{node_scratch, NodeScratch};
 
 #[derive(Clone, Copy, Debug)]
 pub struct DeepcaConfig {
@@ -40,22 +42,46 @@ impl DeepcaConfig {
 /// Chebyshev-accelerated consensus (FastMix). One round costs one neighbor
 /// exchange, like plain consensus, but the two-term recursion contracts at
 /// `(1−√(1−σ²))/(1+√(1−σ²))` per round instead of σ.
+///
+/// The allocating entry point delegates to [`fastmix_ws`], which reuses
+/// caller-provided `prev`/`wx` buffers (the zero-allocation path);
+/// `run_deepca` calls the workspace variant directly, so this wrapper
+/// only backs the FastMix unit test.
+#[cfg(test)]
 fn fastmix(net: &mut SyncNetwork, z: &mut Vec<Mat>, rounds: usize, eta: f64) {
+    let mut prev = vec![Mat::zeros(0, 0); z.len()];
+    let mut wx = vec![Mat::zeros(0, 0); z.len()];
+    fastmix_ws(net, z, rounds, eta, &mut prev, &mut wx);
+}
+
+fn fastmix_ws(
+    net: &mut SyncNetwork,
+    z: &mut Vec<Mat>,
+    rounds: usize,
+    eta: f64,
+    prev: &mut [Mat],
+    wx: &mut Vec<Mat>,
+) {
     if rounds == 0 {
         return;
     }
-    let mut prev = z.clone();
+    for (p, zi) in prev.iter_mut().zip(z.iter()) {
+        p.copy_from(zi);
+    }
     // First round: plain mixing.
     net.consensus(z, 1);
     for _ in 1..rounds {
         // x^{k+1} = (1+η) W x^k − η x^{k-1}
-        let mut wx = z.clone();
-        net.consensus(&mut wx, 1);
+        for (w, zi) in wx.iter_mut().zip(z.iter()) {
+            w.copy_from(zi);
+        }
+        net.consensus(wx, 1);
         for i in 0..z.len() {
-            let mut nxt = wx[i].scale(1.0 + eta);
-            nxt.axpy(-eta, &prev[i]);
-            prev[i] = z[i].clone();
-            z[i] = nxt;
+            wx[i].scale_inplace(1.0 + eta);
+            wx[i].axpy(-eta, &prev[i]);
+            // prev ← x^k, z ← x^{k+1}; old z buffer becomes next wx.
+            std::mem::swap(&mut prev[i], &mut z[i]);
+            std::mem::swap(&mut z[i], &mut wx[i]);
         }
     }
 }
@@ -74,16 +100,32 @@ pub fn run_deepca(
     let mut prev_grad: Vec<Mat> = (0..n).map(|i| setting.covs[i].apply(&q[i])).collect();
     // Tracker initialized at the local gradient, then mixed once.
     let mut s: Vec<Mat> = prev_grad.clone();
-    fastmix(net, &mut s, cfg.mix_rounds, eta);
+    // Persistent workspace: FastMix double buffers, gradients, per-node
+    // QR/sign scratch.
+    let mut fm_prev = vec![Mat::zeros(0, 0); n];
+    let mut fm_wx = vec![Mat::zeros(0, 0); n];
+    let mut grads = vec![Mat::zeros(0, 0); n];
+    let mut scratch: Vec<NodeScratch> = node_scratch(n);
+    fastmix_ws(net, &mut s, cfg.mix_rounds, eta, &mut fm_prev, &mut fm_wx);
 
     let mut trace = RunTrace::new("DeEPCA");
     let mut total = cfg.mix_rounds;
 
     for t in 1..=cfg.t_o {
-        // Orthonormalize the tracker with sign consistency.
-        for i in 0..n {
-            let (qq, _) = householder_qr(&s[i]);
-            q[i] = sign_adjust(&qq, &q[i]);
+        // Orthonormalize the tracker with sign consistency, node-parallel.
+        {
+            let qs = DisjointSlice::new(q.as_mut_slice());
+            let scr = DisjointSlice::new(scratch.as_mut_slice());
+            let sref = &s;
+            net.pool().run_chunks(n, &|lo, hi| {
+                for i in lo..hi {
+                    // SAFETY: index i belongs to exactly one chunk.
+                    let (qi, sc) = unsafe { (qs.get_mut(i), scr.get_mut(i)) };
+                    householder_qr_into(&sref[i], &mut sc.t0, None, &mut sc.qr);
+                    sign_adjust_into(&sc.t0, qi, &mut sc.t1, &mut sc.t2);
+                    std::mem::swap(qi, &mut sc.t1);
+                }
+            });
         }
         if t % cfg.record_every == 0 || t == cfg.t_o {
             trace.push(IterRecord {
@@ -96,14 +138,26 @@ pub fn run_deepca(
         if t == cfg.t_o {
             break;
         }
-        // Gradient-tracking update.
-        let grads: Vec<Mat> = (0..n).map(|i| setting.covs[i].apply(&q[i])).collect();
+        // Gradient-tracking update, node-parallel.
+        {
+            let gs = DisjointSlice::new(grads.as_mut_slice());
+            let scr = DisjointSlice::new(scratch.as_mut_slice());
+            let qref = &q;
+            let covs = &setting.covs;
+            net.pool().run_chunks(n, &|lo, hi| {
+                for i in lo..hi {
+                    // SAFETY: index i belongs to exactly one chunk.
+                    let (g, sc) = unsafe { (gs.get_mut(i), scr.get_mut(i)) };
+                    covs[i].apply_into(&qref[i], g, &mut sc.t0);
+                }
+            });
+        }
         for i in 0..n {
             s[i].axpy(1.0, &grads[i]);
             s[i].axpy(-1.0, &prev_grad[i]);
+            std::mem::swap(&mut prev_grad[i], &mut grads[i]);
         }
-        prev_grad = grads;
-        fastmix(net, &mut s, cfg.mix_rounds, eta);
+        fastmix_ws(net, &mut s, cfg.mix_rounds, eta, &mut fm_prev, &mut fm_wx);
         total += cfg.mix_rounds;
     }
     (q, trace)

@@ -12,11 +12,12 @@
 //! With a constant step it converges to a neighborhood of the solution.
 
 use super::common::SampleSetting;
-use crate::linalg::qr::orthonormalize;
 use crate::linalg::Mat;
 use crate::metrics::subspace::average_error;
 use crate::metrics::trace::{IterRecord, RunTrace};
 use crate::network::sim::SyncNetwork;
+use crate::runtime::pool::DisjointSlice;
+use crate::runtime::workspace::{node_scratch, NodeScratch};
 
 #[derive(Clone, Copy, Debug)]
 pub struct DpgdConfig {
@@ -40,14 +41,42 @@ pub fn run_dpgd(
     let mut q: Vec<Mat> = vec![setting.q_init.clone(); n];
     let mut trace = RunTrace::new("DPGD");
 
+    // Persistent per-node buffers (gradients + QR scratch).
+    let mut grads = vec![Mat::zeros(0, 0); n];
+    let mut scratch: Vec<NodeScratch> = node_scratch(n);
+
     for t in 1..=cfg.iters {
-        let grads: Vec<Mat> = (0..n)
-            .map(|i| setting.covs[i].apply(&q[i]).scale(2.0))
-            .collect();
+        // ∇f_i(Q_i) = 2 M_i Q_i, node-parallel.
+        {
+            let gs = DisjointSlice::new(grads.as_mut_slice());
+            let scr = DisjointSlice::new(scratch.as_mut_slice());
+            let qref = &q;
+            let covs = &setting.covs;
+            net.pool().run_chunks(n, &|lo, hi| {
+                for i in lo..hi {
+                    // SAFETY: index i belongs to exactly one chunk.
+                    let (g, s) = unsafe { (gs.get_mut(i), scr.get_mut(i)) };
+                    covs[i].apply_into(&qref[i], g, &mut s.t0);
+                    g.scale_inplace(2.0);
+                }
+            });
+        }
         net.consensus(&mut q, 1);
-        for i in 0..n {
-            q[i].axpy(cfg.alpha, &grads[i]);
-            q[i] = orthonormalize(&q[i]);
+        // Gradient step + Stiefel projection (QR), node-parallel.
+        {
+            let qs = DisjointSlice::new(q.as_mut_slice());
+            let scr = DisjointSlice::new(scratch.as_mut_slice());
+            let gref = &grads;
+            let alpha = cfg.alpha;
+            net.pool().run_chunks(n, &|lo, hi| {
+                for i in lo..hi {
+                    // SAFETY: index i belongs to exactly one chunk.
+                    let (qi, s) = unsafe { (qs.get_mut(i), scr.get_mut(i)) };
+                    qi.axpy(alpha, &gref[i]);
+                    crate::linalg::qr::orthonormalize_into(qi, &mut s.t1, &mut s.qr);
+                    std::mem::swap(qi, &mut s.t1);
+                }
+            });
         }
         if t % cfg.record_every == 0 || t == cfg.iters {
             trace.push(IterRecord {

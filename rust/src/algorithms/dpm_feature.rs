@@ -42,62 +42,70 @@ pub fn run_dpm_feature(
     let mut lambdas: Vec<f64> = Vec::new(); // agreed deflation weights
     let mut total = 0usize;
     let mut outer = 0usize;
+    // Persistent workspace: working vector slices (d_i×1), phase-A sums,
+    // local `M v` slices, and the scalar consensus payloads.
+    let mut v: Vec<Mat> = (0..n).map(|i| Mat::zeros(setting.parts[i].rows, 1)).collect();
+    let mut u: Vec<Mat> = vec![Mat::zeros(0, 0); n];
+    let mut w: Vec<Mat> = vec![Mat::zeros(0, 0); n];
+    let mut scal: Vec<Mat> = vec![Mat::zeros(0, 0); n];
+    let mut norms: Vec<Mat> = vec![Mat::zeros(1, 1); n];
 
     for j in 0..r {
         // Working vector slice at each node.
-        let mut v: Vec<Vec<f64>> = (0..n).map(|i| q[i].col(j)).collect();
+        for i in 0..n {
+            let di = setting.parts[i].rows;
+            v[i].reshape_in_place(di, 1);
+            for row in 0..di {
+                v[i].data[row] = q[i].get(row, j);
+            }
+        }
         for _ in 0..cfg.iters_per_vec {
             // Phase A: consensus on u = Σ X_iᵀ v_i (n×1 messages).
-            let mut u: Vec<Mat> = (0..n)
-                .map(|i| {
-                    let vm = Mat::from_vec(v[i].len(), 1, v[i].clone());
-                    setting.parts[i].t_matmul(&vm)
-                })
-                .collect();
+            for i in 0..n {
+                setting.parts[i].t_matmul_into(&v[i], &mut u[i]);
+            }
             net.consensus_sum(&mut u, cfg.t_c);
             total += cfg.t_c;
 
             // Local slice of M v.
-            let mut w: Vec<Vec<f64>> =
-                (0..n).map(|i| setting.parts[i].matmul(&u[i]).col(0)).collect();
+            for i in 0..n {
+                setting.parts[i].matmul_into(&u[i], &mut w[i]);
+            }
 
             // Phase B: network scalars — deflation dots q_kᵀ v (k<j) and the
             // squared norms of (deflated) w. Packed into one (j+1)×1 message.
-            let mut scal: Vec<Mat> = (0..n)
-                .map(|i| {
-                    let mut vals = Vec::with_capacity(j + 1);
-                    for k in 0..j {
-                        vals.push(dotv(&q[i].col(k), &v[i]));
-                    }
-                    vals.push(0.0); // placeholder for ‖w‖² after deflation
-                    Mat::from_vec(j + 1, 1, vals)
-                })
-                .collect();
+            for i in 0..n {
+                scal[i].reshape_in_place(j + 1, 1);
+                for k in 0..j {
+                    scal[i].data[k] = q[i].col_dot(k, &v[i].data);
+                }
+                scal[i].data[j] = 0.0; // placeholder for ‖w‖² after deflation
+            }
             // First consensus to agree on the deflation dots.
             net.consensus_sum(&mut scal, cfg.t_c);
             total += cfg.t_c;
             for i in 0..n {
                 for k in 0..j {
                     let dot = scal[i].get(k, 0);
-                    let qk = q[i].col(k);
-                    for (wi, qki) in w[i].iter_mut().zip(qk.iter()) {
-                        *wi -= lambdas[k] * dot * qki;
+                    for (row, wi) in w[i].data.iter_mut().enumerate() {
+                        *wi -= lambdas[k] * dot * q[i].get(row, k);
                     }
                 }
             }
             // Agree on the global norm of the deflated w.
-            let mut norms: Vec<Mat> = (0..n)
-                .map(|i| Mat::from_vec(1, 1, vec![w[i].iter().map(|x| x * x).sum()]))
-                .collect();
+            for i in 0..n {
+                norms[i].reshape_in_place(1, 1);
+                norms[i].data[0] = w[i].data.iter().map(|x| x * x).sum();
+            }
             net.consensus_sum(&mut norms, cfg.t_c);
             total += cfg.t_c;
             for i in 0..n {
                 let nn = norms[i].get(0, 0).max(1e-300).sqrt();
-                for x in w[i].iter_mut() {
+                for x in w[i].data.iter_mut() {
                     *x /= nn;
                 }
-                q[i].set_col(j, &w[i]);
-                v[i] = w[i].clone();
+                q[i].set_col(j, &w[i].data);
+                v[i].copy_from(&w[i]);
             }
             outer += 1;
             if outer % cfg.record_every == 0 {
@@ -114,22 +122,15 @@ pub fn run_dpm_feature(
         }
         // λ_j = ‖Xᵀ v‖² — computable from the last phase-A consensus result:
         // re-run one phase-A to get a clean estimate.
-        let mut u: Vec<Mat> = (0..n)
-            .map(|i| {
-                let vm = Mat::from_vec(v[i].len(), 1, v[i].clone());
-                setting.parts[i].t_matmul(&vm)
-            })
-            .collect();
+        for i in 0..n {
+            setting.parts[i].t_matmul_into(&v[i], &mut u[i]);
+        }
         net.consensus_sum(&mut u, cfg.t_c);
         total += cfg.t_c;
         let lam = u[0].data.iter().map(|x| x * x).sum::<f64>();
         lambdas.push(lam);
     }
     (q, trace)
-}
-
-fn dotv(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b.iter()).map(|(x, y)| x * y).sum()
 }
 
 #[cfg(test)]

@@ -16,6 +16,8 @@ use crate::linalg::Mat;
 use crate::metrics::subspace::average_error;
 use crate::metrics::trace::{IterRecord, RunTrace};
 use crate::network::sim::SyncNetwork;
+use crate::runtime::pool::DisjointSlice;
+use crate::runtime::workspace::{node_scratch, NodeScratch};
 
 #[derive(Clone, Copy, Debug)]
 pub struct DsaConfig {
@@ -31,18 +33,6 @@ impl DsaConfig {
     }
 }
 
-/// Upper-triangular (incl. diagonal) part of a square matrix.
-fn upper_triangular(m: &Mat) -> Mat {
-    let n = m.rows;
-    let mut out = Mat::zeros(n, n);
-    for i in 0..n {
-        for j in i..n {
-            out.set(i, j, m.get(i, j));
-        }
-    }
-    out
-}
-
 pub fn run_dsa(
     net: &mut SyncNetwork,
     setting: &SampleSetting,
@@ -51,19 +41,37 @@ pub fn run_dsa(
     let n = net.n();
     let mut q: Vec<Mat> = vec![setting.q_init.clone(); n];
     let mut trace = RunTrace::new("DSA");
+    // Persistent per-node buffers: gradients + scratch (t0 = M_i Q_i,
+    // t1 = Q_iᵀ M_i Q_i / its UT part, t2 = Q_i · UT(·)).
+    let mut grads = vec![Mat::zeros(0, 0); n];
+    let mut scratch: Vec<NodeScratch> = node_scratch(n);
 
     for t in 1..=cfg.iters {
-        // Sanger gradient at each node (computed on the pre-mix iterate).
-        let grads: Vec<Mat> = (0..n)
-            .map(|i| {
-                let mq = setting.covs[i].apply(&q[i]); // M_i Q_i
-                let qtmq = q[i].t_matmul(&mq); // Q_iᵀ M_i Q_i
-                let ut = upper_triangular(&qtmq);
-                let mut g = mq;
-                g.axpy(-1.0, &q[i].matmul(&ut));
-                g
-            })
-            .collect();
+        // Sanger gradient at each node (computed on the pre-mix iterate),
+        // node-parallel.
+        {
+            let gs = DisjointSlice::new(grads.as_mut_slice());
+            let scr = DisjointSlice::new(scratch.as_mut_slice());
+            let qref = &q;
+            let covs = &setting.covs;
+            net.pool().run_chunks(n, &|lo, hi| {
+                for i in lo..hi {
+                    // SAFETY: index i belongs to exactly one chunk.
+                    let (g, s) = unsafe { (gs.get_mut(i), scr.get_mut(i)) };
+                    covs[i].apply_into(&qref[i], g, &mut s.t0); // M_i Q_i
+                    qref[i].t_matmul_into(g, &mut s.t1); // Q_iᵀ M_i Q_i
+                    // Keep only the upper triangle (incl. diagonal).
+                    let rr = s.t1.rows;
+                    for a in 1..rr {
+                        for b in 0..a {
+                            s.t1.set(a, b, 0.0);
+                        }
+                    }
+                    qref[i].matmul_into(&s.t1, &mut s.t2);
+                    g.axpy(-1.0, &s.t2);
+                }
+            });
+        }
         // One consensus (mixing) round on the estimates.
         net.consensus(&mut q, 1);
         // Gradient step.
@@ -132,11 +140,37 @@ mod tests {
         );
     }
 
+    /// Upper-triangular (incl. diagonal) part — reference for the
+    /// in-place masking done inside the gradient kernel.
+    fn upper_triangular(m: &Mat) -> Mat {
+        let n = m.rows;
+        let mut out = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                out.set(i, j, m.get(i, j));
+            }
+        }
+        out
+    }
+
     #[test]
     fn upper_triangular_extraction() {
         let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
         let ut = upper_triangular(&m);
         assert_eq!(ut, Mat::from_rows(&[&[1.0, 2.0], &[0.0, 4.0]]));
+    }
+
+    #[test]
+    fn dsa_threaded_matches_serial_bitwise() {
+        let (s, mut rng) = setting(4);
+        let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+        let mut net1 = SyncNetwork::with_threads(g.clone(), 1);
+        let (q1, _) = run_dsa(&mut net1, &s, &DsaConfig::new(60));
+        let mut net4 = SyncNetwork::with_threads(g, 4);
+        let (q4, _) = run_dsa(&mut net4, &s, &DsaConfig::new(60));
+        for (a, b) in q1.iter().zip(q4.iter()) {
+            assert_eq!(a.data, b.data);
+        }
     }
 
     #[test]

@@ -13,11 +13,12 @@
 //!    orthonormalizing the *stacked* `V` without collating it anywhere.
 
 use crate::data::partition::feature_offsets;
-use crate::linalg::chol::{cholesky, solve_r_right};
+use crate::linalg::chol::{cholesky_into, solve_r_right_into};
 use crate::linalg::{CovOp, Mat};
 use crate::metrics::subspace::subspace_error;
 use crate::metrics::trace::{IterRecord, RunTrace};
 use crate::network::sim::SyncNetwork;
+use crate::runtime::pool::DisjointSlice;
 use crate::util::rng::Rng;
 
 /// A feature-wise distributed PSA instance.
@@ -93,36 +94,82 @@ impl FdotConfig {
 
 /// Distributed QR of the implicitly stacked `V = [V_1; …; V_N]`:
 /// push-sum the r×r Gram, factor locally, solve. Returns per-node Q blocks.
+/// Convenience wrapper over [`distributed_qr_into`].
 pub fn distributed_qr(
     net: &mut SyncNetwork,
     v: &[Mat],
     t_ps: usize,
 ) -> Vec<Mat> {
-    let mut grams: Vec<Mat> = v.iter().map(|vi| vi.t_matmul(vi)).collect();
-    net.ratio_consensus_sum(&mut grams, t_ps);
-    v.iter()
-        .zip(grams.iter())
-        .map(|(vi, k)| {
-            // Symmetrize (consensus noise) and factor.
-            let mut ks = k.clone();
-            for a in 0..ks.rows {
-                for b in (a + 1)..ks.cols {
-                    let m = 0.5 * (ks.get(a, b) + ks.get(b, a));
-                    ks.set(a, b, m);
-                    ks.set(b, a, m);
+    let n = v.len();
+    let mut grams = vec![Mat::zeros(0, 0); n];
+    let mut chol = vec![Mat::zeros(0, 0); n];
+    let mut q = vec![Mat::zeros(0, 0); n];
+    distributed_qr_into(net, v, t_ps, &mut grams, &mut chol, &mut q);
+    q
+}
+
+/// Allocation-free distributed QR into caller-provided per-node buffers
+/// (`grams`, `chol`, `q_out` are reshaped in place). Per-node Gram,
+/// Cholesky and triangular solve fan out across the network's node pool.
+pub fn distributed_qr_into(
+    net: &mut SyncNetwork,
+    v: &[Mat],
+    t_ps: usize,
+    grams: &mut Vec<Mat>,
+    chol: &mut [Mat],
+    q_out: &mut [Mat],
+) {
+    let n = v.len();
+    assert_eq!(grams.len(), n);
+    assert_eq!(chol.len(), n);
+    assert_eq!(q_out.len(), n);
+    // Local Grams `V_iᵀ V_i`, node-parallel.
+    {
+        let gs = DisjointSlice::new(grams.as_mut_slice());
+        net.pool().run_chunks(n, &|lo, hi| {
+            for i in lo..hi {
+                // SAFETY: index i belongs to exactly one chunk.
+                v[i].t_matmul_into(&v[i], unsafe { gs.get_mut(i) });
+            }
+        });
+    }
+    net.ratio_consensus_sum(grams, t_ps);
+    // Symmetrize (consensus noise), factor and solve, node-parallel.
+    {
+        let gs = DisjointSlice::new(grams.as_mut_slice());
+        let cs = DisjointSlice::new(chol);
+        let qs = DisjointSlice::new(q_out);
+        net.pool().run_chunks(n, &|lo, hi| {
+            for i in lo..hi {
+                // SAFETY: index i belongs to exactly one chunk.
+                let (ks, ci, qi) = unsafe { (gs.get_mut(i), cs.get_mut(i), qs.get_mut(i)) };
+                for a in 0..ks.rows {
+                    for b in (a + 1)..ks.cols {
+                        let m = 0.5 * (ks.get(a, b) + ks.get(b, a));
+                        ks.set(a, b, m);
+                        ks.set(b, a, m);
+                    }
+                }
+                if cholesky_into(ks, ci) {
+                    solve_r_right_into(&v[i], ci, qi);
+                } else {
+                    // Numerically indefinite Gram (very inexact consensus):
+                    // fall back to scaling by the Frobenius norm to stay
+                    // finite.
+                    qi.copy_from(&v[i]);
+                    qi.scale_inplace(1.0 / v[i].fro_norm().max(1e-300));
                 }
             }
-            match cholesky(&ks) {
-                Some(r) => solve_r_right(vi, &r),
-                // Numerically indefinite Gram (very inexact consensus):
-                // fall back to scaling by the Frobenius norm to stay finite.
-                None => vi.scale(1.0 / vi.fro_norm().max(1e-300)),
-            }
-        })
-        .collect()
+        });
+    }
 }
 
 /// Run Algorithm 2.
+///
+/// All per-iteration buffers (`Z_i`, `V_i`, Grams, Cholesky factors) are
+/// allocated once before the loop and reused, so steady-state outer
+/// iterations are allocation-free; per-node products fan out across the
+/// network's node pool with bitwise-deterministic results.
 pub fn run_fdot(
     net: &mut SyncNetwork,
     setting: &FeatureSetting,
@@ -133,17 +180,42 @@ pub fn run_fdot(
     let mut q: Vec<Mat> = (0..n).map(|i| setting.slice(&setting.q_init, i)).collect();
     let mut trace = RunTrace::new("F-DOT");
     let mut total = 0usize;
+    // Persistent workspace (shaped on first use, reused thereafter).
+    let mut z = vec![Mat::zeros(0, 0); n];
+    let mut v = vec![Mat::zeros(0, 0); n];
+    let mut grams = vec![Mat::zeros(0, 0); n];
+    let mut chol = vec![Mat::zeros(0, 0); n];
 
     for t in 1..=cfg.t_o {
-        // Step 5: Z_i = X_iᵀ Q_i  (n×r).
-        let mut z: Vec<Mat> = (0..n).map(|i| setting.parts[i].t_matmul(&q[i])).collect();
+        // Step 5: Z_i = X_iᵀ Q_i  (n×r), node-parallel.
+        {
+            let zs = DisjointSlice::new(z.as_mut_slice());
+            let parts = &setting.parts;
+            let qref = &q;
+            net.pool().run_chunks(n, &|lo, hi| {
+                for i in lo..hi {
+                    // SAFETY: index i belongs to exactly one chunk.
+                    parts[i].t_matmul_into(&qref[i], unsafe { zs.get_mut(i) });
+                }
+            });
+        }
         // Steps 6–11: consensus to the sum Σ_j X_jᵀ Q_j.
         net.consensus_sum(&mut z, cfg.t_c);
         total += cfg.t_c;
-        // Step 11: V_i = X_i Ẑ_i.
-        let v: Vec<Mat> = (0..n).map(|i| setting.parts[i].matmul(&z[i])).collect();
+        // Step 11: V_i = X_i Ẑ_i, node-parallel.
+        {
+            let vs = DisjointSlice::new(v.as_mut_slice());
+            let parts = &setting.parts;
+            let zref = &z;
+            net.pool().run_chunks(n, &|lo, hi| {
+                for i in lo..hi {
+                    // SAFETY: index i belongs to exactly one chunk.
+                    parts[i].matmul_into(&zref[i], unsafe { vs.get_mut(i) });
+                }
+            });
+        }
         // Step 12: distributed QR.
-        q = distributed_qr(net, &v, cfg.t_ps);
+        distributed_qr_into(net, &v, cfg.t_ps, &mut grams, &mut chol, &mut q);
         total += cfg.t_ps;
 
         if t % cfg.record_every == 0 || t == cfg.t_o {

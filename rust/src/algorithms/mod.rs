@@ -24,4 +24,4 @@ pub mod sdot;
 pub mod seqdistpm;
 
 pub use common::SampleSetting;
-pub use sdot::{run_sadot, run_sdot, SdotConfig};
+pub use sdot::{run_sadot, run_sdot, SdotConfig, SdotRun};

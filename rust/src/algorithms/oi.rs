@@ -13,12 +13,21 @@ use crate::metrics::subspace::subspace_error;
 use crate::metrics::trace::{IterRecord, RunTrace};
 
 /// Centralized orthogonal iteration on `M = Σ_i M_i`.
+///
+/// The numerical loop reuses a persistent workspace (`v`, per-term
+/// scratch, QR scratch); only trace recording allocates.
 pub fn run_oi(setting: &SampleSetting, t_o: usize) -> (Mat, RunTrace) {
     let mut q = setting.q_init.clone();
     let mut trace = RunTrace::new("OI");
+    let mut v = Mat::zeros(0, 0);
+    let mut tmp = Mat::zeros(0, 0);
+    let mut tmp2 = Mat::zeros(0, 0);
+    let mut qnext = Mat::zeros(0, 0);
+    let mut ws = crate::linalg::qr::QrScratch::new();
     for t in 1..=t_o {
-        let v = setting.global_apply(&q);
-        q = orthonormalize(&v);
+        setting.global_apply_into(&q, &mut v, &mut tmp, &mut tmp2);
+        crate::linalg::qr::orthonormalize_into(&v, &mut qnext, &mut ws);
+        std::mem::swap(&mut q, &mut qnext);
         trace.push(IterRecord {
             outer: t,
             total_iters: t,

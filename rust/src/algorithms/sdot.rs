@@ -15,6 +15,8 @@ use crate::linalg::Mat;
 use crate::metrics::subspace::average_error;
 use crate::metrics::trace::{IterRecord, RunTrace};
 use crate::network::sim::SyncNetwork;
+use crate::runtime::pool::DisjointSlice;
+use crate::runtime::workspace::{node_scratch, NodeScratch};
 use crate::runtime::Backend;
 
 /// Configuration for an S-DOT / SA-DOT run.
@@ -35,6 +37,118 @@ impl SdotConfig {
     }
 }
 
+/// A resumable Algorithm-1 run with a persistent workspace.
+///
+/// All per-iteration buffers — the `Z_i` products, the per-node QR and
+/// covariance scratch, and (inside `SyncNetwork`) the consensus double
+/// buffer — are allocated at construction and reused by every
+/// [`SdotRun::step`], so steady-state outer iterations perform zero heap
+/// allocations (verified by `bench_hotpath`'s counting allocator).
+/// Per-node work (step 5's `M_i Q` and step 12's local QR) fans out
+/// across the network's node pool with bitwise-deterministic results for
+/// any thread count.
+pub struct SdotRun<'a> {
+    net: &'a mut SyncNetwork,
+    setting: &'a SampleSetting,
+    cfg: SdotConfig,
+    backend: &'a dyn Backend,
+    q: Vec<Mat>,
+    z: Vec<Mat>,
+    scratch: Vec<NodeScratch>,
+    trace: RunTrace,
+    t: usize,
+    total_iters: usize,
+}
+
+impl<'a> SdotRun<'a> {
+    pub fn new(
+        net: &'a mut SyncNetwork,
+        setting: &'a SampleSetting,
+        cfg: &SdotConfig,
+        backend: &'a dyn Backend,
+    ) -> SdotRun<'a> {
+        let n = net.n();
+        assert_eq!(setting.n_nodes(), n, "setting/network size mismatch");
+        let d = setting.d();
+        let r = setting.q_init.cols;
+        SdotRun {
+            net,
+            setting,
+            cfg: *cfg,
+            backend,
+            q: vec![setting.q_init.clone(); n],
+            z: (0..n).map(|_| Mat::zeros(d, r)).collect(),
+            scratch: node_scratch(n),
+            trace: RunTrace::new("S-DOT"),
+            t: 0,
+            total_iters: 0,
+        }
+    }
+
+    /// Current per-node estimates.
+    pub fn estimates(&self) -> &[Mat] {
+        &self.q
+    }
+
+    /// Outer iterations completed so far.
+    pub fn outer(&self) -> usize {
+        self.t
+    }
+
+    /// One outer orthogonal iteration (Alg. 1 steps 5–12).
+    pub fn step(&mut self) {
+        let n = self.q.len();
+        self.t += 1;
+        let t = self.t;
+        // Step 5: local products (the per-node hot path), node-parallel.
+        {
+            let zs = DisjointSlice::new(self.z.as_mut_slice());
+            let scr = DisjointSlice::new(self.scratch.as_mut_slice());
+            let q = &self.q;
+            let covs = &self.setting.covs;
+            let backend = self.backend;
+            self.net.pool().run_chunks(n, &|lo, hi| {
+                for i in lo..hi {
+                    // SAFETY: index i belongs to exactly one chunk.
+                    let (zi, si) = unsafe { (zs.get_mut(i), scr.get_mut(i)) };
+                    backend.cov_apply_into(&covs[i], &q[i], zi, &mut si.t0);
+                }
+            });
+        }
+        // Steps 6–11: consensus + rescale to a sum estimate.
+        let rounds = self.cfg.schedule.rounds_at(t);
+        self.net.consensus_sum(&mut self.z, rounds);
+        self.total_iters += rounds;
+        // Step 12: local QR, node-parallel.
+        {
+            let qs = DisjointSlice::new(self.q.as_mut_slice());
+            let scr = DisjointSlice::new(self.scratch.as_mut_slice());
+            let z = &self.z;
+            let backend = self.backend;
+            self.net.pool().run_chunks(n, &|lo, hi| {
+                for i in lo..hi {
+                    // SAFETY: index i belongs to exactly one chunk.
+                    let (qi, si) = unsafe { (qs.get_mut(i), scr.get_mut(i)) };
+                    backend.orthonormalize_into(&z[i], qi, &mut si.qr);
+                }
+            });
+        }
+        if t % self.cfg.record_every == 0 || t == self.cfg.t_o {
+            self.trace.push(IterRecord {
+                outer: t,
+                total_iters: self.total_iters,
+                error: average_error(&self.setting.truth, &self.q),
+                p2p_avg: self.net.counters.avg(),
+            });
+        }
+    }
+
+    /// Consume the run, returning estimates and trace.
+    pub fn finish(self) -> (Vec<Mat>, RunTrace) {
+        (self.q, self.trace)
+    }
+}
+
 /// Run Algorithm 1 on the given network. Returns the per-node estimates and
 /// the per-iteration trace. The `backend` computes the `M_i Q` hot path
 /// (native Rust or the AOT-compiled XLA artifact).
@@ -44,35 +158,11 @@ pub fn run_sdot_with_backend(
     cfg: &SdotConfig,
     backend: &dyn Backend,
 ) -> (Vec<Mat>, RunTrace) {
-    let n = net.n();
-    assert_eq!(setting.n_nodes(), n, "setting/network size mismatch");
-    let mut q: Vec<Mat> = vec![setting.q_init.clone(); n];
-    let mut trace = RunTrace::new("S-DOT");
-    let mut total_iters = 0usize;
-
-    for t in 1..=cfg.t_o {
-        // Step 5: local products (the per-node hot path).
-        let mut z: Vec<Mat> = (0..n)
-            .map(|i| backend.cov_apply(&setting.covs[i], &q[i]))
-            .collect();
-        // Steps 6–11: consensus + rescale to a sum estimate.
-        let rounds = cfg.schedule.rounds_at(t);
-        net.consensus_sum(&mut z, rounds);
-        total_iters += rounds;
-        // Step 12: local QR.
-        for i in 0..n {
-            q[i] = backend.orthonormalize(&z[i]);
-        }
-        if t % cfg.record_every == 0 || t == cfg.t_o {
-            trace.push(IterRecord {
-                outer: t,
-                total_iters,
-                error: average_error(&setting.truth, &q),
-                p2p_avg: net.counters.avg(),
-            });
-        }
+    let mut run = SdotRun::new(net, setting, cfg, backend);
+    for _ in 0..cfg.t_o {
+        run.step();
     }
-    (q, trace)
+    run.finish()
 }
 
 /// S-DOT with the native backend (the common path for experiments).

@@ -38,41 +38,44 @@ pub fn run_seqdistpm(
     let mut lambdas: Vec<Vec<f64>> = vec![Vec::new(); n];
     let mut total = 0usize;
     let mut outer = 0usize;
+    // Persistent workspace: working vectors, deflated products, scalar
+    // consensus payloads, and per-node apply scratch.
+    let mut v: Vec<Mat> = vec![Mat::zeros(d, 1); n];
+    let mut z: Vec<Mat> = vec![Mat::zeros(0, 0); n];
+    let mut lam: Vec<Mat> = vec![Mat::zeros(1, 1); n];
+    let mut tmp: Vec<Mat> = vec![Mat::zeros(0, 0); n];
 
     for j in 0..r {
         // Current working vector at each node.
-        let mut v: Vec<Vec<f64>> = (0..n).map(|i| q[i].col(j)).collect();
-        for vi in v.iter_mut() {
-            normalize(vi);
+        for i in 0..n {
+            v[i].reshape_in_place(d, 1);
+            for row in 0..d {
+                v[i].data[row] = q[i].get(row, j);
+            }
+            normalize(&mut v[i].data);
         }
         for it in 0..cfg.iters_per_vec {
             // Local deflated product.
-            let mut z: Vec<Mat> = (0..n)
-                .map(|i| {
-                    let vm = Mat::from_vec(d, 1, v[i].clone());
-                    let mut w = setting.covs[i].apply(&vm);
-                    // Deflate with the previously agreed vectors: the local
-                    // share of λ_k q_k q_kᵀ v is split evenly (1/N each) so
-                    // the consensus sum reconstructs the full deflation.
-                    for k in 0..lambdas[i].len() {
-                        let qk = q[i].col(k);
-                        let dot = dotv(&qk, &v[i]);
-                        let coeff = lambdas[i][k] * dot / n as f64;
-                        for (wi, qki) in w.data.iter_mut().zip(qk.iter()) {
-                            *wi -= coeff * qki;
-                        }
+            for i in 0..n {
+                setting.covs[i].apply_into(&v[i], &mut z[i], &mut tmp[i]);
+                // Deflate with the previously agreed vectors: the local
+                // share of λ_k q_k q_kᵀ v is split evenly (1/N each) so
+                // the consensus sum reconstructs the full deflation.
+                for k in 0..lambdas[i].len() {
+                    let dot = q[i].col_dot(k, &v[i].data);
+                    let coeff = lambdas[i][k] * dot / n as f64;
+                    for (row, wi) in z[i].data.iter_mut().enumerate() {
+                        *wi -= coeff * q[i].get(row, k);
                     }
-                    w
-                })
-                .collect();
+                }
+            }
             net.consensus_sum(&mut z, cfg.t_c);
             total += cfg.t_c;
             outer += 1;
             for i in 0..n {
-                let mut w = z[i].col(0);
-                normalize(&mut w);
-                q[i].set_col(j, &w);
-                v[i] = w;
+                normalize(&mut z[i].data);
+                q[i].set_col(j, &z[i].data);
+                v[i].copy_from(&z[i]);
             }
             if outer % cfg.record_every == 0 || (j == r - 1 && it == cfg.iters_per_vec - 1) {
                 let estimates: Vec<Mat> = q.iter().map(orthonormalize).collect();
@@ -85,13 +88,11 @@ pub fn run_seqdistpm(
             }
         }
         // Agree on λ_j = vᵀ M v via one consensus round over local scalars.
-        let mut lam: Vec<Mat> = (0..n)
-            .map(|i| {
-                let vm = Mat::from_vec(d, 1, v[i].clone());
-                let mv = setting.covs[i].apply(&vm);
-                Mat::from_vec(1, 1, vec![dotv(&v[i], &mv.col(0))])
-            })
-            .collect();
+        for i in 0..n {
+            setting.covs[i].apply_into(&v[i], &mut z[i], &mut tmp[i]);
+            lam[i].reshape_in_place(1, 1);
+            lam[i].data[0] = dotv(&v[i].data, &z[i].data);
+        }
         net.consensus_sum(&mut lam, cfg.t_c);
         total += cfg.t_c;
         for i in 0..n {

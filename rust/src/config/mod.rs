@@ -7,12 +7,16 @@ use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
 
 /// Load an [`ExpCtx`] from an optional JSON config file, then apply CLI
-/// overrides (`--seed`, `--scale`, `--trials`, `--out`).
+/// overrides (`--seed`, `--scale`, `--trials`, `--out`, `--threads`).
 ///
 /// Config file format:
 /// ```json
-/// {"seed": 42, "scale": 1.0, "trials": 3, "out_dir": "results"}
+/// {"seed": 42, "scale": 1.0, "trials": 3, "out_dir": "results", "threads": 1}
 /// ```
+///
+/// `threads` sets the node-parallelism of the simulated networks
+/// (`threads = 1` is the serial path; any value produces bitwise
+/// identical results — see `runtime::pool`).
 pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     let mut ctx = ExpCtx::default();
     if let Some(path) = args.get("config") {
@@ -30,12 +34,21 @@ pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     if let Some(v) = args.get("out") {
         ctx.out_dir = PathBuf::from(v);
     }
+    if let Some(v) = args.get("threads") {
+        ctx.threads = v.parse().map_err(|_| anyhow!("bad --threads"))?;
+    }
     if ctx.scale <= 0.0 || ctx.scale > 10.0 {
         return Err(anyhow!("scale must be in (0, 10]"));
     }
     if ctx.trials == 0 {
         return Err(anyhow!("trials must be >= 1"));
     }
+    if ctx.threads == 0 || ctx.threads > 256 {
+        return Err(anyhow!("threads must be in [1, 256]"));
+    }
+    // Note: callers (the CLI, bench binaries) apply `ctx.threads` to the
+    // simulator via `network::sim::set_default_threads`; the loader stays
+    // side-effect free so it is safe in tests.
     Ok(ctx)
 }
 
@@ -55,6 +68,9 @@ pub fn from_file(path: &Path) -> Result<ExpCtx> {
     }
     if let Some(v) = json.get("out_dir").and_then(|v| v.as_str()) {
         ctx.out_dir = PathBuf::from(v);
+    }
+    if let Some(v) = json.get("threads").and_then(|v| v.as_usize()) {
+        ctx.threads = v;
     }
     Ok(ctx)
 }
@@ -105,5 +121,15 @@ mod tests {
         assert!(load_ctx(&args(&["--scale", "0"])).is_err());
         assert!(load_ctx(&args(&["--trials", "0"])).is_err());
         assert!(load_ctx(&args(&["--seed", "xyz"])).is_err());
+        assert!(load_ctx(&args(&["--threads", "0"])).is_err());
+        assert!(load_ctx(&args(&["--threads", "9999"])).is_err());
+    }
+
+    #[test]
+    fn threads_flag_parses() {
+        let ctx = load_ctx(&args(&["--threads", "2"])).unwrap();
+        assert_eq!(ctx.threads, 2);
+        let ctx = load_ctx(&args(&[])).unwrap();
+        assert_eq!(ctx.threads, 1);
     }
 }

@@ -9,6 +9,7 @@ use super::weights::WeightMatrix;
 use crate::graph::Graph;
 use crate::linalg::Mat;
 use crate::network::counters::P2pCounters;
+use crate::runtime::pool::{DisjointSlice, NodePool};
 
 /// Result of a consensus run.
 #[derive(Clone, Debug)]
@@ -16,11 +17,106 @@ pub struct ConsensusOutcome {
     pub rounds: usize,
 }
 
+/// One node's synchronous mixing update:
+/// `dst ← w_ii src_i + Σ_{j∈adj(i)} w_ij src_j`.
+#[inline]
+fn mix_node(g: &Graph, wm: &WeightMatrix, src: &[Mat], i: usize, dst: &mut Mat) {
+    let wii = wm.w.get(i, i);
+    dst.copy_from(&src[i]);
+    dst.scale_inplace(wii);
+    for &j in &g.adj[i] {
+        dst.axpy(wm.w.get(i, j), &src[j]);
+    }
+}
+
+/// The matching update for the push-sum scalar weight channel.
+#[inline]
+fn mix_scalar(g: &Graph, wm: &WeightMatrix, src: &[f64], i: usize) -> f64 {
+    let mut s = wm.w.get(i, i) * src[i];
+    for &j in &g.adj[i] {
+        s += wm.w.get(i, j) * src[j];
+    }
+    s
+}
+
+/// The shared mixing engine: `rounds` synchronous consensus iterations
+/// over a caller-provided double buffer, optionally carrying the
+/// push-sum scalar weight channel in the same message (ratio consensus).
+///
+/// This is the single mixing kernel behind both [`average_consensus`]
+/// and `SyncNetwork::ratio_consensus_sum` — per-node mixing within a
+/// round fans out across `pool` (bitwise deterministic for any thread
+/// count; see `runtime::pool`), and P2P accounting lives in one place:
+/// each round node `i` sends `deg(i)` messages of `rows·cols` elements,
+/// `+1` when the scalar channel rides along.
+#[allow(clippy::too_many_arguments)]
+pub fn consensus_rounds(
+    g: &Graph,
+    wm: &WeightMatrix,
+    z: &mut Vec<Mat>,
+    next: &mut Vec<Mat>,
+    mut scalar: Option<(&mut Vec<f64>, &mut Vec<f64>)>,
+    rounds: usize,
+    counters: &mut P2pCounters,
+    pool: &NodePool,
+) -> ConsensusOutcome {
+    let n = g.n;
+    assert_eq!(z.len(), n);
+    assert_eq!(next.len(), n);
+    assert_eq!(wm.n(), n);
+    if n == 0 || rounds == 0 {
+        return ConsensusOutcome { rounds: 0 };
+    }
+    let elems = z[0].rows * z[0].cols + usize::from(scalar.is_some());
+    for _round in 0..rounds {
+        {
+            let src: &[Mat] = z.as_slice();
+            let dst = DisjointSlice::new(next.as_mut_slice());
+            match &mut scalar {
+                Some((w_src, w_dst)) => {
+                    let ws: &[f64] = w_src.as_slice();
+                    let wd = DisjointSlice::new(w_dst.as_mut_slice());
+                    pool.run_chunks(n, &|lo, hi| {
+                        for i in lo..hi {
+                            // SAFETY: index i belongs to exactly one chunk.
+                            mix_node(g, wm, src, i, unsafe { dst.get_mut(i) });
+                            unsafe { *wd.get_mut(i) = mix_scalar(g, wm, ws, i) };
+                        }
+                    });
+                }
+                None => {
+                    pool.run_chunks(n, &|lo, hi| {
+                        for i in lo..hi {
+                            // SAFETY: index i belongs to exactly one chunk.
+                            mix_node(g, wm, src, i, unsafe { dst.get_mut(i) });
+                        }
+                    });
+                }
+            }
+        }
+        for i in 0..n {
+            // i sends one matrix to each neighbor (the read of z[j] above
+            // is the receive side of j's send).
+            for _ in 0..g.degree(i) {
+                counters.record_send(i, elems);
+            }
+        }
+        std::mem::swap(z, next);
+        if let Some((w_src, w_dst)) = &mut scalar {
+            std::mem::swap(*w_src, *w_dst);
+        }
+    }
+    ConsensusOutcome { rounds }
+}
+
 /// Run `rounds` synchronous consensus iterations in place:
 /// `Z_i ← w_ii Z_i + Σ_{j∈adj(i)} w_ij Z_j`.
 ///
 /// Each round, every node sends its current matrix to each neighbor
 /// (`deg(i)` messages), matching MPI blocking point-to-point exchanges.
+/// Convenience wrapper over [`consensus_rounds`] that allocates its own
+/// double buffer and runs serially; the zero-allocation path is
+/// `SyncNetwork::consensus`, which owns a persistent workspace and pool.
 pub fn average_consensus(
     g: &Graph,
     wm: &WeightMatrix,
@@ -28,36 +124,8 @@ pub fn average_consensus(
     rounds: usize,
     counters: &mut P2pCounters,
 ) -> ConsensusOutcome {
-    let n = g.n;
-    assert_eq!(z.len(), n);
-    assert_eq!(wm.n(), n);
-    if n == 0 || rounds == 0 {
-        return ConsensusOutcome { rounds: 0 };
-    }
-    let (r_, c_) = (z[0].rows, z[0].cols);
-    let elems = r_ * c_;
-    // Double buffer to keep the round synchronous.
     let mut next: Vec<Mat> = z.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
-    for _round in 0..rounds {
-        for i in 0..n {
-            let wii = wm.w.get(i, i);
-            let dst = &mut next[i];
-            dst.data.copy_from_slice(&z[i].data);
-            dst.scale_inplace(wii);
-            for &j in &g.adj[i] {
-                dst.axpy(wm.w.get(i, j), &z[j]);
-            }
-        }
-        for i in 0..n {
-            // i sends one matrix to each neighbor (the use of z[j] above is
-            // the receive side of j's send).
-            for _ in 0..g.degree(i) {
-                counters.record_send(i, elems);
-            }
-        }
-        std::mem::swap(z, &mut next);
-    }
-    ConsensusOutcome { rounds }
+    consensus_rounds(g, wm, z, &mut next, None, rounds, counters, &NodePool::serial())
 }
 
 /// Alg. 1 step 11: rescale each node's consensus result by `[W^{T_c} e_1]_i`

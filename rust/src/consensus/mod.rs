@@ -4,7 +4,7 @@ pub mod mixing;
 pub mod schedule;
 pub mod weights;
 
-pub use engine::{average_consensus, ConsensusOutcome};
+pub use engine::{average_consensus, consensus_rounds, ConsensusOutcome};
 pub use mixing::{mixing_time, slem};
 pub use schedule::Schedule;
 pub use weights::{local_degree_weights, max_degree_weights, WeightMatrix};

@@ -42,6 +42,9 @@ pub struct ExpCtx {
     pub trials: usize,
     /// Output directory for CSV/markdown artifacts.
     pub out_dir: PathBuf,
+    /// Node-parallelism for simulated networks (1 = serial; results are
+    /// bitwise identical for any value — see `runtime::pool`).
+    pub threads: usize,
 }
 
 impl Default for ExpCtx {
@@ -51,6 +54,7 @@ impl Default for ExpCtx {
             scale: 1.0,
             trials: 3,
             out_dir: PathBuf::from("results"),
+            threads: 1,
         }
     }
 }

@@ -10,9 +10,22 @@ use super::mat::Mat;
 /// Upper-triangular Cholesky factor `R` with `a = Rᵀ R`.
 /// Returns `None` if `a` is not (numerically) positive definite.
 pub fn cholesky(a: &Mat) -> Option<Mat> {
+    let mut r = Mat::zeros(a.rows, a.cols);
+    if cholesky_into(a, &mut r) {
+        Some(r)
+    } else {
+        None
+    }
+}
+
+/// Allocation-free Cholesky into a caller-provided buffer (reshaped in
+/// place). Returns `false` — leaving `r` in an unspecified state — if
+/// `a` is not (numerically) positive definite.
+pub fn cholesky_into(a: &Mat, r: &mut Mat) -> bool {
     let n = a.rows;
     assert_eq!(a.rows, a.cols, "cholesky needs square input");
-    let mut r = Mat::zeros(n, n);
+    r.reshape_in_place(n, n);
+    r.fill(0.0);
     for i in 0..n {
         for j in i..n {
             let mut s = a.get(i, j);
@@ -21,7 +34,7 @@ pub fn cholesky(a: &Mat) -> Option<Mat> {
             }
             if i == j {
                 if s <= 0.0 {
-                    return None;
+                    return false;
                 }
                 r.set(i, j, s.sqrt());
             } else {
@@ -29,16 +42,25 @@ pub fn cholesky(a: &Mat) -> Option<Mat> {
             }
         }
     }
-    Some(r)
+    true
 }
 
 /// Solve `x R = b` for x given upper-triangular `R` (i.e. x = b R⁻¹),
 /// applied row-wise to a matrix `b ∈ R^{m×n}`, `R ∈ R^{n×n}`.
 pub fn solve_r_right(b: &Mat, r: &Mat) -> Mat {
+    let mut x = Mat::zeros(b.rows, b.cols);
+    solve_r_right_into(b, r, &mut x);
+    x
+}
+
+/// Allocation-free version of [`solve_r_right`] into a caller-provided
+/// buffer (reshaped in place).
+pub fn solve_r_right_into(b: &Mat, r: &Mat, x: &mut Mat) {
     let (m, n) = (b.rows, b.cols);
     assert_eq!(r.rows, n);
     assert_eq!(r.cols, n);
-    let mut x = Mat::zeros(m, n);
+    x.reshape_in_place(m, n);
+    x.fill(0.0);
     for row in 0..m {
         for j in 0..n {
             let mut s = b.get(row, j);
@@ -48,7 +70,6 @@ pub fn solve_r_right(b: &Mat, r: &Mat) -> Mat {
             x.set(row, j, s / r.get(j, j));
         }
     }
-    x
 }
 
 /// Invert an upper-triangular matrix.

@@ -47,13 +47,24 @@ impl CovOp {
 
     /// Apply the operator: `M_i Q` (the S-DOT per-iteration hot path).
     pub fn apply(&self, q: &Mat) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        let mut tmp = Mat::zeros(0, 0);
+        self.apply_into(q, &mut out, &mut tmp);
+        out
+    }
+
+    /// Allocation-free `out = M_i Q` into caller-provided buffers (both
+    /// reshaped in place). `tmp` holds the intermediate `XᵀQ` for the
+    /// implicit representation and is untouched for the dense one.
+    /// Arithmetic is identical to [`CovOp::apply`] (which delegates
+    /// here), so results match bitwise.
+    pub fn apply_into(&self, q: &Mat, out: &mut Mat, tmp: &mut Mat) {
         match self {
-            CovOp::Dense(m) => m.matmul(q),
+            CovOp::Dense(m) => m.matmul_into(q, out),
             CovOp::Samples { x, scale } => {
-                let xtq = x.t_matmul(q); // n×r
-                let mut v = x.matmul(&xtq); // d×r
-                v.scale_inplace(*scale);
-                v
+                x.t_matmul_into(q, tmp); // n×r
+                x.matmul_into(tmp, out); // d×r
+                out.scale_inplace(*scale);
             }
         }
     }
@@ -144,6 +155,23 @@ mod tests {
         let a = dense.spectral_norm(300);
         let b = implicit.spectral_norm(300);
         assert!((a - b).abs() < 1e-6 * a.max(1.0), "{a} vs {b}");
+    }
+
+    #[test]
+    fn apply_into_matches_apply_bitwise() {
+        let mut rng = Rng::new(7);
+        let x = Mat::gauss(150, 40, &mut rng); // implicit for d=150 > n=40
+        let q = Mat::gauss(150, 4, &mut rng);
+        for op in [CovOp::Samples { x: x.clone(), scale: 1.0 / 40.0 }, CovOp::dense_from_samples(&x)] {
+            let want = op.apply(&q);
+            let mut out = Mat::zeros(0, 0);
+            let mut tmp = Mat::zeros(0, 0);
+            op.apply_into(&q, &mut out, &mut tmp);
+            assert_eq!(out.data, want.data);
+            // Buffer reuse across calls keeps results identical.
+            op.apply_into(&q, &mut out, &mut tmp);
+            assert_eq!(out.data, want.data);
+        }
     }
 
     #[test]

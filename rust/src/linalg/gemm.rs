@@ -1,0 +1,297 @@
+//! GEMM kernels behind `Mat::matmul_into`.
+//!
+//! Three regimes, chosen by `Mat::matmul_into`:
+//!
+//! * **skinny** (`n ≤ 32`, `k ≥ 16` — the `M_i Q` hot path): pack `bᵀ`
+//!   once into thread-local scratch and compute contiguous [`dot4`]
+//!   products, exactly the arithmetic of the seed's transpose-and-
+//!   `matmul_t` path but without the per-call allocation;
+//! * **blocked** (mid-size dense): a register-blocked micro-kernel —
+//!   `MR×NR = 8×4` accumulator tiles over panels packed for unit-stride
+//!   access, with `KC/MC/NC` cache blocking — replacing the seed's
+//!   plain i-k-j triple loop;
+//! * the caller falls back to the i-k-j loop for small problems.
+//!
+//! All scratch lives in a thread-local arena that only grows, so the
+//! steady state allocates nothing. Summation order within one output
+//! element is fixed (ascending `k`, blocked by `KC`), independent of the
+//! node-pool thread count — kernels here are always single-threaded per
+//! node, which is what keeps multi-threaded runs bitwise deterministic.
+
+use super::mat::Mat;
+use std::cell::RefCell;
+
+/// Micro-tile rows (accumulator register rows).
+const MR: usize = 8;
+/// Micro-tile columns.
+const NR: usize = 4;
+/// k-dimension cache block.
+const KC: usize = 256;
+/// m-dimension cache block.
+const MC: usize = 64;
+/// n-dimension cache block.
+const NC: usize = 256;
+
+#[derive(Default)]
+struct Scratch {
+    pa: Vec<f64>,
+    pb: Vec<f64>,
+    bt: Vec<f64>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// Dot product with 4-way unrolled accumulators (vectorization-friendly).
+#[inline]
+pub(crate) fn dot4(a: &[f64], b: &[f64], k: usize) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let chunks = k / 4;
+    for c in 0..chunks {
+        let o = c * 4;
+        acc[0] += a[o] * b[o];
+        acc[1] += a[o + 1] * b[o + 1];
+        acc[2] += a[o + 2] * b[o + 2];
+        acc[3] += a[o + 3] * b[o + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for o in chunks * 4..k {
+        s += a[o] * b[o];
+    }
+    s
+}
+
+/// Skinny-`b` product: `out = a · b` with `bᵀ` packed into scratch so
+/// every dot product runs over two contiguous slices. Matches the seed's
+/// `a.matmul_t(&b.transpose())` arithmetic bit for bit.
+pub(crate) fn matmul_skinny_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    debug_assert_eq!(b.rows, k);
+    debug_assert_eq!((out.rows, out.cols), (m, n));
+    SCRATCH.with(|cell| {
+        let mut s = cell.borrow_mut();
+        let bt = &mut s.bt;
+        if bt.len() < n * k {
+            bt.resize(n * k, 0.0);
+        }
+        for (p, brow) in (0..k).map(|p| (p, b.row(p))) {
+            for (j, &v) in brow.iter().enumerate() {
+                bt[j * k + p] = v;
+            }
+        }
+        for i in 0..m {
+            let arow = a.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = dot4(arow, &bt[j * k..j * k + k], k);
+            }
+        }
+    });
+}
+
+/// Register-blocked GEMM: `out = a · b` over packed panels.
+pub(crate) fn matmul_blocked_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    debug_assert_eq!(b.rows, k);
+    debug_assert_eq!((out.rows, out.cols), (m, n));
+    out.data.fill(0.0);
+    SCRATCH.with(|cell| {
+        let mut guard = cell.borrow_mut();
+        let Scratch { pa, pb, .. } = &mut *guard;
+        let pa_need = MC.div_ceil(MR) * MR * KC;
+        if pa.len() < pa_need {
+            pa.resize(pa_need, 0.0);
+        }
+        let pb_need = NC.div_ceil(NR) * NR * KC;
+        if pb.len() < pb_need {
+            pb.resize(pb_need, 0.0);
+        }
+
+        let mut kk = 0;
+        while kk < k {
+            let kb = KC.min(k - kk);
+            let mut jj = 0;
+            while jj < n {
+                let nb = NC.min(n - jj);
+                pack_b(b, pb, kk, kb, jj, nb);
+                let ntiles = nb.div_ceil(NR);
+                let mut ii = 0;
+                while ii < m {
+                    let mb = MC.min(m - ii);
+                    pack_a(a, pa, ii, mb, kk, kb);
+                    let mtiles = mb.div_ceil(MR);
+                    for jt in 0..ntiles {
+                        let pb_panel = &pb[jt * NR * kb..(jt + 1) * NR * kb];
+                        for it in 0..mtiles {
+                            let pa_panel = &pa[it * MR * kb..(it + 1) * MR * kb];
+                            microkernel_write(
+                                pa_panel, pb_panel, kb, out, n, ii, it, mb, jj, jt, nb,
+                            );
+                        }
+                    }
+                    ii += mb;
+                }
+                jj += nb;
+            }
+            kk += kb;
+        }
+    });
+}
+
+/// One `MR×NR` accumulator tile; accumulates into the valid sub-block of
+/// `out` (padded lanes are zero in the packed panels and never written).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn microkernel_write(
+    pa_panel: &[f64],
+    pb_panel: &[f64],
+    kb: usize,
+    out: &mut Mat,
+    n: usize,
+    ii: usize,
+    it: usize,
+    mb: usize,
+    jj: usize,
+    jt: usize,
+    nb: usize,
+) {
+    let mut acc = [[0.0f64; NR]; MR];
+    for p in 0..kb {
+        let av = &pa_panel[p * MR..p * MR + MR];
+        let bv = &pb_panel[p * NR..p * NR + NR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let a = av[r];
+            for (c, slot) in accr.iter_mut().enumerate() {
+                *slot += a * bv[c];
+            }
+        }
+    }
+    let rmax = MR.min(mb - it * MR);
+    let cmax = NR.min(nb - jt * NR);
+    for (r, accr) in acc.iter().enumerate().take(rmax) {
+        let row = ii + it * MR + r;
+        let orow = &mut out.data[row * n + jj + jt * NR..row * n + jj + jt * NR + cmax];
+        for (o, &v) in orow.iter_mut().zip(accr.iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// Pack an `mb×kb` block of `a` into MR-row panels: element `(r, p)` of
+/// panel `it` lands at `pa[it·MR·kb + p·MR + r]`. Rows past `mb` pad 0.
+fn pack_a(a: &Mat, pa: &mut [f64], ii: usize, mb: usize, kk: usize, kb: usize) {
+    let mtiles = mb.div_ceil(MR);
+    for it in 0..mtiles {
+        let base = it * MR * kb;
+        for p in 0..kb {
+            for r in 0..MR {
+                let row = it * MR + r;
+                pa[base + p * MR + r] =
+                    if row < mb { a.get(ii + row, kk + p) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack a `kb×nb` block of `b` into NR-column panels: element `(p, c)` of
+/// panel `jt` lands at `pb[jt·NR·kb + p·NR + c]`. Columns past `nb` pad 0.
+fn pack_b(b: &Mat, pb: &mut [f64], kk: usize, kb: usize, jj: usize, nb: usize) {
+    let ntiles = nb.div_ceil(NR);
+    for jt in 0..ntiles {
+        let base = jt * NR * kb;
+        for p in 0..kb {
+            let brow = b.row(kk + p);
+            for c in 0..NR {
+                let col = jt * NR + c;
+                pb[base + p * NR + c] = if col < nb { brow[jj + col] } else { 0.0 };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Reference: plain i-j-k triple loop.
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a.get(i, p) * b.get(p, j);
+                }
+                out.set(i, j, s);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matches_naive_across_shapes() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (8, 4, 4),
+            (9, 5, 7),
+            (16, 16, 40),
+            (33, 70, 65),
+            (64, 256, 48),
+            (70, 300, 257), // crosses KC and NC boundaries
+            (130, 20, 33),
+        ] {
+            let a = Mat::gauss(m, k, &mut rng);
+            let b = Mat::gauss(k, n, &mut rng);
+            let mut out = Mat::zeros(m, n);
+            matmul_blocked_into(&a, &b, &mut out);
+            let want = naive(&a, &b);
+            assert!(
+                out.dist_fro(&want) < 1e-12 * want.fro_norm().max(1.0),
+                "{m}x{k}x{n}: {}",
+                out.dist_fro(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn skinny_matches_naive() {
+        let mut rng = Rng::new(2);
+        for &(m, k, n) in &[(20usize, 20usize, 5usize), (784, 784, 5), (50, 17, 32)] {
+            let a = Mat::gauss(m, k, &mut rng);
+            let b = Mat::gauss(k, n, &mut rng);
+            let mut out = Mat::zeros(m, n);
+            matmul_skinny_into(&a, &b, &mut out);
+            let want = naive(&a, &b);
+            assert!(out.dist_fro(&want) < 1e-12 * want.fro_norm().max(1.0), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn skinny_is_bitwise_stable_across_calls() {
+        // Scratch reuse must not perturb results.
+        let mut rng = Rng::new(3);
+        let a = Mat::gauss(40, 64, &mut rng);
+        let b = Mat::gauss(64, 6, &mut rng);
+        let mut o1 = Mat::zeros(40, 6);
+        let mut o2 = Mat::zeros(40, 6);
+        matmul_skinny_into(&a, &b, &mut o1);
+        let big = Mat::gauss(64, 30, &mut rng);
+        let mut tmp = Mat::zeros(40, 30);
+        matmul_skinny_into(&a, &big, &mut tmp); // dirty the scratch
+        matmul_skinny_into(&a, &b, &mut o2);
+        assert_eq!(o1.data, o2.data);
+    }
+
+    #[test]
+    fn blocked_handles_zero_matrices() {
+        let a = Mat::zeros(40, 40);
+        let b = Mat::zeros(40, 40);
+        let mut out = Mat::zeros(40, 40);
+        matmul_blocked_into(&a, &b, &mut out);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+    }
+}

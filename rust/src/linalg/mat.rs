@@ -1,5 +1,6 @@
 //! Row-major dense matrix with the operations the DPSA stack needs.
 
+use super::gemm::dot4;
 use crate::util::rng::Rng;
 use std::fmt;
 use std::ops::{Add, Mul, Sub};
@@ -156,20 +157,60 @@ impl Mat {
 
     // ---------- shape ops ----------
 
+    /// Re-dimension this matrix in place, reusing the existing
+    /// allocation. Never shrinks capacity, so alternating between shapes
+    /// is allocation-free once the largest shape has been seen. Contents
+    /// after a shape change are unspecified (kernels overwrite fully).
+    pub fn reshape_in_place(&mut self, rows: usize, cols: usize) {
+        let need = rows * cols;
+        if self.data.len() != need {
+            self.data.resize(need, 0.0);
+        }
+        self.rows = rows;
+        self.cols = cols;
+    }
+
+    /// Become a copy of `other` (reshaping in place as needed).
+    pub fn copy_from(&mut self, other: &Mat) {
+        self.reshape_in_place(other.rows, other.cols);
+        self.data.copy_from_slice(&other.data);
+    }
+
+    /// Set every entry to `v`.
+    pub fn fill(&mut self, v: f64) {
+        self.data.fill(v);
+    }
+
+    /// `⟨column k, v⟩` without extracting the column (used by the
+    /// sequential power-method baselines' deflation steps).
+    pub fn col_dot(&self, k: usize, v: &[f64]) -> f64 {
+        debug_assert_eq!(v.len(), self.rows);
+        let mut s = 0.0;
+        for (row, &vi) in v.iter().enumerate() {
+            s += self.get(row, k) * vi;
+        }
+        s
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
-        // Blocked transpose for cache friendliness on large matrices.
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// `out = selfᵀ` without allocating (blocked for cache friendliness).
+    pub fn transpose_into(&self, out: &mut Mat) {
+        out.reshape_in_place(self.cols, self.rows);
         const B: usize = 32;
         for ib in (0..self.rows).step_by(B) {
             for jb in (0..self.cols).step_by(B) {
                 for i in ib..(ib + B).min(self.rows) {
                     for j in jb..(jb + B).min(self.cols) {
-                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
                     }
                 }
             }
         }
-        t
     }
 
     // ---------- arithmetic ----------
@@ -198,18 +239,36 @@ impl Mat {
 
     /// Matrix product `self * b`.
     ///
-    /// Two regimes: for skinny `b` (r ≲ 32 — the `M_i Q` hot path, where
-    /// the i-k-j loop's length-r inner updates are all overhead) we pack
-    /// `bᵀ` once and compute contiguous dot products; otherwise the
-    /// cache-friendly i-k-j loop over row-major storage.
+    /// Delegates to [`Mat::matmul_into`]; see there for the kernel
+    /// regimes (packed-`bᵀ` skinny path, register-blocked GEMM, naive
+    /// i-k-j fallback).
     pub fn matmul(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, b.cols);
+        self.matmul_into(b, &mut out);
+        out
+    }
+
+    /// `out = self * b` without allocating (`out` is reshaped in place).
+    ///
+    /// Three regimes: for skinny `b` (r ≲ 32 — the `M_i Q` hot path,
+    /// where the i-k-j loop's length-r inner updates are all overhead)
+    /// `bᵀ` is packed into thread-local scratch and the product runs as
+    /// contiguous dot products; mid-size dense shapes go through the
+    /// register-blocked 8×4 micro-kernel over packed panels
+    /// ([`super::gemm`]); small shapes use the cache-friendly i-k-j loop.
+    pub fn matmul_into(&self, b: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, b.cols);
+        out.reshape_in_place(m, n);
         if n <= 32 && k >= 16 {
-            let bt = b.transpose();
-            return self.matmul_t(&bt);
+            super::gemm::matmul_skinny_into(self, b, out);
+            return;
         }
-        let mut out = Mat::zeros(m, n);
+        if n > 32 && k >= 8 && m >= 8 {
+            super::gemm::matmul_blocked_into(self, b, out);
+            return;
+        }
+        out.fill(0.0);
         for i in 0..m {
             let a_row = self.row(i);
             let out_row = &mut out.data[i * n..(i + 1) * n];
@@ -223,14 +282,21 @@ impl Mat {
                 }
             }
         }
-        out
     }
 
     /// `selfᵀ * b` without materializing the transpose.
     pub fn t_matmul(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.cols, b.cols);
+        self.t_matmul_into(b, &mut out);
+        out
+    }
+
+    /// `out = selfᵀ * b` without allocating.
+    pub fn t_matmul_into(&self, b: &Mat, out: &mut Mat) {
         assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
         let (k, m, n) = (self.rows, self.cols, b.cols);
-        let mut out = Mat::zeros(m, n);
+        out.reshape_in_place(m, n);
+        out.fill(0.0);
         for kk in 0..k {
             let a_row = self.row(kk);
             let b_row = b.row(kk);
@@ -245,16 +311,22 @@ impl Mat {
                 }
             }
         }
-        out
     }
 
     /// `self * bᵀ` without materializing the transpose. Both operands are
     /// walked contiguously; the dot product uses 4 accumulators so LLVM
     /// can vectorize despite FP non-associativity.
     pub fn matmul_t(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, b.rows);
+        self.matmul_t_into(b, &mut out);
+        out
+    }
+
+    /// `out = self * bᵀ` without allocating.
+    pub fn matmul_t_into(&self, b: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
         let (m, k, n) = (self.rows, self.cols, b.rows);
-        let mut out = Mat::zeros(m, n);
+        out.reshape_in_place(m, n);
         for i in 0..m {
             let a_row = self.row(i);
             for j in 0..n {
@@ -262,14 +334,20 @@ impl Mat {
                 out.data[i * n + j] = dot4(a_row, b_row, k);
             }
         }
-        out
     }
 
     /// Symmetric rank-k update: `scale * self * selfᵀ` (the Gram/covariance
     /// hot path). Only computes the upper triangle then mirrors.
     pub fn syrk(&self, scale: f64) -> Mat {
-        let (d, _n) = (self.rows, self.cols);
-        let mut out = Mat::zeros(d, d);
+        let mut out = Mat::zeros(self.rows, self.rows);
+        self.syrk_into(scale, &mut out);
+        out
+    }
+
+    /// `out = scale * self * selfᵀ` without allocating.
+    pub fn syrk_into(&self, scale: f64, out: &mut Mat) {
+        let d = self.rows;
+        out.reshape_in_place(d, d);
         for i in 0..d {
             let ri = self.row(i);
             for j in i..d {
@@ -279,7 +357,6 @@ impl Mat {
                 out.data[j * d + i] = s;
             }
         }
-        out
     }
 
     // ---------- norms & reductions ----------
@@ -345,23 +422,12 @@ impl Mat {
     }
 }
 
-/// Dot product with 4-way unrolled accumulators (vectorization-friendly).
-#[inline]
-fn dot4(a: &[f64], b: &[f64], k: usize) -> f64 {
-    let mut acc = [0.0f64; 4];
-    let chunks = k / 4;
-    for c in 0..chunks {
-        let o = c * 4;
-        acc[0] += a[o] * b[o];
-        acc[1] += a[o + 1] * b[o + 1];
-        acc[2] += a[o + 2] * b[o + 2];
-        acc[3] += a[o + 3] * b[o + 3];
+impl Default for Mat {
+    /// An empty `0×0` matrix — the idiomatic starting state for
+    /// workspace buffers that `reshape_in_place` will size on first use.
+    fn default() -> Mat {
+        Mat::zeros(0, 0)
     }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for o in chunks * 4..k {
-        s += a[o] * b[o];
-    }
-    s
 }
 
 impl Add for &Mat {
@@ -541,6 +607,92 @@ mod tests {
         let q = Mat::random_orthonormal(12, 4, &mut rng);
         let g = q.t_matmul(&q);
         assert!(g.dist_fro(&Mat::eye(4)) < 1e-10);
+    }
+
+    // ---- into-kernel property tests (vs the allocating kernels) ----
+
+    #[test]
+    fn prop_matmul_into_matches_allocating() {
+        let mut rng = Rng::new(21);
+        for &(m, k, n) in &[
+            (3usize, 3usize, 3usize),
+            (20, 20, 5),   // skinny path
+            (10, 40, 50),  // blocked path
+            (7, 5, 40),    // naive path (m < 8)
+            (64, 100, 64), // blocked path, multiple tiles
+        ] {
+            let a = Mat::gauss(m, k, &mut rng);
+            let b = Mat::gauss(k, n, &mut rng);
+            let want = a.matmul(&b);
+            let mut out = Mat::zeros(1, 1); // wrong shape on purpose
+            a.matmul_into(&b, &mut out);
+            assert!(out.dist_fro(&want) < 1e-12, "{m}x{k}x{n}");
+            // Reuse without reshaping must give identical results.
+            a.matmul_into(&b, &mut out);
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn prop_t_matmul_into_matches_allocating() {
+        let mut rng = Rng::new(22);
+        let a = Mat::gauss(30, 7, &mut rng);
+        let b = Mat::gauss(30, 4, &mut rng);
+        let want = a.t_matmul(&b);
+        let mut out = Mat::zeros(0, 0);
+        a.t_matmul_into(&b, &mut out);
+        assert!(out.dist_fro(&want) < 1e-12);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn prop_matmul_t_into_matches_allocating() {
+        let mut rng = Rng::new(23);
+        let a = Mat::gauss(9, 33, &mut rng);
+        let b = Mat::gauss(12, 33, &mut rng);
+        let want = a.matmul_t(&b);
+        let mut out = Mat::zeros(0, 0);
+        a.matmul_t_into(&b, &mut out);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn prop_syrk_into_matches_allocating() {
+        let mut rng = Rng::new(24);
+        let x = Mat::gauss(14, 60, &mut rng);
+        let want = x.syrk(1.0 / 60.0);
+        let mut out = Mat::zeros(2, 9);
+        x.syrk_into(1.0 / 60.0, &mut out);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn prop_transpose_into_matches_allocating() {
+        let mut rng = Rng::new(25);
+        let a = Mat::gauss(45, 70, &mut rng);
+        let want = a.transpose();
+        let mut out = Mat::zeros(0, 0);
+        a.transpose_into(&mut out);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn reshape_in_place_retains_capacity() {
+        let mut m = Mat::zeros(30, 30);
+        let cap = m.data.capacity();
+        m.reshape_in_place(2, 3);
+        assert_eq!((m.rows, m.cols), (2, 3));
+        m.reshape_in_place(30, 30);
+        assert_eq!(m.data.capacity(), cap);
+    }
+
+    #[test]
+    fn copy_from_matches_clone() {
+        let mut rng = Rng::new(26);
+        let a = Mat::gauss(6, 9, &mut rng);
+        let mut b = Mat::zeros(1, 1);
+        b.copy_from(&a);
+        assert_eq!(a, b);
     }
 
     #[test]

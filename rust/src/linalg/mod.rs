@@ -10,13 +10,14 @@
 pub mod chol;
 pub mod covop;
 pub mod eig;
+pub(crate) mod gemm;
 pub mod mat;
 pub mod qr;
 pub mod svd;
 
-pub use chol::cholesky;
+pub use chol::{cholesky, cholesky_into, solve_r_right_into};
 pub use covop::CovOp;
 pub use eig::{power_iteration, sym_eig};
 pub use mat::Mat;
-pub use qr::{householder_qr, mgs_qr};
+pub use qr::{householder_qr, mgs_qr, QrScratch};
 pub use svd::{singular_values, svd_small};

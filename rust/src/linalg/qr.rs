@@ -7,16 +7,52 @@
 
 use super::mat::Mat;
 
+/// Reusable scratch for [`householder_qr_into`] / [`orthonormalize_into`].
+///
+/// Holds the working copy of the input and the flattened Householder
+/// vectors (vector `k` lives at `vs[k·m .. k·m + (m−k)]`). Both buffers
+/// only grow, so after warm-up a fixed-shape QR performs zero heap
+/// allocations.
+#[derive(Debug, Default)]
+pub struct QrScratch {
+    work: Mat,
+    vs: Vec<f64>,
+}
+
+impl QrScratch {
+    pub fn new() -> QrScratch {
+        QrScratch::default()
+    }
+}
+
 /// Thin Householder QR: `a = Q R` with `Q ∈ R^{m×n}` having orthonormal
 /// columns and `R ∈ R^{n×n}` upper triangular with non-negative diagonal.
 pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    let mut q = Mat::zeros(a.rows, a.cols);
+    let mut rr = Mat::zeros(a.cols, a.cols);
+    let mut ws = QrScratch::new();
+    householder_qr_into(a, &mut q, Some(&mut rr), &mut ws);
+    (q, rr)
+}
+
+/// Allocation-free thin Householder QR into caller-provided buffers.
+///
+/// `q` (and `rr`, when requested) are reshaped in place; `ws` supplies
+/// the working storage. The arithmetic and operation order are exactly
+/// those of [`householder_qr`] (which delegates here), so results are
+/// bitwise identical to the allocating path.
+pub fn householder_qr_into(a: &Mat, q: &mut Mat, mut rr: Option<&mut Mat>, ws: &mut QrScratch) {
     let (m, n) = (a.rows, a.cols);
     assert!(m >= n, "householder_qr requires rows >= cols");
-    let mut r = a.clone();
-    // Householder vectors stored per reflection.
-    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    ws.work.copy_from(a);
+    if ws.vs.len() < n * m {
+        ws.vs.resize(n * m, 0.0);
+    }
+    let r = &mut ws.work;
+    let vs = &mut ws.vs;
 
     for k in 0..n {
+        let vseg = &mut vs[k * m..k * m + (m - k)];
         // Compute the norm of the k-th column below (and including) row k.
         let mut norm = 0.0;
         for i in k..m {
@@ -24,78 +60,83 @@ pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
             norm += v * v;
         }
         let norm = norm.sqrt();
-        let mut v = vec![0.0; m - k];
         if norm == 0.0 {
             // Degenerate column: identity reflection.
-            vs.push(v);
+            vseg.fill(0.0);
             continue;
         }
         let alpha = if r.get(k, k) >= 0.0 { -norm } else { norm };
         for (idx, i) in (k..m).enumerate() {
-            v[idx] = r.get(i, k);
+            vseg[idx] = r.get(i, k);
         }
-        v[0] -= alpha;
-        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        vseg[0] -= alpha;
+        let vnorm2: f64 = vseg.iter().map(|x| x * x).sum();
         if vnorm2 > 0.0 {
             // Apply H = I - 2 v vᵀ / (vᵀv) to the trailing block of R.
             for j in k..n {
                 let mut dot = 0.0;
                 for (idx, i) in (k..m).enumerate() {
-                    dot += v[idx] * r.get(i, j);
+                    dot += vseg[idx] * r.get(i, j);
                 }
                 let s = 2.0 * dot / vnorm2;
                 for (idx, i) in (k..m).enumerate() {
-                    let val = r.get(i, j) - s * v[idx];
+                    let val = r.get(i, j) - s * vseg[idx];
                     r.set(i, j, val);
                 }
             }
         }
-        vs.push(v);
     }
 
     // Build thin Q by applying reflections to the first n columns of I.
-    let mut q = Mat::zeros(m, n);
+    q.reshape_in_place(m, n);
+    q.fill(0.0);
     for j in 0..n {
         q.set(j, j, 1.0);
     }
     for k in (0..n).rev() {
-        let v = &vs[k];
-        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        let vseg = &vs[k * m..k * m + (m - k)];
+        let vnorm2: f64 = vseg.iter().map(|x| x * x).sum();
         if vnorm2 == 0.0 {
             continue;
         }
         for j in 0..n {
             let mut dot = 0.0;
             for (idx, i) in (k..m).enumerate() {
-                dot += v[idx] * q.get(i, j);
+                dot += vseg[idx] * q.get(i, j);
             }
             let s = 2.0 * dot / vnorm2;
             for (idx, i) in (k..m).enumerate() {
-                let val = q.get(i, j) - s * v[idx];
+                let val = q.get(i, j) - s * vseg[idx];
                 q.set(i, j, val);
             }
         }
     }
 
-    // Extract upper-triangular R (n×n) and fix signs so diag(R) >= 0 —
-    // makes the factorization unique and matches the JAX MGS convention.
-    let mut rr = Mat::zeros(n, n);
-    for i in 0..n {
-        for j in i..n {
-            rr.set(i, j, r.get(i, j));
+    // Extract upper-triangular R (n×n) when requested, then fix signs so
+    // diag(R) >= 0 — makes the factorization unique and matches the JAX
+    // MGS convention. (Row flips never change a later diagonal entry, so
+    // reading the sign from the working matrix is equivalent.)
+    if let Some(rr) = rr.as_deref_mut() {
+        rr.reshape_in_place(n, n);
+        rr.fill(0.0);
+        for i in 0..n {
+            for j in i..n {
+                rr.set(i, j, r.get(i, j));
+            }
         }
     }
     for i in 0..n {
-        if rr.get(i, i) < 0.0 {
-            for j in 0..n {
-                rr.set(i, j, -rr.get(i, j));
+        if r.get(i, i) < 0.0 {
+            if let Some(rr) = rr.as_deref_mut() {
+                for j in 0..n {
+                    rr.set(i, j, -rr.get(i, j));
+                }
             }
             for row in 0..m {
                 q.set(row, i, -q.get(row, i));
             }
         }
     }
-    (q, rr)
 }
 
 /// Modified Gram–Schmidt QR (thin). Matches the L2 JAX orthonormalization.
@@ -134,9 +175,16 @@ pub fn mgs_qr(a: &Mat) -> (Mat, Mat) {
     (q, r)
 }
 
-/// Orthonormalize in place (returns Q only) — the S-DOT inner step.
+/// Orthonormalize (returns Q only) — the S-DOT inner step.
 pub fn orthonormalize(a: &Mat) -> Mat {
     householder_qr(a).0
+}
+
+/// Allocation-free orthonormalization into a caller-provided buffer —
+/// the zero-allocation S-DOT inner step. Bitwise identical to
+/// [`orthonormalize`].
+pub fn orthonormalize_into(a: &Mat, q: &mut Mat, ws: &mut QrScratch) {
+    householder_qr_into(a, q, None, ws);
 }
 
 #[cfg(test)]
@@ -224,6 +272,36 @@ mod tests {
         let (q, r) = householder_qr(&Mat::eye(4));
         assert!(q.dist_fro(&Mat::eye(4)) < 1e-12);
         assert!(r.dist_fro(&Mat::eye(4)) < 1e-12);
+    }
+
+    #[test]
+    fn into_variant_bitwise_matches_allocating() {
+        let mut rng = Rng::new(7);
+        let mut ws = QrScratch::new();
+        let mut q = Mat::zeros(0, 0);
+        let mut r = Mat::zeros(0, 0);
+        for &(m, n) in &[(4usize, 4usize), (10, 3), (25, 7), (6, 1)] {
+            let a = Mat::gauss(m, n, &mut rng);
+            let (q0, r0) = householder_qr(&a);
+            householder_qr_into(&a, &mut q, Some(&mut r), &mut ws);
+            assert_eq!(q.data, q0.data, "{m}x{n} Q");
+            assert_eq!(r.data, r0.data, "{m}x{n} R");
+            // Scratch reuse across shapes must not change results.
+            orthonormalize_into(&a, &mut q, &mut ws);
+            assert_eq!(q.data, q0.data, "{m}x{n} ortho");
+        }
+    }
+
+    #[test]
+    fn into_variant_handles_rank_deficiency() {
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[1.0, 1.0], &[0.0, 0.0]]);
+        let (q0, r0) = householder_qr(&a);
+        let mut ws = QrScratch::new();
+        let mut q = Mat::zeros(0, 0);
+        let mut r = Mat::zeros(0, 0);
+        householder_qr_into(&a, &mut q, Some(&mut r), &mut ws);
+        assert_eq!(q.data, q0.data);
+        assert_eq!(r.data, r0.data);
     }
 
     #[test]

@@ -66,17 +66,25 @@ pub fn svd_small(a: &Mat) -> (Mat, Vec<f64>, Mat) {
 /// Polar-sign adjustment used by DeEPCA: orient the columns of `q` to align
 /// with reference `q_ref` (flip sign where the diagonal of `q_refᵀ q` < 0).
 pub fn sign_adjust(q: &Mat, q_ref: &Mat) -> Mat {
+    let mut out = Mat::zeros(0, 0);
+    let mut tmp = Mat::zeros(0, 0);
+    sign_adjust_into(q, q_ref, &mut out, &mut tmp);
+    out
+}
+
+/// Allocation-free [`sign_adjust`] into caller-provided buffers
+/// (`tmp` holds the diagnostic product `q_refᵀ q`).
+pub fn sign_adjust_into(q: &Mat, q_ref: &Mat, out: &mut Mat, tmp: &mut Mat) {
     assert_eq!(q.cols, q_ref.cols);
-    let d = q_ref.t_matmul(q);
-    let mut out = q.clone();
+    q_ref.t_matmul_into(q, tmp);
+    out.copy_from(q);
     for j in 0..q.cols {
-        if d.get(j, j) < 0.0 {
+        if tmp.get(j, j) < 0.0 {
             for i in 0..q.rows {
                 out.set(i, j, -out.get(i, j));
             }
         }
     }
-    out
 }
 
 #[cfg(test)]

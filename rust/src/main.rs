@@ -8,7 +8,7 @@
 //! dpsa info                         # runtime/artifact status
 //! dpsa demo [flags]                 # 10-second S-DOT walkthrough
 //!
-//! flags: --seed N --scale F --trials N --out DIR --config FILE.json
+//! flags: --seed N --scale F --trials N --threads N --out DIR --config FILE.json
 //! ```
 
 use anyhow::Result;
@@ -49,6 +49,7 @@ fn dispatch(args: &Args) -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let ctx = load_ctx(args)?;
+    dpsa::network::sim::set_default_threads(ctx.threads);
     let mut ids: Vec<String> = args.positional[1..].to_vec();
     if ids.iter().any(|i| i == "all") {
         ids = all_ids().iter().map(|s| s.to_string()).collect();
@@ -138,6 +139,6 @@ fn cmd_demo(args: &Args) -> Result<()> {
 fn print_usage() {
     println!(
         "usage: dpsa <list|run|info|demo> [ids…] \
-         [--seed N] [--scale F] [--trials N] [--out DIR] [--config FILE]"
+         [--seed N] [--scale F] [--trials N] [--threads N] [--out DIR] [--config FILE]"
     );
 }

@@ -4,46 +4,138 @@
 //! counters, and exposes the communication primitives the algorithms need:
 //! weighted consensus rounds, sum-rescaling, and ratio (push-sum style)
 //! consensus for the distributed QR inside F-DOT.
+//!
+//! Every mixing primitive routes through the shared engine kernel
+//! (`consensus::engine::consensus_rounds`): one double buffer, one P2P
+//! accounting site, and per-node mixing fanned across the network's
+//! [`NodePool`]. The network owns a persistent [`ConsensusWorkspace`]
+//! plus a cache of the `W^t e₁` rescaling vectors, so steady-state
+//! consensus rounds perform **zero heap allocations** after warm-up.
+//!
+//! Thread count: `SyncNetwork::new` uses the process-wide default set by
+//! [`set_default_threads`] (1 unless configured — e.g. via the
+//! `--threads` CLI flag); `with_threads` pins it explicitly. Results are
+//! bitwise identical for every thread count (see `runtime::pool`).
 
-use crate::consensus::engine::{average_consensus, rescale_to_sum};
+use crate::consensus::engine::consensus_rounds;
 use crate::consensus::weights::{local_degree_weights, WeightMatrix};
 use crate::graph::Graph;
 use crate::linalg::Mat;
 use crate::network::counters::P2pCounters;
+use crate::runtime::pool::NodePool;
+use crate::runtime::workspace::ConsensusWorkspace;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide default thread count for newly created networks.
+static DEFAULT_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the default node-parallelism for `SyncNetwork::new` (1 = serial).
+pub fn set_default_threads(threads: usize) {
+    DEFAULT_THREADS.store(threads.max(1), Ordering::Relaxed);
+}
+
+/// Current default node-parallelism.
+pub fn default_threads() -> usize {
+    DEFAULT_THREADS.load(Ordering::Relaxed)
+}
 
 /// A synchronous network: topology + weights + exact message accounting.
-#[derive(Clone, Debug)]
 pub struct SyncNetwork {
     pub graph: Graph,
     pub weights: WeightMatrix,
     pub counters: P2pCounters,
+    threads: usize,
+    pool: NodePool,
+    ws: ConsensusWorkspace,
+    /// `W^t e₁` rescaling vectors keyed by round count (S-DOT reuses one
+    /// entry; SA-DOT at most one per distinct `T_c(t)`).
+    rescale_cache: HashMap<usize, Vec<f64>>,
 }
 
 impl SyncNetwork {
     pub fn new(graph: Graph) -> SyncNetwork {
         let weights = local_degree_weights(&graph);
-        let n = graph.n;
-        SyncNetwork { graph, weights, counters: P2pCounters::new(n) }
+        SyncNetwork::assemble(graph, weights, default_threads())
     }
 
     pub fn with_weights(graph: Graph, weights: WeightMatrix) -> SyncNetwork {
+        SyncNetwork::assemble(graph, weights, default_threads())
+    }
+
+    /// A network with an explicit node-parallelism (1 = the serial path).
+    pub fn with_threads(graph: Graph, threads: usize) -> SyncNetwork {
+        let weights = local_degree_weights(&graph);
+        SyncNetwork::assemble(graph, weights, threads)
+    }
+
+    fn assemble(graph: Graph, weights: WeightMatrix, threads: usize) -> SyncNetwork {
         let n = graph.n;
-        SyncNetwork { graph, weights, counters: P2pCounters::new(n) }
+        let threads = threads.max(1);
+        SyncNetwork {
+            graph,
+            weights,
+            counters: P2pCounters::new(n),
+            threads,
+            pool: NodePool::new(threads),
+            ws: ConsensusWorkspace::new(),
+            rescale_cache: HashMap::new(),
+        }
     }
 
     pub fn n(&self) -> usize {
         self.graph.n
     }
 
+    /// Node-parallelism of this network.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The node pool — algorithm runners fan their per-node work
+    /// (`cov_apply`, local QR, …) across the same threads as the mixer.
+    pub fn pool(&self) -> &NodePool {
+        &self.pool
+    }
+
     /// Run `rounds` of average consensus in place over per-node matrices.
     pub fn consensus(&mut self, z: &mut Vec<Mat>, rounds: usize) {
-        average_consensus(&self.graph, &self.weights, z, rounds, &mut self.counters);
+        self.ws.ensure_mats(z);
+        consensus_rounds(
+            &self.graph,
+            &self.weights,
+            z,
+            &mut self.ws.next,
+            None,
+            rounds,
+            &mut self.counters,
+            &self.pool,
+        );
     }
 
     /// Consensus then rescale to a **sum** estimate (Alg. 1 steps 6–11).
     pub fn consensus_sum(&mut self, z: &mut Vec<Mat>, rounds: usize) {
         self.consensus(z, rounds);
-        rescale_to_sum(&self.weights, z, rounds);
+        self.rescale_to_sum_cached(z, rounds);
+    }
+
+    /// Alg. 1 step 11 with a per-round-count cache of `W^{T_c} e₁`
+    /// (numerically identical to `consensus::engine::rescale_to_sum`).
+    fn rescale_to_sum_cached(&mut self, z: &mut [Mat], rounds: usize) {
+        let weights = &self.weights;
+        let v = self
+            .rescale_cache
+            .entry(rounds)
+            .or_insert_with(|| weights.pow_e1(rounds));
+        let n = z.len() as f64;
+        for (i, m) in z.iter_mut().enumerate() {
+            let s = v[i];
+            if s > 1e-9 {
+                m.scale_inplace(1.0 / s);
+            } else {
+                m.scale_inplace(n);
+            }
+        }
     }
 
     /// Ratio consensus (push-sum with doubly-stochastic weights): each node
@@ -52,47 +144,60 @@ impl SyncNetwork {
     /// where the weight channel starts at `e_1`-like mass `1/N` per node.
     ///
     /// Used by F-DOT's distributed QR: the Gram matrix `K = Σ_i V_iᵀV_i`
-    /// is summed this way (message payload r×r + 1).
+    /// is summed this way (message payload r×r + 1). The mixing itself is
+    /// the shared engine kernel, so P2P counter accounting lives in one
+    /// place.
     pub fn ratio_consensus_sum(&mut self, z: &mut Vec<Mat>, rounds: usize) {
         let n = self.n();
         assert_eq!(z.len(), n);
-        let mut weights_chan = vec![1.0 / n as f64; n];
-        let elems = z[0].rows * z[0].cols + 1;
-        let mut next: Vec<Mat> = z.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
-        let mut next_w = vec![0.0; n];
-        for _round in 0..rounds {
-            for i in 0..n {
-                let wii = self.weights.w.get(i, i);
-                let dst = &mut next[i];
-                dst.data.copy_from_slice(&z[i].data);
-                dst.scale_inplace(wii);
-                next_w[i] = wii * weights_chan[i];
-                for &j in &self.graph.adj[i] {
-                    let wij = self.weights.w.get(i, j);
-                    dst.axpy(wij, &z[j]);
-                    next_w[i] += wij * weights_chan[j];
-                }
-            }
-            for i in 0..n {
-                for _ in 0..self.graph.degree(i) {
-                    self.counters.record_send(i, elems);
-                }
-            }
-            std::mem::swap(z, &mut next);
-            std::mem::swap(&mut weights_chan, &mut next_w);
-        }
-        for i in 0..n {
-            let s = weights_chan[i] * n as f64; // → 1 as rounds → ∞
-            z[i].scale_inplace(1.0 / (weights_chan[i].max(1e-300)));
-            // z now estimates N × average = sum when s ≈ 1; the ratio
-            // z/weight is exactly sum-preserving for any finite rounds.
-            let _ = s;
+        self.ws.ensure_mats(z);
+        self.ws.ensure_scalars(n, 1.0 / n as f64);
+        consensus_rounds(
+            &self.graph,
+            &self.weights,
+            z,
+            &mut self.ws.next,
+            Some((&mut self.ws.w_src, &mut self.ws.w_dst)),
+            rounds,
+            &mut self.counters,
+            &self.pool,
+        );
+        // The ratio z/weight is exactly sum-preserving for any finite
+        // number of rounds (the weight channel → 1/N as rounds → ∞).
+        for (m, &w) in z.iter_mut().zip(self.ws.w_src.iter()) {
+            m.scale_inplace(1.0 / w.max(1e-300));
         }
     }
 
     /// Reset counters (e.g. between algorithm phases being measured).
     pub fn reset_counters(&mut self) {
         self.counters = P2pCounters::new(self.n());
+    }
+}
+
+impl Clone for SyncNetwork {
+    /// Clones topology, weights and counter state; the pool and
+    /// workspaces are rebuilt fresh (same thread count).
+    fn clone(&self) -> SyncNetwork {
+        SyncNetwork {
+            graph: self.graph.clone(),
+            weights: self.weights.clone(),
+            counters: self.counters.clone(),
+            threads: self.threads,
+            pool: NodePool::new(self.threads),
+            ws: ConsensusWorkspace::new(),
+            rescale_cache: self.rescale_cache.clone(),
+        }
+    }
+}
+
+impl std::fmt::Debug for SyncNetwork {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SyncNetwork")
+            .field("graph", &self.graph)
+            .field("counters", &self.counters)
+            .field("threads", &self.threads)
+            .finish()
     }
 }
 
@@ -155,5 +260,78 @@ mod tests {
         assert_eq!(net.counters.sent[0], (3 + 4) * 2);
         net.reset_counters();
         assert_eq!(net.counters.total(), 0);
+    }
+
+    #[test]
+    fn threaded_consensus_bitwise_matches_serial() {
+        let mut rng = Rng::new(3);
+        let g = Graph::erdos_renyi(12, 0.4, &mut rng);
+        let z0: Vec<Mat> = (0..12).map(|_| Mat::gauss(7, 3, &mut rng)).collect();
+
+        let mut net1 = SyncNetwork::with_threads(g.clone(), 1);
+        let mut z1 = z0.clone();
+        net1.consensus_sum(&mut z1, 37);
+
+        let mut net4 = SyncNetwork::with_threads(g, 4);
+        let mut z4 = z0.clone();
+        net4.consensus_sum(&mut z4, 37);
+
+        for (a, b) in z1.iter().zip(z4.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(net1.counters.sent, net4.counters.sent);
+    }
+
+    #[test]
+    fn threaded_ratio_consensus_bitwise_matches_serial() {
+        let mut rng = Rng::new(4);
+        let g = Graph::erdos_renyi(9, 0.5, &mut rng);
+        let z0: Vec<Mat> = (0..9).map(|_| Mat::gauss(4, 4, &mut rng)).collect();
+
+        let mut net1 = SyncNetwork::with_threads(g.clone(), 1);
+        let mut z1 = z0.clone();
+        net1.ratio_consensus_sum(&mut z1, 25);
+
+        let mut net4 = SyncNetwork::with_threads(g, 4);
+        let mut z4 = z0.clone();
+        net4.ratio_consensus_sum(&mut z4, 25);
+
+        for (a, b) in z1.iter().zip(z4.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn engine_wrapper_matches_network_consensus() {
+        // The back-compat engine wrapper and the workspace-reusing
+        // network path must produce identical numbers.
+        let mut rng = Rng::new(5);
+        let g = Graph::erdos_renyi(8, 0.5, &mut rng);
+        let wm = local_degree_weights(&g);
+        let z0: Vec<Mat> = (0..8).map(|_| Mat::gauss(5, 2, &mut rng)).collect();
+
+        let mut z_engine = z0.clone();
+        let mut c = P2pCounters::new(8);
+        crate::consensus::engine::average_consensus(&g, &wm, &mut z_engine, 19, &mut c);
+
+        let mut net = SyncNetwork::new(g);
+        let mut z_net = z0;
+        net.consensus(&mut z_net, 19);
+
+        for (a, b) in z_engine.iter().zip(z_net.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn with_threads_clamps_and_reports() {
+        // (The process-wide default is exercised by the CLI/bench entry
+        // points; asserting on it here would race with parallel tests.)
+        assert!(default_threads() >= 1);
+        let g = Graph::ring(4);
+        let net = SyncNetwork::with_threads(g.clone(), 0); // clamps to 1
+        assert_eq!(net.threads(), 1);
+        let net = SyncNetwork::with_threads(g, 3);
+        assert_eq!(net.threads(), 3);
     }
 }

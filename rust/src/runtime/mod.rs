@@ -1,21 +1,45 @@
-//! Execution backends for the per-node numerical hot path.
+//! Execution backends and the parallel runtime for the per-node hot path.
 //!
 //! The coordinator calls [`Backend::cov_apply`] (`M_i Q`, Alg. 1 step 5) and
 //! [`Backend::orthonormalize`] (step 12) through this trait:
 //!
-//! * [`NativeBackend`] — pure-Rust `linalg`, always available, f64.
+//! * [`NativeBackend`] — pure-Rust `linalg`, always available, f64, with
+//!   true in-place `*_into` overrides (the zero-allocation path).
 //! * [`xla::XlaBackend`] — loads the AOT artifacts produced by
 //!   `python/compile/aot.py` (JAX/Pallas → HLO text) and executes them on
 //!   the PJRT CPU client, f32. Shapes without a compiled artifact fall back
-//!   to native. Python never runs at request time.
+//!   to native. Python never runs at request time. The real implementation
+//!   needs the external `xla` crate and is gated behind the `xla-pjrt`
+//!   feature; default builds compile an API-compatible stub that always
+//!   reports the backend as unavailable.
+//!
+//! This module also hosts the parallel substrate: [`pool`] (the
+//! dependency-free scoped-thread node pool) and [`workspace`] (persistent
+//! scratch for the zero-allocation steady state). Backends must be
+//! [`Sync`] because algorithm runners invoke them from pool workers —
+//! one node per call, never sharing output buffers, which preserves the
+//! pool's bitwise-determinism contract.
 
 pub mod native;
+pub mod pool;
+pub mod workspace;
+
+#[cfg(feature = "xla-pjrt")]
 pub mod xla;
 
+#[cfg(not(feature = "xla-pjrt"))]
+#[path = "xla_stub.rs"]
+pub mod xla;
+
+use crate::linalg::qr::QrScratch;
 use crate::linalg::{CovOp, Mat};
 
 /// Numerical backend for the per-node hot path.
-pub trait Backend {
+///
+/// `Sync` is required so per-node calls can fan out across the node
+/// pool; implementations must not mutate shared state per call (or must
+/// synchronize it internally).
+pub trait Backend: Sync {
     /// `M_i Q` — the O(d²r) product dominating each outer iteration.
     fn cov_apply(&self, cov: &CovOp, q: &Mat) -> Mat;
     /// Thin QR orthonormalization, returning Q.
@@ -25,8 +49,26 @@ pub trait Backend {
     fn oi_step(&self, cov: &CovOp, q: &Mat) -> Mat {
         self.orthonormalize(&self.cov_apply(cov, q))
     }
+    /// Allocation-free `out = M_i Q` into caller-provided buffers. The
+    /// default falls back to the allocating path (backends with their own
+    /// memory management, like XLA, keep it); [`NativeBackend`] overrides
+    /// with the true in-place kernel.
+    fn cov_apply_into(&self, cov: &CovOp, q: &Mat, out: &mut Mat, tmp: &mut Mat) {
+        let v = self.cov_apply(cov, q);
+        out.copy_from(&v);
+        let _ = tmp;
+    }
+    /// Allocation-free orthonormalization into a caller-provided buffer;
+    /// same fallback contract as [`Backend::cov_apply_into`].
+    fn orthonormalize_into(&self, v: &Mat, out: &mut Mat, ws: &mut QrScratch) {
+        let q = self.orthonormalize(v);
+        out.copy_from(&q);
+        let _ = ws;
+    }
     fn name(&self) -> &'static str;
 }
 
 pub use native::NativeBackend;
+pub use pool::{DisjointSlice, NodePool};
+pub use workspace::{node_scratch, ConsensusWorkspace, NodeScratch};
 pub use xla::XlaBackend;

@@ -1,7 +1,8 @@
 //! Pure-Rust backend (f64, `linalg`).
 
 use super::Backend;
-use crate::linalg::{qr, CovOp, Mat};
+use crate::linalg::qr::{self, QrScratch};
+use crate::linalg::{CovOp, Mat};
 
 /// The default backend: exact f64 arithmetic via the in-repo linalg.
 #[derive(Clone, Copy, Debug, Default)]
@@ -14,6 +15,14 @@ impl Backend for NativeBackend {
 
     fn orthonormalize(&self, v: &Mat) -> Mat {
         qr::orthonormalize(v)
+    }
+
+    fn cov_apply_into(&self, cov: &CovOp, q: &Mat, out: &mut Mat, tmp: &mut Mat) {
+        cov.apply_into(q, out, tmp);
+    }
+
+    fn orthonormalize_into(&self, v: &Mat, out: &mut Mat, ws: &mut QrScratch) {
+        qr::orthonormalize_into(v, out, ws);
     }
 
     fn name(&self) -> &'static str {
@@ -37,6 +46,23 @@ mod tests {
         let v = Mat::gauss(10, 3, &mut rng);
         let qn = b.orthonormalize(&v);
         assert!(qn.t_matmul(&qn).dist_fro(&Mat::eye(3)) < 1e-10);
+    }
+
+    #[test]
+    fn into_overrides_match_allocating_bitwise() {
+        let mut rng = Rng::new(3);
+        let x = Mat::gauss(12, 50, &mut rng);
+        let cov = CovOp::from_samples(x);
+        let q = Mat::random_orthonormal(12, 4, &mut rng);
+        let b = NativeBackend;
+        let mut out = Mat::zeros(0, 0);
+        let mut tmp = Mat::zeros(0, 0);
+        b.cov_apply_into(&cov, &q, &mut out, &mut tmp);
+        assert_eq!(out.data, b.cov_apply(&cov, &q).data);
+        let mut qn = Mat::zeros(0, 0);
+        let mut ws = crate::linalg::qr::QrScratch::new();
+        b.orthonormalize_into(&out, &mut qn, &mut ws);
+        assert_eq!(qn.data, b.orthonormalize(&out).data);
     }
 
     #[test]

@@ -1,0 +1,390 @@
+//! Dependency-free scoped-thread node pool for the per-node hot path.
+//!
+//! `NodePool` owns `threads − 1` persistent OS workers plus the calling
+//! thread. [`NodePool::run_chunks`] partitions the node index range
+//! `0..n` into at most `threads` **contiguous, deterministically chosen**
+//! chunks and executes a borrowed closure on each, blocking until every
+//! chunk finishes. Dispatch reuses the same parked workers for the whole
+//! pool lifetime, so the steady-state cost per dispatch is one mutex
+//! round-trip and a condvar wake — no thread spawns, no heap allocation.
+//!
+//! # Determinism contract
+//!
+//! Results are **bitwise identical for every thread count**, because the
+//! pool only ever parallelizes *across nodes*:
+//!
+//! * chunk boundaries depend only on `(n, threads)` — chunk `c` covers
+//!   `[c·n/t, (c+1)·n/t)` — and each index is processed by exactly one
+//!   chunk, so the node → work assignment is a pure function of the
+//!   inputs (which thread runs a chunk is irrelevant to the output);
+//! * callers must (and in this crate do) perform **no cross-node
+//!   reductions** inside a dispatch: every chunk writes only its own
+//!   disjoint slice elements ([`DisjointSlice`]) and reads shared inputs
+//!   immutably, so no floating-point reduction order ever changes.
+//!
+//! With `threads = 1` (the default) nothing is spawned and `run_chunks`
+//! degenerates to a plain serial loop — byte-for-byte the serial path.
+
+use std::marker::PhantomData;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Work shared between the coordinator and the workers for one dispatch.
+struct JobSlot {
+    /// Monotonic dispatch counter; workers wake when it advances.
+    epoch: u64,
+    /// The borrowed chunk closure, lifetime-erased for the dispatch
+    /// duration (cleared before `run_chunks` returns).
+    job: Option<&'static (dyn Fn(usize, usize) + Sync)>,
+    /// Total chunks and the next unclaimed chunk index for this epoch.
+    chunks: usize,
+    next: usize,
+    /// Items covered by this dispatch (chunk bounds derive from this).
+    items: usize,
+    /// Workers that have not yet finished the current epoch.
+    active: usize,
+    /// Set when a worker's chunk panicked; the coordinator re-raises.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<JobSlot>,
+    go: Condvar,
+    done: Condvar,
+}
+
+/// Persistent worker pool; see the module docs for the contract.
+pub struct NodePool {
+    threads: usize,
+    shared: Option<Arc<Shared>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Deterministic chunk bounds: chunk `c` of `t` over `n` items.
+#[inline]
+fn chunk_bounds(n: usize, t: usize, c: usize) -> (usize, usize) {
+    (c * n / t, (c + 1) * n / t)
+}
+
+impl NodePool {
+    /// A pool using `threads` OS threads in total (the caller counts as
+    /// one). `threads <= 1` spawns nothing and runs everything serially.
+    pub fn new(threads: usize) -> NodePool {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return NodePool { threads, shared: None, handles: Vec::new() };
+        }
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(JobSlot {
+                epoch: 0,
+                job: None,
+                chunks: 0,
+                next: 0,
+                items: 0,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads - 1);
+        for w in 0..threads - 1 {
+            let sh = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dpsa-node-pool-{w}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker"),
+            );
+        }
+        NodePool { threads, shared: Some(shared), handles }
+    }
+
+    /// Serial pool (no workers) — the `threads = 1` path.
+    pub fn serial() -> NodePool {
+        NodePool::new(1)
+    }
+
+    /// Total threads this pool uses, including the calling thread.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Partition `0..n` into deterministic contiguous chunks and run
+    /// `f(lo, hi)` for each, in parallel across the pool. Blocks until
+    /// all chunks complete. `f` may borrow from the caller's stack.
+    pub fn run_chunks<F: Fn(usize, usize) + Sync>(&self, n: usize, f: &F) {
+        if n == 0 {
+            return;
+        }
+        let t = self.threads.min(n);
+        let shared = match &self.shared {
+            Some(s) if t > 1 => s,
+            _ => {
+                f(0, n);
+                return;
+            }
+        };
+        // SAFETY: the reference is only reachable through the job slot,
+        // every worker finishes using it before decrementing `active`,
+        // and we clear the slot (under the lock) before returning — so
+        // the erased reference never outlives this call frame.
+        let wide: &(dyn Fn(usize, usize) + Sync) = f;
+        let erased: &'static (dyn Fn(usize, usize) + Sync) =
+            unsafe { std::mem::transmute(wide) };
+        let workers = self.handles.len();
+        {
+            let mut s = shared.slot.lock().unwrap();
+            s.job = Some(erased);
+            s.chunks = t;
+            s.items = n;
+            s.next = 0;
+            s.active = workers;
+            s.panicked = false;
+            s.epoch = s.epoch.wrapping_add(1);
+        }
+        shared.go.notify_all();
+        // The caller participates in the chunk race like any worker. A
+        // panic in `f` is caught and re-raised only after every worker
+        // has finished the epoch — `f` must never be reachable once this
+        // frame unwinds (that is what makes the lifetime erasure sound).
+        let mut caller_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        loop {
+            let mut s = shared.slot.lock().unwrap();
+            if s.next >= s.chunks {
+                break;
+            }
+            let c = s.next;
+            s.next += 1;
+            let (chunks, items) = (s.chunks, s.items);
+            drop(s);
+            let (lo, hi) = chunk_bounds(items, chunks, c);
+            if caller_panic.is_none() {
+                if let Err(p) =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(lo, hi)))
+                {
+                    caller_panic = Some(p);
+                }
+            }
+        }
+        let mut s = shared.slot.lock().unwrap();
+        while s.active > 0 {
+            s = shared.done.wait(s).unwrap();
+        }
+        s.job = None;
+        let worker_panicked = s.panicked;
+        drop(s);
+        if let Some(p) = caller_panic {
+            std::panic::resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("node-pool worker panicked during dispatch");
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen = 0u64;
+    loop {
+        let mut s = shared.slot.lock().unwrap();
+        while s.epoch == seen && !s.shutdown {
+            s = shared.go.wait(s).unwrap();
+        }
+        if s.shutdown {
+            return;
+        }
+        seen = s.epoch;
+        loop {
+            if s.next >= s.chunks {
+                break;
+            }
+            let c = s.next;
+            s.next += 1;
+            let (chunks, items) = (s.chunks, s.items);
+            let f = s.job.expect("job present during epoch");
+            drop(s);
+            let (lo, hi) = chunk_bounds(items, chunks, c);
+            // Catch panics so the epoch barrier always completes; the
+            // coordinator re-raises after the dispatch drains.
+            let panicked =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(lo, hi))).is_err();
+            s = shared.slot.lock().unwrap();
+            if panicked {
+                s.panicked = true;
+            }
+        }
+        s.active -= 1;
+        if s.active == 0 {
+            shared.done.notify_all();
+        }
+        drop(s);
+    }
+}
+
+impl Drop for NodePool {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            if let Ok(mut s) = shared.slot.lock() {
+                s.shutdown = true;
+            }
+            shared.go.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for NodePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "NodePool {{ threads: {} }}", self.threads)
+    }
+}
+
+/// A shared wrapper over a mutable slice allowing **disjoint** per-index
+/// writes from multiple pool chunks.
+///
+/// The borrow checker cannot see that parallel chunks write disjoint
+/// elements, so element access is an `unsafe fn`: the caller must
+/// guarantee that while a dispatch is in flight, each index is accessed
+/// by at most one chunk (the contiguous-chunk partition of `run_chunks`
+/// gives this for free when chunk `c` only touches indices in
+/// `[lo, hi)`).
+pub struct DisjointSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
+
+impl<'a, T> DisjointSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> DisjointSlice<'a, T> {
+        DisjointSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mutable access to element `i`.
+    ///
+    /// # Safety
+    /// No other chunk may concurrently access index `i`, and `i` must be
+    /// in bounds (checked by an assert).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        assert!(i < self.len, "DisjointSlice index {i} out of bounds ({})", self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        for &(n, t) in &[(1usize, 4usize), (7, 3), (20, 4), (4, 8), (100, 1), (13, 13)] {
+            let mut seen = vec![0u32; n];
+            let mut c = 0;
+            let tt = t.min(n);
+            while c < tt {
+                let (lo, hi) = chunk_bounds(n, tt, c);
+                for s in seen[lo..hi].iter_mut() {
+                    *s += 1;
+                }
+                c += 1;
+            }
+            assert!(seen.iter().all(|&s| s == 1), "n={n} t={t} seen={seen:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let pool = NodePool::new(4);
+        let n = 103;
+        let mut out = vec![0.0f64; n];
+        {
+            let d = DisjointSlice::new(&mut out);
+            pool.run_chunks(n, &|lo, hi| {
+                for i in lo..hi {
+                    // SAFETY: each index belongs to exactly one chunk.
+                    unsafe { *d.get_mut(i) = (i as f64).sqrt() * 3.0 };
+                }
+            });
+        }
+        let serial: Vec<f64> = (0..n).map(|i| (i as f64).sqrt() * 3.0).collect();
+        assert_eq!(out, serial); // bitwise: same per-element computation
+    }
+
+    #[test]
+    fn every_index_processed_once_under_contention() {
+        let pool = NodePool::new(4);
+        for round in 0..50 {
+            let n = 1 + (round * 7) % 64;
+            let counter = AtomicUsize::new(0);
+            pool.run_chunks(n, &|lo, hi| {
+                counter.fetch_add(hi - lo, Ordering::Relaxed);
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), n, "round={round}");
+        }
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = NodePool::serial();
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        pool.run_chunks(10, &|lo, hi| {
+            assert_eq!((lo, hi), (0, 10));
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn zero_items_is_noop() {
+        let pool = NodePool::new(2);
+        pool.run_chunks(0, &|_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn panics_propagate_without_deadlock() {
+        let pool = NodePool::new(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_chunks(8, &|lo, _hi| {
+                if lo == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // The pool stays usable after a panicked dispatch.
+        let total = AtomicUsize::new(0);
+        pool.run_chunks(5, &|lo, hi| {
+            total.fetch_add(hi - lo, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn pool_survives_many_dispatches() {
+        let pool = NodePool::new(3);
+        let total = AtomicUsize::new(0);
+        for _ in 0..500 {
+            pool.run_chunks(11, &|lo, hi| {
+                total.fetch_add(hi - lo, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 500 * 11);
+    }
+}

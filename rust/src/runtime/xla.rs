@@ -17,7 +17,7 @@ use super::Backend;
 use crate::linalg::{CovOp, Mat};
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
+use std::sync::Mutex;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -34,7 +34,7 @@ pub struct ArtifactEntry {
 /// The XLA backend: PJRT CPU client + compiled executable cache.
 pub struct XlaBackend {
     client: xla::PjRtClient,
-    execs: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    execs: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
     entries: HashMap<String, ArtifactEntry>,
     dir: PathBuf,
     fallback: NativeBackend,
@@ -46,9 +46,11 @@ pub struct XlaBackend {
     /// The source `Literal` is kept alive alongside the buffer because
     /// `BufferFromHostLiteral` copies asynchronously on the TFRT CPU
     /// client — dropping the literal early is a use-after-free.
-    buf_cache: RefCell<HashMap<BufKey, (xla::Literal, xla::PjRtBuffer)>>,
-    /// Count of hot-path calls served by XLA vs fallback (perf telemetry).
-    pub stats: RefCell<XlaStats>,
+    buf_cache: Mutex<HashMap<BufKey, (xla::Literal, xla::PjRtBuffer)>>,
+    /// Count of hot-path calls served by XLA vs fallback (perf telemetry);
+    /// behind a mutex because `Backend: Sync` lets pool workers share the
+    /// backend across nodes.
+    stats: Mutex<XlaStats>,
 }
 
 #[derive(Clone, Copy, Debug, Default)]
@@ -139,12 +141,12 @@ impl XlaBackend {
         let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
         let backend = XlaBackend {
             client,
-            execs: RefCell::new(HashMap::new()),
+            execs: Mutex::new(HashMap::new()),
             entries,
             dir: dir.to_path_buf(),
             fallback: NativeBackend,
-            buf_cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(XlaStats::default()),
+            buf_cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(XlaStats::default()),
         };
         // Eager compile so request-path latency is execution only.
         let keys: Vec<String> = backend.entries.keys().cloned().collect();
@@ -163,17 +165,22 @@ impl XlaBackend {
             .with_context(|| format!("parsing HLO text {:?}", entry.file))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).with_context(|| format!("compiling {k}"))?;
-        self.execs.borrow_mut().insert(k.to_string(), exe);
+        self.execs.lock().unwrap().insert(k.to_string(), exe);
         Ok(())
     }
 
     /// Number of compiled executables.
     pub fn compiled_count(&self) -> usize {
-        self.execs.borrow().len()
+        self.execs.lock().unwrap().len()
     }
 
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Snapshot of the hot-path call accounting.
+    pub fn stats(&self) -> XlaStats {
+        *self.stats.lock().unwrap()
     }
 
     fn mat_to_literal(m: &Mat) -> Result<xla::Literal> {
@@ -190,14 +197,14 @@ impl XlaBackend {
     /// Get (or build) the cached device buffer for a large reused operand.
     fn cached_buffer(&self, m: &Mat) -> Result<()> {
         let k = BufKey::of(m);
-        if self.buf_cache.borrow().contains_key(&k) {
-            self.stats.borrow_mut().buf_cache_hits += 1;
+        if self.buf_cache.lock().unwrap().contains_key(&k) {
+            self.stats.lock().unwrap().buf_cache_hits += 1;
             return Ok(());
         }
         let lit = Self::mat_to_literal(m)?;
         let buf = self.client.buffer_from_host_literal(None, &lit)?;
-        self.buf_cache.borrow_mut().insert(k, (lit, buf));
-        self.stats.borrow_mut().buf_cache_misses += 1;
+        self.buf_cache.lock().unwrap().insert(k, (lit, buf));
+        self.stats.lock().unwrap().buf_cache_misses += 1;
         Ok(())
     }
 
@@ -208,11 +215,11 @@ impl XlaBackend {
     fn try_exec2(&self, op: &str, a: &Mat, b: &Mat, out_rows: usize, out_cols: usize) -> Option<Mat> {
         let shapes = vec![vec![a.rows, a.cols], vec![b.rows, b.cols]];
         let k = key(op, &shapes);
-        let execs = self.execs.borrow();
+        let execs = self.execs.lock().unwrap();
         let exe = execs.get(&k)?;
         let run = || -> Result<Mat> {
             self.cached_buffer(a)?;
-            let cache = self.buf_cache.borrow();
+            let cache = self.buf_cache.lock().unwrap();
             let (_lit_a, buf_a) = cache.get(&BufKey::of(a)).expect("just inserted");
             // `lb` must stay alive until the output is materialized: the
             // host→device copy is asynchronous.
@@ -227,7 +234,7 @@ impl XlaBackend {
         };
         match run() {
             Ok(m) => {
-                self.stats.borrow_mut().xla_calls += 1;
+                self.stats.lock().unwrap().xla_calls += 1;
                 Some(m)
             }
             Err(e) => {
@@ -242,7 +249,7 @@ impl XlaBackend {
     pub fn try_exec1(&self, op: &str, a: &Mat, out_rows: usize, out_cols: usize) -> Option<Mat> {
         let shapes = vec![vec![a.rows, a.cols]];
         let k = key(op, &shapes);
-        let execs = self.execs.borrow();
+        let execs = self.execs.lock().unwrap();
         let exe = execs.get(&k)?;
         let run = || -> Result<Mat> {
             let la = Self::mat_to_literal(a)?;
@@ -252,7 +259,7 @@ impl XlaBackend {
         };
         match run() {
             Ok(m) => {
-                self.stats.borrow_mut().xla_calls += 1;
+                self.stats.lock().unwrap().xla_calls += 1;
                 Some(m)
             }
             Err(e) => {
@@ -267,7 +274,7 @@ impl XlaBackend {
         if let Some(m) = self.try_exec1("gram", x, x.rows, x.rows) {
             return m;
         }
-        self.stats.borrow_mut().fallback_calls += 1;
+        self.stats.lock().unwrap().fallback_calls += 1;
         x.syrk(1.0 / x.cols as f64)
     }
 }
@@ -279,7 +286,7 @@ impl Backend for XlaBackend {
                 return v;
             }
         }
-        self.stats.borrow_mut().fallback_calls += 1;
+        self.stats.lock().unwrap().fallback_calls += 1;
         self.fallback.cov_apply(cov, q)
     }
 
@@ -287,7 +294,7 @@ impl Backend for XlaBackend {
         if let Some(q) = self.try_exec1("qr_mgs", v, v.rows, v.cols) {
             return q;
         }
-        self.stats.borrow_mut().fallback_calls += 1;
+        self.stats.lock().unwrap().fallback_calls += 1;
         self.fallback.orthonormalize(v)
     }
 
@@ -297,7 +304,7 @@ impl Backend for XlaBackend {
                 return qn;
             }
         }
-        self.stats.borrow_mut().fallback_calls += 1;
+        self.stats.lock().unwrap().fallback_calls += 1;
         self.fallback.oi_step(cov, q)
     }
 

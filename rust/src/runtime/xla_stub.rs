@@ -1,0 +1,95 @@
+//! API-compatible stub for the XLA/PJRT backend.
+//!
+//! Compiled when the `xla-pjrt` feature is off (the default): the
+//! external `xla` crate (PJRT bindings) is not vendorable offline, so
+//! this stub keeps every call site — `dpsa info`, benches, examples,
+//! parity tests — compiling while reporting the backend as unavailable
+//! and executing through the native f64 linalg. The real implementation
+//! lives in `runtime/xla.rs`.
+
+use super::native::NativeBackend;
+use super::Backend;
+use crate::linalg::{CovOp, Mat};
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+/// Hot-path call accounting (mirrors the real backend's telemetry).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct XlaStats {
+    pub xla_calls: u64,
+    pub fallback_calls: u64,
+    pub buf_cache_hits: u64,
+    pub buf_cache_misses: u64,
+}
+
+/// Stub backend: `available` is always false and `load` always errors,
+/// so in practice this type is only ever constructed in builds that
+/// never take the XLA path.
+pub struct XlaBackend {
+    dir: PathBuf,
+    fallback: NativeBackend,
+}
+
+impl XlaBackend {
+    /// Default artifact directory.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+
+    /// Always false: the PJRT runtime is not compiled into this build.
+    pub fn available(_dir: &Path) -> bool {
+        false
+    }
+
+    /// Always an error explaining how to get the real backend.
+    pub fn load(dir: &Path) -> Result<XlaBackend> {
+        Err(anyhow!(
+            "XLA/PJRT backend not compiled into this build (enable the \
+             `xla-pjrt` feature with the external `xla` crate available); \
+             artifacts at {dir:?} ignored"
+        ))
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        0
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Telemetry snapshot (always zeros for the stub).
+    pub fn stats(&self) -> XlaStats {
+        XlaStats::default()
+    }
+
+    /// Gram/covariance: native fallback.
+    pub fn gram(&self, x: &Mat) -> Mat {
+        x.syrk(1.0 / x.cols as f64)
+    }
+}
+
+impl Backend for XlaBackend {
+    fn cov_apply(&self, cov: &CovOp, q: &Mat) -> Mat {
+        self.fallback.cov_apply(cov, q)
+    }
+
+    fn orthonormalize(&self, v: &Mat) -> Mat {
+        self.fallback.orthonormalize(v)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(!XlaBackend::available(Path::new("artifacts")));
+        assert!(XlaBackend::load(Path::new("/nonexistent/dir")).is_err());
+    }
+}

@@ -51,8 +51,9 @@ pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
     }
 }
 
-/// Standard header for bench binaries; reads scale/trials from env so
-/// `BENCH_SCALE=1.0 cargo bench` regenerates paper-fidelity numbers.
+/// Standard header for bench binaries; reads scale/trials/threads from
+/// env so `BENCH_SCALE=1.0 BENCH_THREADS=4 cargo bench` regenerates
+/// paper-fidelity numbers at full parallelism.
 pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
     let scale = std::env::var("BENCH_SCALE")
         .ok()
@@ -62,11 +63,17 @@ pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1);
+    let threads = std::env::var("BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    crate::network::sim::set_default_threads(threads);
     crate::experiments::ExpCtx {
         seed: 42,
         scale,
         trials,
         out_dir: std::path::PathBuf::from("results"),
+        threads,
     }
 }
 

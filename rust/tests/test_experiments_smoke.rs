@@ -9,6 +9,7 @@ fn tiny_ctx(name: &str) -> ExpCtx {
         scale: 0.02,
         trials: 1,
         out_dir: std::env::temp_dir().join(format!("dpsa_smoke_{name}")),
+        threads: 1,
     }
 }
 

@@ -1,0 +1,107 @@
+//! Parallelism determinism: the node pool must be invisible in the
+//! numerics. `run_sdot` / `run_fdot` (and the consensus primitives they
+//! ride on) must produce **bitwise-identical** outputs for
+//! `threads ∈ {1, 4}` — the contract documented in `runtime::pool`.
+
+use dpsa::algorithms::fdot::{run_fdot, FdotConfig, FeatureSetting};
+use dpsa::algorithms::sdot::{run_sdot, SdotConfig};
+use dpsa::algorithms::SampleSetting;
+use dpsa::consensus::schedule::Schedule;
+use dpsa::data::partition::partition_features;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::graph::Graph;
+use dpsa::linalg::Mat;
+use dpsa::network::sim::SyncNetwork;
+use dpsa::util::rng::Rng;
+
+fn sample_setting(seed: u64, nodes: usize) -> (SampleSetting, Graph) {
+    let mut rng = Rng::new(seed);
+    let spec = Spectrum::with_gap(20, 5, 0.7);
+    let ds = SyntheticDataset::full(&spec, 400, nodes, &mut rng);
+    let s = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+    let g = Graph::erdos_renyi(nodes, 0.5, &mut rng);
+    (s, g)
+}
+
+fn assert_bitwise_eq(a: &[Mat], b: &[Mat]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!((x.rows, x.cols), (y.rows, y.cols), "node {i} shape");
+        assert_eq!(x.data, y.data, "node {i} differs");
+    }
+}
+
+#[test]
+fn sdot_bitwise_identical_across_thread_counts() {
+    let (s, g) = sample_setting(1, 10);
+    let cfg = SdotConfig::new(Schedule::fixed(40), 25);
+
+    let mut net1 = SyncNetwork::with_threads(g.clone(), 1);
+    let (q1, tr1) = run_sdot(&mut net1, &s, &cfg);
+
+    let mut net4 = SyncNetwork::with_threads(g, 4);
+    let (q4, tr4) = run_sdot(&mut net4, &s, &cfg);
+
+    assert_bitwise_eq(&q1, &q4);
+    for (a, b) in tr1.records.iter().zip(tr4.records.iter()) {
+        assert_eq!(a.error.to_bits(), b.error.to_bits(), "trace error differs");
+        assert_eq!(a.p2p_avg.to_bits(), b.p2p_avg.to_bits());
+    }
+    assert_eq!(net1.counters.sent, net4.counters.sent);
+}
+
+#[test]
+fn sdot_adaptive_schedule_bitwise_identical() {
+    let (s, g) = sample_setting(2, 8);
+    let cfg = SdotConfig::new(Schedule::adaptive(2.0, 1, 40), 20);
+
+    let mut net1 = SyncNetwork::with_threads(g.clone(), 1);
+    let (q1, _) = run_sdot(&mut net1, &s, &cfg);
+    let mut net4 = SyncNetwork::with_threads(g, 4);
+    let (q4, _) = run_sdot(&mut net4, &s, &cfg);
+    assert_bitwise_eq(&q1, &q4);
+}
+
+#[test]
+fn fdot_bitwise_identical_across_thread_counts() {
+    let mut rng = Rng::new(3);
+    let spec = Spectrum::with_gap(12, 3, 0.5);
+    let ds = SyntheticDataset::full(&spec, 300, 1, &mut rng);
+    let parts = partition_features(&ds.parts[0], 6);
+    let s = FeatureSetting::new(parts, 3, &mut rng);
+    let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+    let cfg = FdotConfig::new(15);
+
+    let mut net1 = SyncNetwork::with_threads(g.clone(), 1);
+    let (q1, _) = run_fdot(&mut net1, &s, &cfg);
+    let mut net4 = SyncNetwork::with_threads(g, 4);
+    let (q4, _) = run_fdot(&mut net4, &s, &cfg);
+    assert_bitwise_eq(&q1, &q4);
+}
+
+#[test]
+fn oversubscribed_pool_still_deterministic() {
+    // More threads than nodes: chunking degenerates gracefully.
+    let (s, g) = sample_setting(4, 5);
+    let cfg = SdotConfig::new(Schedule::fixed(30), 12);
+
+    let mut net1 = SyncNetwork::with_threads(g.clone(), 1);
+    let (q1, _) = run_sdot(&mut net1, &s, &cfg);
+    let mut net9 = SyncNetwork::with_threads(g, 9);
+    let (q9, _) = run_sdot(&mut net9, &s, &cfg);
+    assert_bitwise_eq(&q1, &q9);
+}
+
+#[test]
+fn repeated_threaded_runs_are_reproducible() {
+    // The same threaded run twice: no hidden state leaks between runs.
+    let (s, g) = sample_setting(5, 8);
+    let cfg = SdotConfig::new(Schedule::fixed(35), 15);
+
+    let mut net_a = SyncNetwork::with_threads(g.clone(), 4);
+    let (qa, _) = run_sdot(&mut net_a, &s, &cfg);
+    let mut net_b = SyncNetwork::with_threads(g, 4);
+    let (qb, _) = run_sdot(&mut net_b, &s, &cfg);
+    assert_bitwise_eq(&qa, &qb);
+}

@@ -41,7 +41,7 @@ fn sdot_step_parity_d20() {
     let v_nat = native.cov_apply(&cov, &q);
     let rel = v_xla.dist_fro(&v_nat) / v_nat.fro_norm().max(1e-12);
     assert!(rel < 1e-5, "rel={rel}");
-    assert!(be.stats.borrow().xla_calls >= 1, "XLA path not taken");
+    assert!(be.stats().xla_calls >= 1, "XLA path not taken");
 }
 
 #[test]
@@ -107,10 +107,10 @@ fn unknown_shape_falls_back_to_native() {
     let x = Mat::gauss(33, 50, &mut rng);
     let cov = CovOp::dense_from_samples(&x);
     let q = Mat::random_orthonormal(33, 4, &mut rng);
-    let before = be.stats.borrow().fallback_calls;
+    let before = be.stats().fallback_calls;
     let v = be.cov_apply(&cov, &q);
     assert!(v.is_finite());
-    assert!(be.stats.borrow().fallback_calls > before);
+    assert!(be.stats().fallback_calls > before);
     let v_nat = NativeBackend.cov_apply(&cov, &q);
     assert!(v.dist_fro(&v_nat) < 1e-12); // fallback is exact native
 }
@@ -139,6 +139,6 @@ fn sdot_end_to_end_with_xla_backend() {
     for qi in &q {
         assert!(qi.is_finite());
     }
-    let stats = be.stats.borrow();
+    let stats = be.stats();
     assert!(stats.xla_calls > 0, "XLA path never used");
 }
