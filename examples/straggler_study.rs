@@ -1,10 +1,13 @@
-//! Straggler study on the threaded MPI-like runtime (paper Table V).
+//! Straggler study on the pooled MPI-like runtime (paper Table V).
 //!
-//! One OS thread per node, blocking neighbor exchanges; the straggler
-//! variant sleeps 10 ms at one random node per consensus round. Shows the
-//! synchronous-network cascade: a single slow node gates every round.
+//! One persistent pool worker per node, blocking neighbor exchanges with
+//! recycled message buffers; the straggler variant delays one random node
+//! 10 ms per consensus round. Shows the synchronous-network cascade: a
+//! single slow node gates every round.
 //!
 //! Run: `cargo run --release --example straggler_study [-- --to 40]`
+//! Add `-- --virtual` to compute the exact cascade on the deterministic
+//! virtual clock instead of sleeping (instant, bit-reproducible).
 
 use dpsa::algorithms::SampleSetting;
 use dpsa::consensus::schedule::Schedule;
@@ -12,7 +15,7 @@ use dpsa::data::spectrum::Spectrum;
 use dpsa::data::synthetic::SyntheticDataset;
 use dpsa::experiments::straggler::run_sdot_mpi;
 use dpsa::graph::Graph;
-use dpsa::network::mpi::StragglerSpec;
+use dpsa::network::mpi::{MpiConfig, StragglerSpec};
 use dpsa::util::cli::Args;
 use dpsa::util::rng::Rng;
 use std::time::Duration;
@@ -21,9 +24,17 @@ fn main() {
     let args = Args::from_env();
     let t_o = args.get_usize("to", 40);
     let delay_ms = args.get_u64("delay-ms", 10);
+    let virtual_clock = args.get_bool("virtual");
 
-    println!("=== straggler study: blocking MPI-style runtime, {delay_ms} ms delay ===");
-    println!("{:<4} {:<5} {:<10} {:<10} {:>9} {:>9} {:>11}", "N", "p", "schedule", "straggler", "time(s)", "P2P", "max err");
+    let base = if virtual_clock { MpiConfig::virtual_clock() } else { MpiConfig::default() };
+    println!(
+        "=== straggler study: pooled MPI-style runtime, {delay_ms} ms delay, {} clock ===",
+        if virtual_clock { "virtual" } else { "real" }
+    );
+    println!(
+        "{:<4} {:<5} {:<10} {:<10} {:>9} {:>9} {:>11}",
+        "N", "p", "schedule", "straggler", "time(s)", "P2P", "max err"
+    );
 
     for &(n, p) in &[(10usize, 0.5f64), (20, 0.25)] {
         let mut rng = Rng::new(1);
@@ -37,25 +48,29 @@ fn main() {
             ("50", Schedule::fixed(50)),
         ] {
             for straggle in [true, false] {
-                let spec_s = straggle.then_some(StragglerSpec {
-                    delay: Duration::from_millis(delay_ms),
-                    seed: 99,
-                });
-                let (secs, p2p, err) = run_sdot_mpi(&setting, &g, sched, t_o, spec_s);
+                let mut cfg = base;
+                if straggle {
+                    cfg.straggler = Some(StragglerSpec {
+                        delay: Duration::from_millis(delay_ms),
+                        seed: 99,
+                    });
+                }
+                let st = run_sdot_mpi(&setting, &g, sched, t_o, &cfg);
                 println!(
                     "{:<4} {:<5} {:<10} {:<10} {:>9.2} {:>9.0} {:>11.2e}",
                     n,
                     p,
                     label,
                     if straggle { "yes" } else { "no" },
-                    secs,
-                    p2p,
-                    err
+                    st.secs,
+                    st.p2p_avg,
+                    st.max_err
                 );
             }
         }
     }
-    println!("\nNote: with T_o={t_o} the no-straggler runs are compute-bound;");
+    println!("\nNote: with T_o={t_o} the no-straggler real-clock runs are compute-bound;");
     println!("straggled runs are gated by (total consensus rounds) × delay — the");
-    println!("paper's ~20× slowdown at T_o=200 reproduces with `-- --to 200`.");
+    println!("paper's ~20× slowdown at T_o=200 reproduces with `-- --to 200`, or");
+    println!("instantly and deterministically with `-- --to 200 --virtual`.");
 }

@@ -19,81 +19,16 @@ use dpsa::graph::Graph;
 use dpsa::linalg::{CovOp, Mat};
 use dpsa::network::sim::SyncNetwork;
 use dpsa::runtime::{Backend, NativeBackend, XlaBackend};
-use dpsa::util::bench::{time_it, Timing};
+use dpsa::util::bench::{alloc_snapshot, time_it, BenchReport, CountingAlloc};
 use dpsa::util::rng::Rng;
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
-
-// ---- counting allocator (bench-only global) ---------------------------
-
-struct CountingAlloc;
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
-    }
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-}
 
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
-fn alloc_snapshot() -> (u64, u64) {
-    (ALLOCS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
-}
-
-// ---- JSON report ------------------------------------------------------
-
-struct Report {
-    entries: Vec<(String, f64)>,
-}
-
-impl Report {
-    fn push(&mut self, key: &str, value: f64) {
-        self.entries.push((key.to_string(), value));
-    }
-
-    fn push_timing(&mut self, key: &str, t: &Timing) {
-        self.push(key, t.median.as_nanos() as f64);
-    }
-
-    fn save(&self) {
-        let path = std::env::var("BENCH_JSON_OUT")
-            .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
-        let mut body = String::from("{\n");
-        for (i, (k, v)) in self.entries.iter().enumerate() {
-            let sep = if i + 1 == self.entries.len() { "" } else { "," };
-            body.push_str(&format!("  \"{k}\": {v}{sep}\n"));
-        }
-        body.push_str("}\n");
-        match std::fs::write(&path, body) {
-            Ok(()) => println!("\nwrote {path}"),
-            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
-        }
-    }
-}
-
 fn main() {
     println!("== L3 hot-path microbenchmarks ==\n");
     let mut rng = Rng::new(42);
-    let mut report = Report { entries: Vec::new() };
+    let mut report = BenchReport::new();
 
     // --- cov_apply: dense d=20 and d=784, native vs XLA -----------------
     for &(d, r, n_samp) in &[(20usize, 5usize, 500usize), (784, 5, 500)] {
@@ -231,5 +166,5 @@ fn main() {
     }
     println!("  (§Perf target: < 2 s; acceptance: threads=4 ≥ 2x the serial seed)");
 
-    report.save();
+    report.save("BENCH_hotpath.json");
 }

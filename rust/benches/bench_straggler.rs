@@ -1,9 +1,127 @@
-//! Regenerates paper Table V (straggler wall-clock on the threaded
-//! MPI-like runtime). Default scale keeps the straggled runs ~10 s;
-//! BENCH_SCALE=1.0 reproduces the paper's ~100 s cells.
-use dpsa::util::bench::{bench_ctx, run_and_print};
+//! Straggler-runtime benchmark (paper Table V) on the pooled MPI-like
+//! runtime, in **both clock modes**, plus the zero-allocation proof for
+//! the recycled-buffer exchange path.
+//!
+//! * A counting global allocator measures heap allocations inside the
+//!   steady-state `NodeCtx::exchange` loop (after `prime_buffers` + a
+//!   warm-up) — must be 0 per round on every node.
+//! * One small Table-V cell (N=10, p=0.5, fixed T_c) runs under the
+//!   virtual clock (asserted bit-equal to the `expected_sync_vtime`
+//!   reference cascade) and under the real clock (wall-clock ≥ the
+//!   virtual floor).
+//!
+//! Results are written as JSON to `BENCH_straggler.json` (override with
+//! `BENCH_JSON_OUT`) so CI can track them as an artifact alongside
+//! `BENCH_hotpath.json`. Scale the cell with `BENCH_SCALE`.
+//!
+//! Run: `cargo bench --bench bench_straggler`
+
+use dpsa::algorithms::SampleSetting;
+use dpsa::consensus::schedule::Schedule;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::experiments::straggler::run_sdot_mpi;
+use dpsa::graph::Graph;
+use dpsa::linalg::Mat;
+use dpsa::network::mpi::{
+    expected_sync_vtime, run_spmd, ClockMode, MpiConfig, StragglerSpec,
+};
+use dpsa::util::bench::{alloc_snapshot, bench_ctx, BenchReport, CountingAlloc};
+use dpsa::util::rng::Rng;
+use std::time::Duration;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Steady-state allocation count inside `NodeCtx::exchange`: after
+/// priming the buffer pool and a warm-up, `measure` rounds must allocate
+/// nothing on any node. The cooldown keeps every node exchanging until
+/// all measurement windows have closed (blocking sync keeps nodes within
+/// `capacity` rounds of each other, and cooldown > capacity), so no
+/// node's teardown allocations can leak into another's window.
+fn exchange_steady_state_allocs(g: &Graph, warmup: u64, measure: u64) -> u64 {
+    let cfg = MpiConfig::virtual_clock()
+        .with_straggler(StragglerSpec { delay: Duration::from_millis(1), seed: 5 });
+    let cooldown = 2 * cfg.capacity as u64 + 4;
+    let run = run_spmd(g, &cfg, move |ctx| {
+        let m = Mat::gauss(20, 5, &mut Rng::new(17 + ctx.rank as u64));
+        ctx.prime_buffers(&m);
+        for _ in 0..warmup {
+            ctx.exchange(&m);
+        }
+        let (a0, _) = alloc_snapshot();
+        for _ in 0..measure {
+            ctx.exchange(&m);
+        }
+        let (a1, _) = alloc_snapshot();
+        for _ in 0..cooldown {
+            ctx.exchange(&m);
+        }
+        a1 - a0
+    });
+    run.results.into_iter().max().unwrap_or(0)
+}
 
 fn main() {
+    println!("== straggler runtime benchmark (pooled MPI-like runtime) ==\n");
     let ctx = bench_ctx(0.1);
-    run_and_print("table5", &ctx);
+    let mut report = BenchReport::new();
+
+    // --- zero-allocation steady state on the exchange hot path ---------
+    // First run warms the SPMD worker pool and the result-channel path so
+    // one-time setup allocations land outside the measured windows.
+    let g = Graph::ring(8);
+    exchange_steady_state_allocs(&g, 4, 4);
+    let allocs = exchange_steady_state_allocs(&g, 12, 50);
+    println!("exchange steady state: {allocs} allocs over 50 rounds (worst node)");
+    assert_eq!(allocs, 0, "NodeCtx::exchange must be allocation-free after warm-up");
+    report.push("exchange_steady_state_allocs_per_50_rounds", allocs as f64);
+
+    // --- one small Table-V cell, both clock modes -----------------------
+    let n = 10;
+    let p = 0.5;
+    let t_o = ctx.scaled(40);
+    let delay = Duration::from_millis(2);
+    let sched = Schedule::fixed(20);
+    let mut rng = Rng::new(ctx.seed);
+    let spec = Spectrum::with_gap(20, 5, 0.7);
+    let ds = SyntheticDataset::full(&spec, 500, n, &mut rng);
+    let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+    let graph = Graph::erdos_renyi(n, p, &mut rng);
+    let spec_s = StragglerSpec { delay, seed: ctx.seed };
+
+    let vcfg = MpiConfig::virtual_clock().with_straggler(spec_s);
+    let virt = run_sdot_mpi(&setting, &graph, sched, t_o, &vcfg);
+    let floor = expected_sync_vtime(&graph, &spec_s, sched.total_rounds(t_o) as u64);
+    assert_eq!(
+        virt.secs,
+        floor.as_secs_f64(),
+        "virtual cascade must match the reference recurrence bit-exactly"
+    );
+    println!(
+        "table5 cell N={n} p={p} T_o={t_o} virtual: {:.3}s cascade, P2P avg {:.0}",
+        virt.secs, virt.p2p_avg
+    );
+    report.push("table5_cell_virtual_cascade_ns", floor.as_nanos() as f64);
+    report.push("table5_cell_p2p_avg", virt.p2p_avg);
+
+    let rcfg = MpiConfig { clock: ClockMode::Real, ..vcfg };
+    let start = std::time::Instant::now();
+    let real = run_sdot_mpi(&setting, &graph, sched, t_o, &rcfg);
+    let wall = start.elapsed();
+    assert!(
+        real.secs >= floor.as_secs_f64(),
+        "real sleeps never undershoot the virtual floor: {} < {}",
+        real.secs,
+        floor.as_secs_f64()
+    );
+    assert_eq!(real.p2p_avg, virt.p2p_avg, "clock mode must not change P2P accounting");
+    println!(
+        "table5 cell N={n} p={p} T_o={t_o} real:    {:.3}s wall (floor {:.3}s)",
+        real.secs,
+        floor.as_secs_f64()
+    );
+    report.push("table5_cell_real_wall_ns", wall.as_nanos() as f64);
+
+    report.save("BENCH_straggler.json");
 }

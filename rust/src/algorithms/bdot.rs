@@ -20,13 +20,21 @@
 //! 3. orthonormalization of the feature-stacked V via the distributed QR
 //!    (push-sum Gram over the whole grid + local Cholesky), as in F-DOT.
 //!
-//! Each phase's consensus runs on the subgraph induced on the group (we
-//! use complete groups — the natural rack/row topology), and every message
-//! is counted by the same P2P machinery as Algorithms 1–2. With `R = 1`
-//! B-DOT degenerates to (a consensus-flavored) F-DOT; with `C = 1` each
-//! column phase is local and it behaves like a feature-sharded S-DOT.
+//! Each phase's consensus runs on the subgraph induced on the group.
+//! Group topologies are configurable through [`BdotConfig`] — complete
+//! (the natural rack/row fabric), ring, star, path, 2-D grid, or
+//! Erdős–Rényi ([`GroupTopo`]); the whole-grid QR network can be the
+//! literal `R × C` mesh. Groups are built on their **exact** member
+//! counts: a 1-node group (R=1 or C=1 grids) has no edges and sends no
+//! messages, so `total_messages` and the trace's `p2p_avg` count exactly
+//! `rounds × Σ_i deg(i)` real messages — directly comparable with the
+//! F-DOT / S-DOT columns of Tables I–V (the seed padded degenerate groups
+//! to 2 nodes with phantom members whose traffic inflated both counters).
+//! With `R = 1` B-DOT degenerates to (a consensus-flavored) F-DOT; with
+//! `C = 1` each column phase is local and it behaves like a
+//! feature-sharded S-DOT.
 
-use crate::graph::Graph;
+use crate::graph::GroupTopo;
 use crate::linalg::chol::{cholesky_into, solve_r_right_into};
 use crate::linalg::Mat;
 use crate::metrics::subspace::subspace_error;
@@ -89,11 +97,40 @@ pub struct BdotConfig {
     pub t_ps: usize,
     pub t_o: usize,
     pub record_every: usize,
+    /// Topology of each column-group network (size R).
+    pub col_topo: GroupTopo,
+    /// Topology of each row-group network (size C).
+    pub row_topo: GroupTopo,
+    /// Topology of the whole-grid network behind the distributed QR
+    /// ([`GroupTopo::Grid`] means the literal `R × C` mesh).
+    pub grid_topo: GroupTopo,
+    /// Seed for randomized group topologies (Erdős–Rényi sampling).
+    pub topo_seed: u64,
 }
 
 impl BdotConfig {
     pub fn new(t_o: usize) -> BdotConfig {
-        BdotConfig { t_col: 30, t_row: 30, t_ps: 40, t_o, record_every: 1 }
+        BdotConfig {
+            t_col: 30,
+            t_row: 30,
+            t_ps: 40,
+            t_o,
+            record_every: 1,
+            col_topo: GroupTopo::Complete,
+            row_topo: GroupTopo::Complete,
+            grid_topo: GroupTopo::Complete,
+            topo_seed: 0xb_d07,
+        }
+    }
+
+    /// Use `topo` for all three group networks. Slow-mixing families
+    /// (ring/path on larger grids) may need more `t_ps` rounds for the
+    /// push-sum QR to keep its accuracy — set it explicitly.
+    pub fn with_topology(mut self, topo: GroupTopo) -> BdotConfig {
+        self.col_topo = topo;
+        self.row_topo = topo;
+        self.grid_topo = topo;
+        self
     }
 }
 
@@ -102,24 +139,28 @@ impl BdotConfig {
 pub struct BdotRun {
     pub q_rows: Vec<Mat>,
     pub trace: RunTrace,
-    /// Total messages sent across all grid nodes.
+    /// Total messages sent across all grid nodes (algorithm traffic on
+    /// real group members only — no phantom nodes exist to pad it).
     pub total_messages: u64,
 }
 
-/// Run B-DOT. Group networks are complete graphs over each row / column /
-/// the full grid (the natural "rack-local" topologies); all messages are
-/// counted.
+/// Run B-DOT. Row / column / grid group networks are built from
+/// [`BdotConfig`]'s topology specs on their exact member counts; all
+/// messages are counted by the same P2P machinery as Algorithms 1–2.
 pub fn run_bdot(setting: &BlockSetting, cfg: &BdotConfig) -> BdotRun {
     let (rows, cols) = setting.grid();
     let r = setting.r;
     // One network per column group (size rows) for phase 1,
     // one per row group (size cols) for phase 2,
     // one over all nodes for the distributed QR.
+    let col_graph = cfg.col_topo.build(rows, cfg.topo_seed);
+    let row_graph = cfg.row_topo.build(cols, cfg.topo_seed ^ 1);
+    let grid_graph = cfg.grid_topo.build_rect(rows, cols, cfg.topo_seed ^ 2);
     let mut col_nets: Vec<SyncNetwork> =
-        (0..cols).map(|_| SyncNetwork::new(Graph::complete(rows.max(2)))).collect();
+        (0..cols).map(|_| SyncNetwork::new(col_graph.clone())).collect();
     let mut row_nets: Vec<SyncNetwork> =
-        (0..rows).map(|_| SyncNetwork::new(Graph::complete(cols.max(2)))).collect();
-    let mut grid_net = SyncNetwork::new(Graph::complete((rows * cols).max(2)));
+        (0..rows).map(|_| SyncNetwork::new(row_graph.clone())).collect();
+    let mut grid_net = SyncNetwork::new(grid_graph);
 
     // Per (row, col) copy of the row's Q block — nodes in the same row
     // keep nominally identical copies (they are exchanged in phase 2).
@@ -130,22 +171,20 @@ pub fn run_bdot(setting: &BlockSetting, cfg: &BdotConfig) -> BdotRun {
     let mut trace = RunTrace::new("B-DOT");
     let mut total = 0usize;
 
-    // Persistent workspace, shaped once and reused every outer iteration
-    // (padding entries for degenerate < 2-node groups are re-zeroed each
-    // pass, matching the seed's freshly-built buffers).
+    // Persistent workspace, shaped once and reused every outer iteration.
     let mut u: Vec<Vec<Mat>> = (0..cols)
         .map(|j| {
             let n_j = setting.blocks[0][j].cols;
-            (0..col_nets[j].n()).map(|_| Mat::zeros(n_j, r)).collect()
+            (0..rows).map(|_| Mat::zeros(n_j, r)).collect()
         })
         .collect();
     let mut v: Vec<Vec<Mat>> = (0..rows)
         .map(|i| {
             let d_i = setting.blocks[i][0].rows;
-            (0..row_nets[i].n()).map(|_| Mat::zeros(d_i, r)).collect()
+            (0..cols).map(|_| Mat::zeros(d_i, r)).collect()
         })
         .collect();
-    let mut grams: Vec<Mat> = (0..grid_net.n()).map(|_| Mat::zeros(r, r)).collect();
+    let mut grams: Vec<Mat> = (0..rows * cols).map(|_| Mat::zeros(r, r)).collect();
     let mut gram_tmp = Mat::zeros(r, r);
     let mut kbuf = Mat::zeros(r, r);
     let mut chol_buf = Mat::zeros(r, r);
@@ -155,12 +194,7 @@ pub fn run_bdot(setting: &BlockSetting, cfg: &BdotConfig) -> BdotRun {
         // ---- phase 1 (column groups): u_j = Σ_i X_ijᵀ Q_i  (n_j × r) ----
         for j in 0..cols {
             for (i, slot) in u[j].iter_mut().enumerate() {
-                if i < rows {
-                    setting.blocks[i][j].t_matmul_into(&q[i][j], slot);
-                } else {
-                    // Degenerate-group padding node: zero contribution.
-                    slot.fill(0.0);
-                }
+                setting.blocks[i][j].t_matmul_into(&q[i][j], slot);
             }
             col_nets[j].consensus_sum(&mut u[j], cfg.t_col);
         }
@@ -168,14 +202,8 @@ pub fn run_bdot(setting: &BlockSetting, cfg: &BdotConfig) -> BdotRun {
 
         // ---- phase 2 (row groups): V_i = Σ_j X_ij u_j  (d_i × r) --------
         for i in 0..rows {
-            let upper = u.len(); // == cols
             for (j, slot) in v[i].iter_mut().enumerate() {
-                if j < upper {
-                    let uj = &u[j];
-                    setting.blocks[i][j].matmul_into(&uj[i.min(uj.len() - 1)], slot);
-                } else {
-                    slot.fill(0.0);
-                }
+                setting.blocks[i][j].matmul_into(&u[j][i], slot);
             }
             row_nets[i].consensus_sum(&mut v[i], cfg.t_row);
         }
@@ -191,10 +219,6 @@ pub fn run_bdot(setting: &BlockSetting, cfg: &BdotConfig) -> BdotRun {
             for j in 0..cols {
                 grams[i * cols + j].copy_from(&gram_tmp);
             }
-        }
-        for pad in grams.iter_mut().skip(rows * cols) {
-            pad.reshape_in_place(r, r);
-            pad.fill(0.0);
         }
         grid_net.ratio_consensus_sum(&mut grams, cfg.t_ps);
         total += cfg.t_ps;
@@ -282,7 +306,8 @@ mod tests {
     #[test]
     fn bdot_single_row_matches_fdot_accuracy() {
         // R=1 degenerate: feature dimension is whole at each node; B-DOT
-        // should converge like F-DOT on the same data.
+        // should converge like F-DOT on the same data. Column groups have
+        // one member each — no messages, no phantom padding.
         let s = setting(4, 10, 400, 3, 1, 4);
         let run = run_bdot(&s, &BdotConfig::new(60));
         assert!(run.trace.final_error() < 1e-8, "err={}", run.trace.final_error());
@@ -302,5 +327,63 @@ mod tests {
         let first = run.trace.records.first().unwrap().error;
         let last = run.trace.final_error();
         assert!(last < 1e-4 * first, "first={first} last={last}");
+    }
+
+    #[test]
+    fn bdot_counters_exact_rounds_times_degree() {
+        // `total_messages` must equal rounds × Σ_i deg(i) over the real
+        // group graphs — zero phantom-node traffic, including on the R=1
+        // and C=1 grids that the paper compares against F-DOT / S-DOT.
+        for &(rows, cols) in &[(1usize, 4usize), (4, 1), (2, 3)] {
+            for topo in [GroupTopo::Complete, GroupTopo::Ring, GroupTopo::Star] {
+                let s = setting(8, 12, 360, 3, rows, cols);
+                let mut cfg = BdotConfig::new(4).with_topology(topo);
+                cfg.record_every = 4;
+                let run = run_bdot(&s, &cfg);
+                let col_g = topo.build(rows, cfg.topo_seed);
+                let row_g = topo.build(cols, cfg.topo_seed ^ 1);
+                let grid_g = topo.build_rect(rows, cols, cfg.topo_seed ^ 2);
+                let per_outer = cols * cfg.t_col * 2 * col_g.edge_count()
+                    + rows * cfg.t_row * 2 * row_g.edge_count()
+                    + cfg.t_ps * 2 * grid_g.edge_count();
+                assert_eq!(
+                    run.total_messages,
+                    (cfg.t_o * per_outer) as u64,
+                    "rows={rows} cols={cols} topo={topo:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bdot_converges_on_ring_groups() {
+        let s = setting(9, 12, 360, 3, 3, 4);
+        let mut cfg = BdotConfig::new(60).with_topology(GroupTopo::Ring);
+        cfg.t_ps = 160; // ring(12) grid net mixes slowly (λ₂ ≈ 0.91)
+        let run = run_bdot(&s, &cfg);
+        assert!(run.trace.final_error() < 1e-5, "err={}", run.trace.final_error());
+    }
+
+    #[test]
+    fn bdot_converges_on_grid_groups() {
+        let s = setting(10, 12, 480, 3, 2, 4);
+        let mut cfg = BdotConfig::new(60).with_topology(GroupTopo::Grid);
+        cfg.t_ps = 160; // 2×4 mesh push-sum floor well below the target
+        let run = run_bdot(&s, &cfg);
+        assert!(run.trace.final_error() < 1e-6, "err={}", run.trace.final_error());
+    }
+
+    #[test]
+    fn bdot_star_groups_converge() {
+        // Hub-mediated mixing is slow (λ₂ = 8/9 on the 9-node star grid
+        // net), so the QR push-sum needs more rounds than complete groups
+        // — but the same grid then converges to the same subspace.
+        let s = setting(11, 12, 360, 3, 3, 3);
+        let mut cfg = BdotConfig::new(30).with_topology(GroupTopo::Star);
+        cfg.t_col = 60;
+        cfg.t_row = 60;
+        cfg.t_ps = 160;
+        let run = run_bdot(&s, &cfg);
+        assert!(run.trace.final_error() < 1e-5, "err={}", run.trace.final_error());
     }
 }

@@ -1,22 +1,28 @@
 //! Experiment configuration: JSON file + CLI flag merging.
 
 use crate::experiments::ExpCtx;
+use crate::network::mpi::ClockMode;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
 
 /// Load an [`ExpCtx`] from an optional JSON config file, then apply CLI
-/// overrides (`--seed`, `--scale`, `--trials`, `--out`, `--threads`).
+/// overrides (`--seed`, `--scale`, `--trials`, `--out`, `--threads`,
+/// `--mpi-clock`).
 ///
 /// Config file format:
 /// ```json
-/// {"seed": 42, "scale": 1.0, "trials": 3, "out_dir": "results", "threads": 1}
+/// {"seed": 42, "scale": 1.0, "trials": 3, "out_dir": "results",
+///  "threads": 1, "mpi_clock": "real"}
 /// ```
 ///
 /// `threads` sets the node-parallelism of the simulated networks
 /// (`threads = 1` is the serial path; any value produces bitwise
-/// identical results — see `runtime::pool`).
+/// identical results — see `runtime::pool`). `mpi_clock` selects how the
+/// MPI-runtime experiments (Table V) realize straggler delays: `"real"`
+/// sleeps for wall-clock fidelity, `"virtual"` computes the exact cascade
+/// on logical clocks (instant and deterministic — the mode tests use).
 pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     let mut ctx = ExpCtx::default();
     if let Some(path) = args.get("config") {
@@ -36,6 +42,9 @@ pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     }
     if let Some(v) = args.get("threads") {
         ctx.threads = v.parse().map_err(|_| anyhow!("bad --threads"))?;
+    }
+    if let Some(v) = args.get("mpi-clock") {
+        ctx.mpi_clock = parse_clock(v)?;
     }
     if ctx.scale <= 0.0 || ctx.scale > 10.0 {
         return Err(anyhow!("scale must be in (0, 10]"));
@@ -72,7 +81,18 @@ pub fn from_file(path: &Path) -> Result<ExpCtx> {
     if let Some(v) = json.get("threads").and_then(|v| v.as_usize()) {
         ctx.threads = v;
     }
+    if let Some(v) = json.get("mpi_clock").and_then(|v| v.as_str()) {
+        ctx.mpi_clock = parse_clock(v)?;
+    }
     Ok(ctx)
+}
+
+fn parse_clock(v: &str) -> Result<ClockMode> {
+    match v {
+        "real" => Ok(ClockMode::Real),
+        "virtual" => Ok(ClockMode::Virtual),
+        other => Err(anyhow!("mpi-clock must be 'real' or 'virtual', got '{other}'")),
+    }
 }
 
 #[cfg(test)]
@@ -131,5 +151,28 @@ mod tests {
         assert_eq!(ctx.threads, 2);
         let ctx = load_ctx(&args(&[])).unwrap();
         assert_eq!(ctx.threads, 1);
+    }
+
+    #[test]
+    fn mpi_clock_flag_parses_and_rejects() {
+        use crate::network::mpi::ClockMode;
+        let ctx = load_ctx(&args(&["--mpi-clock", "virtual"])).unwrap();
+        assert_eq!(ctx.mpi_clock, ClockMode::Virtual);
+        let ctx = load_ctx(&args(&["--mpi-clock", "real"])).unwrap();
+        assert_eq!(ctx.mpi_clock, ClockMode::Real);
+        let ctx = load_ctx(&args(&[])).unwrap();
+        assert_eq!(ctx.mpi_clock, ClockMode::Real);
+        assert!(load_ctx(&args(&["--mpi-clock", "warp"])).is_err());
+    }
+
+    #[test]
+    fn mpi_clock_from_file() {
+        use crate::network::mpi::ClockMode;
+        let dir = std::env::temp_dir().join("dpsa_cfg_clock_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"mpi_clock": "virtual"}"#).unwrap();
+        let ctx = load_ctx(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert_eq!(ctx.mpi_clock, ClockMode::Virtual);
     }
 }

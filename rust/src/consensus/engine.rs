@@ -97,9 +97,7 @@ pub fn consensus_rounds(
         for i in 0..n {
             // i sends one matrix to each neighbor (the read of z[j] above
             // is the receive side of j's send).
-            for _ in 0..g.degree(i) {
-                counters.record_send(i, elems);
-            }
+            counters.record_sends(i, g.degree(i) as u64, elems);
         }
         std::mem::swap(z, next);
         if let Some((w_src, w_dst)) = &mut scalar {

@@ -27,6 +27,7 @@ pub mod straggler;
 pub mod synth_tables;
 pub mod topology_tables;
 
+use crate::network::mpi::ClockMode;
 use crate::util::table::Table;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
@@ -45,6 +46,10 @@ pub struct ExpCtx {
     /// Node-parallelism for simulated networks (1 = serial; results are
     /// bitwise identical for any value — see `runtime::pool`).
     pub threads: usize,
+    /// Clock mode for the MPI-runtime experiments (Table V): `Real`
+    /// sleeps stragglers for wall-clock fidelity, `Virtual` computes the
+    /// exact cascade on logical clocks (instant, deterministic).
+    pub mpi_clock: ClockMode,
 }
 
 impl Default for ExpCtx {
@@ -55,6 +60,7 @@ impl Default for ExpCtx {
             trials: 3,
             out_dir: PathBuf::from("results"),
             threads: 1,
+            mpi_clock: ClockMode::Real,
         }
     }
 }
@@ -67,13 +73,16 @@ impl ExpCtx {
 }
 
 /// All experiment ids in paper order, plus the future-work extensions
-/// (`bdot_ext` — block-partitioned B-DOT grid ablation; the async-gossip
-/// straggler ablation is emitted as the second table of `table5`).
+/// (`bdot_ext` — block-partitioned B-DOT grid ablation; `topo_straggler`
+/// — topology × straggler sweep on the virtual-clock MPI runtime; the
+/// async-gossip straggler ablation is emitted as the second table of
+/// `table5`).
 pub fn all_ids() -> Vec<&'static str> {
     vec![
         "table1", "table2", "table3", "table4", "table5", "table6", "table7",
         "table8", "table9", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
         "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "bdot_ext",
+        "topo_straggler",
     ]
 }
 
@@ -102,6 +111,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<Vec<Table>> {
         "fig11" => figs_real::comm_cost(ctx, crate::data::datasets::DatasetKind::Lfw, "fig11"),
         "fig12" => figs_real::comm_cost(ctx, crate::data::datasets::DatasetKind::ImageNet, "fig12"),
         "bdot_ext" => bdot_ext(ctx),
+        "topo_straggler" => topology_tables::topo_straggler(ctx),
         other => bail!("unknown experiment id '{other}' (see `dpsa list`)"),
     }?;
     let dir = ctx.out_dir.join(id);
@@ -171,7 +181,7 @@ mod tests {
     #[test]
     fn all_ids_covers_every_table_and_figure() {
         let ids = all_ids();
-        assert_eq!(ids.len(), 9 + 12 + 1);
+        assert_eq!(ids.len(), 9 + 12 + 2);
         for t in 1..=9 {
             assert!(ids.contains(&format!("table{t}").as_str()));
         }

@@ -1,5 +1,7 @@
-//! Tables III and IV: ring and star topologies.
+//! Tables III and IV: ring and star topologies — plus the extension
+//! sweep of topology × straggler on the pooled MPI runtime.
 
+use super::straggler::run_sdot_mpi;
 use super::ExpCtx;
 use crate::algorithms::sdot::{run_sdot, SdotConfig};
 use crate::algorithms::SampleSetting;
@@ -7,10 +9,12 @@ use crate::consensus::schedule::Schedule;
 use crate::data::spectrum::Spectrum;
 use crate::data::synthetic::SyntheticDataset;
 use crate::graph::Graph;
+use crate::network::mpi::{MpiConfig, StragglerSpec};
 use crate::network::sim::SyncNetwork;
 use crate::util::rng::Rng;
-use crate::util::table::{p2p_k, Table};
+use crate::util::table::{fnum, p2p_k, Table};
 use anyhow::Result;
+use std::time::Duration;
 
 use super::synth_tables::{D, N_PER_NODE, T_O};
 
@@ -88,6 +92,49 @@ pub fn table4(ctx: &ExpCtx) -> Result<Vec<Table>> {
     Ok(vec![t])
 }
 
+/// Extension sweep (Table V crossed with Tables III–IV): every topology
+/// family × {straggler, none} on the pooled MPI runtime under the
+/// **virtual clock** — the time column is the exact, deterministic
+/// straggler-cascade time, so the sweep is instant and reproducible while
+/// still exposing how topology shapes the cascade (denser graphs spread a
+/// straggler's delay to more neighbors per round; sparse ones serialize
+/// it along paths).
+pub fn topo_straggler(ctx: &ExpCtx) -> Result<Vec<Table>> {
+    let t_o = ctx.scaled(40);
+    let n = 16; // 4×4 for the grid family
+    let delay = Duration::from_millis(10);
+    let sched = Schedule::fixed(20);
+    let mut t = Table::new(
+        &format!(
+            "Table V-topo — topology × straggler (virtual clock, 10 ms delay), \
+             N={n}, r=5, Δ=0.7, T_c=20, T_o={t_o}"
+        ),
+        &["topology", "straggler", "time (s, virtual)", "P2P (K)", "max error"],
+    );
+    let mut rng = Rng::new(ctx.seed);
+    let spec = Spectrum::with_gap(D, 5, 0.7);
+    let ds = SyntheticDataset::full(&spec, N_PER_NODE, n, &mut rng);
+    let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+    for topo in ["ring", "star", "path", "grid", "erdos"] {
+        let g = Graph::from_spec(topo, n, 0.4, &mut rng);
+        for straggle in [false, true] {
+            let mut cfg = MpiConfig::virtual_clock();
+            if straggle {
+                cfg.straggler = Some(StragglerSpec { delay, seed: ctx.seed });
+            }
+            let st = run_sdot_mpi(&setting, &g, sched, t_o, &cfg);
+            t.row(&[
+                topo.to_string(),
+                if straggle { "Yes" } else { "No" }.to_string(),
+                fnum(st.secs, 2),
+                p2p_k(st.p2p_avg),
+                format!("{:.2e}", st.max_err),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,5 +160,21 @@ mod tests {
     fn ring_rows_present() {
         let tables = table3(&quick_ctx()).unwrap();
         assert_eq!(tables[0].rows.len(), 3);
+    }
+
+    #[test]
+    fn topo_straggler_sweep_is_deterministic_and_ordered() {
+        let tables = topo_straggler(&quick_ctx()).unwrap();
+        let rows = &tables[0].rows;
+        assert_eq!(rows.len(), 10); // 5 topologies × {no, yes}
+        for pair in rows.chunks(2) {
+            let clean: f64 = pair[0][2].parse().unwrap();
+            let straggled: f64 = pair[1][2].parse().unwrap();
+            assert_eq!(clean, 0.0, "{}: clean run accrues no virtual time", pair[0][0]);
+            assert!(straggled > 0.0, "{}: straggler must cost time", pair[1][0]);
+        }
+        // Bit-exact determinism: the whole table reproduces.
+        let again = topo_straggler(&quick_ctx()).unwrap();
+        assert_eq!(tables[0].rows, again[0].rows);
     }
 }

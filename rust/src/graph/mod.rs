@@ -73,6 +73,13 @@ impl Graph {
         Graph::from_edges(n, &edges, "path".into())
     }
 
+    /// A single isolated node (consensus over it is the identity and
+    /// sends no messages) — the degenerate group of B-DOT's R=1 / C=1
+    /// grids.
+    pub fn single() -> Graph {
+        Graph { n: 1, adj: vec![Vec::new()], kind: "single".into() }
+    }
+
     /// Complete graph.
     pub fn complete(n: usize) -> Graph {
         let mut edges = Vec::new();
@@ -188,6 +195,73 @@ impl Graph {
     }
 }
 
+/// Topology family for a consensus group of parameterized size — wires
+/// real (non-complete) group networks through B-DOT's row / column / grid
+/// phases and the topology ablations without hard-coding node counts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GroupTopo {
+    Complete,
+    Ring,
+    Star,
+    Path,
+    /// 2-D mesh: [`GroupTopo::build`] uses the near-square factorization
+    /// of `n`; [`GroupTopo::build_rect`] uses the exact `R × C` mesh.
+    Grid,
+    /// Erdős–Rényi with the given edge probability (resampled until
+    /// connected, deterministic in the seed).
+    Erdos(f64),
+}
+
+impl GroupTopo {
+    /// Build this topology on exactly `n` nodes. Degenerate sizes degrade
+    /// to the only connected simple graphs — `n == 1` a single node (no
+    /// edges, no messages), `n == 2` one edge — instead of padding with
+    /// phantom nodes.
+    pub fn build(&self, n: usize, seed: u64) -> Graph {
+        assert!(n >= 1, "group must have at least one node");
+        if n == 1 {
+            return Graph::single();
+        }
+        if n == 2 {
+            return Graph::path(2);
+        }
+        match *self {
+            GroupTopo::Complete => Graph::complete(n),
+            GroupTopo::Ring => Graph::ring(n),
+            GroupTopo::Star => Graph::star(n),
+            GroupTopo::Path => Graph::path(n),
+            GroupTopo::Grid => {
+                let (r, c) = near_square(n);
+                Graph::grid(r, c)
+            }
+            GroupTopo::Erdos(p) => {
+                let mut rng = Rng::new(seed);
+                Graph::erdos_renyi(n, p, &mut rng)
+            }
+        }
+    }
+
+    /// Build over an `rows × cols` grid of members. `Grid` uses the exact
+    /// mesh (so B-DOT's whole-grid network is the literal node grid);
+    /// every other family sees `rows · cols` interchangeable members.
+    pub fn build_rect(&self, rows: usize, cols: usize, seed: u64) -> Graph {
+        match *self {
+            GroupTopo::Grid => Graph::grid(rows, cols),
+            _ => self.build(rows * cols, seed),
+        }
+    }
+}
+
+/// Factor pair `(r, c)` of `n` with `r ≤ c` and `r` as close to `√n` as
+/// divisibility allows (primes fall back to a `1 × n` path-like mesh).
+fn near_square(n: usize) -> (usize, usize) {
+    let mut r = ((n as f64).sqrt().floor() as usize).max(1);
+    while r > 1 && n % r != 0 {
+        r -= 1;
+    }
+    (r, n / r)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,6 +351,59 @@ mod tests {
     fn from_spec_unknown_panics() {
         let mut rng = Rng::new(3);
         Graph::from_spec("torus", 8, 0.0, &mut rng);
+    }
+
+    #[test]
+    fn group_topo_degenerate_sizes() {
+        for topo in [
+            GroupTopo::Complete,
+            GroupTopo::Ring,
+            GroupTopo::Star,
+            GroupTopo::Path,
+            GroupTopo::Grid,
+            GroupTopo::Erdos(0.5),
+        ] {
+            let g1 = topo.build(1, 7);
+            assert_eq!(g1.n, 1);
+            assert_eq!(g1.edge_count(), 0);
+            assert!(g1.is_connected());
+            let g2 = topo.build(2, 7);
+            assert_eq!(g2.n, 2);
+            assert_eq!(g2.edge_count(), 1);
+        }
+    }
+
+    #[test]
+    fn group_topo_builds_the_named_family() {
+        assert_eq!(GroupTopo::Ring.build(6, 0).edge_count(), 6);
+        assert_eq!(GroupTopo::Star.build(6, 0).degree(0), 5);
+        assert_eq!(GroupTopo::Path.build(6, 0).diameter(), 5);
+        assert_eq!(GroupTopo::Complete.build(6, 0).edge_count(), 15);
+        // 12 → 3×4 mesh; 7 is prime → 1×7 path-like mesh.
+        assert_eq!(GroupTopo::Grid.build(12, 0).edge_count(), 3 * 3 + 2 * 4);
+        assert_eq!(GroupTopo::Grid.build(7, 0).edge_count(), 6);
+        let e = GroupTopo::Erdos(0.6).build(8, 3);
+        assert!(e.is_connected());
+        // Same seed → same sample.
+        assert_eq!(e.adj, GroupTopo::Erdos(0.6).build(8, 3).adj);
+    }
+
+    #[test]
+    fn group_topo_build_rect_uses_exact_mesh() {
+        let g = GroupTopo::Grid.build_rect(2, 4, 0);
+        assert_eq!(g.n, 8);
+        assert_eq!(g.edge_count(), 2 * 3 + 4); // horizontal + vertical
+        // Non-grid families see rows·cols interchangeable members.
+        assert_eq!(GroupTopo::Ring.build_rect(2, 3, 0).edge_count(), 6);
+        assert_eq!(GroupTopo::Grid.build_rect(1, 1, 0).n, 1);
+    }
+
+    #[test]
+    fn single_node_graph() {
+        let g = Graph::single();
+        assert_eq!(g.n, 1);
+        assert!(g.is_connected());
+        assert_eq!(g.diameter(), 0);
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //! dpsa info                         # runtime/artifact status
 //! dpsa demo [flags]                 # 10-second S-DOT walkthrough
 //!
-//! flags: --seed N --scale F --trials N --threads N --out DIR --config FILE.json
+//! flags: --seed N --scale F --trials N --threads N --out DIR
+//!        --config FILE.json --mpi-clock real|virtual
 //! ```
 
 use anyhow::Result;
@@ -139,6 +140,7 @@ fn cmd_demo(args: &Args) -> Result<()> {
 fn print_usage() {
     println!(
         "usage: dpsa <list|run|info|demo> [ids…] \
-         [--seed N] [--scale F] [--trials N] [--threads N] [--out DIR] [--config FILE]"
+         [--seed N] [--scale F] [--trials N] [--threads N] [--out DIR] \
+         [--config FILE] [--mpi-clock real|virtual]"
     );
 }

@@ -5,6 +5,13 @@
 //! separately for star topologies). One message = one matrix sent over one
 //! directed edge in one consensus round — exactly what an MPI blocking
 //! `Sendrecv` with each neighbor produces.
+//!
+//! Only **algorithm** traffic belongs in these columns. The MPI-like
+//! runtime ([`network::mpi`](crate::network::mpi)) additionally moves
+//! protocol chatter (phase-pacing keepalives) and buffer-return messages;
+//! it accounts the former in a *separate* `P2pCounters` instance and the
+//! latter not at all (transport-internal buffer reuse), so the paper's
+//! metric stays comparable across sync, async, and simulator runs.
 
 /// Per-node send counters.
 #[derive(Clone, Debug, Default)]
@@ -24,6 +31,14 @@ impl P2pCounters {
     pub fn record_send(&mut self, from: usize, elems: usize) {
         self.sent[from] += 1;
         self.payload[from] += elems as u64;
+    }
+
+    /// Bulk form of [`record_send`](P2pCounters::record_send): `msgs`
+    /// same-sized messages from one node (a full per-round neighbor fan).
+    #[inline]
+    pub fn record_sends(&mut self, from: usize, msgs: u64, elems_each: usize) {
+        self.sent[from] += msgs;
+        self.payload[from] += msgs * elems_each as u64;
     }
 
     /// Average messages sent per node.
@@ -73,6 +88,18 @@ mod tests {
         assert_eq!(c.max(), 2);
         assert!((c.avg() - 1.0).abs() < 1e-12);
         assert_eq!(c.payload[0], 200);
+    }
+
+    #[test]
+    fn record_sends_bulk_matches_singles() {
+        let mut a = P2pCounters::new(2);
+        let mut b = P2pCounters::new(2);
+        for _ in 0..5 {
+            a.record_send(1, 12);
+        }
+        b.record_sends(1, 5, 12);
+        assert_eq!(a.sent, b.sent);
+        assert_eq!(a.payload, b.payload);
     }
 
     #[test]

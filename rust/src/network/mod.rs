@@ -5,15 +5,17 @@
 //! * [`sim`] — a fast synchronous in-process simulator with exact P2P
 //!   accounting; drives every error-curve and communication-cost experiment
 //!   (Tables I–IV, VI–IX; Figures 1–12).
-//! * [`mpi`] — a threaded runtime with **blocking point-to-point channel
-//!   rendezvous** emulating MPI `Sendrecv` semantics, used for wall-clock
-//!   experiments with straggler injection (Table V). One OS thread per
-//!   node, real sleeps for stragglers.
+//! * [`mpi`] — a pooled runtime with **blocking point-to-point channel
+//!   exchanges** emulating MPI `Sendrecv` semantics, used for the
+//!   straggler experiments (Table V). One persistent pool worker per
+//!   node, recycled message buffers (zero-allocation steady state), and
+//!   two clock modes: real sleeps for wall-clock benchmarking or a
+//!   deterministic virtual clock for exact, instant straggler cascades.
 
 pub mod counters;
 pub mod mpi;
 pub mod sim;
 
 pub use counters::P2pCounters;
-pub use mpi::{MpiConfig, StragglerSpec};
+pub use mpi::{ClockMode, MpiConfig, StragglerSpec};
 pub use sim::SyncNetwork;

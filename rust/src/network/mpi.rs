@@ -1,25 +1,65 @@
-//! Threaded MPI-like runtime with blocking point-to-point semantics.
+//! Pooled MPI-like runtime: blocking point-to-point semantics, recycled
+//! message buffers, and a deterministic virtual clock.
 //!
 //! The paper's Table V measures wall-clock execution with a straggler node
 //! (0.01 s delay at a randomly chosen node per iteration) on an Open MPI
-//! cluster with blocking `Sendrecv`. We reproduce the *semantics*: one OS
-//! thread per node, rendezvous-style blocking neighbor exchange over
-//! channels, and a deterministic per-round straggler choice with a real
-//! `thread::sleep`. Because exchanges block on all neighbors, one slow node
-//! stalls its neighbors, whose next-round stalls propagate — the same
-//! cascade that makes stragglers so costly on synchronous networks.
+//! cluster with blocking `Sendrecv`. We reproduce the *semantics*: one
+//! persistent pool worker per node ([`runtime::spmd`](crate::runtime::spmd)
+//! — no `thread::spawn` per run), rendezvous-style blocking neighbor
+//! exchange over bounded channels, and a deterministic per-round straggler
+//! choice. Because exchanges block on all neighbors, one slow node stalls
+//! its neighbors, whose next-round stalls propagate — the same cascade that
+//! makes stragglers so costly on synchronous networks.
+//!
+//! # Buffer recycling
+//!
+//! Every directed edge pairs its data channel with a return channel
+//! carrying spent message buffers back to the sender. [`NodeCtx::exchange`]
+//! pops a recycled [`Mat`] (falling back to a node-local spare pool),
+//! copies the payload into it, and hands last round's received buffers
+//! back — so the steady-state exchange loop performs **zero heap
+//! allocations** (asserted by the counting allocator in `bench_straggler`;
+//! [`NodeCtx::prime_buffers`] pre-mints the worst-case per-edge complement
+//! so not even scheduling skew can force a late allocation). Return-channel
+//! traffic is *not* counted: it models buffer reuse inside the transport,
+//! like MPI's registered-buffer pools, not messages on the wire.
+//!
+//! # Clock modes
+//!
+//! * [`ClockMode::Real`] — stragglers really `thread::sleep`; use for
+//!   wall-clock benchmarking (`bench_straggler`, Table V at scale 1.0).
+//! * [`ClockMode::Virtual`] — no sleeps. Each node keeps a logical
+//!   nanosecond clock: a straggler adds its delay to its own clock, every
+//!   message carries the sender's clock, and a **blocking** receive
+//!   advances the receiver to at least the sender's send time. This is
+//!   exactly the recurrence `t_i ← max_{j ∈ N(i) ∪ {i}} (t_j + delay_j)`
+//!   ([`expected_sync_vtime`] computes it independently), so Table V's
+//!   straggler cascade reproduces bit-exactly and instantly in tests.
+//!   Non-blocking gossip never waits, so it never advances the clock on
+//!   receive — an asynchronous straggler only slows itself.
+//!
+//! # Counters
+//!
+//! Algorithm traffic (consensus exchanges — [`NodeCtx::exchange`],
+//! [`NodeCtx::exchange_async`], [`NodeCtx::gossip_poll`]) and protocol
+//! chatter (phase-boundary pacing keepalives — [`NodeCtx::pace_poll`]) are
+//! accumulated in **separate** counters and reported separately in
+//! [`MpiRun`], so the async P2P column of Table V-ext stays comparable
+//! with the synchronous runs (the paper's P2P metric counts algorithm
+//! messages only).
 
 use crate::graph::Graph;
 use crate::linalg::Mat;
 use crate::network::counters::P2pCounters;
 use crate::util::rng::SplitMix64;
 use std::collections::HashMap;
-use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Straggler injection: in every global round, one node (chosen
-/// deterministically from `seed` and the round index) sleeps `delay`.
+/// deterministically from `seed` and the round index) is delayed by
+/// `delay` — a real sleep or a virtual-clock bump per [`ClockMode`].
 #[derive(Clone, Copy, Debug)]
 pub struct StragglerSpec {
     pub delay: Duration,
@@ -34,185 +74,465 @@ impl StragglerSpec {
     }
 }
 
+/// How straggler delays are realized and time is measured.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Real `thread::sleep` delays; [`MpiRun::time`] is wall-clock.
+    #[default]
+    Real,
+    /// Logical nanosecond clocks, no sleeps; [`MpiRun::time`] is the
+    /// deterministic cascade time (see the module docs).
+    Virtual,
+}
+
+/// Default per-edge channel capacity (in-flight messages).
+pub const DEFAULT_CAPACITY: usize = 4;
+
 /// Runtime configuration.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct MpiConfig {
     pub straggler: Option<StragglerSpec>,
+    pub clock: ClockMode,
+    /// Bounded capacity of each directed-edge data channel (≥ 1). A full
+    /// synchronous exchange round (everyone sends to all neighbors, then
+    /// receives from all) completes without deadlock for **any** capacity
+    /// ≥ 1, because each edge carries at most one in-flight message per
+    /// round; larger capacities only let fast nodes pipeline ahead of
+    /// slow neighbors by up to `capacity` rounds before a send blocks.
+    pub capacity: usize,
+}
+
+impl Default for MpiConfig {
+    fn default() -> MpiConfig {
+        MpiConfig { straggler: None, clock: ClockMode::Real, capacity: DEFAULT_CAPACITY }
+    }
+}
+
+impl MpiConfig {
+    /// Default config switched to the deterministic virtual clock.
+    pub fn virtual_clock() -> MpiConfig {
+        MpiConfig { clock: ClockMode::Virtual, ..MpiConfig::default() }
+    }
+
+    /// Builder-style straggler injection.
+    pub fn with_straggler(mut self, s: StragglerSpec) -> MpiConfig {
+        self.straggler = Some(s);
+        self
+    }
+}
+
+/// A message on the wire: payload plus the sender's virtual send time
+/// (zero in real-clock mode).
+struct Msg {
+    mat: Mat,
+    stamp: u64,
+}
+
+/// One directed neighbor attachment: data channels both ways plus the
+/// buffer-return path for each direction.
+struct Link {
+    peer: usize,
+    /// Data: us → peer.
+    tx: SyncSender<Msg>,
+    /// Data: peer → us.
+    rx: Receiver<Msg>,
+    /// Spent buffers we received from `peer`, going back to `peer`.
+    reclaim_tx: SyncSender<Mat>,
+    /// Buffers `peer` has returned to us (we minted them for `tx`).
+    spare_rx: Receiver<Mat>,
+}
+
+/// Per-node communication accounting, split into algorithm traffic and
+/// protocol (pacing keepalive) chatter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeStats {
+    pub sent: u64,
+    pub payload: u64,
+    pub proto_sent: u64,
+    pub proto_payload: u64,
+    pub vclock_ns: u64,
 }
 
 /// Per-node communication context handed to the SPMD closure.
 pub struct NodeCtx {
     pub rank: usize,
     pub n: usize,
+    /// Neighbor ranks in ascending order; exchange results come back in
+    /// this order (matching the simulator's mixing order).
     pub neighbors: Vec<usize>,
-    senders: HashMap<usize, SyncSender<Mat>>,
-    receivers: HashMap<usize, Receiver<Mat>>,
+    links: Vec<Link>,
     straggler: Option<StragglerSpec>,
+    clock: ClockMode,
+    capacity: usize,
     round: u64,
-    pub sent: u64,
-    pub payload: u64,
+    vclock_ns: u64,
+    inbox: Vec<(usize, Mat)>,
+    local_spares: Vec<Mat>,
+    stats: NodeStats,
+}
+
+/// Pop a recycled send buffer: edge return channel first, then the
+/// node-local pool, minting an empty `Mat` only when both are dry.
+fn take_buf(link: &Link, local: &mut Vec<Mat>) -> Mat {
+    match link.spare_rx.try_recv() {
+        Ok(b) => b,
+        Err(_) => local.pop().unwrap_or_else(|| Mat::zeros(0, 0)),
+    }
+}
+
+/// Hand a spent buffer back toward the peer that minted it; if its return
+/// channel is full (the edge already holds its whole complement) keep the
+/// surplus in the local pool instead.
+fn give_back(link: &Link, mat: Mat, local: &mut Vec<Mat>) {
+    if let Err(e) = link.reclaim_tx.try_send(mat) {
+        let m = match e {
+            TrySendError::Full(m) | TrySendError::Disconnected(m) => m,
+        };
+        local.push(m);
+    }
 }
 
 impl NodeCtx {
-    /// Blocking synchronous exchange with all neighbors: sends `m` to each
-    /// neighbor, then receives one matrix from each. Applies the straggler
-    /// delay for this round if this node is the designated straggler.
-    /// Returns `(neighbor_rank, matrix)` pairs.
-    pub fn exchange(&mut self, m: &Mat) -> Vec<(usize, Mat)> {
+    /// Advance the round counter and realize this round's straggler delay
+    /// (sleep or virtual-clock bump) if we are the chosen node.
+    fn straggle(&mut self) {
         self.round += 1;
         if let Some(s) = self.straggler {
             if s.node_for_round(self.round, self.n) == self.rank {
-                std::thread::sleep(s.delay);
+                match self.clock {
+                    ClockMode::Real => std::thread::sleep(s.delay),
+                    ClockMode::Virtual => self.vclock_ns += s.delay.as_nanos() as u64,
+                }
             }
         }
-        for (&j, tx) in self.senders.iter() {
-            tx.send(m.clone()).expect("peer hung up");
-            self.sent += 1;
-            self.payload += (m.rows * m.cols) as u64;
-            let _ = j;
+    }
+
+    /// Return last call's received buffers to their senders.
+    fn recycle_inbox(&mut self) {
+        while let Some((peer, mat)) = self.inbox.pop() {
+            let k = self
+                .neighbors
+                .binary_search(&peer)
+                .expect("inbox entry from a non-neighbor");
+            give_back(&self.links[k], mat, &mut self.local_spares);
         }
-        let mut out = Vec::with_capacity(self.neighbors.len());
-        for &j in &self.neighbors {
-            let recv = self.receivers.get(&j).expect("missing channel");
-            let mat = recv.recv().expect("peer hung up");
-            out.push((j, mat));
+    }
+
+    /// Blocking synchronous exchange with all neighbors: sends `m` to each
+    /// neighbor, then receives one matrix from each. Applies the straggler
+    /// delay for this round if this node is the designated straggler.
+    /// Returns `(neighbor_rank, matrix)` pairs in neighbor order; the
+    /// buffers are reused on the next `exchange`/`*_poll` call.
+    pub fn exchange(&mut self, m: &Mat) -> &[(usize, Mat)] {
+        self.straggle();
+        self.recycle_inbox();
+        let stamp = self.vclock_ns;
+        let elems = (m.rows * m.cols) as u64;
+        for link in &self.links {
+            let mut buf = take_buf(link, &mut self.local_spares);
+            buf.copy_from(m);
+            link.tx.send(Msg { mat: buf, stamp }).expect("peer hung up");
+            self.stats.sent += 1;
+            self.stats.payload += elems;
         }
-        out
-    }
-
-    /// Current round index (number of exchanges done).
-    pub fn rounds_done(&self) -> u64 {
-        self.round
-    }
-
-    /// Blocking receive from one neighbor with a timeout; `None` on
-    /// timeout. Used by the async runtime's per-phase pacing (bounded
-    /// staleness): a node waits at each phase boundary until every
-    /// neighbor has entered the phase, then free-runs within it.
-    pub fn recv_from_timeout(&mut self, j: usize, timeout: Duration) -> Option<Mat> {
-        let recv = self.receivers.get(&j).expect("missing channel");
-        recv.recv_timeout(timeout).ok()
-    }
-
-    /// Best-effort single send to one neighbor (dropped if its buffer is
-    /// full). Used for pacing keepalives: announcements can be dropped by
-    /// bounded buffers, so waiters periodically re-announce to break
-    /// mutual phase-wait stalls.
-    pub fn send_to(&mut self, j: usize, m: &Mat) {
-        if let Some(tx) = self.senders.get(&j) {
-            if tx.try_send(m.clone()).is_ok() {
-                self.sent += 1;
-                self.payload += (m.rows * m.cols) as u64;
+        for link in &self.links {
+            let msg = link.rx.recv().expect("peer hung up");
+            // A blocking receive cannot complete before the send happened.
+            if msg.stamp > self.vclock_ns {
+                self.vclock_ns = msg.stamp;
             }
+            self.inbox.push((link.peer, msg.mat));
         }
+        &self.inbox
     }
 
     /// Non-blocking gossip exchange: best-effort send to every neighbor
     /// (dropped if the peer's buffer is full) and drain whatever has
-    /// already arrived. Never blocks — the asynchronous primitive behind
-    /// the straggler-tolerant S-DOT variant (the paper's future-work
-    /// direction on asynchronicity).
-    pub fn exchange_async(&mut self, m: &Mat) -> Vec<(usize, Mat)> {
-        self.round += 1;
-        if let Some(s) = self.straggler {
-            if s.node_for_round(self.round, self.n) == self.rank {
-                std::thread::sleep(s.delay);
-            }
-        }
-        self.gossip_poll(m)
+    /// already arrived, keeping the freshest value per neighbor. Applies
+    /// the straggler delay; never blocks — the asynchronous primitive
+    /// behind the straggler-tolerant S-DOT variant. Counted as algorithm
+    /// traffic.
+    pub fn exchange_async(&mut self, m: &Mat) -> &[(usize, Mat)] {
+        self.straggle();
+        self.poll(m, false)
     }
 
-    /// The non-delaying core of [`exchange_async`]: best-effort send to all
-    /// neighbors + drain. Also used directly for phase-boundary pacing
-    /// polls, which model protocol chatter rather than algorithm rounds
-    /// (no straggler compute delay, no round increment).
-    pub fn gossip_poll(&mut self, m: &Mat) -> Vec<(usize, Mat)> {
-        for tx in self.senders.values() {
-            if tx.try_send(m.clone()).is_ok() {
-                self.sent += 1;
-                self.payload += (m.rows * m.cols) as u64;
+    /// The non-delaying core of [`exchange_async`](NodeCtx::exchange_async):
+    /// best-effort send to all neighbors + drain, no straggler delay, no
+    /// round increment. Counted as **algorithm** traffic.
+    pub fn gossip_poll(&mut self, m: &Mat) -> &[(usize, Mat)] {
+        self.poll(m, false)
+    }
+
+    /// Identical transport to [`gossip_poll`](NodeCtx::gossip_poll) but
+    /// counted as **protocol** chatter: phase-boundary pacing keepalives
+    /// re-announce state to break mutual phase-wait stalls and are not
+    /// part of the algorithm's P2P cost.
+    pub fn pace_poll(&mut self, m: &Mat) -> &[(usize, Mat)] {
+        self.poll(m, true)
+    }
+
+    fn poll(&mut self, m: &Mat, proto: bool) -> &[(usize, Mat)] {
+        self.recycle_inbox();
+        let stamp = self.vclock_ns;
+        let elems = (m.rows * m.cols) as u64;
+        for link in &self.links {
+            let mut buf = take_buf(link, &mut self.local_spares);
+            buf.copy_from(m);
+            match link.tx.try_send(Msg { mat: buf, stamp }) {
+                Ok(()) => {
+                    if proto {
+                        self.stats.proto_sent += 1;
+                        self.stats.proto_payload += elems;
+                    } else {
+                        self.stats.sent += 1;
+                        self.stats.payload += elems;
+                    }
+                }
+                Err(e) => {
+                    let dropped = match e {
+                        TrySendError::Full(msg) | TrySendError::Disconnected(msg) => msg,
+                    };
+                    self.local_spares.push(dropped.mat);
+                }
             }
         }
-        let mut out = Vec::new();
-        for &j in &self.neighbors {
-            let recv = self.receivers.get(&j).expect("missing channel");
+        for link in &self.links {
             // Drain: keep only the freshest value from each neighbor.
-            let mut latest = None;
-            while let Ok(mat) = recv.try_recv() {
-                latest = Some(mat);
+            // Gossip receives never wait, so they never advance the
+            // virtual clock — an async straggler only slows itself.
+            let mut latest: Option<Mat> = None;
+            while let Ok(msg) = link.rx.try_recv() {
+                if let Some(prev) = latest.take() {
+                    give_back(link, prev, &mut self.local_spares);
+                }
+                latest = Some(msg.mat);
             }
             if let Some(mat) = latest {
-                out.push((j, mat));
+                self.inbox.push((link.peer, mat));
             }
         }
-        out
+        &self.inbox
+    }
+
+    /// Current round index (number of `exchange`/`exchange_async` calls).
+    pub fn rounds_done(&self) -> u64 {
+        self.round
+    }
+
+    /// True in [`ClockMode::Virtual`] — bodies use this to skip real
+    /// pacing sleeps.
+    pub fn is_virtual(&self) -> bool {
+        self.clock == ClockMode::Virtual
+    }
+
+    /// This node's logical clock (zero in real-clock mode).
+    pub fn now(&self) -> Duration {
+        Duration::from_nanos(self.vclock_ns)
+    }
+
+    /// Pre-mint `deg × (capacity + 2)` message buffers shaped like `m`
+    /// into the local spare pool — the worst-case per-edge in-flight
+    /// complement (`capacity` queued + 1 in the peer's inbox + 1 in
+    /// hand), so the subsequent exchange stream allocates nothing no
+    /// matter how threads are scheduled. Optional; without it the pool
+    /// fills lazily within the first few rounds.
+    pub fn prime_buffers(&mut self, m: &Mat) {
+        let want = self.links.len() * (self.capacity + 2);
+        while self.local_spares.len() < want {
+            self.local_spares.push(Mat::zeros(m.rows, m.cols));
+        }
+    }
+
+    /// Snapshot of this node's counters and clock.
+    pub fn stats(&self) -> NodeStats {
+        NodeStats { vclock_ns: self.vclock_ns, ..self.stats }
     }
 }
 
 /// Outcome of an SPMD run.
 pub struct MpiRun<R> {
     pub results: Vec<R>,
+    /// Wall-clock around the run (always measured).
     pub elapsed: Duration,
+    /// Maximum final virtual clock across nodes (zero in real mode).
+    pub vtime: Duration,
+    /// Clock mode the run used.
+    pub clock: ClockMode,
+    /// Algorithm P2P traffic (consensus exchanges).
     pub counters: P2pCounters,
+    /// Protocol chatter (pacing keepalives), reported separately.
+    pub proto: P2pCounters,
 }
 
-/// Run `f(rank, ctx)` on every node in its own thread; blocks until all
-/// complete. Channels are bounded (capacity 1) so sends rendezvous like
-/// MPI's synchronous mode once buffers are full.
+impl<R> MpiRun<R> {
+    /// The run's duration in its clock's terms: deterministic cascade
+    /// time under [`ClockMode::Virtual`], wall-clock under
+    /// [`ClockMode::Real`].
+    pub fn time(&self) -> Duration {
+        match self.clock {
+            ClockMode::Virtual => self.vtime,
+            ClockMode::Real => self.elapsed,
+        }
+    }
+}
+
+struct NodeDone<R> {
+    rank: usize,
+    out: Option<R>,
+    stats: NodeStats,
+}
+
+/// Run `f(ctx)` on every node concurrently (one persistent pool worker
+/// per node — see [`runtime::spmd`](crate::runtime::spmd)); blocks until
+/// all complete. Channels are bounded at `cfg.capacity` (see
+/// [`MpiConfig::capacity`] for the exact semantics).
 pub fn run_spmd<R, F>(graph: &Graph, cfg: &MpiConfig, f: F) -> MpiRun<R>
 where
     R: Send + 'static,
     F: Fn(&mut NodeCtx) -> R + Send + Sync + 'static,
 {
+    assert!(cfg.capacity >= 1, "MpiConfig.capacity must be >= 1");
     let n = graph.n;
-    // Build a channel for each directed edge.
-    let mut senders: Vec<HashMap<usize, SyncSender<Mat>>> = (0..n).map(|_| HashMap::new()).collect();
-    let mut receivers: Vec<HashMap<usize, Receiver<Mat>>> = (0..n).map(|_| HashMap::new()).collect();
+    // Build the channel fabric: per directed edge, one data channel and
+    // one buffer-return channel sized to the edge's full complement.
+    let mut fwd_tx: Vec<HashMap<usize, SyncSender<Msg>>> = (0..n).map(|_| HashMap::new()).collect();
+    let mut fwd_rx: Vec<HashMap<usize, Receiver<Msg>>> = (0..n).map(|_| HashMap::new()).collect();
+    let mut rec_tx: Vec<HashMap<usize, SyncSender<Mat>>> = (0..n).map(|_| HashMap::new()).collect();
+    let mut rec_rx: Vec<HashMap<usize, Receiver<Mat>>> = (0..n).map(|_| HashMap::new()).collect();
     for i in 0..n {
         for &j in &graph.adj[i] {
-            // Channel i -> j; buffered so a full synchronous round can
-            // proceed without deadlock (everyone sends before receiving).
-            let (tx, rx) = std::sync::mpsc::sync_channel::<Mat>(4);
-            senders[i].insert(j, tx);
-            receivers[j].insert(i, rx);
+            let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.capacity);
+            fwd_tx[i].insert(j, tx);
+            fwd_rx[j].insert(i, rx);
+            let (rtx, rrx) = mpsc::sync_channel::<Mat>(cfg.capacity + 2);
+            rec_tx[j].insert(i, rtx);
+            rec_rx[i].insert(j, rrx);
         }
     }
 
-    let f = Arc::new(f);
-    let start = Instant::now();
-    let mut handles = Vec::with_capacity(n);
-    for (rank, (s, r)) in senders.into_iter().zip(receivers.into_iter()).enumerate() {
-        let mut ctx = NodeCtx {
+    let mut ctxs: Vec<NodeCtx> = Vec::with_capacity(n);
+    for rank in 0..n {
+        let neighbors = graph.adj[rank].clone();
+        let mut links = Vec::with_capacity(neighbors.len());
+        for &j in &neighbors {
+            links.push(Link {
+                peer: j,
+                tx: fwd_tx[rank].remove(&j).expect("forward sender"),
+                rx: fwd_rx[rank].remove(&j).expect("forward receiver"),
+                reclaim_tx: rec_tx[rank].remove(&j).expect("reclaim sender"),
+                spare_rx: rec_rx[rank].remove(&j).expect("reclaim receiver"),
+            });
+        }
+        let deg = neighbors.len();
+        ctxs.push(NodeCtx {
             rank,
             n,
-            neighbors: graph.adj[rank].clone(),
-            senders: s,
-            receivers: r,
+            neighbors,
+            links,
             straggler: cfg.straggler,
+            clock: cfg.clock,
+            capacity: cfg.capacity,
             round: 0,
-            sent: 0,
-            payload: 0,
-        };
+            vclock_ns: 0,
+            inbox: Vec::with_capacity(deg),
+            local_spares: Vec::new(),
+            stats: NodeStats::default(),
+        });
+    }
+
+    let f = Arc::new(f);
+    let (res_tx, res_rx) = mpsc::channel::<NodeDone<R>>();
+    let start = Instant::now();
+    let mut jobs: Vec<crate::runtime::spmd::Job> = Vec::with_capacity(n);
+    for mut ctx in ctxs {
         let f = Arc::clone(&f);
-        handles.push(std::thread::spawn(move || {
-            let out = f(&mut ctx);
-            (ctx.rank, out, ctx.sent, ctx.payload)
+        let res_tx = res_tx.clone();
+        jobs.push(Box::new(move || {
+            let rank = ctx.rank;
+            // Catch panics so the pool worker survives; a panicked node
+            // drops its channel ends, peers fail their next blocking
+            // call, and every node still reports in.
+            let out =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut ctx))).ok();
+            let stats = ctx.stats();
+            drop(ctx); // unblock peers before reporting
+            let _ = res_tx.send(NodeDone { rank, out, stats });
         }));
+    }
+    drop(res_tx);
+    {
+        let mut pool = crate::runtime::spmd::global().lock().expect("spmd pool lock");
+        pool.dispatch(jobs);
     }
 
     let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let mut counters = P2pCounters::new(n);
-    for h in handles {
-        let (rank, out, sent, payload) = h.join().expect("node thread panicked");
-        results[rank] = Some(out);
-        counters.sent[rank] = sent;
-        counters.payload[rank] = payload;
+    let mut proto = P2pCounters::new(n);
+    let mut vmax = 0u64;
+    let mut panicked = false;
+    for _ in 0..n {
+        let done = res_rx.recv().expect("spmd job lost");
+        counters.sent[done.rank] = done.stats.sent;
+        counters.payload[done.rank] = done.stats.payload;
+        proto.sent[done.rank] = done.stats.proto_sent;
+        proto.payload[done.rank] = done.stats.proto_payload;
+        vmax = vmax.max(done.stats.vclock_ns);
+        match done.out {
+            Some(r) => results[done.rank] = Some(r),
+            None => panicked = true,
+        }
+    }
+    if panicked {
+        panic!("spmd node body panicked");
     }
     MpiRun {
         results: results.into_iter().map(|o| o.unwrap()).collect(),
         elapsed: start.elapsed(),
+        vtime: Duration::from_nanos(vmax),
+        clock: cfg.clock,
         counters,
+        proto,
     }
+}
+
+/// Reference model of the synchronous straggler cascade in virtual time:
+/// round by round, `s_i = t_i + delay·[i == straggler(round)]` and
+/// `t_i ← max_{j ∈ N(i) ∪ {i}} s_j`. The pooled runtime's virtual clock
+/// reproduces this **exactly** (integer nanosecond arithmetic, asserted
+/// in tests), and in real-clock mode it is a hard lower bound on
+/// wall-clock (sleeps never undershoot).
+pub fn expected_sync_vtime(graph: &Graph, spec: &StragglerSpec, rounds: u64) -> Duration {
+    let n = graph.n;
+    let d = spec.delay.as_nanos() as u64;
+    let mut t = vec![0u64; n];
+    let mut s = vec![0u64; n];
+    for round in 1..=rounds {
+        let lag = spec.node_for_round(round, n);
+        for (i, (si, &ti)) in s.iter_mut().zip(t.iter()).enumerate() {
+            *si = ti + if i == lag { d } else { 0 };
+        }
+        for (i, ti) in t.iter_mut().enumerate() {
+            let mut m = s[i];
+            for &j in &graph.adj[i] {
+                m = m.max(s[j]);
+            }
+            *ti = m;
+        }
+    }
+    Duration::from_nanos(t.into_iter().max().unwrap_or(0))
+}
+
+/// Reference model of the asynchronous (gossip) virtual time: receives
+/// never wait, so node `i`'s clock is just the sum of its own straggler
+/// delays over its `rounds` calls; the run's virtual time is the max.
+pub fn expected_async_vtime(spec: &StragglerSpec, n: usize, rounds: u64) -> Duration {
+    let d = spec.delay.as_nanos() as u64;
+    let mut counts = vec![0u64; n];
+    for round in 1..=rounds {
+        counts[spec.node_for_round(round, n)] += 1;
+    }
+    Duration::from_nanos(counts.into_iter().max().unwrap_or(0) * d)
 }
 
 #[cfg(test)]
@@ -247,6 +567,8 @@ mod tests {
         for i in 1..5 {
             assert_eq!(run.counters.sent[i], rounds as u64);
         }
+        // Synchronous exchanges are pure algorithm traffic.
+        assert_eq!(run.proto.total(), 0);
     }
 
     #[test]
@@ -266,16 +588,16 @@ mod tests {
         let mut zs = z0.clone();
         net.consensus(&mut zs, rounds);
 
-        // Threaded MPI path: each node mixes its own row every round.
+        // Pooled MPI path: each node mixes its own row every round.
         let z0_arc = Arc::new(z0);
         let wm_arc = Arc::new(wm);
         let run = run_spmd(&g, &MpiConfig::default(), move |ctx| {
+            let i = ctx.rank;
             let mut z = z0_arc[ctx.rank].clone();
             for _ in 0..rounds {
-                let got = ctx.exchange(&z);
-                let mut nz = z.scale(wm_arc.w.get(ctx.rank, ctx.rank));
-                for (j, mj) in got {
-                    nz.axpy(wm_arc.w.get(ctx.rank, j), &mj);
+                let mut nz = z.scale(wm_arc.w.get(i, i));
+                for &(j, ref mj) in ctx.exchange(&z) {
+                    nz.axpy(wm_arc.w.get(i, j), mj);
                 }
                 z = nz;
             }
@@ -287,26 +609,114 @@ mod tests {
     }
 
     #[test]
-    fn straggler_slows_wall_clock() {
+    fn virtual_straggler_matches_reference_cascade_exactly() {
         let g = Graph::ring(4);
-        let rounds = 20;
-        let body = move |ctx: &mut NodeCtx| {
+        let rounds = 20u64;
+        let spec = StragglerSpec { delay: Duration::from_millis(5), seed: 1 };
+        let cfg = MpiConfig::virtual_clock().with_straggler(spec);
+        let run = run_spmd(&g, &cfg, move |ctx| {
             let m = Mat::eye(2);
             for _ in 0..rounds {
                 ctx.exchange(&m);
             }
-        };
-        let fast = run_spmd(&g, &MpiConfig::default(), body);
-        let slow = run_spmd(
-            &g,
-            &MpiConfig {
-                straggler: Some(StragglerSpec { delay: Duration::from_millis(5), seed: 1 }),
-            },
-            body,
-        );
-        // 20 rounds × 5 ms ≈ 100 ms floor for the straggled run.
-        assert!(slow.elapsed >= Duration::from_millis(80), "{:?}", slow.elapsed);
-        assert!(slow.elapsed > fast.elapsed);
+        });
+        let expect = expected_sync_vtime(&g, &spec, rounds);
+        assert_eq!(run.vtime, expect, "virtual cascade must be bit-exact");
+        // 20 rounds × 5 ms of injected delay cascades to ≥ a large
+        // fraction of the serial floor on a ring.
+        assert!(run.vtime >= Duration::from_millis(50), "{:?}", run.vtime);
+        assert_eq!(run.time(), run.vtime);
+    }
+
+    #[test]
+    fn virtual_clock_zero_without_straggler() {
+        let g = Graph::ring(4);
+        let run = run_spmd(&g, &MpiConfig::virtual_clock(), |ctx| {
+            let m = Mat::eye(2);
+            for _ in 0..5 {
+                ctx.exchange(&m);
+            }
+        });
+        assert_eq!(run.vtime, Duration::ZERO);
+    }
+
+    #[test]
+    fn straggler_real_sleep_floor_smoke() {
+        // The one retained real-sleep test: the virtual cascade is a hard
+        // wall-clock lower bound (sleeps never undershoot), so this holds
+        // on arbitrarily loaded CI.
+        let g = Graph::ring(4);
+        let rounds = 10u64;
+        let spec = StragglerSpec { delay: Duration::from_millis(2), seed: 1 };
+        let cfg = MpiConfig::default().with_straggler(spec);
+        let run = run_spmd(&g, &cfg, move |ctx| {
+            let m = Mat::eye(2);
+            for _ in 0..rounds {
+                ctx.exchange(&m);
+            }
+        });
+        let floor = expected_sync_vtime(&g, &spec, rounds);
+        assert!(floor > Duration::ZERO);
+        assert!(run.elapsed >= floor, "elapsed={:?} floor={floor:?}", run.elapsed);
+    }
+
+    #[test]
+    fn async_virtual_time_counts_own_delays_only() {
+        let g = Graph::complete(5);
+        let rounds = 40u64;
+        let spec = StragglerSpec { delay: Duration::from_millis(3), seed: 9 };
+        let cfg = MpiConfig::virtual_clock().with_straggler(spec);
+        let run = run_spmd(&g, &cfg, move |ctx| {
+            let m = Mat::eye(2);
+            for _ in 0..rounds {
+                ctx.exchange_async(&m);
+            }
+            ctx.now()
+        });
+        let expect = expected_async_vtime(&spec, 5, rounds);
+        assert_eq!(run.vtime, expect);
+        // Far below the synchronous cascade for the same rounds.
+        assert!(run.vtime < expected_sync_vtime(&g, &spec, rounds));
+    }
+
+    #[test]
+    fn proto_and_algo_counters_are_separate() {
+        // Capacity large enough that no best-effort send is ever dropped,
+        // making the counts exact: 3 algorithm polls + 2 pacing polls.
+        let g = Graph::ring(4);
+        let cfg = MpiConfig { capacity: 8, ..MpiConfig::default() };
+        let run = run_spmd(&g, &cfg, |ctx| {
+            let m = Mat::eye(3);
+            for _ in 0..3 {
+                ctx.exchange_async(&m);
+            }
+            for _ in 0..2 {
+                ctx.pace_poll(&m);
+            }
+        });
+        for i in 0..4 {
+            assert_eq!(run.counters.sent[i], 3 * 2, "algo sends node {i}");
+            assert_eq!(run.proto.sent[i], 2 * 2, "proto sends node {i}");
+            assert_eq!(run.counters.payload[i], 3 * 2 * 9);
+            assert_eq!(run.proto.payload[i], 2 * 2 * 9);
+        }
+    }
+
+    #[test]
+    fn capacity_one_sync_rounds_complete_on_ring_and_star() {
+        // Doc'd semantics: any capacity ≥ 1 completes synchronous rounds
+        // without deadlock (each edge holds ≤ 1 in-flight message/round).
+        for g in [Graph::ring(5), Graph::star(6)] {
+            let cfg = MpiConfig { capacity: 1, ..MpiConfig::default() };
+            let run = run_spmd(&g, &cfg, |ctx| {
+                let m = Mat::eye(2);
+                for _ in 0..8 {
+                    ctx.exchange(&m);
+                }
+                ctx.rounds_done()
+            });
+            assert!(run.results.iter().all(|&r| r == 8), "{}", g.kind);
+        }
     }
 
     #[test]

@@ -14,7 +14,9 @@
 //!   reports the backend as unavailable.
 //!
 //! This module also hosts the parallel substrate: [`pool`] (the
-//! dependency-free scoped-thread node pool) and [`workspace`] (persistent
+//! dependency-free scoped-thread node pool for non-blocking chunked
+//! dispatch), [`spmd`] (the persistent one-thread-per-node pool behind
+//! the blocking MPI-like runtime), and [`workspace`] (persistent
 //! scratch for the zero-allocation steady state). Backends must be
 //! [`Sync`] because algorithm runners invoke them from pool workers —
 //! one node per call, never sharing output buffers, which preserves the
@@ -22,6 +24,7 @@
 
 pub mod native;
 pub mod pool;
+pub mod spmd;
 pub mod workspace;
 
 #[cfg(feature = "xla-pjrt")]

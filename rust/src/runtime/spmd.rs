@@ -1,0 +1,170 @@
+//! Persistent SPMD worker pool for the MPI-like runtime.
+//!
+//! The straggler experiments (`network::mpi::run_spmd`) execute one node
+//! body per concurrent worker. The seed runtime paid a `thread::spawn`
+//! per node per run — hundreds of spawns across a Table-V sweep. This
+//! pool keeps the workers alive for the whole process: a run checks out
+//! the first `n` workers (growing the pool on first use), hands each one
+//! boxed job, and the workers park on their queues between runs.
+//!
+//! Unlike [`runtime::pool::NodePool`](crate::runtime::pool::NodePool)
+//! (chunked data-parallel dispatch, closures must not block), SPMD jobs
+//! **may block on each other** — node bodies rendezvous over channels —
+//! so every job needs its own worker thread. Jobs queue FIFO per worker;
+//! callers enqueue a whole run's jobs atomically (under the [`global`]
+//! pool lock), which makes concurrent runs from parallel tests safe:
+//! an earlier run's jobs always sit ahead of a later run's on every
+//! shared worker, so the earlier run drains without waiting on the later
+//! one, then the later one proceeds — no circular wait.
+//!
+//! Completion signalling is the caller's job (e.g. a results channel
+//! carrying one message per node); `dispatch` only enqueues.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Mutex, OnceLock};
+
+/// A unit of SPMD work. Must not panic through the closure boundary —
+/// wrap the body in `catch_unwind` (as `network::mpi::run_spmd` does) so
+/// the worker survives for the next run.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Worker {
+    tx: Sender<Job>,
+}
+
+/// Grow-on-demand pool of persistent SPMD workers.
+pub struct SpmdPool {
+    workers: Vec<Worker>,
+}
+
+impl SpmdPool {
+    pub fn new() -> SpmdPool {
+        SpmdPool { workers: Vec::new() }
+    }
+
+    /// Number of worker threads spawned so far (high-water mark of
+    /// concurrent nodes across all runs).
+    pub fn spawned(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn ensure(&mut self, n: usize) {
+        while self.workers.len() < n {
+            let idx = self.workers.len();
+            let (tx, rx) = channel::<Job>();
+            std::thread::Builder::new()
+                .name(format!("dpsa-spmd-{idx}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawn spmd worker");
+            self.workers.push(Worker { tx });
+        }
+    }
+
+    /// Enqueue one job per worker (job `k` runs on worker `k`), growing
+    /// the pool to `jobs.len()` workers if needed. Returns immediately;
+    /// the jobs signal their own completion.
+    pub fn dispatch(&mut self, jobs: Vec<Job>) {
+        self.ensure(jobs.len());
+        for (w, job) in self.workers.iter().zip(jobs) {
+            w.tx.send(job).expect("spmd worker died");
+        }
+    }
+}
+
+impl Default for SpmdPool {
+    fn default() -> Self {
+        SpmdPool::new()
+    }
+}
+
+/// The process-wide pool shared by every `run_spmd` call.
+pub fn global() -> &'static Mutex<SpmdPool> {
+    static GLOBAL: OnceLock<Mutex<SpmdPool>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Mutex::new(SpmdPool::new()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn run_batch(pool: &mut SpmdPool, n: usize) -> Vec<usize> {
+        let (tx, rx) = mpsc::channel::<(usize, usize)>();
+        let mut jobs: Vec<Job> = Vec::new();
+        for k in 0..n {
+            let tx = tx.clone();
+            jobs.push(Box::new(move || {
+                let _ = tx.send((k, k * k));
+            }));
+        }
+        drop(tx);
+        pool.dispatch(jobs);
+        let mut out = vec![0usize; n];
+        for _ in 0..n {
+            let (k, v) = rx.recv().expect("job result");
+            out[k] = v;
+        }
+        out
+    }
+
+    #[test]
+    fn jobs_run_and_pool_reuses_threads() {
+        let mut pool = SpmdPool::new();
+        assert_eq!(pool.spawned(), 0);
+        let got = run_batch(&mut pool, 5);
+        assert_eq!(got, vec![0, 1, 4, 9, 16]);
+        assert_eq!(pool.spawned(), 5);
+        // A second, smaller batch must not spawn more workers.
+        let got = run_batch(&mut pool, 3);
+        assert_eq!(got, vec![0, 1, 4]);
+        assert_eq!(pool.spawned(), 5);
+        // A larger batch grows the pool exactly to the new size.
+        let got = run_batch(&mut pool, 7);
+        assert_eq!(got.len(), 7);
+        assert_eq!(pool.spawned(), 7);
+    }
+
+    #[test]
+    fn jobs_may_block_on_each_other() {
+        // Two jobs rendezvous over a channel pair — requires true
+        // concurrency (one worker each), the SPMD contract.
+        let mut pool = SpmdPool::new();
+        let (a_tx, a_rx) = mpsc::channel::<u32>();
+        let (b_tx, b_rx) = mpsc::channel::<u32>();
+        let (done_tx, done_rx) = mpsc::channel::<u32>();
+        let d0 = done_tx.clone();
+        let d1 = done_tx;
+        let jobs: Vec<Job> = vec![
+            Box::new(move || {
+                a_tx.send(1).unwrap();
+                let v = b_rx.recv().unwrap();
+                d0.send(10 + v).unwrap();
+            }),
+            Box::new(move || {
+                let v = a_rx.recv().unwrap();
+                b_tx.send(2).unwrap();
+                d1.send(20 + v).unwrap();
+            }),
+        ];
+        pool.dispatch(jobs);
+        let mut got = vec![done_rx.recv().unwrap(), done_rx.recv().unwrap()];
+        got.sort_unstable();
+        assert_eq!(got, vec![12, 21]);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let before = global().lock().unwrap().spawned();
+        {
+            let mut pool = global().lock().unwrap();
+            let got = run_batch(&mut pool, 2);
+            assert_eq!(got, vec![0, 1]);
+        }
+        let after = global().lock().unwrap().spawned();
+        assert!(after >= 2 && after >= before);
+    }
+}

@@ -4,7 +4,89 @@
 //! median / min / max wall-clock. Bench binaries (`[[bench]]
 //! harness = false`) print paper-table regenerations plus these timings.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
+
+/// Counting allocator shared by the bench binaries' zero-allocation
+/// proofs. A bench opts in with
+/// `#[global_allocator] static GLOBAL: CountingAlloc = CountingAlloc;`
+/// and brackets the measured region with [`alloc_snapshot`]. Counters
+/// are process-global (allocations from *any* thread count), so measured
+/// regions must keep concurrent threads in their steady state too.
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// `(allocation count, bytes)` since process start — zero forever if
+/// [`CountingAlloc`] is not installed as the global allocator.
+pub fn alloc_snapshot() -> (u64, u64) {
+    (ALLOCS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+/// Flat `key → number` JSON report written next to the bench binary so
+/// CI can upload it as a perf-ledger artifact. `BENCH_JSON_OUT`
+/// overrides the default path.
+pub struct BenchReport {
+    entries: Vec<(String, f64)>,
+}
+
+impl BenchReport {
+    pub fn new() -> BenchReport {
+        BenchReport { entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, key: &str, value: f64) {
+        self.entries.push((key.to_string(), value));
+    }
+
+    pub fn push_timing(&mut self, key: &str, t: &Timing) {
+        self.push(key, t.median.as_nanos() as f64);
+    }
+
+    pub fn save(&self, default_path: &str) {
+        let path =
+            std::env::var("BENCH_JSON_OUT").unwrap_or_else(|_| default_path.to_string());
+        let mut body = String::from("{\n");
+        for (i, (k, v)) in self.entries.iter().enumerate() {
+            let sep = if i + 1 == self.entries.len() { "" } else { "," };
+            body.push_str(&format!("  \"{k}\": {v}{sep}\n"));
+        }
+        body.push_str("}\n");
+        match std::fs::write(&path, body) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
+    }
+}
+
+impl Default for BenchReport {
+    fn default() -> Self {
+        BenchReport::new()
+    }
+}
 
 /// Timing summary over repetitions.
 #[derive(Clone, Copy, Debug)]
@@ -53,7 +135,9 @@ pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
 
 /// Standard header for bench binaries; reads scale/trials/threads from
 /// env so `BENCH_SCALE=1.0 BENCH_THREADS=4 cargo bench` regenerates
-/// paper-fidelity numbers at full parallelism.
+/// paper-fidelity numbers at full parallelism. `BENCH_MPI_CLOCK=virtual`
+/// switches the Table-V straggler runs onto the deterministic virtual
+/// clock (instant; real sleeps remain the default for wall-clock runs).
 pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
     let scale = std::env::var("BENCH_SCALE")
         .ok()
@@ -67,6 +151,10 @@ pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1);
+    let mpi_clock = match std::env::var("BENCH_MPI_CLOCK").ok().as_deref() {
+        Some("virtual") => crate::network::mpi::ClockMode::Virtual,
+        _ => crate::network::mpi::ClockMode::Real,
+    };
     crate::network::sim::set_default_threads(threads);
     crate::experiments::ExpCtx {
         seed: 42,
@@ -74,6 +162,7 @@ pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
         trials,
         out_dir: std::path::PathBuf::from("results"),
         threads,
+        mpi_clock,
     }
 }
 

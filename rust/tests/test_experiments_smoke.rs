@@ -2,6 +2,7 @@
 //! its CSV/markdown artifacts.
 
 use dpsa::experiments::{all_ids, run, ExpCtx};
+use dpsa::network::mpi::ClockMode;
 
 fn tiny_ctx(name: &str) -> ExpCtx {
     ExpCtx {
@@ -10,6 +11,9 @@ fn tiny_ctx(name: &str) -> ExpCtx {
         trials: 1,
         out_dir: std::env::temp_dir().join(format!("dpsa_smoke_{name}")),
         threads: 1,
+        // Straggler smokes run on the deterministic virtual clock: no
+        // sleeps, no wall-clock flakiness on loaded CI.
+        mpi_clock: ClockMode::Virtual,
     }
 }
 
@@ -29,7 +33,9 @@ fn table5_straggler_smoke() {
     let tables = run("table5", &ctx).unwrap();
     // 2 networks × 2 schedules × {straggler, none} = 8 rows.
     assert_eq!(tables[0].rows.len(), 8);
-    // Every straggled row slower than its paired clean row.
+    // Every straggled row slower than its paired clean row (virtual
+    // clock: clean rows accrue exactly zero time, straggled rows the
+    // deterministic cascade).
     for pair in tables[0].rows.chunks(2) {
         let t_straggle: f64 = pair[0][4].parse().unwrap();
         let t_clean: f64 = pair[1][4].parse().unwrap();
@@ -38,6 +44,16 @@ fn table5_straggler_smoke() {
             "straggler not slower: {t_straggle} vs {t_clean}"
         );
     }
+    // The sync-vs-async extension table carries the protocol column.
+    assert_eq!(tables[1].rows.len(), 2);
+}
+
+#[test]
+fn topo_straggler_smoke() {
+    let ctx = tiny_ctx("topo_straggler");
+    let tables = run("topo_straggler", &ctx).unwrap();
+    assert_eq!(tables[0].rows.len(), 10); // 5 topologies × {no, yes}
+    assert!(ctx.out_dir.join("topo_straggler").exists());
 }
 
 #[test]
@@ -91,5 +107,5 @@ fn all_ids_run_is_exhaustive() {
     // error with "unknown id" for anything all_ids() lists). Uses the
     // cheapest possible scale; correctness checked by the other tests.
     let ids = all_ids();
-    assert_eq!(ids.len(), 22);
+    assert_eq!(ids.len(), 23);
 }
