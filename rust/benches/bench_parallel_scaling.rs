@@ -1,0 +1,180 @@
+//! Parallel-scaling benchmark: node-only vs **hierarchical** (node × row)
+//! dispatch, plus trial-level fan-out — the two parallelism levels behind
+//! the single `--threads` knob.
+//!
+//! The within-node rungs run a d ∈ {784, 2914} (LFW-shaped) S-DOT cell on
+//! an N = 2 complete graph — the regime where node-only chunking strands
+//! all but two threads. Three modes are timed at identical arithmetic:
+//!
+//! * `t1`       — serial baseline;
+//! * `t4_flat`  — 4 threads, node-level chunking only (`split_rows = false`,
+//!                the pre-hierarchical behaviour: at most 2 threads busy);
+//! * `t4_hier`  — 4 threads, hierarchical row-split dispatch.
+//!
+//! Every mode's estimates are asserted **bitwise identical** before any
+//! timing is reported — speed must come from scheduling, never from
+//! arithmetic drift. The trial-level section times a Table-I-style cell
+//! (4 Monte-Carlo trials) with the trial pool off vs on and asserts the
+//! averaged outputs are bit-equal.
+//!
+//! Results go to `BENCH_parallel.json` (override with `BENCH_JSON_OUT`);
+//! CI uploads it next to the hotpath/straggler ledgers.
+//!
+//! Run: `cargo bench --bench bench_parallel_scaling`
+
+use dpsa::algorithms::sdot::{run_sdot, SdotConfig};
+use dpsa::algorithms::SampleSetting;
+use dpsa::consensus::schedule::Schedule;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::experiments::{synth_tables, ExpCtx};
+use dpsa::graph::Graph;
+use dpsa::linalg::Mat;
+use dpsa::network::sim::SyncNetwork;
+use dpsa::util::bench::{time_it, BenchReport};
+use dpsa::util::rng::Rng;
+
+fn assert_bitwise(a: &[Mat], b: &[Mat], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: node count");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.data, y.data, "{what}: node {i} differs bitwise");
+    }
+}
+
+fn main() {
+    println!("== parallel scaling: node-only vs hierarchical (N=2) ==\n");
+    let mut report = BenchReport::new();
+    let threads = 4usize;
+
+    // ---- within-node scaling at d ∈ {784, 2914}, N = 2 ----------------
+    for &(d, r, n_i, t_c, t_o) in &[(784usize, 5usize, 192usize, 4usize, 6usize), (2914, 7, 128, 3, 4)] {
+        let nodes = 2;
+        let mut rng = Rng::new(42);
+        let spec = Spectrum::with_gap(d, r, 0.7);
+        // Spiked sampler keeps setup O(d·m) at d = 2914; n_i < d keeps
+        // the covariances in the implicit form (the two-phase split
+        // target, exactly how the LFW tables hold their data).
+        let ds = SyntheticDataset::spiked(&spec, 8, n_i, nodes, &mut rng);
+        let setting = SampleSetting::from_parts(&ds.parts, r, &mut rng);
+        let g = Graph::complete(nodes);
+        let mut cfg = SdotConfig::new(Schedule::fixed(t_c), t_o);
+        cfg.record_every = t_o;
+
+        let modes: [(&str, usize, bool); 3] =
+            [("t1", 1, true), ("t4_flat", threads, false), ("t4_hier", threads, true)];
+        let mut q_ref: Option<Vec<Mat>> = None;
+        let mut secs = [0.0f64; 3];
+        for (mi, &(mode, t, split)) in modes.iter().enumerate() {
+            // Correctness first: all modes must agree bitwise.
+            let mut net = SyncNetwork::with_threads_split(g.clone(), t, split);
+            let (q, _) = run_sdot(&mut net, &setting, &cfg);
+            match &q_ref {
+                None => q_ref = Some(q),
+                Some(want) => assert_bitwise(want, &q, mode),
+            }
+            let timing = time_it(1, 5, || {
+                let mut net = SyncNetwork::with_threads_split(g.clone(), t, split);
+                std::hint::black_box(run_sdot(&mut net, &setting, &cfg));
+            });
+            secs[mi] = timing.median.as_secs_f64();
+            println!("S-DOT cell d={d:<4} N=2 r={r} T_c={t_c} T_o={t_o}  {mode:>8}: {timing}");
+            report.push(&format!("sdot_d{d}_n2_{mode}_ns"), timing.median.as_nanos() as f64);
+        }
+        let node_only = secs[0] / secs[1].max(1e-12);
+        let hier = secs[0] / secs[2].max(1e-12);
+        println!(
+            "  speedup vs serial — node-only: {node_only:.2}x, hierarchical: {hier:.2}x \
+             (hier/node-only: {:.2}x)\n",
+            secs[1] / secs[2].max(1e-12)
+        );
+        report.push(&format!("sdot_d{d}_n2_node_only_speedup"), node_only);
+        report.push(&format!("sdot_d{d}_n2_hier_speedup"), hier);
+        if d == 2914 && hier <= node_only {
+            eprintln!(
+                "  WARNING: hierarchical did not beat node-only at d={d} \
+                 (expected on ≥4 hardware threads; CI runners vary)"
+            );
+        }
+    }
+
+    // ---- pooled dense Gram build (syrk row kernel) ---------------------
+    // Demonstrates and prices the pooled Gram-build pattern: the
+    // experiment runners themselves still build dense covariances with
+    // the serial triangle-and-mirror `syrk` (their d ≤ 128 shapes don't
+    // warrant a pool), so `syrk_rows_into` is exercised here and by the
+    // shape-sweep property tests — it is the kernel a future pooled
+    // `CovOp` construction path would use. The mirror-free row kernel
+    // spends 2× the serial triangle's flops, so the ceiling on 4 threads
+    // is ~2× — measured here and asserted bitwise against serial.
+    {
+        use dpsa::runtime::pool::NodePool;
+        use dpsa::runtime::MatRowsScratch;
+        let (d, n_s) = (784usize, 512usize);
+        let mut rng = Rng::new(7);
+        let x = Mat::gauss(d, n_s, &mut rng);
+        let scale = 1.0 / n_s as f64;
+        let want = x.syrk(scale);
+        let pool = NodePool::new(threads);
+        let mut out = vec![Mat::zeros(d, d)];
+        let pooled_syrk = |out: &mut Vec<Mat>| {
+            let mut scratch = MatRowsScratch::new();
+            let dst = scratch.fill(out.as_mut_slice());
+            pool.run_chunks2(1, &|_| d, &|i, lo, hi| {
+                // SAFETY: each task owns rows [lo, hi) of the Gram.
+                let rows = unsafe { dst.rows_mut(i, lo, hi) };
+                x.syrk_rows_into(scale, lo, hi, rows);
+            });
+        };
+        pooled_syrk(&mut out);
+        assert_eq!(out[0].data, want.data, "pooled syrk must match serial bitwise");
+        let t_serial = time_it(1, 5, || {
+            std::hint::black_box(x.syrk(scale));
+        });
+        let t_pooled = time_it(1, 5, || {
+            pooled_syrk(&mut out);
+            std::hint::black_box(&out);
+        });
+        let speedup = t_serial.median.as_secs_f64() / t_pooled.median.as_secs_f64().max(1e-12);
+        println!("\ndense Gram d={d} n={n_s}  serial syrk: {t_serial}");
+        println!("dense Gram d={d} n={n_s}  pooled rows: {t_pooled}  ({speedup:.2}x)\n");
+        report.push("gram_d784_serial_ns", t_serial.median.as_nanos() as f64);
+        report.push("gram_d784_pooled_t4_ns", t_pooled.median.as_nanos() as f64);
+        report.push("gram_d784_pooled_speedup", speedup);
+    }
+
+    // ---- trial-level scaling: a Table-I cell, 4 MC trials -------------
+    let base = ExpCtx {
+        seed: 42,
+        scale: 0.1,
+        trials: 4,
+        threads,
+        trial_parallel: false,
+        ..Default::default()
+    };
+    let t_o = base.scaled(synth_tables::T_O);
+    let cell = |ctx: &ExpCtx| {
+        synth_tables::run_cell(ctx, 20, 0.25, 5, 0.7, Schedule::fixed(50), t_o, "erdos")
+    };
+    let serial_out = cell(&base);
+    let par_ctx = ExpCtx { trial_parallel: true, ..base.clone() };
+    let par_out = cell(&par_ctx);
+    assert_eq!(
+        (serial_out.0.to_bits(), serial_out.1.to_bits()),
+        (par_out.0.to_bits(), par_out.1.to_bits()),
+        "trial-parallel cell must be bit-identical to the serial loop"
+    );
+    let t_serial = time_it(1, 3, || {
+        std::hint::black_box(cell(&base));
+    });
+    let t_par = time_it(1, 3, || {
+        std::hint::black_box(cell(&par_ctx));
+    });
+    let speedup = t_serial.median.as_secs_f64() / t_par.median.as_secs_f64().max(1e-12);
+    println!("Table-I cell, 4 trials  serial:         {t_serial}");
+    println!("Table-I cell, 4 trials  trial-parallel: {t_par}  ({speedup:.2}x)");
+    report.push("table1_cell_4trials_serial_ns", t_serial.median.as_nanos() as f64);
+    report.push("table1_cell_4trials_parallel_ns", t_par.median.as_nanos() as f64);
+    report.push("table1_cell_trial_parallel_speedup", speedup);
+
+    report.save("BENCH_parallel.json");
+}

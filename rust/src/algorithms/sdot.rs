@@ -12,11 +12,11 @@ use super::common::SampleSetting;
 use crate::consensus::schedule::Schedule;
 use crate::linalg::qr::orthonormalize;
 use crate::linalg::Mat;
-use crate::metrics::subspace::average_error;
+use crate::metrics::subspace::{average_error, average_error_ws, SubspaceWs};
 use crate::metrics::trace::{IterRecord, RunTrace};
 use crate::network::sim::SyncNetwork;
 use crate::runtime::pool::DisjointSlice;
-use crate::runtime::workspace::{node_scratch, NodeScratch};
+use crate::runtime::workspace::{node_scratch, MatRowsScratch, NodeScratch};
 use crate::runtime::Backend;
 
 /// Configuration for an S-DOT / SA-DOT run.
@@ -39,14 +39,18 @@ impl SdotConfig {
 
 /// A resumable Algorithm-1 run with a persistent workspace.
 ///
-/// All per-iteration buffers — the `Z_i` products, the per-node QR and
-/// covariance scratch, and (inside `SyncNetwork`) the consensus double
-/// buffer — are allocated at construction and reused by every
-/// [`SdotRun::step`], so steady-state outer iterations perform zero heap
-/// allocations (verified by `bench_hotpath`'s counting allocator).
-/// Per-node work (step 5's `M_i Q` and step 12's local QR) fans out
-/// across the network's node pool with bitwise-deterministic results for
-/// any thread count.
+/// All per-iteration buffers — the `Z_i` products, the `XᵀQ`
+/// intermediates, the per-node QR scratch, the trace (pre-reserved from
+/// `t_o / record_every`), the subspace-metric workspace, and (inside
+/// `SyncNetwork`) the consensus double buffer — are allocated at
+/// construction and reused by every [`SdotRun::step`], so steady-state
+/// outer iterations perform zero heap allocations even at
+/// `record_every = 1` (verified by `bench_hotpath`'s counting
+/// allocator). Per-node work (step 5's `M_i Q`) fans out across the
+/// network's pool **hierarchically** — node chunks first, then rows of
+/// each node's product when threads are left over — and step 12's local
+/// QR stays node-parallel (Householder is sequential per node); results
+/// are bitwise deterministic for any thread count.
 pub struct SdotRun<'a> {
     net: &'a mut SyncNetwork,
     setting: &'a SampleSetting,
@@ -54,7 +58,12 @@ pub struct SdotRun<'a> {
     backend: &'a dyn Backend,
     q: Vec<Mat>,
     z: Vec<Mat>,
+    /// Per-node phase-A intermediates (`XᵀQ`; `0 × r` for dense covs).
+    tmp: Vec<Mat>,
     scratch: Vec<NodeScratch>,
+    /// Raw-view table for the hierarchical dispatches (reused, no alloc).
+    view_scratch: MatRowsScratch,
+    metric_ws: SubspaceWs,
     trace: RunTrace,
     t: usize,
     total_iters: usize,
@@ -71,6 +80,7 @@ impl<'a> SdotRun<'a> {
         assert_eq!(setting.n_nodes(), n, "setting/network size mismatch");
         let d = setting.d();
         let r = setting.q_init.cols;
+        let records = cfg.t_o / cfg.record_every.max(1) + 2;
         SdotRun {
             net,
             setting,
@@ -78,8 +88,18 @@ impl<'a> SdotRun<'a> {
             backend,
             q: vec![setting.q_init.clone(); n],
             z: (0..n).map(|_| Mat::zeros(d, r)).collect(),
+            // Phase-A intermediates are only used by row-split backends;
+            // opaque backends route `XᵀQ` through `scratch[i].t0` (which
+            // is lazily sized on first use), so don't double-allocate.
+            tmp: if backend.supports_row_split() {
+                setting.covs.iter().map(|c| Mat::zeros(c.tmp_rows(), r)).collect()
+            } else {
+                (0..n).map(|_| Mat::zeros(0, r)).collect()
+            },
             scratch: node_scratch(n),
-            trace: RunTrace::new("S-DOT"),
+            view_scratch: MatRowsScratch::new(),
+            metric_ws: SubspaceWs::new(),
+            trace: RunTrace::with_capacity("S-DOT", records),
             t: 0,
             total_iters: 0,
         }
@@ -100,8 +120,38 @@ impl<'a> SdotRun<'a> {
         let n = self.q.len();
         self.t += 1;
         let t = self.t;
-        // Step 5: local products (the per-node hot path), node-parallel.
-        {
+        // Step 5: local products (the per-node hot path). Row-split
+        // backends run it as two hierarchical phases — phase A fills the
+        // `XᵀQ` intermediates, phase B the `M_i Q` rows — so when the
+        // pool has more threads than nodes the leftover threads split
+        // each node's rows (bitwise identical to the single-dispatch
+        // path; the kernels are exact row restrictions). Opaque backends
+        // keep the node-level dispatch.
+        if self.backend.supports_row_split() {
+            let q = &self.q;
+            let covs = &self.setting.covs;
+            let backend = self.backend;
+            // Phase A only exists for implicit (sample-held) operators;
+            // dense tables skip the dispatch entirely.
+            if covs.iter().any(|c| c.tmp_rows() > 0) {
+                let tmps = self.view_scratch.fill(self.tmp.as_mut_slice());
+                self.net.pool().run_chunks2(n, &|i| covs[i].tmp_rows(), &|i, lo, hi| {
+                    // SAFETY: rows [lo, hi) of tmp[i] belong to one task.
+                    let ti = unsafe { tmps.rows_mut(i, lo, hi) };
+                    backend.cov_apply_tmp_rows(&covs[i], &q[i], lo, hi, ti);
+                });
+            }
+            {
+                let zs = self.view_scratch.fill(self.z.as_mut_slice());
+                let tmp = &self.tmp;
+                let d = self.setting.d();
+                self.net.pool().run_chunks2(n, &|_| d, &|i, lo, hi| {
+                    // SAFETY: rows [lo, hi) of z[i] belong to one task.
+                    let zi = unsafe { zs.rows_mut(i, lo, hi) };
+                    backend.cov_apply_out_rows(&covs[i], &q[i], &tmp[i], lo, hi, zi);
+                });
+            }
+        } else {
             let zs = DisjointSlice::new(self.z.as_mut_slice());
             let scr = DisjointSlice::new(self.scratch.as_mut_slice());
             let q = &self.q;
@@ -137,7 +187,7 @@ impl<'a> SdotRun<'a> {
             self.trace.push(IterRecord {
                 outer: t,
                 total_iters: self.total_iters,
-                error: average_error(&self.setting.truth, &self.q),
+                error: average_error_ws(&self.setting.truth, &self.q, &mut self.metric_ws),
                 p2p_avg: self.net.counters.avg(),
             });
         }

@@ -9,20 +9,36 @@ use std::path::{Path, PathBuf};
 
 /// Load an [`ExpCtx`] from an optional JSON config file, then apply CLI
 /// overrides (`--seed`, `--scale`, `--trials`, `--out`, `--threads`,
-/// `--mpi-clock`).
+/// `--trial-parallel`, `--mpi-clock`).
 ///
 /// Config file format:
 /// ```json
 /// {"seed": 42, "scale": 1.0, "trials": 3, "out_dir": "results",
-///  "threads": 1, "mpi_clock": "real"}
+///  "threads": 1, "trial_parallel": true, "mpi_clock": "real"}
 /// ```
 ///
-/// `threads` sets the node-parallelism of the simulated networks
-/// (`threads = 1` is the serial path; any value produces bitwise
-/// identical results — see `runtime::pool`). `mpi_clock` selects how the
-/// MPI-runtime experiments (Table V) realize straggler delays: `"real"`
-/// sleeps for wall-clock fidelity, `"virtual"` computes the exact cascade
-/// on logical clocks (instant and deterministic — the mode tests use).
+/// `threads` is **one knob for two parallelism levels** (see
+/// [`ExpCtx`]): independent Monte-Carlo trials / configuration cells of
+/// a runner fan out across a trial pool, and within one trial the
+/// simulated network chunks across nodes and then across rows of each
+/// node's matrices when nodes are fewer than threads. The total OS
+/// threads never exceed `threads` (trial-parallel runs hand each trial
+/// a serial inner network). Results are **byte-identical for every
+/// value and either level**, because trial `k` always draws from the
+/// counter-derived RNG stream `seed + k` into its own result slot, and
+/// the inner kernels are bitwise thread-count-invariant
+/// (`runtime::pool`'s determinism contract — enforced by
+/// `tests/test_parallel_determinism.rs`).
+///
+/// `trial_parallel` (default `true`) can force the trial level off,
+/// giving the whole budget to the within-trial network — useful for
+/// latency-sensitive single runs and for the determinism matrix.
+/// `mpi_clock` selects how the MPI-runtime experiments (Table V)
+/// realize straggler delays: `"real"` sleeps for wall-clock fidelity,
+/// `"virtual"` computes the exact cascade on logical clocks (instant
+/// and deterministic — the mode tests use; also the only mode whose
+/// Table-V cells may run trial-parallel, since logical time cannot see
+/// CPU contention).
 pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     let mut ctx = ExpCtx::default();
     if let Some(path) = args.get("config") {
@@ -42,6 +58,11 @@ pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     }
     if let Some(v) = args.get("threads") {
         ctx.threads = v.parse().map_err(|_| anyhow!("bad --threads"))?;
+    }
+    if let Some(v) = args.get("trial-parallel") {
+        ctx.trial_parallel = parse_bool(v).ok_or_else(|| {
+            anyhow!("trial-parallel must be 'on'/'off' (or true/false), got '{v}'")
+        })?;
     }
     if let Some(v) = args.get("mpi-clock") {
         ctx.mpi_clock = parse_clock(v)?;
@@ -81,10 +102,21 @@ pub fn from_file(path: &Path) -> Result<ExpCtx> {
     if let Some(v) = json.get("threads").and_then(|v| v.as_usize()) {
         ctx.threads = v;
     }
+    if let Some(v) = json.get("trial_parallel").and_then(|v| v.as_bool()) {
+        ctx.trial_parallel = v;
+    }
     if let Some(v) = json.get("mpi_clock").and_then(|v| v.as_str()) {
         ctx.mpi_clock = parse_clock(v)?;
     }
     Ok(ctx)
+}
+
+fn parse_bool(v: &str) -> Option<bool> {
+    match v {
+        "on" | "true" | "1" | "yes" => Some(true),
+        "off" | "false" | "0" | "no" => Some(false),
+        _ => None,
+    }
 }
 
 fn parse_clock(v: &str) -> Result<ClockMode> {
@@ -163,6 +195,28 @@ mod tests {
         let ctx = load_ctx(&args(&[])).unwrap();
         assert_eq!(ctx.mpi_clock, ClockMode::Real);
         assert!(load_ctx(&args(&["--mpi-clock", "warp"])).is_err());
+    }
+
+    #[test]
+    fn trial_parallel_flag_parses_and_rejects() {
+        let ctx = load_ctx(&args(&[])).unwrap();
+        assert!(ctx.trial_parallel, "trial level on by default");
+        let ctx = load_ctx(&args(&["--trial-parallel", "off"])).unwrap();
+        assert!(!ctx.trial_parallel);
+        let ctx = load_ctx(&args(&["--trial-parallel", "on"])).unwrap();
+        assert!(ctx.trial_parallel);
+        assert!(load_ctx(&args(&["--trial-parallel", "maybe"])).is_err());
+    }
+
+    #[test]
+    fn trial_parallel_from_file() {
+        let dir = std::env::temp_dir().join("dpsa_cfg_tp_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"trial_parallel": false, "threads": 4}"#).unwrap();
+        let ctx = load_ctx(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert!(!ctx.trial_parallel);
+        assert_eq!(ctx.threads, 4);
     }
 
     #[test]

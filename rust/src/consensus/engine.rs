@@ -10,6 +10,7 @@ use crate::graph::Graph;
 use crate::linalg::Mat;
 use crate::network::counters::P2pCounters;
 use crate::runtime::pool::{DisjointSlice, NodePool};
+use crate::runtime::workspace::MatRowsScratch;
 
 /// Result of a consensus run.
 #[derive(Clone, Debug)]
@@ -17,15 +18,36 @@ pub struct ConsensusOutcome {
     pub rounds: usize,
 }
 
-/// One node's synchronous mixing update:
+/// Rows `lo..hi` of one node's synchronous mixing update:
 /// `dst ← w_ii src_i + Σ_{j∈adj(i)} w_ij src_j`.
+///
+/// Per-element operation order (copy, scale by `w_ii`, then one axpy per
+/// neighbor in adjacency order) matches the historical whole-matrix
+/// update exactly, so any row split assembles to the serial result
+/// bitwise — the property that lets large-d mixing fan across leftover
+/// threads when N < threads.
 #[inline]
-fn mix_node(g: &Graph, wm: &WeightMatrix, src: &[Mat], i: usize, dst: &mut Mat) {
+fn mix_node_rows(
+    g: &Graph,
+    wm: &WeightMatrix,
+    src: &[Mat],
+    i: usize,
+    lo: usize,
+    hi: usize,
+    dst_rows: &mut [f64],
+) {
+    let cols = src[i].cols;
+    let seg = lo * cols..hi * cols;
     let wii = wm.w.get(i, i);
-    dst.copy_from(&src[i]);
-    dst.scale_inplace(wii);
+    dst_rows.copy_from_slice(&src[i].data[seg.clone()]);
+    for v in dst_rows.iter_mut() {
+        *v *= wii;
+    }
     for &j in &g.adj[i] {
-        dst.axpy(wm.w.get(i, j), &src[j]);
+        let w = wm.w.get(i, j);
+        for (d, &s) in dst_rows.iter_mut().zip(src[j].data[seg.clone()].iter()) {
+            *d += w * s;
+        }
     }
 }
 
@@ -44,11 +66,12 @@ fn mix_scalar(g: &Graph, wm: &WeightMatrix, src: &[f64], i: usize) -> f64 {
 /// push-sum scalar weight channel in the same message (ratio consensus).
 ///
 /// This is the single mixing kernel behind both [`average_consensus`]
-/// and `SyncNetwork::ratio_consensus_sum` — per-node mixing within a
-/// round fans out across `pool` (bitwise deterministic for any thread
-/// count; see `runtime::pool`), and P2P accounting lives in one place:
-/// each round node `i` sends `deg(i)` messages of `rows·cols` elements,
-/// `+1` when the scalar channel rides along.
+/// and `SyncNetwork::ratio_consensus_sum` — mixing within a round fans
+/// out across `pool` hierarchically (node chunks first, then rows of
+/// each node's matrix when threads are left over — bitwise deterministic
+/// for any thread count; see `runtime::pool`), and P2P accounting lives
+/// in one place: each round node `i` sends `deg(i)` messages of
+/// `rows·cols` elements, `+1` when the scalar channel rides along.
 #[allow(clippy::too_many_arguments)]
 pub fn consensus_rounds(
     g: &Graph,
@@ -59,6 +82,7 @@ pub fn consensus_rounds(
     rounds: usize,
     counters: &mut P2pCounters,
     pool: &NodePool,
+    views: &mut MatRowsScratch,
 ) -> ConsensusOutcome {
     let n = g.n;
     assert_eq!(z.len(), n);
@@ -68,28 +92,32 @@ pub fn consensus_rounds(
         return ConsensusOutcome { rounds: 0 };
     }
     let elems = z[0].rows * z[0].cols + usize::from(scalar.is_some());
+    let mat_rows = z[0].rows;
     for _round in 0..rounds {
         {
             let src: &[Mat] = z.as_slice();
-            let dst = DisjointSlice::new(next.as_mut_slice());
+            let dst = views.fill(next.as_mut_slice());
             match &mut scalar {
                 Some((w_src, w_dst)) => {
                     let ws: &[f64] = w_src.as_slice();
                     let wd = DisjointSlice::new(w_dst.as_mut_slice());
-                    pool.run_chunks(n, &|lo, hi| {
-                        for i in lo..hi {
-                            // SAFETY: index i belongs to exactly one chunk.
-                            mix_node(g, wm, src, i, unsafe { dst.get_mut(i) });
+                    pool.run_chunks2(n, &|_| mat_rows, &|i, lo, hi| {
+                        // SAFETY: rows [lo, hi) of node i belong to
+                        // exactly one task; the scalar slot is written
+                        // only by the task owning the first rows.
+                        let d = unsafe { dst.rows_mut(i, lo, hi) };
+                        mix_node_rows(g, wm, src, i, lo, hi, d);
+                        if lo == 0 {
                             unsafe { *wd.get_mut(i) = mix_scalar(g, wm, ws, i) };
                         }
                     });
                 }
                 None => {
-                    pool.run_chunks(n, &|lo, hi| {
-                        for i in lo..hi {
-                            // SAFETY: index i belongs to exactly one chunk.
-                            mix_node(g, wm, src, i, unsafe { dst.get_mut(i) });
-                        }
+                    pool.run_chunks2(n, &|_| mat_rows, &|i, lo, hi| {
+                        // SAFETY: rows [lo, hi) of node i belong to
+                        // exactly one task.
+                        let d = unsafe { dst.rows_mut(i, lo, hi) };
+                        mix_node_rows(g, wm, src, i, lo, hi, d);
                     });
                 }
             }
@@ -123,7 +151,18 @@ pub fn average_consensus(
     counters: &mut P2pCounters,
 ) -> ConsensusOutcome {
     let mut next: Vec<Mat> = z.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
-    consensus_rounds(g, wm, z, &mut next, None, rounds, counters, &NodePool::serial())
+    let mut views = MatRowsScratch::new();
+    consensus_rounds(
+        g,
+        wm,
+        z,
+        &mut next,
+        None,
+        rounds,
+        counters,
+        &NodePool::serial(),
+        &mut views,
+    )
 }
 
 /// Alg. 1 step 11: rescale each node's consensus result by `[W^{T_c} e_1]_i`

@@ -6,7 +6,7 @@
 //! convergence guarantee but S-DOT/SA-DOT (and OI) are unaffected.
 
 use super::figs_synth::save_trace;
-use super::ExpCtx;
+use super::{par_map, ExpCtx};
 use crate::algorithms::deepca::{run_deepca, DeepcaConfig};
 use crate::algorithms::dpgd::{run_dpgd, DpgdConfig};
 use crate::algorithms::dsa::{run_dsa, DsaConfig};
@@ -28,51 +28,48 @@ use anyhow::Result;
 const N: usize = 10;
 const N_I: usize = 1000;
 
-/// Run the full baseline suite on one setting; returns labelled traces.
+/// Run the full baseline suite on one setting; returns labelled traces
+/// in fixed algorithm order. The eight runs share `setting`/`g`
+/// immutably and are otherwise independent, so they fan out across the
+/// trial pool (each builds its own network from `g` with the inner
+/// thread budget); the returned order is the slot order, independent of
+/// completion order.
 pub fn run_suite(ctx: &ExpCtx, setting: &SampleSetting, g: &Graph) -> Vec<RunTrace> {
     let t_o = ctx.scaled(200);
-    let mut out = Vec::new();
-
-    let mut net = SyncNetwork::new(g.clone());
-    let (_, tr) = run_sdot(&mut net, setting, &SdotConfig::new(Schedule::fixed(50), t_o));
-    out.push(tr);
-
-    let mut net = SyncNetwork::new(g.clone());
-    let (_, tr) = run_sadot(
-        &mut net,
-        setting,
-        &SdotConfig::new(Schedule::adaptive(1.0, 1, 50), t_o),
-    );
-    out.push(tr);
-
-    let (_, tr) = run_oi(setting, t_o);
-    out.push(tr);
-
-    let (_, tr) = run_seqpm(setting, ctx.scaled(200));
-    out.push(tr);
-
-    let mut net = SyncNetwork::new(g.clone());
-    let cfg = SeqDistPmConfig { iters_per_vec: ctx.scaled(100), t_c: 50, record_every: 5 };
-    let (_, tr) = run_seqdistpm(&mut net, setting, &cfg);
-    out.push(tr);
-
-    let mut net = SyncNetwork::new(g.clone());
-    let (_, tr) = run_dsa(&mut net, setting, &DsaConfig::new(ctx.scaled(2000)));
-    out.push(tr);
-
-    let mut net = SyncNetwork::new(g.clone());
-    let (_, tr) = run_dpgd(&mut net, setting, &DpgdConfig::new(ctx.scaled(2000)));
-    out.push(tr);
-
-    let mut net = SyncNetwork::new(g.clone());
-    let (_, tr) = run_deepca(
-        &mut net,
-        setting,
-        &DeepcaConfig { mix_rounds: 6, t_o, record_every: 1 },
-    );
-    out.push(tr);
-
-    out
+    par_map(ctx, 8, |algo, threads| {
+        let net = || SyncNetwork::with_threads(g.clone(), threads);
+        match algo {
+            0 => run_sdot(&mut net(), setting, &SdotConfig::new(Schedule::fixed(50), t_o)).1,
+            1 => {
+                run_sadot(
+                    &mut net(),
+                    setting,
+                    &SdotConfig::new(Schedule::adaptive(1.0, 1, 50), t_o),
+                )
+                .1
+            }
+            2 => run_oi(setting, t_o).1,
+            3 => run_seqpm(setting, ctx.scaled(200)).1,
+            4 => {
+                let cfg = SeqDistPmConfig {
+                    iters_per_vec: ctx.scaled(100),
+                    t_c: 50,
+                    record_every: 5,
+                };
+                run_seqdistpm(&mut net(), setting, &cfg).1
+            }
+            5 => run_dsa(&mut net(), setting, &DsaConfig::new(ctx.scaled(2000))).1,
+            6 => run_dpgd(&mut net(), setting, &DpgdConfig::new(ctx.scaled(2000))).1,
+            _ => {
+                run_deepca(
+                    &mut net(),
+                    setting,
+                    &DeepcaConfig { mix_rounds: 6, t_o, record_every: 1 },
+                )
+                .1
+            }
+        }
+    })
 }
 
 fn comparison_fig(ctx: &ExpCtx, id: &str, repeated: bool) -> Result<Vec<Table>> {

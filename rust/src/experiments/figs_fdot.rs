@@ -4,7 +4,7 @@
 //! n=500 samples, varying r and Δ_r.
 
 use super::figs_synth::save_trace;
-use super::ExpCtx;
+use super::{par_map, ExpCtx};
 use crate::algorithms::dpm_feature::{run_dpm_feature, DpmFeatureConfig};
 use crate::algorithms::fdot::{run_fdot, FdotConfig, FeatureSetting};
 use crate::algorithms::oi::{run_oi, run_seqpm};
@@ -25,7 +25,12 @@ pub fn fig6(ctx: &ExpCtx) -> Result<Vec<Table>> {
         "Fig. 6 — F-DOT vs OI/SeqPM/d-PM, d=N=10, n=500 (curves in CSV)",
         &["Δ_r", "r", "algorithm", "total iters", "final error"],
     );
-    for &(gap, r) in &[(0.4f64, 2usize), (0.7, 3)] {
+    // The two (Δ, r) configurations re-derive everything from `ctx.seed`
+    // and fan out across the trial pool; traces are saved and tabulated
+    // in config order afterwards (IO stays out of the pool).
+    let configs = [(0.4f64, 2usize), (0.7, 3)];
+    let runs = par_map(ctx, configs.len(), |c, inner_threads| {
+        let (gap, r) = configs[c];
         let mut rng = Rng::new(ctx.seed);
         let spec = Spectrum::with_gap(n_nodes, r, gap);
         let ds = SyntheticDataset::full(&spec, n_samples, 1, &mut rng);
@@ -35,29 +40,34 @@ pub fn fig6(ctx: &ExpCtx) -> Result<Vec<Table>> {
         let g = Graph::erdos_renyi(n_nodes, 0.5, &mut rng);
 
         // F-DOT.
-        let mut net = SyncNetwork::new(g.clone());
+        let mut net = SyncNetwork::with_threads(g.clone(), inner_threads);
         let (_, tr_fdot) = run_fdot(&mut net, &fsetting, &FdotConfig::new(ctx.scaled(200)));
-        save_trace(ctx, "fig6", &format!("fig6_gap{gap}_r{r}_FDOT"), &tr_fdot)?;
 
         // d-PM (sequential, feature-wise).
-        let mut net = SyncNetwork::new(g);
+        let mut net = SyncNetwork::with_threads(g, inner_threads);
         let cfg = DpmFeatureConfig {
             iters_per_vec: ctx.scaled(100),
             t_c: 50,
             record_every: 5,
         };
         let (_, tr_dpm) = run_dpm_feature(&mut net, &fsetting, &cfg);
-        save_trace(ctx, "fig6", &format!("fig6_gap{gap}_r{r}_dPM"), &tr_dpm)?;
 
         // Centralized references reuse the sample-wise harness on a
         // single "node" holding all data.
         let ssetting = SampleSetting::from_parts(std::slice::from_ref(x), r, &mut rng);
         let (_, tr_oi) = run_oi(&ssetting, ctx.scaled(200));
-        save_trace(ctx, "fig6", &format!("fig6_gap{gap}_r{r}_OI"), &tr_oi)?;
         let (_, tr_seq) = run_seqpm(&ssetting, ctx.scaled(150));
-        save_trace(ctx, "fig6", &format!("fig6_gap{gap}_r{r}_SeqPM"), &tr_seq)?;
-
-        for tr in [&tr_fdot, &tr_dpm, &tr_oi, &tr_seq] {
+        [
+            ("FDOT", tr_fdot),
+            ("dPM", tr_dpm),
+            ("OI", tr_oi),
+            ("SeqPM", tr_seq),
+        ]
+    });
+    for (c, traces) in runs.into_iter().enumerate() {
+        let (gap, r) = configs[c];
+        for (tag, tr) in &traces {
+            save_trace(ctx, "fig6", &format!("fig6_gap{gap}_r{r}_{tag}"), tr)?;
             t.row(&[
                 fnum(gap, 1),
                 r.to_string(),

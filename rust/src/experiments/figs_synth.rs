@@ -4,7 +4,7 @@
 //! and returns a summary table of final errors — the "shape" assertions
 //! (who converges, crossovers) live in the integration tests.
 
-use super::ExpCtx;
+use super::{par_map, ExpCtx};
 use crate::algorithms::sdot::{run_sdot, SdotConfig};
 use crate::algorithms::SampleSetting;
 use crate::consensus::schedule::Schedule;
@@ -29,34 +29,73 @@ pub(crate) fn save_trace(ctx: &ExpCtx, id: &str, label: &str, trace: &RunTrace) 
     Ok(())
 }
 
+/// One S-DOT error curve. Every curve re-derives its inputs from
+/// `ctx.seed`, so curves are independent work items for the trial pool;
+/// the caller saves the returned trace (IO stays outside the pool).
 fn sdot_curve(
     ctx: &ExpCtx,
-    id: &str,
-    label: &str,
     gap: f64,
     topology: &str,
     p: f64,
     schedule: Schedule,
     t_o: usize,
-) -> Result<(String, f64)> {
+    threads: usize,
+) -> RunTrace {
     let mut rng = Rng::new(ctx.seed);
     let spec = Spectrum::with_gap(D, 5, gap);
     let ds = SyntheticDataset::full(&spec, N_PER_NODE, 20, &mut rng);
     let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
     let g = Graph::from_spec(topology, 20, p, &mut rng);
-    let mut net = SyncNetwork::new(g);
+    let mut net = SyncNetwork::with_threads(g, threads);
     let (_, trace) = run_sdot(&mut net, &setting, &SdotConfig::new(schedule, t_o));
-    save_trace(ctx, id, label, &trace)?;
-    Ok((label.to_string(), trace.final_error()))
+    trace
+}
+
+/// One labelled curve configuration of Figs. 1–3.
+struct CurveCfg {
+    /// First table column (gap / p / topology).
+    col0: String,
+    /// Schedule label (second table column).
+    label: String,
+    /// File tag for the saved trace CSV.
+    tag: String,
+    gap: f64,
+    topology: &'static str,
+    p: f64,
+    schedule: Schedule,
+}
+
+/// Shared shape of Figs. 1–3: labelled curve configurations fanned
+/// across the trial pool, then saved and tabulated in config order
+/// (byte-identical output regardless of parallelism).
+fn curve_fig(
+    ctx: &ExpCtx,
+    id: &str,
+    title: &str,
+    header: &[&str],
+    curves: &[CurveCfg],
+    t_o: usize,
+) -> Result<Vec<Table>> {
+    let mut t = Table::new(title, header);
+    let traces = par_map(ctx, curves.len(), |c, inner_threads| {
+        let cfg = &curves[c];
+        sdot_curve(ctx, cfg.gap, cfg.topology, cfg.p, cfg.schedule, t_o, inner_threads)
+    });
+    for (cfg, trace) in curves.iter().zip(traces) {
+        save_trace(ctx, id, &cfg.tag, &trace)?;
+        t.row(&[
+            cfg.col0.clone(),
+            cfg.label.clone(),
+            format!("{:.2e}", trace.final_error()),
+        ]);
+    }
+    Ok(vec![t])
 }
 
 /// Fig. 1: S-DOT vs SA-DOT schedules for Δ ∈ {0.3, 0.9}.
 pub fn fig1(ctx: &ExpCtx) -> Result<Vec<Table>> {
     let t_o = ctx.scaled(200);
-    let mut t = Table::new(
-        "Fig. 1 — S-DOT vs SA-DOT error (final values; curves in CSV)",
-        &["Δ_r", "schedule", "final error"],
-    );
+    let mut curves = Vec::new();
     for &gap in &[0.3, 0.9] {
         for (label, sched) in [
             ("0.5t+1", Schedule::adaptive(0.5, 1, 50)),
@@ -64,52 +103,85 @@ pub fn fig1(ctx: &ExpCtx) -> Result<Vec<Table>> {
             ("2t+1", Schedule::adaptive(2.0, 1, 50)),
             ("S-DOT 50", Schedule::fixed(50)),
         ] {
-            let tag = format!("fig1_gap{gap}_{label}");
-            let (_, err) = sdot_curve(ctx, "fig1", &tag, gap, "erdos", 0.25, sched, t_o)?;
-            t.row(&[fnum(gap, 1), label.to_string(), format!("{err:.2e}")]);
+            curves.push(CurveCfg {
+                col0: fnum(gap, 1),
+                label: label.to_string(),
+                tag: format!("fig1_gap{gap}_{label}"),
+                gap,
+                topology: "erdos",
+                p: 0.25,
+                schedule: sched,
+            });
         }
     }
-    Ok(vec![t])
+    curve_fig(
+        ctx,
+        "fig1",
+        "Fig. 1 — S-DOT vs SA-DOT error (final values; curves in CSV)",
+        &["Δ_r", "schedule", "final error"],
+        &curves,
+        t_o,
+    )
 }
 
 /// Fig. 2: network connectivity p ∈ {0.5, 0.25, 0.1}.
 pub fn fig2(ctx: &ExpCtx) -> Result<Vec<Table>> {
     let t_o = ctx.scaled(200);
-    let mut t = Table::new(
-        "Fig. 2 — connectivity effect (final errors; curves in CSV)",
-        &["p", "schedule", "final error"],
-    );
+    let mut curves = Vec::new();
     for &p in &[0.5, 0.25, 0.1] {
         for (label, sched) in [
             ("2t+1", Schedule::adaptive(2.0, 1, 50)),
             ("S-DOT 50", Schedule::fixed(50)),
         ] {
-            let tag = format!("fig2_p{p}_{label}");
-            let (_, err) = sdot_curve(ctx, "fig2", &tag, 0.7, "erdos", p, sched, t_o)?;
-            t.row(&[fnum(p, 2), label.to_string(), format!("{err:.2e}")]);
+            curves.push(CurveCfg {
+                col0: fnum(p, 2),
+                label: label.to_string(),
+                tag: format!("fig2_p{p}_{label}"),
+                gap: 0.7,
+                topology: "erdos",
+                p,
+                schedule: sched,
+            });
         }
     }
-    Ok(vec![t])
+    curve_fig(
+        ctx,
+        "fig2",
+        "Fig. 2 — connectivity effect (final errors; curves in CSV)",
+        &["p", "schedule", "final error"],
+        &curves,
+        t_o,
+    )
 }
 
 /// Fig. 3: ring and star topologies.
 pub fn fig3(ctx: &ExpCtx) -> Result<Vec<Table>> {
     let t_o = ctx.scaled(200);
-    let mut t = Table::new(
-        "Fig. 3 — ring & star error (final values; curves in CSV)",
-        &["topology", "schedule", "final error"],
-    );
+    let mut curves = Vec::new();
     for topo in ["ring", "star"] {
         for (label, sched) in [
             ("2t+1", Schedule::adaptive(2.0, 1, 50)),
             ("S-DOT 50", Schedule::fixed(50)),
         ] {
-            let tag = format!("fig3_{topo}_{label}");
-            let (_, err) = sdot_curve(ctx, "fig3", &tag, 0.7, topo, 0.0, sched, t_o)?;
-            t.row(&[topo.to_string(), label.to_string(), format!("{err:.2e}")]);
+            curves.push(CurveCfg {
+                col0: topo.to_string(),
+                label: label.to_string(),
+                tag: format!("fig3_{topo}_{label}"),
+                gap: 0.7,
+                topology: topo,
+                p: 0.0,
+                schedule: sched,
+            });
         }
     }
-    Ok(vec![t])
+    curve_fig(
+        ctx,
+        "fig3",
+        "Fig. 3 — ring & star error (final values; curves in CSV)",
+        &["topology", "schedule", "final error"],
+        &curves,
+        t_o,
+    )
 }
 
 #[cfg(test)]

@@ -33,6 +33,23 @@ use anyhow::{bail, Result};
 use std::path::PathBuf;
 
 /// Shared experiment context.
+///
+/// `threads` is **one knob for two parallelism levels**. At the top,
+/// independent Monte-Carlo trials (and independent configuration cells)
+/// of a runner fan out across a trial pool ([`par_map`]); inside one
+/// trial, the simulated network's node pool chunks across nodes and —
+/// when nodes are fewer than threads — across rows of each node's
+/// matrices (`runtime::pool::NodePool::run_chunks2`). Whichever level is
+/// active, the *simulator* thread budget stays `threads`: the budget
+/// splits as `min(threads, items)` trial workers × `⌊threads/workers⌋`
+/// inner threads each. (The MPI-runtime experiments are the exception:
+/// each cell models one OS thread per simulated node by design, so
+/// trial-parallel virtual-clock cells multiply those mostly-blocked
+/// workers beyond `threads`.) Every table is byte-identical for every
+/// combination because (a) trial `k` always draws from the counter-
+/// derived RNG stream `seed + k` and writes its own result slot, and
+/// (b) the inner levels are bitwise thread-count-invariant by the pool's
+/// determinism contract.
 #[derive(Clone, Debug)]
 pub struct ExpCtx {
     /// Base RNG seed; trial `k` uses `seed + k`.
@@ -43,9 +60,14 @@ pub struct ExpCtx {
     pub trials: usize,
     /// Output directory for CSV/markdown artifacts.
     pub out_dir: PathBuf,
-    /// Node-parallelism for simulated networks (1 = serial; results are
-    /// bitwise identical for any value — see `runtime::pool`).
+    /// Total parallelism budget (1 = fully serial; results are bitwise
+    /// identical for any value — see `runtime::pool`).
     pub threads: usize,
+    /// Allow the trial level to use the thread budget (`true` by
+    /// default). `false` forces trials serial and gives the whole budget
+    /// to the within-trial network — the determinism test matrix runs
+    /// both and asserts byte-identical tables.
+    pub trial_parallel: bool,
     /// Clock mode for the MPI-runtime experiments (Table V): `Real`
     /// sleeps stragglers for wall-clock fidelity, `Virtual` computes the
     /// exact cascade on logical clocks (instant, deterministic).
@@ -60,6 +82,7 @@ impl Default for ExpCtx {
             trials: 3,
             out_dir: PathBuf::from("results"),
             threads: 1,
+            trial_parallel: true,
             mpi_clock: ClockMode::Real,
         }
     }
@@ -70,6 +93,70 @@ impl ExpCtx {
     pub fn scaled(&self, iters: usize) -> usize {
         ((iters as f64 * self.scale).round() as usize).max(2)
     }
+}
+
+/// Thread budget for tests and benches: `BENCH_THREADS` or 1. CI runs
+/// the whole test suite under both `BENCH_THREADS=1` and
+/// `BENCH_THREADS=4`; the experiment smoke tests pick the value up here,
+/// so both parallel levels are exercised end-to-end (tables must come
+/// out identical either way — that's the contract under test).
+pub fn env_threads() -> usize {
+    std::env::var("BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` independent work items, in parallel on a trial
+/// pool when the context allows it.
+///
+/// `f(item, inner_threads)` must derive all randomness from `item` (for
+/// Monte-Carlo trials: RNG stream `ctx.seed + item`) and build its
+/// networks with the passed `inner_threads`. The budget splits across
+/// the levels: `min(threads, items)` trial workers, each handed
+/// `⌊threads / workers⌋` inner threads — so the simulator-thread total
+/// never exceeds `ctx.threads` and, when items are fewer than threads
+/// (e.g. 3 schedule curves on 8 cores), the leftover budget still
+/// reaches the within-trial node/row pool. Results land in a
+/// preallocated per-item slot and are returned in item order, so any
+/// reduction the caller performs is independent of completion order —
+/// tables are byte-identical to the serial loop (inner thread counts
+/// are bitwise-invisible by the pool's determinism contract).
+pub fn par_map<T, F>(ctx: &ExpCtx, items: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    let parallel = ctx.trial_parallel && ctx.threads > 1 && items > 1;
+    if !parallel {
+        return (0..items).map(|k| f(k, ctx.threads)).collect();
+    }
+    let workers = ctx.threads.min(items);
+    let inner = (ctx.threads / workers).max(1);
+    let pool = crate::runtime::pool::NodePool::new(workers);
+    let mut slots: Vec<Option<T>> = (0..items).map(|_| None).collect();
+    {
+        let d = crate::runtime::pool::DisjointSlice::new(&mut slots);
+        pool.run_chunks(items, &|lo, hi| {
+            for k in lo..hi {
+                // SAFETY: slot k belongs to exactly one chunk.
+                unsafe { *d.get_mut(k) = Some(f(k, inner)) };
+            }
+        });
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("every trial slot filled"))
+        .collect()
+}
+
+/// [`par_map`] over the context's Monte-Carlo trial count.
+pub fn run_trials<T, F>(ctx: &ExpCtx, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    par_map(ctx, ctx.trials, f)
 }
 
 /// All experiment ids in paper order, plus the future-work extensions
@@ -124,6 +211,13 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<Vec<Table>> {
 
 /// Extension ablation (paper §VI future work): B-DOT on block-partitioned
 /// data — error and total messages across grid shapes at a fixed budget.
+///
+/// Deliberately **serial**: `run_bdot` constructs its row/column/grid
+/// group networks internally via `SyncNetwork::new`, which reads the
+/// process-global thread default — fanning cells across the trial pool
+/// would multiply full-width node pools per cell and oversubscribe the
+/// `--threads` budget. The cells are tiny (d = 24), so serial is also
+/// the fast path.
 fn bdot_ext(ctx: &ExpCtx) -> Result<Vec<crate::util::table::Table>> {
     use crate::algorithms::bdot::{run_bdot, BdotConfig, BlockSetting};
     use crate::data::spectrum::Spectrum;
@@ -212,5 +306,46 @@ mod tests {
     #[test]
     fn unknown_id_errors() {
         assert!(run("table99", &ExpCtx::default()).is_err());
+    }
+
+    #[test]
+    fn par_map_preserves_item_order_and_streams() {
+        let serial = ExpCtx { threads: 1, ..Default::default() };
+        let parallel = ExpCtx { threads: 4, trial_parallel: true, ..Default::default() };
+        let f = |k: usize, inner: usize| {
+            // Trial-parallel items must be handed a serial inner budget.
+            (k, inner, crate::util::rng::Rng::new(42 + k as u64).next_u64())
+        };
+        let a = par_map(&serial, 7, f);
+        let b = par_map(&parallel, 7, f);
+        assert_eq!(a.len(), 7);
+        for (k, ((ka, ia, va), (kb, ib, vb))) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!((*ka, *kb), (k, k));
+            assert_eq!(*ia, 1, "serial ctx has a budget of 1");
+            // 7 items over 4 threads: 4 workers × 1 inner thread.
+            assert_eq!(*ib, 1, "oversubscribed trial level leaves inner serial");
+            assert_eq!(va, vb, "same counter-derived stream either way");
+        }
+    }
+
+    #[test]
+    fn par_map_splits_leftover_budget_to_inner_level() {
+        // 2 items on 8 threads: 2 trial workers × 4 inner threads each.
+        let ctx = ExpCtx { threads: 8, trial_parallel: true, ..Default::default() };
+        let inner = par_map(&ctx, 2, |_, threads| threads);
+        assert_eq!(inner, vec![4, 4]);
+        // 3 items on 8 threads: 3 workers × 2 inner (⌊8/3⌋).
+        let inner = par_map(&ctx, 3, |_, threads| threads);
+        assert_eq!(inner, vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn par_map_serial_passes_full_budget() {
+        let ctx = ExpCtx { threads: 4, trial_parallel: false, ..Default::default() };
+        let inner = par_map(&ctx, 3, |_, threads| threads);
+        assert_eq!(inner, vec![4, 4, 4]);
+        // A single item never engages the trial pool either.
+        let one = par_map(&ExpCtx { threads: 4, ..Default::default() }, 1, |_, t| t);
+        assert_eq!(one, vec![4]);
     }
 }

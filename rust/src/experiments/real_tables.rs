@@ -8,7 +8,7 @@
 //! final error from one scaled live run per configuration, which exercises
 //! the full algorithm on the dataset surrogate.
 
-use super::{expected_p2p, ExpCtx};
+use super::{expected_p2p, par_map, ExpCtx};
 use crate::algorithms::sdot::{run_sdot, SdotConfig};
 use crate::algorithms::SampleSetting;
 use crate::consensus::schedule::Schedule;
@@ -50,6 +50,7 @@ fn measured_error(
     p: f64,
     r: usize,
     t_o: usize,
+    threads: usize,
 ) -> f64 {
     let mut rng = Rng::new(ctx.seed);
     // Cap per-node samples so the live check stays cheap at N=100/200.
@@ -57,31 +58,46 @@ fn measured_error(
     let ds = load_dataset(kind, n, n_i, r, &mut rng);
     let setting = SampleSetting::from_parts(&ds.parts, r, &mut rng);
     let g = Graph::erdos_renyi(n, p, &mut rng);
-    let mut net = SyncNetwork::new(g);
+    let mut net = SyncNetwork::with_threads(g, threads);
     let mut cfg = SdotConfig::new(Schedule::fixed(50), ctx.scaled(t_o / 4));
     cfg.record_every = cfg.t_o;
     let (_, trace) = run_sdot(&mut net, &setting, &cfg);
     trace.final_error()
 }
 
-/// Build the P2P table for one dataset.
+/// Build the P2P table for one dataset. The grid configurations are
+/// independent (each re-derives its RNG streams from `ctx.seed`), so the
+/// expensive live runs fan out across the trial pool; rows are appended
+/// in grid × schedule order from the per-config result slots.
 pub fn table(ctx: &ExpCtx, kind: DatasetKind) -> Result<Vec<Table>> {
     let mut t = Table::new(
         &format!("{} — P2P communication (paper grid)", kind.name()),
         &["N", "p", "r", "T_o", "Consensus Itr", "P2P (K)", "live err (scaled run)"],
     );
-    for (n, p, r, t_o) in grid(kind) {
-        let err = measured_error(ctx, kind, n, p, r, t_o);
-        for (label, sched) in schedules() {
-            // Average expected P2P over graph realizations.
-            let mut avg = 0.0;
-            for trial in 0..ctx.trials {
-                let mut rng = Rng::new(ctx.seed + trial as u64);
-                let g = Graph::erdos_renyi(n, p, &mut rng);
-                let per_node = expected_p2p(&g, &sched, t_o);
-                avg += per_node.iter().sum::<u64>() as f64 / n as f64;
-            }
-            avg /= ctx.trials as f64;
+    let grid = grid(kind);
+    let configs = par_map(ctx, grid.len(), |gi, inner_threads| {
+        let (n, p, r, t_o) = grid[gi];
+        let err = measured_error(ctx, kind, n, p, r, t_o, inner_threads);
+        // Average expected P2P over graph realizations (exact
+        // combinatorial accounting; trial k uses stream `seed + k`).
+        let p2ps: Vec<f64> = schedules()
+            .iter()
+            .map(|(_, sched)| {
+                let mut avg = 0.0;
+                for trial in 0..ctx.trials {
+                    let mut rng = Rng::new(ctx.seed + trial as u64);
+                    let g = Graph::erdos_renyi(n, p, &mut rng);
+                    let per_node = expected_p2p(&g, sched, t_o);
+                    avg += per_node.iter().sum::<u64>() as f64 / n as f64;
+                }
+                avg / ctx.trials as f64
+            })
+            .collect();
+        (err, p2ps)
+    });
+    for (gi, (err, p2ps)) in configs.into_iter().enumerate() {
+        let (n, p, r, t_o) = grid[gi];
+        for ((label, _), avg) in schedules().iter().zip(p2ps) {
             t.row(&[
                 n.to_string(),
                 fnum(p, 2),

@@ -1,6 +1,6 @@
 //! Tables I and II: S-DOT vs SA-DOT communication cost on synthetic data.
 
-use super::{expected_p2p, ExpCtx};
+use super::{expected_p2p, run_trials, ExpCtx};
 use crate::algorithms::sdot::{run_sdot, SdotConfig};
 use crate::algorithms::SampleSetting;
 use crate::consensus::schedule::Schedule;
@@ -29,6 +29,13 @@ fn table1_schedules() -> Vec<(&'static str, Schedule)> {
 
 /// Run one (network, schedule) cell: averaged P2P and final error over
 /// `ctx.trials` Monte-Carlo trials (fresh graph + data each trial).
+///
+/// Trials fan out across the trial pool via [`run_trials`]: trial `k`
+/// draws everything from the counter-derived stream `seed + k` and
+/// writes its own `(p2p, err)` slot, and the reduction below runs over
+/// the slots in trial order — so the cell is byte-identical to the
+/// serial loop for any thread count and either `trial_parallel` setting.
+#[allow(clippy::too_many_arguments)]
 pub fn run_cell(
     ctx: &ExpCtx,
     n: usize,
@@ -39,20 +46,22 @@ pub fn run_cell(
     t_o: usize,
     topology: &str,
 ) -> (f64, f64) {
-    let mut p2p_sum = 0.0;
-    let mut err_sum = 0.0;
-    for trial in 0..ctx.trials {
+    let per_trial = run_trials(ctx, |trial, inner_threads| {
         let mut rng = Rng::new(ctx.seed + trial as u64);
         let spec = Spectrum::with_gap(D, r, gap);
         let ds = SyntheticDataset::full(&spec, N_PER_NODE, n, &mut rng);
         let setting = SampleSetting::from_parts(&ds.parts, r, &mut rng);
         let g = Graph::from_spec(topology, n, p, &mut rng);
-        let mut net = SyncNetwork::new(g);
+        let mut net = SyncNetwork::with_threads(g, inner_threads);
         let mut cfg = SdotConfig::new(schedule, t_o);
         cfg.record_every = t_o; // tables need only the final state
         let (_, trace) = run_sdot(&mut net, &setting, &cfg);
-        p2p_sum += net.counters.avg();
-        err_sum += trace.final_error();
+        (net.counters.avg(), trace.final_error())
+    });
+    let (mut p2p_sum, mut err_sum) = (0.0, 0.0);
+    for (p2p, err) in per_trial {
+        p2p_sum += p2p;
+        err_sum += err;
     }
     (p2p_sum / ctx.trials as f64, err_sum / ctx.trials as f64)
 }

@@ -2,7 +2,7 @@
 //! sweep of topology × straggler on the pooled MPI runtime.
 
 use super::straggler::run_sdot_mpi;
-use super::ExpCtx;
+use super::{par_map, run_trials, ExpCtx};
 use crate::algorithms::sdot::{run_sdot, SdotConfig};
 use crate::algorithms::SampleSetting;
 use crate::consensus::schedule::Schedule;
@@ -24,24 +24,34 @@ fn run_topology(
     schedule: Schedule,
     t_o: usize,
 ) -> (f64, f64, f64, f64) {
-    // Returns (avg p2p, center p2p, edge p2p, final error).
+    // Returns (avg p2p, center p2p, edge p2p, final error). Trials fan
+    // out on the trial pool (stream `seed + trial`, per-trial slots; the
+    // sums below run in trial order — byte-identical to the serial loop).
     let n = 20;
-    let (mut p2p_avg, mut p2p_center, mut p2p_edge, mut err) = (0.0, 0.0, 0.0, 0.0);
-    for trial in 0..ctx.trials {
+    let per_trial = run_trials(ctx, |trial, inner_threads| {
         let mut rng = Rng::new(ctx.seed + trial as u64);
         let spec = Spectrum::with_gap(D, 5, 0.7);
         let ds = SyntheticDataset::full(&spec, N_PER_NODE, n, &mut rng);
         let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
         let g = Graph::from_spec(topology, n, 0.0, &mut rng);
-        let mut net = SyncNetwork::new(g);
+        let mut net = SyncNetwork::with_threads(g, inner_threads);
         let mut cfg = SdotConfig::new(schedule, t_o);
         cfg.record_every = t_o;
         let (_, trace) = run_sdot(&mut net, &setting, &cfg);
-        p2p_avg += net.counters.avg();
-        p2p_center += net.counters.sent[0] as f64;
         let edges: Vec<usize> = (1..n).collect();
-        p2p_edge += net.counters.avg_over(&edges);
-        err += trace.final_error();
+        (
+            net.counters.avg(),
+            net.counters.sent[0] as f64,
+            net.counters.avg_over(&edges),
+            trace.final_error(),
+        )
+    });
+    let (mut p2p_avg, mut p2p_center, mut p2p_edge, mut err) = (0.0, 0.0, 0.0, 0.0);
+    for (avg, center, edge, e) in per_trial {
+        p2p_avg += avg;
+        p2p_center += center;
+        p2p_edge += edge;
+        err += e;
     }
     let k = ctx.trials as f64;
     (p2p_avg / k, p2p_center / k, p2p_edge / k, err / k)
@@ -115,22 +125,31 @@ pub fn topo_straggler(ctx: &ExpCtx) -> Result<Vec<Table>> {
     let spec = Spectrum::with_gap(D, 5, 0.7);
     let ds = SyntheticDataset::full(&spec, N_PER_NODE, n, &mut rng);
     let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
-    for topo in ["ring", "star", "path", "grid", "erdos"] {
-        let g = Graph::from_spec(topo, n, 0.4, &mut rng);
-        for straggle in [false, true] {
-            let mut cfg = MpiConfig::virtual_clock();
-            if straggle {
-                cfg.straggler = Some(StragglerSpec { delay, seed: ctx.seed });
-            }
-            let st = run_sdot_mpi(&setting, &g, sched, t_o, &cfg);
-            t.row(&[
-                topo.to_string(),
-                if straggle { "Yes" } else { "No" }.to_string(),
-                fnum(st.secs, 2),
-                p2p_k(st.p2p_avg),
-                format!("{:.2e}", st.max_err),
-            ]);
+    // Graphs draw sequentially from the shared stream, so they are built
+    // serially up front; the 10 virtual-clock MPI cells are then
+    // independent and fan out across the trial pool (each cell spawns
+    // its own per-node SPMD workers; the virtual clock means concurrent
+    // cells cannot perturb each other's time column).
+    let topos = ["ring", "star", "path", "grid", "erdos"];
+    let graphs: Vec<Graph> =
+        topos.iter().map(|&topo| Graph::from_spec(topo, n, 0.4, &mut rng)).collect();
+    let cells = par_map(ctx, topos.len() * 2, |cell, _threads| {
+        let (ti, straggle) = (cell / 2, cell % 2 == 1);
+        let mut cfg = MpiConfig::virtual_clock();
+        if straggle {
+            cfg.straggler = Some(StragglerSpec { delay, seed: ctx.seed });
         }
+        run_sdot_mpi(&setting, &graphs[ti], sched, t_o, &cfg)
+    });
+    for (cell, st) in cells.into_iter().enumerate() {
+        let (ti, straggle) = (cell / 2, cell % 2 == 1);
+        t.row(&[
+            topos[ti].to_string(),
+            if straggle { "Yes" } else { "No" }.to_string(),
+            fnum(st.secs, 2),
+            p2p_k(st.p2p_avg),
+            format!("{:.2e}", st.max_err),
+        ]);
     }
     Ok(vec![t])
 }

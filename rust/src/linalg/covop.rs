@@ -69,6 +69,48 @@ impl CovOp {
         }
     }
 
+    // ---- row-split pieces of `apply_into` (hierarchical parallelism) ----
+    //
+    // `apply_into` decomposes into two row-parallel phases with a barrier
+    // between them: phase A fills `tmp = XᵀQ` (implicit representation
+    // only), phase B fills `out = M Q` row ranges. Both phases are exact
+    // row-range restrictions of the kernels `apply_into` runs, so the
+    // assembled result is bitwise identical for any split (and for the
+    // dense representation phase A is empty).
+
+    /// Rows of the phase-A intermediate: the local sample count for the
+    /// implicit representation, 0 for the dense one (no phase A).
+    pub fn tmp_rows(&self) -> usize {
+        match self {
+            CovOp::Dense(_) => 0,
+            CovOp::Samples { x, .. } => x.cols,
+        }
+    }
+
+    /// Phase A, rows `lo..hi`: `tmp[lo..hi] = (Xᵀ q)[lo..hi]`. Must not
+    /// be called on the dense representation (it has no intermediate).
+    pub fn apply_tmp_rows(&self, q: &Mat, lo: usize, hi: usize, tmp_rows: &mut [f64]) {
+        match self {
+            CovOp::Dense(_) => unreachable!("dense CovOp has no phase-A intermediate"),
+            CovOp::Samples { x, .. } => x.t_matmul_rows_into(q, lo, hi, tmp_rows),
+        }
+    }
+
+    /// Phase B, rows `lo..hi` of `out = M q`. For the implicit
+    /// representation `tmp` must already hold the full phase-A product
+    /// (`n_i × r`); the dense representation ignores it.
+    pub fn apply_out_rows(&self, q: &Mat, tmp: &Mat, lo: usize, hi: usize, out_rows: &mut [f64]) {
+        match self {
+            CovOp::Dense(m) => m.matmul_rows_into(q, lo, hi, out_rows),
+            CovOp::Samples { x, scale } => {
+                x.matmul_rows_into(tmp, lo, hi, out_rows);
+                for v in out_rows.iter_mut() {
+                    *v *= *scale;
+                }
+            }
+        }
+    }
+
     /// Materialize as a dense matrix (for ground-truth computation).
     pub fn to_dense(&self) -> Mat {
         match self {
@@ -170,6 +212,41 @@ mod tests {
             assert_eq!(out.data, want.data);
             // Buffer reuse across calls keeps results identical.
             op.apply_into(&q, &mut out, &mut tmp);
+            assert_eq!(out.data, want.data);
+        }
+    }
+
+    #[test]
+    fn phased_rows_assemble_bitwise_to_apply_into() {
+        let mut rng = Rng::new(8);
+        let x = Mat::gauss(150, 40, &mut rng);
+        let q = Mat::gauss(150, 4, &mut rng);
+        for op in [
+            CovOp::Samples { x: x.clone(), scale: 1.0 / 40.0 },
+            CovOp::dense_from_samples(&x),
+        ] {
+            let mut want = Mat::zeros(0, 0);
+            let mut want_tmp = Mat::zeros(0, 0);
+            op.apply_into(&q, &mut want, &mut want_tmp);
+
+            // Phase A split across two row ranges (implicit repr only).
+            let tn = op.tmp_rows();
+            let mut tmp = Mat::zeros(tn, q.cols);
+            if tn > 0 {
+                let mid = tn / 3;
+                let r = q.cols;
+                op.apply_tmp_rows(&q, 0, mid, &mut tmp.data[..mid * r]);
+                op.apply_tmp_rows(&q, mid, tn, &mut tmp.data[mid * r..]);
+                assert_eq!(tmp.data, want_tmp.data);
+            }
+            // Phase B split across three row ranges.
+            let d = op.dim();
+            let r = q.cols;
+            let mut out = Mat::zeros(d, r);
+            let (s1, s2) = (d / 4, 2 * d / 3);
+            op.apply_out_rows(&q, &tmp, 0, s1, &mut out.data[..s1 * r]);
+            op.apply_out_rows(&q, &tmp, s1, s2, &mut out.data[s1 * r..s2 * r]);
+            op.apply_out_rows(&q, &tmp, s2, d, &mut out.data[s2 * r..]);
             assert_eq!(out.data, want.data);
         }
     }

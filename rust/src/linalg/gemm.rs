@@ -66,9 +66,20 @@ pub(crate) fn dot4(a: &[f64], b: &[f64], k: usize) -> f64 {
 /// every dot product runs over two contiguous slices. Matches the seed's
 /// `a.matmul_t(&b.transpose())` arithmetic bit for bit.
 pub(crate) fn matmul_skinny_into(a: &Mat, b: &Mat, out: &mut Mat) {
-    let (m, k, n) = (a.rows, a.cols, b.cols);
+    debug_assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    matmul_skinny_rows(a, b, 0, a.rows, &mut out.data);
+}
+
+/// Rows `lo..hi` of the skinny product into `out_rows`
+/// (`(hi-lo) × b.cols`, row-major). Each thread packs `bᵀ` into its own
+/// thread-local scratch (cheap for skinny `b`); per-output-row arithmetic
+/// is exactly that of [`matmul_skinny_into`], so splitting rows across
+/// pool tasks leaves every output element bitwise unchanged.
+pub(crate) fn matmul_skinny_rows(a: &Mat, b: &Mat, lo: usize, hi: usize, out_rows: &mut [f64]) {
+    let (k, n) = (a.cols, b.cols);
     debug_assert_eq!(b.rows, k);
-    debug_assert_eq!((out.rows, out.cols), (m, n));
+    debug_assert!(lo <= hi && hi <= a.rows);
+    debug_assert_eq!(out_rows.len(), (hi - lo) * n);
     SCRATCH.with(|cell| {
         let mut s = cell.borrow_mut();
         let bt = &mut s.bt;
@@ -80,9 +91,9 @@ pub(crate) fn matmul_skinny_into(a: &Mat, b: &Mat, out: &mut Mat) {
                 bt[j * k + p] = v;
             }
         }
-        for i in 0..m {
+        for i in lo..hi {
             let arow = a.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
+            let orow = &mut out_rows[(i - lo) * n..(i - lo + 1) * n];
             for (j, o) in orow.iter_mut().enumerate() {
                 *o = dot4(arow, &bt[j * k..j * k + k], k);
             }
@@ -92,10 +103,21 @@ pub(crate) fn matmul_skinny_into(a: &Mat, b: &Mat, out: &mut Mat) {
 
 /// Register-blocked GEMM: `out = a · b` over packed panels.
 pub(crate) fn matmul_blocked_into(a: &Mat, b: &Mat, out: &mut Mat) {
-    let (m, k, n) = (a.rows, a.cols, b.cols);
+    debug_assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    matmul_blocked_rows(a, b, 0, a.rows, &mut out.data);
+}
+
+/// Rows `lo..hi` of the blocked product into `out_rows`. The `MC`
+/// blocking restarts at `lo`, but every output element still accumulates
+/// its `k` contributions in the same `KC`-blocked ascending order (the
+/// micro-kernel sums each block in registers before a single add), so
+/// results are bitwise identical to the full-range kernel.
+pub(crate) fn matmul_blocked_rows(a: &Mat, b: &Mat, lo: usize, hi: usize, out_rows: &mut [f64]) {
+    let (k, n) = (a.cols, b.cols);
     debug_assert_eq!(b.rows, k);
-    debug_assert_eq!((out.rows, out.cols), (m, n));
-    out.data.fill(0.0);
+    debug_assert!(lo <= hi && hi <= a.rows);
+    debug_assert_eq!(out_rows.len(), (hi - lo) * n);
+    out_rows.fill(0.0);
     SCRATCH.with(|cell| {
         let mut guard = cell.borrow_mut();
         let Scratch { pa, pb, .. } = &mut *guard;
@@ -116,9 +138,9 @@ pub(crate) fn matmul_blocked_into(a: &Mat, b: &Mat, out: &mut Mat) {
                 let nb = NC.min(n - jj);
                 pack_b(b, pb, kk, kb, jj, nb);
                 let ntiles = nb.div_ceil(NR);
-                let mut ii = 0;
-                while ii < m {
-                    let mb = MC.min(m - ii);
+                let mut ii = lo;
+                while ii < hi {
+                    let mb = MC.min(hi - ii);
                     pack_a(a, pa, ii, mb, kk, kb);
                     let mtiles = mb.div_ceil(MR);
                     for jt in 0..ntiles {
@@ -126,7 +148,8 @@ pub(crate) fn matmul_blocked_into(a: &Mat, b: &Mat, out: &mut Mat) {
                         for it in 0..mtiles {
                             let pa_panel = &pa[it * MR * kb..(it + 1) * MR * kb];
                             microkernel_write(
-                                pa_panel, pb_panel, kb, out, n, ii, it, mb, jj, jt, nb,
+                                pa_panel, pb_panel, kb, out_rows, n, ii - lo, it, mb, jj, jt,
+                                nb,
                             );
                         }
                     }
@@ -140,14 +163,15 @@ pub(crate) fn matmul_blocked_into(a: &Mat, b: &Mat, out: &mut Mat) {
 }
 
 /// One `MR×NR` accumulator tile; accumulates into the valid sub-block of
-/// `out` (padded lanes are zero in the packed panels and never written).
+/// `out_rows` (padded lanes are zero in the packed panels and never
+/// written). `ii` is relative to the start of `out_rows`.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn microkernel_write(
     pa_panel: &[f64],
     pb_panel: &[f64],
     kb: usize,
-    out: &mut Mat,
+    out_rows: &mut [f64],
     n: usize,
     ii: usize,
     it: usize,
@@ -171,7 +195,7 @@ fn microkernel_write(
     let cmax = NR.min(nb - jt * NR);
     for (r, accr) in acc.iter().enumerate().take(rmax) {
         let row = ii + it * MR + r;
-        let orow = &mut out.data[row * n + jj + jt * NR..row * n + jj + jt * NR + cmax];
+        let orow = &mut out_rows[row * n + jj + jt * NR..row * n + jj + jt * NR + cmax];
         for (o, &v) in orow.iter_mut().zip(accr.iter()) {
             *o += v;
         }
@@ -284,6 +308,37 @@ mod tests {
         matmul_skinny_into(&a, &big, &mut tmp); // dirty the scratch
         matmul_skinny_into(&a, &b, &mut o2);
         assert_eq!(o1.data, o2.data);
+    }
+
+    /// Reassembling any row split must reproduce the full kernel bitwise
+    /// (the contract that makes within-node row parallelism invisible).
+    #[test]
+    fn row_splits_are_bitwise_equal_to_full_kernels() {
+        let mut rng = Rng::new(9);
+        for &(m, k, n) in &[(40usize, 64usize, 6usize), (70, 300, 257), (9, 20, 40)] {
+            let a = Mat::gauss(m, k, &mut rng);
+            let b = Mat::gauss(k, n, &mut rng);
+            let skinny = n <= 32;
+            let mut full = Mat::zeros(m, n);
+            if skinny {
+                matmul_skinny_into(&a, &b, &mut full);
+            } else {
+                matmul_blocked_into(&a, &b, &mut full);
+            }
+            for &split in &[0usize, 1, m / 3, m / 2, m - 1, m] {
+                let mut lo_part = vec![0.0; split * n];
+                let mut hi_part = vec![0.0; (m - split) * n];
+                if skinny {
+                    matmul_skinny_rows(&a, &b, 0, split, &mut lo_part);
+                    matmul_skinny_rows(&a, &b, split, m, &mut hi_part);
+                } else {
+                    matmul_blocked_rows(&a, &b, 0, split, &mut lo_part);
+                    matmul_blocked_rows(&a, &b, split, m, &mut hi_part);
+                }
+                lo_part.extend_from_slice(&hi_part);
+                assert_eq!(lo_part, full.data, "{m}x{k}x{n} split at {split}");
+            }
+        }
     }
 
     #[test]

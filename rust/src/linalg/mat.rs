@@ -258,20 +258,33 @@ impl Mat {
     /// ([`super::gemm`]); small shapes use the cache-friendly i-k-j loop.
     pub fn matmul_into(&self, b: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        out.reshape_in_place(self.rows, b.cols);
+        self.matmul_rows_into(b, 0, self.rows, &mut out.data);
+    }
+
+    /// Rows `lo..hi` of `self * b` into `out_rows` (a row-major
+    /// `(hi-lo) × b.cols` slice) — the building block of within-node row
+    /// parallelism. The kernel regime is chosen from the **full** problem
+    /// shape and every output element keeps its full-kernel summation
+    /// order, so assembling any row split reproduces [`Mat::matmul_into`]
+    /// bitwise.
+    pub fn matmul_rows_into(&self, b: &Mat, lo: usize, hi: usize, out_rows: &mut [f64]) {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        assert!(lo <= hi && hi <= self.rows, "row range {lo}..{hi} of {}", self.rows);
         let (m, k, n) = (self.rows, self.cols, b.cols);
-        out.reshape_in_place(m, n);
+        assert_eq!(out_rows.len(), (hi - lo) * n);
         if n <= 32 && k >= 16 {
-            super::gemm::matmul_skinny_into(self, b, out);
+            super::gemm::matmul_skinny_rows(self, b, lo, hi, out_rows);
             return;
         }
         if n > 32 && k >= 8 && m >= 8 {
-            super::gemm::matmul_blocked_into(self, b, out);
+            super::gemm::matmul_blocked_rows(self, b, lo, hi, out_rows);
             return;
         }
-        out.fill(0.0);
-        for i in 0..m {
+        out_rows.fill(0.0);
+        for i in lo..hi {
             let a_row = self.row(i);
-            let out_row = &mut out.data[i * n..(i + 1) * n];
+            let out_row = &mut out_rows[(i - lo) * n..(i - lo + 1) * n];
             for (kk, &a_ik) in a_row.iter().enumerate().take(k) {
                 if a_ik == 0.0 {
                     continue;
@@ -294,18 +307,30 @@ impl Mat {
     /// `out = selfᵀ * b` without allocating.
     pub fn t_matmul_into(&self, b: &Mat, out: &mut Mat) {
         assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
-        let (k, m, n) = (self.rows, self.cols, b.cols);
-        out.reshape_in_place(m, n);
-        out.fill(0.0);
+        out.reshape_in_place(self.cols, b.cols);
+        self.t_matmul_rows_into(b, 0, self.cols, &mut out.data);
+    }
+
+    /// Rows `lo..hi` of `selfᵀ * b` (i.e. the contributions of columns
+    /// `lo..hi` of `self`) into `out_rows` (`(hi-lo) × b.cols`). Same
+    /// `kk`-ascending accumulation per output element as
+    /// [`Mat::t_matmul_into`], so row splits assemble to the full kernel
+    /// bitwise.
+    pub fn t_matmul_rows_into(&self, b: &Mat, lo: usize, hi: usize, out_rows: &mut [f64]) {
+        assert_eq!(self.rows, b.rows, "t_matmul shape mismatch");
+        assert!(lo <= hi && hi <= self.cols, "row range {lo}..{hi} of {}", self.cols);
+        let (k, n) = (self.rows, b.cols);
+        assert_eq!(out_rows.len(), (hi - lo) * n);
+        out_rows.fill(0.0);
         for kk in 0..k {
             let a_row = self.row(kk);
             let b_row = b.row(kk);
-            for i in 0..m {
+            for i in lo..hi {
                 let a = a_row[i];
                 if a == 0.0 {
                     continue;
                 }
-                let out_row = &mut out.data[i * n..(i + 1) * n];
+                let out_row = &mut out_rows[(i - lo) * n..(i - lo + 1) * n];
                 for (o, &bv) in out_row.iter_mut().zip(b_row.iter()) {
                     *o += a * bv;
                 }
@@ -355,6 +380,27 @@ impl Mat {
                 let s = dot4(ri, rj, self.cols) * scale;
                 out.data[i * d + j] = s;
                 out.data[j * d + i] = s;
+            }
+        }
+    }
+
+    /// Rows `lo..hi` of `scale * self * selfᵀ` into `out_rows`
+    /// (`(hi-lo) × rows`). A row chunk cannot own the transposed mirror
+    /// element, so every element of the owned rows is computed directly;
+    /// `dot4(a, b)` is bitwise-commutative (elementwise products commute,
+    /// summation order is fixed), so assembling all rows reproduces
+    /// [`Mat::syrk_into`] exactly. Each off-diagonal dot is computed once
+    /// per owner row (2× the serial triangle's flops — the price of a
+    /// mirror-free split; the serial path keeps triangle-and-mirror).
+    pub fn syrk_rows_into(&self, scale: f64, lo: usize, hi: usize, out_rows: &mut [f64]) {
+        let d = self.rows;
+        assert!(lo <= hi && hi <= d, "row range {lo}..{hi} of {d}");
+        assert_eq!(out_rows.len(), (hi - lo) * d);
+        for i in lo..hi {
+            let ri = self.row(i);
+            let orow = &mut out_rows[(i - lo) * d..(i - lo + 1) * d];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = dot4(ri, self.row(j), self.cols) * scale;
             }
         }
     }
@@ -674,6 +720,41 @@ mod tests {
         let mut out = Mat::zeros(0, 0);
         a.transpose_into(&mut out);
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn prop_rows_variants_assemble_bitwise() {
+        // Covers all three matmul regimes plus t_matmul and syrk.
+        let mut rng = Rng::new(27);
+        for &(m, k, n) in &[
+            (20usize, 20usize, 5usize), // skinny
+            (10, 40, 50),               // blocked
+            (7, 5, 40),                 // naive
+        ] {
+            let a = Mat::gauss(m, k, &mut rng);
+            let b = Mat::gauss(k, n, &mut rng);
+            let full = a.matmul(&b);
+            let split = m / 2;
+            let mut parts = vec![0.0; m * n];
+            a.matmul_rows_into(&b, 0, split, &mut parts[..split * n]);
+            a.matmul_rows_into(&b, split, m, &mut parts[split * n..]);
+            assert_eq!(parts, full.data, "{m}x{k}x{n}");
+        }
+
+        let a = Mat::gauss(30, 7, &mut rng);
+        let b = Mat::gauss(30, 4, &mut rng);
+        let full = a.t_matmul(&b);
+        let mut parts = vec![0.0; 7 * 4];
+        a.t_matmul_rows_into(&b, 0, 3, &mut parts[..3 * 4]);
+        a.t_matmul_rows_into(&b, 3, 7, &mut parts[3 * 4..]);
+        assert_eq!(parts, full.data);
+
+        let x = Mat::gauss(14, 60, &mut rng);
+        let full = x.syrk(1.0 / 60.0);
+        let mut parts = vec![0.0; 14 * 14];
+        x.syrk_rows_into(1.0 / 60.0, 0, 5, &mut parts[..5 * 14]);
+        x.syrk_rows_into(1.0 / 60.0, 5, 14, &mut parts[5 * 14..]);
+        assert_eq!(parts, full.data);
     }
 
     #[test]

@@ -9,8 +9,15 @@
 //! dpsa demo [flags]                 # 10-second S-DOT walkthrough
 //!
 //! flags: --seed N --scale F --trials N --threads N --out DIR
-//!        --config FILE.json --mpi-clock real|virtual
+//!        --config FILE.json --trial-parallel on|off
+//!        --mpi-clock real|virtual
 //! ```
+//!
+//! `--threads` is one knob for two parallelism levels: Monte-Carlo
+//! trials fan out across a trial pool, and within a trial the simulated
+//! network parallelizes across nodes and (for large d) across rows.
+//! Tables are byte-identical for every thread count and either level —
+//! see `config` and `runtime::pool` for the contract.
 
 use anyhow::Result;
 use dpsa::config::load_ctx;
@@ -141,6 +148,6 @@ fn print_usage() {
     println!(
         "usage: dpsa <list|run|info|demo> [ids…] \
          [--seed N] [--scale F] [--trials N] [--threads N] [--out DIR] \
-         [--config FILE] [--mpi-clock real|virtual]"
+         [--config FILE] [--trial-parallel on|off] [--mpi-clock real|virtual]"
     );
 }

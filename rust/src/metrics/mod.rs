@@ -2,5 +2,8 @@
 pub mod subspace;
 pub mod trace;
 
-pub use subspace::{principal_angle_cosines, projection_distance, subspace_error};
+pub use subspace::{
+    average_error, average_error_ws, principal_angle_cosines, projection_distance,
+    subspace_error, subspace_error_ws, SubspaceWs,
+};
 pub use trace::{IterRecord, RunTrace};

@@ -9,17 +9,47 @@
 //!
 //! where σ_i are the singular values of `Qᵀ Q̂` (cosines of the principal
 //! angles). This equals the squared chordal distance between the spanned
-//! subspaces, normalized by r.
+//! subspaces, normalized by r. Since `Σ σ_i² = ‖QᵀQ̂‖_F²`, the error
+//! itself needs no SVD — [`subspace_error_ws`] computes it from one
+//! `r×r` product and a Frobenius norm, allocation-free.
 
 use crate::linalg::{singular_values, Mat};
+
+/// Reusable workspace for the subspace metrics.
+///
+/// Traces record the error once per outer iteration **per node**; the
+/// seed implementation allocated a fresh `r×r` overlap (plus SVD
+/// temporaries) on every call, which dominated the profile at
+/// `record_every = 1`. The workspace holds the overlap buffer so the
+/// steady-state metric path performs zero heap allocations (asserted by
+/// `bench_hotpath`'s counting allocator).
+#[derive(Debug, Default)]
+pub struct SubspaceWs {
+    /// The `r×r` overlap `Qᵀ Q̂` (reshaped in place, capacity kept).
+    overlap: Mat,
+}
+
+impl SubspaceWs {
+    pub fn new() -> SubspaceWs {
+        SubspaceWs::default()
+    }
+}
 
 /// Cosines of the principal angles between the column spaces of `q` (truth,
 /// orthonormal) and `qhat` (estimate, orthonormal), descending.
 pub fn principal_angle_cosines(q: &Mat, qhat: &Mat) -> Vec<f64> {
+    let mut ws = SubspaceWs::new();
+    principal_angle_cosines_ws(q, qhat, &mut ws)
+}
+
+/// [`principal_angle_cosines`] with a caller-provided overlap workspace
+/// (the returned vector and the small SVD still allocate — use
+/// [`subspace_error_ws`] when only eq. 11 is needed on a hot path).
+pub fn principal_angle_cosines_ws(q: &Mat, qhat: &Mat, ws: &mut SubspaceWs) -> Vec<f64> {
     assert_eq!(q.rows, qhat.rows);
     assert_eq!(q.cols, qhat.cols);
-    let overlap = q.t_matmul(qhat); // r×r
-    singular_values(&overlap)
+    q.t_matmul_into(qhat, &mut ws.overlap); // r×r
+    singular_values(&ws.overlap)
         .into_iter()
         .map(|s| s.min(1.0))
         .collect()
@@ -27,9 +57,24 @@ pub fn principal_angle_cosines(q: &Mat, qhat: &Mat) -> Vec<f64> {
 
 /// The paper's error metric, eq. (11).
 pub fn subspace_error(q: &Mat, qhat: &Mat) -> f64 {
+    subspace_error_ws(q, qhat, &mut SubspaceWs::new())
+}
+
+/// Allocation-free eq. (11) with a reusable workspace.
+///
+/// Uses the identity `Σ_i σ_i²(QᵀQ̂) = ‖QᵀQ̂‖_F²`, so
+/// `E = (r − ‖QᵀQ̂‖_F²)/r` — no SVD needed. This matches the
+/// singular-value formulation to machine precision (exactly, up to the
+/// old per-cosine `min(1.0)` clamp, replaced here by clamping `E` at 0);
+/// within one build the result is a deterministic function of the
+/// inputs, so traces stay byte-identical across thread counts.
+pub fn subspace_error_ws(q: &Mat, qhat: &Mat, ws: &mut SubspaceWs) -> f64 {
+    assert_eq!(q.rows, qhat.rows);
+    assert_eq!(q.cols, qhat.cols);
+    q.t_matmul_into(qhat, &mut ws.overlap); // r×r
     let r = q.cols as f64;
-    let cos = principal_angle_cosines(q, qhat);
-    cos.iter().map(|c| 1.0 - c * c).sum::<f64>() / r
+    let fro = ws.overlap.fro_norm();
+    ((r - fro * fro) / r).max(0.0)
 }
 
 /// Projection-matrix distance `‖QQᵀ − Q̂Q̂ᵀ‖_F` (the Theorem-1 quantity up
@@ -45,7 +90,14 @@ pub fn projection_distance(q: &Mat, qhat: &Mat) -> f64 {
 /// Average of `subspace_error` over per-node estimates — the y-axis of the
 /// paper's figures ("average error across the nodes").
 pub fn average_error(q: &Mat, estimates: &[Mat]) -> f64 {
-    estimates.iter().map(|e| subspace_error(q, e)).sum::<f64>() / estimates.len() as f64
+    average_error_ws(q, estimates, &mut SubspaceWs::new())
+}
+
+/// Allocation-free [`average_error`] with a reusable workspace — the
+/// per-record trace path of the steppered algorithm runners.
+pub fn average_error_ws(q: &Mat, estimates: &[Mat], ws: &mut SubspaceWs) -> f64 {
+    estimates.iter().map(|e| subspace_error_ws(q, e, ws)).sum::<f64>()
+        / estimates.len() as f64
 }
 
 #[cfg(test)]
@@ -132,5 +184,33 @@ mod tests {
         let q = Mat::random_orthonormal(11, 4, &mut rng);
         let neg = q.scale(-1.0);
         assert!(subspace_error(&q, &neg) < 1e-12);
+    }
+
+    #[test]
+    fn frobenius_identity_matches_svd_formulation() {
+        let mut rng = Rng::new(7);
+        let mut ws = SubspaceWs::new();
+        for _ in 0..20 {
+            let q = Mat::random_orthonormal(12, 4, &mut rng);
+            let qh = Mat::random_orthonormal(12, 4, &mut rng);
+            let fast = subspace_error_ws(&q, &qh, &mut ws);
+            let cos = principal_angle_cosines(&q, &qh);
+            let svd = cos.iter().map(|c| 1.0 - c * c).sum::<f64>() / 4.0;
+            assert!((fast - svd).abs() < 1e-12, "{fast} vs {svd}");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_across_shapes_is_stable() {
+        let mut rng = Rng::new(8);
+        let mut ws = SubspaceWs::new();
+        let q5 = Mat::random_orthonormal(10, 5, &mut rng);
+        let qh5 = Mat::random_orthonormal(10, 5, &mut rng);
+        let first = subspace_error_ws(&q5, &qh5, &mut ws);
+        // Dirty the workspace with a different shape, then recompute.
+        let q2 = Mat::random_orthonormal(8, 2, &mut rng);
+        let _ = subspace_error_ws(&q2, &q2, &mut ws);
+        let again = subspace_error_ws(&q5, &qh5, &mut ws);
+        assert_eq!(first.to_bits(), again.to_bits());
     }
 }

@@ -35,6 +35,18 @@ impl RunTrace {
         RunTrace { algorithm: algorithm.to_string(), records: Vec::new() }
     }
 
+    /// A trace with pre-reserved record capacity. Steppered runners size
+    /// it as `t_o / record_every + 2` at construction so steady-state
+    /// [`RunTrace::push`] calls never reallocate — part of the
+    /// zero-allocation contract asserted by `bench_hotpath` at
+    /// `record_every = 1`.
+    pub fn with_capacity(algorithm: &str, records: usize) -> RunTrace {
+        RunTrace {
+            algorithm: algorithm.to_string(),
+            records: Vec::with_capacity(records),
+        }
+    }
+
     pub fn push(&mut self, rec: IterRecord) {
         self.records.push(rec);
     }
@@ -150,5 +162,16 @@ mod tests {
     fn thin_noop_when_small() {
         let t = mk(5);
         assert_eq!(t.thin(10).records.len(), 5);
+    }
+
+    #[test]
+    fn with_capacity_preallocates() {
+        let mut t = RunTrace::with_capacity("cap", 64);
+        let cap = t.records.capacity();
+        assert!(cap >= 64);
+        for i in 1..=64 {
+            t.push(IterRecord { outer: i, total_iters: i, error: 0.0, p2p_avg: 0.0 });
+        }
+        assert_eq!(t.records.capacity(), cap, "pushes within capacity must not realloc");
     }
 }

@@ -14,8 +14,12 @@
 //!
 //! Thread count: `SyncNetwork::new` uses the process-wide default set by
 //! [`set_default_threads`] (1 unless configured — e.g. via the
-//! `--threads` CLI flag); `with_threads` pins it explicitly. Results are
-//! bitwise identical for every thread count (see `runtime::pool`).
+//! `--threads` CLI flag); `with_threads` pins it explicitly. The pool is
+//! **hierarchical**: threads chunk across nodes first, and when fewer
+//! nodes than threads exist the leftover parallelism splits the rows of
+//! each node's matrix (`NodePool::run_chunks2`), so large-d problems on
+//! small networks still use every core. Results are bitwise identical
+//! for every thread count and either level (see `runtime::pool`).
 
 use crate::consensus::engine::consensus_rounds;
 use crate::consensus::weights::{local_degree_weights, WeightMatrix};
@@ -56,20 +60,34 @@ pub struct SyncNetwork {
 impl SyncNetwork {
     pub fn new(graph: Graph) -> SyncNetwork {
         let weights = local_degree_weights(&graph);
-        SyncNetwork::assemble(graph, weights, default_threads())
+        SyncNetwork::assemble(graph, weights, default_threads(), true)
     }
 
     pub fn with_weights(graph: Graph, weights: WeightMatrix) -> SyncNetwork {
-        SyncNetwork::assemble(graph, weights, default_threads())
+        SyncNetwork::assemble(graph, weights, default_threads(), true)
     }
 
     /// A network with an explicit node-parallelism (1 = the serial path).
     pub fn with_threads(graph: Graph, threads: usize) -> SyncNetwork {
-        let weights = local_degree_weights(&graph);
-        SyncNetwork::assemble(graph, weights, threads)
+        SyncNetwork::with_threads_split(graph, threads, true)
     }
 
-    fn assemble(graph: Graph, weights: WeightMatrix, threads: usize) -> SyncNetwork {
+    /// A network with explicit thread count **and** row-split policy.
+    /// `split_rows = false` restricts the pool to node-level chunking
+    /// (the pre-hierarchical behaviour); results are bitwise identical
+    /// either way — the knob exists so `bench_parallel_scaling` can
+    /// price the two levels separately.
+    pub fn with_threads_split(graph: Graph, threads: usize, split_rows: bool) -> SyncNetwork {
+        let weights = local_degree_weights(&graph);
+        SyncNetwork::assemble(graph, weights, threads, split_rows)
+    }
+
+    fn assemble(
+        graph: Graph,
+        weights: WeightMatrix,
+        threads: usize,
+        split_rows: bool,
+    ) -> SyncNetwork {
         let n = graph.n;
         let threads = threads.max(1);
         SyncNetwork {
@@ -77,7 +95,7 @@ impl SyncNetwork {
             weights,
             counters: P2pCounters::new(n),
             threads,
-            pool: NodePool::new(threads),
+            pool: NodePool::with_split(threads, split_rows),
             ws: ConsensusWorkspace::new(),
             rescale_cache: HashMap::new(),
         }
@@ -110,6 +128,7 @@ impl SyncNetwork {
             rounds,
             &mut self.counters,
             &self.pool,
+            &mut self.ws.mat_views,
         );
     }
 
@@ -161,6 +180,7 @@ impl SyncNetwork {
             rounds,
             &mut self.counters,
             &self.pool,
+            &mut self.ws.mat_views,
         );
         // The ratio z/weight is exactly sum-preserving for any finite
         // number of rounds (the weight channel → 1/N as rounds → ∞).
@@ -177,14 +197,14 @@ impl SyncNetwork {
 
 impl Clone for SyncNetwork {
     /// Clones topology, weights and counter state; the pool and
-    /// workspaces are rebuilt fresh (same thread count).
+    /// workspaces are rebuilt fresh (same thread count and split policy).
     fn clone(&self) -> SyncNetwork {
         SyncNetwork {
             graph: self.graph.clone(),
             weights: self.weights.clone(),
             counters: self.counters.clone(),
             threads: self.threads,
-            pool: NodePool::new(self.threads),
+            pool: NodePool::with_split(self.threads, self.pool.split_rows()),
             ws: ConsensusWorkspace::new(),
             rescale_cache: self.rescale_cache.clone(),
         }

@@ -68,10 +68,45 @@ pub trait Backend: Sync {
         out.copy_from(&q);
         let _ = ws;
     }
+
+    /// Whether this backend's `M_i Q` product decomposes into the
+    /// row-range phases below with results bitwise equal to
+    /// [`Backend::cov_apply_into`]. Runners use it to opt into
+    /// hierarchical (node × row) dispatch; backends with opaque kernels
+    /// (XLA executes whole compiled modules) keep the default `false`
+    /// and stay on node-level parallelism only.
+    fn supports_row_split(&self) -> bool {
+        false
+    }
+
+    /// Phase A of the split product: rows `lo..hi` of the `XᵀQ`
+    /// intermediate (only meaningful when [`CovOp::tmp_rows`] > 0). The
+    /// default delegates to the native row kernels; only row-split
+    /// backends ever receive this call.
+    fn cov_apply_tmp_rows(&self, cov: &CovOp, q: &Mat, lo: usize, hi: usize, tmp_rows: &mut [f64]) {
+        cov.apply_tmp_rows(q, lo, hi, tmp_rows);
+    }
+
+    /// Phase B of the split product: rows `lo..hi` of `out = M_i Q`
+    /// (`tmp` holds the full phase-A product for implicit operators).
+    fn cov_apply_out_rows(
+        &self,
+        cov: &CovOp,
+        q: &Mat,
+        tmp: &Mat,
+        lo: usize,
+        hi: usize,
+        out_rows: &mut [f64],
+    ) {
+        cov.apply_out_rows(q, tmp, lo, hi, out_rows);
+    }
+
     fn name(&self) -> &'static str;
 }
 
 pub use native::NativeBackend;
 pub use pool::{DisjointSlice, NodePool};
-pub use workspace::{node_scratch, ConsensusWorkspace, NodeScratch};
+pub use workspace::{
+    node_scratch, ConsensusWorkspace, DisjointMatRows, MatRowsScratch, NodeScratch,
+};
 pub use xla::XlaBackend;

@@ -25,6 +25,13 @@ impl Backend for NativeBackend {
         qr::orthonormalize_into(v, out, ws);
     }
 
+    /// The native row kernels assemble bitwise to `cov_apply_into`
+    /// (property-tested in `linalg::covop`), so hierarchical dispatch is
+    /// sound here.
+    fn supports_row_split(&self) -> bool {
+        true
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }

@@ -24,6 +24,22 @@
 //!
 //! With `threads = 1` (the default) nothing is spawned and `run_chunks`
 //! degenerates to a plain serial loop — byte-for-byte the serial path.
+//!
+//! # Two-level dispatch
+//!
+//! [`NodePool::run_chunks2`] extends the contract to a second,
+//! *within-item* level: each of the `outer` items (nodes) carries its own
+//! row count, and when the pool has more threads than items the leftover
+//! parallelism splits each item's rows into `ways = ⌈threads/outer⌉`
+//! contiguous row chunks. The flattened `(item, row-chunk)` task grid is
+//! dispatched through `run_chunks`, so one dispatch covers both levels.
+//! Determinism is preserved because row-chunk boundaries are again a pure
+//! function of `(rows, threads)` via [`chunk_bounds`], and because the
+//! row-level callers in this crate only ever compute *independent output
+//! rows* (each output element's arithmetic is untouched by the split —
+//! see `linalg`'s `*_rows_into` kernels). Items with fewer than
+//! [`MIN_SPLIT_ROWS`] rows are never split (the whole item is one task),
+//! which keeps tiny matrices from drowning in dispatch overhead.
 
 use std::marker::PhantomData;
 use std::sync::{Arc, Condvar, Mutex};
@@ -57,13 +73,21 @@ struct Shared {
 /// Persistent worker pool; see the module docs for the contract.
 pub struct NodePool {
     threads: usize,
+    split_rows: bool,
     shared: Option<Arc<Shared>>,
     handles: Vec<JoinHandle<()>>,
 }
 
+/// Items with fewer rows than this are never row-split by
+/// [`NodePool::run_chunks2`]: below it, per-chunk dispatch overhead
+/// outweighs the arithmetic (a d=20 consensus matrix), while the targets
+/// of within-node parallelism (d ∈ {784, 2914}, sample counts ≥ 100) are
+/// comfortably above.
+pub const MIN_SPLIT_ROWS: usize = 64;
+
 /// Deterministic chunk bounds: chunk `c` of `t` over `n` items.
 #[inline]
-fn chunk_bounds(n: usize, t: usize, c: usize) -> (usize, usize) {
+pub fn chunk_bounds(n: usize, t: usize, c: usize) -> (usize, usize) {
     (c * n / t, (c + 1) * n / t)
 }
 
@@ -71,9 +95,17 @@ impl NodePool {
     /// A pool using `threads` OS threads in total (the caller counts as
     /// one). `threads <= 1` spawns nothing and runs everything serially.
     pub fn new(threads: usize) -> NodePool {
+        NodePool::with_split(threads, true)
+    }
+
+    /// A pool with an explicit within-item row-split policy:
+    /// `split_rows = false` pins [`NodePool::run_chunks2`] to node-level
+    /// chunking only (the pre-hierarchical behaviour — used by
+    /// `bench_parallel_scaling` to measure the two levels separately).
+    pub fn with_split(threads: usize, split_rows: bool) -> NodePool {
         let threads = threads.max(1);
         if threads == 1 {
-            return NodePool { threads, shared: None, handles: Vec::new() };
+            return NodePool { threads, split_rows, shared: None, handles: Vec::new() };
         }
         let shared = Arc::new(Shared {
             slot: Mutex::new(JobSlot {
@@ -99,7 +131,7 @@ impl NodePool {
                     .expect("spawn pool worker"),
             );
         }
-        NodePool { threads, shared: Some(shared), handles }
+        NodePool { threads, split_rows, shared: Some(shared), handles }
     }
 
     /// Serial pool (no workers) — the `threads = 1` path.
@@ -110,6 +142,11 @@ impl NodePool {
     /// Total threads this pool uses, including the calling thread.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Whether [`NodePool::run_chunks2`] may split an item's rows.
+    pub fn split_rows(&self) -> bool {
+        self.split_rows
     }
 
     /// Partition `0..n` into deterministic contiguous chunks and run
@@ -182,6 +219,67 @@ impl NodePool {
         if worker_panicked {
             panic!("node-pool worker panicked during dispatch");
         }
+    }
+
+    /// Two-level deterministic dispatch: `outer` items, item `i` carrying
+    /// `rows_of(i)` rows. Runs `f(i, row_lo, row_hi)` so that every
+    /// `(item, row)` pair is covered exactly once, fanning the flattened
+    /// task grid across the pool.
+    ///
+    /// When `threads > outer` (and row-splitting is enabled), each item's
+    /// rows are divided into `ways = ⌈threads/outer⌉` contiguous chunks
+    /// via [`chunk_bounds`] — a pure function of `(rows, threads)` — so
+    /// the item→chunk map never depends on scheduling. Items with fewer
+    /// than [`MIN_SPLIT_ROWS`] rows get a single `(0, rows)` task. With
+    /// `threads <= outer` this degenerates to [`NodePool::run_chunks`]
+    /// semantics (one task per item, full row range).
+    ///
+    /// Callers must uphold the same discipline as `run_chunks`, at row
+    /// granularity: concurrent tasks may write only their own `(i, lo..hi)`
+    /// row range, and the per-row arithmetic must not depend on the split
+    /// (true for all `*_rows_into` kernels in this crate) — that is what
+    /// keeps results bitwise identical for every thread count.
+    pub fn run_chunks2<R, F>(&self, outer: usize, rows_of: &R, f: &F)
+    where
+        R: Fn(usize) -> usize + Sync,
+        F: Fn(usize, usize, usize) + Sync,
+    {
+        if outer == 0 {
+            return;
+        }
+        let ways = if self.split_rows { self.threads.div_ceil(outer) } else { 1 };
+        if ways <= 1 {
+            self.run_chunks(outer, &|lo, hi| {
+                for i in lo..hi {
+                    let rows = rows_of(i);
+                    if rows > 0 {
+                        f(i, 0, rows);
+                    }
+                }
+            });
+            return;
+        }
+        self.run_chunks(outer * ways, &|lo, hi| {
+            for task in lo..hi {
+                let i = task / ways;
+                let c = task % ways;
+                let rows = rows_of(i);
+                if rows == 0 {
+                    continue;
+                }
+                if rows < MIN_SPLIT_ROWS {
+                    // Too small to split: the whole item is task c = 0.
+                    if c == 0 {
+                        f(i, 0, rows);
+                    }
+                    continue;
+                }
+                let (rlo, rhi) = chunk_bounds(rows, ways, c);
+                if rlo < rhi {
+                    f(i, rlo, rhi);
+                }
+            }
+        });
     }
 }
 
@@ -374,6 +472,85 @@ mod tests {
             total.fetch_add(hi - lo, Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), 5);
+    }
+
+    /// Every (item, row) pair must be covered exactly once, for any
+    /// thread count / item count / row size (incl. rows < MIN_SPLIT_ROWS,
+    /// rows = 0 items, and heterogeneous row counts).
+    #[test]
+    fn run_chunks2_covers_each_row_exactly_once() {
+        for &threads in &[1usize, 2, 4, 9] {
+            let pool = NodePool::new(threads);
+            for &(outer, base_rows) in &[
+                (1usize, 300usize),
+                (2, 300),
+                (3, 65),
+                (5, 64),
+                (7, 63),
+                (4, 1),
+                (9, 100),
+                (2, 0),
+            ] {
+                let rows_of = |i: usize| if base_rows == 0 { 0 } else { base_rows + i };
+                let seen: Vec<Vec<AtomicUsize>> = (0..outer)
+                    .map(|i| (0..rows_of(i)).map(|_| AtomicUsize::new(0)).collect())
+                    .collect();
+                pool.run_chunks2(outer, &rows_of, &|i, lo, hi| {
+                    assert!(lo < hi && hi <= rows_of(i));
+                    for r in seen[i][lo..hi].iter() {
+                        r.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+                for (i, v) in seen.iter().enumerate() {
+                    assert!(
+                        v.iter().all(|c| c.load(Ordering::Relaxed) == 1),
+                        "threads={threads} outer={outer} item={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunks2_split_disabled_gives_whole_items() {
+        let pool = NodePool::with_split(4, false);
+        assert!(!pool.split_rows());
+        let calls = AtomicUsize::new(0);
+        pool.run_chunks2(2, &|_| 500, &|_i, lo, hi| {
+            assert_eq!((lo, hi), (0, 500));
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn run_chunks2_small_items_not_split() {
+        let pool = NodePool::new(8);
+        let calls = AtomicUsize::new(0);
+        pool.run_chunks2(2, &|_| MIN_SPLIT_ROWS - 1, &|_i, lo, hi| {
+            assert_eq!((lo, hi), (0, MIN_SPLIT_ROWS - 1));
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn run_chunks2_panic_propagates_without_deadlock() {
+        let pool = NodePool::new(4);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_chunks2(2, &|_| 1000, &|i, lo, _hi| {
+                if i == 1 && lo == 0 {
+                    panic!("row chunk boom");
+                }
+            });
+        }));
+        assert!(result.is_err());
+        // The pool stays usable after the panicked two-level dispatch.
+        let total = AtomicUsize::new(0);
+        pool.run_chunks2(3, &|_| 200, &|_i, lo, hi| {
+            total.fetch_add(hi - lo, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 3 * 200);
     }
 
     #[test]

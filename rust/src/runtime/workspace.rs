@@ -22,6 +22,7 @@
 
 use crate::linalg::qr::QrScratch;
 use crate::linalg::Mat;
+use std::marker::PhantomData;
 
 /// Double buffer + push-sum scalar channel for consensus mixing rounds.
 #[derive(Debug, Default)]
@@ -32,6 +33,9 @@ pub struct ConsensusWorkspace {
     pub w_src: Vec<f64>,
     /// Push-sum weight channel (destination).
     pub w_dst: Vec<f64>,
+    /// Raw-view table for the two-level mixing dispatch (refilled each
+    /// round without allocating).
+    pub mat_views: MatRowsScratch,
 }
 
 impl ConsensusWorkspace {
@@ -84,6 +88,105 @@ pub fn node_scratch(n: usize) -> Vec<NodeScratch> {
     v
 }
 
+/// One matrix's raw write view, snapshotted while the unique
+/// `&mut [Mat]` borrow is held (so `as_mut_ptr` is called with
+/// exclusive access — never concurrently).
+#[derive(Clone, Copy, Debug)]
+struct MatView {
+    ptr: *mut f64,
+    rows: usize,
+    cols: usize,
+}
+
+/// Reusable backing store for [`DisjointMatRows`]. Hot loops (one
+/// consensus round per fill) keep one of these alive so refilling the
+/// view table is allocation-free after warm-up (`clear` + `extend`
+/// reuse capacity).
+#[derive(Debug, Default)]
+pub struct MatRowsScratch {
+    views: Vec<MatView>,
+}
+
+// SAFETY: between dispatches the stored views are inert (never
+// dereferenced until the next `fill` rebuilds them under a fresh unique
+// borrow), so moving the scratch — and the workspaces/networks that own
+// one — across threads is sound. Keeps `SyncNetwork: Send`.
+unsafe impl Send for MatRowsScratch {}
+
+impl MatRowsScratch {
+    pub fn new() -> MatRowsScratch {
+        MatRowsScratch::default()
+    }
+
+    /// Snapshot `mats` into a [`DisjointMatRows`]. The returned handle
+    /// holds the `&mut [Mat]` borrow for its lifetime, so the shapes and
+    /// buffers it captured cannot move or change while tasks write
+    /// through it.
+    pub fn fill<'a>(&'a mut self, mats: &'a mut [Mat]) -> DisjointMatRows<'a> {
+        self.views.clear();
+        self.views.extend(mats.iter_mut().map(|m| MatView {
+            ptr: m.data.as_mut_ptr(),
+            rows: m.rows,
+            cols: m.cols,
+        }));
+        DisjointMatRows { views: &self.views, _marker: PhantomData }
+    }
+}
+
+/// Shared view over a `&mut [Mat]` allowing concurrent writes to
+/// **disjoint row ranges** of each matrix — the write-side primitive of
+/// two-level dispatches ([`NodePool::run_chunks2`]). Built via
+/// [`MatRowsScratch::fill`].
+///
+/// [`DisjointSlice`](crate::runtime::pool::DisjointSlice) hands out
+/// `&mut Mat` per index, which is unsound when two row chunks of the
+/// *same* matrix are in flight. This wrapper instead snapshots each
+/// matrix's `(buffer pointer, rows, cols)` **up front, under the unique
+/// borrow** — the concurrent path then carves disjoint `&mut [f64]` row
+/// slices from the stored raw pointers without ever materializing a
+/// reference to a `Mat` or its `Vec` header, so no aliasing references
+/// exist between tasks.
+///
+/// [`NodePool::run_chunks2`]: crate::runtime::pool::NodePool::run_chunks2
+pub struct DisjointMatRows<'a> {
+    views: &'a [MatView],
+    _marker: PhantomData<&'a mut [Mat]>,
+}
+
+// SAFETY: access is coordinated by the caller exactly as for
+// `DisjointSlice` — each in-flight task touches only its own row range,
+// through per-matrix pointers captured under the unique borrow.
+unsafe impl Send for DisjointMatRows<'_> {}
+unsafe impl Sync for DisjointMatRows<'_> {}
+
+impl DisjointMatRows<'_> {
+    pub fn len(&self) -> usize {
+        self.views.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.views.is_empty()
+    }
+
+    /// Row count of matrix `i` (safe: shapes were snapshotted under the
+    /// unique borrow and cannot change while this handle lives).
+    pub fn rows(&self, i: usize) -> usize {
+        self.views[i].rows
+    }
+
+    /// Mutable slice over rows `lo..hi` of matrix `i`.
+    ///
+    /// # Safety
+    /// While the dispatch is in flight, no other task may access any row
+    /// in `[lo, hi)` of matrix `i` (bounds are assert-checked).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn rows_mut(&self, i: usize, lo: usize, hi: usize) -> &mut [f64] {
+        let v = self.views[i];
+        assert!(lo <= hi && hi <= v.rows, "row range {lo}..{hi} out of bounds ({})", v.rows);
+        std::slice::from_raw_parts_mut(v.ptr.add(lo * v.cols), (hi - lo) * v.cols)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +221,26 @@ mod tests {
     fn node_scratch_sized() {
         let s = node_scratch(5);
         assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn disjoint_mat_rows_carves_expected_slices() {
+        let mut mats: Vec<Mat> = vec![Mat::zeros(4, 3), Mat::zeros(2, 5)];
+        let mut scratch = MatRowsScratch::new();
+        {
+            let d = scratch.fill(&mut mats);
+            assert_eq!(d.len(), 2);
+            assert_eq!(d.rows(0), 4);
+            // SAFETY: single-threaded, sequential disjoint accesses.
+            unsafe {
+                d.rows_mut(0, 1, 3).fill(7.0);
+                d.rows_mut(1, 0, 2).fill(2.0);
+            }
+        }
+        assert_eq!(mats[0].row(0), &[0.0, 0.0, 0.0]);
+        assert_eq!(mats[0].row(1), &[7.0, 7.0, 7.0]);
+        assert_eq!(mats[0].row(2), &[7.0, 7.0, 7.0]);
+        assert_eq!(mats[0].row(3), &[0.0, 0.0, 0.0]);
+        assert!(mats[1].data.iter().all(|&v| v == 2.0));
     }
 }

@@ -135,9 +135,12 @@ pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
 
 /// Standard header for bench binaries; reads scale/trials/threads from
 /// env so `BENCH_SCALE=1.0 BENCH_THREADS=4 cargo bench` regenerates
-/// paper-fidelity numbers at full parallelism. `BENCH_MPI_CLOCK=virtual`
-/// switches the Table-V straggler runs onto the deterministic virtual
-/// clock (instant; real sleeps remain the default for wall-clock runs).
+/// paper-fidelity numbers at full parallelism (`--threads` semantics:
+/// one knob, two levels — trial fan-out plus within-trial node/row
+/// parallelism; `BENCH_TRIAL_PARALLEL=0` pins the trial level off).
+/// `BENCH_MPI_CLOCK=virtual` switches the Table-V straggler runs onto
+/// the deterministic virtual clock (instant; real sleeps remain the
+/// default for wall-clock runs).
 pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
     let scale = std::env::var("BENCH_SCALE")
         .ok()
@@ -147,10 +150,17 @@ pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(1);
-    let threads = std::env::var("BENCH_THREADS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(1);
+    // One parser for BENCH_THREADS, shared with the test suite.
+    let threads = crate::experiments::env_threads();
+    // Same spellings as the CLI's --trial-parallel parser, and like the
+    // CLI, unknown values are a hard error rather than silently "on"
+    // (a mis-spelled knob would otherwise distort wall-clock runs).
+    let trial_parallel = match std::env::var("BENCH_TRIAL_PARALLEL").ok().as_deref() {
+        None => true,
+        Some("1" | "on" | "true" | "yes") => true,
+        Some("0" | "off" | "false" | "no") => false,
+        Some(other) => panic!("BENCH_TRIAL_PARALLEL must be on/off, got '{other}'"),
+    };
     let mpi_clock = match std::env::var("BENCH_MPI_CLOCK").ok().as_deref() {
         Some("virtual") => crate::network::mpi::ClockMode::Virtual,
         _ => crate::network::mpi::ClockMode::Real,
@@ -162,6 +172,7 @@ pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
         trials,
         out_dir: std::path::PathBuf::from("results"),
         threads,
+        trial_parallel,
         mpi_clock,
     }
 }

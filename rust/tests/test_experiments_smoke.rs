@@ -1,7 +1,7 @@
 //! Smoke: every experiment id runs end-to-end at tiny scale and saves
 //! its CSV/markdown artifacts.
 
-use dpsa::experiments::{all_ids, run, ExpCtx};
+use dpsa::experiments::{all_ids, env_threads, run, ExpCtx};
 use dpsa::network::mpi::ClockMode;
 
 fn tiny_ctx(name: &str) -> ExpCtx {
@@ -10,7 +10,12 @@ fn tiny_ctx(name: &str) -> ExpCtx {
         scale: 0.02,
         trials: 1,
         out_dir: std::env::temp_dir().join(format!("dpsa_smoke_{name}")),
-        threads: 1,
+        // CI runs the suite under BENCH_THREADS ∈ {1, 4}: the same
+        // smokes then exercise the serial path, trial fan-out and the
+        // hierarchical node/row pool — with identical expected output
+        // (the pool's determinism contract).
+        threads: env_threads(),
+        trial_parallel: true,
         // Straggler smokes run on the deterministic virtual clock: no
         // sleeps, no wall-clock flakiness on loaded CI.
         mpi_clock: ClockMode::Virtual,

@@ -2,6 +2,12 @@
 //! numerics. `run_sdot` / `run_fdot` (and the consensus primitives they
 //! ride on) must produce **bitwise-identical** outputs for
 //! `threads ∈ {1, 4}` — the contract documented in `runtime::pool`.
+//!
+//! The **determinism test matrix** at the bottom locks the contract down
+//! end-to-end for both parallel levels: a Table-I cell and a Table-V
+//! virtual-clock cell run at threads ∈ {1, 2, 4, 9} × trial-parallel
+//! {on, off}, and every produced table (including the P2P counter
+//! columns) must be byte-identical across all eight configurations.
 
 use dpsa::algorithms::fdot::{run_fdot, FdotConfig, FeatureSetting};
 use dpsa::algorithms::sdot::{run_sdot, SdotConfig};
@@ -10,10 +16,13 @@ use dpsa::consensus::schedule::Schedule;
 use dpsa::data::partition::partition_features;
 use dpsa::data::spectrum::Spectrum;
 use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::experiments::{straggler, synth_tables, ExpCtx};
 use dpsa::graph::Graph;
 use dpsa::linalg::Mat;
+use dpsa::network::mpi::ClockMode;
 use dpsa::network::sim::SyncNetwork;
 use dpsa::util::rng::Rng;
+use dpsa::util::table::Table;
 
 fn sample_setting(seed: u64, nodes: usize) -> (SampleSetting, Graph) {
     let mut rng = Rng::new(seed);
@@ -104,4 +113,180 @@ fn repeated_threaded_runs_are_reproducible() {
     let mut net_b = SyncNetwork::with_threads(g, 4);
     let (qb, _) = run_sdot(&mut net_b, &s, &cfg);
     assert_bitwise_eq(&qa, &qb);
+}
+
+/// Large-d setting on a tiny network: N < threads, so the hierarchical
+/// pool engages the row-split level (d and n_i both exceed the
+/// MIN_SPLIT_ROWS threshold, and d > n_i keeps the covariances in the
+/// implicit sample form whose two-phase product is the split target).
+fn tall_setting(seed: u64, nodes: usize) -> (SampleSetting, Graph) {
+    let mut rng = Rng::new(seed);
+    let spec = Spectrum::with_gap(150, 4, 0.6);
+    let ds = SyntheticDataset::full(&spec, 100, nodes, &mut rng);
+    let s = SampleSetting::from_parts(&ds.parts, 4, &mut rng);
+    let g = Graph::complete(nodes);
+    (s, g)
+}
+
+#[test]
+fn hierarchical_row_split_bitwise_matches_serial_and_flat() {
+    let (s, g) = tall_setting(6, 2);
+    let cfg = SdotConfig::new(Schedule::fixed(8), 6);
+
+    let mut serial = SyncNetwork::with_threads(g.clone(), 1);
+    let (q1, tr1) = run_sdot(&mut serial, &s, &cfg);
+
+    for &threads in &[2usize, 4, 9] {
+        // Node-only chunking (the pre-hierarchical behaviour)…
+        let mut flat = SyncNetwork::with_threads_split(g.clone(), threads, false);
+        let (qf, trf) = run_sdot(&mut flat, &s, &cfg);
+        assert_bitwise_eq(&q1, &qf);
+        // …and the full hierarchical node × row dispatch.
+        let mut hier = SyncNetwork::with_threads_split(g.clone(), threads, true);
+        let (qh, trh) = run_sdot(&mut hier, &s, &cfg);
+        assert_bitwise_eq(&q1, &qh);
+        assert_eq!(tr1.records.len(), trf.records.len());
+        assert_eq!(tr1.records.len(), trh.records.len());
+        for (a, (b, c)) in tr1
+            .records
+            .iter()
+            .zip(trf.records.iter().zip(trh.records.iter()))
+        {
+            assert_eq!(a.error.to_bits(), b.error.to_bits());
+            assert_eq!(a.error.to_bits(), c.error.to_bits());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The determinism test matrix (threads × trial-parallel).
+// ---------------------------------------------------------------------
+
+fn matrix_ctx(threads: usize, trial_parallel: bool) -> ExpCtx {
+    ExpCtx {
+        seed: 42,
+        scale: 0.04,
+        trials: 2,
+        threads,
+        trial_parallel,
+        mpi_clock: ClockMode::Virtual,
+        ..Default::default()
+    }
+}
+
+/// Byte-exact fingerprint of a runner's output tables — titles, headers
+/// and every cell (the P2P/BENCH counter columns included).
+fn fingerprint(tables: &[Table]) -> String {
+    let mut s = String::new();
+    for t in tables {
+        s.push_str(&t.title);
+        s.push('\n');
+        s.push_str(&t.header.join("\u{1f}"));
+        s.push('\n');
+        for row in &t.rows {
+            s.push_str(&row.join("\u{1f}"));
+            s.push('\n');
+        }
+    }
+    s
+}
+
+const MATRIX_THREADS: [usize; 4] = [1, 2, 4, 9];
+
+#[test]
+fn table1_cell_byte_identical_across_matrix() {
+    // One Table-I cell (N=20 Erdős–Rényi, Δ=0.7, SA-DOT 2t+1), averaged
+    // over 2 Monte-Carlo trials — the exact quantity behind the printed
+    // table strings, compared at full f64 precision.
+    let mut reference: Option<(u64, u64)> = None;
+    for &threads in &MATRIX_THREADS {
+        for trial_parallel in [false, true] {
+            let ctx = matrix_ctx(threads, trial_parallel);
+            let t_o = ctx.scaled(synth_tables::T_O);
+            let (p2p, err) = synth_tables::run_cell(
+                &ctx,
+                20,
+                0.25,
+                5,
+                0.7,
+                Schedule::adaptive(2.0, 1, 50),
+                t_o,
+                "erdos",
+            );
+            let bits = (p2p.to_bits(), err.to_bits());
+            match reference {
+                None => reference = Some(bits),
+                Some(want) => assert_eq!(
+                    bits, want,
+                    "threads={threads} trial_parallel={trial_parallel} diverged"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn table1_tables_byte_identical_across_matrix() {
+    let mut reference: Option<String> = None;
+    for &threads in &[1usize, 4] {
+        for trial_parallel in [false, true] {
+            let ctx = matrix_ctx(threads, trial_parallel);
+            let tables = synth_tables::table1(&ctx).unwrap();
+            let fp = fingerprint(&tables);
+            match &reference {
+                None => reference = Some(fp),
+                Some(want) => assert_eq!(
+                    &fp, want,
+                    "threads={threads} trial_parallel={trial_parallel} diverged"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn table5_virtual_cells_byte_identical_across_matrix() {
+    // Table V on the virtual clock: the straggler cascade, P2P and error
+    // columns must be byte-identical whether the cells run serially or
+    // fan out across the trial pool, at every thread count.
+    let mut reference: Option<String> = None;
+    for &threads in &MATRIX_THREADS {
+        for trial_parallel in [false, true] {
+            let ctx = matrix_ctx(threads, trial_parallel);
+            let tables = straggler::table5(&ctx).unwrap();
+            let fp = fingerprint(&tables);
+            match &reference {
+                None => reference = Some(fp),
+                Some(want) => assert_eq!(
+                    &fp, want,
+                    "threads={threads} trial_parallel={trial_parallel} diverged"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn two_level_dispatch_panic_reraises_without_deadlock() {
+    // A panic inside a row chunk of a two-level dispatch must surface to
+    // the caller (no hang, no lost worker), and the pool must stay
+    // usable afterwards — the failure mode that would otherwise wedge a
+    // whole experiment sweep.
+    use dpsa::runtime::pool::NodePool;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    let pool = NodePool::new(4);
+    let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run_chunks2(2, &|_| 512, &|i, lo, _hi| {
+            if i == 1 && lo > 0 {
+                panic!("injected row-chunk failure");
+            }
+        });
+    }));
+    assert!(boom.is_err(), "panic must re-raise");
+    let covered = AtomicUsize::new(0);
+    pool.run_chunks2(3, &|_| 256, &|_i, lo, hi| {
+        covered.fetch_add(hi - lo, Ordering::Relaxed);
+    });
+    assert_eq!(covered.load(Ordering::Relaxed), 3 * 256);
 }

@@ -196,6 +196,192 @@ fn prop_mixing_time_monotone_under_edge_addition() {
     });
 }
 
+// ---------------------------------------------------------------------
+// Seeded randomized shape sweep over the `*_into` linalg kernels.
+//
+// Shapes are drawn from {1..17, 63, 64, 65, 100}: 1–17 covers every
+// `MR = 8` / `NR = 4` micro-kernel edge tail and the regime thresholds
+// (skinny n ≤ 32, blocked k ≥ 8 / m ≥ 8), while 63/64/65/100 straddle
+// the MC = 64 m-block boundary and run multi-tile panels. For each
+// shape:
+//   * the `*_into` kernel must equal its allocating wrapper **bitwise**
+//     (one arithmetic per operation — the zero-allocation contract);
+//   * any row split must reassemble to the full kernel **bitwise** (the
+//     within-node parallelism contract, including the 8×4 edge tails);
+//   * the kernel must match a naive triple-loop reference to 1e-12
+//     relative — the optimized kernels reorder the k-summation
+//     (4-accumulator dots, KC blocking), so bitwise equality against
+//     the naive loop is not the contract; bitwise invariance across
+//     kernel paths plus tolerance against the reference is.
+// ---------------------------------------------------------------------
+
+const SWEEP_DIMS: &[usize] = &[
+    1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 63, 64, 65, 100,
+];
+
+fn sweep_dim(rng: &mut Rng) -> usize {
+    SWEEP_DIMS[rng.next_below(SWEEP_DIMS.len())]
+}
+
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0;
+            for p in 0..k {
+                s += a.get(i, p) * b.get(p, j);
+            }
+            out.set(i, j, s);
+        }
+    }
+    out
+}
+
+fn rel_close(got: &Mat, want: &Mat, what: &str) -> Result<(), String> {
+    close(got.dist_fro(want), 0.0, 1e-12 * want.fro_norm().max(1.0), what)
+}
+
+#[test]
+fn prop_matmul_kernels_shape_sweep() {
+    check("matmul-shapes", 31, 120, |rng| {
+        let (m, k, n) = (sweep_dim(rng), sweep_dim(rng), sweep_dim(rng));
+        let a = Mat::gauss(m, k, rng);
+        let b = Mat::gauss(k, n, rng);
+        let reference = naive_matmul(&a, &b);
+        // Allocating wrapper vs in-place kernel: bitwise.
+        let full = a.matmul(&b);
+        let mut into = Mat::zeros(1, 1);
+        a.matmul_into(&b, &mut into);
+        ensure(into.data == full.data, "matmul_into == matmul bitwise")?;
+        rel_close(&full, &reference, &format!("{m}x{k}x{n} vs naive"))?;
+        // Random row split reassembles bitwise (covers 8×4 edge tails
+        // at every offset).
+        let split = rng.next_below(m + 1);
+        let mut parts = vec![0.0; m * n];
+        a.matmul_rows_into(&b, 0, split, &mut parts[..split * n]);
+        a.matmul_rows_into(&b, split, m, &mut parts[split * n..]);
+        ensure(parts == full.data, &format!("{m}x{k}x{n} row split at {split}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_t_matmul_kernels_shape_sweep() {
+    check("t-matmul-shapes", 32, 80, |rng| {
+        let (k, m, n) = (sweep_dim(rng), sweep_dim(rng), sweep_dim(rng));
+        let a = Mat::gauss(k, m, rng); // out = aᵀ b is m×n
+        let b = Mat::gauss(k, n, rng);
+        let reference = naive_matmul(&a.transpose(), &b);
+        let full = a.t_matmul(&b);
+        let mut into = Mat::zeros(0, 0);
+        a.t_matmul_into(&b, &mut into);
+        ensure(into.data == full.data, "t_matmul_into == t_matmul bitwise")?;
+        rel_close(&full, &reference, &format!("t {k}x{m}x{n} vs naive"))?;
+        let split = rng.next_below(m + 1);
+        let mut parts = vec![0.0; m * n];
+        a.t_matmul_rows_into(&b, 0, split, &mut parts[..split * n]);
+        a.t_matmul_rows_into(&b, split, m, &mut parts[split * n..]);
+        ensure(parts == full.data, &format!("t row split at {split}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_syrk_and_matmul_t_shape_sweep() {
+    check("syrk-shapes", 33, 80, |rng| {
+        let (d, s) = (sweep_dim(rng), sweep_dim(rng));
+        let x = Mat::gauss(d, s, rng);
+        let scale = 1.0 / s as f64;
+        let reference = naive_matmul(&x, &x.transpose()).scale(scale);
+        let full = x.syrk(scale);
+        let mut into = Mat::zeros(2, 3);
+        x.syrk_into(scale, &mut into);
+        ensure(into.data == full.data, "syrk_into == syrk bitwise")?;
+        rel_close(&full, &reference, &format!("syrk {d}x{s} vs naive"))?;
+        let split = rng.next_below(d + 1);
+        let mut parts = vec![0.0; d * d];
+        x.syrk_rows_into(scale, 0, split, &mut parts[..split * d]);
+        x.syrk_rows_into(scale, split, d, &mut parts[split * d..]);
+        ensure(parts == full.data, &format!("syrk row split at {split}"))?;
+        // matmul_t against the same reference shape family.
+        let y = Mat::gauss(sweep_dim(rng), s, rng);
+        let ref_t = naive_matmul(&x, &y.transpose());
+        let full_t = x.matmul_t(&y);
+        let mut into_t = Mat::zeros(0, 0);
+        x.matmul_t_into(&y, &mut into_t);
+        ensure(into_t.data == full_t.data, "matmul_t_into == matmul_t bitwise")?;
+        rel_close(&full_t, &ref_t, "matmul_t vs naive")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cov_apply_phases_shape_sweep() {
+    use dpsa::linalg::CovOp;
+    check("cov-apply-phases", 34, 60, |rng| {
+        let d = sweep_dim(rng);
+        let s = sweep_dim(rng);
+        let r = 1 + rng.next_below(d.min(7));
+        let x = Mat::gauss(d, s, rng);
+        let q = Mat::gauss(d, r, rng);
+        for op in [
+            CovOp::Samples { x: x.clone(), scale: 1.0 / s as f64 },
+            CovOp::dense_from_samples(&x),
+        ] {
+            let mut want = Mat::zeros(0, 0);
+            let mut want_tmp = Mat::zeros(0, 0);
+            op.apply_into(&q, &mut want, &mut want_tmp);
+            // Reference: dense covariance times q, naive.
+            let reference = naive_matmul(&op.to_dense(), &q);
+            rel_close(&want, &reference, &format!("cov d={d} s={s} r={r}"))?;
+            // Row-phased reassembly is bitwise.
+            let tn = op.tmp_rows();
+            let mut tmp = Mat::zeros(tn, r);
+            if tn > 0 {
+                let cut = rng.next_below(tn + 1);
+                op.apply_tmp_rows(&q, 0, cut, &mut tmp.data[..cut * r]);
+                op.apply_tmp_rows(&q, cut, tn, &mut tmp.data[cut * r..]);
+                ensure(tmp.data == want_tmp.data, "phase A reassembles bitwise")?;
+            }
+            let cut = rng.next_below(d + 1);
+            let mut out = Mat::zeros(d, r);
+            op.apply_out_rows(&q, &tmp, 0, cut, &mut out.data[..cut * r]);
+            op.apply_out_rows(&q, &tmp, cut, d, &mut out.data[cut * r..]);
+            ensure(out.data == want.data, "phase B reassembles bitwise")?;
+        }
+        Ok(())
+    });
+}
+
+/// The row-split paths driven through the real pool (not just manual
+/// reassembly): a 4-thread two-level dispatch computing `a · b` row
+/// chunks into a shared output must equal the serial kernel bitwise.
+#[test]
+fn prop_pooled_row_split_matches_serial_bitwise() {
+    use dpsa::runtime::pool::NodePool;
+    use dpsa::runtime::MatRowsScratch;
+    check("pooled-row-split", 35, 30, |rng| {
+        let (m, k, n) = (64 + rng.next_below(80), sweep_dim(rng), sweep_dim(rng));
+        let a = Mat::gauss(m, k, rng);
+        let b = Mat::gauss(k, n, rng);
+        let want = a.matmul(&b);
+        let pool = NodePool::new(4);
+        let mut out = vec![Mat::zeros(m, n)];
+        let mut scratch = MatRowsScratch::new();
+        {
+            let d = scratch.fill(&mut out);
+            pool.run_chunks2(1, &|_| m, &|i, lo, hi| {
+                // SAFETY: each task owns rows [lo, hi) of the single mat.
+                let rows = unsafe { d.rows_mut(i, lo, hi) };
+                a.matmul_rows_into(&b, lo, hi, rows);
+            });
+        }
+        ensure(out[0].data == want.data, "pooled split == serial")?;
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_subspace_error_metric_axioms() {
     use dpsa::metrics::subspace::subspace_error;
