@@ -50,6 +50,7 @@ fn main() -> anyhow::Result<()> {
     println!("network: Erdős–Rényi p=0.25, avg degree {:.2}", g.avg_degree());
 
     let xla;
+    let native = NativeBackend::default();
     let backend: &dyn Backend = {
         let dir = XlaBackend::default_dir();
         if XlaBackend::available(&dir) {
@@ -58,7 +59,7 @@ fn main() -> anyhow::Result<()> {
             &xla
         } else {
             println!("backend: native");
-            &NativeBackend
+            &native
         }
     };
 

@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Backend: XLA artifacts if built, else native Rust.
     let xla;
+    let native = NativeBackend::default();
     let backend: &dyn Backend = {
         let dir = XlaBackend::default_dir();
         if XlaBackend::available(&dir) {
@@ -39,7 +40,7 @@ fn main() -> anyhow::Result<()> {
             &xla
         } else {
             println!("backend: native (run `make artifacts` for the XLA path)");
-            &NativeBackend
+            &native
         }
     };
 

@@ -35,7 +35,7 @@ fn main() {
         let x = Mat::gauss(d, n_samp, &mut rng);
         let cov_dense = CovOp::dense_from_samples(&x);
         let q = Mat::random_orthonormal(d, r, &mut rng);
-        let native = NativeBackend;
+        let native = NativeBackend::default();
         let t = time_it(3, 21, || {
             std::hint::black_box(native.cov_apply(&cov_dense, &q));
         });
@@ -120,7 +120,7 @@ fn main() {
         // the subspace metric and pushes a trace record. The metric
         // workspace + pre-reserved trace keep even this allocation-free.
         let cfg = SdotConfig::new(Schedule::fixed(50), 1_000);
-        let backend = NativeBackend;
+        let backend = NativeBackend::default();
         let mut run = SdotRun::new(&mut net, &setting, &cfg, &backend);
         for _ in 0..3 {
             run.step(); // warm-up: shapes the persistent workspace

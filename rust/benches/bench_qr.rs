@@ -1,0 +1,114 @@
+//! QR-policy microbenchmarks — the Alg. 1 step-12 ladder.
+//!
+//! Times the three `QrPolicy` kernels (scalar Householder, blocked
+//! compact-WY, TSQR) at the paper's real-data shapes d ∈ {784, 2914}
+//! with r ∈ {5, 40}, plus the pooled (node × leaf) TSQR fan-out in the
+//! N < threads regime ROADMAP targeted, and proves the zero-allocation
+//! steady state of every policy with a counting global allocator.
+//!
+//! Results land in `BENCH_qr.json` (override with `BENCH_JSON_OUT`) —
+//! uploaded by CI next to the other perf ledgers. Derived
+//! `qr_*_speedup_*` keys express blocked / pooled-TSQR wins over the
+//! scalar baseline at the same shape.
+//!
+//! Run: `cargo bench --bench bench_qr`
+
+use dpsa::linalg::qr::{orthonormalize_policy_into, tsqr_leaves, QrPolicy, QrScratch};
+use dpsa::linalg::Mat;
+use dpsa::runtime::qr_exec::orthonormalize_nodes;
+use dpsa::runtime::{node_scratch, MatRowsScratch, NativeBackend, NodePool, QrFanScratch};
+use dpsa::util::bench::{alloc_snapshot, time_it, BenchReport, CountingAlloc};
+use dpsa::util::rng::Rng;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn main() {
+    println!("== QR policy microbenchmarks (Alg. 1 step 12) ==\n");
+    let mut rng = Rng::new(42);
+    let mut report = BenchReport::new();
+
+    for &(d, r) in &[(784usize, 5usize), (784, 40), (2914, 5), (2914, 40)] {
+        let v = Mat::gauss(d, r, &mut rng);
+        let mut householder_ns = 0.0;
+        for policy in QrPolicy::ALL {
+            let mut q = Mat::zeros(0, 0);
+            let mut ws = QrScratch::new();
+            let t = time_it(3, 15, || {
+                orthonormalize_policy_into(&v, &mut q, &mut ws, policy);
+                std::hint::black_box(&q);
+            });
+            let ns = t.median.as_nanos() as f64;
+            if policy == QrPolicy::Householder {
+                householder_ns = ns;
+                println!("qr {:<12} d={d:<4} r={r:<2}: {t}", policy.name());
+            } else {
+                println!(
+                    "qr {:<12} d={d:<4} r={r:<2}: {t}  ({:.2}x vs householder)",
+                    policy.name(),
+                    householder_ns / ns.max(1.0)
+                );
+                report.push(
+                    &format!("qr_{}_speedup_d{d}_r{r}", policy.name()),
+                    householder_ns / ns.max(1.0),
+                );
+            }
+            report.push(&format!("qr_{}_d{d}_r{r}_ns", policy.name()), ns);
+        }
+
+        // Pooled TSQR fan-out: N = 2 nodes × leaf tasks on 4 threads —
+        // the d-large / N-small regime where per-node QR was the last
+        // serial stage. Reported per QR (the dispatch covers 2).
+        let leaves = tsqr_leaves(d, r);
+        let pool = NodePool::new(4);
+        let z: Vec<Mat> = (0..2).map(|_| Mat::gauss(d, r, &mut rng)).collect();
+        let mut q: Vec<Mat> = (0..2).map(|_| Mat::zeros(0, 0)).collect();
+        let mut scratch = node_scratch(2);
+        let mut fan = QrFanScratch::new();
+        let mut views = MatRowsScratch::new();
+        let backend = NativeBackend::with_policy(QrPolicy::Tsqr);
+        let t = time_it(3, 15, || {
+            orthonormalize_nodes(&pool, &backend, &z, &mut q, &mut scratch, &mut fan, &mut views);
+            std::hint::black_box(&q);
+        });
+        let per_qr_ns = t.median.as_nanos() as f64 / 2.0;
+        println!(
+            "qr tsqr-pool4    d={d:<4} r={r:<2}: {t}  (2 QRs, {leaves} leaves each; \
+             {:.2}x vs householder per QR)\n",
+            householder_ns / per_qr_ns.max(1.0)
+        );
+        report.push(&format!("qr_tsqr_pool4_d{d}_r{r}_ns"), per_qr_ns);
+        report.push(
+            &format!("qr_tsqr_pool4_speedup_d{d}_r{r}"),
+            householder_ns / per_qr_ns.max(1.0),
+        );
+    }
+
+    // --- zero-allocation proof: steady-state QR at every policy ---------
+    let mut total_allocs = 0u64;
+    for &(d, r) in &[(2914usize, 5usize), (2914, 40)] {
+        let v = Mat::gauss(d, r, &mut rng);
+        for policy in QrPolicy::ALL {
+            let mut q = Mat::zeros(0, 0);
+            let mut ws = QrScratch::new();
+            orthonormalize_policy_into(&v, &mut q, &mut ws, policy);
+            orthonormalize_policy_into(&v, &mut q, &mut ws, policy);
+            let (a0, _) = alloc_snapshot();
+            for _ in 0..5 {
+                orthonormalize_policy_into(&v, &mut q, &mut ws, policy);
+            }
+            let (a1, _) = alloc_snapshot();
+            let allocs = a1 - a0;
+            total_allocs += allocs;
+            println!(
+                "steady-state {} d={d} r={r}: {allocs} allocations over 5 QRs",
+                policy.name()
+            );
+            assert_eq!(allocs, 0, "{policy:?} allocated in steady state");
+        }
+    }
+    println!("  (§Perf target: 0 — every buffer reused after warm-up)");
+    report.push("qr_steady_state_allocs", total_allocs as f64);
+
+    report.save("BENCH_qr.json");
+}

@@ -170,6 +170,9 @@ pub fn run_bdot(setting: &BlockSetting, cfg: &BdotConfig) -> BdotRun {
 
     let mut trace = RunTrace::new("B-DOT");
     let mut total = 0usize;
+    // Metric-side orthonormalization of the stacked estimate: `--qr`
+    // kernel, snapshotted once per run.
+    let qr_policy = crate::linalg::qr::default_qr_policy();
 
     // Persistent workspace, shaped once and reused every outer iteration.
     let mut u: Vec<Vec<Mat>> = (0..cols)
@@ -245,7 +248,7 @@ pub fn run_bdot(setting: &BlockSetting, cfg: &BdotConfig) -> BdotRun {
         if t % cfg.record_every == 0 || t == cfg.t_o {
             let blocks: Vec<&Mat> = (0..rows).map(|i| &q[i][0]).collect();
             let stacked = Mat::vstack(&blocks);
-            let qhat = crate::linalg::qr::orthonormalize(&stacked);
+            let qhat = crate::linalg::qr::orthonormalize_policy(&stacked, qr_policy);
             let msgs: u64 = col_nets.iter().map(|n| n.counters.total()).sum::<u64>()
                 + row_nets.iter().map(|n| n.counters.total()).sum::<u64>()
                 + grid_net.counters.total();

@@ -16,7 +16,7 @@
 
 use super::common::SampleSetting;
 use crate::consensus::mixing::slem;
-use crate::linalg::qr::householder_qr_into;
+use crate::linalg::qr::{self, qr_policy_into};
 use crate::linalg::svd::sign_adjust_into;
 use crate::linalg::Mat;
 use crate::metrics::subspace::average_error;
@@ -110,6 +110,8 @@ pub fn run_deepca(
 
     let mut trace = RunTrace::new("DeEPCA");
     let mut total = cfg.mix_rounds;
+    // Step-12 kernel: snapshot the process-wide `--qr` policy once.
+    let qr_policy = qr::default_qr_policy();
 
     for t in 1..=cfg.t_o {
         // Orthonormalize the tracker with sign consistency, node-parallel.
@@ -121,7 +123,7 @@ pub fn run_deepca(
                 for i in lo..hi {
                     // SAFETY: index i belongs to exactly one chunk.
                     let (qi, sc) = unsafe { (qs.get_mut(i), scr.get_mut(i)) };
-                    householder_qr_into(&sref[i], &mut sc.t0, None, &mut sc.qr);
+                    qr_policy_into(&sref[i], &mut sc.t0, None, &mut sc.qr, qr_policy);
                     sign_adjust_into(&sc.t0, qi, &mut sc.t1, &mut sc.t2);
                     std::mem::swap(qi, &mut sc.t1);
                 }

@@ -41,9 +41,11 @@ pub fn run_dpgd(
     let mut q: Vec<Mat> = vec![setting.q_init.clone(); n];
     let mut trace = RunTrace::new("DPGD");
 
-    // Persistent per-node buffers (gradients + QR scratch).
+    // Persistent per-node buffers (gradients + QR scratch); the Stiefel
+    // projection uses the process-wide `--qr` kernel, snapshotted once.
     let mut grads = vec![Mat::zeros(0, 0); n];
     let mut scratch: Vec<NodeScratch> = node_scratch(n);
+    let qr_policy = crate::linalg::qr::default_qr_policy();
 
     for t in 1..=cfg.iters {
         // ∇f_i(Q_i) = 2 M_i Q_i, node-parallel.
@@ -73,7 +75,9 @@ pub fn run_dpgd(
                     // SAFETY: index i belongs to exactly one chunk.
                     let (qi, s) = unsafe { (qs.get_mut(i), scr.get_mut(i)) };
                     qi.axpy(alpha, &gref[i]);
-                    crate::linalg::qr::orthonormalize_into(qi, &mut s.t1, &mut s.qr);
+                    crate::linalg::qr::orthonormalize_policy_into(
+                        qi, &mut s.t1, &mut s.qr, qr_policy,
+                    );
                     std::mem::swap(qi, &mut s.t1);
                 }
             });

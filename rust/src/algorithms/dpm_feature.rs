@@ -37,6 +37,9 @@ pub fn run_dpm_feature(
     let n = net.n();
     let r = setting.r;
     let mut trace = RunTrace::new("d-PM");
+    // Metric-side orthonormalization of the stacked estimate: `--qr`
+    // kernel, snapshotted once per run.
+    let qr_policy = crate::linalg::qr::default_qr_policy();
     // Per-node current estimate blocks (d_i × r), start from the init.
     let mut q: Vec<Mat> = (0..n).map(|i| setting.slice(&setting.q_init, i)).collect();
     let mut lambdas: Vec<f64> = Vec::new(); // agreed deflation weights
@@ -111,7 +114,7 @@ pub fn run_dpm_feature(
             if outer % cfg.record_every == 0 {
                 let refs: Vec<&Mat> = q.iter().collect();
                 let stacked = Mat::vstack(&refs);
-                let qhat = crate::linalg::qr::orthonormalize(&stacked);
+                let qhat = crate::linalg::qr::orthonormalize_policy(&stacked, qr_policy);
                 trace.push(IterRecord {
                     outer,
                     total_iters: total,

@@ -185,6 +185,9 @@ pub fn run_fdot(
     let mut v = vec![Mat::zeros(0, 0); n];
     let mut grams = vec![Mat::zeros(0, 0); n];
     let mut chol = vec![Mat::zeros(0, 0); n];
+    // Metric-side orthonormalization of the stacked estimate: `--qr`
+    // kernel, snapshotted once per run.
+    let qr_policy = crate::linalg::qr::default_qr_policy();
 
     for t in 1..=cfg.t_o {
         // Step 5: Z_i = X_iᵀ Q_i  (n×r), node-parallel.
@@ -223,7 +226,7 @@ pub fn run_fdot(
             let stacked = Mat::vstack(&refs);
             // Orthonormality is only approximate under inexact consensus;
             // orthonormalize the stacked copy for a fair angle metric.
-            let qhat = crate::linalg::qr::orthonormalize(&stacked);
+            let qhat = crate::linalg::qr::orthonormalize_policy(&stacked, qr_policy);
             trace.push(IterRecord {
                 outer: t,
                 total_iters: total,

@@ -7,7 +7,7 @@
 //! them "total iterations" equals the outer count (no consensus inner loop).
 
 use super::common::SampleSetting;
-use crate::linalg::qr::orthonormalize;
+use crate::linalg::qr;
 use crate::linalg::Mat;
 use crate::metrics::subspace::subspace_error;
 use crate::metrics::trace::{IterRecord, RunTrace};
@@ -23,10 +23,11 @@ pub fn run_oi(setting: &SampleSetting, t_o: usize) -> (Mat, RunTrace) {
     let mut tmp = Mat::zeros(0, 0);
     let mut tmp2 = Mat::zeros(0, 0);
     let mut qnext = Mat::zeros(0, 0);
-    let mut ws = crate::linalg::qr::QrScratch::new();
+    let mut ws = qr::QrScratch::new();
+    let qr_policy = qr::default_qr_policy();
     for t in 1..=t_o {
         setting.global_apply_into(&q, &mut v, &mut tmp, &mut tmp2);
-        crate::linalg::qr::orthonormalize_into(&v, &mut qnext, &mut ws);
+        qr::orthonormalize_policy_into(&v, &mut qnext, &mut ws, qr_policy);
         std::mem::swap(&mut q, &mut qnext);
         trace.push(IterRecord {
             outer: t,
@@ -50,6 +51,10 @@ pub fn run_seqpm(setting: &SampleSetting, iters_per_vec: usize) -> (Mat, RunTrac
     let mut lambdas: Vec<f64> = Vec::with_capacity(r);
     let mut done: Vec<Vec<f64>> = Vec::with_capacity(r);
     let mut total = 0usize;
+    // Metric-side orthonormalization: `--qr` kernel, reused workspace.
+    let qr_policy = qr::default_qr_policy();
+    let mut qws = qr::QrScratch::new();
+    let mut qhat = Mat::zeros(0, 0);
 
     for j in 0..r {
         let mut v: Vec<f64> = q.col(j);
@@ -68,10 +73,11 @@ pub fn run_seqpm(setting: &SampleSetting, iters_per_vec: usize) -> (Mat, RunTrac
             v = w;
             total += 1;
             q.set_col(j, &v);
+            qr::orthonormalize_policy_into(&q, &mut qhat, &mut qws, qr_policy);
             trace.push(IterRecord {
                 outer: total,
                 total_iters: total,
-                error: subspace_error(&setting.truth, &orthonormalize(&q)),
+                error: subspace_error(&setting.truth, &qhat),
                 p2p_avg: 0.0,
             });
         }
@@ -81,7 +87,10 @@ pub fn run_seqpm(setting: &SampleSetting, iters_per_vec: usize) -> (Mat, RunTrac
         lambdas.push(dotv(&v, &mv));
         done.push(v);
     }
-    (orthonormalize(&q), trace)
+    // Reuse the warm metric workspace for the final estimate (also
+    // covers iters_per_vec == 0, where the loop never filled qhat).
+    qr::orthonormalize_policy_into(&q, &mut qhat, &mut qws, qr_policy);
+    (qhat, trace)
 }
 
 fn dotv(a: &[f64], b: &[f64]) -> f64 {

@@ -16,6 +16,7 @@ use crate::metrics::subspace::{average_error, average_error_ws, SubspaceWs};
 use crate::metrics::trace::{IterRecord, RunTrace};
 use crate::network::sim::SyncNetwork;
 use crate::runtime::pool::DisjointSlice;
+use crate::runtime::qr_exec::{orthonormalize_nodes, QrFanScratch};
 use crate::runtime::workspace::{node_scratch, MatRowsScratch, NodeScratch};
 use crate::runtime::Backend;
 
@@ -48,9 +49,15 @@ impl SdotConfig {
 /// `record_every = 1` (verified by `bench_hotpath`'s counting
 /// allocator). Per-node work (step 5's `M_i Q`) fans out across the
 /// network's pool **hierarchically** — node chunks first, then rows of
-/// each node's product when threads are left over — and step 12's local
-/// QR stays node-parallel (Householder is sequential per node); results
-/// are bitwise deterministic for any thread count.
+/// each node's product when threads are left over. Step 12's local QR is
+/// policy-dispatched through the backend's [`QrPolicy`]: Householder and
+/// blocked run node-parallel (sequential per node), while the TSQR
+/// policy fans each node's fixed row-block leaves across the pool too
+/// (`runtime::qr_exec`), so even N < threads keeps every core busy.
+/// Results are bitwise deterministic for any thread count under every
+/// policy.
+///
+/// [`QrPolicy`]: crate::linalg::qr::QrPolicy
 pub struct SdotRun<'a> {
     net: &'a mut SyncNetwork,
     setting: &'a SampleSetting,
@@ -63,6 +70,8 @@ pub struct SdotRun<'a> {
     scratch: Vec<NodeScratch>,
     /// Raw-view table for the hierarchical dispatches (reused, no alloc).
     view_scratch: MatRowsScratch,
+    /// TSQR (node × leaf) fan-out workspace for step 12 (reused, no alloc).
+    qr_fan: QrFanScratch,
     metric_ws: SubspaceWs,
     trace: RunTrace,
     t: usize,
@@ -98,6 +107,7 @@ impl<'a> SdotRun<'a> {
             },
             scratch: node_scratch(n),
             view_scratch: MatRowsScratch::new(),
+            qr_fan: QrFanScratch::new(),
             metric_ws: SubspaceWs::new(),
             trace: RunTrace::with_capacity("S-DOT", records),
             t: 0,
@@ -169,20 +179,17 @@ impl<'a> SdotRun<'a> {
         let rounds = self.cfg.schedule.rounds_at(t);
         self.net.consensus_sum(&mut self.z, rounds);
         self.total_iters += rounds;
-        // Step 12: local QR, node-parallel.
-        {
-            let qs = DisjointSlice::new(self.q.as_mut_slice());
-            let scr = DisjointSlice::new(self.scratch.as_mut_slice());
-            let z = &self.z;
-            let backend = self.backend;
-            self.net.pool().run_chunks(n, &|lo, hi| {
-                for i in lo..hi {
-                    // SAFETY: index i belongs to exactly one chunk.
-                    let (qi, si) = unsafe { (qs.get_mut(i), scr.get_mut(i)) };
-                    backend.orthonormalize_into(&z[i], qi, &mut si.qr);
-                }
-            });
-        }
+        // Step 12: local QR through the policy executor — node-parallel
+        // for Householder/blocked, (node × leaf) fan-out for TSQR.
+        orthonormalize_nodes(
+            self.net.pool(),
+            self.backend,
+            &self.z,
+            &mut self.q,
+            &mut self.scratch,
+            &mut self.qr_fan,
+            &mut self.view_scratch,
+        );
         if t % self.cfg.record_every == 0 || t == self.cfg.t_o {
             self.trace.push(IterRecord {
                 outer: t,
@@ -215,13 +222,14 @@ pub fn run_sdot_with_backend(
     run.finish()
 }
 
-/// S-DOT with the native backend (the common path for experiments).
+/// S-DOT with the native backend (the common path for experiments). The
+/// backend snapshots the process-wide `--qr` policy at this call.
 pub fn run_sdot(
     net: &mut SyncNetwork,
     setting: &SampleSetting,
     cfg: &SdotConfig,
 ) -> (Vec<Mat>, RunTrace) {
-    run_sdot_with_backend(net, setting, cfg, &crate::runtime::NativeBackend)
+    run_sdot_with_backend(net, setting, cfg, &crate::runtime::NativeBackend::default())
 }
 
 /// SA-DOT is S-DOT with an adaptive schedule; this wrapper labels the trace.

@@ -8,7 +8,7 @@
 //! consensus round (its messages are counted too).
 
 use super::common::SampleSetting;
-use crate::linalg::qr::orthonormalize;
+use crate::linalg::qr;
 use crate::linalg::Mat;
 use crate::metrics::subspace::average_error;
 use crate::metrics::trace::{IterRecord, RunTrace};
@@ -44,6 +44,8 @@ pub fn run_seqdistpm(
     let mut z: Vec<Mat> = vec![Mat::zeros(0, 0); n];
     let mut lam: Vec<Mat> = vec![Mat::zeros(1, 1); n];
     let mut tmp: Vec<Mat> = vec![Mat::zeros(0, 0); n];
+    // Metric/final orthonormalization: the `--qr` kernel, snapshotted.
+    let qr_policy = qr::default_qr_policy();
 
     for j in 0..r {
         // Current working vector at each node.
@@ -78,7 +80,8 @@ pub fn run_seqdistpm(
                 v[i].copy_from(&z[i]);
             }
             if outer % cfg.record_every == 0 || (j == r - 1 && it == cfg.iters_per_vec - 1) {
-                let estimates: Vec<Mat> = q.iter().map(orthonormalize).collect();
+                let estimates: Vec<Mat> =
+                    q.iter().map(|qi| qr::orthonormalize_policy(qi, qr_policy)).collect();
                 trace.push(IterRecord {
                     outer,
                     total_iters: total,
@@ -99,7 +102,7 @@ pub fn run_seqdistpm(
             lambdas[i].push(lam[i].get(0, 0));
         }
     }
-    let qfinal: Vec<Mat> = q.iter().map(orthonormalize).collect();
+    let qfinal: Vec<Mat> = q.iter().map(|qi| qr::orthonormalize_policy(qi, qr_policy)).collect();
     (qfinal, trace)
 }
 

@@ -1,6 +1,7 @@
 //! Experiment configuration: JSON file + CLI flag merging.
 
 use crate::experiments::ExpCtx;
+use crate::linalg::qr::QrPolicy;
 use crate::network::mpi::ClockMode;
 use crate::util::cli::Args;
 use crate::util::json::Json;
@@ -9,12 +10,13 @@ use std::path::{Path, PathBuf};
 
 /// Load an [`ExpCtx`] from an optional JSON config file, then apply CLI
 /// overrides (`--seed`, `--scale`, `--trials`, `--out`, `--threads`,
-/// `--trial-parallel`, `--mpi-clock`).
+/// `--trial-parallel`, `--mpi-clock`, `--qr`).
 ///
 /// Config file format:
 /// ```json
 /// {"seed": 42, "scale": 1.0, "trials": 3, "out_dir": "results",
-///  "threads": 1, "trial_parallel": true, "mpi_clock": "real"}
+///  "threads": 1, "trial_parallel": true, "mpi_clock": "real",
+///  "qr": "householder"}
 /// ```
 ///
 /// `threads` is **one knob for two parallelism levels** (see
@@ -39,6 +41,12 @@ use std::path::{Path, PathBuf};
 /// and deterministic — the mode tests use; also the only mode whose
 /// Table-V cells may run trial-parallel, since logical time cannot see
 /// CPU contention).
+///
+/// `qr` selects the step-12 orthonormalization kernel
+/// (`householder`/`blocked`/`tsqr` — [`QrPolicy`]). For a fixed policy
+/// every result is still byte-identical at every `--threads`: the TSQR
+/// leaf partition and reduction tree are pure functions of each matrix's
+/// shape, never of the schedule.
 pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     let mut ctx = ExpCtx::default();
     if let Some(path) = args.get("config") {
@@ -66,6 +74,9 @@ pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     }
     if let Some(v) = args.get("mpi-clock") {
         ctx.mpi_clock = parse_clock(v)?;
+    }
+    if let Some(v) = args.get("qr") {
+        ctx.qr = parse_qr(v)?;
     }
     if ctx.scale <= 0.0 || ctx.scale > 10.0 {
         return Err(anyhow!("scale must be in (0, 10]"));
@@ -108,6 +119,9 @@ pub fn from_file(path: &Path) -> Result<ExpCtx> {
     if let Some(v) = json.get("mpi_clock").and_then(|v| v.as_str()) {
         ctx.mpi_clock = parse_clock(v)?;
     }
+    if let Some(v) = json.get("qr").and_then(|v| v.as_str()) {
+        ctx.qr = parse_qr(v)?;
+    }
     Ok(ctx)
 }
 
@@ -125,6 +139,11 @@ fn parse_clock(v: &str) -> Result<ClockMode> {
         "virtual" => Ok(ClockMode::Virtual),
         other => Err(anyhow!("mpi-clock must be 'real' or 'virtual', got '{other}'")),
     }
+}
+
+fn parse_qr(v: &str) -> Result<QrPolicy> {
+    QrPolicy::parse(v)
+        .ok_or_else(|| anyhow!("qr must be 'householder', 'blocked' or 'tsqr', got '{v}'"))
 }
 
 #[cfg(test)]
@@ -217,6 +236,34 @@ mod tests {
         let ctx = load_ctx(&args(&["--config", p.to_str().unwrap()])).unwrap();
         assert!(!ctx.trial_parallel);
         assert_eq!(ctx.threads, 4);
+    }
+
+    #[test]
+    fn qr_flag_parses_and_rejects() {
+        use crate::linalg::qr::QrPolicy;
+        let ctx = load_ctx(&args(&[])).unwrap();
+        assert_eq!(ctx.qr, QrPolicy::Householder, "householder is the default");
+        for p in QrPolicy::ALL {
+            let ctx = load_ctx(&args(&["--qr", p.name()])).unwrap();
+            assert_eq!(ctx.qr, p);
+        }
+        assert!(load_ctx(&args(&["--qr", "cholesky"])).is_err());
+    }
+
+    #[test]
+    fn qr_from_file_then_cli_priority() {
+        use crate::linalg::qr::QrPolicy;
+        let dir = std::env::temp_dir().join("dpsa_cfg_qr_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"qr": "tsqr"}"#).unwrap();
+        let ctx = load_ctx(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert_eq!(ctx.qr, QrPolicy::Tsqr);
+        let ctx =
+            load_ctx(&args(&["--config", p.to_str().unwrap(), "--qr", "blocked"])).unwrap();
+        assert_eq!(ctx.qr, QrPolicy::Blocked, "CLI wins over the file");
+        std::fs::write(&p, r#"{"qr": "qr-ish"}"#).unwrap();
+        assert!(load_ctx(&args(&["--config", p.to_str().unwrap()])).is_err());
     }
 
     #[test]

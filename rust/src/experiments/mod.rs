@@ -27,6 +27,7 @@ pub mod straggler;
 pub mod synth_tables;
 pub mod topology_tables;
 
+use crate::linalg::qr::QrPolicy;
 use crate::network::mpi::ClockMode;
 use crate::util::table::Table;
 use anyhow::{bail, Result};
@@ -72,6 +73,13 @@ pub struct ExpCtx {
     /// sleeps stragglers for wall-clock fidelity, `Virtual` computes the
     /// exact cascade on logical clocks (instant, deterministic).
     pub mpi_clock: ClockMode,
+    /// Step-12 orthonormalization kernel (`--qr` / config `"qr"`).
+    /// Entry points apply it process-wide via
+    /// `linalg::qr::set_default_qr_policy`; runs snapshot it when they
+    /// start. Results for a fixed policy are bitwise identical at every
+    /// `--threads` (the TSQR reduction tree is a pure function of each
+    /// matrix's shape).
+    pub qr: QrPolicy,
 }
 
 impl Default for ExpCtx {
@@ -84,6 +92,7 @@ impl Default for ExpCtx {
             threads: 1,
             trial_parallel: true,
             mpi_clock: ClockMode::Real,
+            qr: QrPolicy::Householder,
         }
     }
 }

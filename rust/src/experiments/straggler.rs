@@ -52,6 +52,7 @@ pub fn run_sdot_mpi(
     let wm = Arc::new(local_degree_weights(graph));
     let setting = Arc::new(setting.clone());
     let truth = setting.truth.clone();
+    let qr_policy = crate::linalg::qr::default_qr_policy();
 
     let run = run_spmd(graph, cfg, move |ctx| {
         let i = ctx.rank;
@@ -70,7 +71,7 @@ pub fn run_sdot_mpi(
             // Rescale to a sum estimate and orthonormalize.
             let v = wm.pow_e1(rounds);
             z.scale_inplace(1.0 / v[i]);
-            q = crate::linalg::qr::orthonormalize(&z);
+            q = crate::linalg::qr::orthonormalize_policy(&z, qr_policy);
         }
         q
     });
@@ -104,6 +105,7 @@ pub fn run_sdot_mpi_async(
     let wm = Arc::new(local_degree_weights(graph));
     let setting = Arc::new(setting.clone());
     let truth = setting.truth.clone();
+    let qr_policy = crate::linalg::qr::default_qr_policy();
 
     let run = run_spmd(graph, cfg, move |ctx| {
         let i = ctx.rank;
@@ -196,7 +198,7 @@ pub fn run_sdot_mpi_async(
             // No [W^T e_1] rescale: a positive scalar does not change the
             // QR Q-factor, and the synchronous rescale is biased under
             // asynchronous progress anyway.
-            q = crate::linalg::qr::orthonormalize(&z);
+            q = crate::linalg::qr::orthonormalize_policy(&z, qr_policy);
         }
         q
     });

@@ -19,5 +19,5 @@ pub use chol::{cholesky, cholesky_into, solve_r_right_into};
 pub use covop::CovOp;
 pub use eig::{power_iteration, sym_eig};
 pub use mat::Mat;
-pub use qr::{householder_qr, mgs_qr, QrScratch};
+pub use qr::{householder_qr, mgs_qr, QrPolicy, QrScratch};
 pub use svd::{singular_values, svd_small};

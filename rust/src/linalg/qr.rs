@@ -1,22 +1,150 @@
-//! QR factorizations: Householder (thin) and Modified Gram–Schmidt.
+//! QR factorizations: Householder (thin), blocked compact-WY Householder,
+//! deterministic row-parallel TSQR, and Modified Gram–Schmidt.
 //!
 //! S-DOT/SA-DOT orthonormalize every outer iteration (Alg. 1 step 12);
-//! Householder is the numerically robust default. MGS mirrors the L2 JAX
-//! graph (`python/compile/model.py` uses MGS so the AOT artifact stays in
-//! pure HLO ops), so the runtime parity tests compare against `mgs_qr`.
+//! Householder is the numerically robust default. The step-12 kernel is
+//! selectable via [`QrPolicy`] (`--qr householder|blocked|tsqr`, config
+//! key `"qr"`, `BENCH_QR` env):
+//!
+//! * [`QrPolicy::Householder`] — the seed kernel: sequential
+//!   column-by-column reflections. Bitwise-stable reference; every
+//!   pre-existing ledger was recorded on it.
+//! * [`QrPolicy::Blocked`] — panel Householder in the compact-WY form
+//!   `Q = I − V T Vᵀ`: the panel is factored with the scalar loop, then
+//!   the trailing-matrix update and the thin-Q formation run as GEMMs
+//!   through the packed-panel micro-kernels (`linalg::gemm`). Falls back
+//!   to the scalar kernel for `n ≤` [`QR_PANEL`] columns (bitwise equal
+//!   there).
+//! * [`QrPolicy::Tsqr`] — communication-avoiding TSQR: the `m×n` input
+//!   is split into [`tsqr_leaves`]`(m, n)` row blocks by the same pure
+//!   `chunk_bounds` partition the node pool uses, each leaf is QR-factored
+//!   independently, and the leaf R factors reduce up a **fixed** binary
+//!   tree. Because the tree shape is a pure function of the shape (never
+//!   of the thread count), the result is identical no matter how the
+//!   leaves are scheduled — serially here, or fanned across the pool by
+//!   `runtime::qr_exec`.
+//!
+//! All three policies complete rank-deficient inputs to a full
+//! orthonormal basis (a vanished column yields an identity reflection,
+//! never a zero column in Q).
+//!
+//! MGS mirrors the L2 JAX graph (`python/compile/model.py` uses MGS so
+//! the AOT artifact stays in pure HLO ops), so the runtime parity tests
+//! compare against `mgs_qr`.
 
 use super::mat::Mat;
+use std::sync::atomic::{AtomicU8, Ordering};
 
-/// Reusable scratch for [`householder_qr_into`] / [`orthonormalize_into`].
+/// Panel width for [`QrPolicy::Blocked`]; inputs with `n ≤ QR_PANEL`
+/// delegate to the scalar kernel (a single panel has no trailing matrix,
+/// so blocking buys nothing).
+pub const QR_PANEL: usize = 32;
+
+/// Minimum rows per TSQR leaf (matches the node pool's
+/// `MIN_SPLIT_ROWS` intuition: below this, per-leaf overhead beats the
+/// arithmetic). The effective floor is `max(TSQR_MIN_LEAF_ROWS, 2n)` so
+/// every leaf stays tall (rows ≥ cols with slack).
+pub const TSQR_MIN_LEAF_ROWS: usize = 64;
+
+/// Cap on TSQR leaf count (tree depth ≤ 5); plenty for d = 2914 while
+/// keeping the r×r reduction tree negligible.
+pub const TSQR_MAX_LEAVES: usize = 32;
+
+// ---------------------------------------------------------------------
+// Policy knob
+// ---------------------------------------------------------------------
+
+/// Step-12 orthonormalization kernel (`--qr`, config `"qr"`, `BENCH_QR`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum QrPolicy {
+    /// Sequential column-by-column Householder (the seed kernel).
+    #[default]
+    Householder = 0,
+    /// Blocked (panel) compact-WY Householder; trailing updates and Q
+    /// formation run through the packed-panel GEMM kernels.
+    Blocked = 1,
+    /// Deterministic row-parallel TSQR over a fixed binary tree.
+    Tsqr = 2,
+}
+
+impl QrPolicy {
+    /// All policies, in knob order.
+    pub const ALL: [QrPolicy; 3] =
+        [QrPolicy::Householder, QrPolicy::Blocked, QrPolicy::Tsqr];
+
+    /// Parse the CLI/config/env spelling.
+    pub fn parse(s: &str) -> Option<QrPolicy> {
+        match s {
+            "householder" => Some(QrPolicy::Householder),
+            "blocked" => Some(QrPolicy::Blocked),
+            "tsqr" => Some(QrPolicy::Tsqr),
+            _ => None,
+        }
+    }
+
+    /// The knob spelling (inverse of [`QrPolicy::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            QrPolicy::Householder => "householder",
+            QrPolicy::Blocked => "blocked",
+            QrPolicy::Tsqr => "tsqr",
+        }
+    }
+
+    fn from_u8(v: u8) -> QrPolicy {
+        match v {
+            1 => QrPolicy::Blocked,
+            2 => QrPolicy::Tsqr,
+            _ => QrPolicy::Householder,
+        }
+    }
+}
+
+static DEFAULT_POLICY: AtomicU8 = AtomicU8::new(0);
+
+/// Set the process-wide default QR policy (the `--qr` / `"qr"` /
+/// `BENCH_QR` knob). Entry points call this once at startup; runs
+/// snapshot it when they begin. Tests that need an explicit policy
+/// should use `runtime::NativeBackend::with_policy` instead of mutating
+/// this global (tests run concurrently in one process).
+pub fn set_default_qr_policy(p: QrPolicy) {
+    DEFAULT_POLICY.store(p as u8, Ordering::Relaxed);
+}
+
+/// Current process-wide default QR policy.
+pub fn default_qr_policy() -> QrPolicy {
+    QrPolicy::from_u8(DEFAULT_POLICY.load(Ordering::Relaxed))
+}
+
+// ---------------------------------------------------------------------
+// Scratch
+// ---------------------------------------------------------------------
+
+/// Reusable scratch for the QR kernels ([`householder_qr_into`],
+/// [`blocked_qr_into`], [`tsqr_into`], [`orthonormalize_into`], …).
 ///
-/// Holds the working copy of the input and the flattened Householder
-/// vectors (vector `k` lives at `vs[k·m .. k·m + (m−k)]`). Both buffers
-/// only grow, so after warm-up a fixed-shape QR performs zero heap
-/// allocations.
+/// Holds the working copy of the input, the flattened Householder
+/// vectors (vector `k` lives at `vs[k·m .. k·m + (m−k)]`), the blocked
+/// kernel's panel/T/GEMM buffers and the TSQR leaf/tree workspace. All
+/// buffers only grow, so after warm-up a fixed-shape QR performs zero
+/// heap allocations — whichever policy is in use.
 #[derive(Debug, Default)]
 pub struct QrScratch {
     work: Mat,
     vs: Vec<f64>,
+    // -- blocked (compact-WY) buffers --
+    taus: Vec<f64>,
+    svec: Vec<f64>,
+    vp: Mat,
+    tmat: Mat,
+    tstore: Mat,
+    trail: Mat,
+    wmat: Mat,
+    twmat: Mat,
+    vwmat: Mat,
+    // -- TSQR workspace (boxed: only paid for when the policy is used) --
+    tsqr: Option<Box<TsqrWs>>,
 }
 
 impl QrScratch {
@@ -24,6 +152,17 @@ impl QrScratch {
         QrScratch::default()
     }
 }
+
+/// Serial TSQR workspace: per-leaf factors plus the reduction tree.
+#[derive(Debug, Default)]
+struct TsqrWs {
+    leaves: Vec<TsqrLeaf>,
+    tree: TsqrTree,
+}
+
+// ---------------------------------------------------------------------
+// Scalar Householder (the seed kernel)
+// ---------------------------------------------------------------------
 
 /// Thin Householder QR: `a = Q R` with `Q ∈ R^{m×n}` having orthonormal
 /// columns and `R ∈ R^{n×n}` upper triangular with non-negative diagonal.
@@ -41,10 +180,27 @@ pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
 /// the working storage. The arithmetic and operation order are exactly
 /// those of [`householder_qr`] (which delegates here), so results are
 /// bitwise identical to the allocating path.
-pub fn householder_qr_into(a: &Mat, q: &mut Mat, mut rr: Option<&mut Mat>, ws: &mut QrScratch) {
-    let (m, n) = (a.rows, a.cols);
+pub fn householder_qr_into(a: &Mat, q: &mut Mat, rr: Option<&mut Mat>, ws: &mut QrScratch) {
+    householder_qr_slice_into(&a.data, a.rows, a.cols, q, rr, ws);
+}
+
+/// Thin Householder QR of a row-major `m×n` slice — the in-memory layout
+/// of a `Mat` *and* of any contiguous row block of one, which is what
+/// lets the TSQR leaf factorizations run without copying their block
+/// out first. [`householder_qr_into`] delegates here, so the arithmetic
+/// is shared (and bitwise identical) between the two entry points.
+pub fn householder_qr_slice_into(
+    a: &[f64],
+    m: usize,
+    n: usize,
+    q: &mut Mat,
+    mut rr: Option<&mut Mat>,
+    ws: &mut QrScratch,
+) {
     assert!(m >= n, "householder_qr requires rows >= cols");
-    ws.work.copy_from(a);
+    assert_eq!(a.len(), m * n, "slice/shape mismatch");
+    ws.work.reshape_in_place(m, n);
+    ws.work.data.copy_from_slice(a);
     if ws.vs.len() < n * m {
         ws.vs.resize(n * m, 0.0);
     }
@@ -139,13 +295,517 @@ pub fn householder_qr_into(a: &Mat, q: &mut Mat, mut rr: Option<&mut Mat>, ws: &
     }
 }
 
+// ---------------------------------------------------------------------
+// Blocked compact-WY Householder
+// ---------------------------------------------------------------------
+
+/// Blocked (panel) Householder QR in the compact-WY form.
+///
+/// Each [`QR_PANEL`]-column panel is factored with the scalar reflection
+/// loop, its reflectors are aggregated into `Q_panel = I − V T Vᵀ`
+/// (LAPACK `larft`-style forward T recurrence), and the trailing matrix
+/// and the thin-Q formation are updated with GEMMs over the panel — so
+/// the O(mn²) work runs through the packed-panel micro-kernels instead
+/// of scalar column sweeps. Same contract as [`householder_qr_into`]:
+/// thin Q, upper-triangular R with non-negative diagonal, rank-deficient
+/// columns completed via identity reflections. For `n ≤ QR_PANEL` this
+/// delegates to the scalar kernel (bitwise equal there).
+pub fn blocked_qr_into(a: &Mat, q: &mut Mat, mut rr: Option<&mut Mat>, ws: &mut QrScratch) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "blocked_qr requires rows >= cols");
+    if n <= QR_PANEL {
+        householder_qr_into(a, q, rr, ws);
+        return;
+    }
+    ws.work.copy_from(a);
+    if ws.vs.len() < n * m {
+        ws.vs.resize(n * m, 0.0);
+    }
+    if ws.taus.len() < n {
+        ws.taus.resize(n, 0.0);
+    }
+    if ws.svec.len() < QR_PANEL {
+        ws.svec.resize(QR_PANEL, 0.0);
+    }
+    let panels = n.div_ceil(QR_PANEL);
+    ws.tstore.reshape_in_place(panels * QR_PANEL, QR_PANEL);
+    ws.tstore.fill(0.0);
+
+    for pi in 0..panels {
+        let k0 = pi * QR_PANEL;
+        let nb = QR_PANEL.min(n - k0);
+        factor_panel(&mut ws.work, &mut ws.vs, &mut ws.taus, m, k0, nb);
+        build_panel_t(&ws.vs, &ws.taus, &mut ws.svec, &mut ws.tmat, m, k0, nb);
+        // Persist T for the Q-formation pass.
+        for i in 0..nb {
+            for j in 0..nb {
+                ws.tstore.set(pi * QR_PANEL + i, j, ws.tmat.get(i, j));
+            }
+        }
+        if k0 + nb == n {
+            continue;
+        }
+        // Trailing update  A ← (I − V Tᵀ Vᵀ) A  as three GEMMs.
+        let QrScratch { work, vs, vp, tmat, trail, wmat, twmat, vwmat, .. } = &mut *ws;
+        apply_panel_wy(work, vs, tmat, true, m, k0, nb, k0 + nb, n, vp, trail, wmat, twmat, vwmat);
+    }
+
+    // Thin Q: apply the panels backwards to I_{m×n},
+    // Q ← (I − V T Vᵀ) Q per panel.
+    q.reshape_in_place(m, n);
+    q.fill(0.0);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for pi in (0..panels).rev() {
+        let k0 = pi * QR_PANEL;
+        let nb = QR_PANEL.min(n - k0);
+        ws.tmat.reshape_in_place(nb, nb);
+        for i in 0..nb {
+            for j in 0..nb {
+                ws.tmat.set(i, j, ws.tstore.get(pi * QR_PANEL + i, j));
+            }
+        }
+        // Columns j < k0 are still exact basis vectors here (later panels
+        // only touch rows ≥ their own k0 > j, and this panel's Vᵀe_j is
+        // exactly zero), so the update restricts to columns k0..n
+        // bitwise-identically — LAPACK `dorgqr`-style column narrowing.
+        let QrScratch { vs, vp, tmat, trail, wmat, twmat, vwmat, .. } = &mut *ws;
+        apply_panel_wy(q, vs, tmat, false, m, k0, nb, k0, n, vp, trail, wmat, twmat, vwmat);
+    }
+
+    // R extraction + diag(R) >= 0 sign convention (as the scalar kernel).
+    if let Some(rr) = rr.as_deref_mut() {
+        rr.reshape_in_place(n, n);
+        rr.fill(0.0);
+        for i in 0..n {
+            for j in i..n {
+                rr.set(i, j, ws.work.get(i, j));
+            }
+        }
+    }
+    for i in 0..n {
+        if ws.work.get(i, i) < 0.0 {
+            if let Some(rr) = rr.as_deref_mut() {
+                for j in 0..n {
+                    rr.set(i, j, -rr.get(i, j));
+                }
+            }
+            for row in 0..m {
+                q.set(row, i, -q.get(row, i));
+            }
+        }
+    }
+}
+
+/// Scalar Householder sweep over panel columns `k0..k0+nb`, applying
+/// each reflector only within the panel (the trailing matrix is updated
+/// later in one compact-WY GEMM). Stores reflector `k` in
+/// `vs[k·m ..]` and `tau_k = 2 / vᵀv` in `taus[k]` (0 for a degenerate
+/// column — the identity reflection).
+fn factor_panel(work: &mut Mat, vs: &mut [f64], taus: &mut [f64], m: usize, k0: usize, nb: usize) {
+    for k in k0..k0 + nb {
+        let vseg = &mut vs[k * m..k * m + (m - k)];
+        let mut norm = 0.0;
+        for i in k..m {
+            let v = work.get(i, k);
+            norm += v * v;
+        }
+        let norm = norm.sqrt();
+        if norm == 0.0 {
+            vseg.fill(0.0);
+            taus[k] = 0.0;
+            continue;
+        }
+        let alpha = if work.get(k, k) >= 0.0 { -norm } else { norm };
+        for (idx, i) in (k..m).enumerate() {
+            vseg[idx] = work.get(i, k);
+        }
+        vseg[0] -= alpha;
+        let vnorm2: f64 = vseg.iter().map(|x| x * x).sum();
+        if vnorm2 > 0.0 {
+            taus[k] = 2.0 / vnorm2;
+            for j in k..k0 + nb {
+                let mut dot = 0.0;
+                for (idx, i) in (k..m).enumerate() {
+                    dot += vseg[idx] * work.get(i, j);
+                }
+                let s = 2.0 * dot / vnorm2;
+                for (idx, i) in (k..m).enumerate() {
+                    let val = work.get(i, j) - s * vseg[idx];
+                    work.set(i, j, val);
+                }
+            }
+        } else {
+            taus[k] = 0.0;
+        }
+    }
+}
+
+/// Forward compact-WY T recurrence for panel columns `k0..k0+nb`:
+/// `T[j][j] = τ_j`, `T[0..j, j] = −τ_j · T[0..j,0..j] · (Vᵀ v_j)`.
+fn build_panel_t(
+    vs: &[f64],
+    taus: &[f64],
+    svec: &mut [f64],
+    tmat: &mut Mat,
+    m: usize,
+    k0: usize,
+    nb: usize,
+) {
+    tmat.reshape_in_place(nb, nb);
+    tmat.fill(0.0);
+    for j in 0..nb {
+        let kj = k0 + j;
+        let tau = taus[kj];
+        let vj = &vs[kj * m..kj * m + (m - kj)];
+        // s_i = v_iᵀ v_j (v_j is zero above its own diagonal row, so the
+        // overlap starts j−i entries into v_i).
+        for (i, sv) in svec.iter_mut().enumerate().take(j) {
+            let ki = k0 + i;
+            let vi = &vs[ki * m..ki * m + (m - ki)];
+            let off = j - i;
+            let mut s = 0.0;
+            for (idx, &vjv) in vj.iter().enumerate() {
+                s += vi[idx + off] * vjv;
+            }
+            *sv = s;
+        }
+        for row in 0..j {
+            let mut acc = 0.0;
+            for (c, &sv) in svec.iter().enumerate().take(j).skip(row) {
+                acc += tmat.get(row, c) * sv;
+            }
+            tmat.set(row, j, -tau * acc);
+        }
+        tmat.set(j, j, tau);
+    }
+}
+
+/// Materialize the panel's reflector matrix `V ∈ R^{(m−k0)×nb}`
+/// (column `j` is `v_{k0+j}`, zero above its diagonal row) so the WY
+/// updates can run as plain GEMMs.
+fn load_panel_v(vs: &[f64], vp: &mut Mat, m: usize, k0: usize, nb: usize) {
+    vp.reshape_in_place(m - k0, nb);
+    vp.fill(0.0);
+    for j in 0..nb {
+        let kj = k0 + j;
+        let vj = &vs[kj * m..kj * m + (m - kj)];
+        for (idx, &v) in vj.iter().enumerate() {
+            vp.set(j + idx, j, v);
+        }
+    }
+}
+
+/// The one compact-WY application: update columns `col_lo..col_hi` of
+/// `target`'s rows `k0..m` with `X ← (I − V T' Vᵀ) X`, where `T'` is
+/// `Tᵀ` when `transpose_t` (the factorization-side trailing update) or
+/// `T` (the Q-formation side). Three GEMMs over the panel plus a
+/// copy-out/write-back; both call sites in [`blocked_qr_into`] route
+/// here so the two applications cannot drift.
+#[allow(clippy::too_many_arguments)]
+fn apply_panel_wy(
+    target: &mut Mat,
+    vs: &[f64],
+    tmat: &Mat,
+    transpose_t: bool,
+    m: usize,
+    k0: usize,
+    nb: usize,
+    col_lo: usize,
+    col_hi: usize,
+    vp: &mut Mat,
+    trail: &mut Mat,
+    wmat: &mut Mat,
+    twmat: &mut Mat,
+    vwmat: &mut Mat,
+) {
+    let nc = col_hi - col_lo;
+    load_panel_v(vs, vp, m, k0, nb);
+    trail.reshape_in_place(m - k0, nc);
+    for i in 0..m - k0 {
+        let src = target.row(k0 + i);
+        trail.row_mut(i).copy_from_slice(&src[col_lo..col_hi]);
+    }
+    vp.t_matmul_into(trail, wmat); // W = Vᵀ X
+    if transpose_t {
+        tmat.t_matmul_into(wmat, twmat); // Tᵀ W
+    } else {
+        tmat.matmul_into(wmat, twmat); // T W
+    }
+    vp.matmul_into(twmat, vwmat); // V (T' W)
+    for i in 0..m - k0 {
+        for j in 0..nc {
+            let val = trail.get(i, j) - vwmat.get(i, j);
+            target.set(k0 + i, col_lo + j, val);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// TSQR
+// ---------------------------------------------------------------------
+
+/// Number of row-block leaves the fixed TSQR tree uses for an `m×n`
+/// input — a **pure function of the shape**, never of the thread count,
+/// which is what makes the TSQR result identical for any scheduling of
+/// the leaves. Every leaf keeps at least `max(TSQR_MIN_LEAF_ROWS, 2n)`
+/// rows; small inputs return 1 (plain Householder).
+pub fn tsqr_leaves(m: usize, n: usize) -> usize {
+    let min_rows = TSQR_MIN_LEAF_ROWS.max(2 * n);
+    if m < 2 * min_rows {
+        return 1;
+    }
+    (m / min_rows).min(TSQR_MAX_LEAVES)
+}
+
+/// Leaf `c`'s row range — the same pure `chunk_bounds` partition
+/// `NodePool::run_chunks2` uses, re-exported so leaf boundaries can
+/// never drift between the serial and pooled TSQR paths.
+pub fn tsqr_leaf_bounds(m: usize, leaves: usize, c: usize) -> (usize, usize) {
+    crate::runtime::pool::chunk_bounds(m, leaves, c)
+}
+
+/// One TSQR leaf: the block's thin Q and R factors plus its private
+/// Householder scratch (leaves factor concurrently under the pool, so
+/// the scratch cannot be shared).
+#[derive(Debug, Default)]
+pub struct TsqrLeaf {
+    q: Mat,
+    r: Mat,
+    ws: QrScratch,
+}
+
+impl TsqrLeaf {
+    /// The leaf's thin Q factor (valid after [`tsqr_factor_leaf`]).
+    pub fn q(&self) -> &Mat {
+        &self.q
+    }
+}
+
+/// Per-matrix TSQR reduction state: the level-by-level R factors, the
+/// pair Q factors of the fixed binary tree, and the per-leaf `n×n`
+/// coefficients produced by the downsweep. Buffers only grow.
+#[derive(Debug, Default)]
+pub struct TsqrTree {
+    /// Working R factors (level ℓ occupies the prefix).
+    rwork: Vec<Mat>,
+    /// Pair Q factors (2n×n), level-major then pair-major.
+    nodes: Vec<Mat>,
+    /// Node counts per level (level 0 = leaves, last = root).
+    counts: Vec<usize>,
+    /// `nodes` offset of each level's first pair.
+    offsets: Vec<usize>,
+    /// Per-leaf coefficients: `Q[leaf c] = leafQ_c · coeff_c`.
+    coeff: Vec<Mat>,
+    stack: Mat,
+    tmp: Mat,
+    tmp2: Mat,
+    ws: QrScratch,
+}
+
+impl TsqrTree {
+    /// Leaf `c`'s coefficient (valid after [`tsqr_reduce`]).
+    pub fn coeff(&self, c: usize) -> &Mat {
+        &self.coeff[c]
+    }
+
+    /// The root R factor — the R of the whole stacked input (upper
+    /// triangular, non-negative diagonal; valid after [`tsqr_reduce`]).
+    pub fn root_r(&self) -> &Mat {
+        &self.rwork[0]
+    }
+}
+
+/// Factor rows `lo..hi` of `a` into `leaf` (thin Q + R). Row blocks of a
+/// row-major matrix are contiguous, so this runs directly on the slice —
+/// no gather copy.
+pub fn tsqr_factor_leaf(a: &Mat, lo: usize, hi: usize, leaf: &mut TsqrLeaf) {
+    let n = a.cols;
+    householder_qr_slice_into(
+        &a.data[lo * n..hi * n],
+        hi - lo,
+        n,
+        &mut leaf.q,
+        Some(&mut leaf.r),
+        &mut leaf.ws,
+    );
+}
+
+/// Reduce the leaves' R factors up the fixed binary tree (adjacent
+/// pairs, odd node passes through), then downsweep the tree to produce
+/// each leaf's `n×n` coefficient. Purely sequential r×r work — the
+/// expensive leaf stages around it are what parallelize.
+pub fn tsqr_reduce(leaves: &[TsqrLeaf], tree: &mut TsqrTree, n: usize) {
+    let l = leaves.len();
+    debug_assert!(l >= 1);
+    if tree.rwork.len() < l {
+        tree.rwork.resize_with(l, Mat::default);
+    }
+    if tree.coeff.len() < l {
+        tree.coeff.resize_with(l, Mat::default);
+    }
+    if tree.nodes.len() < l {
+        tree.nodes.resize_with(l, Mat::default);
+    }
+    tree.counts.clear();
+    tree.offsets.clear();
+    tree.counts.push(l);
+    for (rw, leaf) in tree.rwork.iter_mut().zip(leaves.iter()) {
+        rw.copy_from(&leaf.r);
+    }
+    // Upsweep: QR-reduce adjacent R pairs level by level.
+    let mut used = 0usize;
+    let mut cur = l;
+    while cur > 1 {
+        tree.offsets.push(used);
+        let pairs = cur / 2;
+        for p in 0..pairs {
+            tree.stack.reshape_in_place(2 * n, n);
+            tree.stack.data[..n * n].copy_from_slice(&tree.rwork[2 * p].data);
+            tree.stack.data[n * n..].copy_from_slice(&tree.rwork[2 * p + 1].data);
+            householder_qr_into(
+                &tree.stack,
+                &mut tree.nodes[used],
+                Some(&mut tree.rwork[p]),
+                &mut tree.ws,
+            );
+            used += 1;
+        }
+        if cur % 2 == 1 {
+            // Odd node passes through with an implicit identity Q.
+            let (head, tail) = tree.rwork.split_at_mut(cur - 1);
+            head[pairs].copy_from(&tail[0]);
+        }
+        cur = pairs + cur % 2;
+        tree.counts.push(cur);
+    }
+    // Downsweep: expand the root coefficient (I) back to the leaves,
+    // in place over the coeff array (children at 2p/2p+1 never clobber
+    // an unprocessed parent when p runs high → low).
+    tree.coeff[0].reshape_in_place(n, n);
+    tree.coeff[0].fill(0.0);
+    for j in 0..n {
+        tree.coeff[0].set(j, j, 1.0);
+    }
+    let levels = tree.counts.len();
+    for lev in (0..levels - 1).rev() {
+        let cur = tree.counts[lev];
+        let pairs = cur / 2;
+        let off = tree.offsets[lev];
+        if cur % 2 == 1 {
+            let (head, tail) = tree.coeff.split_at_mut(cur - 1);
+            tail[0].copy_from(&head[pairs]);
+        }
+        for p in (0..pairs).rev() {
+            let node = &tree.nodes[off + p];
+            tree.tmp.reshape_in_place(n, n);
+            node.matmul_rows_into(&tree.coeff[p], 0, n, &mut tree.tmp.data);
+            tree.tmp2.reshape_in_place(n, n);
+            node.matmul_rows_into(&tree.coeff[p], n, 2 * n, &mut tree.tmp2.data);
+            tree.coeff[2 * p].copy_from(&tree.tmp);
+            tree.coeff[2 * p + 1].copy_from(&tree.tmp2);
+        }
+    }
+}
+
+/// Write leaf `c`'s slice of the final Q: `out_rows = leafQ · coeff`
+/// (row-major, `leaf.q.rows × n`). Shared by the serial path and the
+/// pooled executor, so the two are bitwise identical by construction.
+pub fn tsqr_apply_leaf(leaf: &TsqrLeaf, coeff: &Mat, out_rows: &mut [f64]) {
+    leaf.q.matmul_rows_into(coeff, 0, leaf.q.rows, out_rows);
+}
+
+/// Serial deterministic TSQR: factor the fixed row-block leaves, reduce
+/// the R factors up the fixed binary tree, then expand each leaf's Q.
+/// Same contract as [`householder_qr_into`] (thin Q, R with non-negative
+/// diagonal, rank-deficiency completed); for [`tsqr_leaves`]` == 1` it
+/// *is* the scalar kernel. The pooled executor
+/// (`runtime::qr_exec::orthonormalize_nodes`) runs the identical leaf /
+/// reduce / apply kernels, so its output matches this bitwise for every
+/// thread count.
+pub fn tsqr_into(a: &Mat, q: &mut Mat, rr: Option<&mut Mat>, ws: &mut QrScratch) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "tsqr requires rows >= cols");
+    let l = tsqr_leaves(m, n);
+    if l <= 1 {
+        householder_qr_into(a, q, rr, ws);
+        return;
+    }
+    let ts = ws.tsqr.get_or_insert_with(Default::default);
+    if ts.leaves.len() < l {
+        ts.leaves.resize_with(l, TsqrLeaf::default);
+    }
+    for (c, leaf) in ts.leaves.iter_mut().enumerate().take(l) {
+        let (lo, hi) = tsqr_leaf_bounds(m, l, c);
+        tsqr_factor_leaf(a, lo, hi, leaf);
+    }
+    tsqr_reduce(&ts.leaves[..l], &mut ts.tree, n);
+    q.reshape_in_place(m, n);
+    for c in 0..l {
+        let (lo, hi) = tsqr_leaf_bounds(m, l, c);
+        tsqr_apply_leaf(&ts.leaves[c], ts.tree.coeff(c), &mut q.data[lo * n..hi * n]);
+    }
+    if let Some(rr) = rr {
+        rr.copy_from(ts.tree.root_r());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Policy dispatch
+// ---------------------------------------------------------------------
+
+/// Thin QR through the selected [`QrPolicy`] kernel.
+pub fn qr_policy_into(
+    a: &Mat,
+    q: &mut Mat,
+    rr: Option<&mut Mat>,
+    ws: &mut QrScratch,
+    policy: QrPolicy,
+) {
+    match policy {
+        QrPolicy::Householder => householder_qr_into(a, q, rr, ws),
+        QrPolicy::Blocked => blocked_qr_into(a, q, rr, ws),
+        QrPolicy::Tsqr => tsqr_into(a, q, rr, ws),
+    }
+}
+
+/// Allocation-free policy-dispatched orthonormalization (Q only).
+pub fn orthonormalize_policy_into(a: &Mat, q: &mut Mat, ws: &mut QrScratch, policy: QrPolicy) {
+    qr_policy_into(a, q, None, ws, policy);
+}
+
+/// Allocating policy-dispatched orthonormalization — for cold paths
+/// (metric stacks, straggler studies) that were allocating already.
+pub fn orthonormalize_policy(a: &Mat, policy: QrPolicy) -> Mat {
+    let mut q = Mat::zeros(a.rows, a.cols);
+    let mut ws = QrScratch::new();
+    orthonormalize_policy_into(a, &mut q, &mut ws, policy);
+    q
+}
+
+// ---------------------------------------------------------------------
+// MGS
+// ---------------------------------------------------------------------
+
 /// Modified Gram–Schmidt QR (thin). Matches the L2 JAX orthonormalization.
-/// Columns that vanish (rank deficiency) are replaced by zeros in Q and R.
+///
+/// Columns that vanish during orthogonalization (rank deficiency) are
+/// **completed to an orthonormal basis** — a unit vector orthogonal to
+/// the finished columns replaces the vanished direction, with `R[k][k] =
+/// 0` so reconstruction `QR = A` still holds. (They used to become zero
+/// columns in Q, which silently collapsed the estimated subspace
+/// dimension and deflated the eq. 11 error metric; Householder's
+/// identity reflections never had that failure mode.)
 pub fn mgs_qr(a: &Mat) -> (Mat, Mat) {
     let (m, n) = (a.rows, a.cols);
     assert!(m >= n, "mgs_qr requires rows >= cols");
     let mut q = a.clone();
     let mut r = Mat::zeros(n, n);
+    // Original column norms anchor the rank-deficiency tolerance.
+    let orig: Vec<f64> = (0..n)
+        .map(|j| (0..m).map(|i| q.get(i, j) * q.get(i, j)).sum::<f64>().sqrt())
+        .collect();
     for k in 0..n {
         let mut norm = 0.0;
         for i in 0..m {
@@ -153,8 +813,14 @@ pub fn mgs_qr(a: &Mat) -> (Mat, Mat) {
             norm += v * v;
         }
         let norm = norm.sqrt();
-        r.set(k, k, norm);
-        if norm > 0.0 {
+        if norm <= 1e-12 * orig[k] {
+            // Vanished column: complete with a unit vector orthogonal to
+            // the finished columns (what Householder's identity
+            // reflections give), recording a zero diagonal in R.
+            r.set(k, k, 0.0);
+            complete_orthonormal_column(&mut q, k);
+        } else {
+            r.set(k, k, norm);
             for i in 0..m {
                 let v = q.get(i, k) / norm;
                 q.set(i, k, v);
@@ -175,7 +841,54 @@ pub fn mgs_qr(a: &Mat) -> (Mat, Mat) {
     (q, r)
 }
 
-/// Orthonormalize (returns Q only) — the S-DOT inner step.
+/// Replace column `k` of `q` with a unit vector orthogonal to columns
+/// `0..k` (two Gram–Schmidt passes over a basis vector for numerical
+/// safety; some basis vector always survives because `k < m`).
+///
+/// The one shared orthogonal-completion policy: `mgs_qr`'s
+/// rank-deficiency handling and `svd_small`'s degenerate directions both
+/// route here, so the candidate acceptance threshold and the
+/// re-orthogonalization pass count can never drift apart between them.
+pub(crate) fn complete_orthonormal_column(q: &mut Mat, k: usize) {
+    let m = q.rows;
+    let mut col = vec![0.0; m];
+    for b in 0..m {
+        for (idx, c) in col.iter_mut().enumerate() {
+            *c = if idx == b { 1.0 } else { 0.0 };
+        }
+        for _pass in 0..2 {
+            for jj in 0..k {
+                let mut dot = 0.0;
+                for (i, &c) in col.iter().enumerate() {
+                    dot += q.get(i, jj) * c;
+                }
+                for (i, c) in col.iter_mut().enumerate() {
+                    *c -= dot * q.get(i, jj);
+                }
+            }
+        }
+        let norm = col.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 1e-6 {
+            for c in col.iter_mut() {
+                *c /= norm;
+            }
+            for (i, &c) in col.iter().enumerate() {
+                q.set(i, k, c);
+            }
+            return;
+        }
+    }
+    unreachable!("k < m guarantees an orthogonal basis vector exists");
+}
+
+// ---------------------------------------------------------------------
+// Orthonormalization entry points
+// ---------------------------------------------------------------------
+
+/// Orthonormalize (returns Q only) — the S-DOT inner step, pinned to the
+/// scalar Householder kernel (ground-truth construction and the eig/SVD
+/// internals depend on its exact bits; policy-aware callers use
+/// [`orthonormalize_policy`] / [`orthonormalize_policy_into`]).
 pub fn orthonormalize(a: &Mat) -> Mat {
     householder_qr(a).0
 }
@@ -257,14 +970,51 @@ mod tests {
 
     #[test]
     fn rank_deficient_handled() {
-        // Two identical columns: MGS zeroes the second.
+        // Two identical columns: MGS completes the second to an
+        // orthonormal direction (R[1][1] = 0 keeps reconstruction exact).
         let a = Mat::from_rows(&[&[1.0, 1.0], &[1.0, 1.0], &[0.0, 0.0]]);
         let (q, r) = mgs_qr(&a);
         assert!(q.is_finite());
         assert!((r.get(1, 1)).abs() < 1e-12);
-        // Householder also stays finite.
-        let (q2, _r2) = householder_qr(&a);
+        assert!(ortho_err(&q) < 1e-10, "MGS must complete the basis");
+        assert!(reconstruct_err(&a, &q, &r) < 1e-10);
+        // Householder also stays finite and orthonormal.
+        let (q2, r2) = householder_qr(&a);
         assert!(q2.is_finite());
+        assert!(ortho_err(&q2) < 1e-10);
+        assert!(reconstruct_err(&a, &q2, &r2) < 1e-10);
+    }
+
+    #[test]
+    fn mgs_householder_parity_on_rank_deficient_inputs() {
+        // Rank-deficient parity: identical leading (full-rank) columns
+        // under the shared diag(R) >= 0 convention, orthonormal
+        // completion for the vanished ones, equal R up to the vanished
+        // rows, exact reconstruction for both.
+        let mut rng = Rng::new(17);
+        let mut a = Mat::gauss(12, 5, &mut rng);
+        for i in 0..12 {
+            let v = a.get(i, 0) * 2.0 - a.get(i, 2);
+            a.set(i, 3, v); // col 3 ∈ span(col 0, col 2): rank 4
+        }
+        let (qh, rh) = householder_qr(&a);
+        let (qm, rm) = mgs_qr(&a);
+        assert!(ortho_err(&qh) < 1e-9);
+        assert!(ortho_err(&qm) < 1e-9);
+        assert!(reconstruct_err(&a, &qh, &rh) < 1e-9);
+        assert!(reconstruct_err(&a, &qm, &rm) < 1e-9);
+        // Full-rank columns (0, 1, 2, 4 project onto earlier ones too —
+        // but columns before the vanished index are untouched by the
+        // completion, so 0..3 must agree exactly up to roundoff).
+        for j in 0..3 {
+            for i in 0..12 {
+                assert!(
+                    (qh.get(i, j) - qm.get(i, j)).abs() < 1e-8,
+                    "col {j} row {i}"
+                );
+            }
+        }
+        assert!((rm.get(3, 3)).abs() < 1e-9, "vanished diagonal must be 0");
     }
 
     #[test]
@@ -311,5 +1061,181 @@ mod tests {
         let q1 = orthonormalize(&a);
         let q2 = orthonormalize(&q1);
         assert!(q1.dist_fro(&q2) < 1e-9);
+    }
+
+    // ---- QrPolicy knob ----
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in QrPolicy::ALL {
+            assert_eq!(QrPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(QrPolicy::parse("qr-and-a-half"), None);
+        assert_eq!(QrPolicy::default(), QrPolicy::Householder);
+    }
+
+    // ---- blocked compact-WY ----
+
+    #[test]
+    fn blocked_small_n_is_bitwise_householder() {
+        let mut rng = Rng::new(20);
+        let a = Mat::gauss(50, QR_PANEL, &mut rng);
+        let (q0, r0) = householder_qr(&a);
+        let mut ws = QrScratch::new();
+        let mut q = Mat::zeros(0, 0);
+        let mut r = Mat::zeros(0, 0);
+        blocked_qr_into(&a, &mut q, Some(&mut r), &mut ws);
+        assert_eq!(q.data, q0.data);
+        assert_eq!(r.data, r0.data);
+    }
+
+    #[test]
+    fn blocked_matches_householder_multi_panel() {
+        let mut rng = Rng::new(21);
+        for &(m, n) in &[(60usize, 40usize), (120, 40), (90, 33), (140, 70)] {
+            let a = Mat::gauss(m, n, &mut rng);
+            let (q0, r0) = householder_qr(&a);
+            let mut ws = QrScratch::new();
+            let mut q = Mat::zeros(0, 0);
+            let mut r = Mat::zeros(0, 0);
+            blocked_qr_into(&a, &mut q, Some(&mut r), &mut ws);
+            // Full rank + shared diag(R) >= 0 convention ⇒ the unique
+            // thin QR, so both kernels land on the same factors up to
+            // accumulated roundoff.
+            let scale = a.fro_norm().max(1.0);
+            assert!(q.dist_fro(&q0) < 1e-8, "{m}x{n}: {}", q.dist_fro(&q0));
+            assert!(r.dist_fro(&r0) < 1e-8 * scale, "{m}x{n}");
+            assert!(ortho_err(&q) < 1e-10, "{m}x{n}");
+            assert!(reconstruct_err(&a, &q, &r) < 1e-9 * scale, "{m}x{n}");
+            for i in 0..n {
+                assert!(r.get(i, i) >= 0.0, "{m}x{n} diag {i}");
+                for j in 0..i {
+                    assert_eq!(r.get(i, j), 0.0, "{m}x{n} lower ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_scratch_reuse_is_stable() {
+        let mut rng = Rng::new(22);
+        let a = Mat::gauss(100, 40, &mut rng);
+        let mut ws = QrScratch::new();
+        let mut q1 = Mat::zeros(0, 0);
+        blocked_qr_into(&a, &mut q1, None, &mut ws);
+        let first = q1.data.to_vec();
+        // Dirty the scratch with a different shape, then repeat.
+        let b = Mat::gauss(64, 50, &mut rng);
+        let mut qb = Mat::zeros(0, 0);
+        blocked_qr_into(&b, &mut qb, None, &mut ws);
+        let mut q2 = Mat::zeros(0, 0);
+        blocked_qr_into(&a, &mut q2, None, &mut ws);
+        assert_eq!(first, q2.data);
+    }
+
+    // ---- TSQR ----
+
+    #[test]
+    fn tsqr_leaf_count_is_shape_pure_and_tall() {
+        assert_eq!(tsqr_leaves(20, 5), 1);
+        assert_eq!(tsqr_leaves(127, 5), 1);
+        assert!(tsqr_leaves(300, 4) > 1);
+        for &(m, n) in &[(300usize, 4usize), (784, 5), (2914, 5), (2914, 40), (350, 3)] {
+            let l = tsqr_leaves(m, n);
+            assert!((1..=TSQR_MAX_LEAVES).contains(&l));
+            let mut covered = 0;
+            for c in 0..l {
+                let (lo, hi) = tsqr_leaf_bounds(m, l, c);
+                assert!(hi - lo >= n, "{m}x{n} leaf {c} too short");
+                assert_eq!(lo, covered);
+                covered = hi;
+            }
+            assert_eq!(covered, m);
+        }
+    }
+
+    #[test]
+    fn tsqr_matches_householder() {
+        let mut rng = Rng::new(23);
+        // Even and odd leaf counts, small and wide r.
+        for &(m, n) in &[(300usize, 4usize), (350, 3), (400, 5), (700, 40)] {
+            let a = Mat::gauss(m, n, &mut rng);
+            assert!(tsqr_leaves(m, n) > 1, "{m}x{n} must exercise the tree");
+            let (q0, r0) = householder_qr(&a);
+            let mut ws = QrScratch::new();
+            let mut q = Mat::zeros(0, 0);
+            let mut r = Mat::zeros(0, 0);
+            tsqr_into(&a, &mut q, Some(&mut r), &mut ws);
+            let scale = a.fro_norm().max(1.0);
+            assert!(q.dist_fro(&q0) < 1e-8, "{m}x{n}: {}", q.dist_fro(&q0));
+            assert!(r.dist_fro(&r0) < 1e-8 * scale, "{m}x{n}");
+            assert!(ortho_err(&q) < 1e-10, "{m}x{n}");
+            assert!(reconstruct_err(&a, &q, &r) < 1e-9 * scale, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn tsqr_single_leaf_is_bitwise_householder() {
+        let mut rng = Rng::new(24);
+        let a = Mat::gauss(100, 5, &mut rng);
+        assert_eq!(tsqr_leaves(100, 5), 1);
+        let (q0, _) = householder_qr(&a);
+        let mut ws = QrScratch::new();
+        let mut q = Mat::zeros(0, 0);
+        tsqr_into(&a, &mut q, None, &mut ws);
+        assert_eq!(q.data, q0.data);
+    }
+
+    #[test]
+    fn tsqr_repeat_calls_are_bitwise_stable() {
+        let mut rng = Rng::new(25);
+        let a = Mat::gauss(300, 4, &mut rng);
+        let mut ws = QrScratch::new();
+        let mut q1 = Mat::zeros(0, 0);
+        tsqr_into(&a, &mut q1, None, &mut ws);
+        let first = q1.data.to_vec();
+        let b = Mat::gauss(400, 6, &mut rng); // dirty the tree buffers
+        let mut qb = Mat::zeros(0, 0);
+        tsqr_into(&b, &mut qb, None, &mut ws);
+        let mut q2 = Mat::zeros(0, 0);
+        tsqr_into(&a, &mut q2, None, &mut ws);
+        assert_eq!(first, q2.data);
+    }
+
+    #[test]
+    fn all_policies_complete_rank_deficient_inputs() {
+        let mut rng = Rng::new(26);
+        // Tall enough for a real TSQR tree, wide enough for two blocked
+        // panels; column 1 duplicates column 0 (rank n−1).
+        let mut a = Mat::gauss(300, 40, &mut rng);
+        for i in 0..300 {
+            let v = a.get(i, 0);
+            a.set(i, 1, v);
+        }
+        for policy in QrPolicy::ALL {
+            let mut ws = QrScratch::new();
+            let mut q = Mat::zeros(0, 0);
+            let mut r = Mat::zeros(0, 0);
+            qr_policy_into(&a, &mut q, Some(&mut r), &mut ws, policy);
+            assert!(q.is_finite(), "{policy:?}");
+            assert!(ortho_err(&q) < 1e-8, "{policy:?}: {}", ortho_err(&q));
+            assert!(
+                reconstruct_err(&a, &q, &r) < 1e-8 * a.fro_norm(),
+                "{policy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn policy_dispatch_householder_is_bitwise_reference() {
+        let mut rng = Rng::new(27);
+        let a = Mat::gauss(40, 6, &mut rng);
+        let (q0, _) = householder_qr(&a);
+        let mut ws = QrScratch::new();
+        let mut q = Mat::zeros(0, 0);
+        orthonormalize_policy_into(&a, &mut q, &mut ws, QrPolicy::Householder);
+        assert_eq!(q.data, q0.data);
+        let q2 = orthonormalize_policy(&a, QrPolicy::Householder);
+        assert_eq!(q2.data, q0.data);
     }
 }

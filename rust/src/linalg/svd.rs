@@ -25,39 +25,22 @@ pub fn svd_small(a: &Mat) -> (Mat, Vec<f64>, Mat) {
     let s: Vec<f64> = vals.iter().map(|x| x.max(0.0).sqrt()).collect();
     let av = a.matmul(&v);
     let mut u = Mat::zeros(m, n);
+    // Purely relative degenerate-direction threshold anchored at the
+    // largest singular value, with an absolute floor for the all-zero /
+    // denormal case. (The old `1e-12 * s[0].max(1.0)` mixed relative and
+    // absolute scales: any matrix with s[0] < 1e-12 — e.g. a tiny-
+    // magnitude but well-conditioned iterate — had *every* direction
+    // misclassified as degenerate and replaced by basis vectors.)
+    let tol = (1e-12 * s[0]).max(1e-300);
     for j in 0..n {
-        if s[j] > 1e-12 * s[0].max(1.0) {
+        if s[j] > tol {
             for i in 0..m {
                 u.set(i, j, av.get(i, j) / s[j]);
             }
         } else {
-            // Degenerate direction: pick any unit vector orthogonal to the
-            // previous columns (Gram-Schmidt on a basis vector).
-            let mut col = vec![0.0; m];
-            'basis: for b in 0..m {
-                for (idx, c) in col.iter_mut().enumerate() {
-                    *c = if idx == b { 1.0 } else { 0.0 };
-                }
-                for jj in 0..j {
-                    let mut dot = 0.0;
-                    for i in 0..m {
-                        dot += u.get(i, jj) * col[i];
-                    }
-                    for (i, c) in col.iter_mut().enumerate() {
-                        *c -= dot * u.get(i, jj);
-                    }
-                }
-                let norm = col.iter().map(|x| x * x).sum::<f64>().sqrt();
-                if norm > 1e-6 {
-                    for c in col.iter_mut() {
-                        *c /= norm;
-                    }
-                    break 'basis;
-                }
-            }
-            for i in 0..m {
-                u.set(i, j, col[i]);
-            }
+            // Degenerate direction: orthogonal completion, via the same
+            // shared helper as `mgs_qr`'s rank-deficiency handling.
+            super::qr::complete_orthonormal_column(&mut u, j);
         }
     }
     (u, s, v)
@@ -141,6 +124,55 @@ mod tests {
         assert!(back.dist_fro(&a) < 1e-8);
         // U columns stay orthonormal even for the null direction.
         assert!(u.t_matmul(&u).dist_fro(&Mat::eye(2)) < 1e-8);
+    }
+
+    #[test]
+    fn tiny_magnitude_matrix_keeps_its_directions() {
+        // Regression: a well-conditioned matrix scaled to ~1e-20 used to
+        // have every direction misclassified as degenerate (the old
+        // threshold compared s[j] against an *absolute* 1e-12), so U was
+        // replaced by arbitrary basis vectors and U·diag(s)·Vᵀ no longer
+        // matched A even in relative terms.
+        let mut rng = Rng::new(5);
+        let a = Mat::gauss(8, 3, &mut rng).scale(1e-20);
+        let (u, s, v) = svd_small(&a);
+        assert!(u.is_finite() && v.is_finite());
+        assert!(s[0] > 0.0 && s[0] < 1e-12, "scale sanity: s0={}", s[0]);
+        assert!(u.t_matmul(&u).dist_fro(&Mat::eye(3)) < 1e-8);
+        let back = u.matmul(&Mat::diag(&s)).matmul(&v.transpose());
+        assert!(
+            back.dist_fro(&a) < 1e-7 * a.fro_norm(),
+            "relative reconstruction: {}",
+            back.dist_fro(&a) / a.fro_norm()
+        );
+        // Singular values must scale linearly with the matrix.
+        let (_, s_big, _) = svd_small(&a.scale(1e20));
+        for (small, big) in s.iter().zip(s_big.iter()) {
+            assert!((small * 1e20 - big).abs() < 1e-7 * big.max(1e-30));
+        }
+    }
+
+    #[test]
+    fn near_rank_deficient_tiny_matrix_degenerates_gracefully() {
+        // One genuinely vanished direction at tiny magnitude: the kept
+        // directions must come from the data, the vanished one from the
+        // orthogonal completion — U stays orthonormal either way.
+        let mut rng = Rng::new(6);
+        let mut a = Mat::gauss(9, 3, &mut rng);
+        for i in 0..9 {
+            let v = a.get(i, 0);
+            a.set(i, 2, v); // col 2 = col 0: rank 2
+        }
+        let a = a.scale(1e-18);
+        let (u, s, v) = svd_small(&a);
+        assert!(u.is_finite() && v.is_finite());
+        assert!(s[1] > 1e-12 * s[0] * 10.0, "second direction is real");
+        // Exact column duplication reaches the Gram matrix as a zero
+        // eigenvalue up to roundoff, i.e. ~√ε relative after the sqrt.
+        assert!(s[2] < 1e-6 * s[0], "third direction vanished: {}", s[2] / s[0]);
+        assert!(u.t_matmul(&u).dist_fro(&Mat::eye(3)) < 1e-6);
+        let back = u.matmul(&Mat::diag(&s)).matmul(&v.transpose());
+        assert!(back.dist_fro(&a) < 1e-6 * a.fro_norm());
     }
 
     #[test]

@@ -10,22 +10,70 @@
 //!
 //! flags: --seed N --scale F --trials N --threads N --out DIR
 //!        --config FILE.json --trial-parallel on|off
-//!        --mpi-clock real|virtual
+//!        --mpi-clock real|virtual --qr householder|blocked|tsqr
 //! ```
 //!
 //! `--threads` is one knob for two parallelism levels: Monte-Carlo
 //! trials fan out across a trial pool, and within a trial the simulated
 //! network parallelizes across nodes and (for large d) across rows.
 //! Tables are byte-identical for every thread count and either level —
-//! see `config` and `runtime::pool` for the contract.
+//! see `config` and `runtime::pool` for the contract. `--qr` selects the
+//! step-12 orthonormalization kernel (`linalg::qr::QrPolicy`); the TSQR
+//! kernel additionally fans each node's QR across rows, with results
+//! bitwise stable across `--threads` (fixed reduction tree).
+//!
+//! Flags are validated against the registry below: a typo'd flag or a
+//! value-typed flag with a missing value is a hard error listing the
+//! valid flags, never silently ignored.
 
 use anyhow::Result;
 use dpsa::config::load_ctx;
 use dpsa::experiments::{all_ids, run};
-use dpsa::util::cli::Args;
+use dpsa::util::cli::{Args, FlagSpec};
+
+/// Every flag the CLI accepts; `Args::from_env_checked` rejects
+/// anything else with a message listing this table.
+const FLAGS: &[FlagSpec] = &[
+    FlagSpec { name: "seed", takes_value: true, help: "base RNG seed (u64)" },
+    FlagSpec {
+        name: "scale",
+        takes_value: true,
+        help: "fraction of the paper's iteration counts, in (0, 10]",
+    },
+    FlagSpec { name: "trials", takes_value: true, help: "Monte-Carlo trials (>= 1)" },
+    FlagSpec { name: "out", takes_value: true, help: "output directory for artifacts" },
+    FlagSpec { name: "config", takes_value: true, help: "JSON config file (CLI flags win)" },
+    FlagSpec {
+        name: "threads",
+        takes_value: true,
+        help: "total parallelism budget in [1, 256] (trials + nodes + rows)",
+    },
+    FlagSpec {
+        name: "trial-parallel",
+        takes_value: true,
+        help: "fan Monte-Carlo trials across the pool: on|off",
+    },
+    FlagSpec {
+        name: "mpi-clock",
+        takes_value: true,
+        help: "straggler-study clock: real|virtual",
+    },
+    FlagSpec {
+        name: "qr",
+        takes_value: true,
+        help: "step-12 QR kernel: householder|blocked|tsqr",
+    },
+];
 
 fn main() {
-    let args = Args::from_env();
+    let args = match Args::from_env_checked(FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            print_usage();
+            std::process::exit(2);
+        }
+    };
     let code = match dispatch(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -58,6 +106,7 @@ fn dispatch(args: &Args) -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let ctx = load_ctx(args)?;
     dpsa::network::sim::set_default_threads(ctx.threads);
+    dpsa::linalg::qr::set_default_qr_policy(ctx.qr);
     let mut ids: Vec<String> = args.positional[1..].to_vec();
     if ids.iter().any(|i| i == "all") {
         ids = all_ids().iter().map(|s| s.to_string()).collect();
@@ -148,6 +197,7 @@ fn print_usage() {
     println!(
         "usage: dpsa <list|run|info|demo> [ids…] \
          [--seed N] [--scale F] [--trials N] [--threads N] [--out DIR] \
-         [--config FILE] [--trial-parallel on|off] [--mpi-clock real|virtual]"
+         [--config FILE] [--trial-parallel on|off] [--mpi-clock real|virtual] \
+         [--qr householder|blocked|tsqr]"
     );
 }

@@ -24,6 +24,7 @@
 
 pub mod native;
 pub mod pool;
+pub mod qr_exec;
 pub mod spmd;
 pub mod workspace;
 
@@ -34,7 +35,7 @@ pub mod xla;
 #[path = "xla_stub.rs"]
 pub mod xla;
 
-use crate::linalg::qr::QrScratch;
+use crate::linalg::qr::{QrPolicy, QrScratch};
 use crate::linalg::{CovOp, Mat};
 
 /// Numerical backend for the per-node hot path.
@@ -67,6 +68,14 @@ pub trait Backend: Sync {
         let q = self.orthonormalize(v);
         out.copy_from(&q);
         let _ = ws;
+    }
+
+    /// Which QR kernel this backend's step-12 orthonormalization uses
+    /// (the `--qr` knob). Runners consult it to pick the TSQR
+    /// (node × leaf) fan-out in [`qr_exec::orthonormalize_nodes`];
+    /// backends with opaque orthonormalization keep the scalar default.
+    fn qr_policy(&self) -> QrPolicy {
+        QrPolicy::Householder
     }
 
     /// Whether this backend's `M_i Q` product decomposes into the
@@ -106,6 +115,7 @@ pub trait Backend: Sync {
 
 pub use native::NativeBackend;
 pub use pool::{DisjointSlice, NodePool};
+pub use qr_exec::QrFanScratch;
 pub use workspace::{
     node_scratch, ConsensusWorkspace, DisjointMatRows, MatRowsScratch, NodeScratch,
 };

@@ -1,12 +1,35 @@
 //! Pure-Rust backend (f64, `linalg`).
 
 use super::Backend;
-use crate::linalg::qr::{self, QrScratch};
+use crate::linalg::qr::{self, QrPolicy, QrScratch};
 use crate::linalg::{CovOp, Mat};
 
 /// The default backend: exact f64 arithmetic via the in-repo linalg.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct NativeBackend;
+///
+/// Carries the step-12 [`QrPolicy`]: [`NativeBackend::default`] snapshots
+/// the process-wide knob (`--qr` / `"qr"` / `BENCH_QR`), while
+/// [`NativeBackend::with_policy`] pins an explicit kernel — the race-free
+/// route for tests, which run concurrently in one process and must not
+/// mutate the global default.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeBackend {
+    /// Step-12 orthonormalization kernel.
+    pub qr: QrPolicy,
+}
+
+impl NativeBackend {
+    /// Backend pinned to an explicit QR policy.
+    pub fn with_policy(qr: QrPolicy) -> NativeBackend {
+        NativeBackend { qr }
+    }
+}
+
+impl Default for NativeBackend {
+    /// Snapshots the process-wide default QR policy at construction.
+    fn default() -> NativeBackend {
+        NativeBackend { qr: qr::default_qr_policy() }
+    }
+}
 
 impl Backend for NativeBackend {
     fn cov_apply(&self, cov: &CovOp, q: &Mat) -> Mat {
@@ -14,7 +37,7 @@ impl Backend for NativeBackend {
     }
 
     fn orthonormalize(&self, v: &Mat) -> Mat {
-        qr::orthonormalize(v)
+        qr::orthonormalize_policy(v, self.qr)
     }
 
     fn cov_apply_into(&self, cov: &CovOp, q: &Mat, out: &mut Mat, tmp: &mut Mat) {
@@ -22,7 +45,7 @@ impl Backend for NativeBackend {
     }
 
     fn orthonormalize_into(&self, v: &Mat, out: &mut Mat, ws: &mut QrScratch) {
-        qr::orthonormalize_into(v, out, ws);
+        qr::orthonormalize_policy_into(v, out, ws, self.qr);
     }
 
     /// The native row kernels assemble bitwise to `cov_apply_into`
@@ -30,6 +53,10 @@ impl Backend for NativeBackend {
     /// sound here.
     fn supports_row_split(&self) -> bool {
         true
+    }
+
+    fn qr_policy(&self) -> QrPolicy {
+        self.qr
     }
 
     fn name(&self) -> &'static str {
@@ -48,7 +75,7 @@ mod tests {
         let x = Mat::gauss(10, 40, &mut rng);
         let cov = CovOp::from_samples(x.clone());
         let q = Mat::random_orthonormal(10, 3, &mut rng);
-        let b = NativeBackend;
+        let b = NativeBackend::default();
         assert!(b.cov_apply(&cov, &q).dist_fro(&cov.apply(&q)) < 1e-12);
         let v = Mat::gauss(10, 3, &mut rng);
         let qn = b.orthonormalize(&v);
@@ -61,7 +88,7 @@ mod tests {
         let x = Mat::gauss(12, 50, &mut rng);
         let cov = CovOp::from_samples(x);
         let q = Mat::random_orthonormal(12, 4, &mut rng);
-        let b = NativeBackend;
+        let b = NativeBackend::default();
         let mut out = Mat::zeros(0, 0);
         let mut tmp = Mat::zeros(0, 0);
         b.cov_apply_into(&cov, &q, &mut out, &mut tmp);
@@ -78,9 +105,26 @@ mod tests {
         let x = Mat::gauss(8, 30, &mut rng);
         let cov = CovOp::from_samples(x);
         let q = Mat::random_orthonormal(8, 2, &mut rng);
-        let b = NativeBackend;
+        let b = NativeBackend::default();
         let one = b.oi_step(&cov, &q);
         let two = b.orthonormalize(&b.cov_apply(&cov, &q));
         assert!(one.dist_fro(&two) < 1e-12);
+    }
+
+    #[test]
+    fn policy_field_routes_the_kernel() {
+        // Each pinned policy must agree with its linalg kernel bitwise.
+        let mut rng = Rng::new(4);
+        let v = Mat::gauss(300, 4, &mut rng);
+        for policy in QrPolicy::ALL {
+            let b = NativeBackend::with_policy(policy);
+            assert_eq!(b.qr_policy(), policy);
+            let got = b.orthonormalize(&v);
+            let want = qr::orthonormalize_policy(&v, policy);
+            assert_eq!(got.data, want.data, "{policy:?}");
+        }
+        // The default backend follows the process-wide default knob
+        // (Householder unless an entry point set otherwise).
+        assert_eq!(NativeBackend::default().qr_policy(), qr::default_qr_policy());
     }
 }

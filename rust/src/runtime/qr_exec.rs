@@ -1,0 +1,251 @@
+//! Step-12 orthonormalization executor: per-node policy dispatch plus
+//! the TSQR **(node × leaf)** fan-out.
+//!
+//! Every per-node QR in this crate used to be sequential inside its node
+//! chunk — the last serial stage of the outer iteration. For the
+//! [`QrPolicy::Tsqr`] policy this module flattens the work one level
+//! further: node `i`'s input is split into its fixed
+//! [`tsqr_leaves`]`(d, r)` row blocks, and the `Σ_i L_i` leaf
+//! factorizations fan across the pool as one task grid (then again for
+//! the leaf-apply stage), so a d = 2914 QR uses every core even at
+//! N < threads.
+//!
+//! # Determinism
+//!
+//! The leaf partition and the reduction tree are pure functions of each
+//! matrix's shape (`tsqr_leaves` / `tsqr_leaf_bounds` — the same
+//! `chunk_bounds` policy as `run_chunks2`), never of the thread count;
+//! each leaf owns a private scratch; and the three phases run the
+//! *identical* kernels as the serial `qr::tsqr_into`. So for any
+//! `--threads` the output is bitwise the serial result — the same
+//! contract as every other dispatch in [`crate::runtime::pool`]
+//! (asserted by `tests/test_parallel_determinism.rs`).
+//!
+//! All fan-out buffers live in [`QrFanScratch`] and only grow, keeping
+//! the steady-state outer iteration at zero heap allocations
+//! (`bench_hotpath` / `bench_qr` counting allocators).
+
+use crate::linalg::qr::{
+    tsqr_apply_leaf, tsqr_factor_leaf, tsqr_leaf_bounds, tsqr_leaves, tsqr_reduce, QrPolicy,
+    TsqrLeaf, TsqrTree,
+};
+use crate::linalg::Mat;
+use crate::runtime::pool::{DisjointSlice, NodePool};
+use crate::runtime::workspace::{MatRowsScratch, NodeScratch};
+use crate::runtime::Backend;
+
+/// Reusable flat (node × leaf) workspace for the TSQR fan-out: node
+/// `i`'s leaves live at `leaves[i·lmax .. i·lmax + L_i]` (node-major),
+/// its reduction tree at `trees[i]`. Buffers only grow, so after warm-up
+/// the fan-out allocates nothing.
+#[derive(Debug, Default)]
+pub struct QrFanScratch {
+    leaves: Vec<TsqrLeaf>,
+    trees: Vec<TsqrTree>,
+}
+
+impl QrFanScratch {
+    pub fn new() -> QrFanScratch {
+        QrFanScratch::default()
+    }
+
+    fn ensure(&mut self, nodes: usize, lmax: usize) {
+        if self.leaves.len() < nodes * lmax {
+            self.leaves.resize_with(nodes * lmax, TsqrLeaf::default);
+        }
+        if self.trees.len() < nodes {
+            self.trees.resize_with(nodes, TsqrTree::default);
+        }
+    }
+}
+
+/// Orthonormalize every `z[i]` into `q[i]` (Alg. 1 step 12) across the
+/// pool, honoring the backend's [`QrPolicy`].
+///
+/// Householder/Blocked policies (and any non-row-split backend) keep the
+/// node-level dispatch: one chunk per node, QR sequential within it. The
+/// TSQR policy on a row-split backend with threads to spare switches to
+/// the three-phase (node × leaf) fan-out described in the module docs.
+pub fn orthonormalize_nodes(
+    pool: &NodePool,
+    backend: &dyn Backend,
+    z: &[Mat],
+    q: &mut [Mat],
+    scratch: &mut [NodeScratch],
+    fan: &mut QrFanScratch,
+    views: &mut MatRowsScratch,
+) {
+    let n = z.len();
+    assert_eq!(q.len(), n, "z/q node count mismatch");
+    assert_eq!(scratch.len(), n, "z/scratch node count mismatch");
+    let fanout = backend.qr_policy() == QrPolicy::Tsqr
+        && backend.supports_row_split()
+        && pool.threads() > 1
+        && z.iter().any(|zi| tsqr_leaves(zi.rows, zi.cols) > 1);
+    if !fanout {
+        let qs = DisjointSlice::new(q);
+        let scr = DisjointSlice::new(scratch);
+        pool.run_chunks(n, &|lo, hi| {
+            for i in lo..hi {
+                // SAFETY: index i belongs to exactly one chunk.
+                let (qi, si) = unsafe { (qs.get_mut(i), scr.get_mut(i)) };
+                backend.orthonormalize_into(&z[i], qi, &mut si.qr);
+            }
+        });
+        return;
+    }
+
+    let lmax = z.iter().map(|zi| tsqr_leaves(zi.rows, zi.cols)).max().unwrap_or(1);
+    fan.ensure(n, lmax);
+    for (qi, zi) in q.iter_mut().zip(z.iter()) {
+        qi.reshape_in_place(zi.rows, zi.cols);
+    }
+    // Phase A: leaf factorizations over the flattened (node, leaf) grid.
+    {
+        let leaves = DisjointSlice::new(&mut fan.leaves);
+        pool.run_chunks(n * lmax, &|lo, hi| {
+            for t in lo..hi {
+                let (i, c) = (t / lmax, t % lmax);
+                let li = tsqr_leaves(z[i].rows, z[i].cols);
+                if c >= li {
+                    continue;
+                }
+                let (rlo, rhi) = tsqr_leaf_bounds(z[i].rows, li, c);
+                // SAFETY: slot (i, c) belongs to exactly one task.
+                let leaf = unsafe { leaves.get_mut(i * lmax + c) };
+                tsqr_factor_leaf(&z[i], rlo, rhi, leaf);
+            }
+        });
+    }
+    // Phase B: per-node R-tree reduction + leaf coefficients (r×r work;
+    // nodes with a single leaf have no tree).
+    {
+        let trees = DisjointSlice::new(&mut fan.trees);
+        let leaves = &fan.leaves;
+        pool.run_chunks(n, &|lo, hi| {
+            for i in lo..hi {
+                let li = tsqr_leaves(z[i].rows, z[i].cols);
+                if li <= 1 {
+                    continue;
+                }
+                // SAFETY: tree i belongs to exactly one chunk.
+                let tree = unsafe { trees.get_mut(i) };
+                tsqr_reduce(&leaves[i * lmax..i * lmax + li], tree, z[i].cols);
+            }
+        });
+    }
+    // Phase C: expand each leaf's slice of the final Q, again over the
+    // (node, leaf) grid — disjoint row ranges of q[i].
+    {
+        let qviews = views.fill(q);
+        let leaves = &fan.leaves;
+        let trees = &fan.trees;
+        pool.run_chunks(n * lmax, &|lo, hi| {
+            for t in lo..hi {
+                let (i, c) = (t / lmax, t % lmax);
+                let li = tsqr_leaves(z[i].rows, z[i].cols);
+                if c >= li {
+                    continue;
+                }
+                let (rlo, rhi) = tsqr_leaf_bounds(z[i].rows, li, c);
+                // SAFETY: rows [rlo, rhi) of q[i] belong to one task.
+                let out = unsafe { qviews.rows_mut(i, rlo, rhi) };
+                let leaf = &leaves[i * lmax + c];
+                if li == 1 {
+                    // Single leaf: the leaf factor *is* the thin Q —
+                    // bitwise the serial `tsqr_into` delegation to the
+                    // scalar kernel for this shape.
+                    out.copy_from_slice(&leaf.q().data);
+                } else {
+                    tsqr_apply_leaf(leaf, trees[i].coeff(c), out);
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::{tsqr_into, QrScratch};
+    use crate::runtime::workspace::node_scratch;
+    use crate::runtime::NativeBackend;
+    use crate::util::rng::Rng;
+
+    fn fanout_inputs(seed: u64, shapes: &[(usize, usize)]) -> Vec<Mat> {
+        let mut rng = Rng::new(seed);
+        shapes.iter().map(|&(m, n)| Mat::gauss(m, n, &mut rng)).collect()
+    }
+
+    fn serial_reference(z: &[Mat]) -> Vec<Mat> {
+        let mut ws = QrScratch::new();
+        z.iter()
+            .map(|zi| {
+                let mut q = Mat::zeros(0, 0);
+                tsqr_into(zi, &mut q, None, &mut ws);
+                q
+            })
+            .collect()
+    }
+
+    /// The pooled fan-out must be bitwise the serial `tsqr_into`, for
+    /// any thread count, leaf-count mix (incl. single-leaf nodes), and
+    /// across repeated dispatches on reused scratch.
+    #[test]
+    fn fanout_bitwise_matches_serial_tsqr() {
+        let z = fanout_inputs(1, &[(300, 4), (100, 4), (350, 3), (420, 5)]);
+        let want = serial_reference(&z);
+        let backend = NativeBackend::with_policy(QrPolicy::Tsqr);
+        for &threads in &[2usize, 4, 9] {
+            let pool = NodePool::new(threads);
+            let mut q: Vec<Mat> = (0..z.len()).map(|_| Mat::zeros(0, 0)).collect();
+            let mut scratch = node_scratch(z.len());
+            let mut fan = QrFanScratch::new();
+            let mut views = MatRowsScratch::new();
+            for round in 0..3 {
+                orthonormalize_nodes(
+                    &pool, &backend, &z, &mut q, &mut scratch, &mut fan, &mut views,
+                );
+                for (i, (got, exp)) in q.iter().zip(want.iter()).enumerate() {
+                    assert_eq!((got.rows, got.cols), (exp.rows, exp.cols));
+                    assert_eq!(got.data, exp.data, "threads={threads} round={round} node={i}");
+                }
+            }
+        }
+    }
+
+    /// threads = 1 (and non-TSQR policies) take the per-node path and
+    /// must agree with the fan-out bitwise too.
+    #[test]
+    fn node_path_and_fanout_agree() {
+        let z = fanout_inputs(2, &[(300, 4), (300, 4)]);
+        let backend = NativeBackend::with_policy(QrPolicy::Tsqr);
+        let run = |threads: usize| {
+            let pool = NodePool::new(threads);
+            let mut q: Vec<Mat> = (0..z.len()).map(|_| Mat::zeros(0, 0)).collect();
+            let mut scratch = node_scratch(z.len());
+            let mut fan = QrFanScratch::new();
+            let mut views = MatRowsScratch::new();
+            orthonormalize_nodes(&pool, &backend, &z, &mut q, &mut scratch, &mut fan, &mut views);
+            q
+        };
+        let serial = run(1);
+        let pooled = run(4);
+        for (a, b) in serial.iter().zip(pooled.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+        // Householder policy through the same entry point: orthonormal
+        // output via the node-level dispatch.
+        let backend_h = NativeBackend::with_policy(QrPolicy::Householder);
+        let pool = NodePool::new(4);
+        let mut q: Vec<Mat> = (0..z.len()).map(|_| Mat::zeros(0, 0)).collect();
+        let mut scratch = node_scratch(z.len());
+        let mut fan = QrFanScratch::new();
+        let mut views = MatRowsScratch::new();
+        orthonormalize_nodes(&pool, &backend_h, &z, &mut q, &mut scratch, &mut fan, &mut views);
+        for qi in &q {
+            let g = qi.t_matmul(qi);
+            assert!(g.dist_fro(&Mat::eye(qi.cols)) < 1e-10);
+        }
+    }
+}

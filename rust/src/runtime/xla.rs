@@ -144,7 +144,7 @@ impl XlaBackend {
             execs: Mutex::new(HashMap::new()),
             entries,
             dir: dir.to_path_buf(),
-            fallback: NativeBackend,
+            fallback: NativeBackend::default(),
             buf_cache: Mutex::new(HashMap::new()),
             stats: Mutex::new(XlaStats::default()),
         };

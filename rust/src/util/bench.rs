@@ -140,7 +140,9 @@ pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
 /// parallelism; `BENCH_TRIAL_PARALLEL=0` pins the trial level off).
 /// `BENCH_MPI_CLOCK=virtual` switches the Table-V straggler runs onto
 /// the deterministic virtual clock (instant; real sleeps remain the
-/// default for wall-clock runs).
+/// default for wall-clock runs). `BENCH_QR=householder|blocked|tsqr`
+/// selects the step-12 QR kernel (same spellings as `--qr`; unknown
+/// values are a hard error).
 pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
     let scale = std::env::var("BENCH_SCALE")
         .ok()
@@ -165,7 +167,13 @@ pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
         Some("virtual") => crate::network::mpi::ClockMode::Virtual,
         _ => crate::network::mpi::ClockMode::Real,
     };
+    let qr = match std::env::var("BENCH_QR").ok().as_deref() {
+        None => crate::linalg::qr::QrPolicy::Householder,
+        Some(s) => crate::linalg::qr::QrPolicy::parse(s)
+            .unwrap_or_else(|| panic!("BENCH_QR must be householder|blocked|tsqr, got '{s}'")),
+    };
     crate::network::sim::set_default_threads(threads);
+    crate::linalg::qr::set_default_qr_policy(qr);
     crate::experiments::ExpCtx {
         seed: 42,
         scale,
@@ -174,6 +182,7 @@ pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
         threads,
         trial_parallel,
         mpi_clock,
+        qr,
     }
 }
 

@@ -1,13 +1,45 @@
 //! Tiny command-line argument parser (`clap` is not available offline).
 //!
-//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments. Two entry points:
+//!
+//! * [`Args::parse`] — permissive, untyped (library/test helper). Every
+//!   `--key` is accepted and a flag at end-of-argv becomes `"true"`.
+//! * [`Args::parse_checked`] — the CLI path: flags are validated against
+//!   a registered [`FlagSpec`] set, so an unknown or typo'd flag (e.g.
+//!   `--trail-parallel` for `--trial-parallel`) fails with a message
+//!   listing the valid flags instead of being silently swallowed and
+//!   ignored, and a value-typed flag with a missing value (end of argv,
+//!   or followed by another `--flag`) is an error rather than `"true"`.
 
 use std::collections::BTreeMap;
+
+/// One registered flag for [`Args::parse_checked`].
+#[derive(Clone, Copy, Debug)]
+pub struct FlagSpec {
+    /// Flag name without the leading `--`.
+    pub name: &'static str,
+    /// Whether the flag consumes a value (`--key value` / `--key=value`).
+    pub takes_value: bool,
+    /// One-line help shown in error messages.
+    pub help: &'static str,
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub positional: Vec<String>,
     pub flags: BTreeMap<String, String>,
+}
+
+/// Split one argv token into `(key, inline_value)` if it is a flag —
+/// the single tokenization rule (`--key` / `--key=value`) shared by the
+/// permissive and the checked parser, so their flag syntax can't drift.
+fn split_flag(a: &str) -> Option<(&str, Option<&str>)> {
+    let rest = a.strip_prefix("--")?;
+    Some(match rest.split_once('=') {
+        Some((k, v)) => (k, Some(v)),
+        None => (rest, None),
+    })
 }
 
 impl Args {
@@ -16,18 +48,18 @@ impl Args {
         let mut out = Args::default();
         let mut it = args.into_iter().peekable();
         while let Some(a) = it.next() {
-            if let Some(rest) = a.strip_prefix("--") {
-                if let Some((k, v)) = rest.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+            if let Some((key, inline)) = split_flag(&a) {
+                if let Some(v) = inline {
+                    out.flags.insert(key.to_string(), v.to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
-                    out.flags.insert(rest.to_string(), v);
+                    out.flags.insert(key.to_string(), v);
                 } else {
-                    out.flags.insert(rest.to_string(), "true".to_string());
+                    out.flags.insert(key.to_string(), "true".to_string());
                 }
             } else {
                 out.positional.push(a);
@@ -36,9 +68,70 @@ impl Args {
         out
     }
 
+    /// Parse and validate against a registered flag set. Errors carry a
+    /// human-readable message (unknown flag → the full valid-flag list;
+    /// missing value → the flag's help line).
+    pub fn parse_checked<I: IntoIterator<Item = String>>(
+        args: I,
+        specs: &[FlagSpec],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter();
+        while let Some(a) = it.next() {
+            let Some((key, inline)) = split_flag(&a) else {
+                out.positional.push(a);
+                continue;
+            };
+            let inline = inline.map(|v| v.to_string());
+            let spec = specs
+                .iter()
+                .find(|s| s.name == key)
+                .ok_or_else(|| unknown_flag_message(key, specs))?;
+            let value = match (spec.takes_value, inline) {
+                (true, Some(v)) => v,
+                (false, Some(v)) => {
+                    // A switch flag only accepts boolean spellings inline;
+                    // anything else is the silent-misconfiguration class
+                    // this parser exists to reject.
+                    match v.as_str() {
+                        "true" | "1" | "yes" | "on" | "false" | "0" | "no" | "off" => v,
+                        other => {
+                            return Err(format!(
+                                "flag '--{key}' is a switch; '--{key}={other}' is not a \
+                                 boolean (use true/false)"
+                            ))
+                        }
+                    }
+                }
+                (false, None) => "true".to_string(),
+                (true, None) => {
+                    // A value-typed flag must be followed by a value; the
+                    // end of argv or another `--flag` is an error, not an
+                    // implicit "true".
+                    match it.next() {
+                        Some(v) if !v.starts_with("--") => v,
+                        _ => {
+                            return Err(format!(
+                                "flag '--{key}' requires a value ({})",
+                                spec.help
+                            ))
+                        }
+                    }
+                }
+            };
+            out.flags.insert(key.to_string(), value);
+        }
+        Ok(out)
+    }
+
     /// Parse from the process environment (skipping argv[0]).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
+    }
+
+    /// [`Args::parse_checked`] over the process environment.
+    pub fn from_env_checked(specs: &[FlagSpec]) -> Result<Args, String> {
+        Args::parse_checked(std::env::args().skip(1), specs)
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -66,12 +159,33 @@ impl Args {
     }
 }
 
+fn unknown_flag_message(key: &str, specs: &[FlagSpec]) -> String {
+    let mut msg = format!("unknown flag '--{key}'; valid flags:\n");
+    for s in specs {
+        let val = if s.takes_value { " <value>" } else { "" };
+        msg.push_str(&format!("  --{}{:<10} {}\n", s.name, val, s.help));
+    }
+    msg.pop(); // drop the trailing newline
+    msg
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn parse(s: &[&str]) -> Args {
         Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    const SPECS: &[FlagSpec] = &[
+        FlagSpec { name: "seed", takes_value: true, help: "RNG seed" },
+        FlagSpec { name: "delta", takes_value: true, help: "a float" },
+        FlagSpec { name: "fast", takes_value: false, help: "a switch" },
+        FlagSpec { name: "trial-parallel", takes_value: true, help: "on|off" },
+    ];
+
+    fn parse_checked(s: &[&str]) -> Result<Args, String> {
+        Args::parse_checked(s.iter().map(|s| s.to_string()), SPECS)
     }
 
     #[test]
@@ -109,5 +223,67 @@ mod tests {
         // A value that starts with '-' but not '--' is consumed as a value.
         let a = parse(&["--delta", "-0.5"]);
         assert_eq!(a.get_f64("delta", 0.0), -0.5);
+    }
+
+    // ---- checked parsing ----
+
+    #[test]
+    fn checked_accepts_registered_flags() {
+        let a = parse_checked(&["run", "--seed", "7", "--fast", "--delta=-0.5"]).unwrap();
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert!(a.get_bool("fast"));
+        assert_eq!(a.get_f64("delta", 0.0), -0.5);
+    }
+
+    #[test]
+    fn checked_rejects_unknown_flag_listing_valid_ones() {
+        // The motivating typo: --trail-parallel for --trial-parallel.
+        let err = parse_checked(&["--trail-parallel", "off"]).unwrap_err();
+        assert!(err.contains("unknown flag '--trail-parallel'"), "{err}");
+        assert!(err.contains("--trial-parallel"), "must list valid flags: {err}");
+        assert!(err.contains("--seed"), "must list valid flags: {err}");
+    }
+
+    #[test]
+    fn checked_rejects_missing_value_at_end_of_argv() {
+        let err = parse_checked(&["--seed"]).unwrap_err();
+        assert!(err.contains("requires a value"), "{err}");
+        assert!(err.contains("RNG seed"), "should echo the help: {err}");
+    }
+
+    #[test]
+    fn checked_rejects_value_flag_followed_by_flag() {
+        let err = parse_checked(&["--seed", "--fast"]).unwrap_err();
+        assert!(err.contains("'--seed' requires a value"), "{err}");
+    }
+
+    #[test]
+    fn checked_switch_at_end_is_true() {
+        let a = parse_checked(&["--fast"]).unwrap();
+        assert!(a.get_bool("fast"));
+    }
+
+    #[test]
+    fn checked_negative_value_consumed() {
+        let a = parse_checked(&["--delta", "-1.5"]).unwrap();
+        assert_eq!(a.get_f64("delta", 0.0), -1.5);
+    }
+
+    #[test]
+    fn checked_equals_form_still_works() {
+        let a = parse_checked(&["--trial-parallel=off"]).unwrap();
+        assert_eq!(a.get("trial-parallel"), Some("off"));
+    }
+
+    #[test]
+    fn checked_switch_rejects_non_boolean_inline_value() {
+        // '--fast=of' (typo'd 'off') must not silently become false.
+        let err = parse_checked(&["--fast=of"]).unwrap_err();
+        assert!(err.contains("'--fast' is a switch"), "{err}");
+        for ok in ["true", "false", "1", "0", "yes", "no", "on", "off"] {
+            let a = parse_checked(&[format!("--fast={ok}").as_str()]).unwrap();
+            assert_eq!(a.get("fast"), Some(ok));
+        }
     }
 }

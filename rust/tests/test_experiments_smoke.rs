@@ -19,6 +19,7 @@ fn tiny_ctx(name: &str) -> ExpCtx {
         // Straggler smokes run on the deterministic virtual clock: no
         // sleeps, no wall-clock flakiness on loaded CI.
         mpi_clock: ClockMode::Virtual,
+        ..ExpCtx::default()
     }
 }
 

@@ -10,8 +10,10 @@
 //! columns) must be byte-identical across all eight configurations.
 
 use dpsa::algorithms::fdot::{run_fdot, FdotConfig, FeatureSetting};
-use dpsa::algorithms::sdot::{run_sdot, SdotConfig};
+use dpsa::algorithms::sdot::{run_sdot, run_sdot_with_backend, SdotConfig};
 use dpsa::algorithms::SampleSetting;
+use dpsa::linalg::qr::QrPolicy;
+use dpsa::runtime::NativeBackend;
 use dpsa::consensus::schedule::Schedule;
 use dpsa::data::partition::partition_features;
 use dpsa::data::spectrum::Spectrum;
@@ -154,6 +156,50 @@ fn hierarchical_row_split_bitwise_matches_serial_and_flat() {
         {
             assert_eq!(a.error.to_bits(), b.error.to_bits());
             assert_eq!(a.error.to_bits(), c.error.to_bits());
+        }
+    }
+}
+
+/// Every [`QrPolicy`] must be bitwise thread-count-invariant through the
+/// full S-DOT loop: the run's estimates *and* its trace table (error +
+/// P2P columns at full f64 precision) must be byte-identical at threads
+/// ∈ {1, 2, 4, 9}. The setting is d = 300 on N = 2, so at threads > 2
+/// the TSQR policy actually engages its (node × leaf) fan-out — the
+/// threads = 1 column is the serial `tsqr_into` path, pinning the
+/// serial/pooled parity too. Policies are pinned via
+/// `NativeBackend::with_policy` (never the process-global knob, which
+/// would race with concurrently running tests).
+#[test]
+fn qr_policies_bitwise_identical_across_thread_matrix() {
+    let mut rng = Rng::new(11);
+    let spec = Spectrum::with_gap(300, 4, 0.6);
+    let ds = SyntheticDataset::full(&spec, 120, 2, &mut rng);
+    let s = SampleSetting::from_parts(&ds.parts, 4, &mut rng);
+    let g = Graph::complete(2);
+    let cfg = SdotConfig::new(Schedule::fixed(8), 6);
+    for policy in QrPolicy::ALL {
+        let backend = NativeBackend::with_policy(policy);
+        let mut reference: Option<(Vec<Mat>, String)> = None;
+        for &threads in &MATRIX_THREADS {
+            let mut net = SyncNetwork::with_threads(g.clone(), threads);
+            let (q, tr) = run_sdot_with_backend(&mut net, &s, &cfg, &backend);
+            let mut table = String::new();
+            for rec in &tr.records {
+                table.push_str(&format!(
+                    "{} {} {} {}\n",
+                    rec.outer,
+                    rec.total_iters,
+                    rec.error.to_bits(),
+                    rec.p2p_avg.to_bits()
+                ));
+            }
+            match &reference {
+                None => reference = Some((q, table)),
+                Some((q0, t0)) => {
+                    assert_bitwise_eq(q0, &q);
+                    assert_eq!(t0, &table, "{policy:?} threads={threads} trace diverged");
+                }
+            }
         }
     }
 }

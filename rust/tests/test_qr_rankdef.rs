@@ -1,0 +1,109 @@
+//! Rank-collapsed iterates through the full S-DOT steady-state loop at
+//! every [`QrPolicy`], plus the zero-allocation contract of the policy
+//! kernels on rank-deficient inputs.
+//!
+//! This file deliberately contains a SINGLE test: it installs a
+//! process-global counting allocator, and a second test running
+//! concurrently in the same binary would pollute the measured windows.
+
+use dpsa::algorithms::sdot::{run_sdot_with_backend, SdotConfig, SdotRun};
+use dpsa::algorithms::SampleSetting;
+use dpsa::consensus::schedule::Schedule;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::graph::Graph;
+use dpsa::linalg::qr::{orthonormalize_policy_into, tsqr_leaves, QrPolicy, QrScratch};
+use dpsa::linalg::Mat;
+use dpsa::network::sim::SyncNetwork;
+use dpsa::runtime::NativeBackend;
+use dpsa::util::bench::{alloc_snapshot, CountingAlloc};
+use dpsa::util::rng::Rng;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn ortho_err(q: &Mat) -> f64 {
+    q.t_matmul(q).dist_fro(&Mat::eye(q.cols))
+}
+
+/// Duplicate column `src` into column `dst` (collapses the rank by one).
+fn collapse(m: &mut Mat, src: usize, dst: usize) {
+    for i in 0..m.rows {
+        let v = m.get(i, src);
+        m.set(i, dst, v);
+    }
+}
+
+#[test]
+fn rank_collapsed_iterates_stay_finite_orthonormal_and_alloc_free() {
+    // --- kernel level: a Z with duplicated columns, every policy -------
+    // d = 300, r = 40: the blocked kernel runs multiple panels and the
+    // TSQR kernel a real tree (leaves > 1); rank is r − 1.
+    let mut rng = Rng::new(7);
+    let mut z = Mat::gauss(300, 40, &mut rng);
+    collapse(&mut z, 0, 1);
+    assert!(tsqr_leaves(z.rows, z.cols) > 1, "setting must exercise the tree");
+    for policy in QrPolicy::ALL {
+        let mut ws = QrScratch::new();
+        let mut q = Mat::zeros(0, 0);
+        // Warm-up shapes every buffer; afterwards the steady state must
+        // not allocate — even on the rank-deficient input.
+        orthonormalize_policy_into(&z, &mut q, &mut ws, policy);
+        orthonormalize_policy_into(&z, &mut q, &mut ws, policy);
+        let (a0, _) = alloc_snapshot();
+        for _ in 0..5 {
+            orthonormalize_policy_into(&z, &mut q, &mut ws, policy);
+        }
+        let (a1, _) = alloc_snapshot();
+        assert_eq!(a1 - a0, 0, "{policy:?}: steady-state QR allocated");
+        assert!(q.is_finite(), "{policy:?}");
+        assert!(ortho_err(&q) < 1e-8, "{policy:?}: ortho err {}", ortho_err(&q));
+    }
+
+    // --- loop level: S-DOT from a rank-collapsed initialization --------
+    // N = 2 so threads = 4 crosses the TSQR fan-out gate; threads = 1
+    // stays on the serial per-node path.
+    let d = 300;
+    let r = 4;
+    let spec = Spectrum::with_gap(d, r, 0.6);
+    let ds = SyntheticDataset::full(&spec, 120, 2, &mut rng);
+    let mut s = SampleSetting::from_parts(&ds.parts, r, &mut rng);
+    collapse(&mut s.q_init, 0, 1); // the collapsed common init
+    let g = Graph::complete(2);
+    let cfg = SdotConfig::new(Schedule::fixed(10), 8);
+    for policy in QrPolicy::ALL {
+        let backend = NativeBackend::with_policy(policy);
+        for &threads in &[1usize, 4] {
+            let mut net = SyncNetwork::with_threads(g.clone(), threads);
+            let (q, trace) = run_sdot_with_backend(&mut net, &s, &cfg, &backend);
+            for qi in &q {
+                assert!(qi.is_finite(), "{policy:?} threads={threads}");
+                assert!(
+                    ortho_err(qi) < 1e-8,
+                    "{policy:?} threads={threads}: step 12 must restore a full \
+                     orthonormal basis, got ortho err {}",
+                    ortho_err(qi)
+                );
+            }
+            assert!(trace.final_error().is_finite(), "{policy:?} threads={threads}");
+        }
+    }
+
+    // --- steady-state S-DOT allocations at every policy ----------------
+    // threads = 1 keeps the process single-threaded, so the global
+    // counter sees only this loop.
+    for policy in QrPolicy::ALL {
+        let backend = NativeBackend::with_policy(policy);
+        let mut net = SyncNetwork::with_threads(g.clone(), 1);
+        let mut run = SdotRun::new(&mut net, &s, &cfg, &backend);
+        for _ in 0..3 {
+            run.step(); // warm-up: shapes the persistent workspace
+        }
+        let (a0, _) = alloc_snapshot();
+        for _ in 0..4 {
+            run.step();
+        }
+        let (a1, _) = alloc_snapshot();
+        assert_eq!(a1 - a0, 0, "{policy:?}: steady-state S-DOT loop allocated");
+    }
+}

@@ -32,7 +32,7 @@ fn backend_loads_and_compiles_all_artifacts() {
 #[test]
 fn sdot_step_parity_d20() {
     let Some(be) = load() else { return };
-    let native = NativeBackend;
+    let native = NativeBackend::default();
     let mut rng = Rng::new(1);
     let x = Mat::gauss(20, 100, &mut rng);
     let cov = CovOp::dense_from_samples(&x);
@@ -47,7 +47,7 @@ fn sdot_step_parity_d20() {
 #[test]
 fn sdot_step_parity_d64_and_d784() {
     let Some(be) = load() else { return };
-    let native = NativeBackend;
+    let native = NativeBackend::default();
     let mut rng = Rng::new(2);
     for &(d, r) in &[(64usize, 8usize), (784, 5)] {
         let x = Mat::gauss(d, 64, &mut rng);
@@ -68,7 +68,7 @@ fn qr_mgs_parity() {
     let q_xla = be.orthonormalize(&v);
     let gram = q_xla.t_matmul(&q_xla);
     assert!(gram.dist_fro(&Mat::eye(5)) < 1e-4, "{}", gram.dist_fro(&Mat::eye(5)));
-    let q_nat = NativeBackend.orthonormalize(&v);
+    let q_nat = NativeBackend::default().orthonormalize(&v);
     let err = dpsa::metrics::subspace::subspace_error(&q_nat, &q_xla);
     assert!(err < 1e-6, "subspace err={err}"); // f32 artifact precision
 }
@@ -76,7 +76,7 @@ fn qr_mgs_parity() {
 #[test]
 fn fused_oi_step_parity() {
     let Some(be) = load() else { return };
-    let native = NativeBackend;
+    let native = NativeBackend::default();
     let mut rng = Rng::new(4);
     let x = Mat::gauss(20, 200, &mut rng);
     let cov = CovOp::dense_from_samples(&x);
@@ -111,7 +111,7 @@ fn unknown_shape_falls_back_to_native() {
     let v = be.cov_apply(&cov, &q);
     assert!(v.is_finite());
     assert!(be.stats().fallback_calls > before);
-    let v_nat = NativeBackend.cov_apply(&cov, &q);
+    let v_nat = NativeBackend::default().cov_apply(&cov, &q);
     assert!(v.dist_fro(&v_nat) < 1e-12); // fallback is exact native
 }
 
