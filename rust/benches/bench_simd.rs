@@ -1,0 +1,209 @@
+//! SIMD micro-kernel ladder: `--simd scalar|auto|fma` priced on the
+//! dot4/GEMM hot paths.
+//!
+//! Times the three `SimdPolicy` tiers on the kernels the knob dispatches:
+//! the skinny `M_i Q` product at the paper's real-data dimensions
+//! d ∈ {784, 2914} (dense operator and the implicit `X (XᵀQ)` form),
+//! the blocked GEMM, and the d×d Gram/`syrk` — and proves the
+//! zero-allocation steady state at every policy with a counting global
+//! allocator.
+//!
+//! `scalar` vs `auto` differ in speed only (bitwise-identical results —
+//! the determinism contract `test_simd_kernels` locks); `fma` changes
+//! bits by design, so its timings are a separate ledger column, never a
+//! drop-in comparison.
+//!
+//! Results land in `BENCH_simd.json` (override with `BENCH_JSON_OUT`) —
+//! uploaded by CI next to the other perf ledgers. Derived
+//! `simd_*_speedup_*` keys express auto/fma wins over the scalar
+//! baseline at the same shape.
+//!
+//! Run: `cargo bench --bench bench_simd`
+
+use dpsa::linalg::simd::SimdPolicy;
+use dpsa::linalg::{CovOp, Mat};
+use dpsa::util::bench::{alloc_snapshot, time_it, BenchReport, CountingAlloc};
+use dpsa::util::rng::Rng;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn main() {
+    println!("== SIMD micro-kernel benchmarks (dot4 / GEMM hot path) ==\n");
+    for policy in SimdPolicy::ALL {
+        println!("policy {:<6} resolves to {:?}", policy.name(), policy.resolve());
+    }
+    println!();
+
+    let mut rng = Rng::new(42);
+    let mut report = BenchReport::new();
+
+    // --- skinny M_i Q, dense operator (the ROADMAP's "biggest single
+    // win" shape: d×d · d×r with r = 5) --------------------------------
+    for &d in &[784usize, 2914] {
+        let a = Mat::gauss(d, d, &mut rng);
+        let q = Mat::gauss(d, 5, &mut rng);
+        let mut out = Mat::zeros(d, 5);
+        let mut scalar_ns = 0.0;
+        for policy in SimdPolicy::ALL {
+            let t = time_it(2, 9, || {
+                a.matmul_into_with(&q, &mut out, policy);
+                std::hint::black_box(&out);
+            });
+            let ns = t.median.as_nanos() as f64;
+            if policy == SimdPolicy::Scalar {
+                scalar_ns = ns;
+                println!("skinny MQ {:<6} d={d:<4}: {t}", policy.name());
+            } else {
+                println!(
+                    "skinny MQ {:<6} d={d:<4}: {t}  ({:.2}x vs scalar)",
+                    policy.name(),
+                    scalar_ns / ns.max(1.0)
+                );
+                report.push(
+                    &format!("simd_{}_speedup_skinny_d{d}", policy.name()),
+                    scalar_ns / ns.max(1.0),
+                );
+            }
+            report.push(&format!("simd_{}_skinny_d{d}_ns", policy.name()), ns);
+        }
+        println!();
+    }
+
+    // --- implicit M_i Q = (1/s) X (XᵀQ) at LFW scale ------------------
+    {
+        let (d, s, r) = (2914usize, 200usize, 5usize);
+        let x = Mat::gauss(d, s, &mut rng);
+        let cov = CovOp::Samples { x, scale: 1.0 / s as f64 };
+        let q = Mat::gauss(d, r, &mut rng);
+        let mut out = Mat::zeros(0, 0);
+        let mut tmp = Mat::zeros(0, 0);
+        let mut scalar_ns = 0.0;
+        for policy in SimdPolicy::ALL {
+            let t = time_it(2, 9, || {
+                cov.apply_into_with(&q, &mut out, &mut tmp, policy);
+                std::hint::black_box(&out);
+            });
+            let ns = t.median.as_nanos() as f64;
+            if policy == SimdPolicy::Scalar {
+                scalar_ns = ns;
+                println!("implicit MQ {:<6} d={d}: {t}", policy.name());
+            } else {
+                println!(
+                    "implicit MQ {:<6} d={d}: {t}  ({:.2}x vs scalar)",
+                    policy.name(),
+                    scalar_ns / ns.max(1.0)
+                );
+                report.push(
+                    &format!("simd_{}_speedup_implicit_d{d}", policy.name()),
+                    scalar_ns / ns.max(1.0),
+                );
+            }
+            report.push(&format!("simd_{}_implicit_d{d}_ns", policy.name()), ns);
+        }
+        println!();
+    }
+
+    // --- blocked GEMM and the d×d Gram (syrk) -------------------------
+    {
+        let a = Mat::gauss(256, 256, &mut rng);
+        let b = Mat::gauss(256, 256, &mut rng);
+        let mut out = Mat::zeros(256, 256);
+        let mut scalar_ns = 0.0;
+        for policy in SimdPolicy::ALL {
+            let t = time_it(2, 9, || {
+                a.matmul_into_with(&b, &mut out, policy);
+                std::hint::black_box(&out);
+            });
+            let ns = t.median.as_nanos() as f64;
+            if policy == SimdPolicy::Scalar {
+                scalar_ns = ns;
+                println!("gemm 256³  {:<6}: {t}", policy.name());
+            } else {
+                println!(
+                    "gemm 256³  {:<6}: {t}  ({:.2}x vs scalar)",
+                    policy.name(),
+                    scalar_ns / ns.max(1.0)
+                );
+                report.push(
+                    &format!("simd_{}_speedup_gemm256", policy.name()),
+                    scalar_ns / ns.max(1.0),
+                );
+            }
+            report.push(&format!("simd_{}_gemm256_ns", policy.name()), ns);
+        }
+        println!();
+    }
+    {
+        let (d, k) = (784usize, 300usize);
+        let x = Mat::gauss(d, k, &mut rng);
+        let mut out = Mat::zeros(d, d);
+        let mut scalar_ns = 0.0;
+        for policy in SimdPolicy::ALL {
+            let t = time_it(1, 5, || {
+                x.syrk_into_with(1.0 / k as f64, &mut out, policy);
+                std::hint::black_box(&out);
+            });
+            let ns = t.median.as_nanos() as f64;
+            if policy == SimdPolicy::Scalar {
+                scalar_ns = ns;
+                println!("syrk d={d} {:<6}: {t}", policy.name());
+            } else {
+                println!(
+                    "syrk d={d} {:<6}: {t}  ({:.2}x vs scalar)",
+                    policy.name(),
+                    scalar_ns / ns.max(1.0)
+                );
+                report.push(
+                    &format!("simd_{}_speedup_syrk_d{d}", policy.name()),
+                    scalar_ns / ns.max(1.0),
+                );
+            }
+            report.push(&format!("simd_{}_syrk_d{d}_ns", policy.name()), ns);
+        }
+        println!();
+    }
+
+    // --- zero-allocation proof: steady state at every policy ----------
+    let mut total_allocs = 0u64;
+    {
+        let (d, s, r) = (2914usize, 200usize, 5usize);
+        let x = Mat::gauss(d, s, &mut rng);
+        let cov = CovOp::Samples { x, scale: 1.0 / s as f64 };
+        let q = Mat::gauss(d, r, &mut rng);
+        let a = Mat::gauss(256, 256, &mut rng);
+        let b = Mat::gauss(256, 256, &mut rng);
+        let g = Mat::gauss(100, 64, &mut rng);
+        let mut out = Mat::zeros(0, 0);
+        let mut tmp = Mat::zeros(0, 0);
+        let mut gout = Mat::zeros(256, 256);
+        let mut sout = Mat::zeros(100, 100);
+        for policy in SimdPolicy::ALL {
+            // Warm every scratch arena at this policy's shapes…
+            for _ in 0..2 {
+                cov.apply_into_with(&q, &mut out, &mut tmp, policy);
+                a.matmul_into_with(&b, &mut gout, policy);
+                g.syrk_into_with(1.0 / 64.0, &mut sout, policy);
+            }
+            // …then the steady state must not allocate at all.
+            let (a0, _) = alloc_snapshot();
+            for _ in 0..5 {
+                cov.apply_into_with(&q, &mut out, &mut tmp, policy);
+                a.matmul_into_with(&b, &mut gout, policy);
+                g.syrk_into_with(1.0 / 64.0, &mut sout, policy);
+            }
+            let (a1, _) = alloc_snapshot();
+            let allocs = a1 - a0;
+            total_allocs += allocs;
+            println!(
+                "steady-state {} (M_i Q + gemm + syrk): {allocs} allocations over 5 iters",
+                policy.name()
+            );
+            assert_eq!(allocs, 0, "{policy:?} allocated in steady state");
+        }
+    }
+    println!("  (§Perf target: 0 — every buffer reused after warm-up)");
+    report.push("simd_steady_state_allocs", total_allocs as f64);
+
+    report.save("BENCH_simd.json");
+}

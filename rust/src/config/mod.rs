@@ -2,21 +2,75 @@
 
 use crate::experiments::ExpCtx;
 use crate::linalg::qr::QrPolicy;
+use crate::linalg::simd::SimdPolicy;
 use crate::network::mpi::ClockMode;
-use crate::util::cli::Args;
+use crate::util::cli::{Args, FlagSpec};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
 
+/// Every experiment flag the CLI accepts — the single registry shared by
+/// `main.rs` (`Args::from_env_checked` rejects unknown flags with this
+/// table) and [`from_file`] (unknown JSON config keys are rejected
+/// against the same table, so a typo like `"trail_parallel"` or
+/// `"smid"` is a hard error instead of a silently ignored knob).
+pub const FLAGS: &[FlagSpec] = &[
+    FlagSpec { name: "seed", takes_value: true, help: "base RNG seed (u64)" },
+    FlagSpec {
+        name: "scale",
+        takes_value: true,
+        help: "fraction of the paper's iteration counts, in (0, 10]",
+    },
+    FlagSpec { name: "trials", takes_value: true, help: "Monte-Carlo trials (>= 1)" },
+    FlagSpec { name: "out", takes_value: true, help: "output directory for artifacts" },
+    FlagSpec { name: "config", takes_value: true, help: "JSON config file (CLI flags win)" },
+    FlagSpec {
+        name: "threads",
+        takes_value: true,
+        help: "total parallelism budget in [1, 256] (trials + nodes + rows)",
+    },
+    FlagSpec {
+        name: "trial-parallel",
+        takes_value: true,
+        help: "fan Monte-Carlo trials across the pool: on|off",
+    },
+    FlagSpec {
+        name: "mpi-clock",
+        takes_value: true,
+        help: "straggler-study clock: real|virtual",
+    },
+    FlagSpec {
+        name: "qr",
+        takes_value: true,
+        help: "step-12 QR kernel: householder|blocked|tsqr",
+    },
+    FlagSpec {
+        name: "simd",
+        takes_value: true,
+        help: "SIMD micro-kernels: scalar|auto|fma (auto ≡ scalar bitwise; fma changes bits)",
+    },
+];
+
+/// The JSON config key mirroring a CLI flag name, or `None` for flags
+/// with no file counterpart (`--config` itself): `--trial-parallel` ↔
+/// `"trial_parallel"`, `--out DIR` ↔ `"out_dir"`.
+fn config_key(flag: &str) -> Option<String> {
+    match flag {
+        "config" => None,
+        "out" => Some("out_dir".to_string()),
+        other => Some(other.replace('-', "_")),
+    }
+}
+
 /// Load an [`ExpCtx`] from an optional JSON config file, then apply CLI
 /// overrides (`--seed`, `--scale`, `--trials`, `--out`, `--threads`,
-/// `--trial-parallel`, `--mpi-clock`, `--qr`).
+/// `--trial-parallel`, `--mpi-clock`, `--qr`, `--simd`).
 ///
 /// Config file format:
 /// ```json
 /// {"seed": 42, "scale": 1.0, "trials": 3, "out_dir": "results",
 ///  "threads": 1, "trial_parallel": true, "mpi_clock": "real",
-///  "qr": "householder"}
+///  "qr": "householder", "simd": "auto"}
 /// ```
 ///
 /// `threads` is **one knob for two parallelism levels** (see
@@ -47,6 +101,12 @@ use std::path::{Path, PathBuf};
 /// every result is still byte-identical at every `--threads`: the TSQR
 /// leaf partition and reduction tree are pure functions of each matrix's
 /// shape, never of the schedule.
+///
+/// `simd` selects the inner-product micro-kernels
+/// (`scalar`/`auto`/`fma` — [`SimdPolicy`]). `auto` is **bitwise
+/// identical** to `scalar` (same accumulator grouping and combine
+/// order, just vectorized); `fma` intentionally changes bits and, like
+/// `qr`, must be held fixed when comparing perf ledgers.
 pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     let mut ctx = ExpCtx::default();
     if let Some(path) = args.get("config") {
@@ -78,6 +138,9 @@ pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     if let Some(v) = args.get("qr") {
         ctx.qr = parse_qr(v)?;
     }
+    if let Some(v) = args.get("simd") {
+        ctx.simd = parse_simd(v)?;
+    }
     if ctx.scale <= 0.0 || ctx.scale > 10.0 {
         return Err(anyhow!("scale must be in (0, 10]"));
     }
@@ -93,36 +156,68 @@ pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     Ok(ctx)
 }
 
-/// Parse a config file.
+/// Parse a config file. Keys are validated against [`FLAGS`] (the same
+/// registry the CLI parser uses), so an unknown or typo'd key is a hard
+/// error listing the valid keys — never silently ignored.
 pub fn from_file(path: &Path) -> Result<ExpCtx> {
     let text = std::fs::read_to_string(path)?;
     let json = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let Some(obj) = json.as_obj() else {
+        return Err(anyhow!("{}: config root must be a JSON object", path.display()));
+    };
+    let valid: Vec<String> = FLAGS.iter().filter_map(|s| config_key(s.name)).collect();
+    for key in obj.keys() {
+        if !valid.iter().any(|k| k == key) {
+            return Err(anyhow!(
+                "{}: unknown config key \"{key}\"; valid keys: {}",
+                path.display(),
+                valid.join(", ")
+            ));
+        }
+    }
+    // Like the key check above, value *types* are strict: a valid key
+    // holding the wrong JSON type (e.g. "trial_parallel": "off" — the
+    // CLI spelling — instead of the JSON boolean false) is a hard
+    // error, never a silently kept default.
     let mut ctx = ExpCtx::default();
-    if let Some(v) = json.get("seed").and_then(|v| v.as_f64()) {
-        ctx.seed = v as u64;
+    if let Some(v) = json.get("seed") {
+        ctx.seed = v.as_f64().ok_or_else(|| bad_type(path, "seed", "a number"))? as u64;
     }
-    if let Some(v) = json.get("scale").and_then(|v| v.as_f64()) {
-        ctx.scale = v;
+    if let Some(v) = json.get("scale") {
+        ctx.scale = v.as_f64().ok_or_else(|| bad_type(path, "scale", "a number"))?;
     }
-    if let Some(v) = json.get("trials").and_then(|v| v.as_usize()) {
-        ctx.trials = v;
+    if let Some(v) = json.get("trials") {
+        ctx.trials =
+            v.as_usize().ok_or_else(|| bad_type(path, "trials", "a non-negative integer"))?;
     }
-    if let Some(v) = json.get("out_dir").and_then(|v| v.as_str()) {
-        ctx.out_dir = PathBuf::from(v);
+    if let Some(v) = json.get("out_dir") {
+        ctx.out_dir =
+            PathBuf::from(v.as_str().ok_or_else(|| bad_type(path, "out_dir", "a string"))?);
     }
-    if let Some(v) = json.get("threads").and_then(|v| v.as_usize()) {
-        ctx.threads = v;
+    if let Some(v) = json.get("threads") {
+        ctx.threads =
+            v.as_usize().ok_or_else(|| bad_type(path, "threads", "a non-negative integer"))?;
     }
-    if let Some(v) = json.get("trial_parallel").and_then(|v| v.as_bool()) {
-        ctx.trial_parallel = v;
+    if let Some(v) = json.get("trial_parallel") {
+        ctx.trial_parallel = v
+            .as_bool()
+            .ok_or_else(|| bad_type(path, "trial_parallel", "a JSON boolean (true/false)"))?;
     }
-    if let Some(v) = json.get("mpi_clock").and_then(|v| v.as_str()) {
-        ctx.mpi_clock = parse_clock(v)?;
+    if let Some(v) = json.get("mpi_clock") {
+        ctx.mpi_clock =
+            parse_clock(v.as_str().ok_or_else(|| bad_type(path, "mpi_clock", "a string"))?)?;
     }
-    if let Some(v) = json.get("qr").and_then(|v| v.as_str()) {
-        ctx.qr = parse_qr(v)?;
+    if let Some(v) = json.get("qr") {
+        ctx.qr = parse_qr(v.as_str().ok_or_else(|| bad_type(path, "qr", "a string"))?)?;
+    }
+    if let Some(v) = json.get("simd") {
+        ctx.simd = parse_simd(v.as_str().ok_or_else(|| bad_type(path, "simd", "a string"))?)?;
     }
     Ok(ctx)
+}
+
+fn bad_type(path: &Path, key: &str, want: &str) -> anyhow::Error {
+    anyhow!("{}: config key \"{key}\" must be {want}", path.display())
 }
 
 fn parse_bool(v: &str) -> Option<bool> {
@@ -144,6 +239,11 @@ fn parse_clock(v: &str) -> Result<ClockMode> {
 fn parse_qr(v: &str) -> Result<QrPolicy> {
     QrPolicy::parse(v)
         .ok_or_else(|| anyhow!("qr must be 'householder', 'blocked' or 'tsqr', got '{v}'"))
+}
+
+fn parse_simd(v: &str) -> Result<SimdPolicy> {
+    SimdPolicy::parse(v)
+        .ok_or_else(|| anyhow!("simd must be 'scalar', 'auto' or 'fma', got '{v}'"))
 }
 
 #[cfg(test)]
@@ -275,5 +375,85 @@ mod tests {
         std::fs::write(&p, r#"{"mpi_clock": "virtual"}"#).unwrap();
         let ctx = load_ctx(&args(&["--config", p.to_str().unwrap()])).unwrap();
         assert_eq!(ctx.mpi_clock, ClockMode::Virtual);
+    }
+
+    #[test]
+    fn simd_flag_parses_and_rejects() {
+        use crate::linalg::simd::SimdPolicy;
+        let ctx = load_ctx(&args(&[])).unwrap();
+        assert_eq!(ctx.simd, SimdPolicy::Auto, "auto (≡ scalar bitwise) is the default");
+        for p in SimdPolicy::ALL {
+            let ctx = load_ctx(&args(&["--simd", p.name()])).unwrap();
+            assert_eq!(ctx.simd, p);
+        }
+        assert!(load_ctx(&args(&["--simd", "avx512"])).is_err());
+    }
+
+    #[test]
+    fn simd_from_file_then_cli_priority() {
+        use crate::linalg::simd::SimdPolicy;
+        let dir = std::env::temp_dir().join("dpsa_cfg_simd_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"simd": "fma"}"#).unwrap();
+        let ctx = load_ctx(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert_eq!(ctx.simd, SimdPolicy::Fma);
+        let ctx =
+            load_ctx(&args(&["--config", p.to_str().unwrap(), "--simd", "scalar"])).unwrap();
+        assert_eq!(ctx.simd, SimdPolicy::Scalar, "CLI wins over the file");
+        std::fs::write(&p, r#"{"simd": "neon"}"#).unwrap();
+        assert!(load_ctx(&args(&["--config", p.to_str().unwrap()])).is_err());
+    }
+
+    #[test]
+    fn unknown_config_keys_are_rejected_with_valid_list() {
+        let dir = std::env::temp_dir().join("dpsa_cfg_badkey_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        // The motivating typos: "trail_parallel" and "smid".
+        for bad in ["trail_parallel", "smid"] {
+            std::fs::write(&p, format!(r#"{{"seed": 1, "{bad}": true}}"#)).unwrap();
+            let err = load_ctx(&args(&["--config", p.to_str().unwrap()])).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(&format!("unknown config key \"{bad}\"")), "{msg}");
+            assert!(msg.contains("trial_parallel"), "must list valid keys: {msg}");
+            assert!(msg.contains("simd"), "must list valid keys: {msg}");
+            assert!(msg.contains("out_dir"), "must use the config spelling: {msg}");
+        }
+        // Every CLI-registered key (in its config spelling) is accepted.
+        std::fs::write(
+            &p,
+            r#"{"seed": 1, "scale": 0.5, "trials": 2, "out_dir": "r",
+                "threads": 2, "trial_parallel": false, "mpi_clock": "virtual",
+                "qr": "tsqr", "simd": "scalar"}"#,
+        )
+        .unwrap();
+        let ctx = load_ctx(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert_eq!(ctx.threads, 2);
+        // A non-object root is a hard error too.
+        std::fs::write(&p, "[1, 2, 3]").unwrap();
+        assert!(load_ctx(&args(&["--config", p.to_str().unwrap()])).is_err());
+    }
+
+    #[test]
+    fn wrong_value_types_are_rejected() {
+        let dir = std::env::temp_dir().join("dpsa_cfg_badtype_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        // The natural mistake: the CLI spelling "off" instead of the
+        // JSON boolean — must not silently keep the default.
+        for (body, key) in [
+            (r#"{"trial_parallel": "off"}"#, "trial_parallel"),
+            (r#"{"seed": "42"}"#, "seed"),
+            (r#"{"threads": "4"}"#, "threads"),
+            (r#"{"qr": 3}"#, "qr"),
+            (r#"{"simd": true}"#, "simd"),
+            (r#"{"out_dir": 7}"#, "out_dir"),
+        ] {
+            std::fs::write(&p, body).unwrap();
+            let err = load_ctx(&args(&["--config", p.to_str().unwrap()])).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(&format!("\"{key}\" must be")), "{body}: {msg}");
+        }
     }
 }

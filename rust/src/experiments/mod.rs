@@ -28,6 +28,7 @@ pub mod synth_tables;
 pub mod topology_tables;
 
 use crate::linalg::qr::QrPolicy;
+use crate::linalg::simd::SimdPolicy;
 use crate::network::mpi::ClockMode;
 use crate::util::table::Table;
 use anyhow::{bail, Result};
@@ -80,6 +81,14 @@ pub struct ExpCtx {
     /// `--threads` (the TSQR reduction tree is a pure function of each
     /// matrix's shape).
     pub qr: QrPolicy,
+    /// SIMD micro-kernel policy (`--simd` / config `"simd"`). Entry
+    /// points apply it process-wide via
+    /// `linalg::simd::set_default_simd_policy`. `scalar` and `auto` are
+    /// bitwise identical by construction; `fma` intentionally changes
+    /// bits (fused rounding), so like `qr` it must be held fixed across
+    /// perf-ledger comparisons. For any fixed policy, results stay
+    /// byte-identical at every `--threads`.
+    pub simd: SimdPolicy,
 }
 
 impl Default for ExpCtx {
@@ -93,6 +102,7 @@ impl Default for ExpCtx {
             trial_parallel: true,
             mpi_clock: ClockMode::Real,
             qr: QrPolicy::Householder,
+            simd: SimdPolicy::Auto,
         }
     }
 }

@@ -9,6 +9,7 @@
 //! runtime backend accelerates.
 
 use super::mat::Mat;
+use super::simd::{self, SimdPolicy, SimdTier};
 
 /// A node-local covariance operator `M_i`.
 #[derive(Clone, Debug)]
@@ -47,23 +48,38 @@ impl CovOp {
 
     /// Apply the operator: `M_i Q` (the S-DOT per-iteration hot path).
     pub fn apply(&self, q: &Mat) -> Mat {
+        self.apply_with(q, crate::linalg::simd::default_simd_policy())
+    }
+
+    /// [`CovOp::apply`] under an explicit [`SimdPolicy`] (the route
+    /// `NativeBackend` uses to honor a pinned `--simd` policy).
+    pub fn apply_with(&self, q: &Mat, policy: SimdPolicy) -> Mat {
         let mut out = Mat::zeros(0, 0);
         let mut tmp = Mat::zeros(0, 0);
-        self.apply_into(q, &mut out, &mut tmp);
+        self.apply_into_t(q, &mut out, &mut tmp, policy.resolve());
         out
     }
 
     /// Allocation-free `out = M_i Q` into caller-provided buffers (both
     /// reshaped in place). `tmp` holds the intermediate `XᵀQ` for the
     /// implicit representation and is untouched for the dense one.
-    /// Arithmetic is identical to [`CovOp::apply`] (which delegates
-    /// here), so results match bitwise.
+    /// Arithmetic is identical to [`CovOp::apply`] (which delegates to
+    /// the same kernel), so results match bitwise.
     pub fn apply_into(&self, q: &Mat, out: &mut Mat, tmp: &mut Mat) {
+        self.apply_into_t(q, out, tmp, simd::current_tier());
+    }
+
+    /// [`CovOp::apply_into`] under an explicit [`SimdPolicy`].
+    pub fn apply_into_with(&self, q: &Mat, out: &mut Mat, tmp: &mut Mat, policy: SimdPolicy) {
+        self.apply_into_t(q, out, tmp, policy.resolve());
+    }
+
+    pub(crate) fn apply_into_t(&self, q: &Mat, out: &mut Mat, tmp: &mut Mat, tier: SimdTier) {
         match self {
-            CovOp::Dense(m) => m.matmul_into(q, out),
+            CovOp::Dense(m) => m.matmul_into_t(q, out, tier),
             CovOp::Samples { x, scale } => {
-                x.t_matmul_into(q, tmp); // n×r
-                x.matmul_into(tmp, out); // d×r
+                x.t_matmul_into(q, tmp); // n×r (axpy kernel — tier-free)
+                x.matmul_into_t(tmp, out, tier); // d×r
                 out.scale_inplace(*scale);
             }
         }
@@ -100,10 +116,38 @@ impl CovOp {
     /// representation `tmp` must already hold the full phase-A product
     /// (`n_i × r`); the dense representation ignores it.
     pub fn apply_out_rows(&self, q: &Mat, tmp: &Mat, lo: usize, hi: usize, out_rows: &mut [f64]) {
+        self.apply_out_rows_t(q, tmp, lo, hi, out_rows, simd::current_tier());
+    }
+
+    /// [`CovOp::apply_out_rows`] under an explicit [`SimdPolicy`]. Must
+    /// use the same policy as the full product it splits
+    /// ([`CovOp::apply_into_with`]) — the regime and tier are chosen
+    /// from the full shape, so the split then assembles bitwise.
+    pub fn apply_out_rows_with(
+        &self,
+        q: &Mat,
+        tmp: &Mat,
+        lo: usize,
+        hi: usize,
+        out_rows: &mut [f64],
+        policy: SimdPolicy,
+    ) {
+        self.apply_out_rows_t(q, tmp, lo, hi, out_rows, policy.resolve());
+    }
+
+    fn apply_out_rows_t(
+        &self,
+        q: &Mat,
+        tmp: &Mat,
+        lo: usize,
+        hi: usize,
+        out_rows: &mut [f64],
+        tier: SimdTier,
+    ) {
         match self {
-            CovOp::Dense(m) => m.matmul_rows_into(q, lo, hi, out_rows),
+            CovOp::Dense(m) => m.matmul_rows_into_t(q, lo, hi, out_rows, tier),
             CovOp::Samples { x, scale } => {
-                x.matmul_rows_into(tmp, lo, hi, out_rows);
+                x.matmul_rows_into_t(tmp, lo, hi, out_rows, tier);
                 for v in out_rows.iter_mut() {
                     *v *= *scale;
                 }

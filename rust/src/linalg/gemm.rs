@@ -1,16 +1,27 @@
-//! GEMM kernels behind `Mat::matmul_into`.
+//! GEMM kernels behind `Mat::matmul_into` / `Mat::matmul_t_into` /
+//! `Mat::syrk_into`.
 //!
-//! Three regimes, chosen by `Mat::matmul_into`:
+//! Three regimes, chosen by the `Mat` entry points from the **full**
+//! problem shape (never the row sub-range):
 //!
 //! * **skinny** (`n ≤ 32`, `k ≥ 16` — the `M_i Q` hot path): pack `bᵀ`
 //!   once into thread-local scratch and compute contiguous [`dot4`]
 //!   products, exactly the arithmetic of the seed's transpose-and-
-//!   `matmul_t` path but without the per-call allocation;
+//!   `matmul_t` path but without the per-call allocation (for `A·Bᵀ`
+//!   and `syrk` the rows of `b` already are the packed layout, so the
+//!   dot-regime kernels read them directly);
 //! * **blocked** (mid-size dense): a register-blocked micro-kernel —
 //!   `MR×NR = 8×4` accumulator tiles over panels packed for unit-stride
 //!   access, with `KC/MC/NC` cache blocking — replacing the seed's
-//!   plain i-k-j triple loop;
+//!   plain i-k-j triple loop. `A·Bᵀ` and the d×d Gram/`syrk` products
+//!   share it via a transposed packing routine;
 //! * the caller falls back to the i-k-j loop for small problems.
+//!
+//! The inner arithmetic (the 4-accumulator dot and the 8×4 tile) lives
+//! in [`super::simd`] and is dispatched on a [`SimdTier`]: every kernel
+//! here takes the resolved tier so one `Mat` call uses one instruction
+//! set end to end. `Scalar` and `Vector` tiers are bitwise identical by
+//! the simd module's contract; `Fma` intentionally contracts rounding.
 //!
 //! All scratch lives in a thread-local arena that only grows, so the
 //! steady state allocates nothing. Summation order within one output
@@ -19,12 +30,11 @@
 //! node, which is what keeps multi-threaded runs bitwise deterministic.
 
 use super::mat::Mat;
+use super::simd::{self, SimdTier, MR, NR};
 use std::cell::RefCell;
 
-/// Micro-tile rows (accumulator register rows).
-const MR: usize = 8;
-/// Micro-tile columns.
-const NR: usize = 4;
+pub(crate) use super::simd::dot4_t as dot4;
+
 /// k-dimension cache block.
 const KC: usize = 256;
 /// m-dimension cache block.
@@ -43,31 +53,12 @@ thread_local! {
     static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
 }
 
-/// Dot product with 4-way unrolled accumulators (vectorization-friendly).
-#[inline]
-pub(crate) fn dot4(a: &[f64], b: &[f64], k: usize) -> f64 {
-    let mut acc = [0.0f64; 4];
-    let chunks = k / 4;
-    for c in 0..chunks {
-        let o = c * 4;
-        acc[0] += a[o] * b[o];
-        acc[1] += a[o + 1] * b[o + 1];
-        acc[2] += a[o + 2] * b[o + 2];
-        acc[3] += a[o + 3] * b[o + 3];
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for o in chunks * 4..k {
-        s += a[o] * b[o];
-    }
-    s
-}
-
 /// Skinny-`b` product: `out = a · b` with `bᵀ` packed into scratch so
 /// every dot product runs over two contiguous slices. Matches the seed's
 /// `a.matmul_t(&b.transpose())` arithmetic bit for bit.
-pub(crate) fn matmul_skinny_into(a: &Mat, b: &Mat, out: &mut Mat) {
+pub(crate) fn matmul_skinny_into(a: &Mat, b: &Mat, out: &mut Mat, tier: SimdTier) {
     debug_assert_eq!((out.rows, out.cols), (a.rows, b.cols));
-    matmul_skinny_rows(a, b, 0, a.rows, &mut out.data);
+    matmul_skinny_rows(a, b, 0, a.rows, &mut out.data, tier);
 }
 
 /// Rows `lo..hi` of the skinny product into `out_rows`
@@ -75,7 +66,14 @@ pub(crate) fn matmul_skinny_into(a: &Mat, b: &Mat, out: &mut Mat) {
 /// thread-local scratch (cheap for skinny `b`); per-output-row arithmetic
 /// is exactly that of [`matmul_skinny_into`], so splitting rows across
 /// pool tasks leaves every output element bitwise unchanged.
-pub(crate) fn matmul_skinny_rows(a: &Mat, b: &Mat, lo: usize, hi: usize, out_rows: &mut [f64]) {
+pub(crate) fn matmul_skinny_rows(
+    a: &Mat,
+    b: &Mat,
+    lo: usize,
+    hi: usize,
+    out_rows: &mut [f64],
+    tier: SimdTier,
+) {
     let (k, n) = (a.cols, b.cols);
     debug_assert_eq!(b.rows, k);
     debug_assert!(lo <= hi && hi <= a.rows);
@@ -95,16 +93,16 @@ pub(crate) fn matmul_skinny_rows(a: &Mat, b: &Mat, lo: usize, hi: usize, out_row
             let arow = a.row(i);
             let orow = &mut out_rows[(i - lo) * n..(i - lo + 1) * n];
             for (j, o) in orow.iter_mut().enumerate() {
-                *o = dot4(arow, &bt[j * k..j * k + k], k);
+                *o = dot4(arow, &bt[j * k..j * k + k], k, tier);
             }
         }
     });
 }
 
 /// Register-blocked GEMM: `out = a · b` over packed panels.
-pub(crate) fn matmul_blocked_into(a: &Mat, b: &Mat, out: &mut Mat) {
+pub(crate) fn matmul_blocked_into(a: &Mat, b: &Mat, out: &mut Mat, tier: SimdTier) {
     debug_assert_eq!((out.rows, out.cols), (a.rows, b.cols));
-    matmul_blocked_rows(a, b, 0, a.rows, &mut out.data);
+    matmul_blocked_rows(a, b, 0, a.rows, &mut out.data, tier);
 }
 
 /// Rows `lo..hi` of the blocked product into `out_rows`. The `MC`
@@ -112,9 +110,116 @@ pub(crate) fn matmul_blocked_into(a: &Mat, b: &Mat, out: &mut Mat) {
 /// its `k` contributions in the same `KC`-blocked ascending order (the
 /// micro-kernel sums each block in registers before a single add), so
 /// results are bitwise identical to the full-range kernel.
-pub(crate) fn matmul_blocked_rows(a: &Mat, b: &Mat, lo: usize, hi: usize, out_rows: &mut [f64]) {
-    let (k, n) = (a.cols, b.cols);
-    debug_assert_eq!(b.rows, k);
+pub(crate) fn matmul_blocked_rows(
+    a: &Mat,
+    b: &Mat,
+    lo: usize,
+    hi: usize,
+    out_rows: &mut [f64],
+    tier: SimdTier,
+) {
+    blocked_rows_impl(a, b, false, lo, hi, out_rows, tier);
+}
+
+/// Rows `lo..hi` of `a · bᵀ` through the same blocked kernel: the only
+/// difference from [`matmul_blocked_rows`] is that the `b` panels are
+/// packed from the transposed orientation, so the micro-kernel (and the
+/// per-element summation order) is shared — a row split reassembles
+/// bitwise exactly as it does for `a · b`.
+pub(crate) fn matmul_t_blocked_rows(
+    a: &Mat,
+    b: &Mat,
+    lo: usize,
+    hi: usize,
+    out_rows: &mut [f64],
+    tier: SimdTier,
+) {
+    blocked_rows_impl(a, b, true, lo, hi, out_rows, tier);
+}
+
+/// Rows `lo..hi` of `a · bᵀ` as contiguous [`dot4`] products — the
+/// dot regime of the transposed family. `b`'s rows *are* the transposed
+/// layout, so unlike the skinny `a · b` path no packing is needed; this
+/// is exactly the seed `matmul_t` arithmetic.
+pub(crate) fn matmul_t_dot_rows(
+    a: &Mat,
+    b: &Mat,
+    lo: usize,
+    hi: usize,
+    out_rows: &mut [f64],
+    tier: SimdTier,
+) {
+    let (k, n) = (a.cols, b.rows);
+    debug_assert_eq!(b.cols, k);
+    debug_assert!(lo <= hi && hi <= a.rows);
+    debug_assert_eq!(out_rows.len(), (hi - lo) * n);
+    for i in lo..hi {
+        let arow = a.row(i);
+        let orow = &mut out_rows[(i - lo) * n..(i - lo + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot4(arow, b.row(j), k, tier);
+        }
+    }
+}
+
+/// Whether the `A·Bᵀ`/`syrk` family routes `m×k · (n×k)ᵀ` through the
+/// blocked micro-kernel (mirrors `Mat::matmul_rows_into`'s blocked
+/// predicate). One place, so the full kernels and their row
+/// restrictions can never disagree on the regime.
+pub(crate) fn matmul_t_use_blocked(m: usize, k: usize, n: usize) -> bool {
+    n > 32 && k >= 8 && m >= 8
+}
+
+/// Rows `lo..hi` of `scale · a · aᵀ` (the Gram/covariance kernel).
+/// Regime is chosen from the **full** shape: large Grams go through the
+/// packed blocked kernel (2× the serial triangle's flops but far faster
+/// per flop, and identical for every row split); small ones keep the
+/// seed's per-element `dot4 · scale`. In both regimes `scale` multiplies
+/// the completed sum, and element `(i,j)` equals element `(j,i)` bitwise
+/// (elementwise products commute; summation order is fixed), so any row
+/// split — and the full `0..d` range — assembles the same matrix.
+pub(crate) fn syrk_rows(
+    a: &Mat,
+    scale: f64,
+    lo: usize,
+    hi: usize,
+    out_rows: &mut [f64],
+    tier: SimdTier,
+) {
+    let (d, k) = (a.rows, a.cols);
+    debug_assert!(lo <= hi && hi <= d);
+    debug_assert_eq!(out_rows.len(), (hi - lo) * d);
+    if matmul_t_use_blocked(d, k, d) {
+        matmul_t_blocked_rows(a, a, lo, hi, out_rows, tier);
+        for v in out_rows.iter_mut() {
+            *v *= scale;
+        }
+    } else {
+        for i in lo..hi {
+            let ri = a.row(i);
+            let orow = &mut out_rows[(i - lo) * d..(i - lo + 1) * d];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = dot4(ri, a.row(j), k, tier) * scale;
+            }
+        }
+    }
+}
+
+/// Shared blocked loop: `out = a · B` where `B` is `b` (k×n) or `bᵀ`
+/// (from `b` stored n×k) depending on `trans_b`. Only the packing reads
+/// differ; panel shapes, tiling and the micro-kernel are identical.
+fn blocked_rows_impl(
+    a: &Mat,
+    b: &Mat,
+    trans_b: bool,
+    lo: usize,
+    hi: usize,
+    out_rows: &mut [f64],
+    tier: SimdTier,
+) {
+    let k = a.cols;
+    let n = if trans_b { b.rows } else { b.cols };
+    debug_assert_eq!(if trans_b { b.cols } else { b.rows }, k);
     debug_assert!(lo <= hi && hi <= a.rows);
     debug_assert_eq!(out_rows.len(), (hi - lo) * n);
     out_rows.fill(0.0);
@@ -136,7 +241,7 @@ pub(crate) fn matmul_blocked_rows(a: &Mat, b: &Mat, lo: usize, hi: usize, out_ro
             let mut jj = 0;
             while jj < n {
                 let nb = NC.min(n - jj);
-                pack_b(b, pb, kk, kb, jj, nb);
+                pack_b(b, trans_b, pb, kk, kb, jj, nb);
                 let ntiles = nb.div_ceil(NR);
                 let mut ii = lo;
                 while ii < hi {
@@ -145,12 +250,22 @@ pub(crate) fn matmul_blocked_rows(a: &Mat, b: &Mat, lo: usize, hi: usize, out_ro
                     let mtiles = mb.div_ceil(MR);
                     for jt in 0..ntiles {
                         let pb_panel = &pb[jt * NR * kb..(jt + 1) * NR * kb];
+                        // Columns of this tile that land inside `nb`
+                        // (padded lanes are zero in the packed panels
+                        // and never written back).
+                        let cmax = NR.min(nb - jt * NR);
                         for it in 0..mtiles {
                             let pa_panel = &pa[it * MR * kb..(it + 1) * MR * kb];
-                            microkernel_write(
-                                pa_panel, pb_panel, kb, out_rows, n, ii - lo, it, mb, jj, jt,
-                                nb,
-                            );
+                            let acc = simd::microkernel_8x4_t(pa_panel, pb_panel, kb, tier);
+                            let rmax = MR.min(mb - it * MR);
+                            for (r, accr) in acc.iter().enumerate().take(rmax) {
+                                let row = ii - lo + it * MR + r;
+                                let base = row * n + jj + jt * NR;
+                                let orow = &mut out_rows[base..base + cmax];
+                                for (o, &v) in orow.iter_mut().zip(accr.iter()) {
+                                    *o += v;
+                                }
+                            }
                         }
                     }
                     ii += mb;
@@ -160,46 +275,6 @@ pub(crate) fn matmul_blocked_rows(a: &Mat, b: &Mat, lo: usize, hi: usize, out_ro
             kk += kb;
         }
     });
-}
-
-/// One `MR×NR` accumulator tile; accumulates into the valid sub-block of
-/// `out_rows` (padded lanes are zero in the packed panels and never
-/// written). `ii` is relative to the start of `out_rows`.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn microkernel_write(
-    pa_panel: &[f64],
-    pb_panel: &[f64],
-    kb: usize,
-    out_rows: &mut [f64],
-    n: usize,
-    ii: usize,
-    it: usize,
-    mb: usize,
-    jj: usize,
-    jt: usize,
-    nb: usize,
-) {
-    let mut acc = [[0.0f64; NR]; MR];
-    for p in 0..kb {
-        let av = &pa_panel[p * MR..p * MR + MR];
-        let bv = &pb_panel[p * NR..p * NR + NR];
-        for (r, accr) in acc.iter_mut().enumerate() {
-            let a = av[r];
-            for (c, slot) in accr.iter_mut().enumerate() {
-                *slot += a * bv[c];
-            }
-        }
-    }
-    let rmax = MR.min(mb - it * MR);
-    let cmax = NR.min(nb - jt * NR);
-    for (r, accr) in acc.iter().enumerate().take(rmax) {
-        let row = ii + it * MR + r;
-        let orow = &mut out_rows[row * n + jj + jt * NR..row * n + jj + jt * NR + cmax];
-        for (o, &v) in orow.iter_mut().zip(accr.iter()) {
-            *o += v;
-        }
-    }
 }
 
 /// Pack an `mb×kb` block of `a` into MR-row panels: element `(r, p)` of
@@ -218,17 +293,28 @@ fn pack_a(a: &Mat, pa: &mut [f64], ii: usize, mb: usize, kk: usize, kb: usize) {
     }
 }
 
-/// Pack a `kb×nb` block of `b` into NR-column panels: element `(p, c)` of
-/// panel `jt` lands at `pb[jt·NR·kb + p·NR + c]`. Columns past `nb` pad 0.
-fn pack_b(b: &Mat, pb: &mut [f64], kk: usize, kb: usize, jj: usize, nb: usize) {
+/// Pack a `kb×nb` block of `B` into NR-column panels, where `B` is `b`
+/// itself or `bᵀ` (`trans_b`): element `(p, c)` of panel `jt` lands at
+/// `pb[jt·NR·kb + p·NR + c]`. Columns past `nb` pad 0. Values are
+/// identical to packing a materialized transpose, so the `trans_b`
+/// orientation changes memory reads only, never arithmetic.
+fn pack_b(b: &Mat, trans_b: bool, pb: &mut [f64], kk: usize, kb: usize, jj: usize, nb: usize) {
     let ntiles = nb.div_ceil(NR);
     for jt in 0..ntiles {
         let base = jt * NR * kb;
         for p in 0..kb {
-            let brow = b.row(kk + p);
-            for c in 0..NR {
-                let col = jt * NR + c;
-                pb[base + p * NR + c] = if col < nb { brow[jj + col] } else { 0.0 };
+            if trans_b {
+                for c in 0..NR {
+                    let col = jt * NR + c;
+                    pb[base + p * NR + c] =
+                        if col < nb { b.get(jj + col, kk + p) } else { 0.0 };
+                }
+            } else {
+                let brow = b.row(kk + p);
+                for c in 0..NR {
+                    let col = jt * NR + c;
+                    pb[base + p * NR + c] = if col < nb { brow[jj + col] } else { 0.0 };
+                }
             }
         }
     }
@@ -237,7 +323,12 @@ fn pack_b(b: &Mat, pb: &mut [f64], kk: usize, kb: usize, jj: usize, nb: usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::simd::SimdPolicy;
     use crate::util::rng::Rng;
+
+    fn tiers() -> Vec<(SimdPolicy, SimdTier)> {
+        SimdPolicy::ALL.iter().map(|&p| (p, p.resolve())).collect()
+    }
 
     /// Reference: plain i-j-k triple loop.
     fn naive(a: &Mat, b: &Mat) -> Mat {
@@ -270,14 +361,36 @@ mod tests {
         ] {
             let a = Mat::gauss(m, k, &mut rng);
             let b = Mat::gauss(k, n, &mut rng);
-            let mut out = Mat::zeros(m, n);
-            matmul_blocked_into(&a, &b, &mut out);
             let want = naive(&a, &b);
-            assert!(
-                out.dist_fro(&want) < 1e-12 * want.fro_norm().max(1.0),
-                "{m}x{k}x{n}: {}",
-                out.dist_fro(&want)
-            );
+            for (policy, tier) in tiers() {
+                let mut out = Mat::zeros(m, n);
+                matmul_blocked_into(&a, &b, &mut out, tier);
+                assert!(
+                    out.dist_fro(&want) < 1e-12 * want.fro_norm().max(1.0),
+                    "{m}x{k}x{n} {policy:?}: {}",
+                    out.dist_fro(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_transposed_b_matches_materialized_transpose_bitwise() {
+        // Packing from bᵀ must reproduce the plain blocked kernel on the
+        // materialized transpose exactly — the contract that lets A·Bᵀ
+        // and syrk share the micro-kernel.
+        let mut rng = Rng::new(6);
+        for &(m, k, n) in &[(9usize, 8usize, 33usize), (70, 300, 257), (64, 17, 100)] {
+            let a = Mat::gauss(m, k, &mut rng);
+            let bt = Mat::gauss(n, k, &mut rng); // b stored transposed
+            let b = bt.transpose();
+            for (policy, tier) in tiers() {
+                let mut via_t = vec![0.0; m * n];
+                matmul_t_blocked_rows(&a, &bt, 0, m, &mut via_t, tier);
+                let mut plain = Mat::zeros(m, n);
+                matmul_blocked_into(&a, &b, &mut plain, tier);
+                assert_eq!(via_t, plain.data, "{m}x{k}x{n} {policy:?}");
+            }
         }
     }
 
@@ -287,10 +400,15 @@ mod tests {
         for &(m, k, n) in &[(20usize, 20usize, 5usize), (784, 784, 5), (50, 17, 32)] {
             let a = Mat::gauss(m, k, &mut rng);
             let b = Mat::gauss(k, n, &mut rng);
-            let mut out = Mat::zeros(m, n);
-            matmul_skinny_into(&a, &b, &mut out);
             let want = naive(&a, &b);
-            assert!(out.dist_fro(&want) < 1e-12 * want.fro_norm().max(1.0), "{m}x{k}x{n}");
+            for (policy, tier) in tiers() {
+                let mut out = Mat::zeros(m, n);
+                matmul_skinny_into(&a, &b, &mut out, tier);
+                assert!(
+                    out.dist_fro(&want) < 1e-12 * want.fro_norm().max(1.0),
+                    "{m}x{k}x{n} {policy:?}"
+                );
+            }
         }
     }
 
@@ -298,20 +416,22 @@ mod tests {
     fn skinny_is_bitwise_stable_across_calls() {
         // Scratch reuse must not perturb results.
         let mut rng = Rng::new(3);
+        let tier = SimdPolicy::Auto.resolve();
         let a = Mat::gauss(40, 64, &mut rng);
         let b = Mat::gauss(64, 6, &mut rng);
         let mut o1 = Mat::zeros(40, 6);
         let mut o2 = Mat::zeros(40, 6);
-        matmul_skinny_into(&a, &b, &mut o1);
+        matmul_skinny_into(&a, &b, &mut o1, tier);
         let big = Mat::gauss(64, 30, &mut rng);
         let mut tmp = Mat::zeros(40, 30);
-        matmul_skinny_into(&a, &big, &mut tmp); // dirty the scratch
-        matmul_skinny_into(&a, &b, &mut o2);
+        matmul_skinny_into(&a, &big, &mut tmp, tier); // dirty the scratch
+        matmul_skinny_into(&a, &b, &mut o2, tier);
         assert_eq!(o1.data, o2.data);
     }
 
     /// Reassembling any row split must reproduce the full kernel bitwise
-    /// (the contract that makes within-node row parallelism invisible).
+    /// (the contract that makes within-node row parallelism invisible) —
+    /// at every SIMD tier, the fma one included.
     #[test]
     fn row_splits_are_bitwise_equal_to_full_kernels() {
         let mut rng = Rng::new(9);
@@ -319,24 +439,48 @@ mod tests {
             let a = Mat::gauss(m, k, &mut rng);
             let b = Mat::gauss(k, n, &mut rng);
             let skinny = n <= 32;
-            let mut full = Mat::zeros(m, n);
-            if skinny {
-                matmul_skinny_into(&a, &b, &mut full);
-            } else {
-                matmul_blocked_into(&a, &b, &mut full);
-            }
-            for &split in &[0usize, 1, m / 3, m / 2, m - 1, m] {
-                let mut lo_part = vec![0.0; split * n];
-                let mut hi_part = vec![0.0; (m - split) * n];
+            for (policy, tier) in tiers() {
+                let mut full = Mat::zeros(m, n);
                 if skinny {
-                    matmul_skinny_rows(&a, &b, 0, split, &mut lo_part);
-                    matmul_skinny_rows(&a, &b, split, m, &mut hi_part);
+                    matmul_skinny_into(&a, &b, &mut full, tier);
                 } else {
-                    matmul_blocked_rows(&a, &b, 0, split, &mut lo_part);
-                    matmul_blocked_rows(&a, &b, split, m, &mut hi_part);
+                    matmul_blocked_into(&a, &b, &mut full, tier);
                 }
-                lo_part.extend_from_slice(&hi_part);
-                assert_eq!(lo_part, full.data, "{m}x{k}x{n} split at {split}");
+                for &split in &[0usize, 1, m / 3, m / 2, m - 1, m] {
+                    let mut lo_part = vec![0.0; split * n];
+                    let mut hi_part = vec![0.0; (m - split) * n];
+                    if skinny {
+                        matmul_skinny_rows(&a, &b, 0, split, &mut lo_part, tier);
+                        matmul_skinny_rows(&a, &b, split, m, &mut hi_part, tier);
+                    } else {
+                        matmul_blocked_rows(&a, &b, 0, split, &mut lo_part, tier);
+                        matmul_blocked_rows(&a, &b, split, m, &mut hi_part, tier);
+                    }
+                    lo_part.extend_from_slice(&hi_part);
+                    assert_eq!(
+                        lo_part, full.data,
+                        "{m}x{k}x{n} split at {split} {policy:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_rows_regimes_agree_with_naive() {
+        let mut rng = Rng::new(7);
+        for &(d, k) in &[(5usize, 40usize), (33, 64), (100, 17), (64, 256)] {
+            let a = Mat::gauss(d, k, &mut rng);
+            let scale = 1.0 / k as f64;
+            let want = naive(&a, &a.transpose()).scale(scale);
+            for (policy, tier) in tiers() {
+                let mut out = vec![0.0; d * d];
+                syrk_rows(&a, scale, 0, d, &mut out, tier);
+                let got = Mat::from_vec(d, d, out);
+                assert!(
+                    got.dist_fro(&want) < 1e-12 * want.fro_norm().max(1.0),
+                    "syrk {d}x{k} {policy:?}"
+                );
             }
         }
     }
@@ -345,8 +489,10 @@ mod tests {
     fn blocked_handles_zero_matrices() {
         let a = Mat::zeros(40, 40);
         let b = Mat::zeros(40, 40);
-        let mut out = Mat::zeros(40, 40);
-        matmul_blocked_into(&a, &b, &mut out);
-        assert!(out.data.iter().all(|&v| v == 0.0));
+        for (_, tier) in tiers() {
+            let mut out = Mat::zeros(40, 40);
+            matmul_blocked_into(&a, &b, &mut out, tier);
+            assert!(out.data.iter().all(|&v| v == 0.0));
+        }
     }
 }

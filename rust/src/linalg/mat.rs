@@ -1,6 +1,6 @@
 //! Row-major dense matrix with the operations the DPSA stack needs.
 
-use super::gemm::dot4;
+use super::simd::{self, SimdPolicy, SimdTier};
 use crate::util::rng::Rng;
 use std::fmt;
 use std::ops::{Add, Mul, Sub};
@@ -256,10 +256,22 @@ impl Mat {
     /// contiguous dot products; mid-size dense shapes go through the
     /// register-blocked 8×4 micro-kernel over packed panels
     /// ([`super::gemm`]); small shapes use the cache-friendly i-k-j loop.
+    /// The inner arithmetic dispatches on the process-wide SIMD policy
+    /// ([`super::simd`]); `scalar` and `auto` are bitwise identical.
     pub fn matmul_into(&self, b: &Mat, out: &mut Mat) {
+        self.matmul_into_t(b, out, simd::current_tier());
+    }
+
+    /// [`Mat::matmul_into`] under an explicit [`SimdPolicy`] (tests and
+    /// pinned backends; never touches the process-wide knob).
+    pub fn matmul_into_with(&self, b: &Mat, out: &mut Mat, policy: SimdPolicy) {
+        self.matmul_into_t(b, out, policy.resolve());
+    }
+
+    pub(crate) fn matmul_into_t(&self, b: &Mat, out: &mut Mat, tier: SimdTier) {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
         out.reshape_in_place(self.rows, b.cols);
-        self.matmul_rows_into(b, 0, self.rows, &mut out.data);
+        self.matmul_rows_into_t(b, 0, self.rows, &mut out.data, tier);
     }
 
     /// Rows `lo..hi` of `self * b` into `out_rows` (a row-major
@@ -269,16 +281,39 @@ impl Mat {
     /// order, so assembling any row split reproduces [`Mat::matmul_into`]
     /// bitwise.
     pub fn matmul_rows_into(&self, b: &Mat, lo: usize, hi: usize, out_rows: &mut [f64]) {
+        self.matmul_rows_into_t(b, lo, hi, out_rows, simd::current_tier());
+    }
+
+    /// [`Mat::matmul_rows_into`] under an explicit [`SimdPolicy`].
+    pub fn matmul_rows_into_with(
+        &self,
+        b: &Mat,
+        lo: usize,
+        hi: usize,
+        out_rows: &mut [f64],
+        policy: SimdPolicy,
+    ) {
+        self.matmul_rows_into_t(b, lo, hi, out_rows, policy.resolve());
+    }
+
+    pub(crate) fn matmul_rows_into_t(
+        &self,
+        b: &Mat,
+        lo: usize,
+        hi: usize,
+        out_rows: &mut [f64],
+        tier: SimdTier,
+    ) {
         assert_eq!(self.cols, b.rows, "matmul shape mismatch");
         assert!(lo <= hi && hi <= self.rows, "row range {lo}..{hi} of {}", self.rows);
         let (m, k, n) = (self.rows, self.cols, b.cols);
         assert_eq!(out_rows.len(), (hi - lo) * n);
         if n <= 32 && k >= 16 {
-            super::gemm::matmul_skinny_rows(self, b, lo, hi, out_rows);
+            super::gemm::matmul_skinny_rows(self, b, lo, hi, out_rows, tier);
             return;
         }
         if n > 32 && k >= 8 && m >= 8 {
-            super::gemm::matmul_blocked_rows(self, b, lo, hi, out_rows);
+            super::gemm::matmul_blocked_rows(self, b, lo, hi, out_rows, tier);
             return;
         }
         out_rows.fill(0.0);
@@ -339,8 +374,7 @@ impl Mat {
     }
 
     /// `self * bᵀ` without materializing the transpose. Both operands are
-    /// walked contiguously; the dot product uses 4 accumulators so LLVM
-    /// can vectorize despite FP non-associativity.
+    /// walked contiguously.
     pub fn matmul_t(&self, b: &Mat) -> Mat {
         let mut out = Mat::zeros(self.rows, b.rows);
         self.matmul_t_into(b, &mut out);
@@ -348,21 +382,68 @@ impl Mat {
     }
 
     /// `out = self * bᵀ` without allocating.
+    ///
+    /// Shares [`Mat::matmul_into`]'s regime dispatch: large products go
+    /// through the packed blocked micro-kernel (panels packed straight
+    /// from `b`'s transposed orientation), small ones run as contiguous
+    /// 4-accumulator dots over `b`'s rows (the seed arithmetic — for
+    /// `A·Bᵀ` the transposed layout needs no packing at all).
     pub fn matmul_t_into(&self, b: &Mat, out: &mut Mat) {
+        self.matmul_t_into_t(b, out, simd::current_tier());
+    }
+
+    /// [`Mat::matmul_t_into`] under an explicit [`SimdPolicy`].
+    pub fn matmul_t_into_with(&self, b: &Mat, out: &mut Mat, policy: SimdPolicy) {
+        self.matmul_t_into_t(b, out, policy.resolve());
+    }
+
+    pub(crate) fn matmul_t_into_t(&self, b: &Mat, out: &mut Mat, tier: SimdTier) {
         assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
+        out.reshape_in_place(self.rows, b.rows);
+        self.matmul_t_rows_into_t(b, 0, self.rows, &mut out.data, tier);
+    }
+
+    /// Rows `lo..hi` of `self * bᵀ` into `out_rows` (`(hi-lo) × b.rows`).
+    /// Like [`Mat::matmul_rows_into`], the regime is chosen from the
+    /// **full** shape and summation order per output element is fixed, so
+    /// any row split reassembles [`Mat::matmul_t_into`] bitwise.
+    pub fn matmul_t_rows_into(&self, b: &Mat, lo: usize, hi: usize, out_rows: &mut [f64]) {
+        self.matmul_t_rows_into_t(b, lo, hi, out_rows, simd::current_tier());
+    }
+
+    /// [`Mat::matmul_t_rows_into`] under an explicit [`SimdPolicy`].
+    pub fn matmul_t_rows_into_with(
+        &self,
+        b: &Mat,
+        lo: usize,
+        hi: usize,
+        out_rows: &mut [f64],
+        policy: SimdPolicy,
+    ) {
+        self.matmul_t_rows_into_t(b, lo, hi, out_rows, policy.resolve());
+    }
+
+    pub(crate) fn matmul_t_rows_into_t(
+        &self,
+        b: &Mat,
+        lo: usize,
+        hi: usize,
+        out_rows: &mut [f64],
+        tier: SimdTier,
+    ) {
+        assert_eq!(self.cols, b.cols, "matmul_t shape mismatch");
+        assert!(lo <= hi && hi <= self.rows, "row range {lo}..{hi} of {}", self.rows);
         let (m, k, n) = (self.rows, self.cols, b.rows);
-        out.reshape_in_place(m, n);
-        for i in 0..m {
-            let a_row = self.row(i);
-            for j in 0..n {
-                let b_row = b.row(j);
-                out.data[i * n + j] = dot4(a_row, b_row, k);
-            }
+        assert_eq!(out_rows.len(), (hi - lo) * n);
+        if super::gemm::matmul_t_use_blocked(m, k, n) {
+            super::gemm::matmul_t_blocked_rows(self, b, lo, hi, out_rows, tier);
+        } else {
+            super::gemm::matmul_t_dot_rows(self, b, lo, hi, out_rows, tier);
         }
     }
 
     /// Symmetric rank-k update: `scale * self * selfᵀ` (the Gram/covariance
-    /// hot path). Only computes the upper triangle then mirrors.
+    /// hot path).
     pub fn syrk(&self, scale: f64) -> Mat {
         let mut out = Mat::zeros(self.rows, self.rows);
         self.syrk_into(scale, &mut out);
@@ -370,39 +451,62 @@ impl Mat {
     }
 
     /// `out = scale * self * selfᵀ` without allocating.
+    ///
+    /// Routed through the shared `A·Bᵀ` regime dispatch
+    /// ([`super::gemm::syrk_rows`]): large Grams (the d×d covariance at
+    /// d = 2914) use the packed blocked micro-kernel, small ones the
+    /// per-element 4-accumulator dot. Every element of the full range is
+    /// computed directly (no triangle-mirror shortcut), which is what
+    /// keeps the full kernel bitwise equal to any row split — the matrix
+    /// stays exactly symmetric either way, since element `(i,j)` and
+    /// `(j,i)` run the same fixed-order sum of commuting products.
     pub fn syrk_into(&self, scale: f64, out: &mut Mat) {
+        self.syrk_into_t(scale, out, simd::current_tier());
+    }
+
+    /// [`Mat::syrk_into`] under an explicit [`SimdPolicy`].
+    pub fn syrk_into_with(&self, scale: f64, out: &mut Mat, policy: SimdPolicy) {
+        self.syrk_into_t(scale, out, policy.resolve());
+    }
+
+    pub(crate) fn syrk_into_t(&self, scale: f64, out: &mut Mat, tier: SimdTier) {
         let d = self.rows;
         out.reshape_in_place(d, d);
-        for i in 0..d {
-            let ri = self.row(i);
-            for j in i..d {
-                let rj = self.row(j);
-                let s = dot4(ri, rj, self.cols) * scale;
-                out.data[i * d + j] = s;
-                out.data[j * d + i] = s;
-            }
-        }
+        super::gemm::syrk_rows(self, scale, 0, d, &mut out.data, tier);
     }
 
     /// Rows `lo..hi` of `scale * self * selfᵀ` into `out_rows`
-    /// (`(hi-lo) × rows`). A row chunk cannot own the transposed mirror
-    /// element, so every element of the owned rows is computed directly;
-    /// `dot4(a, b)` is bitwise-commutative (elementwise products commute,
-    /// summation order is fixed), so assembling all rows reproduces
-    /// [`Mat::syrk_into`] exactly. Each off-diagonal dot is computed once
-    /// per owner row (2× the serial triangle's flops — the price of a
-    /// mirror-free split; the serial path keeps triangle-and-mirror).
+    /// (`(hi-lo) × rows`). The regime comes from the **full** shape and
+    /// each output element keeps its full-kernel summation order, so
+    /// assembling all rows reproduces [`Mat::syrk_into`] exactly.
     pub fn syrk_rows_into(&self, scale: f64, lo: usize, hi: usize, out_rows: &mut [f64]) {
+        self.syrk_rows_into_t(scale, lo, hi, out_rows, simd::current_tier());
+    }
+
+    /// [`Mat::syrk_rows_into`] under an explicit [`SimdPolicy`].
+    pub fn syrk_rows_into_with(
+        &self,
+        scale: f64,
+        lo: usize,
+        hi: usize,
+        out_rows: &mut [f64],
+        policy: SimdPolicy,
+    ) {
+        self.syrk_rows_into_t(scale, lo, hi, out_rows, policy.resolve());
+    }
+
+    pub(crate) fn syrk_rows_into_t(
+        &self,
+        scale: f64,
+        lo: usize,
+        hi: usize,
+        out_rows: &mut [f64],
+        tier: SimdTier,
+    ) {
         let d = self.rows;
         assert!(lo <= hi && hi <= d, "row range {lo}..{hi} of {d}");
         assert_eq!(out_rows.len(), (hi - lo) * d);
-        for i in lo..hi {
-            let ri = self.row(i);
-            let orow = &mut out_rows[(i - lo) * d..(i - lo + 1) * d];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o = dot4(ri, self.row(j), self.cols) * scale;
-            }
-        }
+        super::gemm::syrk_rows(self, scale, lo, hi, out_rows, tier);
     }
 
     // ---------- norms & reductions ----------

@@ -13,6 +13,7 @@ pub mod eig;
 pub(crate) mod gemm;
 pub mod mat;
 pub mod qr;
+pub mod simd;
 pub mod svd;
 
 pub use chol::{cholesky, cholesky_into, solve_r_right_into};
@@ -20,4 +21,5 @@ pub use covop::CovOp;
 pub use eig::{power_iteration, sym_eig};
 pub use mat::Mat;
 pub use qr::{householder_qr, mgs_qr, QrPolicy, QrScratch};
+pub use simd::{SimdPolicy, SimdTier};
 pub use svd::{singular_values, svd_small};

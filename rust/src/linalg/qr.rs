@@ -12,9 +12,10 @@
 //! * [`QrPolicy::Blocked`] — panel Householder in the compact-WY form
 //!   `Q = I − V T Vᵀ`: the panel is factored with the scalar loop, then
 //!   the trailing-matrix update and the thin-Q formation run as GEMMs
-//!   through the packed-panel micro-kernels (`linalg::gemm`). Falls back
-//!   to the scalar kernel for `n ≤` [`QR_PANEL`] columns (bitwise equal
-//!   there).
+//!   through the packed-panel micro-kernels (`linalg::gemm`, whose 8×4
+//!   tile dispatches on the process-wide `--simd` knob — `scalar` and
+//!   `auto` stay bitwise identical here too). Falls back to the scalar
+//!   kernel for `n ≤` [`QR_PANEL`] columns (bitwise equal there).
 //! * [`QrPolicy::Tsqr`] — communication-avoiding TSQR: the `m×n` input
 //!   is split into [`tsqr_leaves`]`(m, n)` row blocks by the same pure
 //!   `chunk_bounds` partition the node pool uses, each leaf is QR-factored

@@ -1,0 +1,605 @@
+//! Runtime-dispatched SIMD micro-kernels for the `dot4`/GEMM hot path.
+//!
+//! Every inner-product kernel in the crate (`dot4`, the skinny packed-`bᵀ`
+//! matmul, the 8×4 blocked GEMM micro-kernel, `syrk`, `A·Bᵀ`) funnels
+//! through this module, so the instruction set used for *all* S-DOT/F-DOT
+//! arithmetic is decided at exactly one seam. Three tiers:
+//!
+//! * [`SimdTier::Scalar`] — the seed arithmetic: 4-way unrolled scalar
+//!   accumulators with the fixed `(acc0+acc1)+(acc2+acc3)` combine.
+//! * [`SimdTier::Vector`] — explicit `std::arch` vectors (x86_64
+//!   AVX2, aarch64 NEON) that keep **the same 4-lane accumulator
+//!   grouping and the same combine order** as the scalar kernel: every
+//!   output element sees the identical sequence of IEEE mul/add
+//!   operations, so `Vector` results are **bitwise identical** to
+//!   `Scalar` (property-tested over the PR 3 shape sweep). Vectorizing
+//!   is therefore *not* a numerics policy — only a speed knob.
+//! * [`SimdTier::Fma`] — fused multiply-add (`vfmadd`/`vfmaq`): each
+//!   `a·b + acc` rounds once instead of twice, which **intentionally
+//!   changes bits**. Like `--qr`, `fma` is a result-affecting policy:
+//!   perf-ledger comparisons must hold it fixed, and for one policy
+//!   results remain bitwise identical at every `--threads`.
+//!
+//! The knob is [`SimdPolicy`] (`--simd scalar|auto|fma`, config key
+//! `"simd"`, `BENCH_SIMD` env, pinnable per backend via
+//! `runtime::NativeBackend`), resolved against runtime CPU detection
+//! ([`SimdPolicy::resolve`]): `auto` uses the bitwise-identical vector
+//! tier when AVX2/NEON is present and falls back to scalar otherwise;
+//! `fma` degrades to `auto` then `scalar` when the hardware lacks it, so
+//! a config file is portable across machines (at the price that `fma`
+//! bits are only reproducible on FMA hardware).
+//!
+//! Compiling with the `force-scalar` cargo feature removes every
+//! `std::arch` path at build time (CI checks this build), leaving the
+//! scalar kernels — the guaranteed-portable fallback.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Micro-tile rows of the blocked GEMM kernel (accumulator rows).
+pub(crate) const MR: usize = 8;
+/// Micro-tile columns — one 4-lane f64 vector per accumulator row.
+pub(crate) const NR: usize = 4;
+
+// ---------------------------------------------------------------------
+// Policy knob
+// ---------------------------------------------------------------------
+
+/// SIMD kernel policy (`--simd`, config `"simd"`, `BENCH_SIMD`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[repr(u8)]
+pub enum SimdPolicy {
+    /// Scalar 4-accumulator kernels (the seed arithmetic).
+    Scalar = 0,
+    /// Explicit SIMD with scalar-identical lane grouping: bitwise equal
+    /// to [`SimdPolicy::Scalar`], faster where AVX2/NEON exists.
+    #[default]
+    Auto = 1,
+    /// Fused multiply-add kernels: fastest, intentionally changes bits
+    /// (single rounding per `a·b + acc`). A result-affecting policy —
+    /// hold it fixed across perf-ledger comparisons.
+    Fma = 2,
+}
+
+impl SimdPolicy {
+    /// All policies, in knob order.
+    pub const ALL: [SimdPolicy; 3] = [SimdPolicy::Scalar, SimdPolicy::Auto, SimdPolicy::Fma];
+
+    /// Parse the CLI/config/env spelling.
+    pub fn parse(s: &str) -> Option<SimdPolicy> {
+        match s {
+            "scalar" => Some(SimdPolicy::Scalar),
+            "auto" => Some(SimdPolicy::Auto),
+            "fma" => Some(SimdPolicy::Fma),
+            _ => None,
+        }
+    }
+
+    /// The knob spelling (inverse of [`SimdPolicy::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPolicy::Scalar => "scalar",
+            SimdPolicy::Auto => "auto",
+            SimdPolicy::Fma => "fma",
+        }
+    }
+
+    fn from_u8(v: u8) -> SimdPolicy {
+        match v {
+            1 => SimdPolicy::Auto,
+            2 => SimdPolicy::Fma,
+            _ => SimdPolicy::Scalar,
+        }
+    }
+
+    /// Resolve the policy against the running CPU. The result is the
+    /// dispatch target the kernels actually execute; requesting a tier
+    /// the hardware lacks degrades (`Fma → Vector → Scalar`) rather
+    /// than erroring, so configs stay portable across machines.
+    pub fn resolve(self) -> SimdTier {
+        match self {
+            SimdPolicy::Scalar => SimdTier::Scalar,
+            SimdPolicy::Auto => match hw_level() {
+                0 => SimdTier::Scalar,
+                _ => SimdTier::Vector,
+            },
+            SimdPolicy::Fma => match hw_level() {
+                2 => SimdTier::Fma,
+                1 => SimdTier::Vector,
+                _ => SimdTier::Scalar,
+            },
+        }
+    }
+}
+
+/// A resolved dispatch target (policy × CPU detection). Obtained via
+/// [`SimdPolicy::resolve`]; `Vector`/`Fma` are only ever produced when
+/// the running CPU supports them, which is what makes the `unsafe`
+/// `target_feature` calls below sound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// Scalar 4-accumulator loops.
+    Scalar,
+    /// AVX2 / NEON with scalar-identical accumulator grouping.
+    Vector,
+    /// AVX2+FMA / NEON fused multiply-add.
+    Fma,
+}
+
+const POLICY_UNSET: u8 = u8::MAX;
+static DEFAULT_POLICY: AtomicU8 = AtomicU8::new(POLICY_UNSET);
+
+/// Set the process-wide default SIMD policy (the `--simd` / `"simd"` /
+/// `BENCH_SIMD` knob). Entry points call this once at startup. Tests
+/// that need an explicit policy should use the `*_with` kernel variants
+/// (or `NativeBackend::with_simd`) instead of mutating this global —
+/// with one carve-out: because `Scalar` and `Auto` are bitwise
+/// identical, a test may flip the global between *those two* without
+/// perturbing concurrently running tests. Never set `Fma` here from a
+/// test: it changes bits process-wide.
+pub fn set_default_simd_policy(p: SimdPolicy) {
+    DEFAULT_POLICY.store(p as u8, Ordering::Relaxed);
+}
+
+/// Current process-wide default SIMD policy. First use initializes from
+/// the `BENCH_SIMD` env var (`scalar|auto|fma`, unknown values are a
+/// hard error) so the whole test suite and every bench honor
+/// `BENCH_SIMD=… cargo test`; absent the env var the default is `auto`
+/// — safe because `auto` is bitwise identical to `scalar`.
+pub fn default_simd_policy() -> SimdPolicy {
+    match DEFAULT_POLICY.load(Ordering::Relaxed) {
+        POLICY_UNSET => {
+            let p = match std::env::var("BENCH_SIMD").ok().as_deref() {
+                None => SimdPolicy::Auto,
+                Some(s) => SimdPolicy::parse(s).unwrap_or_else(|| {
+                    panic!("BENCH_SIMD must be scalar|auto|fma, got '{s}'")
+                }),
+            };
+            // Benign race: concurrent first calls parse the same env.
+            DEFAULT_POLICY.store(p as u8, Ordering::Relaxed);
+            p
+        }
+        v => SimdPolicy::from_u8(v),
+    }
+}
+
+/// The tier the plain (non-`_with`) kernel entry points dispatch to:
+/// the process-wide default policy resolved against the CPU.
+#[inline]
+pub fn current_tier() -> SimdTier {
+    default_simd_policy().resolve()
+}
+
+// ---------------------------------------------------------------------
+// CPU detection (cached)
+// ---------------------------------------------------------------------
+
+const HW_UNSET: u8 = u8::MAX;
+static HW_LEVEL: AtomicU8 = AtomicU8::new(HW_UNSET);
+
+/// Cached hardware capability: 0 = scalar only, 1 = vector, 2 = fma.
+#[inline]
+fn hw_level() -> u8 {
+    match HW_LEVEL.load(Ordering::Relaxed) {
+        HW_UNSET => {
+            let l = detect_hw();
+            HW_LEVEL.store(l, Ordering::Relaxed);
+            l
+        }
+        v => v,
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+fn detect_hw() -> u8 {
+    if is_x86_feature_detected!("avx2") {
+        if is_x86_feature_detected!("fma") {
+            2
+        } else {
+            1
+        }
+    } else {
+        0
+    }
+}
+
+#[cfg(all(target_arch = "aarch64", not(feature = "force-scalar")))]
+fn detect_hw() -> u8 {
+    // NEON (including fused `vfmaq_f64`) is baseline on every aarch64
+    // target rustc supports — no runtime probe needed.
+    2
+}
+
+#[cfg(any(
+    feature = "force-scalar",
+    not(any(target_arch = "x86_64", target_arch = "aarch64"))
+))]
+fn detect_hw() -> u8 {
+    0
+}
+
+// ---------------------------------------------------------------------
+// dot4 — the 4-accumulator dot product
+// ---------------------------------------------------------------------
+
+/// Dot product over `a[..k]`/`b[..k]` with 4-way accumulators and the
+/// fixed `(acc0+acc1)+(acc2+acc3)` combine, dispatched on the
+/// process-wide SIMD policy. `scalar` and `auto` are bitwise identical.
+#[inline]
+pub fn dot4(a: &[f64], b: &[f64], k: usize) -> f64 {
+    dot4_t(a, b, k, current_tier())
+}
+
+/// [`dot4`] under an explicit policy (tests pin `scalar`/`auto`/`fma`
+/// without touching the process-wide knob).
+#[inline]
+pub fn dot4_with(a: &[f64], b: &[f64], k: usize, policy: SimdPolicy) -> f64 {
+    dot4_t(a, b, k, policy.resolve())
+}
+
+/// [`dot4`] at a resolved tier (the crate-internal dispatch point).
+#[inline]
+pub(crate) fn dot4_t(a: &[f64], b: &[f64], k: usize, tier: SimdTier) -> f64 {
+    debug_assert!(a.len() >= k && b.len() >= k);
+    match tier {
+        SimdTier::Scalar => dot4_scalar(a, b, k),
+        // Sound: `resolve` only yields Vector/Fma when the CPU has the
+        // corresponding features (and imp falls back to scalar on
+        // builds without std::arch paths).
+        SimdTier::Vector => unsafe { imp::dot4_vec(a, b, k) },
+        SimdTier::Fma => unsafe { imp::dot4_fma(a, b, k) },
+    }
+}
+
+/// The seed kernel: 4 scalar accumulators, fixed combine, scalar tail.
+#[inline]
+fn dot4_scalar(a: &[f64], b: &[f64], k: usize) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let chunks = k / 4;
+    for c in 0..chunks {
+        let o = c * 4;
+        acc[0] += a[o] * b[o];
+        acc[1] += a[o + 1] * b[o + 1];
+        acc[2] += a[o + 2] * b[o + 2];
+        acc[3] += a[o + 3] * b[o + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for o in chunks * 4..k {
+        s += a[o] * b[o];
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// 8×4 GEMM micro-kernel
+// ---------------------------------------------------------------------
+
+/// One `MR×NR` accumulator tile over packed panels: returns
+/// `acc[r][c] = Σ_p pa[p·MR + r] · pb[p·NR + c]` with `p` ascending —
+/// exactly the scalar micro-kernel's per-element order, so the vector
+/// tier is bitwise identical and the fma tier differs only by fused
+/// rounding. `pa` holds `MR·kb` packed A values, `pb` holds `NR·kb`
+/// packed B values.
+#[inline]
+pub(crate) fn microkernel_8x4_t(
+    pa: &[f64],
+    pb: &[f64],
+    kb: usize,
+    tier: SimdTier,
+) -> [[f64; NR]; MR] {
+    debug_assert!(pa.len() >= MR * kb && pb.len() >= NR * kb);
+    match tier {
+        SimdTier::Scalar => microkernel_8x4_scalar(pa, pb, kb),
+        SimdTier::Vector => unsafe { imp::microkernel_8x4_vec(pa, pb, kb) },
+        SimdTier::Fma => unsafe { imp::microkernel_8x4_fma(pa, pb, kb) },
+    }
+}
+
+#[inline]
+fn microkernel_8x4_scalar(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
+    let mut acc = [[0.0f64; NR]; MR];
+    for p in 0..kb {
+        let av = &pa[p * MR..p * MR + MR];
+        let bv = &pb[p * NR..p * NR + NR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let a = av[r];
+            for (c, slot) in accr.iter_mut().enumerate() {
+                *slot += a * bv[c];
+            }
+        }
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// Arch back-ends
+// ---------------------------------------------------------------------
+
+#[cfg(all(target_arch = "x86_64", not(feature = "force-scalar")))]
+mod imp {
+    //! AVX2 (+FMA) kernels. Callers guarantee the features are present
+    //! (`SimdPolicy::resolve` gates on `is_x86_feature_detected!`).
+    use super::{MR, NR};
+    use core::arch::x86_64::*;
+
+    /// `(v0+v1) + (v2+v3)` — the scalar kernels' combine order.
+    #[inline]
+    unsafe fn hsum4(v: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(v); // [v0, v1]
+        let hi = _mm256_extractf128_pd::<1>(v); // [v2, v3]
+        let s01 = _mm_cvtsd_f64(_mm_add_sd(lo, _mm_unpackhi_pd(lo, lo)));
+        let s23 = _mm_cvtsd_f64(_mm_add_sd(hi, _mm_unpackhi_pd(hi, hi)));
+        s01 + s23
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot4_vec(a: &[f64], b: &[f64], k: usize) -> f64 {
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let chunks = k / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let av = _mm256_loadu_pd(ap.add(c * 4));
+            let bv = _mm256_loadu_pd(bp.add(c * 4));
+            // mul then add: two roundings per lane, like the scalar
+            // `acc[i] += a*b` — bitwise identical lane by lane.
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+        }
+        let mut s = hsum4(acc);
+        for o in chunks * 4..k {
+            s += *ap.add(o) * *bp.add(o);
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot4_fma(a: &[f64], b: &[f64], k: usize) -> f64 {
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let chunks = k / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let av = _mm256_loadu_pd(ap.add(c * 4));
+            let bv = _mm256_loadu_pd(bp.add(c * 4));
+            acc = _mm256_fmadd_pd(av, bv, acc);
+        }
+        let mut s = hsum4(acc);
+        for o in chunks * 4..k {
+            // Fused tail too (compiles to vfmadd inside this fn).
+            s = (*ap.add(o)).mul_add(*bp.add(o), s);
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn microkernel_8x4_vec(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
+        let (ap, bp) = (pa.as_ptr(), pb.as_ptr());
+        let mut acc = [_mm256_setzero_pd(); MR];
+        for p in 0..kb {
+            let bv = _mm256_loadu_pd(bp.add(p * NR));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_pd(*ap.add(p * MR + r));
+                *accr = _mm256_add_pd(*accr, _mm256_mul_pd(av, bv));
+            }
+        }
+        let mut out = [[0.0f64; NR]; MR];
+        for (row, accr) in out.iter_mut().zip(acc.iter()) {
+            _mm256_storeu_pd(row.as_mut_ptr(), *accr);
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn microkernel_8x4_fma(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
+        let (ap, bp) = (pa.as_ptr(), pb.as_ptr());
+        let mut acc = [_mm256_setzero_pd(); MR];
+        for p in 0..kb {
+            let bv = _mm256_loadu_pd(bp.add(p * NR));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_pd(*ap.add(p * MR + r));
+                *accr = _mm256_fmadd_pd(av, bv, *accr);
+            }
+        }
+        let mut out = [[0.0f64; NR]; MR];
+        for (row, accr) in out.iter_mut().zip(acc.iter()) {
+            _mm256_storeu_pd(row.as_mut_ptr(), *accr);
+        }
+        out
+    }
+}
+
+#[cfg(all(target_arch = "aarch64", not(feature = "force-scalar")))]
+mod imp {
+    //! NEON kernels: the 4 scalar accumulators live in two 2-lane
+    //! vectors; `vaddvq_f64` realizes each `acc0+acc1` pair-sum, so the
+    //! combine is `(acc0+acc1)+(acc2+acc3)` exactly.
+    use super::{MR, NR};
+    use core::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot4_vec(a: &[f64], b: &[f64], k: usize) -> f64 {
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let chunks = k / 4;
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let o = c * 4;
+            acc01 = vaddq_f64(acc01, vmulq_f64(vld1q_f64(ap.add(o)), vld1q_f64(bp.add(o))));
+            acc23 = vaddq_f64(
+                acc23,
+                vmulq_f64(vld1q_f64(ap.add(o + 2)), vld1q_f64(bp.add(o + 2))),
+            );
+        }
+        let mut s = vaddvq_f64(acc01) + vaddvq_f64(acc23);
+        for o in chunks * 4..k {
+            s += *ap.add(o) * *bp.add(o);
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot4_fma(a: &[f64], b: &[f64], k: usize) -> f64 {
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let chunks = k / 4;
+        let mut acc01 = vdupq_n_f64(0.0);
+        let mut acc23 = vdupq_n_f64(0.0);
+        for c in 0..chunks {
+            let o = c * 4;
+            acc01 = vfmaq_f64(acc01, vld1q_f64(ap.add(o)), vld1q_f64(bp.add(o)));
+            acc23 = vfmaq_f64(acc23, vld1q_f64(ap.add(o + 2)), vld1q_f64(bp.add(o + 2)));
+        }
+        let mut s = vaddvq_f64(acc01) + vaddvq_f64(acc23);
+        for o in chunks * 4..k {
+            s = (*ap.add(o)).mul_add(*bp.add(o), s);
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn microkernel_8x4_vec(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
+        let (ap, bp) = (pa.as_ptr(), pb.as_ptr());
+        let mut acc = [[vdupq_n_f64(0.0); 2]; MR];
+        for p in 0..kb {
+            let b01 = vld1q_f64(bp.add(p * NR));
+            let b23 = vld1q_f64(bp.add(p * NR + 2));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = vdupq_n_f64(*ap.add(p * MR + r));
+                accr[0] = vaddq_f64(accr[0], vmulq_f64(av, b01));
+                accr[1] = vaddq_f64(accr[1], vmulq_f64(av, b23));
+            }
+        }
+        store_acc(&acc)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn microkernel_8x4_fma(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
+        let (ap, bp) = (pa.as_ptr(), pb.as_ptr());
+        let mut acc = [[vdupq_n_f64(0.0); 2]; MR];
+        for p in 0..kb {
+            let b01 = vld1q_f64(bp.add(p * NR));
+            let b23 = vld1q_f64(bp.add(p * NR + 2));
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = vdupq_n_f64(*ap.add(p * MR + r));
+                accr[0] = vfmaq_f64(accr[0], av, b01);
+                accr[1] = vfmaq_f64(accr[1], av, b23);
+            }
+        }
+        store_acc(&acc)
+    }
+
+    #[inline]
+    unsafe fn store_acc(acc: &[[float64x2_t; 2]; MR]) -> [[f64; NR]; MR] {
+        let mut out = [[0.0f64; NR]; MR];
+        for (row, accr) in out.iter_mut().zip(acc.iter()) {
+            vst1q_f64(row.as_mut_ptr(), accr[0]);
+            vst1q_f64(row.as_mut_ptr().add(2), accr[1]);
+        }
+        out
+    }
+}
+
+#[cfg(any(
+    feature = "force-scalar",
+    not(any(target_arch = "x86_64", target_arch = "aarch64"))
+))]
+mod imp {
+    //! Portable fallback: `resolve` never yields `Vector`/`Fma` on this
+    //! build (detection reports scalar-only), but the entry points exist
+    //! so the dispatch above compiles unchanged.
+    use super::{MR, NR};
+
+    pub unsafe fn dot4_vec(a: &[f64], b: &[f64], k: usize) -> f64 {
+        super::dot4_scalar(a, b, k)
+    }
+
+    pub unsafe fn dot4_fma(a: &[f64], b: &[f64], k: usize) -> f64 {
+        super::dot4_scalar(a, b, k)
+    }
+
+    pub unsafe fn microkernel_8x4_vec(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
+        super::microkernel_8x4_scalar(pa, pb, kb)
+    }
+
+    pub unsafe fn microkernel_8x4_fma(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
+        super::microkernel_8x4_scalar(pa, pb, kb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in SimdPolicy::ALL {
+            assert_eq!(SimdPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(SimdPolicy::parse("sse"), None);
+        assert_eq!(SimdPolicy::default(), SimdPolicy::Auto);
+    }
+
+    #[test]
+    fn resolve_degrades_monotonically() {
+        // Whatever the hardware, scalar stays scalar and fma resolves at
+        // least as high as auto.
+        assert_eq!(SimdPolicy::Scalar.resolve(), SimdTier::Scalar);
+        let auto = SimdPolicy::Auto.resolve();
+        let fma = SimdPolicy::Fma.resolve();
+        if auto == SimdTier::Scalar {
+            assert_eq!(fma, SimdTier::Scalar, "no vector unit ⇒ fma degrades fully");
+        }
+        assert_ne!(auto, SimdTier::Fma, "auto never contracts rounding");
+    }
+
+    #[test]
+    fn dot4_scalar_vs_vector_bitwise_all_k() {
+        let mut rng = Rng::new(7);
+        // Every k in the sweep hits a different tail length (k mod 4).
+        for k in (0..=70).chain([255, 256, 257, 1000]) {
+            let mut a = vec![0.0; k];
+            let mut b = vec![0.0; k];
+            rng.fill_gauss(&mut a);
+            rng.fill_gauss(&mut b);
+            let scalar = dot4_with(&a, &b, k, SimdPolicy::Scalar);
+            let auto = dot4_with(&a, &b, k, SimdPolicy::Auto);
+            assert_eq!(scalar.to_bits(), auto.to_bits(), "k={k}");
+            let fma = dot4_with(&a, &b, k, SimdPolicy::Fma);
+            let tol = 1e-12 * scalar.abs().max(1.0);
+            assert!((fma - scalar).abs() <= tol, "k={k}: fma {fma} vs {scalar}");
+        }
+    }
+
+    #[test]
+    fn microkernel_scalar_vs_simd_tiers() {
+        let mut rng = Rng::new(8);
+        for kb in [0usize, 1, 2, 3, 7, 8, 64, 255, 256] {
+            let mut pa = vec![0.0; MR * kb.max(1)];
+            let mut pb = vec![0.0; NR * kb.max(1)];
+            rng.fill_gauss(&mut pa);
+            rng.fill_gauss(&mut pb);
+            let scalar = microkernel_8x4_t(&pa, &pb, kb, SimdTier::Scalar);
+            let vector = microkernel_8x4_t(&pa, &pb, kb, SimdPolicy::Auto.resolve());
+            for r in 0..MR {
+                for c in 0..NR {
+                    assert_eq!(
+                        scalar[r][c].to_bits(),
+                        vector[r][c].to_bits(),
+                        "kb={kb} ({r},{c})"
+                    );
+                }
+            }
+            let fma = microkernel_8x4_t(&pa, &pb, kb, SimdPolicy::Fma.resolve());
+            for r in 0..MR {
+                for c in 0..NR {
+                    let tol = 1e-12 * scalar[r][c].abs().max(1.0);
+                    assert!((fma[r][c] - scalar[r][c]).abs() <= tol, "kb={kb} ({r},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot4_empty_and_short() {
+        assert_eq!(dot4_with(&[], &[], 0, SimdPolicy::Auto), 0.0);
+        assert_eq!(dot4_with(&[2.0], &[3.0], 1, SimdPolicy::Auto), 6.0);
+        assert_eq!(dot4_with(&[2.0], &[3.0], 1, SimdPolicy::Fma), 6.0);
+    }
+}

@@ -11,6 +11,7 @@
 //! flags: --seed N --scale F --trials N --threads N --out DIR
 //!        --config FILE.json --trial-parallel on|off
 //!        --mpi-clock real|virtual --qr householder|blocked|tsqr
+//!        --simd scalar|auto|fma
 //! ```
 //!
 //! `--threads` is one knob for two parallelism levels: Monte-Carlo
@@ -20,50 +21,20 @@
 //! see `config` and `runtime::pool` for the contract. `--qr` selects the
 //! step-12 orthonormalization kernel (`linalg::qr::QrPolicy`); the TSQR
 //! kernel additionally fans each node's QR across rows, with results
-//! bitwise stable across `--threads` (fixed reduction tree).
+//! bitwise stable across `--threads` (fixed reduction tree). `--simd`
+//! selects the inner-product micro-kernels (`linalg::simd::SimdPolicy`):
+//! `auto` is bitwise identical to `scalar`, `fma` intentionally changes
+//! bits (hold it fixed across perf-ledger comparisons, like `--qr`).
 //!
-//! Flags are validated against the registry below: a typo'd flag or a
-//! value-typed flag with a missing value is a hard error listing the
-//! valid flags, never silently ignored.
+//! Flags are validated against `dpsa::config::FLAGS` — the same registry
+//! that vets JSON config keys — so a typo'd flag, an unknown config key,
+//! or a value-typed flag with a missing value is a hard error listing
+//! the valid spellings, never silently ignored.
 
 use anyhow::Result;
-use dpsa::config::load_ctx;
+use dpsa::config::{load_ctx, FLAGS};
 use dpsa::experiments::{all_ids, run};
-use dpsa::util::cli::{Args, FlagSpec};
-
-/// Every flag the CLI accepts; `Args::from_env_checked` rejects
-/// anything else with a message listing this table.
-const FLAGS: &[FlagSpec] = &[
-    FlagSpec { name: "seed", takes_value: true, help: "base RNG seed (u64)" },
-    FlagSpec {
-        name: "scale",
-        takes_value: true,
-        help: "fraction of the paper's iteration counts, in (0, 10]",
-    },
-    FlagSpec { name: "trials", takes_value: true, help: "Monte-Carlo trials (>= 1)" },
-    FlagSpec { name: "out", takes_value: true, help: "output directory for artifacts" },
-    FlagSpec { name: "config", takes_value: true, help: "JSON config file (CLI flags win)" },
-    FlagSpec {
-        name: "threads",
-        takes_value: true,
-        help: "total parallelism budget in [1, 256] (trials + nodes + rows)",
-    },
-    FlagSpec {
-        name: "trial-parallel",
-        takes_value: true,
-        help: "fan Monte-Carlo trials across the pool: on|off",
-    },
-    FlagSpec {
-        name: "mpi-clock",
-        takes_value: true,
-        help: "straggler-study clock: real|virtual",
-    },
-    FlagSpec {
-        name: "qr",
-        takes_value: true,
-        help: "step-12 QR kernel: householder|blocked|tsqr",
-    },
-];
+use dpsa::util::cli::Args;
 
 fn main() {
     let args = match Args::from_env_checked(FLAGS) {
@@ -107,6 +78,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let ctx = load_ctx(args)?;
     dpsa::network::sim::set_default_threads(ctx.threads);
     dpsa::linalg::qr::set_default_qr_policy(ctx.qr);
+    dpsa::linalg::simd::set_default_simd_policy(ctx.simd);
     let mut ids: Vec<String> = args.positional[1..].to_vec();
     if ids.iter().any(|i| i == "all") {
         ids = all_ids().iter().map(|s| s.to_string()).collect();
@@ -198,6 +170,6 @@ fn print_usage() {
         "usage: dpsa <list|run|info|demo> [ids…] \
          [--seed N] [--scale F] [--trials N] [--threads N] [--out DIR] \
          [--config FILE] [--trial-parallel on|off] [--mpi-clock real|virtual] \
-         [--qr householder|blocked|tsqr]"
+         [--qr householder|blocked|tsqr] [--simd scalar|auto|fma]"
     );
 }

@@ -53,7 +53,7 @@ use crate::linalg::Mat;
 use crate::network::counters::P2pCounters;
 use crate::util::rng::SplitMix64;
 use std::collections::HashMap;
-use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -173,10 +173,20 @@ pub struct NodeCtx {
 
 /// Pop a recycled send buffer: edge return channel first, then the
 /// node-local pool, minting an empty `Mat` only when both are dry.
+///
+/// `Empty` is the normal case (the peer simply holds our complement
+/// right now); `Disconnected` means the peer tore its `Link` down
+/// mid-run, which every data-channel path treats as fatal (`expect
+/// ("peer hung up")`) — so it fails loudly here too instead of silently
+/// degrading into fresh allocations that would also break the
+/// zero-allocation steady-state contract.
 fn take_buf(link: &Link, local: &mut Vec<Mat>) -> Mat {
     match link.spare_rx.try_recv() {
         Ok(b) => b,
-        Err(_) => local.pop().unwrap_or_else(|| Mat::zeros(0, 0)),
+        Err(TryRecvError::Empty) => local.pop().unwrap_or_else(|| Mat::zeros(0, 0)),
+        Err(TryRecvError::Disconnected) => {
+            panic!("peer {} hung up (buffer-return channel closed mid-run)", link.peer)
+        }
     }
 }
 

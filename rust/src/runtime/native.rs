@@ -2,38 +2,63 @@
 
 use super::Backend;
 use crate::linalg::qr::{self, QrPolicy, QrScratch};
+use crate::linalg::simd::{self, SimdPolicy};
 use crate::linalg::{CovOp, Mat};
 
 /// The default backend: exact f64 arithmetic via the in-repo linalg.
 ///
-/// Carries the step-12 [`QrPolicy`]: [`NativeBackend::default`] snapshots
-/// the process-wide knob (`--qr` / `"qr"` / `BENCH_QR`), while
-/// [`NativeBackend::with_policy`] pins an explicit kernel — the race-free
+/// Carries the step-12 [`QrPolicy`] and the [`SimdPolicy`] of the
+/// `M_i Q` kernels: [`NativeBackend::default`] snapshots the
+/// process-wide knobs (`--qr` / `"qr"` / `BENCH_QR`, `--simd` /
+/// `"simd"` / `BENCH_SIMD`), while [`NativeBackend::with_policy`] /
+/// [`NativeBackend::with_simd`] pin explicit kernels — the race-free
 /// route for tests, which run concurrently in one process and must not
-/// mutate the global default.
+/// mutate the global defaults. The SIMD policy covers every covariance
+/// product this backend executes (full and row-split phases alike); QR
+/// panel GEMMs and metric products follow the process-wide knob —
+/// either way each operation family uses one tier at every thread
+/// count, which is what the bitwise-determinism contract needs.
 #[derive(Clone, Copy, Debug)]
 pub struct NativeBackend {
     /// Step-12 orthonormalization kernel.
     pub qr: QrPolicy,
+    /// SIMD kernel policy for the `M_i Q` hot path.
+    pub simd: SimdPolicy,
 }
 
 impl NativeBackend {
-    /// Backend pinned to an explicit QR policy.
+    /// Backend pinned to an explicit QR policy (SIMD policy snapshots
+    /// the process-wide knob).
     pub fn with_policy(qr: QrPolicy) -> NativeBackend {
-        NativeBackend { qr }
+        NativeBackend { qr, simd: simd::default_simd_policy() }
+    }
+
+    /// Backend pinned to an explicit SIMD policy (QR policy snapshots
+    /// the process-wide knob).
+    pub fn with_simd(simd: SimdPolicy) -> NativeBackend {
+        NativeBackend { qr: qr::default_qr_policy(), simd }
+    }
+
+    /// Backend with both kernels pinned explicitly.
+    pub fn with_policies(qr: QrPolicy, simd: SimdPolicy) -> NativeBackend {
+        NativeBackend { qr, simd }
     }
 }
 
 impl Default for NativeBackend {
-    /// Snapshots the process-wide default QR policy at construction.
+    /// Snapshots the process-wide default QR and SIMD policies at
+    /// construction.
     fn default() -> NativeBackend {
-        NativeBackend { qr: qr::default_qr_policy() }
+        NativeBackend {
+            qr: qr::default_qr_policy(),
+            simd: simd::default_simd_policy(),
+        }
     }
 }
 
 impl Backend for NativeBackend {
     fn cov_apply(&self, cov: &CovOp, q: &Mat) -> Mat {
-        cov.apply(q)
+        cov.apply_with(q, self.simd)
     }
 
     fn orthonormalize(&self, v: &Mat) -> Mat {
@@ -41,7 +66,7 @@ impl Backend for NativeBackend {
     }
 
     fn cov_apply_into(&self, cov: &CovOp, q: &Mat, out: &mut Mat, tmp: &mut Mat) {
-        cov.apply_into(q, out, tmp);
+        cov.apply_into_with(q, out, tmp, self.simd);
     }
 
     fn orthonormalize_into(&self, v: &Mat, out: &mut Mat, ws: &mut QrScratch) {
@@ -53,6 +78,21 @@ impl Backend for NativeBackend {
     /// sound here.
     fn supports_row_split(&self) -> bool {
         true
+    }
+
+    /// Row-split phase B runs under the backend's pinned SIMD policy —
+    /// the same one [`Backend::cov_apply_into`] uses, so full and split
+    /// products stay bitwise interchangeable.
+    fn cov_apply_out_rows(
+        &self,
+        cov: &CovOp,
+        q: &Mat,
+        tmp: &Mat,
+        lo: usize,
+        hi: usize,
+        out_rows: &mut [f64],
+    ) {
+        cov.apply_out_rows_with(q, tmp, lo, hi, out_rows, self.simd);
     }
 
     fn qr_policy(&self) -> QrPolicy {
@@ -126,5 +166,35 @@ mod tests {
         // The default backend follows the process-wide default knob
         // (Householder unless an entry point set otherwise).
         assert_eq!(NativeBackend::default().qr_policy(), qr::default_qr_policy());
+    }
+
+    #[test]
+    fn simd_policy_field_routes_the_kernel() {
+        let mut rng = Rng::new(5);
+        let x = Mat::gauss(40, 60, &mut rng);
+        let cov = CovOp::from_samples(x);
+        let q = Mat::random_orthonormal(40, 4, &mut rng);
+        let scalar = NativeBackend::with_simd(SimdPolicy::Scalar).cov_apply(&cov, &q);
+        let auto = NativeBackend::with_simd(SimdPolicy::Auto).cov_apply(&cov, &q);
+        assert_eq!(scalar.data, auto.data, "scalar vs auto must be bitwise identical");
+        let fma_backend = NativeBackend::with_simd(SimdPolicy::Fma);
+        assert_eq!(fma_backend.simd, SimdPolicy::Fma);
+        let fma = fma_backend.cov_apply(&cov, &q);
+        assert!(
+            fma.dist_fro(&scalar) <= 1e-12 * scalar.fro_norm().max(1.0),
+            "fma must stay 1e-12-close to scalar"
+        );
+        // Row-split phase B under a pinned policy assembles bitwise to
+        // the pinned full product.
+        let mut out = Mat::zeros(0, 0);
+        let mut tmp = Mat::zeros(0, 0);
+        fma_backend.cov_apply_into(&cov, &q, &mut out, &mut tmp);
+        let d = cov.dim();
+        let r = q.cols;
+        let mut parts = vec![0.0; d * r];
+        let split = d / 3;
+        fma_backend.cov_apply_out_rows(&cov, &q, &tmp, 0, split, &mut parts[..split * r]);
+        fma_backend.cov_apply_out_rows(&cov, &q, &tmp, split, d, &mut parts[split * r..]);
+        assert_eq!(parts, out.data, "pinned row split must assemble bitwise");
     }
 }

@@ -142,7 +142,10 @@ pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
 /// the deterministic virtual clock (instant; real sleeps remain the
 /// default for wall-clock runs). `BENCH_QR=householder|blocked|tsqr`
 /// selects the step-12 QR kernel (same spellings as `--qr`; unknown
-/// values are a hard error).
+/// values are a hard error). `BENCH_SIMD=scalar|auto|fma` selects the
+/// inner-product micro-kernels (same spellings as `--simd`; `auto` is
+/// bitwise identical to `scalar`, `fma` changes bits by design — hold
+/// it fixed across ledger comparisons).
 pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
     let scale = std::env::var("BENCH_SCALE")
         .ok()
@@ -172,8 +175,13 @@ pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
         Some(s) => crate::linalg::qr::QrPolicy::parse(s)
             .unwrap_or_else(|| panic!("BENCH_QR must be householder|blocked|tsqr, got '{s}'")),
     };
+    // `default_simd_policy` itself initializes from BENCH_SIMD (hard
+    // error on unknown spellings), so benches and the test suite share
+    // one parser for the knob.
+    let simd = crate::linalg::simd::default_simd_policy();
     crate::network::sim::set_default_threads(threads);
     crate::linalg::qr::set_default_qr_policy(qr);
+    crate::linalg::simd::set_default_simd_policy(simd);
     crate::experiments::ExpCtx {
         seed: 42,
         scale,
@@ -183,6 +191,7 @@ pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
         trial_parallel,
         mpi_clock,
         qr,
+        simd,
     }
 }
 

@@ -312,6 +312,81 @@ fn table5_virtual_cells_byte_identical_across_matrix() {
     }
 }
 
+/// The SIMD determinism matrix: one Table-I cell at threads ∈
+/// {1, 2, 4, 9} × `--simd` ∈ {scalar, auto} must be byte-identical in
+/// every configuration — vectorization must be invisible in the
+/// numerics exactly like the thread count. Flipping the process-wide
+/// knob between `scalar` and `auto` is safe here even though tests run
+/// concurrently: those two policies are bitwise identical by the
+/// `linalg::simd` contract, so no other test can observe the flip
+/// (`fma`, the bit-changing policy, is never set process-wide; it is
+/// covered per-kernel by `test_simd_kernels` and per-backend by
+/// `NativeBackend::with_simd`).
+#[test]
+fn table1_cell_byte_identical_across_simd_matrix() {
+    use dpsa::linalg::simd::{default_simd_policy, set_default_simd_policy, SimdPolicy};
+    let prev = default_simd_policy();
+    let mut reference: Option<(u64, u64)> = None;
+    for policy in [SimdPolicy::Scalar, SimdPolicy::Auto] {
+        set_default_simd_policy(policy);
+        for &threads in &MATRIX_THREADS {
+            let ctx = matrix_ctx(threads, false);
+            let t_o = ctx.scaled(synth_tables::T_O);
+            let (p2p, err) = synth_tables::run_cell(
+                &ctx,
+                20,
+                0.25,
+                5,
+                0.7,
+                Schedule::adaptive(2.0, 1, 50),
+                t_o,
+                "erdos",
+            );
+            let bits = (p2p.to_bits(), err.to_bits());
+            match reference {
+                None => reference = Some(bits),
+                Some(want) => assert_eq!(
+                    bits, want,
+                    "simd={} threads={threads} diverged",
+                    policy.name()
+                ),
+            }
+        }
+    }
+    set_default_simd_policy(prev);
+}
+
+/// Backend-pinned SIMD policies through the full S-DOT loop: for each
+/// policy the run is bitwise thread-count-invariant, and the scalar and
+/// auto runs are bitwise identical to each other (fma is checked
+/// 1e-12-close at the kernel level instead — it changes bits by
+/// design). Mirrors `qr_policies_bitwise_identical_across_thread_matrix`
+/// and uses `NativeBackend::with_simd`, never the process-global knob.
+#[test]
+fn simd_policies_bitwise_identical_across_thread_matrix() {
+    use dpsa::linalg::simd::SimdPolicy;
+    let (s, g) = tall_setting(12, 2);
+    let cfg = SdotConfig::new(Schedule::fixed(8), 6);
+    let mut scalar_ref: Option<Vec<Mat>> = None;
+    for policy in [SimdPolicy::Scalar, SimdPolicy::Auto] {
+        let backend = NativeBackend::with_simd(policy);
+        let mut reference: Option<Vec<Mat>> = None;
+        for &threads in &MATRIX_THREADS {
+            let mut net = SyncNetwork::with_threads(g.clone(), threads);
+            let (q, _) = run_sdot_with_backend(&mut net, &s, &cfg, &backend);
+            match &reference {
+                None => reference = Some(q),
+                Some(q0) => assert_bitwise_eq(q0, &q),
+            }
+        }
+        let q = reference.unwrap();
+        match &scalar_ref {
+            None => scalar_ref = Some(q),
+            Some(q0) => assert_bitwise_eq(q0, &q), // scalar ≡ auto bitwise
+        }
+    }
+}
+
 #[test]
 fn two_level_dispatch_panic_reraises_without_deadlock() {
     // A panic inside a row chunk of a two-level dispatch must surface to

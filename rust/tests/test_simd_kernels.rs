@@ -1,0 +1,218 @@
+//! SIMD dispatch-consistency property tests.
+//!
+//! The `linalg::simd` contract, locked over the PR 3 shape sweep
+//! (dims drawn from {1..17, 63, 64, 65, 100} — every 8×4 micro-kernel
+//! edge tail, every `dot4` tail length, the skinny/blocked regime
+//! thresholds, and multi-tile panels across the MC = 64 boundary):
+//!
+//! * `scalar` vs `auto` must be **bitwise identical** for every kernel
+//!   (`dot4`, `matmul`, `A·Bᵀ`, `syrk`) at every shape — the vector
+//!   tier keeps the scalar 4-lane accumulator grouping and the fixed
+//!   `(acc0+acc1)+(acc2+acc3)` combine, so vectorization is a speed
+//!   knob, not a numerics policy;
+//! * `fma` is a *policy*: fused rounding intentionally changes bits,
+//!   but must stay 1e-12-close to scalar;
+//! * row splits under an explicit policy must reassemble the full
+//!   kernel bitwise (within-node parallelism stays invisible at every
+//!   tier, the fma one included).
+//!
+//! Policies are pinned per call via the `*_with` kernel variants — the
+//! process-wide `--simd` knob is never touched here (tests run
+//! concurrently in one process).
+
+use dpsa::linalg::simd::{dot4_with, SimdPolicy};
+use dpsa::linalg::Mat;
+use dpsa::util::rng::Rng;
+
+const SWEEP_DIMS: &[usize] = &[
+    1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15, 16, 17, 63, 64, 65, 100,
+];
+
+fn sweep_dim(rng: &mut Rng) -> usize {
+    SWEEP_DIMS[rng.next_below(SWEEP_DIMS.len())]
+}
+
+fn assert_bitwise(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what} [{i}]: {x} vs {y}");
+    }
+}
+
+/// `fma` tolerance: relative to the result's overall magnitude.
+fn assert_fma_close(fma: &[f64], scalar: &[f64], what: &str) {
+    let norm = scalar.iter().map(|v| v * v).sum::<f64>().sqrt().max(1.0);
+    let tol = 1e-12 * norm;
+    for (i, (x, y)) in fma.iter().zip(scalar.iter()).enumerate() {
+        assert!((x - y).abs() <= tol, "{what} [{i}]: fma {x} vs scalar {y} (tol {tol})");
+    }
+}
+
+#[test]
+fn dot4_scalar_vs_simd_over_sweep() {
+    let mut rng = Rng::new(41);
+    // Exhaustive over the sweep's k values (every tail length k mod 4).
+    for &k in SWEEP_DIMS {
+        for _ in 0..4 {
+            let mut a = vec![0.0; k];
+            let mut b = vec![0.0; k];
+            rng.fill_gauss(&mut a);
+            rng.fill_gauss(&mut b);
+            let scalar = dot4_with(&a, &b, k, SimdPolicy::Scalar);
+            let auto = dot4_with(&a, &b, k, SimdPolicy::Auto);
+            assert_eq!(scalar.to_bits(), auto.to_bits(), "dot4 k={k}");
+            let fma = dot4_with(&a, &b, k, SimdPolicy::Fma);
+            assert_fma_close(&[fma], &[scalar], &format!("dot4 k={k}"));
+        }
+    }
+}
+
+#[test]
+fn matmul_scalar_vs_simd_over_sweep() {
+    let mut rng = Rng::new(42);
+    for _ in 0..120 {
+        let (m, k, n) = (sweep_dim(&mut rng), sweep_dim(&mut rng), sweep_dim(&mut rng));
+        let a = Mat::gauss(m, k, &mut rng);
+        let b = Mat::gauss(k, n, &mut rng);
+        let mut scalar = Mat::zeros(0, 0);
+        a.matmul_into_with(&b, &mut scalar, SimdPolicy::Scalar);
+        let mut auto = Mat::zeros(0, 0);
+        a.matmul_into_with(&b, &mut auto, SimdPolicy::Auto);
+        assert_bitwise(&scalar.data, &auto.data, &format!("matmul {m}x{k}x{n}"));
+        let mut fma = Mat::zeros(0, 0);
+        a.matmul_into_with(&b, &mut fma, SimdPolicy::Fma);
+        assert_fma_close(&fma.data, &scalar.data, &format!("matmul {m}x{k}x{n}"));
+        // A row split pinned to a policy reassembles that policy's full
+        // kernel bitwise — for the bit-changing fma tier too.
+        let split = rng.next_below(m + 1);
+        for policy in SimdPolicy::ALL {
+            let mut full = Mat::zeros(0, 0);
+            a.matmul_into_with(&b, &mut full, policy);
+            let mut parts = vec![0.0; m * n];
+            a.matmul_rows_into_with(&b, 0, split, &mut parts[..split * n], policy);
+            a.matmul_rows_into_with(&b, split, m, &mut parts[split * n..], policy);
+            assert_bitwise(
+                &parts,
+                &full.data,
+                &format!("matmul {m}x{k}x{n} split {split} {policy:?}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn matmul_t_scalar_vs_simd_over_sweep() {
+    let mut rng = Rng::new(43);
+    for _ in 0..100 {
+        let (m, k, n) = (sweep_dim(&mut rng), sweep_dim(&mut rng), sweep_dim(&mut rng));
+        let a = Mat::gauss(m, k, &mut rng);
+        let b = Mat::gauss(n, k, &mut rng); // a · bᵀ is m×n
+        let mut scalar = Mat::zeros(0, 0);
+        a.matmul_t_into_with(&b, &mut scalar, SimdPolicy::Scalar);
+        let mut auto = Mat::zeros(0, 0);
+        a.matmul_t_into_with(&b, &mut auto, SimdPolicy::Auto);
+        assert_bitwise(&scalar.data, &auto.data, &format!("matmul_t {m}x{k}x{n}"));
+        let mut fma = Mat::zeros(0, 0);
+        a.matmul_t_into_with(&b, &mut fma, SimdPolicy::Fma);
+        assert_fma_close(&fma.data, &scalar.data, &format!("matmul_t {m}x{k}x{n}"));
+        // 1e-12 against the allocating reference path (regime-routed
+        // A·Bᵀ must still compute the same product).
+        let want = a.matmul(&b.transpose());
+        assert_fma_close(&scalar.data, &want.data, &format!("matmul_t ref {m}x{k}x{n}"));
+        let split = rng.next_below(m + 1);
+        for policy in SimdPolicy::ALL {
+            let mut full = Mat::zeros(0, 0);
+            a.matmul_t_into_with(&b, &mut full, policy);
+            let mut parts = vec![0.0; m * n];
+            a.matmul_t_rows_into_with(&b, 0, split, &mut parts[..split * n], policy);
+            a.matmul_t_rows_into_with(&b, split, m, &mut parts[split * n..], policy);
+            assert_bitwise(
+                &parts,
+                &full.data,
+                &format!("matmul_t {m}x{k}x{n} split {split} {policy:?}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn syrk_scalar_vs_simd_over_sweep() {
+    let mut rng = Rng::new(44);
+    for _ in 0..80 {
+        let (d, k) = (sweep_dim(&mut rng), sweep_dim(&mut rng));
+        let x = Mat::gauss(d, k, &mut rng);
+        let scale = 1.0 / k as f64;
+        let mut scalar = Mat::zeros(0, 0);
+        x.syrk_into_with(scale, &mut scalar, SimdPolicy::Scalar);
+        let mut auto = Mat::zeros(0, 0);
+        x.syrk_into_with(scale, &mut auto, SimdPolicy::Auto);
+        assert_bitwise(&scalar.data, &auto.data, &format!("syrk {d}x{k}"));
+        let mut fma = Mat::zeros(0, 0);
+        x.syrk_into_with(scale, &mut fma, SimdPolicy::Fma);
+        assert_fma_close(&fma.data, &scalar.data, &format!("syrk {d}x{k}"));
+        let split = rng.next_below(d + 1);
+        for policy in SimdPolicy::ALL {
+            let mut full = Mat::zeros(0, 0);
+            x.syrk_into_with(scale, &mut full, policy);
+            // Exact symmetry at every tier: (i,j) and (j,i) run the same
+            // fixed-order sum of commuting products.
+            for i in 0..d {
+                for j in 0..d {
+                    assert_eq!(
+                        full.get(i, j).to_bits(),
+                        full.get(j, i).to_bits(),
+                        "syrk {d}x{k} symmetry ({i},{j}) {policy:?}"
+                    );
+                }
+            }
+            let mut parts = vec![0.0; d * d];
+            x.syrk_rows_into_with(scale, 0, split, &mut parts[..split * d], policy);
+            x.syrk_rows_into_with(scale, split, d, &mut parts[split * d..], policy);
+            assert_bitwise(
+                &parts,
+                &full.data,
+                &format!("syrk {d}x{k} split {split} {policy:?}"),
+            );
+        }
+    }
+}
+
+/// The `M_i Q` hot path end to end: a pinned-policy `CovOp` product
+/// (dense and implicit representations) is bitwise scalar-vs-auto and
+/// 1e-12-close under fma, full and row-split alike.
+#[test]
+fn cov_apply_scalar_vs_simd() {
+    use dpsa::linalg::CovOp;
+    let mut rng = Rng::new(45);
+    for _ in 0..20 {
+        let d = sweep_dim(&mut rng);
+        let s = sweep_dim(&mut rng);
+        let r = 1 + rng.next_below(d.min(7));
+        let x = Mat::gauss(d, s, &mut rng);
+        let q = Mat::gauss(d, r, &mut rng);
+        for op in [
+            CovOp::Samples { x: x.clone(), scale: 1.0 / s as f64 },
+            CovOp::dense_from_samples(&x),
+        ] {
+            let scalar = op.apply_with(&q, SimdPolicy::Scalar);
+            let auto = op.apply_with(&q, SimdPolicy::Auto);
+            assert_bitwise(&scalar.data, &auto.data, &format!("cov d={d} s={s} r={r}"));
+            let fma = op.apply_with(&q, SimdPolicy::Fma);
+            assert_fma_close(&fma.data, &scalar.data, &format!("cov d={d} s={s} r={r}"));
+            for policy in SimdPolicy::ALL {
+                let mut full = Mat::zeros(0, 0);
+                let mut tmp = Mat::zeros(0, 0);
+                op.apply_into_with(&q, &mut full, &mut tmp, policy);
+                let split = rng.next_below(d + 1);
+                let mut parts = vec![0.0; d * r];
+                op.apply_out_rows_with(&q, &tmp, 0, split, &mut parts[..split * r], policy);
+                op.apply_out_rows_with(&q, &tmp, split, d, &mut parts[split * r..], policy);
+                assert_bitwise(
+                    &parts,
+                    &full.data,
+                    &format!("cov split d={d} s={s} r={r} {policy:?}"),
+                );
+            }
+        }
+    }
+}
