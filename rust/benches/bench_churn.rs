@@ -1,0 +1,181 @@
+//! Fault-injection benchmark: kill/resume byte-identity and the
+//! no-fault-path allocation contract of the fault layer.
+//!
+//! * **Kill/resume byte-identity**: one churn cell (complete graph, 5%
+//!   message loss + scripted node churn) runs uninterrupted, then again
+//!   "killed" at the midpoint — the mid-run [`RunCheckpoint`] is pushed
+//!   through its JSON serialization (exactly what `--checkpoint-every` /
+//!   `--resume` persist) and the resumed run must reproduce the
+//!   uninterrupted final state digest bit-for-bit.
+//! * **No-fault path stays allocation-free**: installing a trivial
+//!   `FaultPlan` must leave the steady-state S-DOT loop on the exact
+//!   pre-fault hot path — the counting allocator asserts 0 allocations
+//!   after warm-up, same contract `bench_hotpath` pins for the plain
+//!   simulator.
+//! * The fault path itself is measured (wall-clock overhead vs the
+//!   fault-free cell, steady-state allocations) and reported, not
+//!   asserted — faulty rounds may allocate on membership epochs.
+//!
+//! Results go to `BENCH_churn.json` (override with `BENCH_JSON_OUT`).
+//!
+//! Run: `cargo bench --bench bench_churn`
+
+use dpsa::algorithms::sdot::{run_sdot, run_sdot_checkpointed, SdotConfig, SdotRun};
+use dpsa::algorithms::SampleSetting;
+use dpsa::consensus::schedule::Schedule;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::experiments::churn::scripted_plan;
+use dpsa::fault::checkpoint::RunCheckpoint;
+use dpsa::fault::FaultPlan;
+use dpsa::graph::Graph;
+use dpsa::metrics::trace::RunTrace;
+use dpsa::network::sim::SyncNetwork;
+use dpsa::runtime::NativeBackend;
+use dpsa::util::bench::{alloc_snapshot, bench_ctx, time_it, BenchReport, CountingAlloc};
+use dpsa::util::rng::Rng;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Fingerprint the complete final state of a finished run: estimates,
+/// trace records, P2P counters, and the virtual-round stamp.
+fn final_digest(q: Vec<dpsa::linalg::Mat>, trace: &RunTrace, net: &SyncNetwork, t: usize) -> u64 {
+    RunCheckpoint {
+        algorithm: trace.algorithm.clone(),
+        t,
+        total_iters: trace.total_iters(),
+        round: net.fault_round(),
+        q,
+        records: trace.records.clone(),
+        sent: net.counters.sent.clone(),
+        payload: net.counters.payload.clone(),
+        rng: None,
+    }
+    .digest()
+}
+
+fn main() {
+    println!("== churn / fault-injection benchmark ==\n");
+    let ctx = bench_ctx(0.1);
+    let mut report = BenchReport::new();
+
+    let n = 20;
+    let t_o = ctx.scaled(60).max(8);
+    let schedule = Schedule::fixed(20);
+    let plan = scripted_plan(0.05, schedule.total_rounds(t_o) as u64);
+    let mut rng = Rng::new(ctx.seed);
+    let spec = Spectrum::with_gap(20, 5, 0.7);
+    let ds = SyntheticDataset::full(&spec, 500, n, &mut rng);
+    let setting = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+    let g = Graph::complete(n);
+    let cfg = SdotConfig::new(schedule, t_o);
+
+    // --- kill/resume byte-identity --------------------------------------
+    let mut net = SyncNetwork::with_threads(g.clone(), ctx.threads);
+    net.install_fault_plan(plan.clone()).unwrap();
+    let start = std::time::Instant::now();
+    let (q_full, tr_full) =
+        run_sdot_checkpointed(&mut net, &setting, &cfg, None, 0, &mut |_| {}).unwrap();
+    let full_wall = start.elapsed();
+    let full_digest = final_digest(q_full, &tr_full, &net, t_o);
+    println!(
+        "uninterrupted churn cell N={n} T_o={t_o}: {:.3}s, final error {:.2e}",
+        full_wall.as_secs_f64(),
+        tr_full.final_error()
+    );
+    report.push("churn_cell_uninterrupted_ns", full_wall.as_nanos() as f64);
+
+    // Kill at the midpoint: snapshot, roundtrip through the JSON the
+    // `--checkpoint-every` machinery persists, then resume fresh.
+    let t_mid = t_o / 2;
+    let ck = {
+        let mut net = SyncNetwork::with_threads(g.clone(), ctx.threads);
+        net.install_fault_plan(plan.clone()).unwrap();
+        let backend = NativeBackend::default();
+        let mut run = SdotRun::new(&mut net, &setting, &cfg, &backend);
+        for _ in 0..t_mid {
+            run.step();
+        }
+        run.checkpoint()
+    };
+    let ck = RunCheckpoint::parse(&ck.to_json().to_string()).unwrap();
+    assert_eq!(ck.t, t_mid);
+    let mut net = SyncNetwork::with_threads(g.clone(), ctx.threads);
+    net.install_fault_plan(plan.clone()).unwrap();
+    let start = std::time::Instant::now();
+    let (q_res, tr_res) =
+        run_sdot_checkpointed(&mut net, &setting, &cfg, Some(&ck), 0, &mut |_| {}).unwrap();
+    let resumed_wall = start.elapsed();
+    let resumed_digest = final_digest(q_res, &tr_res, &net, t_o);
+    assert_eq!(
+        full_digest, resumed_digest,
+        "a run killed at t={t_mid} and resumed must be byte-identical"
+    );
+    println!(
+        "killed at t={t_mid} + resumed: {:.3}s — state digest matches ({full_digest:016x})",
+        resumed_wall.as_secs_f64()
+    );
+    report.push("churn_resume_digest_match", 1.0);
+    report.push("churn_cell_resumed_half_ns", resumed_wall.as_nanos() as f64);
+
+    // --- no-fault path: installing a trivial plan keeps the steady-state
+    // S-DOT loop allocation-free (the pre-fault hot-path contract) ------
+    {
+        let mut net = SyncNetwork::with_threads(g.clone(), 1);
+        net.install_fault_plan(FaultPlan::none()).unwrap(); // trivial: uninstalls
+        let backend = NativeBackend::default();
+        let cfg = SdotConfig::new(Schedule::fixed(20), 1_000);
+        let mut run = SdotRun::new(&mut net, &setting, &cfg, &backend);
+        for _ in 0..3 {
+            run.step();
+        }
+        let (a0, _) = alloc_snapshot();
+        for _ in 0..5 {
+            run.step();
+        }
+        let (a1, _) = alloc_snapshot();
+        let allocs = a1 - a0;
+        println!("no-fault steady state (trivial plan installed): {allocs} allocs / 5 iters");
+        assert_eq!(allocs, 0, "the fault layer must not touch the fault-free hot path");
+        report.push("nofault_steady_state_allocs_per_5_iters", allocs as f64);
+    }
+
+    // --- fault-path cost (reported, not asserted) ------------------------
+    {
+        let mut net = SyncNetwork::with_threads(g.clone(), 1);
+        net.install_fault_plan(plan.clone()).unwrap();
+        let backend = NativeBackend::default();
+        let cfg = SdotConfig::new(Schedule::fixed(20), 1_000);
+        let mut run = SdotRun::new(&mut net, &setting, &cfg, &backend);
+        for _ in 0..3 {
+            run.step();
+        }
+        let (a0, _) = alloc_snapshot();
+        for _ in 0..5 {
+            run.step();
+        }
+        let (a1, _) = alloc_snapshot();
+        println!("faulty steady state: {} allocs / 5 iters", a1 - a0);
+        report.push("faulty_steady_state_allocs_per_5_iters", (a1 - a0) as f64);
+    }
+    let mut cell_cfg = SdotConfig::new(schedule, t_o);
+    cell_cfg.record_every = t_o;
+    let t_plain = time_it(1, 3, || {
+        let mut net = SyncNetwork::with_threads(g.clone(), ctx.threads);
+        std::hint::black_box(run_sdot(&mut net, &setting, &cell_cfg));
+    });
+    let t_faulty = time_it(1, 3, || {
+        let mut net = SyncNetwork::with_threads(g.clone(), ctx.threads);
+        net.install_fault_plan(plan.clone()).unwrap();
+        std::hint::black_box(run_sdot(&mut net, &setting, &cell_cfg));
+    });
+    let overhead = t_faulty.median.as_secs_f64() / t_plain.median.as_secs_f64().max(1e-12);
+    println!("fault-free cell {t_plain}\nfaulty cell     {t_faulty}");
+    println!("fault-path overhead: {overhead:.2}x");
+    report.push("churn_cell_plain_ns", t_plain.median.as_nanos() as f64);
+    report.push("churn_cell_faulty_ns", t_faulty.median.as_nanos() as f64);
+    report.push("churn_fault_overhead_ratio", overhead);
+
+    report.save("BENCH_churn.json");
+}

@@ -10,9 +10,12 @@
 
 use super::common::SampleSetting;
 use crate::consensus::schedule::Schedule;
+use crate::fault::checkpoint::RunCheckpoint;
 use crate::linalg::qr::orthonormalize;
 use crate::linalg::Mat;
-use crate::metrics::subspace::{average_error, average_error_ws, SubspaceWs};
+use crate::metrics::subspace::{
+    average_error, average_error_masked_ws, average_error_ws, SubspaceWs,
+};
 use crate::metrics::trace::{IterRecord, RunTrace};
 use crate::network::sim::SyncNetwork;
 use crate::runtime::pool::DisjointSlice;
@@ -191,13 +194,88 @@ impl<'a> SdotRun<'a> {
             &mut self.view_scratch,
         );
         if t % self.cfg.record_every == 0 || t == self.cfg.t_o {
+            // Under a fault session eq. 11 is averaged over the surviving
+            // nodes only — a dead node's frozen estimate is not part of
+            // the network any more.
+            let error = match self.net.fault_alive() {
+                Some(alive) => average_error_masked_ws(
+                    &self.setting.truth,
+                    &self.q,
+                    alive,
+                    &mut self.metric_ws,
+                ),
+                None => average_error_ws(&self.setting.truth, &self.q, &mut self.metric_ws),
+            };
             self.trace.push(IterRecord {
                 outer: t,
                 total_iters: self.total_iters,
-                error: average_error_ws(&self.setting.truth, &self.q, &mut self.metric_ws),
+                error,
                 p2p_avg: self.net.counters.avg(),
             });
         }
+    }
+
+    /// Snapshot the full resumable state — per-node estimates, outer and
+    /// consensus-iteration counters, trace records, P2P counters, and the
+    /// fault session's virtual-clock round stamp. Taken at an
+    /// outer-iteration boundary, a run rebuilt from the same inputs and
+    /// restored from this snapshot continues **byte-identically** to the
+    /// uninterrupted run.
+    pub fn checkpoint(&self) -> RunCheckpoint {
+        RunCheckpoint {
+            algorithm: self.trace.algorithm.clone(),
+            t: self.t,
+            total_iters: self.total_iters,
+            round: self.net.fault_round(),
+            q: self.q.clone(),
+            records: self.trace.records.clone(),
+            sent: self.net.counters.sent.clone(),
+            payload: self.net.counters.payload.clone(),
+            rng: None,
+        }
+    }
+
+    /// Restore a snapshot taken by [`SdotRun::checkpoint`] into a freshly
+    /// constructed run over the **same** setting, graph, config, and
+    /// fault plan. Shapes are validated; on success the next
+    /// [`SdotRun::step`] produces exactly the iterates the uninterrupted
+    /// run would have produced.
+    pub fn restore(&mut self, ck: &RunCheckpoint) -> Result<(), String> {
+        if ck.q.len() != self.q.len() {
+            return Err(format!(
+                "checkpoint has {} node estimates, run has {}",
+                ck.q.len(),
+                self.q.len()
+            ));
+        }
+        for (i, (cq, q)) in ck.q.iter().zip(&self.q).enumerate() {
+            if cq.rows != q.rows || cq.cols != q.cols {
+                return Err(format!(
+                    "node {i}: checkpoint Q is {}x{}, run expects {}x{}",
+                    cq.rows, cq.cols, q.rows, q.cols
+                ));
+            }
+        }
+        if ck.sent.len() != self.net.counters.sent.len()
+            || ck.payload.len() != self.net.counters.payload.len()
+        {
+            return Err("checkpoint counter length mismatch".into());
+        }
+        if ck.t > self.cfg.t_o {
+            return Err(format!(
+                "checkpoint is at outer iteration {} but the run only has {}",
+                ck.t, self.cfg.t_o
+            ));
+        }
+        self.q.clone_from(&ck.q);
+        self.t = ck.t;
+        self.total_iters = ck.total_iters;
+        self.trace.algorithm.clone_from(&ck.algorithm);
+        self.trace.records.clone_from(&ck.records);
+        self.net.counters.sent.clone_from(&ck.sent);
+        self.net.counters.payload.clone_from(&ck.payload);
+        self.net.set_fault_round(ck.round);
+        Ok(())
     }
 
     /// Consume the run, returning estimates and trace.
@@ -230,6 +308,34 @@ pub fn run_sdot(
     cfg: &SdotConfig,
 ) -> (Vec<Mat>, RunTrace) {
     run_sdot_with_backend(net, setting, cfg, &crate::runtime::NativeBackend::default())
+}
+
+/// S-DOT with periodic checkpointing and optional resume — the driver
+/// behind the `--checkpoint-every` / `--resume` knobs. `on_checkpoint`
+/// is invoked with a fresh snapshot every `checkpoint_every` completed
+/// outer iterations (0 disables snapshots); `resume` restores a prior
+/// snapshot before stepping, after which the run continues
+/// byte-identically to the uninterrupted one.
+pub fn run_sdot_checkpointed(
+    net: &mut SyncNetwork,
+    setting: &SampleSetting,
+    cfg: &SdotConfig,
+    resume: Option<&RunCheckpoint>,
+    checkpoint_every: usize,
+    on_checkpoint: &mut dyn FnMut(&RunCheckpoint),
+) -> Result<(Vec<Mat>, RunTrace), String> {
+    let backend = crate::runtime::NativeBackend::default();
+    let mut run = SdotRun::new(net, setting, cfg, &backend);
+    if let Some(ck) = resume {
+        run.restore(ck)?;
+    }
+    while run.outer() < cfg.t_o {
+        run.step();
+        if checkpoint_every > 0 && run.outer() % checkpoint_every == 0 && run.outer() < cfg.t_o {
+            on_checkpoint(&run.checkpoint());
+        }
+    }
+    Ok(run.finish())
 }
 
 /// SA-DOT is S-DOT with an adaptive schedule; this wrapper labels the trace.
@@ -405,6 +511,188 @@ mod tests {
         for i in 0..6 {
             assert_eq!(net.counters.sent[i], expected as u64);
         }
+    }
+
+    #[test]
+    fn checkpoint_resume_is_byte_identical_mid_run() {
+        let (s, mut rng) = setting(10, 20, 4, 0.6, 8);
+        let g = Graph::erdos_renyi(8, 0.5, &mut rng);
+        let cfg = SdotConfig::new(Schedule::fixed(30), 24);
+        let backend = crate::runtime::NativeBackend::default();
+
+        // Uninterrupted reference.
+        let mut net_a = SyncNetwork::new(g.clone());
+        let (q_ref, tr_ref) = run_sdot_with_backend(&mut net_a, &s, &cfg, &backend);
+
+        // Kill at t = 11, snapshot, rebuild from scratch, restore, finish.
+        let mut net_b = SyncNetwork::new(g.clone());
+        let ck = {
+            let mut run = SdotRun::new(&mut net_b, &s, &cfg, &backend);
+            for _ in 0..11 {
+                run.step();
+            }
+            run.checkpoint()
+        };
+        // Round-trip the snapshot through its JSON encoding, exactly like
+        // a real kill/resume through a file on disk.
+        let ck = RunCheckpoint::parse(&ck.to_json().to_string()).unwrap();
+        let mut net_c = SyncNetwork::new(g);
+        let mut run = SdotRun::new(&mut net_c, &s, &cfg, &backend);
+        run.restore(&ck).unwrap();
+        while run.outer() < cfg.t_o {
+            run.step();
+        }
+        let (q_res, tr_res) = run.finish();
+
+        for (a, b) in q_ref.iter().zip(&q_res) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(tr_ref.records.len(), tr_res.records.len());
+        for (a, b) in tr_ref.records.iter().zip(&tr_res.records) {
+            assert_eq!(a.outer, b.outer);
+            assert_eq!(a.total_iters, b.total_iters);
+            assert_eq!(a.error.to_bits(), b.error.to_bits());
+            assert_eq!(a.p2p_avg.to_bits(), b.p2p_avg.to_bits());
+        }
+        assert_eq!(net_a.counters.sent, net_c.counters.sent);
+        assert_eq!(net_a.counters.payload, net_c.counters.payload);
+    }
+
+    #[test]
+    fn checkpoint_resume_under_faults_matches_uninterrupted() {
+        use crate::fault::FaultPlan;
+        let (s, mut rng) = setting(11, 20, 4, 0.6, 8);
+        let g = Graph::from_spec("complete", 8, 0.0, &mut rng);
+        let cfg = SdotConfig::new(Schedule::fixed(25), 20);
+        let plan = FaultPlan::none().with_loss(0.05, 42).with_node_down(3, 60);
+        let backend = crate::runtime::NativeBackend::default();
+
+        let mut net_a = SyncNetwork::new(g.clone());
+        net_a.install_fault_plan(plan.clone()).unwrap();
+        let (q_ref, _) = run_sdot_with_backend(&mut net_a, &s, &cfg, &backend);
+
+        let mut net_b = SyncNetwork::new(g.clone());
+        net_b.install_fault_plan(plan.clone()).unwrap();
+        let ck = {
+            let mut run = SdotRun::new(&mut net_b, &s, &cfg, &backend);
+            for _ in 0..7 {
+                run.step();
+            }
+            run.checkpoint()
+        };
+        // The virtual-clock stamp rides in the snapshot.
+        assert_eq!(ck.round, 7 * 25);
+
+        let mut net_c = SyncNetwork::new(g);
+        net_c.install_fault_plan(plan).unwrap();
+        let mut run = SdotRun::new(&mut net_c, &s, &cfg, &backend);
+        run.restore(&ck).unwrap();
+        while run.outer() < cfg.t_o {
+            run.step();
+        }
+        let (q_res, _) = run.finish();
+
+        for (a, b) in q_ref.iter().zip(&q_res) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(net_a.counters.sent, net_c.counters.sent);
+        assert_eq!(net_a.counters.payload, net_c.counters.payload);
+    }
+
+    #[test]
+    fn run_sdot_checkpointed_snapshots_and_resumes() {
+        let (s, mut rng) = setting(12, 20, 4, 0.6, 6);
+        let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+        let cfg = SdotConfig::new(Schedule::fixed(30), 18);
+
+        let mut net_a = SyncNetwork::new(g.clone());
+        let (q_ref, _) =
+            run_sdot_checkpointed(&mut net_a, &s, &cfg, None, 0, &mut |_| {}).unwrap();
+
+        // Snapshot every 5 outer iterations, keep the latest, then resume
+        // a fresh run from it.
+        let mut snaps: Vec<RunCheckpoint> = Vec::new();
+        let mut net_b = SyncNetwork::new(g.clone());
+        let _ = run_sdot_checkpointed(&mut net_b, &s, &cfg, None, 5, &mut |ck| {
+            snaps.push(ck.clone());
+        })
+        .unwrap();
+        assert_eq!(snaps.iter().map(|c| c.t).collect::<Vec<_>>(), vec![5, 10, 15]);
+
+        let mut net_c = SyncNetwork::new(g);
+        let (q_res, _) =
+            run_sdot_checkpointed(&mut net_c, &s, &cfg, snaps.last(), 0, &mut |_| {}).unwrap();
+        for (a, b) in q_ref.iter().zip(&q_res) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_shapes() {
+        let (s, mut rng) = setting(13, 20, 4, 0.6, 6);
+        let g = Graph::erdos_renyi(6, 0.6, &mut rng);
+        let cfg = SdotConfig::new(Schedule::fixed(10), 8);
+        let backend = crate::runtime::NativeBackend::default();
+        let mut net = SyncNetwork::new(g);
+        let mut run = SdotRun::new(&mut net, &s, &cfg, &backend);
+        run.step();
+        let mut ck = run.checkpoint();
+        ck.q.pop();
+        assert!(run.restore(&ck).is_err());
+        let mut ck2 = run.checkpoint();
+        ck2.q[0] = Mat::zeros(3, 3);
+        assert!(run.restore(&ck2).is_err());
+        let mut ck3 = run.checkpoint();
+        ck3.t = 99;
+        assert!(run.restore(&ck3).is_err());
+    }
+
+    #[test]
+    fn sdot_under_fixed_fault_plan_is_bitwise_equal_across_threads_and_converges() {
+        use crate::fault::FaultPlan;
+        // The ISSUE's acceptance scenario: a fixed FaultPlan (node death
+        // at a virtual time, 5% message loss) must reproduce bit-exactly
+        // at --threads ∈ {1, 4}, with the run converging (eq. 11 error
+        // decreasing) on the surviving connected subgraph instead of
+        // panicking.
+        let (s, mut rng) = setting(14, 20, 4, 0.6, 10);
+        let g = Graph::from_spec("complete", 10, 0.0, &mut rng);
+        let plan = FaultPlan::none()
+            .with_loss(0.05, 7)
+            .with_node_churn(4, 40, 120)
+            .with_node_down(7, 200);
+        let cfg = SdotConfig::new(Schedule::fixed(20), 30);
+
+        let mut runs = Vec::new();
+        for threads in [1usize, 4] {
+            let mut net = SyncNetwork::with_threads(g.clone(), threads);
+            net.install_fault_plan(plan.clone()).unwrap();
+            let (q, trace) = run_sdot(&mut net, &s, &cfg);
+            runs.push((q, trace, net.counters.sent.clone(), net.counters.payload.clone()));
+        }
+        let (q1, tr1, sent1, payload1) = &runs[0];
+        let (q4, tr4, sent4, payload4) = &runs[1];
+        for (a, b) in q1.iter().zip(q4.iter()) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        for (a, b) in tr1.records.iter().zip(&tr4.records) {
+            assert_eq!(a.error.to_bits(), b.error.to_bits());
+        }
+        assert_eq!(sent1, sent4);
+        assert_eq!(payload1, payload4);
+        // Graceful degradation: the surviving-subgraph error decreases.
+        let first = tr1.records.first().unwrap().error;
+        let last = tr1.final_error();
+        assert!(last < first * 1e-1, "first={first} last={last}");
+        assert!(last.is_finite());
     }
 
     #[test]

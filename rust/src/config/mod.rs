@@ -49,6 +49,21 @@ pub const FLAGS: &[FlagSpec] = &[
         takes_value: true,
         help: "SIMD micro-kernels: scalar|auto|fma (auto ≡ scalar bitwise; fma changes bits)",
     },
+    FlagSpec {
+        name: "fault-plan",
+        takes_value: true,
+        help: "FaultPlan JSON installed on fault-aware runners (result-affecting policy)",
+    },
+    FlagSpec {
+        name: "checkpoint-every",
+        takes_value: true,
+        help: "snapshot run state every N outer iterations (0 = off)",
+    },
+    FlagSpec {
+        name: "resume",
+        takes_value: true,
+        help: "resume a checkpoint-aware runner from a RunCheckpoint JSON file",
+    },
 ];
 
 /// The JSON config key mirroring a CLI flag name, or `None` for flags
@@ -64,13 +79,15 @@ fn config_key(flag: &str) -> Option<String> {
 
 /// Load an [`ExpCtx`] from an optional JSON config file, then apply CLI
 /// overrides (`--seed`, `--scale`, `--trials`, `--out`, `--threads`,
-/// `--trial-parallel`, `--mpi-clock`, `--qr`, `--simd`).
+/// `--trial-parallel`, `--mpi-clock`, `--qr`, `--simd`, `--fault-plan`,
+/// `--checkpoint-every`, `--resume`).
 ///
 /// Config file format:
 /// ```json
 /// {"seed": 42, "scale": 1.0, "trials": 3, "out_dir": "results",
 ///  "threads": 1, "trial_parallel": true, "mpi_clock": "real",
-///  "qr": "householder", "simd": "auto"}
+///  "qr": "householder", "simd": "auto", "fault_plan": "plan.json",
+///  "checkpoint_every": 10, "resume": "ck.json"}
 /// ```
 ///
 /// `threads` is **one knob for two parallelism levels** (see
@@ -107,6 +124,16 @@ fn config_key(flag: &str) -> Option<String> {
 /// identical** to `scalar` (same accumulator grouping and combine
 /// order, just vectorized); `fma` intentionally changes bits and, like
 /// `qr`, must be held fixed when comparing perf ledgers.
+///
+/// `fault_plan` names a [`crate::fault::FaultPlan`] JSON file installed
+/// on the network of fault-aware runners (the `churn` experiment). Its
+/// verdicts are pure functions of `(plan, round, from, to)`, so for a
+/// fixed plan results stay byte-identical at every `--threads` — but
+/// like `qr`/`simd` the plan itself is a result-affecting, ledger-pinned
+/// policy. `checkpoint_every` snapshots the full run state every N outer
+/// iterations (0 disables), and `resume` points at a
+/// [`crate::fault::checkpoint::RunCheckpoint`] JSON file: the resumed
+/// run is byte-identical to the uninterrupted one.
 pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     let mut ctx = ExpCtx::default();
     if let Some(path) = args.get("config") {
@@ -140,6 +167,15 @@ pub fn load_ctx(args: &Args) -> Result<ExpCtx> {
     }
     if let Some(v) = args.get("simd") {
         ctx.simd = parse_simd(v)?;
+    }
+    if let Some(v) = args.get("fault-plan") {
+        ctx.fault_plan = Some(PathBuf::from(v));
+    }
+    if let Some(v) = args.get("checkpoint-every") {
+        ctx.checkpoint_every = v.parse().map_err(|_| anyhow!("bad --checkpoint-every"))?;
+    }
+    if let Some(v) = args.get("resume") {
+        ctx.resume = Some(PathBuf::from(v));
     }
     if ctx.scale <= 0.0 || ctx.scale > 10.0 {
         return Err(anyhow!("scale must be in (0, 10]"));
@@ -212,6 +248,20 @@ pub fn from_file(path: &Path) -> Result<ExpCtx> {
     }
     if let Some(v) = json.get("simd") {
         ctx.simd = parse_simd(v.as_str().ok_or_else(|| bad_type(path, "simd", "a string"))?)?;
+    }
+    if let Some(v) = json.get("fault_plan") {
+        ctx.fault_plan = Some(PathBuf::from(
+            v.as_str().ok_or_else(|| bad_type(path, "fault_plan", "a string"))?,
+        ));
+    }
+    if let Some(v) = json.get("checkpoint_every") {
+        ctx.checkpoint_every = v
+            .as_usize()
+            .ok_or_else(|| bad_type(path, "checkpoint_every", "a non-negative integer"))?;
+    }
+    if let Some(v) = json.get("resume") {
+        ctx.resume =
+            Some(PathBuf::from(v.as_str().ok_or_else(|| bad_type(path, "resume", "a string"))?));
     }
     Ok(ctx)
 }
@@ -425,7 +475,8 @@ mod tests {
             &p,
             r#"{"seed": 1, "scale": 0.5, "trials": 2, "out_dir": "r",
                 "threads": 2, "trial_parallel": false, "mpi_clock": "virtual",
-                "qr": "tsqr", "simd": "scalar"}"#,
+                "qr": "tsqr", "simd": "scalar", "fault_plan": "plan.json",
+                "checkpoint_every": 5, "resume": "ck.json"}"#,
         )
         .unwrap();
         let ctx = load_ctx(&args(&["--config", p.to_str().unwrap()])).unwrap();
@@ -433,6 +484,43 @@ mod tests {
         // A non-object root is a hard error too.
         std::fs::write(&p, "[1, 2, 3]").unwrap();
         assert!(load_ctx(&args(&["--config", p.to_str().unwrap()])).is_err());
+    }
+
+    #[test]
+    fn fault_flags_parse_from_cli_and_file() {
+        let ctx = load_ctx(&args(&[])).unwrap();
+        assert_eq!(ctx.fault_plan, None);
+        assert_eq!(ctx.checkpoint_every, 0);
+        assert_eq!(ctx.resume, None);
+        let ctx = load_ctx(&args(&[
+            "--fault-plan",
+            "plan.json",
+            "--checkpoint-every",
+            "10",
+            "--resume",
+            "ck.json",
+        ]))
+        .unwrap();
+        assert_eq!(ctx.fault_plan, Some(PathBuf::from("plan.json")));
+        assert_eq!(ctx.checkpoint_every, 10);
+        assert_eq!(ctx.resume, Some(PathBuf::from("ck.json")));
+        assert!(load_ctx(&args(&["--checkpoint-every", "-3"])).is_err());
+        // File values load; CLI wins over the file.
+        let dir = std::env::temp_dir().join("dpsa_cfg_fault_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"fault_plan": "a.json", "checkpoint_every": 3}"#).unwrap();
+        let ctx = load_ctx(&args(&["--config", p.to_str().unwrap()])).unwrap();
+        assert_eq!(ctx.fault_plan, Some(PathBuf::from("a.json")));
+        assert_eq!(ctx.checkpoint_every, 3);
+        let ctx = load_ctx(&args(&[
+            "--config",
+            p.to_str().unwrap(),
+            "--fault-plan",
+            "b.json",
+        ]))
+        .unwrap();
+        assert_eq!(ctx.fault_plan, Some(PathBuf::from("b.json")));
     }
 
     #[test]
@@ -449,6 +537,9 @@ mod tests {
             (r#"{"qr": 3}"#, "qr"),
             (r#"{"simd": true}"#, "simd"),
             (r#"{"out_dir": 7}"#, "out_dir"),
+            (r#"{"fault_plan": 1}"#, "fault_plan"),
+            (r#"{"checkpoint_every": "5"}"#, "checkpoint_every"),
+            (r#"{"resume": false}"#, "resume"),
         ] {
             std::fs::write(&p, body).unwrap();
             let err = load_ctx(&args(&["--config", p.to_str().unwrap()])).unwrap_err();

@@ -5,7 +5,8 @@
 //! communication structure the algorithm would have on a real network, and
 //! every neighbor exchange increments the P2P counters.
 
-use super::weights::WeightMatrix;
+use super::weights::{active_local_degree_weights, WeightMatrix};
+use crate::fault::FaultPlan;
 use crate::graph::Graph;
 use crate::linalg::Mat;
 use crate::network::counters::P2pCounters;
@@ -133,6 +134,182 @@ pub fn consensus_rounds(
         }
     }
     ConsensusOutcome { rounds }
+}
+
+/// Rows `lo..hi` of one node's mixing update under an active
+/// [`FaultPlan`]: a dead node freezes (`dst ← src_i`); an alive node
+/// mixes with the **active-subgraph** weights, substituting its own
+/// value for any neighbor message severed by a partition or dropped by
+/// the loss coin (`dst += w_ij src_i` instead of `w_ij src_j`). The
+/// self-substitution keeps every realized row stochastic, so iterates
+/// stay bounded under arbitrary loss. All fault verdicts are pure
+/// functions of `(plan, round, i, j)`, so any row split still assembles
+/// to the serial result bitwise.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn mix_node_rows_faulty(
+    g: &Graph,
+    awm: &WeightMatrix,
+    plan: &FaultPlan,
+    round: u64,
+    alive: &[bool],
+    src: &[Mat],
+    i: usize,
+    lo: usize,
+    hi: usize,
+    dst_rows: &mut [f64],
+) {
+    let cols = src[i].cols;
+    let seg = lo * cols..hi * cols;
+    dst_rows.copy_from_slice(&src[i].data[seg.clone()]);
+    if !alive[i] {
+        return;
+    }
+    let wii = awm.w.get(i, i);
+    for v in dst_rows.iter_mut() {
+        *v *= wii;
+    }
+    for &j in &g.adj[i] {
+        if !alive[j] {
+            continue; // w_ij is 0 in the active weights
+        }
+        let w = awm.w.get(i, j);
+        let from = if plan.edge_cut(round, i, j) || plan.msg_lost(round, j, i) {
+            i // message j → i did not arrive: fold w_ij onto own value
+        } else {
+            j
+        };
+        for (d, &s) in dst_rows.iter_mut().zip(src[from].data[seg.clone()].iter()) {
+            *d += w * s;
+        }
+    }
+}
+
+/// The matching faulty update for the push-sum scalar channel.
+#[inline]
+fn mix_scalar_faulty(
+    g: &Graph,
+    awm: &WeightMatrix,
+    plan: &FaultPlan,
+    round: u64,
+    alive: &[bool],
+    src: &[f64],
+    i: usize,
+) -> f64 {
+    if !alive[i] {
+        return src[i];
+    }
+    let mut s = awm.w.get(i, i) * src[i];
+    for &j in &g.adj[i] {
+        if !alive[j] {
+            continue;
+        }
+        let w = awm.w.get(i, j);
+        let from =
+            if plan.edge_cut(round, i, j) || plan.msg_lost(round, j, i) { i } else { j };
+        s += w * src[from];
+    }
+    s
+}
+
+/// The fault-tolerant sibling of [`consensus_rounds`]: `rounds`
+/// synchronous iterations under a [`FaultPlan`], starting at the global
+/// consensus-round stamp `start_round` (the simulator's virtual clock).
+///
+/// Membership is re-evaluated every round and the Metropolis–Hastings
+/// weights are re-normalized on the surviving subgraph at every
+/// membership epoch (graceful degradation instead of a panic). The
+/// optional `scalar` channel rides along under **identical** fault
+/// verdicts — `SyncNetwork::consensus_sum` seeds it with `e₁` so the
+/// Alg. 1 step-11 rescale tracks the *realized* time-varying mixing
+/// product rather than a fixed `W^{T_c}`.
+///
+/// Counters: an alive node sends to each alive, non-partitioned
+/// neighbor; a message eaten by the loss coin still counts (it was
+/// transmitted), while a severed link or dead endpoint sends nothing.
+/// This path may allocate (weights re-normalization at epochs) — the
+/// zero-allocation contract covers only the fault-free path, which is
+/// untouched.
+///
+/// Returns the advanced round stamp (`start_round + rounds`).
+#[allow(clippy::too_many_arguments)]
+pub fn faulty_consensus_rounds(
+    g: &Graph,
+    plan: &FaultPlan,
+    start_round: u64,
+    alive: &mut [bool],
+    awm: &mut WeightMatrix,
+    z: &mut Vec<Mat>,
+    next: &mut Vec<Mat>,
+    mut scalar: Option<(&mut Vec<f64>, &mut Vec<f64>)>,
+    rounds: usize,
+    counters: &mut P2pCounters,
+    pool: &NodePool,
+    views: &mut MatRowsScratch,
+) -> u64 {
+    let n = g.n;
+    assert_eq!(z.len(), n);
+    assert_eq!(next.len(), n);
+    assert_eq!(alive.len(), n);
+    if n == 0 || rounds == 0 {
+        return start_round;
+    }
+    let elems = z[0].rows * z[0].cols + usize::from(scalar.is_some());
+    let mat_rows = z[0].rows;
+    for k in 0..rounds {
+        let round = start_round + k as u64;
+        plan.fill_alive_mask(round, alive);
+        if k == 0 || plan.membership_changes_at(round) {
+            *awm = active_local_degree_weights(g, alive);
+        }
+        {
+            let src: &[Mat] = z.as_slice();
+            let dst = views.fill(next.as_mut_slice());
+            let (awm, alive): (&WeightMatrix, &[bool]) = (awm, alive);
+            match &mut scalar {
+                Some((w_src, w_dst)) => {
+                    let ws: &[f64] = w_src.as_slice();
+                    let wd = DisjointSlice::new(w_dst.as_mut_slice());
+                    pool.run_chunks2(n, &|_| mat_rows, &|i, lo, hi| {
+                        // SAFETY: rows [lo, hi) of node i belong to
+                        // exactly one task; the scalar slot is written
+                        // only by the task owning the first rows.
+                        let d = unsafe { dst.rows_mut(i, lo, hi) };
+                        mix_node_rows_faulty(g, awm, plan, round, alive, src, i, lo, hi, d);
+                        if lo == 0 {
+                            unsafe {
+                                *wd.get_mut(i) =
+                                    mix_scalar_faulty(g, awm, plan, round, alive, ws, i)
+                            };
+                        }
+                    });
+                }
+                None => {
+                    pool.run_chunks2(n, &|_| mat_rows, &|i, lo, hi| {
+                        // SAFETY: rows [lo, hi) of node i belong to
+                        // exactly one task.
+                        let d = unsafe { dst.rows_mut(i, lo, hi) };
+                        mix_node_rows_faulty(g, awm, plan, round, alive, src, i, lo, hi, d);
+                    });
+                }
+            }
+        }
+        for i in 0..n {
+            if !alive[i] {
+                continue;
+            }
+            let msgs = g.adj[i]
+                .iter()
+                .filter(|&&j| alive[j] && !plan.edge_cut(round, i, j))
+                .count() as u64;
+            counters.record_sends(i, msgs, elems);
+        }
+        std::mem::swap(z, next);
+        if let Some((w_src, w_dst)) = &mut scalar {
+            std::mem::swap(*w_src, *w_dst);
+        }
+    }
+    start_round + rounds as u64
 }
 
 /// Run `rounds` synchronous consensus iterations in place:
@@ -290,6 +467,144 @@ mod tests {
         for zi in &z {
             assert!(zi.is_finite());
             assert!(zi.dist_fro(&total) < 0.5 * total.fro_norm().max(1.0));
+        }
+    }
+
+    #[test]
+    fn faulty_rounds_with_trivial_plan_match_normal_bitwise() {
+        let (g, wm, z0, _) = setup(10, 0.4, 8);
+        let rounds = 21;
+
+        let mut z_a = z0.clone();
+        let mut next_a: Vec<Mat> = z_a.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+        let mut c_a = P2pCounters::new(10);
+        let mut views_a = MatRowsScratch::new();
+        consensus_rounds(
+            &g,
+            &wm,
+            &mut z_a,
+            &mut next_a,
+            None,
+            rounds,
+            &mut c_a,
+            &NodePool::serial(),
+            &mut views_a,
+        );
+
+        let plan = FaultPlan::none();
+        let mut alive = vec![true; 10];
+        let mut awm = local_degree_weights(&g);
+        let mut z_b = z0.clone();
+        let mut next_b: Vec<Mat> = z_b.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+        let mut c_b = P2pCounters::new(10);
+        let mut views_b = MatRowsScratch::new();
+        let end = faulty_consensus_rounds(
+            &g,
+            &plan,
+            0,
+            &mut alive,
+            &mut awm,
+            &mut z_b,
+            &mut next_b,
+            None,
+            rounds,
+            &mut c_b,
+            &NodePool::serial(),
+            &mut views_b,
+        );
+        assert_eq!(end, rounds as u64);
+        for (a, b) in z_a.iter().zip(&z_b) {
+            assert_eq!(a.data, b.data, "trivial plan must not change a single bit");
+        }
+        assert_eq!(c_a.sent, c_b.sent);
+        assert_eq!(c_a.payload, c_b.payload);
+    }
+
+    #[test]
+    fn faulty_rounds_dead_node_freezes_and_survivors_average() {
+        let mut rng = Rng::new(10);
+        let g = Graph::complete(8);
+        let z0: Vec<Mat> = (0..8).map(|_| Mat::gauss(5, 2, &mut rng)).collect();
+        let plan = FaultPlan::none().with_node_down(3, 0);
+        let mut alive = vec![true; 8];
+        let mut awm = local_degree_weights(&g);
+        let mut z = z0.clone();
+        let mut next: Vec<Mat> = z.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+        let mut c = P2pCounters::new(8);
+        let mut views = MatRowsScratch::new();
+        faulty_consensus_rounds(
+            &g,
+            &plan,
+            0,
+            &mut alive,
+            &mut awm,
+            &mut z,
+            &mut next,
+            None,
+            400,
+            &mut c,
+            &NodePool::serial(),
+            &mut views,
+        );
+        assert_eq!(z[3].data, z0[3].data, "a dead node's estimate freezes");
+        assert_eq!(c.sent[3], 0, "a dead node sends nothing");
+        let mut avg = Mat::zeros(5, 2);
+        for (i, m) in z0.iter().enumerate() {
+            if i != 3 {
+                avg.axpy(1.0, m);
+            }
+        }
+        avg.scale_inplace(1.0 / 7.0);
+        for (i, zi) in z.iter().enumerate() {
+            if i != 3 {
+                assert!(zi.dist_fro(&avg) < 1e-8, "survivor {i} must reach survivors' avg");
+            }
+        }
+        // Every survivor lost exactly one neighbor: 6 sends per round.
+        for i in 0..8 {
+            if i != 3 {
+                assert_eq!(c.sent[i], 400 * 6);
+            }
+        }
+    }
+
+    #[test]
+    fn faulty_rounds_under_loss_stay_row_stochastic_bounded() {
+        // 20% directed message loss: realized mixing stays row-stochastic
+        // (self-substitution), so iterates remain within the initial
+        // coordinate-wise hull — no blow-up, no NaN.
+        let mut rng = Rng::new(11);
+        let g = Graph::ring(9);
+        let z0: Vec<Mat> = (0..9).map(|_| Mat::gauss(4, 2, &mut rng)).collect();
+        let plan = FaultPlan::none().with_loss(0.2, 33);
+        let hi = z0.iter().map(|m| m.max_abs()).fold(0.0f64, f64::max);
+        let mut alive = vec![true; 9];
+        let mut awm = local_degree_weights(&g);
+        let mut z = z0.clone();
+        let mut next: Vec<Mat> = z.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+        let mut c = P2pCounters::new(9);
+        let mut views = MatRowsScratch::new();
+        faulty_consensus_rounds(
+            &g,
+            &plan,
+            0,
+            &mut alive,
+            &mut awm,
+            &mut z,
+            &mut next,
+            None,
+            200,
+            &mut c,
+            &NodePool::serial(),
+            &mut views,
+        );
+        for zi in &z {
+            assert!(zi.is_finite());
+            assert!(zi.max_abs() <= hi + 1e-12);
+        }
+        // Loss does not change send accounting (messages were transmitted).
+        for i in 0..9 {
+            assert_eq!(c.sent[i], 200 * 2);
         }
     }
 

@@ -40,6 +40,62 @@ pub fn local_degree_weights(g: &Graph) -> WeightMatrix {
     WeightMatrix { w }
 }
 
+/// Metropolis–Hastings weights on the **alive-induced subgraph** — the
+/// re-normalization a membership change (node churn, partitions healing)
+/// triggers. Degrees are recomputed over surviving neighbors, so the
+/// matrix stays symmetric and doubly stochastic on the survivors; a dead
+/// node gets the identity row (`w_ii = 1`, no coupling), which keeps
+/// shapes stable across epochs. With everyone alive this is **bitwise
+/// identical** to [`local_degree_weights`] (same per-row arithmetic
+/// order), so the no-fault path is unchanged.
+pub fn active_local_degree_weights(g: &Graph, alive: &[bool]) -> WeightMatrix {
+    assert_eq!(alive.len(), g.n);
+    let n = g.n;
+    let mut deg = vec![0usize; n];
+    for i in 0..n {
+        if alive[i] {
+            deg[i] = g.adj[i].iter().filter(|&&j| alive[j]).count();
+        }
+    }
+    let mut w = Mat::zeros(n, n);
+    for i in 0..n {
+        if !alive[i] {
+            w.set(i, i, 1.0);
+            continue;
+        }
+        let mut diag = 1.0;
+        for &j in &g.adj[i] {
+            if !alive[j] {
+                continue;
+            }
+            let wij = 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
+            w.set(i, j, wij);
+            diag -= wij;
+        }
+        w.set(i, i, diag);
+    }
+    WeightMatrix { w }
+}
+
+/// Spectral gap `1 − λ₂` of `W` restricted to the alive subset, where
+/// `λ₂` is the modulus of the second-largest eigenvalue — estimated by
+/// power iteration on the consensus-deflated operator
+/// `W_S − (1/|S|)·11ᵀ`. Positive iff consensus mixes on the survivors.
+pub fn active_spectral_gap(wm: &WeightMatrix, alive: &[bool]) -> f64 {
+    let idx: Vec<usize> = (0..wm.n()).filter(|&i| alive[i]).collect();
+    let s = idx.len();
+    if s <= 1 {
+        return 1.0;
+    }
+    let mut b = Mat::zeros(s, s);
+    for (a, &i) in idx.iter().enumerate() {
+        for (c, &j) in idx.iter().enumerate() {
+            b.set(a, c, wm.w.get(i, j) - 1.0 / s as f64);
+        }
+    }
+    1.0 - b.spectral_norm(300)
+}
+
 /// Max-degree weights: `w_ij = 1/(1+Δ)` for edges, uniform alternative.
 pub fn max_degree_weights(g: &Graph) -> WeightMatrix {
     let n = g.n;
@@ -170,6 +226,85 @@ mod tests {
         assert!((wm.w.get(0, 1) - 0.2).abs() < 1e-12);
         assert!((wm.w.get(0, 0) - (1.0 - 4.0 * 0.2)).abs() < 1e-12);
         assert!((wm.w.get(1, 1) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn active_weights_all_alive_bitwise_matches_plain() {
+        let mut rng = Rng::new(9);
+        for spec in ["erdos", "ring", "star", "path"] {
+            let g = Graph::from_spec(spec, 11, 0.4, &mut rng);
+            let plain = local_degree_weights(&g);
+            let active = active_local_degree_weights(&g, &vec![true; g.n]);
+            for (a, b) in plain.w.data.iter().zip(&active.w.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{spec}: no-fault path must not drift");
+            }
+        }
+    }
+
+    #[test]
+    fn dead_node_gets_identity_row_and_no_coupling() {
+        let g = Graph::ring(6);
+        let mut alive = vec![true; 6];
+        alive[2] = false;
+        let wm = active_local_degree_weights(&g, &alive);
+        assert_eq!(wm.w.get(2, 2), 1.0);
+        for j in 0..6 {
+            if j != 2 {
+                assert_eq!(wm.w.get(2, j), 0.0);
+                assert_eq!(wm.w.get(j, 2), 0.0);
+            }
+        }
+        // Survivors still form a doubly stochastic matrix.
+        assert!(wm.row_sum_err() < 1e-12);
+        assert!(wm.symmetry_err() < 1e-12);
+        assert!(wm.nonnegative());
+    }
+
+    /// Satellite property test: after **any** sequence of drop/rejoin
+    /// events, the active-subgraph Metropolis–Hastings matrix stays
+    /// symmetric, doubly stochastic, and — whenever the surviving graph
+    /// is connected — spectral-gap-positive. Churn sequences are drawn
+    /// from seeded random masks over several topologies.
+    #[test]
+    fn active_weights_property_under_random_churn() {
+        let mut rng = Rng::new(77);
+        for spec in ["erdos", "ring", "star", "grid", "complete"] {
+            let g = Graph::from_spec(spec, 12, 0.35, &mut rng);
+            let mut alive = vec![true; g.n];
+            let mut connected_cases = 0;
+            for step in 0..60 {
+                // Random drop-or-rejoin event each step (always keep >= 1 up).
+                let node = rng.next_below(g.n);
+                if alive[node] && alive.iter().filter(|&&a| a).count() > 1 {
+                    alive[node] = false;
+                } else {
+                    alive[node] = true;
+                }
+                let wm = active_local_degree_weights(&g, &alive);
+                assert!(wm.row_sum_err() < 1e-12, "{spec} step {step}");
+                assert!(wm.symmetry_err() < 1e-12, "{spec} step {step}");
+                assert!(wm.nonnegative(), "{spec} step {step}");
+                if g.is_connected_over(&alive) && alive.iter().filter(|&&a| a).count() >= 2 {
+                    let gap = active_spectral_gap(&wm, &alive);
+                    assert!(gap > 1e-6, "{spec} step {step}: gap={gap}");
+                    connected_cases += 1;
+                }
+            }
+            assert!(connected_cases > 0, "{spec}: churn never left a connected survivor set");
+        }
+    }
+
+    #[test]
+    fn disconnected_survivors_have_no_gap() {
+        // Path 0-1-2-3-4 with node 2 dead splits in two components:
+        // W_S has two stationary vectors, so λ₂ = 1 and the gap is ~0.
+        let g = Graph::path(5);
+        let mut alive = vec![true; 5];
+        alive[2] = false;
+        let wm = active_local_degree_weights(&g, &alive);
+        assert!(!g.is_connected_over(&alive));
+        let gap = active_spectral_gap(&wm, &alive);
+        assert!(gap.abs() < 1e-9, "gap={gap}");
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Churn experiment — drop-rate × topology sweep under a scripted
+//! [`FaultPlan`], plus the checkpoint/resume driver behind
+//! `--checkpoint-every` / `--resume`.
+//!
+//! Every cell runs S-DOT on the fault-injected simulator: node 1 churns
+//! out for the middle third of the consensus rounds, the last node dies
+//! for good in the final quarter, and each directed message is lost with
+//! the row's probability. All verdicts are pure functions of
+//! `(plan, round, from, to)`, so each cell — like the fault-free tables
+//! — is byte-identical at every `--threads` / `--trial-parallel`
+//! combination. A user-supplied `--fault-plan` pins one plan across all
+//! cells (the sweep then varies topology only); like `--qr` and
+//! `--simd`, the plan is a result-affecting, ledger-pinned policy.
+//!
+//! With `--checkpoint-every N` or `--resume <ck.json>` the experiment
+//! switches to **checkpoint mode**: one canonical cell (complete graph,
+//! 5% loss + the scripted churn) runs through
+//! [`run_sdot_checkpointed`], snapshotting the full run state to
+//! `<out>/churn_checkpoint.json` every `N` outer iterations. A run
+//! killed and resumed from that file emits a table byte-identical to
+//! the uninterrupted one (asserted by the tests below and by
+//! `bench_churn`).
+
+use super::{run_trials, ExpCtx};
+use crate::algorithms::sdot::{run_sdot, run_sdot_checkpointed, SdotConfig};
+use crate::algorithms::SampleSetting;
+use crate::consensus::schedule::Schedule;
+use crate::data::spectrum::Spectrum;
+use crate::data::synthetic::SyntheticDataset;
+use crate::fault::checkpoint::RunCheckpoint;
+use crate::fault::FaultPlan;
+use crate::graph::Graph;
+use crate::network::sim::SyncNetwork;
+use crate::util::rng::Rng;
+use crate::util::table::{fnum, p2p_k, Table};
+use anyhow::{anyhow, Result};
+
+use super::synth_tables::{D, N_PER_NODE};
+
+/// Network size, subspace rank, and eigengap of the sweep (Table-I cell).
+pub const N: usize = 20;
+pub const R: usize = 5;
+pub const GAP: f64 = 0.7;
+/// Outer iterations before `--scale`, and the fixed consensus schedule.
+pub const T_O: usize = 200;
+pub const T_C: usize = 30;
+
+/// The default scenario for one cell: node 1 churns out during the
+/// middle third of the run, node `N-1` dies permanently in the final
+/// quarter, and messages drop i.i.d. at `rate`. Event rounds scale with
+/// the total round count, so the scenario shape is `--scale`-invariant.
+pub fn scripted_plan(rate: f64, total_rounds: u64) -> FaultPlan {
+    let mut plan = FaultPlan::none();
+    if rate > 0.0 {
+        // Seed the loss coin from the rate so sweep rows draw
+        // independent coins (any fixed map works — it's a pinned policy).
+        plan = plan.with_loss(rate, 0xC0FF_EE00 ^ (rate * 1e4) as u64);
+    }
+    let down = (total_rounds / 3).max(1);
+    let up = (2 * total_rounds / 3).max(down + 1);
+    plan.with_node_churn(1, down, up)
+        .with_node_down(N - 1, (3 * total_rounds / 4).max(1))
+}
+
+/// One (topology, loss-rate) cell averaged over `ctx.trials`: returns
+/// `(avg P2P per node, avg final error over survivors, survivors)`.
+fn run_cell(
+    ctx: &ExpCtx,
+    topology: &str,
+    p: f64,
+    rate: f64,
+    t_o: usize,
+    plan_override: Option<&FaultPlan>,
+) -> (f64, f64, usize) {
+    let schedule = Schedule::fixed(T_C);
+    let total_rounds = schedule.total_rounds(t_o) as u64;
+    let per_trial = run_trials(ctx, |trial, inner_threads| {
+        let mut rng = Rng::new(ctx.seed + trial as u64);
+        let spec = Spectrum::with_gap(D, R, GAP);
+        let ds = SyntheticDataset::full(&spec, N_PER_NODE, N, &mut rng);
+        let setting = SampleSetting::from_parts(&ds.parts, R, &mut rng);
+        let g = Graph::from_spec(topology, N, p, &mut rng);
+        let mut net = SyncNetwork::with_threads(g, inner_threads);
+        let plan = match plan_override {
+            Some(plan) => plan.clone(),
+            None => scripted_plan(rate, total_rounds),
+        };
+        net.install_fault_plan(plan).expect("validated before the sweep");
+        let mut cfg = SdotConfig::new(schedule, t_o);
+        cfg.record_every = t_o; // the table needs only the final state
+        let (_, trace) = run_sdot(&mut net, &setting, &cfg);
+        let alive = net
+            .fault_alive()
+            .map(|m| m.iter().filter(|&&a| a).count())
+            .unwrap_or(N);
+        (net.counters.avg(), trace.final_error(), alive)
+    });
+    let (mut p2p_sum, mut err_sum, mut alive) = (0.0, 0.0, N);
+    for (p2p, err, a) in per_trial {
+        p2p_sum += p2p;
+        err_sum += err;
+        alive = a; // deterministic plan: identical every trial
+    }
+    (p2p_sum / ctx.trials as f64, err_sum / ctx.trials as f64, alive)
+}
+
+/// Checkpoint mode: the canonical cell through [`run_sdot_checkpointed`],
+/// snapshotting to `<out>/churn_checkpoint.json`. The emitted row is a
+/// pure function of the restored state, so a killed-and-resumed run
+/// produces a byte-identical table.
+fn checkpointed_cell(ctx: &ExpCtx, plan_override: Option<&FaultPlan>) -> Result<Table> {
+    let t_o = ctx.scaled(T_O);
+    let schedule = Schedule::fixed(T_C);
+    let total_rounds = schedule.total_rounds(t_o) as u64;
+    let mut rng = Rng::new(ctx.seed);
+    let spec = Spectrum::with_gap(D, R, GAP);
+    let ds = SyntheticDataset::full(&spec, N_PER_NODE, N, &mut rng);
+    let setting = SampleSetting::from_parts(&ds.parts, R, &mut rng);
+    let g = Graph::from_spec("complete", N, 0.25, &mut rng);
+    let mut net = SyncNetwork::with_threads(g, ctx.threads);
+    let plan = match plan_override {
+        Some(plan) => plan.clone(),
+        None => scripted_plan(0.05, total_rounds),
+    };
+    net.install_fault_plan(plan).map_err(|e| anyhow!(e))?;
+    let cfg = SdotConfig::new(schedule, t_o);
+    let resume = match &ctx.resume {
+        Some(path) => Some(RunCheckpoint::load(path).map_err(|e| anyhow!(e))?),
+        None => None,
+    };
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let ck_path = ctx.out_dir.join("churn_checkpoint.json");
+    let mut save_err: Option<String> = None;
+    let (q, trace) = run_sdot_checkpointed(
+        &mut net,
+        &setting,
+        &cfg,
+        resume.as_ref(),
+        ctx.checkpoint_every,
+        &mut |ck| {
+            if let Err(e) = ck.save(&ck_path) {
+                save_err = Some(e);
+            }
+        },
+    )
+    .map_err(|e| anyhow!(e))?;
+    if let Some(e) = save_err {
+        return Err(anyhow!(e));
+    }
+    // Fingerprint the final state; fresh and resumed runs must agree.
+    let final_ck = RunCheckpoint {
+        algorithm: trace.algorithm.clone(),
+        t: t_o,
+        total_iters: trace.total_iters(),
+        round: net.fault_round(),
+        q,
+        records: trace.records.clone(),
+        sent: net.counters.sent.clone(),
+        payload: net.counters.payload.clone(),
+        rng: None,
+    };
+    let mut t = Table::new(
+        &format!(
+            "Churn (checkpoint mode) — complete, 5% loss + scripted churn, \
+             N={N}, r={R}, T_c={T_C}, T_o={t_o}"
+        ),
+        &["T_o", "final error", "P2P (K)", "rounds", "records", "state digest"],
+    );
+    t.row(&[
+        t_o.to_string(),
+        format!("{:.2e}", trace.final_error()),
+        p2p_k(net.counters.avg()),
+        net.fault_round().to_string(),
+        trace.records.len().to_string(),
+        format!("{:016x}", final_ck.digest()),
+    ]);
+    Ok(t)
+}
+
+/// Entry point for the `churn` experiment id.
+pub fn churn(ctx: &ExpCtx) -> Result<Vec<Table>> {
+    let plan_override = match &ctx.fault_plan {
+        Some(path) => {
+            let plan = FaultPlan::load(path).map_err(|e| anyhow!(e))?;
+            plan.validate(N).map_err(|e| anyhow!(e))?;
+            Some(plan)
+        }
+        None => None,
+    };
+    if ctx.checkpoint_every > 0 || ctx.resume.is_some() {
+        return Ok(vec![checkpointed_cell(ctx, plan_override.as_ref())?]);
+    }
+    let t_o = ctx.scaled(T_O);
+    let mut t = Table::new(
+        &format!(
+            "Churn — drop-rate × topology under scripted node churn, \
+             N={N}, r={R}, Δ={GAP}, T_c={T_C}, T_o={t_o}"
+        ),
+        &["topology", "loss", "P2P (K)", "final error", "alive"],
+    );
+    for &(topology, p) in &[("complete", 0.0), ("erdos", 0.25), ("ring", 0.0)] {
+        for &rate in &[0.0, 0.05, 0.2] {
+            let (p2p, err, alive) =
+                run_cell(ctx, topology, p, rate, t_o, plan_override.as_ref());
+            t.row(&[
+                topology.to_string(),
+                fnum(rate, 2),
+                p2p_k(p2p),
+                format!("{err:.2e}"),
+                alive.to_string(),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::env_threads;
+
+    fn quick_ctx() -> ExpCtx {
+        ExpCtx { scale: 0.04, trials: 1, threads: env_threads(), ..Default::default() }
+    }
+
+    #[test]
+    fn sweep_shape_and_survivors() {
+        let tables = churn(&quick_ctx()).unwrap();
+        assert_eq!(tables.len(), 1);
+        let rows = &tables[0].rows;
+        assert_eq!(rows.len(), 9, "3 topologies × 3 rates");
+        for row in rows {
+            // Node 1 rejoined, node N-1 stayed dead.
+            assert_eq!(row[4], (N - 1).to_string(), "{row:?}");
+            let err: f64 = row[3].parse().unwrap();
+            assert!(err.is_finite() && (0.0..=1.0).contains(&err), "{row:?}");
+        }
+    }
+
+    #[test]
+    fn sweep_is_byte_identical_across_thread_budgets() {
+        let base = quick_ctx();
+        let serial = ExpCtx { threads: 1, trial_parallel: false, ..base.clone() };
+        let a = churn(&serial).unwrap();
+        let b = churn(&base).unwrap();
+        assert_eq!(a[0].rows, b[0].rows, "fault verdicts must not depend on threads");
+    }
+
+    #[test]
+    fn checkpoint_mode_kill_and_resume_is_byte_identical() {
+        let dir = std::env::temp_dir().join("dpsa_churn_ck_mode_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut ctx = quick_ctx();
+        ctx.out_dir = dir.clone();
+        ctx.checkpoint_every = 2;
+        // Uninterrupted run; leaves the last mid-run snapshot on disk.
+        let full = churn(&ctx).unwrap();
+        let ck_path = dir.join("churn_checkpoint.json");
+        assert!(ck_path.exists(), "checkpoint mode must snapshot");
+        let ck = RunCheckpoint::load(&ck_path).unwrap();
+        assert!(ck.t > 0 && ck.t < ctx.scaled(T_O), "mid-run snapshot, got t={}", ck.t);
+        // "Killed" run resumes from that snapshot: table must match bytes.
+        let mut resumed_ctx = ctx.clone();
+        resumed_ctx.resume = Some(ck_path.clone());
+        let resumed = churn(&resumed_ctx).unwrap();
+        assert_eq!(full[0].rows, resumed[0].rows);
+        std::fs::remove_file(&ck_path).ok();
+    }
+
+    #[test]
+    fn fault_plan_override_is_honored() {
+        let dir = std::env::temp_dir().join("dpsa_churn_plan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        // A trivial-but-explicit plan: no loss, no churn — every node
+        // survives, so the alive column must read N.
+        FaultPlan::none().with_node_churn(0, 1, 2).save(&path).unwrap();
+        let mut ctx = quick_ctx();
+        ctx.fault_plan = Some(path.clone());
+        let tables = churn(&ctx).unwrap();
+        for row in &tables[0].rows {
+            assert_eq!(row[4], N.to_string(), "{row:?}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scripted_plan_windows_are_valid() {
+        for rounds in [1u64, 2, 3, 10, 6000] {
+            for &rate in &[0.0, 0.05, 0.2] {
+                scripted_plan(rate, rounds).validate(N).unwrap();
+            }
+        }
+    }
+}

@@ -18,6 +18,7 @@
 //! | fig6    | F-DOT vs OI / SeqPM / d-PM                                  |
 //! | fig7–12 | real-data communication cost + baseline comparisons         |
 
+pub mod churn;
 pub mod figs_compare;
 pub mod figs_fdot;
 pub mod figs_real;
@@ -89,6 +90,20 @@ pub struct ExpCtx {
     /// perf-ledger comparisons. For any fixed policy, results stay
     /// byte-identical at every `--threads`.
     pub simd: SimdPolicy,
+    /// Optional FaultPlan JSON file (`--fault-plan` / config
+    /// `"fault_plan"`) installed on the network of fault-aware runners
+    /// (the `churn` experiment). A FaultPlan is a **result-affecting,
+    /// ledger-pinned policy**: its verdicts are pure functions of
+    /// `(plan, round, from, to)`, so for a fixed plan results are
+    /// byte-identical at every `--threads`.
+    pub fault_plan: Option<PathBuf>,
+    /// Snapshot a `RunCheckpoint` every this many outer iterations in
+    /// checkpoint-aware runners (`--checkpoint-every`; 0 = off).
+    pub checkpoint_every: usize,
+    /// Resume a checkpoint-aware runner from this `RunCheckpoint` JSON
+    /// file (`--resume`); the resumed run is byte-identical to the
+    /// uninterrupted one.
+    pub resume: Option<PathBuf>,
 }
 
 impl Default for ExpCtx {
@@ -103,6 +118,9 @@ impl Default for ExpCtx {
             mpi_clock: ClockMode::Real,
             qr: QrPolicy::Householder,
             simd: SimdPolicy::Auto,
+            fault_plan: None,
+            checkpoint_every: 0,
+            resume: None,
         }
     }
 }
@@ -182,13 +200,14 @@ where
 /// (`bdot_ext` — block-partitioned B-DOT grid ablation; `topo_straggler`
 /// — topology × straggler sweep on the virtual-clock MPI runtime; the
 /// async-gossip straggler ablation is emitted as the second table of
-/// `table5`).
+/// `table5`; `churn` — drop-rate × topology fault-injection sweep with
+/// checkpoint/resume).
 pub fn all_ids() -> Vec<&'static str> {
     vec![
         "table1", "table2", "table3", "table4", "table5", "table6", "table7",
         "table8", "table9", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
         "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "bdot_ext",
-        "topo_straggler",
+        "topo_straggler", "churn",
     ]
 }
 
@@ -218,6 +237,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<Vec<Table>> {
         "fig12" => figs_real::comm_cost(ctx, crate::data::datasets::DatasetKind::ImageNet, "fig12"),
         "bdot_ext" => bdot_ext(ctx),
         "topo_straggler" => topology_tables::topo_straggler(ctx),
+        "churn" => churn::churn(ctx),
         other => bail!("unknown experiment id '{other}' (see `dpsa list`)"),
     }?;
     let dir = ctx.out_dir.join(id);
@@ -294,7 +314,7 @@ mod tests {
     #[test]
     fn all_ids_covers_every_table_and_figure() {
         let ids = all_ids();
-        assert_eq!(ids.len(), 9 + 12 + 2);
+        assert_eq!(ids.len(), 9 + 12 + 3);
         for t in 1..=9 {
             assert!(ids.contains(&format!("table{t}").as_str()));
         }

@@ -1,0 +1,310 @@
+//! Byte-exact checkpoint/resume of run state (std-only JSON).
+//!
+//! A [`RunCheckpoint`] captures everything a stepper needs to continue
+//! a killed run **byte-identically**: per-node `Q` estimates, trace
+//! records, P2P counters, the fault-session round counter (the
+//! virtual-clock stamp of the simulator), and optionally an RNG stream
+//! position. `Json::Num` prints through `f64` (so `-0.0` flattens and
+//! u64s above 2^53 round) — instead, every result-bearing `f64` is
+//! stored as its 16-hex-char bit pattern and every `u64` counter as a
+//! decimal string, which makes the roundtrip exact by construction.
+//!
+//! Files are written atomically (temp + rename) so a kill **during**
+//! checkpointing leaves the previous checkpoint intact.
+
+use crate::fault::{json_to_u64, u64_to_json};
+use crate::linalg::Mat;
+use crate::metrics::trace::IterRecord;
+use crate::util::json::Json;
+
+/// Encode an `f64` as its IEEE-754 bit pattern (16 hex chars).
+pub fn f64_to_hex(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Inverse of [`f64_to_hex`]; bit-exact for every value incl. `-0.0`.
+pub fn f64_from_hex(s: &str) -> Result<f64, String> {
+    if s.len() != 16 {
+        return Err(format!("f64 hex field must be 16 chars, got '{s}'"));
+    }
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|_| format!("bad f64 hex field '{s}'"))
+}
+
+fn mat_to_json(m: &Mat) -> Json {
+    let mut hex = String::with_capacity(16 * m.data.len());
+    for &x in &m.data {
+        hex.push_str(&f64_to_hex(x));
+    }
+    Json::obj(vec![
+        ("rows", Json::Num(m.rows as f64)),
+        ("cols", Json::Num(m.cols as f64)),
+        ("data_hex", Json::Str(hex)),
+    ])
+}
+
+fn mat_from_json(j: &Json) -> Result<Mat, String> {
+    let rows = j.get("rows").and_then(|v| v.as_usize()).ok_or("matrix needs 'rows'")?;
+    let cols = j.get("cols").and_then(|v| v.as_usize()).ok_or("matrix needs 'cols'")?;
+    let hex = j
+        .get("data_hex")
+        .and_then(|v| v.as_str())
+        .ok_or("matrix needs 'data_hex'")?;
+    if hex.len() != 16 * rows * cols {
+        return Err(format!(
+            "matrix data_hex length {} does not match {rows}x{cols}",
+            hex.len()
+        ));
+    }
+    let mut data = Vec::with_capacity(rows * cols);
+    for k in 0..rows * cols {
+        data.push(f64_from_hex(&hex[16 * k..16 * (k + 1)])?);
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+fn u64s_to_json(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| u64_to_json(x)).collect())
+}
+
+fn u64s_from_json(j: &Json, what: &str) -> Result<Vec<u64>, String> {
+    j.as_arr()
+        .ok_or_else(|| format!("{what} must be an array"))?
+        .iter()
+        .map(|v| json_to_u64(v).ok_or_else(|| format!("{what} entries must be u64")))
+        .collect()
+}
+
+/// Full run state at an outer-iteration boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunCheckpoint {
+    pub algorithm: String,
+    /// Completed outer iterations (the resumed run executes `t + 1` next).
+    pub t: usize,
+    pub total_iters: usize,
+    /// Consensus-round counter of the fault session — the simulator's
+    /// virtual-clock stamp, so resumed fault predicates stay aligned.
+    pub round: u64,
+    /// Per-node subspace estimates `Q_i`.
+    pub q: Vec<Mat>,
+    pub records: Vec<IterRecord>,
+    /// P2P counters (`sent` / `payload` per node).
+    pub sent: Vec<u64>,
+    pub payload: Vec<u64>,
+    /// Optional RNG stream position (`Rng::state`) for algorithms that
+    /// draw randomness mid-run; S-DOT itself is RNG-free after init.
+    pub rng: Option<([u64; 4], Option<f64>)>,
+}
+
+impl RunCheckpoint {
+    pub fn to_json(&self) -> Json {
+        let records = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("outer", Json::Num(r.outer as f64)),
+                    ("total_iters", Json::Num(r.total_iters as f64)),
+                    ("error_hex", Json::Str(f64_to_hex(r.error))),
+                    ("p2p_avg_hex", Json::Str(f64_to_hex(r.p2p_avg))),
+                ])
+            })
+            .collect();
+        let mut pairs = vec![
+            ("algorithm", Json::Str(self.algorithm.clone())),
+            ("t", Json::Num(self.t as f64)),
+            ("total_iters", Json::Num(self.total_iters as f64)),
+            ("round", u64_to_json(self.round)),
+            ("q", Json::Arr(self.q.iter().map(mat_to_json).collect())),
+            ("records", Json::Arr(records)),
+            ("sent", u64s_to_json(&self.sent)),
+            ("payload", u64s_to_json(&self.payload)),
+        ];
+        if let Some((s, spare)) = &self.rng {
+            pairs.push(("rng_s", u64s_to_json(s)));
+            if let Some(v) = spare {
+                pairs.push(("rng_gauss_spare_hex", Json::Str(f64_to_hex(*v))));
+            }
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunCheckpoint, String> {
+        let algorithm = j
+            .get("algorithm")
+            .and_then(|v| v.as_str())
+            .ok_or("checkpoint needs 'algorithm'")?
+            .to_string();
+        let t = j.get("t").and_then(|v| v.as_usize()).ok_or("checkpoint needs 't'")?;
+        let total_iters = j
+            .get("total_iters")
+            .and_then(|v| v.as_usize())
+            .ok_or("checkpoint needs 'total_iters'")?;
+        let round =
+            j.get("round").and_then(json_to_u64).ok_or("checkpoint needs 'round'")?;
+        let q = j
+            .get("q")
+            .and_then(|v| v.as_arr())
+            .ok_or("checkpoint needs 'q'")?
+            .iter()
+            .map(mat_from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let mut records = Vec::new();
+        for r in j.get("records").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            records.push(IterRecord {
+                outer: r
+                    .get("outer")
+                    .and_then(|v| v.as_usize())
+                    .ok_or("record needs 'outer'")?,
+                total_iters: r
+                    .get("total_iters")
+                    .and_then(|v| v.as_usize())
+                    .ok_or("record needs 'total_iters'")?,
+                error: f64_from_hex(
+                    r.get("error_hex").and_then(|v| v.as_str()).ok_or("record needs error")?,
+                )?,
+                p2p_avg: f64_from_hex(
+                    r.get("p2p_avg_hex")
+                        .and_then(|v| v.as_str())
+                        .ok_or("record needs p2p_avg")?,
+                )?,
+            });
+        }
+        let sent = u64s_from_json(j.get("sent").ok_or("checkpoint needs 'sent'")?, "sent")?;
+        let payload =
+            u64s_from_json(j.get("payload").ok_or("checkpoint needs 'payload'")?, "payload")?;
+        let rng = match j.get("rng_s") {
+            Some(v) => {
+                let words = u64s_from_json(v, "rng_s")?;
+                if words.len() != 4 {
+                    return Err("rng_s must hold 4 words".to_string());
+                }
+                let spare = match j.get("rng_gauss_spare_hex") {
+                    Some(h) => {
+                        Some(f64_from_hex(h.as_str().ok_or("bad rng_gauss_spare_hex")?)?)
+                    }
+                    None => None,
+                };
+                Some(([words[0], words[1], words[2], words[3]], spare))
+            }
+            None => None,
+        };
+        Ok(RunCheckpoint { algorithm, t, total_iters, round, q, records, sent, payload, rng })
+    }
+
+    pub fn parse(s: &str) -> Result<RunCheckpoint, String> {
+        let j = Json::parse(s).map_err(|e| e.to_string())?;
+        RunCheckpoint::from_json(&j)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RunCheckpoint, String> {
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read checkpoint {}: {e}", path.display()))?;
+        RunCheckpoint::parse(&s)
+            .map_err(|e| format!("bad checkpoint {}: {e}", path.display()))
+    }
+
+    /// Atomic save: write a sibling temp file, then rename over the
+    /// target, so a kill mid-write never corrupts the last checkpoint.
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, format!("{}\n", self.to_json()))
+            .map_err(|e| format!("cannot write checkpoint {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("cannot commit checkpoint {}: {e}", path.display()))
+    }
+
+    /// FNV-1a digest of the canonical serialization — a cheap fingerprint
+    /// for byte-identity assertions in tests and benches.
+    pub fn digest(&self) -> u64 {
+        let text = self.to_json().to_string();
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in text.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tricky_checkpoint() -> RunCheckpoint {
+        // Values Json::Num cannot roundtrip: -0.0, subnormals, huge
+        // counters, and full-precision irrationals.
+        let q = vec![
+            Mat::from_vec(2, 2, vec![-0.0, f64::MIN_POSITIVE / 4.0, 1e300, 1.0 / 3.0]),
+            Mat::gauss(3, 2, &mut Rng::new(5)),
+        ];
+        RunCheckpoint {
+            algorithm: "S-DOT".to_string(),
+            t: 40,
+            total_iters: 800,
+            round: (1u64 << 60) + 7,
+            q,
+            records: vec![
+                IterRecord { outer: 10, total_iters: 200, error: 0.1 + 0.2, p2p_avg: 38.4 },
+                IterRecord { outer: 40, total_iters: 800, error: 1e-17, p2p_avg: 153.6 },
+            ],
+            sent: vec![u64::MAX - 1, 12, 0],
+            payload: vec![9_007_199_254_740_993, 0, 7], // 2^53 + 1
+            rng: Some(([1, u64::MAX, 3, 1 << 63], Some(-0.75))),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let ck = tricky_checkpoint();
+        let back = RunCheckpoint::parse(&ck.to_json().to_string()).unwrap();
+        assert_eq!(ck.t, back.t);
+        assert_eq!(ck.round, back.round);
+        assert_eq!(ck.sent, back.sent);
+        assert_eq!(ck.payload, back.payload);
+        assert_eq!(ck.rng, back.rng);
+        for (a, b) in ck.q.iter().zip(&back.q) {
+            assert_eq!(a.rows, b.rows);
+            assert_eq!(a.cols, b.cols);
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "matrix entries must roundtrip bitwise");
+            }
+        }
+        for (r, s) in ck.records.iter().zip(&back.records) {
+            assert_eq!(r.error.to_bits(), s.error.to_bits());
+            assert_eq!(r.p2p_avg.to_bits(), s.p2p_avg.to_bits());
+        }
+        assert_eq!(ck.digest(), back.digest());
+    }
+
+    #[test]
+    fn negative_zero_survives() {
+        assert_eq!(f64_from_hex(&f64_to_hex(-0.0)).unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_ne!((-0.0f64).to_bits(), 0.0f64.to_bits());
+    }
+
+    #[test]
+    fn file_save_is_atomic_and_loadable() {
+        let dir = std::env::temp_dir().join("dpsa_checkpoint_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let ck = tricky_checkpoint();
+        ck.save(&path).unwrap();
+        assert!(!path.with_extension("tmp").exists(), "temp file must be renamed away");
+        let back = RunCheckpoint::load(&path).unwrap();
+        assert_eq!(ck.digest(), back.digest());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_checkpoint_is_a_clear_error() {
+        assert!(RunCheckpoint::parse("{").is_err());
+        let err = RunCheckpoint::parse(r#"{"algorithm":"x"}"#).unwrap_err();
+        assert!(err.contains("'t'"), "{err}");
+        let bad_hex = r#"{"algorithm":"x","t":0,"total_iters":0,"round":0,
+            "q":[{"rows":1,"cols":1,"data_hex":"zz"}],"records":[],"sent":[],"payload":[]}"#;
+        assert!(RunCheckpoint::parse(bad_hex).is_err());
+    }
+}

@@ -1,0 +1,450 @@
+//! Deterministic fault injection scheduled on the virtual clock.
+//!
+//! A [`FaultPlan`] scripts node churn (drop/rejoin), per-message loss,
+//! and timed network partitions as **pure functions of the consensus
+//! round index** — the same logical time base the PR-2 virtual clock
+//! gives the straggler runtime. Both runtimes (`network/sim.rs` and
+//! `network/mpi.rs`) evaluate the plan independently at each endpoint,
+//! so a scripted failure scenario reproduces bit-exactly at any
+//! `--threads`, exactly like straggler scenarios already do.
+//!
+//! Like `--qr` and `--simd fma`, a `FaultPlan` is a **result-affecting
+//! policy**: ledger comparisons must hold it fixed.
+//!
+//! The sibling [`checkpoint`] module persists full run state (estimates,
+//! RNG stream positions, clock stamps, counters) so an interrupted run
+//! resumes byte-identically.
+
+pub mod checkpoint;
+
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// One scripted drop (and optional rejoin) of a node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeEvent {
+    pub node: usize,
+    /// First round (0-based) in which the node is down.
+    pub down_at: u64,
+    /// First round in which the node is back up; `None` = never rejoins.
+    pub up_at: Option<u64>,
+}
+
+/// A timed partition: during `[from, to)` the listed group is cut off
+/// from the rest of the network (messages crossing the cut are blocked
+/// in both directions; traffic within each side flows normally).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Partition {
+    pub from: u64,
+    pub to: u64,
+    pub group: Vec<usize>,
+}
+
+/// A deterministic, seeded fault schedule.
+///
+/// All predicates are pure functions of `(plan, round, endpoints)` so
+/// every node — and every thread count — reaches identical verdicts
+/// without any coordination.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the per-message loss coin (independent of data RNG).
+    pub seed: u64,
+    /// Per-directed-message loss probability in `[0, 1)`.
+    pub loss_prob: f64,
+    pub node_events: Vec<NodeEvent>,
+    pub partitions: Vec<Partition>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults ever fire.
+    pub fn none() -> FaultPlan {
+        FaultPlan { seed: 0, loss_prob: 0.0, node_events: Vec::new(), partitions: Vec::new() }
+    }
+
+    /// True when no predicate can ever fire — runtimes use this to keep
+    /// the fault-free hot path untouched (and allocation-free).
+    pub fn is_trivial(&self) -> bool {
+        self.loss_prob <= 0.0 && self.node_events.is_empty() && self.partitions.is_empty()
+    }
+
+    pub fn with_loss(mut self, prob: f64, seed: u64) -> FaultPlan {
+        self.loss_prob = prob;
+        self.seed = seed;
+        self
+    }
+
+    /// Script a permanent node death at round `down_at`.
+    pub fn with_node_down(mut self, node: usize, down_at: u64) -> FaultPlan {
+        self.node_events.push(NodeEvent { node, down_at, up_at: None });
+        self
+    }
+
+    /// Script a drop at `down_at` and a rejoin at `up_at`.
+    pub fn with_node_churn(mut self, node: usize, down_at: u64, up_at: u64) -> FaultPlan {
+        self.node_events.push(NodeEvent { node, down_at, up_at: Some(up_at) });
+        self
+    }
+
+    pub fn with_partition(mut self, from: u64, to: u64, group: Vec<usize>) -> FaultPlan {
+        self.partitions.push(Partition { from, to, group });
+        self
+    }
+
+    /// Sanity-check indices and ranges against an `n`-node network.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if !(0.0..1.0).contains(&self.loss_prob) {
+            return Err(format!("loss_prob must be in [0,1), got {}", self.loss_prob));
+        }
+        for e in &self.node_events {
+            if e.node >= n {
+                return Err(format!("node event references node {} but n={n}", e.node));
+            }
+            if let Some(up) = e.up_at {
+                if up <= e.down_at {
+                    return Err(format!(
+                        "node {} rejoin round {up} must be after drop round {}",
+                        e.node, e.down_at
+                    ));
+                }
+            }
+        }
+        for p in &self.partitions {
+            if p.to <= p.from {
+                return Err(format!("partition window [{}, {}) is empty", p.from, p.to));
+            }
+            if let Some(&bad) = p.group.iter().find(|&&i| i >= n) {
+                return Err(format!("partition references node {bad} but n={n}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Is `node` down in `round`?
+    #[inline]
+    pub fn node_down(&self, node: usize, round: u64) -> bool {
+        self.node_events.iter().any(|e| {
+            e.node == node && round >= e.down_at && e.up_at.map(|up| round < up).unwrap_or(true)
+        })
+    }
+
+    /// Is the undirected edge `(a, b)` severed by an active partition?
+    #[inline]
+    pub fn edge_cut(&self, round: u64, a: usize, b: usize) -> bool {
+        self.partitions.iter().any(|p| {
+            round >= p.from && round < p.to && (p.group.contains(&a) != p.group.contains(&b))
+        })
+    }
+
+    /// Seeded per-message loss coin for the directed message
+    /// `from -> to` in `round`. Sender and receiver evaluate the same
+    /// pure function, so a lost message is skipped consistently at both
+    /// endpoints without any side channel.
+    #[inline]
+    pub fn msg_lost(&self, round: u64, from: usize, to: usize) -> bool {
+        if self.loss_prob <= 0.0 {
+            return false;
+        }
+        let edge = ((from as u64) << 32 | to as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        let key = self.seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ edge;
+        let u = (SplitMix64::new(key).next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        u < self.loss_prob
+    }
+
+    /// Membership-level link state: both endpoints alive and no active
+    /// partition between them (message loss is evaluated separately).
+    #[inline]
+    pub fn link_open(&self, round: u64, i: usize, j: usize) -> bool {
+        !self.node_down(i, round) && !self.node_down(j, round) && !self.edge_cut(round, i, j)
+    }
+
+    /// Does the directed message `from -> to` get through in `round`?
+    #[inline]
+    pub fn msg_delivered(&self, round: u64, from: usize, to: usize) -> bool {
+        self.link_open(round, from, to) && !self.msg_lost(round, from, to)
+    }
+
+    /// Fill `mask[i] = node i is up in round` (no allocation).
+    pub fn fill_alive_mask(&self, round: u64, mask: &mut [bool]) {
+        for (i, m) in mask.iter_mut().enumerate() {
+            *m = !self.node_down(i, round);
+        }
+    }
+
+    /// Allocating convenience form of [`fill_alive_mask`](Self::fill_alive_mask).
+    pub fn alive_mask(&self, n: usize, round: u64) -> Vec<bool> {
+        let mut m = vec![true; n];
+        self.fill_alive_mask(round, &mut m);
+        m
+    }
+
+    /// First round at which membership could differ from the previous
+    /// round — used by runtimes to recompute active weights only on
+    /// membership epochs. Conservative: returns true on any boundary.
+    pub fn membership_changes_at(&self, round: u64) -> bool {
+        self.node_events
+            .iter()
+            .any(|e| e.down_at == round || e.up_at == Some(round))
+    }
+
+    // ---- JSON (std-only, util::json idiom) ----
+
+    pub fn to_json(&self) -> Json {
+        let events = self
+            .node_events
+            .iter()
+            .map(|e| {
+                let mut pairs = vec![
+                    ("node", Json::Num(e.node as f64)),
+                    ("down_at", u64_to_json(e.down_at)),
+                ];
+                if let Some(up) = e.up_at {
+                    pairs.push(("up_at", u64_to_json(up)));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        let parts = self
+            .partitions
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("from", u64_to_json(p.from)),
+                    ("to", u64_to_json(p.to)),
+                    ("group", Json::arr_usize(&p.group)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("seed", u64_to_json(self.seed)),
+            ("loss_prob", Json::Num(self.loss_prob)),
+            ("node_events", Json::Arr(events)),
+            ("partitions", Json::Arr(parts)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultPlan, String> {
+        let obj = j.as_obj().ok_or("fault plan must be a JSON object")?;
+        for key in obj.keys() {
+            if !matches!(key.as_str(), "seed" | "loss_prob" | "node_events" | "partitions") {
+                return Err(format!(
+                    "unknown fault-plan key '{key}' (valid: seed, loss_prob, node_events, \
+                     partitions)"
+                ));
+            }
+        }
+        let seed = match j.get("seed") {
+            Some(v) => json_to_u64(v).ok_or("seed must be a u64")?,
+            None => 0,
+        };
+        let loss_prob = match j.get("loss_prob") {
+            Some(v) => v.as_f64().ok_or("loss_prob must be a number")?,
+            None => 0.0,
+        };
+        let mut node_events = Vec::new();
+        if let Some(arr) = j.get("node_events") {
+            for e in arr.as_arr().ok_or("node_events must be an array")? {
+                let node = e
+                    .get("node")
+                    .and_then(|v| v.as_usize())
+                    .ok_or("node event needs a 'node' index")?;
+                let down_at = e
+                    .get("down_at")
+                    .and_then(json_to_u64)
+                    .ok_or("node event needs a 'down_at' round")?;
+                let up_at = match e.get("up_at") {
+                    Some(v) => Some(json_to_u64(v).ok_or("up_at must be a u64 round")?),
+                    None => None,
+                };
+                node_events.push(NodeEvent { node, down_at, up_at });
+            }
+        }
+        let mut partitions = Vec::new();
+        if let Some(arr) = j.get("partitions") {
+            for p in arr.as_arr().ok_or("partitions must be an array")? {
+                let from =
+                    p.get("from").and_then(json_to_u64).ok_or("partition needs 'from'")?;
+                let to = p.get("to").and_then(json_to_u64).ok_or("partition needs 'to'")?;
+                let group = p
+                    .get("group")
+                    .and_then(|g| g.as_arr())
+                    .ok_or("partition needs a 'group' array")?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or("group entries must be node indices"))
+                    .collect::<Result<Vec<_>, _>>()?;
+                partitions.push(Partition { from, to, group });
+            }
+        }
+        Ok(FaultPlan { seed, loss_prob, node_events, partitions })
+    }
+
+    pub fn parse(s: &str) -> Result<FaultPlan, String> {
+        let j = Json::parse(s).map_err(|e| e.to_string())?;
+        FaultPlan::from_json(&j)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<FaultPlan, String> {
+        let s = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read fault plan {}: {e}", path.display()))?;
+        FaultPlan::parse(&s)
+            .map_err(|e| format!("bad fault plan {}: {e}", path.display()))
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| format!("cannot write fault plan {}: {e}", path.display()))
+    }
+}
+
+/// `u64 → Json` preserving values above 2^53 (decimal string fallback —
+/// `Json::Num` is an f64 and would round them).
+pub(crate) fn u64_to_json(x: u64) -> Json {
+    if x <= (1u64 << 53) {
+        Json::Num(x as f64)
+    } else {
+        Json::Str(x.to_string())
+    }
+}
+
+/// Accepts either encoding produced by [`u64_to_json`].
+pub(crate) fn json_to_u64(j: &Json) -> Option<u64> {
+    match j {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= (1u64 << 53) as f64 => {
+            Some(*n as u64)
+        }
+        Json::Str(s) => s.parse().ok(),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trivial_plan_never_fires() {
+        let p = FaultPlan::none();
+        assert!(p.is_trivial());
+        for round in 0..50 {
+            assert!(!p.node_down(3, round));
+            assert!(!p.msg_lost(round, 0, 1));
+            assert!(!p.edge_cut(round, 0, 1));
+            assert!(p.msg_delivered(round, 0, 1));
+        }
+    }
+
+    #[test]
+    fn node_down_window_and_rejoin() {
+        let p = FaultPlan::none().with_node_churn(2, 10, 20).with_node_down(4, 15);
+        assert!(!p.node_down(2, 9));
+        assert!(p.node_down(2, 10));
+        assert!(p.node_down(2, 19));
+        assert!(!p.node_down(2, 20));
+        assert!(!p.node_down(4, 14));
+        assert!(p.node_down(4, 15));
+        assert!(p.node_down(4, 1_000_000));
+        assert!(!p.node_down(0, 15));
+        let mask = p.alive_mask(6, 15);
+        assert_eq!(mask, vec![true, true, false, true, false, true]);
+    }
+
+    #[test]
+    fn partitions_cut_only_crossing_edges() {
+        let p = FaultPlan::none().with_partition(5, 8, vec![0, 1]);
+        assert!(!p.edge_cut(4, 0, 2));
+        assert!(p.edge_cut(5, 0, 2));
+        assert!(p.edge_cut(7, 2, 1), "cut is symmetric");
+        assert!(!p.edge_cut(7, 0, 1), "within the group flows");
+        assert!(!p.edge_cut(7, 2, 3), "outside the group flows");
+        assert!(!p.edge_cut(8, 0, 2));
+    }
+
+    #[test]
+    fn message_loss_is_deterministic_and_directional() {
+        let p = FaultPlan::none().with_loss(0.5, 99);
+        let a: Vec<bool> = (0..64).map(|r| p.msg_lost(r, 1, 2)).collect();
+        let b: Vec<bool> = (0..64).map(|r| p.msg_lost(r, 1, 2)).collect();
+        assert_eq!(a, b, "same (round, edge) must give the same verdict");
+        let rev: Vec<bool> = (0..64).map(|r| p.msg_lost(r, 2, 1)).collect();
+        assert_ne!(a, rev, "directions are independent coins");
+        let hits = a.iter().filter(|&&x| x).count();
+        assert!(hits > 10 && hits < 54, "rate should be near 0.5, got {hits}/64");
+    }
+
+    #[test]
+    fn loss_rate_matches_probability() {
+        let p = FaultPlan::none().with_loss(0.05, 7);
+        let n = 20_000;
+        let mut hits = 0;
+        for r in 0..n {
+            if p.msg_lost(r, 3, 4) {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.05).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn membership_change_rounds() {
+        let p = FaultPlan::none().with_node_churn(1, 4, 9);
+        assert!(p.membership_changes_at(4));
+        assert!(p.membership_changes_at(9));
+        assert!(!p.membership_changes_at(5));
+        assert!(!p.membership_changes_at(0));
+    }
+
+    #[test]
+    fn validate_rejects_bad_plans() {
+        assert!(FaultPlan::none().with_loss(1.5, 0).validate(4).is_err());
+        assert!(FaultPlan::none().with_node_down(9, 0).validate(4).is_err());
+        assert!(FaultPlan::none().with_node_churn(0, 5, 5).validate(4).is_err());
+        assert!(FaultPlan::none().with_partition(3, 3, vec![0]).validate(4).is_err());
+        assert!(FaultPlan::none().with_partition(0, 2, vec![7]).validate(4).is_err());
+        let ok = FaultPlan::none()
+            .with_loss(0.05, 1)
+            .with_node_churn(1, 3, 8)
+            .with_partition(2, 4, vec![0, 1]);
+        assert!(ok.validate(4).is_ok());
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let p = FaultPlan {
+            seed: u64::MAX - 3, // above 2^53: exercises the string fallback
+            loss_prob: 0.05,
+            node_events: vec![
+                NodeEvent { node: 2, down_at: 40, up_at: Some(120) },
+                NodeEvent { node: 5, down_at: 90, up_at: None },
+            ],
+            partitions: vec![Partition { from: 10, to: 20, group: vec![0, 1, 2] }],
+        };
+        let text = p.to_json().to_string();
+        let back = FaultPlan::parse(&text).unwrap();
+        assert_eq!(p, back);
+        assert_eq!(back.seed, u64::MAX - 3);
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_keys() {
+        let err = FaultPlan::parse(r#"{"seed":1,"los_prob":0.1}"#).unwrap_err();
+        assert!(err.contains("los_prob"), "{err}");
+        assert!(err.contains("loss_prob"), "should list valid keys: {err}");
+    }
+
+    #[test]
+    fn plan_file_roundtrip() {
+        let dir = std::env::temp_dir().join("dpsa_fault_plan_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("plan.json");
+        let p = FaultPlan::none().with_loss(0.05, 11).with_node_down(3, 100);
+        p.save(&path).unwrap();
+        assert_eq!(FaultPlan::load(&path).unwrap(), p);
+        std::fs::remove_file(&path).ok();
+    }
+}

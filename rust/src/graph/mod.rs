@@ -173,6 +173,32 @@ impl Graph {
         count == self.n
     }
 
+    /// BFS connectivity of the subgraph induced by `alive` nodes — the
+    /// surviving network after fault-plan churn. Vacuously true when no
+    /// node (or a single node) survives.
+    pub fn is_connected_over(&self, alive: &[bool]) -> bool {
+        assert_eq!(alive.len(), self.n);
+        let Some(start) = (0..self.n).find(|&i| alive[i]) else {
+            return true;
+        };
+        let total = alive.iter().filter(|&&a| a).count();
+        let mut seen = vec![false; self.n];
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(start);
+        seen[start] = true;
+        let mut count = 1;
+        while let Some(v) = queue.pop_front() {
+            for &w in &self.adj[v] {
+                if alive[w] && !seen[w] {
+                    seen[w] = true;
+                    count += 1;
+                    queue.push_back(w);
+                }
+            }
+        }
+        count == total
+    }
+
     /// Graph diameter (max BFS eccentricity); O(n·m), fine for n ≤ few hundred.
     pub fn diameter(&self) -> usize {
         let mut diam = 0;

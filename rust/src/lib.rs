@@ -9,6 +9,7 @@
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured results.
 pub mod consensus;
+pub mod fault;
 pub mod graph;
 pub mod linalg;
 pub mod network;

@@ -11,7 +11,8 @@
 //! flags: --seed N --scale F --trials N --threads N --out DIR
 //!        --config FILE.json --trial-parallel on|off
 //!        --mpi-clock real|virtual --qr householder|blocked|tsqr
-//!        --simd scalar|auto|fma
+//!        --simd scalar|auto|fma --fault-plan FILE.json
+//!        --checkpoint-every N --resume CK.json
 //! ```
 //!
 //! `--threads` is one knob for two parallelism levels: Monte-Carlo
@@ -25,6 +26,13 @@
 //! selects the inner-product micro-kernels (`linalg::simd::SimdPolicy`):
 //! `auto` is bitwise identical to `scalar`, `fma` intentionally changes
 //! bits (hold it fixed across perf-ledger comparisons, like `--qr`).
+//! `--fault-plan` installs a `fault::FaultPlan` on fault-aware runners
+//! (the `churn` experiment) — another result-affecting, ledger-pinned
+//! policy whose verdicts are pure functions of `(plan, round, from, to)`,
+//! so runs stay byte-identical at every `--threads`.
+//! `--checkpoint-every N` snapshots full run state every N outer
+//! iterations and `--resume CK.json` continues from a snapshot; a killed
+//! and resumed run is byte-identical to an uninterrupted one.
 //!
 //! Flags are validated against `dpsa::config::FLAGS` — the same registry
 //! that vets JSON config keys — so a typo'd flag, an unknown config key,
@@ -170,6 +178,7 @@ fn print_usage() {
         "usage: dpsa <list|run|info|demo> [ids…] \
          [--seed N] [--scale F] [--trials N] [--threads N] [--out DIR] \
          [--config FILE] [--trial-parallel on|off] [--mpi-clock real|virtual] \
-         [--qr householder|blocked|tsqr] [--simd scalar|auto|fma]"
+         [--qr householder|blocked|tsqr] [--simd scalar|auto|fma] \
+         [--fault-plan FILE] [--checkpoint-every N] [--resume CK]"
     );
 }

@@ -100,6 +100,31 @@ pub fn average_error_ws(q: &Mat, estimates: &[Mat], ws: &mut SubspaceWs) -> f64 
         / estimates.len() as f64
 }
 
+/// [`average_error_ws`] restricted to nodes with `mask[i] == true` —
+/// fault-injected runs average eq. 11 over the **surviving** nodes only
+/// (a dead node's frozen estimate would otherwise dominate the curve).
+/// With an all-false mask it falls back to averaging over every node.
+pub fn average_error_masked_ws(
+    q: &Mat,
+    estimates: &[Mat],
+    mask: &[bool],
+    ws: &mut SubspaceWs,
+) -> f64 {
+    assert_eq!(estimates.len(), mask.len());
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for (e, &alive) in estimates.iter().zip(mask) {
+        if alive {
+            sum += subspace_error_ws(q, e, ws);
+            count += 1;
+        }
+    }
+    if count == 0 {
+        return average_error_ws(q, estimates, ws);
+    }
+    sum / count as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +201,29 @@ mod tests {
         let avg = average_error(&q, &[q.clone(), qh.clone()]);
         let expect = subspace_error(&q, &qh) / 2.0;
         assert!((avg - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn masked_average_skips_dead_nodes() {
+        let mut rng = Rng::new(9);
+        let mut ws = SubspaceWs::new();
+        let q = Mat::random_orthonormal(10, 3, &mut rng);
+        let qh = Mat::random_orthonormal(10, 3, &mut rng);
+        let ests = [q.clone(), qh.clone(), qh.clone()];
+        // Only node 0 (the exact estimate) alive -> error 0.
+        let only_first = average_error_masked_ws(&q, &ests, &[true, false, false], &mut ws);
+        assert!(only_first < 1e-12);
+        // Nodes 1 and 2 alive -> the qh error, not diluted by node 0.
+        let tail = average_error_masked_ws(&q, &ests, &[false, true, true], &mut ws);
+        let expect = subspace_error_ws(&q, &qh, &mut ws);
+        assert!((tail - expect).abs() < 1e-12);
+        // All-true mask is bitwise the plain average.
+        let all = average_error_masked_ws(&q, &ests, &[true; 3], &mut ws);
+        let plain = average_error_ws(&q, &ests, &mut ws);
+        assert_eq!(all.to_bits(), plain.to_bits());
+        // Degenerate all-false mask falls back to the plain average.
+        let none = average_error_masked_ws(&q, &ests, &[false; 3], &mut ws);
+        assert_eq!(none.to_bits(), plain.to_bits());
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use crate::util::table::Table;
 
 /// One outer iteration's snapshot.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct IterRecord {
     /// Outer iteration index (1-based).
     pub outer: usize,

@@ -48,12 +48,13 @@
 //! with the synchronous runs (the paper's P2P metric counts algorithm
 //! messages only).
 
+use crate::fault::FaultPlan;
 use crate::graph::Graph;
 use crate::linalg::Mat;
 use crate::network::counters::P2pCounters;
 use crate::util::rng::SplitMix64;
 use std::collections::HashMap;
-use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError, TrySendError};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -88,6 +89,14 @@ pub enum ClockMode {
 /// Default per-edge channel capacity (in-flight messages).
 pub const DEFAULT_CAPACITY: usize = 4;
 
+/// Default patience for a silent peer before its link is torn down
+/// (see [`MpiConfig::peer_budget`]).
+pub const DEFAULT_PEER_BUDGET: Duration = Duration::from_secs(2);
+
+/// Poll tick used while a full send channel is retried within the
+/// patience budget.
+const SEND_POLL: Duration = Duration::from_millis(1);
+
 /// Runtime configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct MpiConfig {
@@ -100,11 +109,22 @@ pub struct MpiConfig {
     /// round; larger capacities only let fast nodes pipeline ahead of
     /// slow neighbors by up to `capacity` rounds before a send blocks.
     pub capacity: usize,
+    /// Bounded patience for an **unplanned**-silent peer: a blocking link
+    /// operation that makes no progress for this long declares the peer
+    /// dead and removes the link from the active set instead of
+    /// panicking ("graceful degradation"). Healthy peers never get close
+    /// to the budget, so the no-fault path is unchanged.
+    pub peer_budget: Duration,
 }
 
 impl Default for MpiConfig {
     fn default() -> MpiConfig {
-        MpiConfig { straggler: None, clock: ClockMode::Real, capacity: DEFAULT_CAPACITY }
+        MpiConfig {
+            straggler: None,
+            clock: ClockMode::Real,
+            capacity: DEFAULT_CAPACITY,
+            peer_budget: DEFAULT_PEER_BUDGET,
+        }
     }
 }
 
@@ -140,6 +160,10 @@ struct Link {
     reclaim_tx: SyncSender<Mat>,
     /// Buffers `peer` has returned to us (we minted them for `tx`).
     spare_rx: Receiver<Mat>,
+    /// False once the peer hung up or stayed silent past the patience
+    /// budget; a dead link is skipped by every subsequent operation —
+    /// the runtime's "removal from the neighbor set".
+    alive: bool,
 }
 
 /// Per-node communication accounting, split into algorithm traffic and
@@ -162,8 +186,10 @@ pub struct NodeCtx {
     pub neighbors: Vec<usize>,
     links: Vec<Link>,
     straggler: Option<StragglerSpec>,
+    fault: Option<Arc<FaultPlan>>,
     clock: ClockMode,
     capacity: usize,
+    peer_budget: Duration,
     round: u64,
     vclock_ns: u64,
     inbox: Vec<(usize, Mat)>,
@@ -172,20 +198,63 @@ pub struct NodeCtx {
 }
 
 /// Pop a recycled send buffer: edge return channel first, then the
-/// node-local pool, minting an empty `Mat` only when both are dry.
+/// node-local pool, minting a `Mat` **at the message shape** only when
+/// both are dry — so the buffer enters the recycling fabric with the
+/// right capacity and the following `copy_from` never reallocates.
+/// (The seed minted `Mat::zeros(0, 0)` here, deferring a hidden
+/// allocation to every copy into the fresh buffer.)
 ///
 /// `Empty` is the normal case (the peer simply holds our complement
 /// right now); `Disconnected` means the peer tore its `Link` down
-/// mid-run, which every data-channel path treats as fatal (`expect
-/// ("peer hung up")`) — so it fails loudly here too instead of silently
-/// degrading into fresh allocations that would also break the
-/// zero-allocation steady-state contract.
-fn take_buf(link: &Link, local: &mut Vec<Mat>) -> Mat {
+/// mid-run, which the data-channel paths handle by deactivating the
+/// link — so the reclaim side just mints instead of panicking.
+fn take_buf(link: &Link, local: &mut Vec<Mat>, rows: usize, cols: usize) -> Mat {
     match link.spare_rx.try_recv() {
         Ok(b) => b,
-        Err(TryRecvError::Empty) => local.pop().unwrap_or_else(|| Mat::zeros(0, 0)),
-        Err(TryRecvError::Disconnected) => {
-            panic!("peer {} hung up (buffer-return channel closed mid-run)", link.peer)
+        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => {
+            local.pop().unwrap_or_else(|| Mat::zeros(rows, cols))
+        }
+    }
+}
+
+/// Blocking-style send with a bounded patience budget: the first
+/// `try_send` wins whenever the channel has room (the healthy path —
+/// identical to `SyncSender::send`), a full channel is retried on a
+/// short poll tick, and a peer whose channel stays full for the whole
+/// budget — or whose channel closed — is declared dead: the link is
+/// deactivated and the message dropped instead of panicking. Returns
+/// the message buffer on failure so it can be reclaimed.
+/// Blocking receive with the patience budget: identical to `recv` while
+/// the peer makes progress; a peer that hung up or stays silent for the
+/// whole budget deactivates the link and yields `None`.
+fn recv_graceful(link: &mut Link, budget: Duration) -> Option<Msg> {
+    match link.rx.recv_timeout(budget) {
+        Ok(msg) => Some(msg),
+        Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+            link.alive = false;
+            None
+        }
+    }
+}
+
+fn send_graceful(link: &mut Link, mut msg: Msg, budget: Duration) -> Result<(), Mat> {
+    let mut waited = Duration::ZERO;
+    loop {
+        match link.tx.try_send(msg) {
+            Ok(()) => return Ok(()),
+            Err(TrySendError::Disconnected(m)) => {
+                link.alive = false;
+                return Err(m.mat);
+            }
+            Err(TrySendError::Full(m)) => {
+                if waited >= budget {
+                    link.alive = false;
+                    return Err(m.mat);
+                }
+                std::thread::sleep(SEND_POLL);
+                waited += SEND_POLL;
+                msg = m;
+            }
         }
     }
 }
@@ -228,31 +297,108 @@ impl NodeCtx {
         }
     }
 
-    /// Blocking synchronous exchange with all neighbors: sends `m` to each
-    /// neighbor, then receives one matrix from each. Applies the straggler
-    /// delay for this round if this node is the designated straggler.
-    /// Returns `(neighbor_rank, matrix)` pairs in neighbor order; the
-    /// buffers are reused on the next `exchange`/`*_poll` call.
+    /// Blocking synchronous exchange with all live neighbors: sends `m` to
+    /// each neighbor, then receives one matrix from each. Applies the
+    /// straggler delay for this round if this node is the designated
+    /// straggler. Returns `(neighbor_rank, matrix)` pairs in neighbor
+    /// order; the buffers are reused on the next `exchange`/`*_poll` call.
+    ///
+    /// A peer that hung up, or stayed silent past
+    /// [`MpiConfig::peer_budget`], is removed from the active neighbor
+    /// set (see [`NodeCtx::live_neighbors`]) and the exchange continues
+    /// over the survivors instead of panicking. Under an installed
+    /// [`FaultPlan`] the exchange additionally realizes the plan's
+    /// deterministic verdicts — see [`run_spmd_with_faults`].
     pub fn exchange(&mut self, m: &Mat) -> &[(usize, Mat)] {
         self.straggle();
+        if self.fault.is_some() {
+            return self.exchange_faulty(m);
+        }
         self.recycle_inbox();
         let stamp = self.vclock_ns;
         let elems = (m.rows * m.cols) as u64;
-        for link in &self.links {
-            let mut buf = take_buf(link, &mut self.local_spares);
+        let budget = self.peer_budget;
+        let links = &mut self.links;
+        let spares = &mut self.local_spares;
+        let stats = &mut self.stats;
+        for link in links.iter_mut().filter(|l| l.alive) {
+            let mut buf = take_buf(link, spares, m.rows, m.cols);
             buf.copy_from(m);
-            link.tx.send(Msg { mat: buf, stamp }).expect("peer hung up");
-            self.stats.sent += 1;
-            self.stats.payload += elems;
-        }
-        for link in &self.links {
-            let msg = link.rx.recv().expect("peer hung up");
-            // A blocking receive cannot complete before the send happened.
-            if msg.stamp > self.vclock_ns {
-                self.vclock_ns = msg.stamp;
+            match send_graceful(link, Msg { mat: buf, stamp }, budget) {
+                Ok(()) => {
+                    stats.sent += 1;
+                    stats.payload += elems;
+                }
+                Err(mat) => spares.push(mat),
             }
-            self.inbox.push((link.peer, msg.mat));
         }
+        let mut vclock = self.vclock_ns;
+        for link in links.iter_mut().filter(|l| l.alive) {
+            if let Some(msg) = recv_graceful(link, budget) {
+                // A blocking receive cannot complete before the send.
+                if msg.stamp > vclock {
+                    vclock = msg.stamp;
+                }
+                self.inbox.push((link.peer, msg.mat));
+            }
+        }
+        self.vclock_ns = vclock;
+        &self.inbox
+    }
+
+    /// Plan-driven faulty exchange. Every verdict — node down, edge cut,
+    /// message lost — is a pure function of `(plan, round, from, to)`,
+    /// so both endpoints of a link reach the same verdict without
+    /// coordination: the sender skips exactly the messages the receiver
+    /// does not wait for, keeping the round deadlock-free and
+    /// bit-deterministic. A lost message is still *transmitted* (the
+    /// sender pays for it in the P2P counters); a down node or severed
+    /// edge sends nothing.
+    fn exchange_faulty(&mut self, m: &Mat) -> &[(usize, Mat)] {
+        let plan = self.fault.clone().expect("fault plan installed");
+        self.recycle_inbox();
+        let r = self.round - 1; // straggle() already advanced the round
+        let me = self.rank;
+        if plan.node_down(me, r) {
+            return &self.inbox; // a down node is silent this round
+        }
+        let stamp = self.vclock_ns;
+        let elems = (m.rows * m.cols) as u64;
+        let budget = self.peer_budget;
+        let links = &mut self.links;
+        let spares = &mut self.local_spares;
+        let stats = &mut self.stats;
+        for link in links.iter_mut().filter(|l| l.alive) {
+            if plan.node_down(link.peer, r) || plan.edge_cut(r, me, link.peer) {
+                continue;
+            }
+            stats.sent += 1;
+            stats.payload += elems;
+            if plan.msg_lost(r, me, link.peer) {
+                continue; // transmitted, lost in transit
+            }
+            let mut buf = take_buf(link, spares, m.rows, m.cols);
+            buf.copy_from(m);
+            if let Err(mat) = send_graceful(link, Msg { mat: buf, stamp }, budget) {
+                spares.push(mat);
+            }
+        }
+        let mut vclock = self.vclock_ns;
+        for link in links.iter_mut().filter(|l| l.alive) {
+            if plan.node_down(link.peer, r)
+                || plan.edge_cut(r, me, link.peer)
+                || plan.msg_lost(r, link.peer, me)
+            {
+                continue; // the peer's symmetric verdict: nothing is coming
+            }
+            if let Some(msg) = recv_graceful(link, budget) {
+                if msg.stamp > vclock {
+                    vclock = msg.stamp;
+                }
+                self.inbox.push((link.peer, msg.mat));
+            }
+        }
+        self.vclock_ns = vclock;
         &self.inbox
     }
 
@@ -284,37 +430,67 @@ impl NodeCtx {
 
     fn poll(&mut self, m: &Mat, proto: bool) -> &[(usize, Mat)] {
         self.recycle_inbox();
+        // Under a fault plan the gossip path gates the *sender* side only
+        // (a best-effort drain cannot skip a specific message): a down
+        // node is silent, severed edges and lost messages are never put
+        // on the wire. Verdicts use the round of the last `straggle`.
+        let plan = self.fault.clone();
+        let r = self.round.saturating_sub(1);
+        let me = self.rank;
+        if let Some(p) = &plan {
+            if p.node_down(me, r) {
+                return &self.inbox; // a down node is silent
+            }
+        }
         let stamp = self.vclock_ns;
         let elems = (m.rows * m.cols) as u64;
-        for link in &self.links {
-            let mut buf = take_buf(link, &mut self.local_spares);
+        let links = &mut self.links;
+        let spares = &mut self.local_spares;
+        let stats = &mut self.stats;
+        for link in links.iter_mut().filter(|l| l.alive) {
+            if let Some(p) = &plan {
+                if p.node_down(link.peer, r) || p.edge_cut(r, me, link.peer) {
+                    continue;
+                }
+                if p.msg_lost(r, me, link.peer) {
+                    // Transmitted best-effort, lost in transit.
+                    if proto {
+                        stats.proto_sent += 1;
+                        stats.proto_payload += elems;
+                    } else {
+                        stats.sent += 1;
+                        stats.payload += elems;
+                    }
+                    continue;
+                }
+            }
+            let mut buf = take_buf(link, spares, m.rows, m.cols);
             buf.copy_from(m);
             match link.tx.try_send(Msg { mat: buf, stamp }) {
                 Ok(()) => {
                     if proto {
-                        self.stats.proto_sent += 1;
-                        self.stats.proto_payload += elems;
+                        stats.proto_sent += 1;
+                        stats.proto_payload += elems;
                     } else {
-                        self.stats.sent += 1;
-                        self.stats.payload += elems;
+                        stats.sent += 1;
+                        stats.payload += elems;
                     }
                 }
-                Err(e) => {
-                    let dropped = match e {
-                        TrySendError::Full(msg) | TrySendError::Disconnected(msg) => msg,
-                    };
-                    self.local_spares.push(dropped.mat);
+                Err(TrySendError::Full(msg)) => spares.push(msg.mat),
+                Err(TrySendError::Disconnected(msg)) => {
+                    link.alive = false;
+                    spares.push(msg.mat);
                 }
             }
         }
-        for link in &self.links {
+        for link in links.iter_mut().filter(|l| l.alive) {
             // Drain: keep only the freshest value from each neighbor.
             // Gossip receives never wait, so they never advance the
             // virtual clock — an async straggler only slows itself.
             let mut latest: Option<Mat> = None;
             while let Ok(msg) = link.rx.try_recv() {
                 if let Some(prev) = latest.take() {
-                    give_back(link, prev, &mut self.local_spares);
+                    give_back(link, prev, spares);
                 }
                 latest = Some(msg.mat);
             }
@@ -328,6 +504,19 @@ impl NodeCtx {
     /// Current round index (number of `exchange`/`exchange_async` calls).
     pub fn rounds_done(&self) -> u64 {
         self.round
+    }
+
+    /// Ranks of the neighbors whose links are still up. A peer that hung
+    /// up or stayed silent past the patience budget is removed from this
+    /// set; planned (FaultPlan) downtime does **not** remove a link —
+    /// the plan's verdicts are transient and the peer may rejoin.
+    pub fn live_neighbors(&self) -> Vec<usize> {
+        self.links.iter().filter(|l| l.alive).map(|l| l.peer).collect()
+    }
+
+    /// The installed fault plan, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault.as_deref()
     }
 
     /// True in [`ClockMode::Virtual`] — bodies use this to skip real
@@ -390,6 +579,8 @@ impl<R> MpiRun<R> {
 struct NodeDone<R> {
     rank: usize,
     out: Option<R>,
+    /// Rendered panic payload when the node body panicked.
+    err: Option<String>,
     stats: NodeStats,
 }
 
@@ -402,7 +593,30 @@ where
     R: Send + 'static,
     F: Fn(&mut NodeCtx) -> R + Send + Sync + 'static,
 {
+    run_spmd_with_faults(graph, cfg, None, f)
+}
+
+/// [`run_spmd`] with a deterministic [`FaultPlan`] installed on every
+/// node. The plan's verdicts (node downtime, partitions, per-message
+/// loss) are pure functions of `(plan, round, from, to)`, so every node
+/// realizes the identical fault sequence without coordination and the
+/// run is bit-reproducible for any pool size. A trivial plan (no
+/// events) is dropped entirely, keeping the zero-allocation hot path.
+pub fn run_spmd_with_faults<R, F>(
+    graph: &Graph,
+    cfg: &MpiConfig,
+    plan: Option<Arc<FaultPlan>>,
+    f: F,
+) -> MpiRun<R>
+where
+    R: Send + 'static,
+    F: Fn(&mut NodeCtx) -> R + Send + Sync + 'static,
+{
     assert!(cfg.capacity >= 1, "MpiConfig.capacity must be >= 1");
+    let plan = plan.filter(|p| !p.is_trivial());
+    if let Some(p) = &plan {
+        p.validate(graph.n).expect("invalid fault plan");
+    }
     let n = graph.n;
     // Build the channel fabric: per directed edge, one data channel and
     // one buffer-return channel sized to the edge's full complement.
@@ -432,6 +646,7 @@ where
                 rx: fwd_rx[rank].remove(&j).expect("forward receiver"),
                 reclaim_tx: rec_tx[rank].remove(&j).expect("reclaim sender"),
                 spare_rx: rec_rx[rank].remove(&j).expect("reclaim receiver"),
+                alive: true,
             });
         }
         let deg = neighbors.len();
@@ -441,8 +656,10 @@ where
             neighbors,
             links,
             straggler: cfg.straggler,
+            fault: plan.clone(),
             clock: cfg.clock,
             capacity: cfg.capacity,
+            peer_budget: cfg.peer_budget,
             round: 0,
             vclock_ns: 0,
             inbox: Vec::with_capacity(deg),
@@ -461,13 +678,27 @@ where
         jobs.push(Box::new(move || {
             let rank = ctx.rank;
             // Catch panics so the pool worker survives; a panicked node
-            // drops its channel ends, peers fail their next blocking
-            // call, and every node still reports in.
-            let out =
-                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut ctx))).ok();
+            // drops its channel ends, peers see the hang-up, remove the
+            // link, and continue — every node still reports in. The
+            // panic payload is captured (not discarded) so the original
+            // message can be re-raised with the node's rank attached.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut ctx)));
             let stats = ctx.stats();
             drop(ctx); // unblock peers before reporting
-            let _ = res_tx.send(NodeDone { rank, out, stats });
+            let (out, err) = match outcome {
+                Ok(r) => (Some(r), None),
+                Err(payload) => {
+                    let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                        (*s).to_string()
+                    } else if let Some(s) = payload.downcast_ref::<String>() {
+                        s.clone()
+                    } else {
+                        "non-string panic payload".to_string()
+                    };
+                    (None, Some(msg))
+                }
+            };
+            let _ = res_tx.send(NodeDone { rank, out, err, stats });
         }));
     }
     drop(res_tx);
@@ -480,7 +711,7 @@ where
     let mut counters = P2pCounters::new(n);
     let mut proto = P2pCounters::new(n);
     let mut vmax = 0u64;
-    let mut panicked = false;
+    let mut failures: Vec<(usize, String)> = Vec::new();
     for _ in 0..n {
         let done = res_rx.recv().expect("spmd job lost");
         counters.sent[done.rank] = done.stats.sent;
@@ -490,11 +721,20 @@ where
         vmax = vmax.max(done.stats.vclock_ns);
         match done.out {
             Some(r) => results[done.rank] = Some(r),
-            None => panicked = true,
+            None => {
+                failures.push((done.rank, done.err.unwrap_or_else(|| "unknown panic".into())))
+            }
         }
     }
-    if panicked {
-        panic!("spmd node body panicked");
+    if !failures.is_empty() {
+        // Re-raise the original panic message(s), rank-attributed.
+        failures.sort();
+        let detail = failures
+            .iter()
+            .map(|(r, m)| format!("node {r}: {m}"))
+            .collect::<Vec<_>>()
+            .join("; ");
+        panic!("spmd node body panicked — {detail}");
     }
     MpiRun {
         results: results.into_iter().map(|o| o.unwrap()).collect(),
@@ -726,6 +966,173 @@ mod tests {
                 ctx.rounds_done()
             });
             assert!(run.results.iter().all(|&r| r == 8), "{}", g.kind);
+        }
+    }
+
+    #[test]
+    fn take_buf_mints_at_message_shape() {
+        // Satellite regression: with both recycle sources dry the minted
+        // buffer must carry the link's message shape, not 0×0 (which
+        // deferred a hidden allocation to every copy into it).
+        let (tx, _keep_rx) = mpsc::sync_channel::<Msg>(1);
+        let (_keep_tx, rx) = mpsc::sync_channel::<Msg>(1);
+        let (reclaim_tx, _keep_rrx) = mpsc::sync_channel::<Mat>(1);
+        let (spare_tx, spare_rx) = mpsc::sync_channel::<Mat>(1);
+        let link = Link { peer: 1, tx, rx, reclaim_tx, spare_rx, alive: true };
+        let mut local = Vec::new();
+        let b = take_buf(&link, &mut local, 3, 2);
+        assert_eq!((b.rows, b.cols), (3, 2));
+        assert_eq!(b.data.len(), 6);
+        // A hung-up reclaim channel degrades to minting too, not a panic.
+        drop(spare_tx);
+        let b2 = take_buf(&link, &mut local, 4, 5);
+        assert_eq!((b2.rows, b2.cols), (4, 5));
+        // The local pool still takes precedence over minting.
+        local.push(Mat::zeros(7, 7));
+        let b3 = take_buf(&link, &mut local, 4, 5);
+        assert_eq!((b3.rows, b3.cols), (7, 7));
+    }
+
+    #[test]
+    fn panic_payload_and_rank_are_propagated() {
+        let g = Graph::ring(4);
+        let result = std::panic::catch_unwind(|| {
+            run_spmd(&g, &MpiConfig::default(), |ctx| {
+                let m = Mat::eye(2);
+                ctx.exchange(&m);
+                if ctx.rank == 2 {
+                    panic!("deliberate fault at node {}", ctx.rank);
+                }
+                for _ in 0..3 {
+                    ctx.exchange(&m);
+                }
+            })
+        });
+        let payload = result.expect_err("run_spmd must re-raise the node panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .expect("payload renders as a string");
+        assert!(msg.contains("deliberate fault at node 2"), "original message kept: {msg}");
+        assert!(msg.contains("node 2"), "rank attributed: {msg}");
+    }
+
+    #[test]
+    fn hung_up_peer_is_removed_instead_of_panicking() {
+        // Node 0 exits after one exchange; the others keep exchanging.
+        // Its neighbors see the hang-up, drop the link from the active
+        // set, and finish over the surviving path — no panic.
+        let g = Graph::ring(4);
+        let run = run_spmd(&g, &MpiConfig::default(), |ctx| {
+            let m = Mat::eye(2);
+            ctx.exchange(&m);
+            if ctx.rank != 0 {
+                for _ in 0..4 {
+                    ctx.exchange(&m);
+                }
+            }
+            ctx.live_neighbors()
+        });
+        assert_eq!(run.results[0], vec![1, 3]);
+        assert!(!run.results[1].contains(&0));
+        assert!(!run.results[3].contains(&0));
+        assert!(run.results[1].contains(&2));
+        assert_eq!(run.results[2], vec![1, 3]);
+    }
+
+    #[test]
+    fn fault_plan_gates_exchange_symmetrically() {
+        use crate::fault::FaultPlan;
+        let g = Graph::complete(5);
+        let plan = Arc::new(FaultPlan::none().with_node_down(3, 2));
+        let rounds = 6u64;
+        let run = run_spmd_with_faults(&g, &MpiConfig::default(), Some(plan), move |ctx| {
+            let m = Mat::eye(2);
+            let mut delivered = Vec::new();
+            for _ in 0..rounds {
+                delivered.push(ctx.exchange(&m).len());
+            }
+            delivered
+        });
+        // Rounds 0–1: everyone hears 4 peers. From round 2 node 3 is
+        // down: it hears nothing and the survivors hear 3.
+        for i in 0..5 {
+            assert_eq!(run.results[i][0], 4, "node {i}");
+            assert_eq!(run.results[i][1], 4, "node {i}");
+            for r in 2..rounds as usize {
+                let want = if i == 3 { 0 } else { 3 };
+                assert_eq!(run.results[i][r], want, "node {i} round {r}");
+            }
+        }
+        // A down node transmits nothing; survivors stop paying for the
+        // dead link.
+        assert_eq!(run.counters.sent[3], 2 * 4);
+        for i in 0..5 {
+            if i != 3 {
+                assert_eq!(run.counters.sent[i], 2 * 4 + (rounds - 2) * 3);
+            }
+        }
+    }
+
+    #[test]
+    fn mpi_faulty_consensus_matches_simulator() {
+        use crate::consensus::weights::active_local_degree_weights;
+        use crate::fault::FaultPlan;
+        use crate::network::sim::SyncNetwork;
+        use crate::util::rng::Rng;
+
+        let mut rng = Rng::new(11);
+        let g = Graph::complete(6);
+        let plan = FaultPlan::none().with_loss(0.2, 99).with_node_churn(2, 5, 12);
+        let z0: Vec<Mat> = (0..6).map(|_| Mat::gauss(3, 2, &mut rng)).collect();
+        let rounds = 20usize;
+
+        // Simulator path: plan-driven faulty consensus.
+        let mut net = SyncNetwork::new(g.clone());
+        net.install_fault_plan(plan.clone()).unwrap();
+        let mut zs = z0.clone();
+        net.consensus(&mut zs, rounds);
+
+        // Pooled MPI path: every node mixes its own row with the active
+        // weights, substituting its own value for lost messages — the
+        // same self-substitution rule the simulator realizes.
+        let z0_arc = Arc::new(z0);
+        let plan_arc = Arc::new(plan);
+        let g_arc = Arc::new(g.clone());
+        let run = run_spmd_with_faults(
+            &g,
+            &MpiConfig::default(),
+            Some(Arc::clone(&plan_arc)),
+            move |ctx| {
+                let i = ctx.rank;
+                let mut z = z0_arc[i].clone();
+                for r in 0..rounds as u64 {
+                    let alive: Vec<bool> =
+                        (0..ctx.n).map(|v| !plan_arc.node_down(v, r)).collect();
+                    let wm = active_local_degree_weights(&g_arc, &alive);
+                    let inbox: Vec<(usize, Mat)> =
+                        ctx.exchange(&z).iter().map(|(j, mat)| (*j, mat.clone())).collect();
+                    if !alive[i] {
+                        continue; // down: estimate frozen this round
+                    }
+                    let mut nz = z.scale(wm.w.get(i, i));
+                    for &j in &ctx.neighbors {
+                        let w = wm.w.get(i, j);
+                        let src = inbox
+                            .iter()
+                            .find(|(p, _)| *p == j)
+                            .map(|(_, mat)| mat)
+                            .unwrap_or(&z);
+                        nz.axpy(w, src);
+                    }
+                    z = nz;
+                }
+                z
+            },
+        );
+        for (a, b) in run.results.iter().zip(zs.iter()) {
+            assert!(a.dist_fro(b) < 1e-12, "MPI and simulator disagree under faults");
         }
     }
 

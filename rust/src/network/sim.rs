@@ -21,8 +21,11 @@
 //! small networks still use every core. Results are bitwise identical
 //! for every thread count and either level (see `runtime::pool`).
 
-use crate::consensus::engine::consensus_rounds;
-use crate::consensus::weights::{local_degree_weights, WeightMatrix};
+use crate::consensus::engine::{consensus_rounds, faulty_consensus_rounds};
+use crate::consensus::weights::{
+    active_local_degree_weights, local_degree_weights, WeightMatrix,
+};
+use crate::fault::FaultPlan;
 use crate::graph::Graph;
 use crate::linalg::Mat;
 use crate::network::counters::P2pCounters;
@@ -44,6 +47,21 @@ pub fn default_threads() -> usize {
     DEFAULT_THREADS.load(Ordering::Relaxed)
 }
 
+/// Installed fault state on a [`SyncNetwork`]: the plan plus the global
+/// consensus-round stamp (the simulator's virtual clock) and the current
+/// membership epoch (alive mask + re-normalized active weights).
+#[derive(Clone, Debug)]
+pub struct FaultSession {
+    plan: FaultPlan,
+    round: u64,
+    alive: Vec<bool>,
+    awm: WeightMatrix,
+    /// Double buffer for the push-sum `e₁` mass channel that replaces
+    /// the static `W^{T_c} e₁` rescale under time-varying mixing.
+    v: Vec<f64>,
+    v_next: Vec<f64>,
+}
+
 /// A synchronous network: topology + weights + exact message accounting.
 pub struct SyncNetwork {
     pub graph: Graph,
@@ -55,6 +73,9 @@ pub struct SyncNetwork {
     /// `W^t e₁` rescaling vectors keyed by round count (S-DOT reuses one
     /// entry; SA-DOT at most one per distinct `T_c(t)`).
     rescale_cache: HashMap<usize, Vec<f64>>,
+    /// `Some` routes consensus through the fault-tolerant engine path;
+    /// `None` keeps the zero-allocation fault-free path byte-identical.
+    fault: Option<FaultSession>,
 }
 
 impl SyncNetwork {
@@ -98,7 +119,61 @@ impl SyncNetwork {
             pool: NodePool::with_split(threads, split_rows),
             ws: ConsensusWorkspace::new(),
             rescale_cache: HashMap::new(),
+            fault: None,
         }
+    }
+
+    /// Install a [`FaultPlan`]: consensus now runs the fault-tolerant
+    /// engine path (membership re-normalization, loss-tolerant mixing,
+    /// realized-mixing rescale). A trivial plan uninstalls the session
+    /// so the fault-free zero-allocation path stays in force. Like
+    /// `--qr` / `--simd fma`, the plan is a result-affecting policy.
+    pub fn install_fault_plan(&mut self, plan: FaultPlan) -> Result<(), String> {
+        plan.validate(self.n())?;
+        if plan.is_trivial() {
+            self.fault = None;
+            return Ok(());
+        }
+        let n = self.n();
+        let alive = plan.alive_mask(n, 0);
+        let awm = active_local_degree_weights(&self.graph, &alive);
+        self.fault = Some(FaultSession {
+            plan,
+            round: 0,
+            alive,
+            awm,
+            v: vec![0.0; n],
+            v_next: vec![0.0; n],
+        });
+        Ok(())
+    }
+
+    /// The installed plan, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault.as_ref().map(|f| &f.plan)
+    }
+
+    /// Global consensus-round stamp of the fault session (0 without one).
+    pub fn fault_round(&self) -> u64 {
+        self.fault.as_ref().map(|f| f.round).unwrap_or(0)
+    }
+
+    /// Restore the consensus-round stamp (checkpoint resume). Membership
+    /// and active weights are re-derived at the restored round so fault
+    /// predicates line up exactly with the uninterrupted run.
+    pub fn set_fault_round(&mut self, round: u64) {
+        let graph = &self.graph;
+        if let Some(fs) = self.fault.as_mut() {
+            fs.round = round;
+            fs.plan.fill_alive_mask(round, &mut fs.alive);
+            fs.awm = active_local_degree_weights(graph, &fs.alive);
+        }
+    }
+
+    /// Current alive mask (`None` without a fault session). Steppers use
+    /// it to mask dead nodes out of error metrics.
+    pub fn fault_alive(&self) -> Option<&[bool]> {
+        self.fault.as_ref().map(|f| f.alive.as_slice())
     }
 
     pub fn n(&self) -> usize {
@@ -118,6 +193,10 @@ impl SyncNetwork {
 
     /// Run `rounds` of average consensus in place over per-node matrices.
     pub fn consensus(&mut self, z: &mut Vec<Mat>, rounds: usize) {
+        if self.fault.is_some() {
+            self.consensus_faulty(z, rounds, false);
+            return;
+        }
         self.ws.ensure_mats(z);
         consensus_rounds(
             &self.graph,
@@ -133,9 +212,67 @@ impl SyncNetwork {
     }
 
     /// Consensus then rescale to a **sum** estimate (Alg. 1 steps 6–11).
+    ///
+    /// Under an installed fault plan the rescale tracks the *realized*
+    /// time-varying mixing product: an `e₁` mass channel rides along
+    /// every message under identical fault verdicts (so each message
+    /// carries one extra scalar, which the payload counters reflect) and
+    /// replaces the static `W^{T_c} e₁` divisor.
     pub fn consensus_sum(&mut self, z: &mut Vec<Mat>, rounds: usize) {
+        if self.fault.is_some() {
+            self.consensus_faulty(z, rounds, true);
+            return;
+        }
         self.consensus(z, rounds);
         self.rescale_to_sum_cached(z, rounds);
+    }
+
+    /// The fault-tolerant consensus path (see `engine::faulty_consensus_rounds`).
+    fn consensus_faulty(&mut self, z: &mut Vec<Mat>, rounds: usize, rescale: bool) {
+        let n = self.n();
+        assert_eq!(z.len(), n);
+        self.ws.ensure_mats(z);
+        let fs = self.fault.as_mut().unwrap();
+        let scalar = if rescale {
+            for x in fs.v.iter_mut() {
+                *x = 0.0;
+            }
+            fs.v[0] = 1.0;
+            for x in fs.v_next.iter_mut() {
+                *x = 0.0;
+            }
+            Some((&mut fs.v, &mut fs.v_next))
+        } else {
+            None
+        };
+        fs.round = faulty_consensus_rounds(
+            &self.graph,
+            &fs.plan,
+            fs.round,
+            &mut fs.alive,
+            &mut fs.awm,
+            z,
+            &mut self.ws.next,
+            scalar,
+            rounds,
+            &mut self.counters,
+            &self.pool,
+            &mut self.ws.mat_views,
+        );
+        if rescale {
+            let n_alive = fs.alive.iter().filter(|&&a| a).count().max(1) as f64;
+            for (i, m) in z.iter_mut().enumerate() {
+                if !fs.alive[i] {
+                    continue; // frozen estimate: nothing to rescale
+                }
+                let s = fs.v[i];
+                if s > 1e-9 {
+                    m.scale_inplace(1.0 / s);
+                } else {
+                    m.scale_inplace(n_alive);
+                }
+            }
+        }
     }
 
     /// Alg. 1 step 11 with a per-round-count cache of `W^{T_c} e₁`
@@ -207,6 +344,7 @@ impl Clone for SyncNetwork {
             pool: NodePool::with_split(self.threads, self.pool.split_rows()),
             ws: ConsensusWorkspace::new(),
             rescale_cache: self.rescale_cache.clone(),
+            fault: self.fault.clone(),
         }
     }
 }
@@ -341,6 +479,122 @@ mod tests {
         for (a, b) in z_engine.iter().zip(z_net.iter()) {
             assert_eq!(a.data, b.data);
         }
+    }
+
+    #[test]
+    fn trivial_fault_plan_uninstalls_and_keeps_hot_path() {
+        let g = Graph::ring(5);
+        let mut net = SyncNetwork::new(g);
+        net.install_fault_plan(FaultPlan::none()).unwrap();
+        assert!(net.fault_plan().is_none());
+        assert!(net.fault_alive().is_none());
+        assert_eq!(net.fault_round(), 0);
+    }
+
+    #[test]
+    fn fault_plan_is_validated_on_install() {
+        let g = Graph::ring(5);
+        let mut net = SyncNetwork::new(g);
+        assert!(net.install_fault_plan(FaultPlan::none().with_node_down(9, 0)).is_err());
+    }
+
+    #[test]
+    fn node_death_degrades_gracefully() {
+        let mut rng = Rng::new(6);
+        let g = Graph::complete(7);
+        let z0: Vec<Mat> = (0..7).map(|_| Mat::gauss(4, 2, &mut rng)).collect();
+        let mut net = SyncNetwork::new(g);
+        net.install_fault_plan(FaultPlan::none().with_node_down(2, 10)).unwrap();
+        let mut z = z0.clone();
+        net.consensus_sum(&mut z, 120);
+        assert_eq!(net.fault_round(), 120);
+        let alive = net.fault_alive().unwrap();
+        assert!(!alive[2]);
+        for (i, zi) in z.iter().enumerate() {
+            assert!(zi.is_finite(), "node {i}");
+        }
+        // Node 2 sent only while alive: 10 rounds × 6 neighbors.
+        assert_eq!(net.counters.sent[2], 60);
+        // Survivors' sum estimate approximates the survivors' sum (the
+        // dead node's mass partially leaked in the 10 pre-death rounds,
+        // so use a loose relative tolerance).
+        let mut total = Mat::zeros(4, 2);
+        for (i, m) in z0.iter().enumerate() {
+            if i != 2 {
+                total.axpy(1.0, m);
+            }
+        }
+        for (i, zi) in z.iter().enumerate() {
+            if i != 2 {
+                assert!(
+                    zi.dist_fro(&total) < 0.5 * total.fro_norm().max(1.0),
+                    "survivor {i} too far from survivors' sum"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn faulty_consensus_bitwise_deterministic_across_threads() {
+        let mut rng = Rng::new(7);
+        let g = Graph::erdos_renyi(10, 0.5, &mut rng);
+        let z0: Vec<Mat> = (0..10).map(|_| Mat::gauss(6, 3, &mut rng)).collect();
+        let plan = FaultPlan::none()
+            .with_loss(0.05, 123)
+            .with_node_churn(4, 8, 30)
+            .with_partition(15, 25, vec![0, 1, 2]);
+
+        let mut net1 = SyncNetwork::with_threads(g.clone(), 1);
+        net1.install_fault_plan(plan.clone()).unwrap();
+        let mut z1 = z0.clone();
+        net1.consensus_sum(&mut z1, 50);
+
+        let mut net4 = SyncNetwork::with_threads(g, 4);
+        net4.install_fault_plan(plan).unwrap();
+        let mut z4 = z0.clone();
+        net4.consensus_sum(&mut z4, 50);
+
+        for (a, b) in z1.iter().zip(z4.iter()) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "fault path must stay deterministic");
+            }
+        }
+        assert_eq!(net1.counters.sent, net4.counters.sent);
+        assert_eq!(net1.counters.payload, net4.counters.payload);
+    }
+
+    #[test]
+    fn churn_rejoin_resumes_mixing_and_round_stamp_accumulates() {
+        let mut rng = Rng::new(8);
+        let g = Graph::complete(6);
+        let z0: Vec<Mat> = (0..6).map(|_| Mat::gauss(3, 2, &mut rng)).collect();
+        let mut net = SyncNetwork::new(g);
+        net.install_fault_plan(FaultPlan::none().with_node_churn(1, 5, 40)).unwrap();
+        let mut z = z0.clone();
+        net.consensus(&mut z, 20);
+        assert!(!net.fault_alive().unwrap()[1], "down inside [5, 40)");
+        net.consensus(&mut z, 30);
+        assert_eq!(net.fault_round(), 50);
+        assert!(net.fault_alive().unwrap()[1], "rejoined at 40");
+        // After rejoining, the node mixes again: long consensus drags it
+        // to the common limit.
+        net.consensus(&mut z, 300);
+        for zi in &z[1..] {
+            assert!(z[0].dist_fro(zi) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn set_fault_round_realigns_membership() {
+        let g = Graph::ring(5);
+        let mut net = SyncNetwork::new(g);
+        net.install_fault_plan(FaultPlan::none().with_node_churn(3, 10, 20)).unwrap();
+        assert!(net.fault_alive().unwrap()[3]);
+        net.set_fault_round(15);
+        assert!(!net.fault_alive().unwrap()[3]);
+        assert_eq!(net.fault_round(), 15);
+        net.set_fault_round(25);
+        assert!(net.fault_alive().unwrap()[3]);
     }
 
     #[test]

@@ -145,7 +145,11 @@ pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
 /// values are a hard error). `BENCH_SIMD=scalar|auto|fma` selects the
 /// inner-product micro-kernels (same spellings as `--simd`; `auto` is
 /// bitwise identical to `scalar`, `fma` changes bits by design — hold
-/// it fixed across ledger comparisons).
+/// it fixed across ledger comparisons). `BENCH_FAULT_PLAN=plan.json`
+/// installs a FaultPlan on fault-aware runners (a result-affecting,
+/// ledger-pinned policy like `BENCH_QR`/`BENCH_SIMD`);
+/// `BENCH_CHECKPOINT_EVERY=N` and `BENCH_RESUME=ck.json` mirror
+/// `--checkpoint-every` / `--resume`.
 pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
     let scale = std::env::var("BENCH_SCALE")
         .ok()
@@ -179,6 +183,14 @@ pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
     // error on unknown spellings), so benches and the test suite share
     // one parser for the knob.
     let simd = crate::linalg::simd::default_simd_policy();
+    let fault_plan = std::env::var("BENCH_FAULT_PLAN").ok().map(std::path::PathBuf::from);
+    let checkpoint_every = match std::env::var("BENCH_CHECKPOINT_EVERY").ok() {
+        None => 0,
+        Some(s) => s
+            .parse()
+            .unwrap_or_else(|_| panic!("BENCH_CHECKPOINT_EVERY must be a usize, got '{s}'")),
+    };
+    let resume = std::env::var("BENCH_RESUME").ok().map(std::path::PathBuf::from);
     crate::network::sim::set_default_threads(threads);
     crate::linalg::qr::set_default_qr_policy(qr);
     crate::linalg::simd::set_default_simd_policy(simd);
@@ -192,6 +204,9 @@ pub fn bench_ctx(default_scale: f64) -> crate::experiments::ExpCtx {
         mpi_clock,
         qr,
         simd,
+        fault_plan,
+        checkpoint_every,
+        resume,
     }
 }
 

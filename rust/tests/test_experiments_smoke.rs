@@ -113,5 +113,5 @@ fn all_ids_run_is_exhaustive() {
     // error with "unknown id" for anything all_ids() lists). Uses the
     // cheapest possible scale; correctness checked by the other tests.
     let ids = all_ids();
-    assert_eq!(ids.len(), 23);
+    assert_eq!(ids.len(), 24);
 }

@@ -1,0 +1,112 @@
+//! End-to-end fault-injection tests: the `churn` experiment through the
+//! CLI flag layer (`--fault-plan`, `--checkpoint-every`, `--resume`),
+//! with the byte-identity contracts CI runs under both
+//! `BENCH_THREADS=1` and `BENCH_THREADS=4`.
+
+use dpsa::config::load_ctx;
+use dpsa::experiments::{env_threads, run};
+use dpsa::fault::FaultPlan;
+use dpsa::util::cli::Args;
+
+fn args(s: &[&str]) -> Args {
+    Args::parse(s.iter().map(|x| x.to_string()))
+}
+
+#[test]
+fn churn_experiment_saves_artifacts() {
+    let out = std::env::temp_dir().join("dpsa_churn_smoke");
+    let threads = env_threads().to_string();
+    let ctx = load_ctx(&args(&[
+        "--scale",
+        "0.02",
+        "--trials",
+        "1",
+        "--threads",
+        &threads,
+        "--out",
+        out.to_str().unwrap(),
+    ]))
+    .unwrap();
+    let tables = run("churn", &ctx).unwrap();
+    assert_eq!(tables[0].rows.len(), 9, "3 topologies × 3 loss rates");
+    assert!(out.join("churn").exists(), "churn did not save its table");
+}
+
+#[test]
+fn fault_plan_flag_is_bitwise_across_thread_budgets() {
+    // The acceptance scenario shape: scheduled node death plus 5% loss,
+    // loaded from a plan file exactly as `--fault-plan` would, must
+    // produce byte-identical tables at --threads 1 and 4.
+    let dir = std::env::temp_dir().join("dpsa_fault_plan_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let plan_path = dir.join("plan.json");
+    FaultPlan::none()
+        .with_loss(0.05, 7)
+        .with_node_churn(2, 20, 60)
+        .with_node_down(7, 90)
+        .save(&plan_path)
+        .unwrap();
+    let table_at = |threads: &str| {
+        let ctx = load_ctx(&args(&[
+            "--fault-plan",
+            plan_path.to_str().unwrap(),
+            "--threads",
+            threads,
+            "--scale",
+            "0.02",
+            "--trials",
+            "1",
+            "--out",
+            dir.join(format!("out_t{threads}")).to_str().unwrap(),
+        ]))
+        .unwrap();
+        run("churn", &ctx).unwrap()
+    };
+    let serial = table_at("1");
+    let parallel = table_at("4");
+    assert_eq!(
+        serial[0].rows, parallel[0].rows,
+        "a fixed fault plan must reproduce bit-exactly at every --threads"
+    );
+    // Survivors: node 2 rejoined, node 7 stayed down.
+    for row in &serial[0].rows {
+        assert_eq!(row[4], "19", "{row:?}");
+    }
+    std::fs::remove_file(&plan_path).ok();
+}
+
+#[test]
+fn checkpoint_flags_kill_resume_end_to_end() {
+    let dir = std::env::temp_dir().join("dpsa_ck_flags_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("out");
+    let threads = env_threads().to_string();
+    let base = [
+        "--scale",
+        "0.04",
+        "--trials",
+        "1",
+        "--threads",
+        threads.as_str(),
+        "--out",
+        out.to_str().unwrap(),
+    ];
+    // Uninterrupted run, snapshotting as --checkpoint-every would.
+    let mut full_args: Vec<&str> = base.to_vec();
+    full_args.extend_from_slice(&["--checkpoint-every", "2"]);
+    let ctx = load_ctx(&args(&full_args)).unwrap();
+    let full = run("churn", &ctx).unwrap();
+    let ck = out.join("churn_checkpoint.json");
+    assert!(ck.exists(), "--checkpoint-every left no snapshot");
+    // "Kill" happened after the last snapshot: resume from it.
+    let mut resume_args: Vec<&str> = base.to_vec();
+    let ck_str = ck.to_str().unwrap().to_string();
+    resume_args.extend_from_slice(&["--resume", &ck_str]);
+    let resumed_ctx = load_ctx(&args(&resume_args)).unwrap();
+    let resumed = run("churn", &resumed_ctx).unwrap();
+    assert_eq!(
+        full[0].rows, resumed[0].rows,
+        "killed-and-resumed cell must be byte-identical (incl. state digest column)"
+    );
+    std::fs::remove_file(&ck).ok();
+}
