@@ -38,15 +38,15 @@ fn mix_node_rows(
     dst_rows: &mut [f64],
 ) {
     let cols = src[i].cols;
-    let seg = lo * cols..hi * cols;
+    let (s0, s1) = (lo * cols, hi * cols);
     let wii = wm.w.get(i, i);
-    dst_rows.copy_from_slice(&src[i].data[seg.clone()]);
+    dst_rows.copy_from_slice(&src[i].data[s0..s1]);
     for v in dst_rows.iter_mut() {
         *v *= wii;
     }
     for &j in &g.adj[i] {
         let w = wm.w.get(i, j);
-        for (d, &s) in dst_rows.iter_mut().zip(src[j].data[seg.clone()].iter()) {
+        for (d, &s) in dst_rows.iter_mut().zip(src[j].data[s0..s1].iter()) {
             *d += w * s;
         }
     }
@@ -109,6 +109,8 @@ pub fn consensus_rounds(
                         let d = unsafe { dst.rows_mut(i, lo, hi) };
                         mix_node_rows(g, wm, src, i, lo, hi, d);
                         if lo == 0 {
+                            // SAFETY: slot i is written only by the task
+                            // owning the first rows of node i.
                             unsafe { *wd.get_mut(i) = mix_scalar(g, wm, ws, i) };
                         }
                     });
@@ -160,8 +162,8 @@ fn mix_node_rows_faulty(
     dst_rows: &mut [f64],
 ) {
     let cols = src[i].cols;
-    let seg = lo * cols..hi * cols;
-    dst_rows.copy_from_slice(&src[i].data[seg.clone()]);
+    let (s0, s1) = (lo * cols, hi * cols);
+    dst_rows.copy_from_slice(&src[i].data[s0..s1]);
     if !alive[i] {
         return;
     }
@@ -179,7 +181,7 @@ fn mix_node_rows_faulty(
         } else {
             j
         };
-        for (d, &s) in dst_rows.iter_mut().zip(src[from].data[seg.clone()].iter()) {
+        for (d, &s) in dst_rows.iter_mut().zip(src[from].data[s0..s1].iter()) {
             *d += w * s;
         }
     }
@@ -277,6 +279,8 @@ pub fn faulty_consensus_rounds(
                         let d = unsafe { dst.rows_mut(i, lo, hi) };
                         mix_node_rows_faulty(g, awm, plan, round, alive, src, i, lo, hi, d);
                         if lo == 0 {
+                            // SAFETY: slot i is written only by the task
+                            // owning the first rows of node i.
                             unsafe {
                                 *wd.get_mut(i) =
                                     mix_scalar_faulty(g, awm, plan, round, alive, ws, i)

@@ -112,8 +112,9 @@ pub fn run_sdot_mpi_async(
         let d = setting.d();
         let r = setting.q_init.cols;
         let mut q = setting.q_init.clone();
-        // Freshest phase-matching value seen from each neighbor.
-        let mut cache: std::collections::HashMap<usize, Mat> = Default::default();
+        // Freshest phase-matching value seen from each neighbor, indexed
+        // by rank (deterministic: no hasher-seeded map traversal).
+        let mut cache: Vec<Option<Mat>> = vec![None; ctx.n];
         // Messages are tagged with the sender's outer-iteration index in an
         // extra appended row, so mixing never crosses OI phases (a node
         // still mid-phase-t ignores phase-(t±1) traffic).
@@ -127,11 +128,14 @@ pub fn run_sdot_mpi_async(
             let t = m.get(d, 0) as usize;
             (t, Mat::from_vec(d, r, m.data[..d * r].to_vec()))
         };
-        // Neighbor phase tracking for the bounded-staleness pacing.
-        let mut neighbor_phase: std::collections::HashMap<usize, usize> = Default::default();
+        // Neighbor phase tracking for the bounded-staleness pacing,
+        // indexed by rank (phase 0 = nothing heard yet).
+        let mut neighbor_phase: Vec<usize> = vec![0; ctx.n];
         for t in 1..=t_o {
             let mut z = setting.covs[i].apply(&q);
-            cache.clear();
+            for slot in cache.iter_mut() {
+                *slot = None;
+            }
             let rounds = schedule.rounds_at(t);
             // Phase boundary: announce our phase, then wait (bounded) until
             // every neighbor has reached it. This is the only blocking
@@ -139,9 +143,9 @@ pub fn run_sdot_mpi_async(
             // costs one delay per OUTER iteration instead of per round.
             for &(j, ref raw) in ctx.exchange_async(&tag(&z, t)) {
                 let (phase, mj) = untag(raw);
-                neighbor_phase.insert(j, phase);
+                neighbor_phase[j] = phase;
                 if phase == t {
-                    cache.insert(j, mj);
+                    cache[j] = Some(mj);
                 }
             }
             // Poll-all + keepalive-all: bounded buffers can drop phase
@@ -152,20 +156,17 @@ pub fn run_sdot_mpi_async(
             // protocol chatter (`pace_poll`), not algorithm traffic.
             let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
             loop {
-                let pending = ctx
-                    .neighbors
-                    .iter()
-                    .any(|j| neighbor_phase.get(j).copied().unwrap_or(0) < t);
+                let pending = ctx.neighbors.iter().any(|&j| neighbor_phase[j] < t);
                 if !pending || std::time::Instant::now() >= deadline {
                     break;
                 }
                 for &(j, ref raw) in ctx.pace_poll(&tag(&z, t)) {
                     let (phase, mj) = untag(raw);
-                    if phase >= neighbor_phase.get(&j).copied().unwrap_or(0) {
-                        neighbor_phase.insert(j, phase);
+                    if phase >= neighbor_phase[j] {
+                        neighbor_phase[j] = phase;
                     }
                     if phase == t {
-                        cache.insert(j, mj);
+                        cache[j] = Some(mj);
                     }
                 }
                 if ctx.is_virtual() {
@@ -179,16 +180,16 @@ pub fn run_sdot_mpi_async(
             for _ in 0..rounds {
                 for &(j, ref raw) in ctx.exchange_async(&tag(&z, t)) {
                     let (phase, mj) = untag(raw);
-                    neighbor_phase.insert(j, phase);
+                    neighbor_phase[j] = phase;
                     if phase == t {
-                        cache.insert(j, mj);
+                        cache[j] = Some(mj);
                     }
                 }
                 let mut nz = z.scale(wm.w.get(i, i));
                 for &j in &ctx.neighbors {
                     // Stale-tolerant mixing: the last same-phase value, or
                     // our own (w_ij mass stays local until j catches up).
-                    match cache.get(&j) {
+                    match cache[j].as_ref() {
                         Some(mj) => nz.axpy(wm.w.get(i, j), mj),
                         None => nz.axpy(wm.w.get(i, j), &z),
                     }

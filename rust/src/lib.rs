@@ -8,6 +8,12 @@
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for the
 //! paper-vs-measured results.
+//!
+//! Every `unsafe` operation must sit inside an explicit block with a
+//! `// SAFETY:` comment; `cargo run -p xtask -- lint` audits this
+//! (ROADMAP "Static invariants") and inventories all sites.
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(unused_unsafe)]
 pub mod consensus;
 pub mod fault;
 pub mod graph;

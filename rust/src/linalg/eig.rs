@@ -78,7 +78,9 @@ pub fn sym_eig(a: &Mat) -> (Vec<f64>, Mat) {
 
     // Extract and sort descending.
     let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
-    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // total_cmp: NaN-total ordering — the sort cannot panic or reorder
+    // nondeterministically if an eigenvalue ever comes back NaN.
+    pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
     let eigvals: Vec<f64> = pairs.iter().map(|p| p.0).collect();
     let mut vsorted = Mat::zeros(n, n);
     for (newj, &(_, oldj)) in pairs.iter().enumerate() {

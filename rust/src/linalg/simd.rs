@@ -242,10 +242,13 @@ pub(crate) fn dot4_t(a: &[f64], b: &[f64], k: usize, tier: SimdTier) -> f64 {
     debug_assert!(a.len() >= k && b.len() >= k);
     match tier {
         SimdTier::Scalar => dot4_scalar(a, b, k),
-        // Sound: `resolve` only yields Vector/Fma when the CPU has the
-        // corresponding features (and imp falls back to scalar on
-        // builds without std::arch paths).
+        // SAFETY: `resolve` only yields Vector when the CPU reports the
+        // required features (AVX2 / NEON), and the debug_assert above
+        // upholds the length contract; imp is the scalar fallback on
+        // builds without std::arch paths.
         SimdTier::Vector => unsafe { imp::dot4_vec(a, b, k) },
+        // SAFETY: `resolve` only yields Fma when the CPU reports FMA
+        // support; same length contract as the Vector arm.
         SimdTier::Fma => unsafe { imp::dot4_fma(a, b, k) },
     }
 }
@@ -289,7 +292,12 @@ pub(crate) fn microkernel_8x4_t(
     debug_assert!(pa.len() >= MR * kb && pb.len() >= NR * kb);
     match tier {
         SimdTier::Scalar => microkernel_8x4_scalar(pa, pb, kb),
+        // SAFETY: `resolve` only yields Vector when the CPU reports the
+        // required features, and the debug_assert above upholds the
+        // packed-panel length contract.
         SimdTier::Vector => unsafe { imp::microkernel_8x4_vec(pa, pb, kb) },
+        // SAFETY: `resolve` only yields Fma when the CPU reports FMA
+        // support; same panel-length contract as the Vector arm.
         SimdTier::Fma => unsafe { imp::microkernel_8x4_fma(pa, pb, kb) },
     }
 }
@@ -322,86 +330,126 @@ mod imp {
     use core::arch::x86_64::*;
 
     /// `(v0+v1) + (v2+v3)` — the scalar kernels' combine order.
+    ///
+    /// # Safety
+    /// Caller must run with AVX2 enabled (every caller in this module
+    /// carries `#[target_feature(enable = "avx2")]`).
     #[inline]
     unsafe fn hsum4(v: __m256d) -> f64 {
-        let lo = _mm256_castpd256_pd128(v); // [v0, v1]
-        let hi = _mm256_extractf128_pd::<1>(v); // [v2, v3]
-        let s01 = _mm_cvtsd_f64(_mm_add_sd(lo, _mm_unpackhi_pd(lo, lo)));
-        let s23 = _mm_cvtsd_f64(_mm_add_sd(hi, _mm_unpackhi_pd(hi, hi)));
-        s01 + s23
+        // SAFETY: fn contract — the caller's target_feature guarantees
+        // AVX2; these are register-only lane shuffles and adds.
+        unsafe {
+            let lo = _mm256_castpd256_pd128(v); // [v0, v1]
+            let hi = _mm256_extractf128_pd::<1>(v); // [v2, v3]
+            let s01 = _mm_cvtsd_f64(_mm_add_sd(lo, _mm_unpackhi_pd(lo, lo)));
+            let s23 = _mm_cvtsd_f64(_mm_add_sd(hi, _mm_unpackhi_pd(hi, hi)));
+            s01 + s23
+        }
     }
 
+    /// # Safety
+    /// Caller must ensure AVX2 is available and `a.len() >= k`,
+    /// `b.len() >= k` (the `dot4_t` dispatch guarantees both).
     #[target_feature(enable = "avx2")]
     pub unsafe fn dot4_vec(a: &[f64], b: &[f64], k: usize) -> f64 {
-        let (ap, bp) = (a.as_ptr(), b.as_ptr());
-        let chunks = k / 4;
-        let mut acc = _mm256_setzero_pd();
-        for c in 0..chunks {
-            let av = _mm256_loadu_pd(ap.add(c * 4));
-            let bv = _mm256_loadu_pd(bp.add(c * 4));
-            // mul then add: two roundings per lane, like the scalar
-            // `acc[i] += a*b` — bitwise identical lane by lane.
-            acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+        // SAFETY: fn contract — AVX2 is enabled and both slices hold at
+        // least `k` elements, so every `add(..)` offset stays in bounds.
+        unsafe {
+            let (ap, bp) = (a.as_ptr(), b.as_ptr());
+            let chunks = k / 4;
+            let mut acc = _mm256_setzero_pd();
+            for c in 0..chunks {
+                let av = _mm256_loadu_pd(ap.add(c * 4));
+                let bv = _mm256_loadu_pd(bp.add(c * 4));
+                // mul then add: two roundings per lane, like the scalar
+                // `acc[i] += a*b` — bitwise identical lane by lane.
+                acc = _mm256_add_pd(acc, _mm256_mul_pd(av, bv));
+            }
+            let mut s = hsum4(acc);
+            for o in chunks * 4..k {
+                s += *ap.add(o) * *bp.add(o);
+            }
+            s
         }
-        let mut s = hsum4(acc);
-        for o in chunks * 4..k {
-            s += *ap.add(o) * *bp.add(o);
-        }
-        s
     }
 
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available and `a.len() >= k`,
+    /// `b.len() >= k` (the `dot4_t` dispatch guarantees both).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn dot4_fma(a: &[f64], b: &[f64], k: usize) -> f64 {
-        let (ap, bp) = (a.as_ptr(), b.as_ptr());
-        let chunks = k / 4;
-        let mut acc = _mm256_setzero_pd();
-        for c in 0..chunks {
-            let av = _mm256_loadu_pd(ap.add(c * 4));
-            let bv = _mm256_loadu_pd(bp.add(c * 4));
-            acc = _mm256_fmadd_pd(av, bv, acc);
+        // SAFETY: fn contract — AVX2+FMA are enabled and both slices
+        // hold at least `k` elements, so every offset stays in bounds.
+        unsafe {
+            let (ap, bp) = (a.as_ptr(), b.as_ptr());
+            let chunks = k / 4;
+            let mut acc = _mm256_setzero_pd();
+            for c in 0..chunks {
+                let av = _mm256_loadu_pd(ap.add(c * 4));
+                let bv = _mm256_loadu_pd(bp.add(c * 4));
+                acc = _mm256_fmadd_pd(av, bv, acc);
+            }
+            let mut s = hsum4(acc);
+            for o in chunks * 4..k {
+                // Fused tail too (compiles to vfmadd inside this fn).
+                s = (*ap.add(o)).mul_add(*bp.add(o), s);
+            }
+            s
         }
-        let mut s = hsum4(acc);
-        for o in chunks * 4..k {
-            // Fused tail too (compiles to vfmadd inside this fn).
-            s = (*ap.add(o)).mul_add(*bp.add(o), s);
-        }
-        s
     }
 
+    /// # Safety
+    /// Caller must ensure AVX2 is available, `pa.len() >= MR*kb` and
+    /// `pb.len() >= NR*kb` (the `microkernel_8x4_t` dispatch guarantees
+    /// all three).
     #[target_feature(enable = "avx2")]
     pub unsafe fn microkernel_8x4_vec(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
-        let (ap, bp) = (pa.as_ptr(), pb.as_ptr());
-        let mut acc = [_mm256_setzero_pd(); MR];
-        for p in 0..kb {
-            let bv = _mm256_loadu_pd(bp.add(p * NR));
-            for (r, accr) in acc.iter_mut().enumerate() {
-                let av = _mm256_set1_pd(*ap.add(p * MR + r));
-                *accr = _mm256_add_pd(*accr, _mm256_mul_pd(av, bv));
+        // SAFETY: fn contract — AVX2 is enabled and the packed panels
+        // hold `MR*kb` / `NR*kb` values, so loads stay in bounds; the
+        // stores target the fixed-size `out` tile.
+        unsafe {
+            let (ap, bp) = (pa.as_ptr(), pb.as_ptr());
+            let mut acc = [_mm256_setzero_pd(); MR];
+            for p in 0..kb {
+                let bv = _mm256_loadu_pd(bp.add(p * NR));
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = _mm256_set1_pd(*ap.add(p * MR + r));
+                    *accr = _mm256_add_pd(*accr, _mm256_mul_pd(av, bv));
+                }
             }
+            let mut out = [[0.0f64; NR]; MR];
+            for (row, accr) in out.iter_mut().zip(acc.iter()) {
+                _mm256_storeu_pd(row.as_mut_ptr(), *accr);
+            }
+            out
         }
-        let mut out = [[0.0f64; NR]; MR];
-        for (row, accr) in out.iter_mut().zip(acc.iter()) {
-            _mm256_storeu_pd(row.as_mut_ptr(), *accr);
-        }
-        out
     }
 
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available, `pa.len() >= MR*kb`
+    /// and `pb.len() >= NR*kb` (the `microkernel_8x4_t` dispatch
+    /// guarantees all three).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn microkernel_8x4_fma(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
-        let (ap, bp) = (pa.as_ptr(), pb.as_ptr());
-        let mut acc = [_mm256_setzero_pd(); MR];
-        for p in 0..kb {
-            let bv = _mm256_loadu_pd(bp.add(p * NR));
-            for (r, accr) in acc.iter_mut().enumerate() {
-                let av = _mm256_set1_pd(*ap.add(p * MR + r));
-                *accr = _mm256_fmadd_pd(av, bv, *accr);
+        // SAFETY: fn contract — AVX2+FMA are enabled and the packed
+        // panels hold `MR*kb` / `NR*kb` values, so loads stay in bounds;
+        // the stores target the fixed-size `out` tile.
+        unsafe {
+            let (ap, bp) = (pa.as_ptr(), pb.as_ptr());
+            let mut acc = [_mm256_setzero_pd(); MR];
+            for p in 0..kb {
+                let bv = _mm256_loadu_pd(bp.add(p * NR));
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = _mm256_set1_pd(*ap.add(p * MR + r));
+                    *accr = _mm256_fmadd_pd(av, bv, *accr);
+                }
             }
+            let mut out = [[0.0f64; NR]; MR];
+            for (row, accr) in out.iter_mut().zip(acc.iter()) {
+                _mm256_storeu_pd(row.as_mut_ptr(), *accr);
+            }
+            out
         }
-        let mut out = [[0.0f64; NR]; MR];
-        for (row, accr) in out.iter_mut().zip(acc.iter()) {
-            _mm256_storeu_pd(row.as_mut_ptr(), *accr);
-        }
-        out
     }
 }
 
@@ -413,85 +461,122 @@ mod imp {
     use super::{MR, NR};
     use core::arch::aarch64::*;
 
+    /// # Safety
+    /// Caller must ensure NEON is available and `a.len() >= k`,
+    /// `b.len() >= k` (the `dot4_t` dispatch guarantees both).
     #[target_feature(enable = "neon")]
     pub unsafe fn dot4_vec(a: &[f64], b: &[f64], k: usize) -> f64 {
-        let (ap, bp) = (a.as_ptr(), b.as_ptr());
-        let chunks = k / 4;
-        let mut acc01 = vdupq_n_f64(0.0);
-        let mut acc23 = vdupq_n_f64(0.0);
-        for c in 0..chunks {
-            let o = c * 4;
-            acc01 = vaddq_f64(acc01, vmulq_f64(vld1q_f64(ap.add(o)), vld1q_f64(bp.add(o))));
-            acc23 = vaddq_f64(
-                acc23,
-                vmulq_f64(vld1q_f64(ap.add(o + 2)), vld1q_f64(bp.add(o + 2))),
-            );
+        // SAFETY: fn contract — NEON is enabled and both slices hold at
+        // least `k` elements, so every `add(..)` offset stays in bounds.
+        unsafe {
+            let (ap, bp) = (a.as_ptr(), b.as_ptr());
+            let chunks = k / 4;
+            let mut acc01 = vdupq_n_f64(0.0);
+            let mut acc23 = vdupq_n_f64(0.0);
+            for c in 0..chunks {
+                let o = c * 4;
+                acc01 = vaddq_f64(acc01, vmulq_f64(vld1q_f64(ap.add(o)), vld1q_f64(bp.add(o))));
+                acc23 = vaddq_f64(
+                    acc23,
+                    vmulq_f64(vld1q_f64(ap.add(o + 2)), vld1q_f64(bp.add(o + 2))),
+                );
+            }
+            let mut s = vaddvq_f64(acc01) + vaddvq_f64(acc23);
+            for o in chunks * 4..k {
+                s += *ap.add(o) * *bp.add(o);
+            }
+            s
         }
-        let mut s = vaddvq_f64(acc01) + vaddvq_f64(acc23);
-        for o in chunks * 4..k {
-            s += *ap.add(o) * *bp.add(o);
-        }
-        s
     }
 
+    /// # Safety
+    /// Caller must ensure NEON is available and `a.len() >= k`,
+    /// `b.len() >= k` (the `dot4_t` dispatch guarantees both).
     #[target_feature(enable = "neon")]
     pub unsafe fn dot4_fma(a: &[f64], b: &[f64], k: usize) -> f64 {
-        let (ap, bp) = (a.as_ptr(), b.as_ptr());
-        let chunks = k / 4;
-        let mut acc01 = vdupq_n_f64(0.0);
-        let mut acc23 = vdupq_n_f64(0.0);
-        for c in 0..chunks {
-            let o = c * 4;
-            acc01 = vfmaq_f64(acc01, vld1q_f64(ap.add(o)), vld1q_f64(bp.add(o)));
-            acc23 = vfmaq_f64(acc23, vld1q_f64(ap.add(o + 2)), vld1q_f64(bp.add(o + 2)));
+        // SAFETY: fn contract — NEON is enabled and both slices hold at
+        // least `k` elements, so every `add(..)` offset stays in bounds.
+        unsafe {
+            let (ap, bp) = (a.as_ptr(), b.as_ptr());
+            let chunks = k / 4;
+            let mut acc01 = vdupq_n_f64(0.0);
+            let mut acc23 = vdupq_n_f64(0.0);
+            for c in 0..chunks {
+                let o = c * 4;
+                acc01 = vfmaq_f64(acc01, vld1q_f64(ap.add(o)), vld1q_f64(bp.add(o)));
+                acc23 = vfmaq_f64(acc23, vld1q_f64(ap.add(o + 2)), vld1q_f64(bp.add(o + 2)));
+            }
+            let mut s = vaddvq_f64(acc01) + vaddvq_f64(acc23);
+            for o in chunks * 4..k {
+                s = (*ap.add(o)).mul_add(*bp.add(o), s);
+            }
+            s
         }
-        let mut s = vaddvq_f64(acc01) + vaddvq_f64(acc23);
-        for o in chunks * 4..k {
-            s = (*ap.add(o)).mul_add(*bp.add(o), s);
-        }
-        s
     }
 
+    /// # Safety
+    /// Caller must ensure NEON is available, `pa.len() >= MR*kb` and
+    /// `pb.len() >= NR*kb` (the `microkernel_8x4_t` dispatch guarantees
+    /// all three).
     #[target_feature(enable = "neon")]
     pub unsafe fn microkernel_8x4_vec(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
-        let (ap, bp) = (pa.as_ptr(), pb.as_ptr());
-        let mut acc = [[vdupq_n_f64(0.0); 2]; MR];
-        for p in 0..kb {
-            let b01 = vld1q_f64(bp.add(p * NR));
-            let b23 = vld1q_f64(bp.add(p * NR + 2));
-            for (r, accr) in acc.iter_mut().enumerate() {
-                let av = vdupq_n_f64(*ap.add(p * MR + r));
-                accr[0] = vaddq_f64(accr[0], vmulq_f64(av, b01));
-                accr[1] = vaddq_f64(accr[1], vmulq_f64(av, b23));
+        // SAFETY: fn contract — NEON is enabled and the packed panels
+        // hold `MR*kb` / `NR*kb` values, so loads stay in bounds.
+        unsafe {
+            let (ap, bp) = (pa.as_ptr(), pb.as_ptr());
+            let mut acc = [[vdupq_n_f64(0.0); 2]; MR];
+            for p in 0..kb {
+                let b01 = vld1q_f64(bp.add(p * NR));
+                let b23 = vld1q_f64(bp.add(p * NR + 2));
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = vdupq_n_f64(*ap.add(p * MR + r));
+                    accr[0] = vaddq_f64(accr[0], vmulq_f64(av, b01));
+                    accr[1] = vaddq_f64(accr[1], vmulq_f64(av, b23));
+                }
             }
+            store_acc(&acc)
         }
-        store_acc(&acc)
     }
 
+    /// # Safety
+    /// Caller must ensure NEON is available, `pa.len() >= MR*kb` and
+    /// `pb.len() >= NR*kb` (the `microkernel_8x4_t` dispatch guarantees
+    /// all three).
     #[target_feature(enable = "neon")]
     pub unsafe fn microkernel_8x4_fma(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
-        let (ap, bp) = (pa.as_ptr(), pb.as_ptr());
-        let mut acc = [[vdupq_n_f64(0.0); 2]; MR];
-        for p in 0..kb {
-            let b01 = vld1q_f64(bp.add(p * NR));
-            let b23 = vld1q_f64(bp.add(p * NR + 2));
-            for (r, accr) in acc.iter_mut().enumerate() {
-                let av = vdupq_n_f64(*ap.add(p * MR + r));
-                accr[0] = vfmaq_f64(accr[0], av, b01);
-                accr[1] = vfmaq_f64(accr[1], av, b23);
+        // SAFETY: fn contract — NEON is enabled and the packed panels
+        // hold `MR*kb` / `NR*kb` values, so loads stay in bounds.
+        unsafe {
+            let (ap, bp) = (pa.as_ptr(), pb.as_ptr());
+            let mut acc = [[vdupq_n_f64(0.0); 2]; MR];
+            for p in 0..kb {
+                let b01 = vld1q_f64(bp.add(p * NR));
+                let b23 = vld1q_f64(bp.add(p * NR + 2));
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = vdupq_n_f64(*ap.add(p * MR + r));
+                    accr[0] = vfmaq_f64(accr[0], av, b01);
+                    accr[1] = vfmaq_f64(accr[1], av, b23);
+                }
             }
+            store_acc(&acc)
         }
-        store_acc(&acc)
     }
 
+    /// # Safety
+    /// Caller must run with NEON enabled (every caller in this module
+    /// carries `#[target_feature(enable = "neon")]`).
     #[inline]
     unsafe fn store_acc(acc: &[[float64x2_t; 2]; MR]) -> [[f64; NR]; MR] {
-        let mut out = [[0.0f64; NR]; MR];
-        for (row, accr) in out.iter_mut().zip(acc.iter()) {
-            vst1q_f64(row.as_mut_ptr(), accr[0]);
-            vst1q_f64(row.as_mut_ptr().add(2), accr[1]);
+        // SAFETY: fn contract — NEON is enabled; each `vst1q_f64` writes
+        // two lanes into the fixed-size `out` tile at offsets 0 and 2.
+        unsafe {
+            let mut out = [[0.0f64; NR]; MR];
+            for (row, accr) in out.iter_mut().zip(acc.iter()) {
+                vst1q_f64(row.as_mut_ptr(), accr[0]);
+                vst1q_f64(row.as_mut_ptr().add(2), accr[1]);
+            }
+            out
         }
-        out
     }
 }
 
@@ -505,18 +590,30 @@ mod imp {
     //! so the dispatch above compiles unchanged.
     use super::{MR, NR};
 
+    /// # Safety
+    /// None required: delegates to the safe scalar kernel. `unsafe fn`
+    /// only to keep the dispatch signature uniform across builds.
     pub unsafe fn dot4_vec(a: &[f64], b: &[f64], k: usize) -> f64 {
         super::dot4_scalar(a, b, k)
     }
 
+    /// # Safety
+    /// None required: delegates to the safe scalar kernel. `unsafe fn`
+    /// only to keep the dispatch signature uniform across builds.
     pub unsafe fn dot4_fma(a: &[f64], b: &[f64], k: usize) -> f64 {
         super::dot4_scalar(a, b, k)
     }
 
+    /// # Safety
+    /// None required: delegates to the safe scalar kernel. `unsafe fn`
+    /// only to keep the dispatch signature uniform across builds.
     pub unsafe fn microkernel_8x4_vec(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
         super::microkernel_8x4_scalar(pa, pb, kb)
     }
 
+    /// # Safety
+    /// None required: delegates to the safe scalar kernel. `unsafe fn`
+    /// only to keep the dispatch signature uniform across builds.
     pub unsafe fn microkernel_8x4_fma(pa: &[f64], pb: &[f64], kb: usize) -> [[f64; NR]; MR] {
         super::microkernel_8x4_scalar(pa, pb, kb)
     }

@@ -53,7 +53,7 @@ use crate::graph::Graph;
 use crate::linalg::Mat;
 use crate::network::counters::P2pCounters;
 use crate::util::rng::SplitMix64;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -355,7 +355,8 @@ impl NodeCtx {
     /// sender pays for it in the P2P counters); a down node or severed
     /// edge sends nothing.
     fn exchange_faulty(&mut self, m: &Mat) -> &[(usize, Mat)] {
-        let plan = self.fault.clone().expect("fault plan installed");
+        // Arc bump (not a deep clone) to end the borrow of `self.fault`.
+        let plan = Arc::clone(self.fault.as_ref().expect("fault plan installed"));
         self.recycle_inbox();
         let r = self.round - 1; // straggle() already advanced the round
         let me = self.rank;
@@ -434,7 +435,8 @@ impl NodeCtx {
         // (a best-effort drain cannot skip a specific message): a down
         // node is silent, severed edges and lost messages are never put
         // on the wire. Verdicts use the round of the last `straggle`.
-        let plan = self.fault.clone();
+        // Arc bump (not a deep clone) to end the borrow of `self.fault`.
+        let plan = self.fault.as_ref().map(Arc::clone);
         let r = self.round.saturating_sub(1);
         let me = self.rank;
         if let Some(p) = &plan {
@@ -620,10 +622,16 @@ where
     let n = graph.n;
     // Build the channel fabric: per directed edge, one data channel and
     // one buffer-return channel sized to the edge's full complement.
-    let mut fwd_tx: Vec<HashMap<usize, SyncSender<Msg>>> = (0..n).map(|_| HashMap::new()).collect();
-    let mut fwd_rx: Vec<HashMap<usize, Receiver<Msg>>> = (0..n).map(|_| HashMap::new()).collect();
-    let mut rec_tx: Vec<HashMap<usize, SyncSender<Mat>>> = (0..n).map(|_| HashMap::new()).collect();
-    let mut rec_rx: Vec<HashMap<usize, Receiver<Mat>>> = (0..n).map(|_| HashMap::new()).collect();
+    // BTreeMap (not HashMap) so fabric assembly order never depends on
+    // the process's hasher seed (repolint: determinism).
+    let mut fwd_tx: Vec<BTreeMap<usize, SyncSender<Msg>>> =
+        (0..n).map(|_| BTreeMap::new()).collect();
+    let mut fwd_rx: Vec<BTreeMap<usize, Receiver<Msg>>> =
+        (0..n).map(|_| BTreeMap::new()).collect();
+    let mut rec_tx: Vec<BTreeMap<usize, SyncSender<Mat>>> =
+        (0..n).map(|_| BTreeMap::new()).collect();
+    let mut rec_rx: Vec<BTreeMap<usize, Receiver<Mat>>> =
+        (0..n).map(|_| BTreeMap::new()).collect();
     for i in 0..n {
         for &j in &graph.adj[i] {
             let (tx, rx) = mpsc::sync_channel::<Msg>(cfg.capacity);

@@ -31,7 +31,7 @@ use crate::linalg::Mat;
 use crate::network::counters::P2pCounters;
 use crate::runtime::pool::NodePool;
 use crate::runtime::workspace::ConsensusWorkspace;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Process-wide default thread count for newly created networks.
@@ -71,8 +71,9 @@ pub struct SyncNetwork {
     pool: NodePool,
     ws: ConsensusWorkspace,
     /// `W^t e₁` rescaling vectors keyed by round count (S-DOT reuses one
-    /// entry; SA-DOT at most one per distinct `T_c(t)`).
-    rescale_cache: HashMap<usize, Vec<f64>>,
+    /// entry; SA-DOT at most one per distinct `T_c(t)`). BTreeMap keeps
+    /// every traversal hasher-seed independent (repolint: determinism).
+    rescale_cache: BTreeMap<usize, Vec<f64>>,
     /// `Some` routes consensus through the fault-tolerant engine path;
     /// `None` keeps the zero-allocation fault-free path byte-identical.
     fault: Option<FaultSession>,
@@ -118,7 +119,7 @@ impl SyncNetwork {
             threads,
             pool: NodePool::with_split(threads, split_rows),
             ws: ConsensusWorkspace::new(),
-            rescale_cache: HashMap::new(),
+            rescale_cache: BTreeMap::new(),
             fault: None,
         }
     }

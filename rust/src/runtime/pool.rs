@@ -164,11 +164,11 @@ impl NodePool {
                 return;
             }
         };
+        let wide: &(dyn Fn(usize, usize) + Sync) = f;
         // SAFETY: the reference is only reachable through the job slot,
         // every worker finishes using it before decrementing `active`,
         // and we clear the slot (under the lock) before returning — so
         // the erased reference never outlives this call frame.
-        let wide: &(dyn Fn(usize, usize) + Sync) = f;
         let erased: &'static (dyn Fn(usize, usize) + Sync) =
             unsafe { std::mem::transmute(wide) };
         let workers = self.handles.len();
@@ -356,7 +356,13 @@ pub struct DisjointSlice<'a, T> {
     _marker: PhantomData<&'a mut [T]>,
 }
 
+// SAFETY: semantically a `&mut [T]` split into per-chunk disjoint parts;
+// moving it to another thread is sound exactly when `&mut [T]` is, i.e.
+// `T: Send`.
 unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
+// SAFETY: sharing `&DisjointSlice` across chunks is sound because
+// `get_mut`'s contract forbids two chunks from touching the same index —
+// every `&mut T` handed out is exclusive, so `T: Send` suffices.
 unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
 
 impl<'a, T> DisjointSlice<'a, T> {
@@ -380,7 +386,10 @@ impl<'a, T> DisjointSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get_mut(&self, i: usize) -> &mut T {
         assert!(i < self.len, "DisjointSlice index {i} out of bounds ({})", self.len);
-        &mut *self.ptr.add(i)
+        // SAFETY: `i` is in bounds (asserted above) and the fn contract
+        // makes this chunk the only one touching index `i`, so the
+        // produced `&mut T` is exclusive.
+        unsafe { &mut *self.ptr.add(i) }
     }
 }
 

@@ -157,6 +157,8 @@ pub struct DisjointMatRows<'a> {
 // `DisjointSlice` — each in-flight task touches only its own row range,
 // through per-matrix pointers captured under the unique borrow.
 unsafe impl Send for DisjointMatRows<'_> {}
+// SAFETY: as above — `rows_mut` hands out non-overlapping ranges only
+// under the caller's disjointness contract; shared refs do no writes.
 unsafe impl Sync for DisjointMatRows<'_> {}
 
 impl DisjointMatRows<'_> {
@@ -183,7 +185,11 @@ impl DisjointMatRows<'_> {
     pub unsafe fn rows_mut(&self, i: usize, lo: usize, hi: usize) -> &mut [f64] {
         let v = self.views[i];
         assert!(lo <= hi && hi <= v.rows, "row range {lo}..{hi} out of bounds ({})", v.rows);
-        std::slice::from_raw_parts_mut(v.ptr.add(lo * v.cols), (hi - lo) * v.cols)
+        // SAFETY: the range is in bounds (asserted above against the
+        // snapshotted shape) and the fn contract makes this task the
+        // only one touching rows [lo, hi) of matrix `i`, so the produced
+        // slice is exclusive.
+        unsafe { std::slice::from_raw_parts_mut(v.ptr.add(lo * v.cols), (hi - lo) * v.cols) }
     }
 }
 

@@ -19,24 +19,39 @@ pub struct CountingAlloc;
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: a pure pass-through to `System` plus relaxed counter bumps —
+// layout contracts, alignment, and pointer validity are exactly those of
+// the `System` allocator the calls delegate to.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: same contract as `System::alloc`, to which this forwards.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: caller upholds `GlobalAlloc::alloc`'s contract (nonzero
+        // layout); forwarded verbatim to `System`.
+        unsafe { System.alloc(layout) }
     }
+    // SAFETY: same contract as `System::alloc_zeroed`, to which this forwards.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
+        // SAFETY: caller upholds `GlobalAlloc::alloc_zeroed`'s contract;
+        // forwarded verbatim to `System`.
+        unsafe { System.alloc_zeroed(layout) }
     }
+    // SAFETY: same contract as `System::realloc`, to which this forwards.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: caller upholds `GlobalAlloc::realloc`'s contract (`ptr`
+        // from this allocator, matching `layout`); forwarded to `System`.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
+    // SAFETY: same contract as `System::dealloc`, to which this forwards.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: caller upholds `GlobalAlloc::dealloc`'s contract (`ptr`
+        // from this allocator, matching `layout`); forwarded to `System`.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }
 

@@ -1,0 +1,226 @@
+//! Aliasing-focused tests for the unsafe write-side primitives of the
+//! parallel executors: `DisjointSlice`, `DisjointMatRows` and the
+//! `QrFanScratch` (node × leaf) TSQR fan-out.
+//!
+//! Designed to run under Miri (`cargo miri test --features force-scalar
+//! --test test_aliasing_miri` with `MIRIFLAGS=-Zmiri-strict-provenance`):
+//! the `force-scalar` feature compiles out every `std::arch` path, so
+//! what remains is exactly the raw-pointer aliasing that the executors'
+//! soundness arguments rest on — disjoint `&mut` carving from shared
+//! views, lifetime-erased job references in `NodePool`, and the
+//! snapshot-under-unique-borrow discipline of `MatRowsScratch::fill`.
+//! The same tests pass as ordinary unit tests on the native target.
+
+use dpsa::linalg::qr::QrPolicy;
+use dpsa::linalg::Mat;
+use dpsa::runtime::pool::{DisjointSlice, NodePool};
+use dpsa::runtime::qr_exec::orthonormalize_nodes;
+use dpsa::runtime::workspace::{node_scratch, MatRowsScratch};
+use dpsa::runtime::{NativeBackend, QrFanScratch};
+use dpsa::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// DisjointSlice
+// ---------------------------------------------------------------------
+
+#[test]
+fn disjoint_slice_sequential_writes() {
+    let mut data = vec![0.0f64; 16];
+    let d = DisjointSlice::new(&mut data);
+    assert_eq!(d.len(), 16);
+    assert!(!d.is_empty());
+    for i in 0..16 {
+        // SAFETY: sequential, each index touched exactly once.
+        unsafe { *d.get_mut(i) = i as f64 * 2.0 };
+    }
+    drop(d);
+    for (i, v) in data.iter().enumerate() {
+        assert_eq!(*v, i as f64 * 2.0);
+    }
+}
+
+#[test]
+fn disjoint_slice_threaded_disjoint_writes() {
+    let n = 64;
+    let mut data = vec![0.0f64; n];
+    let d = DisjointSlice::new(&mut data);
+    std::thread::scope(|s| {
+        let d = &d;
+        for t in 0..4 {
+            s.spawn(move || {
+                let (lo, hi) = (t * n / 4, (t + 1) * n / 4);
+                for i in lo..hi {
+                    // SAFETY: thread t owns exactly indices [lo, hi);
+                    // the four ranges partition 0..n.
+                    unsafe { *d.get_mut(i) = (i * i) as f64 };
+                }
+            });
+        }
+    });
+    drop(d);
+    for (i, v) in data.iter().enumerate() {
+        assert_eq!(*v, (i * i) as f64);
+    }
+}
+
+#[test]
+#[should_panic(expected = "out of bounds")]
+fn disjoint_slice_out_of_bounds_panics() {
+    let mut data = vec![0.0f64; 4];
+    let d = DisjointSlice::new(&mut data);
+    // SAFETY: the index is out of bounds on purpose — the assert inside
+    // get_mut must fire before any raw-pointer arithmetic happens.
+    unsafe {
+        *d.get_mut(4) = 1.0;
+    }
+}
+
+#[test]
+fn pool_chunks_write_disjoint_slice() {
+    // The real usage pattern: a pool dispatch where each chunk writes
+    // its own index range through the lifetime-erased job reference.
+    let pool = NodePool::new(4);
+    let n = 40;
+    let mut data = vec![0.0f64; n];
+    let d = DisjointSlice::new(&mut data);
+    pool.run_chunks(n, &|lo, hi| {
+        for i in lo..hi {
+            // SAFETY: run_chunks partitions 0..n into disjoint [lo, hi).
+            unsafe { *d.get_mut(i) = 1.0 + i as f64 };
+        }
+    });
+    drop(d);
+    for (i, v) in data.iter().enumerate() {
+        assert_eq!(*v, 1.0 + i as f64);
+    }
+}
+
+// ---------------------------------------------------------------------
+// DisjointMatRows
+// ---------------------------------------------------------------------
+
+#[test]
+fn mat_rows_sequential_disjoint_ranges() {
+    let mut mats = vec![Mat::zeros(6, 3), Mat::zeros(4, 3)];
+    let mut scratch = MatRowsScratch::new();
+    let views = scratch.fill(&mut mats);
+    assert_eq!(views.len(), 2);
+    assert!(!views.is_empty());
+    assert_eq!(views.rows(0), 6);
+    // SAFETY: the two ranges of matrix 0 are disjoint and matrix 1 is
+    // touched by one range only; all accesses are sequential.
+    unsafe {
+        views.rows_mut(0, 0, 3).fill(1.0);
+        views.rows_mut(0, 3, 6).fill(2.0);
+        views.rows_mut(1, 0, 4).fill(3.0);
+    }
+    assert_eq!(mats[0].get(0, 0), 1.0);
+    assert_eq!(mats[0].get(5, 2), 2.0);
+    assert_eq!(mats[1].get(3, 1), 3.0);
+}
+
+#[test]
+fn mat_rows_threaded_row_chunks() {
+    let rows = 32;
+    let mut mats = vec![Mat::zeros(rows, 2), Mat::zeros(rows, 2)];
+    let mut scratch = MatRowsScratch::new();
+    let views = scratch.fill(&mut mats);
+    std::thread::scope(|s| {
+        let views = &views;
+        for m in 0..2 {
+            for t in 0..4 {
+                s.spawn(move || {
+                    let (lo, hi) = (t * rows / 4, (t + 1) * rows / 4);
+                    // SAFETY: task (m, t) owns rows [lo, hi) of matrix m
+                    // exclusively; the ranges partition each matrix.
+                    let out = unsafe { views.rows_mut(m, lo, hi) };
+                    for (k, v) in out.iter_mut().enumerate() {
+                        *v = (m * 1000 + lo * 2 + k) as f64;
+                    }
+                });
+            }
+        }
+    });
+    drop(views);
+    for (m, mat) in mats.iter().enumerate() {
+        for r in 0..rows {
+            for c in 0..2 {
+                assert_eq!(mat.get(r, c), (m * 1000 + r * 2 + c) as f64);
+            }
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "out of bounds")]
+fn mat_rows_out_of_range_panics() {
+    let mut mats = vec![Mat::zeros(4, 2)];
+    let mut scratch = MatRowsScratch::new();
+    let views = scratch.fill(&mut mats);
+    // SAFETY: the row range exceeds the snapshotted shape on purpose —
+    // the assert inside rows_mut must fire before any pointer math.
+    unsafe {
+        views.rows_mut(0, 2, 5);
+    }
+}
+
+#[test]
+fn mat_rows_refill_tracks_new_shapes() {
+    // Refilling the same scratch with different matrices must rebuild
+    // the snapshot under the fresh unique borrow (stale views would be
+    // the classic use-after-free shape Miri exists to catch).
+    let mut scratch = MatRowsScratch::new();
+    {
+        let mut small = vec![Mat::zeros(2, 2)];
+        let views = scratch.fill(&mut small);
+        // SAFETY: single sequential write, range in bounds.
+        unsafe { views.rows_mut(0, 0, 2).fill(7.0) };
+    }
+    let mut big = vec![Mat::zeros(8, 3), Mat::zeros(5, 1)];
+    let views = scratch.fill(&mut big);
+    assert_eq!(views.rows(0), 8);
+    // SAFETY: disjoint sequential writes within the new shapes.
+    unsafe {
+        views.rows_mut(0, 4, 8).fill(9.0);
+        views.rows_mut(1, 0, 5).fill(4.0);
+    }
+    assert_eq!(big[0].get(7, 2), 9.0);
+    assert_eq!(big[1].get(0, 0), 4.0);
+}
+
+// ---------------------------------------------------------------------
+// QrFanScratch: the TSQR (node × leaf) fan-out
+// ---------------------------------------------------------------------
+
+/// Drives `orthonormalize_nodes` through the full three-phase fan-out
+/// (leaf factorization → tree reduction → leaf apply) with shapes big
+/// enough for multi-leaf nodes, on a real pool. Under Miri this checks
+/// the leaf/tree `DisjointSlice` carving and the `DisjointMatRows`
+/// output writes against the aliasing model; on the native target it
+/// doubles as an orthonormality smoke test.
+#[test]
+fn tsqr_fanout_aliasing_clean() {
+    let mut rng = Rng::new(9);
+    // Miri runs ~100× slower than native: keep shapes just large enough
+    // to fan out into multiple leaves per node.
+    let z: Vec<Mat> = [(300usize, 3usize), (120, 2)]
+        .iter()
+        .map(|&(m, n)| Mat::gauss(m, n, &mut rng))
+        .collect();
+    let backend = NativeBackend::with_policy(QrPolicy::Tsqr);
+    let pool = NodePool::new(2);
+    let mut q: Vec<Mat> = (0..z.len()).map(|_| Mat::zeros(0, 0)).collect();
+    let mut scratch = node_scratch(z.len());
+    let mut fan = QrFanScratch::new();
+    let mut views = MatRowsScratch::new();
+    // Two rounds: the second reuses the grown scratch (the steady-state
+    // path where stale pointers would hide).
+    for _ in 0..2 {
+        orthonormalize_nodes(&pool, &backend, &z, &mut q, &mut scratch, &mut fan, &mut views);
+    }
+    for (zi, qi) in z.iter().zip(q.iter()) {
+        assert_eq!((qi.rows, qi.cols), (zi.rows, zi.cols));
+        let g = qi.t_matmul(qi);
+        assert!(g.dist_fro(&Mat::eye(qi.cols)) < 1e-8, "Q^T Q far from I");
+    }
+}

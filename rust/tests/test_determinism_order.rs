@@ -1,0 +1,80 @@
+//! Container-order determinism regressions (PR "repolint" satellite).
+//!
+//! The repolint pass statically bans `HashMap`/`HashSet` in `src/`
+//! because their iteration order depends on the process's random hasher
+//! seed — an entropy source that could silently enter results through
+//! neighbor-processing order. These tests pin the dynamic side of that
+//! contract on the paths that used to hold hash maps: the MPI channel
+//! fabric (`fwd_*`/`rec_*`, now rank-keyed BTreeMaps), the SA-DOT
+//! rescale cache (now a BTreeMap keyed by round count), and the async
+//! phase/value caches in the straggler study (now rank-indexed Vecs).
+//! Every run below must be *bitwise* repeatable across fresh container
+//! instances — with seeded hash maps the fresh instances would be the
+//! exact place a new seed could leak in.
+
+use dpsa::algorithms::sdot::{run_sdot, SdotConfig};
+use dpsa::algorithms::SampleSetting;
+use dpsa::consensus::schedule::Schedule;
+use dpsa::data::spectrum::Spectrum;
+use dpsa::data::synthetic::SyntheticDataset;
+use dpsa::experiments::straggler::run_sdot_mpi;
+use dpsa::graph::Graph;
+use dpsa::linalg::Mat;
+use dpsa::network::mpi::MpiConfig;
+use dpsa::network::sim::SyncNetwork;
+use dpsa::util::rng::Rng;
+
+fn sample_setting(seed: u64, nodes: usize) -> (SampleSetting, Graph) {
+    let mut rng = Rng::new(seed);
+    let spec = Spectrum::with_gap(20, 5, 0.7);
+    let ds = SyntheticDataset::full(&spec, 400, nodes, &mut rng);
+    let s = SampleSetting::from_parts(&ds.parts, 5, &mut rng);
+    let g = Graph::erdos_renyi(nodes, 0.5, &mut rng);
+    (s, g)
+}
+
+fn assert_bitwise_eq(a: &[Mat], b: &[Mat]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!((x.rows, x.cols), (y.rows, y.cols), "node {i} shape");
+        assert_eq!(x.data, y.data, "node {i} differs");
+    }
+}
+
+/// The MPI fabric assembles its per-edge channels through rank-keyed
+/// maps that are built fresh on every `run_spmd` call. Two back-to-back
+/// virtual-clock runs must agree in every output bit — virtual time
+/// included, which is the strictest observable (any neighbor-order
+/// dependence shifts the send/recv interleaving and with it the cascade).
+#[test]
+fn mpi_virtual_clock_study_bitwise_repeatable() {
+    let (s, g) = sample_setting(31, 8);
+    let sched = Schedule::fixed(12);
+    let cfg = MpiConfig::virtual_clock();
+    let a = run_sdot_mpi(&s, &g, sched, 8, &cfg);
+    let b = run_sdot_mpi(&s, &g, sched, 8, &cfg);
+    assert_eq!(a.secs.to_bits(), b.secs.to_bits(), "virtual time diverged");
+    assert_eq!(a.p2p_avg.to_bits(), b.p2p_avg.to_bits(), "P2P count diverged");
+    assert_eq!(a.proto_avg.to_bits(), b.proto_avg.to_bits());
+    assert_eq!(a.max_err.to_bits(), b.max_err.to_bits(), "subspace error diverged");
+}
+
+/// SA-DOT's adaptive schedule populates the per-`T_c` rescale cache with
+/// several entries (one per distinct round count); repeated runs on
+/// fresh networks — serial and pooled — must be bitwise identical, and
+/// the exact P2P counters must agree too.
+#[test]
+fn sadot_rescale_cache_bitwise_repeatable() {
+    let (s, g) = sample_setting(32, 8);
+    let cfg = SdotConfig::new(Schedule::adaptive(2.0, 1, 40), 18);
+
+    let mut net_a = SyncNetwork::with_threads(g.clone(), 1);
+    let (qa, _) = run_sdot(&mut net_a, &s, &cfg);
+
+    for &threads in &[1usize, 4] {
+        let mut net_b = SyncNetwork::with_threads(g.clone(), threads);
+        let (qb, _) = run_sdot(&mut net_b, &s, &cfg);
+        assert_bitwise_eq(&qa, &qb);
+        assert_eq!(net_a.counters.sent, net_b.counters.sent, "threads={threads}");
+    }
+}

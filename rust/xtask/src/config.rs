@@ -1,0 +1,81 @@
+//! Minimal std-only parser for the flat TOML subset the lint configs use:
+//! `[section.name]` headers and `"key" = "value"` entries. Anything
+//! fancier (arrays, multi-line strings, inline tables) is rejected loudly
+//! — the configs are meant to stay this simple.
+
+use std::collections::BTreeMap;
+
+/// `section → key → value`, all strings. BTreeMap so reports that
+/// iterate the config are deterministically ordered.
+#[derive(Debug, Default)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(path: &std::path::Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some(eq) = find_eq(line) else {
+                return Err(format!(
+                    "{}:{}: expected `\"key\" = \"value\"`, got `{line}`",
+                    path.display(),
+                    ln + 1
+                ));
+            };
+            let key = unquote(line[..eq].trim());
+            let val = unquote(strip_trailing_comment(line[eq + 1..].trim()));
+            cfg.sections.entry(section.clone()).or_default().insert(key, val);
+        }
+        Ok(cfg)
+    }
+
+    pub fn section(&self, name: &str) -> BTreeMap<String, String> {
+        self.sections.get(name).cloned().unwrap_or_default()
+    }
+}
+
+/// First `=` outside quotes.
+fn find_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Drop a trailing `# comment` that sits outside quotes.
+fn strip_trailing_comment(s: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return s[..i].trim_end(),
+            _ => {}
+        }
+    }
+    s
+}
+
+fn unquote(s: &str) -> String {
+    s.strip_prefix('"')
+        .and_then(|t| t.strip_suffix('"'))
+        .unwrap_or(s)
+        .to_string()
+}

@@ -1,0 +1,87 @@
+//! Rule family 2: determinism hygiene.
+//!
+//! The repo's core contract (ROADMAP "Determinism") is bitwise-identical
+//! results for every `--threads` and identical ledgers across runs. This
+//! pass flags the usual entropy leaks in `src/`:
+//!
+//!   * `hashmap`    — `HashMap` / `HashSet` (iteration order is seeded
+//!                    per-process; use `BTreeMap` or rank-indexed `Vec`)
+//!   * `wallclock`  — `Instant::now` / `SystemTime` (results must depend
+//!                    on the virtual clock, not the host's)
+//!   * `randomness` — `thread_rng` / `RandomState` / ambient `rand::`
+//!                    (all randomness flows through seeded `Rng64`)
+//!   * `float-cmp`  — `.partial_cmp(` (NaN-unstable orderings; use
+//!                    `total_cmp` so sorts cannot panic or reorder)
+//!
+//! Exceptions live in `xtask/allow.toml` under `[allow.<rule>]`, one
+//! `"src/file.rs" = "reason"` entry per file. Unused entries are errors —
+//! the allowlist must not rot.
+
+use crate::source::{find_word, SourceFile};
+use std::collections::BTreeMap;
+
+struct Pattern {
+    rule: &'static str,
+    needle: &'static str,
+    /// Word-boundary match (identifiers) vs raw substring (paths/methods).
+    word: bool,
+    why: &'static str,
+}
+
+const PATTERNS: &[Pattern] = &[
+    Pattern { rule: "hashmap", needle: "HashMap", word: true, why: "seeded iteration order; use BTreeMap or a rank-indexed Vec" },
+    Pattern { rule: "hashmap", needle: "HashSet", word: true, why: "seeded iteration order; use BTreeSet or a sorted Vec" },
+    Pattern { rule: "wallclock", needle: "Instant::now", word: false, why: "host wall-clock; results must come from the virtual clock" },
+    Pattern { rule: "wallclock", needle: "SystemTime", word: true, why: "host wall-clock; results must come from the virtual clock" },
+    Pattern { rule: "randomness", needle: "thread_rng", word: true, why: "ambient randomness; use the seeded Rng64" },
+    Pattern { rule: "randomness", needle: "RandomState", word: true, why: "ambient hasher seed; use deterministic containers" },
+    Pattern { rule: "randomness", needle: "rand::", word: false, why: "ambient randomness; use the seeded Rng64" },
+    Pattern { rule: "float-cmp", needle: ".partial_cmp(", word: false, why: "NaN-unstable ordering; use total_cmp" },
+];
+
+pub fn scan(
+    files: &[SourceFile],
+    allow: &BTreeMap<String, BTreeMap<String, String>>,
+) -> Vec<String> {
+    let mut violations = Vec::new();
+    let mut used: BTreeMap<(String, String), bool> = BTreeMap::new();
+    for (rule, entries) in allow {
+        for file in entries.keys() {
+            used.insert((rule.clone(), file.clone()), false);
+        }
+    }
+    for sf in files {
+        for (idx, line) in sf.lines.iter().enumerate() {
+            for p in PATTERNS {
+                let hit = if p.word {
+                    !find_word(&line.code, p.needle).is_empty()
+                } else {
+                    line.code.contains(p.needle)
+                };
+                if !hit {
+                    continue;
+                }
+                if allow.get(p.rule).is_some_and(|m| m.contains_key(&sf.rel)) {
+                    used.insert((p.rule.to_string(), sf.rel.clone()), true);
+                } else {
+                    violations.push(format!(
+                        "{}:{}: [{}] `{}` — {}",
+                        sf.rel,
+                        idx + 1,
+                        p.rule,
+                        p.needle,
+                        p.why
+                    ));
+                }
+            }
+        }
+    }
+    for ((rule, file), was_used) in used {
+        if !was_used {
+            violations.push(format!(
+                "allow.toml: unused entry [allow.{rule}] \"{file}\" — remove it (allowlist must not rot)"
+            ));
+        }
+    }
+    violations
+}

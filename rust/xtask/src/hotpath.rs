@@ -1,0 +1,203 @@
+//! Rule family 3: hot-path alloc bans.
+//!
+//! Functions registered in `xtask/hotpath.toml` form the steady-state
+//! inner loop (the `SdotRun` step loop, consensus rounds, the `*_into`
+//! kernels, the MPI fabric fast path). Their bodies may not call
+//! allocating constructors — all buffers come from grow-only scratch
+//! types reserved before the loop. This turns the counting-allocator
+//! bench claim ("zero allocations in steady state") into a static check.
+//!
+//! Manifest format (`hotpath.toml`):
+//!   [functions]  "src/file.rs::fn_name" = "why it is hot"
+//!   [suffixes]   "_into" = "src/linalg"   # every *_into fn under the dir
+//!   [warmup]     "src/file.rs::fn_name" = "Mat::zeros"  # documented
+//!                 warm-up mint waived for that one token in that one fn
+//!
+//! A `[functions]` entry that no longer matches any fn is an error —
+//! the manifest must not rot as code moves.
+
+use crate::source::{find_word, next_token, SourceFile};
+use std::collections::BTreeMap;
+
+/// Allocating constructors banned in hot-path bodies. Substring match on
+/// comment-stripped, string-blanked code. Grow-only calls (`resize`,
+/// `reserve`, `extend_from_slice`) are deliberately NOT banned — they are
+/// the sanctioned scratch idiom and are no-ops once warm.
+const BANNED: &[&str] = &[
+    "Vec::new(",
+    "vec!",
+    "with_capacity(",
+    ".to_vec()",
+    ".clone()",
+    ".to_owned()",
+    ".to_string()",
+    "String::from(",
+    "Box::new(",
+    "format!",
+    ".collect",
+    "Mat::zeros(",
+    "Mat::eye(",
+    "Mat::gauss(",
+];
+
+struct FnSpan {
+    name: String,
+    /// 0-based inclusive line range of `fn` keyword .. closing brace.
+    start: usize,
+    end: usize,
+}
+
+pub fn scan(
+    files: &[SourceFile],
+    functions: &BTreeMap<String, String>,
+    suffixes: &BTreeMap<String, String>,
+    warmup: &BTreeMap<String, String>,
+) -> Vec<String> {
+    let mut violations = Vec::new();
+    let mut seen_fn: BTreeMap<String, bool> =
+        functions.keys().map(|k| (k.clone(), false)).collect();
+    let mut seen_warm: BTreeMap<String, bool> =
+        warmup.keys().map(|k| (k.clone(), false)).collect();
+
+    for sf in files {
+        let tests = test_spans(sf);
+        let spans = fn_spans(sf);
+        for span in &spans {
+            // In-file `#[cfg(test)]` modules are not shipped code; their
+            // helper fns may share hot-path suffixes (e.g. prop tests).
+            if tests.iter().any(|&(lo, hi)| span.start >= lo && span.start <= hi) {
+                continue;
+            }
+            let key = format!("{}::{}", sf.rel, span.name);
+            let explicit = functions.contains_key(&key);
+            let by_suffix = suffixes
+                .iter()
+                .any(|(suf, dir)| span.name.ends_with(suf.as_str()) && sf.rel.starts_with(dir.as_str()));
+            if !explicit && !by_suffix {
+                continue;
+            }
+            if explicit {
+                seen_fn.insert(key.clone(), true);
+            }
+            let waived = warmup.get(&key).cloned();
+            for line_idx in span.start..=span.end {
+                let code = &sf.lines[line_idx].code;
+                for tok in BANNED {
+                    if !code.contains(tok) {
+                        continue;
+                    }
+                    if let Some(w) = &waived {
+                        if tok.starts_with(w.as_str()) || w.starts_with(tok) {
+                            seen_warm.insert(key.clone(), true);
+                            continue;
+                        }
+                    }
+                    violations.push(format!(
+                        "{}:{}: [hotpath] `{}` allocates inside hot fn `{}` — use a grow-only scratch",
+                        sf.rel,
+                        line_idx + 1,
+                        tok.trim_end_matches('('),
+                        span.name
+                    ));
+                }
+            }
+        }
+    }
+
+    for (key, found) in seen_fn {
+        if !found {
+            violations.push(format!(
+                "hotpath.toml: [functions] \"{key}\" matches no fn — manifest rot, update the entry"
+            ));
+        }
+    }
+    for (key, hit) in seen_warm {
+        if !hit {
+            violations.push(format!(
+                "hotpath.toml: [warmup] \"{key}\" waived a token that no longer appears — remove it"
+            ));
+        }
+    }
+    violations
+}
+
+/// Line spans of `#[cfg(test)] mod … { }` blocks, so the alloc ban only
+/// governs shipped code.
+fn test_spans(sf: &SourceFile) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in sf.lines.iter().enumerate() {
+        if !line.code.trim().starts_with("#[cfg(test)]") {
+            continue;
+        }
+        // The next code line should introduce the module.
+        for (j, follow) in sf.lines.iter().enumerate().skip(idx + 1) {
+            let t = follow.code.trim();
+            if t.is_empty() || follow.is_attribute() {
+                continue;
+            }
+            if find_word(t, "mod").first() == Some(&0) || t.starts_with("pub mod") {
+                if let Some((end, _)) = body_end(sf, j, 0) {
+                    out.push((j, end));
+                }
+            }
+            break;
+        }
+    }
+    out
+}
+
+/// All fn definitions in a file with their body line spans. Token-level:
+/// find the `fn` keyword, take the following identifier as the name, then
+/// brace-match the body on comment-stripped code. Declarations (`fn f();`)
+/// and fn-pointer types (`fn(usize)`) are skipped.
+fn fn_spans(sf: &SourceFile) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    for (idx, line) in sf.lines.iter().enumerate() {
+        for at in find_word(&line.code, "fn") {
+            let after = at + "fn".len();
+            let Some(name) = next_token(&line.code, after) else { continue };
+            if !name.chars().next().is_some_and(|c| c.is_alphabetic() || c == '_') {
+                continue; // `fn(` pointer type or stray punctuation
+            }
+            if let Some((end, _)) = body_end(sf, idx, after) {
+                spans.push(FnSpan { name, start: idx, end });
+            }
+        }
+    }
+    spans
+}
+
+/// From the fn keyword, find the body-opening `{` (skipping the signature)
+/// and brace-match to the close. Returns None for bodyless declarations.
+fn body_end(sf: &SourceFile, line: usize, col: usize) -> Option<(usize, usize)> {
+    let mut depth: i32 = 0;
+    let mut brackets: i32 = 0; // `[f64; 4]` in a signature is not a decl-`;`
+    let mut in_body = false;
+    let mut l = line;
+    let mut c = col;
+    while l < sf.lines.len() {
+        let code = sf.lines[l].code.as_bytes();
+        while c < code.len() {
+            match code[c] {
+                b'{' => {
+                    depth += 1;
+                    in_body = true;
+                }
+                b'}' => {
+                    depth -= 1;
+                    if in_body && depth == 0 {
+                        return Some((l, c));
+                    }
+                }
+                b'[' => brackets += 1,
+                b']' => brackets -= 1,
+                b';' if !in_body && depth == 0 && brackets == 0 => return None,
+                _ => {}
+            }
+            c += 1;
+        }
+        l += 1;
+        c = 0;
+    }
+    None
+}

@@ -1,0 +1,178 @@
+//! Rule family 1: SAFETY coverage.
+//!
+//! Every `unsafe` block / fn / impl must carry a `// SAFETY:` comment
+//! directly above the statement that contains it (same convention as
+//! clippy's `undocumented_unsafe_blocks`, which CI runs as a cross-check),
+//! or — for `unsafe fn` — a `# Safety` doc section. Every site, compliant
+//! or not, is recorded into `target/repolint/unsafe_inventory.json`.
+
+use crate::source::{find_word, next_token, SourceFile};
+
+#[derive(Debug)]
+pub struct UnsafeSite {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// "block" | "fn" | "impl"
+    pub kind: &'static str,
+    /// First line of the justification comment, or empty when missing.
+    pub justification: String,
+}
+
+pub struct SafetyReport {
+    pub sites: Vec<UnsafeSite>,
+    pub violations: Vec<String>,
+}
+
+pub fn scan(files: &[SourceFile]) -> SafetyReport {
+    let mut sites = Vec::new();
+    let mut violations = Vec::new();
+    for sf in files {
+        for (idx, line) in sf.lines.iter().enumerate() {
+            for at in find_word(&line.code, "unsafe") {
+                let kind = classify(sf, idx, at + "unsafe".len());
+                let justification = find_justification(sf, idx, kind);
+                if justification.is_empty() {
+                    violations.push(format!(
+                        "{}:{}: `unsafe` {} without a `// SAFETY:` comment",
+                        sf.rel,
+                        idx + 1,
+                        kind
+                    ));
+                }
+                sites.push(UnsafeSite {
+                    file: sf.rel.clone(),
+                    line: idx + 1,
+                    kind,
+                    justification,
+                });
+            }
+        }
+    }
+    SafetyReport { sites, violations }
+}
+
+/// Kind of unsafe site, from the token following `unsafe` (which may sit
+/// on the next code line when the keyword ends a line).
+fn classify(sf: &SourceFile, idx: usize, from: usize) -> &'static str {
+    let mut tok = next_token(&sf.lines[idx].code, from);
+    if tok.is_none() {
+        for l in sf.lines.iter().skip(idx + 1) {
+            if l.code.trim().is_empty() {
+                continue;
+            }
+            tok = next_token(&l.code, 0);
+            break;
+        }
+    }
+    match tok.as_deref() {
+        Some("impl") => "impl",
+        Some("fn") | Some("extern") => "fn",
+        _ => "block",
+    }
+}
+
+/// Walk to the statement anchor (skip over continuation lines like
+/// `let x =` above a multi-line unsafe expression), then scan upward
+/// through contiguous comment / attribute lines for a justification.
+fn find_justification(sf: &SourceFile, idx: usize, kind: &'static str) -> String {
+    // Same-line trailing comment counts.
+    if let Some(j) = safety_text(&sf.lines[idx].comment, kind) {
+        return j;
+    }
+    let mut anchor = idx;
+    while anchor > 0 {
+        let prev = &sf.lines[anchor - 1];
+        let t = prev.code.trim_end();
+        // The unsafe expression continues a statement begun above when the
+        // previous code line ends mid-expression.
+        if !t.is_empty()
+            && (t.ends_with('=') || t.ends_with('(') || t.ends_with(',') || t.ends_with('.'))
+        {
+            anchor -= 1;
+        } else {
+            break;
+        }
+    }
+    let mut i = anchor;
+    while i > 0 {
+        let prev = &sf.lines[i - 1];
+        if prev.is_comment_only() || prev.is_attribute() {
+            if let Some(j) = safety_text(&prev.comment, kind) {
+                return j;
+            }
+            i -= 1;
+        } else {
+            break;
+        }
+    }
+    // `unsafe fn`: a `/// # Safety` doc section above counts — the doc
+    // contract is the justification. The section body may be several
+    // doc lines; accept the header anywhere in the doc block.
+    if kind == "fn" {
+        let mut i = anchor;
+        while i > 0 {
+            let prev = &sf.lines[i - 1];
+            if prev.is_comment_only() || prev.is_attribute() {
+                let c = prev.comment.trim();
+                if c.contains("# Safety") {
+                    // Summarize with the first non-empty doc line below
+                    // the header, or the header itself.
+                    let below = sf.lines[i..anchor]
+                        .iter()
+                        .map(|l| l.comment.trim().trim_start_matches('/').trim())
+                        .find(|t| !t.is_empty() && !t.contains("# Safety"));
+                    return below.unwrap_or("# Safety (doc contract)").to_string();
+                }
+                i -= 1;
+            } else {
+                break;
+            }
+        }
+    }
+    String::new()
+}
+
+/// Extract the justification text from a comment carrying `SAFETY:`.
+fn safety_text(comment: &str, _kind: &str) -> Option<String> {
+    let pos = comment.find("SAFETY:")?;
+    let rest = comment[pos + "SAFETY:".len()..].trim();
+    if rest.is_empty() {
+        Some("SAFETY".to_string())
+    } else {
+        Some(rest.to_string())
+    }
+}
+
+/// Hand-rolled JSON writer (std-only); fields are plain ASCII paths and
+/// comment text, escaped minimally.
+pub fn inventory_json(sites: &[UnsafeSite]) -> String {
+    let mut out = String::from("[\n");
+    for (i, s) in sites.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"file\": \"{}\", \"line\": {}, \"kind\": \"{}\", \"justification\": \"{}\"}}{}\n",
+            esc(&s.file),
+            s.line,
+            s.kind,
+            esc(&s.justification),
+            if i + 1 < sites.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+fn esc(s: &str) -> String {
+    let mut o = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => o.push_str("\\\""),
+            '\\' => o.push_str("\\\\"),
+            '\n' => o.push_str("\\n"),
+            '\t' => o.push_str("\\t"),
+            c if (c as u32) < 0x20 => o.push_str(&format!("\\u{:04x}", c as u32)),
+            c => o.push(c),
+        }
+    }
+    o
+}

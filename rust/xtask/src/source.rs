@@ -1,0 +1,279 @@
+//! Source model: a lossless per-line split of a Rust file into *code*
+//! text and *comment* text, with string/char literal contents blanked.
+//!
+//! The scanner is deliberately line/token-level (no `syn` — the build is
+//! fully offline), so every rule downstream operates on two views of each
+//! line: `code` (comments stripped, string contents replaced by spaces so
+//! token searches cannot match inside literals) and `comment` (the text of
+//! any `//`, `///`, `//!` or `/* */` comment touching the line).
+
+/// One physical source line, split into code and comment text.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+}
+
+impl Line {
+    /// Comment-only: no code tokens, some comment text.
+    pub fn is_comment_only(&self) -> bool {
+        self.code.trim().is_empty() && !self.comment.trim().is_empty()
+    }
+
+    /// Attribute-only: `#[...]` / `#![...]` (possibly spanning — treated
+    /// per line, which is exact for this crate's style).
+    pub fn is_attribute(&self) -> bool {
+        let t = self.code.trim();
+        t.starts_with("#[") || t.starts_with("#![")
+    }
+
+    pub fn is_blank(&self) -> bool {
+        self.code.trim().is_empty() && self.comment.trim().is_empty()
+    }
+}
+
+/// A scanned file: repo-relative path + per-line code/comment split.
+#[derive(Debug)]
+pub struct SourceFile {
+    pub rel: String,
+    pub lines: Vec<Line>,
+}
+
+/// Lexer states for the per-character pass.
+enum State {
+    Normal,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let mut lines: Vec<Line> = Vec::new();
+        let mut cur = Line::default();
+        let mut state = State::Normal;
+        let chars: Vec<char> = text.chars().collect();
+        let n = chars.len();
+        let mut i = 0;
+        while i < n {
+            let c = chars[i];
+            if c == '\n' {
+                // Line comments end at the newline; everything else
+                // carries across (block comments, raw strings).
+                if matches!(state, State::LineComment) {
+                    state = State::Normal;
+                }
+                lines.push(std::mem::take(&mut cur));
+                i += 1;
+                continue;
+            }
+            match state {
+                State::Normal => {
+                    let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+                    if c == '/' && next == '/' {
+                        state = State::LineComment;
+                        i += 2;
+                    } else if c == '/' && next == '*' {
+                        state = State::BlockComment(1);
+                        i += 2;
+                    } else if c == '"' {
+                        cur.code.push('"');
+                        state = State::Str;
+                        i += 1;
+                    } else if c == 'r'
+                        && (next == '"' || next == '#')
+                        && !prev_is_ident(&cur.code)
+                    {
+                        // Raw string r"..." / r#"..."# (any hash depth).
+                        let mut hashes = 0u32;
+                        let mut j = i + 1;
+                        while j < n && chars[j] == '#' {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if j < n && chars[j] == '"' {
+                            cur.code.push('r');
+                            for _ in 0..hashes {
+                                cur.code.push('#');
+                            }
+                            cur.code.push('"');
+                            state = State::RawStr(hashes);
+                            i = j + 1;
+                        } else {
+                            cur.code.push(c);
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        // Char literal vs lifetime: '\x' escapes and 'x'
+                        // (closing quote two ahead) are literals; anything
+                        // else is a lifetime tick.
+                        if next == '\\' {
+                            cur.code.push('\'');
+                            state = State::Char;
+                            i += 1;
+                        } else if i + 2 < n && chars[i + 2] == '\'' {
+                            cur.code.push_str("' '");
+                            i += 3;
+                        } else {
+                            cur.code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                }
+                State::LineComment => {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+                State::BlockComment(depth) => {
+                    let next = if i + 1 < n { chars[i + 1] } else { '\0' };
+                    if c == '*' && next == '/' {
+                        if depth == 1 {
+                            state = State::Normal;
+                        } else {
+                            state = State::BlockComment(depth - 1);
+                        }
+                        i += 2;
+                    } else if c == '/' && next == '*' {
+                        state = State::BlockComment(depth + 1);
+                        i += 2;
+                    } else {
+                        cur.comment.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if c == '\\' {
+                        cur.code.push(' ');
+                        if i + 1 < n && chars[i + 1] != '\n' {
+                            cur.code.push(' ');
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        cur.code.push('"');
+                        state = State::Normal;
+                        i += 1;
+                    } else {
+                        cur.code.push(' ');
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if c == '"' {
+                        let mut j = i + 1;
+                        let mut seen = 0u32;
+                        while j < n && seen < hashes && chars[j] == '#' {
+                            seen += 1;
+                            j += 1;
+                        }
+                        if seen == hashes {
+                            cur.code.push('"');
+                            for _ in 0..hashes {
+                                cur.code.push('#');
+                            }
+                            state = State::Normal;
+                            i = j;
+                        } else {
+                            cur.code.push(' ');
+                            i += 1;
+                        }
+                    } else {
+                        cur.code.push(' ');
+                        i += 1;
+                    }
+                }
+                State::Char => {
+                    if c == '\\' {
+                        cur.code.push(' ');
+                        if i + 1 < n {
+                            cur.code.push(' ');
+                            i += 2;
+                        } else {
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        cur.code.push('\'');
+                        state = State::Normal;
+                        i += 1;
+                    } else {
+                        cur.code.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        if !cur.code.is_empty() || !cur.comment.is_empty() {
+            lines.push(cur);
+        }
+        SourceFile { rel: rel.to_string(), lines }
+    }
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// All word-boundary occurrences of `word` in `code` (byte offsets).
+pub fn find_word(code: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_ident(bytes[at - 1] as char);
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end] as char);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        from = at + word.len().max(1);
+    }
+    out
+}
+
+/// First token after byte `from` in `code`: an identifier/keyword word,
+/// or a single punctuation char (so `unsafe {` yields `{`, not a token
+/// scavenged from a later line).
+pub fn next_token(code: &str, from: usize) -> Option<String> {
+    let rest = code.get(from..)?;
+    let start = rest.find(|c: char| !c.is_whitespace())?;
+    let rest = &rest[start..];
+    let c = rest.chars().next()?;
+    if !is_ident(c) {
+        return Some(c.to_string());
+    }
+    let end = rest.find(|c: char| !is_ident(c)).unwrap_or(rest.len());
+    Some(rest[..end].to_string())
+}
+
+/// Recursively collect `.rs` files under `dir`, returning paths relative
+/// to `root` with `/` separators, sorted for deterministic reports.
+pub fn collect_rs_files(root: &std::path::Path, dir: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.join(dir)];
+    while let Some(d) = stack.pop() {
+        let Ok(entries) = std::fs::read_dir(&d) else { continue };
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                if let Ok(rel) = p.strip_prefix(root) {
+                    out.push(rel.to_string_lossy().replace('\\', "/"));
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
