@@ -1,0 +1,175 @@
+//! N-scaling benchmark: the sparse consensus path at N up to 10⁴.
+//!
+//! The paper's tables stop at N = 20; the scalability rework makes a
+//! consensus round cost O(active edges) instead of the dense O(N²)
+//! matrix-vector sweep. This bench pins that contract:
+//!
+//! * per-round wall time across N ∈ {10², 10³, 10⁴} × {ring, grid, er},
+//!   with the per-edge normalization recorded so the ledger shows the
+//!   round cost tracking edges, not N²;
+//! * a counting-allocator **assertion** that the steady-state sparse
+//!   round allocates nothing;
+//! * a small-N bitwise pin: sparse weights and mixing reproduce the
+//!   dense reference exactly;
+//! * the node-multiplexed SPMD runtime at N = 10³ across worker counts
+//!   (10³ logical nodes on a handful of OS threads — the dedicated
+//!   thread-per-node runtime stops far earlier).
+//!
+//! Results go to `BENCH_scale.json` (override with `BENCH_JSON_OUT`),
+//! the perf ledger's N-scaling artifact.
+//!
+//! Run: `cargo bench --bench bench_scale`
+
+use dpsa::consensus::weights::{local_degree_weights, sparse_local_degree_weights, SparseWeights};
+use dpsa::graph::Graph;
+use dpsa::linalg::Mat;
+use dpsa::network::mpi::{run_spmd_mux, MpiConfig};
+use dpsa::network::sim::SyncNetwork;
+use dpsa::runtime::spmd::MuxProgram;
+use dpsa::util::bench::{alloc_snapshot, time_it, BenchReport, CountingAlloc};
+use dpsa::util::rng::Rng;
+use std::sync::Arc;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// ER draws p = 2·ln(N)/N — twice the connectivity threshold, ≈ N·ln N
+/// edges; ring/grid ignore p.
+fn build(topo: &str, n: usize, rng: &mut Rng) -> Graph {
+    let p = (2.0 * (n as f64).ln() / n as f64).min(1.0);
+    Graph::from_spec(topo, n, p, rng)
+}
+
+/// One logical node of plain sparse consensus on the multiplexed SPMD
+/// runtime: publish the current value, absorb the Metropolis mix of the
+/// neighbors' published values.
+struct MixProg {
+    i: usize,
+    sw: Arc<SparseWeights>,
+    z: Mat,
+    tmp: Mat,
+}
+
+impl MuxProgram for MixProg {
+    fn dims(&self) -> (usize, usize) {
+        (self.z.rows, self.z.cols)
+    }
+
+    fn publish(&self, _round: u64, out: &mut Mat) {
+        out.copy_from(&self.z);
+    }
+
+    fn absorb(&mut self, _round: u64, _neighbors: &[usize], board: &[Mat]) {
+        self.tmp.copy_from(&self.z);
+        self.tmp.scale_inplace(self.sw.diag[self.i]);
+        let (cols, vals) = self.sw.row(self.i);
+        for (&j, &w) in cols.iter().zip(vals.iter()) {
+            self.tmp.axpy(w, &board[j]);
+        }
+        std::mem::swap(&mut self.z, &mut self.tmp);
+    }
+}
+
+fn main() {
+    println!("== N-scaling: sparse consensus up to 10^4 nodes ==\n");
+    let mut rng = Rng::new(42);
+    let mut report = BenchReport::new();
+
+    // --- per-round cost across N × topology ------------------------------
+    for &n in &[100usize, 1_000, 10_000] {
+        for topo in ["ring", "grid", "er"] {
+            let g = build(topo, n, &mut rng);
+            let edges = g.adj.iter().map(|a| a.len()).sum::<usize>() / 2;
+            let mut net = SyncNetwork::with_threads(g, 1);
+            let mut z: Vec<Mat> = (0..n).map(|_| Mat::gauss(4, 2, &mut rng)).collect();
+            net.consensus(&mut z, 1); // warm-up: shapes the workspace
+            let (reps, iters) = if n >= 10_000 { (1, 5) } else { (2, 9) };
+            let t = time_it(reps, iters, || {
+                net.consensus(&mut z, 1);
+            });
+            let per_edge = t.median.as_nanos() as f64 / edges.max(1) as f64;
+            println!(
+                "consensus round  {topo:<4} N={n:<6} edges={edges:<7}: {t}  \
+                 ({per_edge:.1} ns/edge)"
+            );
+            report.push_timing(&format!("consensus_round_{topo}_n{n}_ns"), &t);
+            report.push(&format!("consensus_round_{topo}_n{n}_ns_per_edge"), per_edge);
+        }
+    }
+    println!("  (O(edges) contract: ns/edge stays flat while N grows 100x)\n");
+
+    // --- zero-allocation assertion on the steady-state sparse round ------
+    {
+        let g = build("er", 1_000, &mut rng);
+        let mut net = SyncNetwork::with_threads(g, 1);
+        let mut z: Vec<Mat> = (0..1_000).map(|_| Mat::gauss(4, 2, &mut rng)).collect();
+        net.consensus(&mut z, 2); // warm-up
+        let (a0, b0) = alloc_snapshot();
+        net.consensus(&mut z, 8);
+        let (a1, b1) = alloc_snapshot();
+        println!(
+            "steady-state sparse rounds (x8, N=1000): {} allocations, {} bytes",
+            a1 - a0,
+            b1 - b0
+        );
+        assert_eq!(a1 - a0, 0, "sparse consensus round allocated in steady state");
+        report.push("sparse_round_steady_state_allocs", (a1 - a0) as f64);
+    }
+    println!();
+
+    // --- small-N bitwise pin: sparse ≡ dense ------------------------------
+    {
+        let mut rng2 = Rng::new(7);
+        let g = Graph::erdos_renyi(16, 0.4, &mut rng2);
+        let dense = local_degree_weights(&g);
+        let sparse = sparse_local_degree_weights(&g);
+        let sd = sparse.to_dense();
+        for (a, b) in dense.w.data.iter().zip(sd.w.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "sparse weights diverge from dense");
+        }
+        let z0: Vec<Mat> = (0..16).map(|_| Mat::gauss(4, 2, &mut rng2)).collect();
+        let mut z = z0.clone();
+        let mut net = SyncNetwork::with_threads(g.clone(), 1);
+        net.consensus(&mut z, 1);
+        for i in 0..16 {
+            let mut want = z0[i].scale(dense.w.get(i, i));
+            for &j in &g.adj[i] {
+                want.axpy(dense.w.get(i, j), &z0[j]);
+            }
+            for (a, b) in z[i].data.iter().zip(want.data.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "sparse round diverges at node {i}");
+            }
+        }
+        println!("sparse == dense bitwise at N=16 (weights + one round): ok");
+        report.push("sparse_dense_bitwise_n16_ok", 1.0);
+    }
+    println!();
+
+    // --- node-multiplexed SPMD: 10^3 logical nodes, few workers ----------
+    {
+        let n = 1_000usize;
+        let g = build("er", n, &mut rng);
+        let sw = Arc::new(sparse_local_degree_weights(&g));
+        let rounds = 20u64;
+        for &workers in &[1usize, 4, 8] {
+            let t = time_it(1, 3, || {
+                let mut r2 = Rng::new(99);
+                let programs: Vec<MixProg> = (0..n)
+                    .map(|i| MixProg {
+                        i,
+                        sw: sw.clone(),
+                        z: Mat::gauss(2, 2, &mut r2),
+                        tmp: Mat::zeros(2, 2),
+                    })
+                    .collect();
+                let run = run_spmd_mux(&g, &MpiConfig::virtual_clock(), workers, rounds, programs);
+                std::hint::black_box(&run.programs);
+            });
+            println!("mux consensus  N={n} rounds={rounds} workers={workers}: {t}");
+            report.push_timing(&format!("mux_consensus_n{n}_w{workers}_ns"), &t);
+        }
+        println!("  (bitwise worker-count invariance is pinned in tests/test_scale_parity.rs)");
+    }
+
+    report.save("BENCH_scale.json");
+}

@@ -92,7 +92,9 @@ pub fn run_deepca(
     cfg: &DeepcaConfig,
 ) -> (Vec<Mat>, RunTrace) {
     let n = net.n();
-    let sigma = slem(&net.weights).min(0.999_999);
+    // SLEM needs the dense eigendecomposition — a one-off O(n³) setup
+    // computation on the same Metropolis weights the network mixes with.
+    let sigma = slem(&net.weights().to_dense()).min(0.999_999);
     let root = (1.0 - sigma * sigma).sqrt();
     let eta = (1.0 - root) / (1.0 + root);
 

@@ -5,7 +5,7 @@
 //! communication structure the algorithm would have on a real network, and
 //! every neighbor exchange increments the P2P counters.
 
-use super::weights::{active_local_degree_weights, WeightMatrix};
+use super::weights::{active_local_degree_weights, SparseWeights, WeightMatrix};
 use crate::fault::FaultPlan;
 use crate::graph::Graph;
 use crate::linalg::Mat;
@@ -138,15 +138,46 @@ pub fn consensus_rounds(
     ConsensusOutcome { rounds }
 }
 
+/// Rejoin warm-start rule (PR 6 follow-on): a node returning from a
+/// down period holds a frozen pre-drop estimate that would drag the
+/// masked eq. 11 average; on its rejoin round it instead **adopts the
+/// lowest-rank alive neighbor's estimate** (adjacency lists are sorted,
+/// so "first alive neighbor" is "lowest id"). Returns `Some(source)`
+/// when `round` is node `i`'s rejoin round — the node to copy from, or
+/// `i` itself when no alive neighbor exists or the chosen neighbor's
+/// message was severed/lost this round (in the MPI runtime the warm-start
+/// source is whatever landed in the inbox, so the fallback must key off
+/// the same delivery verdicts). Pure in `(plan, round, alive, i)`: the
+/// detection uses the plan's previous-round membership rather than any
+/// carried state, so checkpoint/resume and row splits stay bitwise.
+#[inline]
+fn rejoin_source(
+    g: &Graph,
+    plan: &FaultPlan,
+    round: u64,
+    alive: &[bool],
+    i: usize,
+) -> Option<usize> {
+    if round == 0 || !plan.node_down(i, round - 1) {
+        return None;
+    }
+    let pick = g.adj[i].iter().copied().find(|&j| alive[j]);
+    Some(match pick {
+        Some(j) if !plan.edge_cut(round, i, j) && !plan.msg_lost(round, j, i) => j,
+        _ => i,
+    })
+}
+
 /// Rows `lo..hi` of one node's mixing update under an active
-/// [`FaultPlan`]: a dead node freezes (`dst ← src_i`); an alive node
-/// mixes with the **active-subgraph** weights, substituting its own
-/// value for any neighbor message severed by a partition or dropped by
-/// the loss coin (`dst += w_ij src_i` instead of `w_ij src_j`). The
-/// self-substitution keeps every realized row stochastic, so iterates
-/// stay bounded under arbitrary loss. All fault verdicts are pure
-/// functions of `(plan, round, i, j)`, so any row split still assembles
-/// to the serial result bitwise.
+/// [`FaultPlan`]: a dead node freezes (`dst ← src_i`); a node on its
+/// rejoin round warm-starts from a live neighbor ([`rejoin_source`]); an
+/// alive node mixes with the **active-subgraph** weights, substituting
+/// its own value for any neighbor message severed by a partition or
+/// dropped by the loss coin (`dst += w_ij src_i` instead of
+/// `w_ij src_j`). The self-substitution keeps every realized row
+/// stochastic, so iterates stay bounded under arbitrary loss. All fault
+/// verdicts are pure functions of `(plan, round, i, j)`, so any row
+/// split still assembles to the serial result bitwise.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn mix_node_rows_faulty(
@@ -165,6 +196,10 @@ fn mix_node_rows_faulty(
     let (s0, s1) = (lo * cols, hi * cols);
     dst_rows.copy_from_slice(&src[i].data[s0..s1]);
     if !alive[i] {
+        return;
+    }
+    if let Some(from) = rejoin_source(g, plan, round, alive, i) {
+        dst_rows.copy_from_slice(&src[from].data[s0..s1]);
         return;
     }
     let wii = awm.w.get(i, i);
@@ -200,6 +235,9 @@ fn mix_scalar_faulty(
 ) -> f64 {
     if !alive[i] {
         return src[i];
+    }
+    if let Some(from) = rejoin_source(g, plan, round, alive, i) {
+        return src[from];
     }
     let mut s = awm.w.get(i, i) * src[i];
     for &j in &g.adj[i] {
@@ -294,6 +332,287 @@ pub fn faulty_consensus_rounds(
                         // exactly one task.
                         let d = unsafe { dst.rows_mut(i, lo, hi) };
                         mix_node_rows_faulty(g, awm, plan, round, alive, src, i, lo, hi, d);
+                    });
+                }
+            }
+        }
+        for i in 0..n {
+            if !alive[i] {
+                continue;
+            }
+            let msgs = g.adj[i]
+                .iter()
+                .filter(|&&j| alive[j] && !plan.edge_cut(round, i, j))
+                .count() as u64;
+            counters.record_sends(i, msgs, elems);
+        }
+        std::mem::swap(z, next);
+        if let Some((w_src, w_dst)) = &mut scalar {
+            std::mem::swap(*w_src, *w_dst);
+        }
+    }
+    start_round + rounds as u64
+}
+
+/// Rows `lo..hi` of one node's mixing update off **sparse** weights —
+/// the O(deg(i)) production kernel. Identical per-element operation
+/// order to [`mix_node_rows`] (copy, scale by the diagonal, one axpy per
+/// neighbor in adjacency order), and [`SparseWeights`] rows mirror
+/// `Graph::adj` element-for-element, so the result is **bitwise
+/// identical** to the dense kernel while never touching an N×N matrix.
+#[inline]
+fn sparse_mix_node_rows(
+    sw: &SparseWeights,
+    src: &[Mat],
+    i: usize,
+    lo: usize,
+    hi: usize,
+    dst_rows: &mut [f64],
+) {
+    let cols = src[i].cols;
+    let (s0, s1) = (lo * cols, hi * cols);
+    let wii = sw.diag[i];
+    dst_rows.copy_from_slice(&src[i].data[s0..s1]);
+    for v in dst_rows.iter_mut() {
+        *v *= wii;
+    }
+    let (ncols, nvals) = sw.row(i);
+    for (&j, &w) in ncols.iter().zip(nvals.iter()) {
+        for (d, &s) in dst_rows.iter_mut().zip(src[j].data[s0..s1].iter()) {
+            *d += w * s;
+        }
+    }
+}
+
+/// The matching sparse update for the push-sum scalar weight channel.
+#[inline]
+fn sparse_mix_scalar(sw: &SparseWeights, src: &[f64], i: usize) -> f64 {
+    let mut s = sw.diag[i] * src[i];
+    let (ncols, nvals) = sw.row(i);
+    for (&j, &w) in ncols.iter().zip(nvals.iter()) {
+        s += w * src[j];
+    }
+    s
+}
+
+/// Sparse sibling of [`consensus_rounds`] — one round costs O(edges)
+/// plus the matrix arithmetic, never O(N²). Bitwise identical to the
+/// dense engine for any weight matrix whose graph-structured entries
+/// `sw` carries (pinned per topology family by tests below), and
+/// allocation-free after warm-up: the kernel writes through the caller's
+/// double buffer and view scratch only.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_consensus_rounds(
+    sw: &SparseWeights,
+    z: &mut Vec<Mat>,
+    next: &mut Vec<Mat>,
+    mut scalar: Option<(&mut Vec<f64>, &mut Vec<f64>)>,
+    rounds: usize,
+    counters: &mut P2pCounters,
+    pool: &NodePool,
+    views: &mut MatRowsScratch,
+) -> ConsensusOutcome {
+    let n = sw.n();
+    assert_eq!(z.len(), n);
+    assert_eq!(next.len(), n);
+    if n == 0 || rounds == 0 {
+        return ConsensusOutcome { rounds: 0 };
+    }
+    let elems = z[0].rows * z[0].cols + usize::from(scalar.is_some());
+    let mat_rows = z[0].rows;
+    for _round in 0..rounds {
+        {
+            let src: &[Mat] = z.as_slice();
+            let dst = views.fill(next.as_mut_slice());
+            match &mut scalar {
+                Some((w_src, w_dst)) => {
+                    let ws: &[f64] = w_src.as_slice();
+                    let wd = DisjointSlice::new(w_dst.as_mut_slice());
+                    pool.run_chunks2(n, &|_| mat_rows, &|i, lo, hi| {
+                        // SAFETY: rows [lo, hi) of node i belong to
+                        // exactly one task; the scalar slot is written
+                        // only by the task owning the first rows.
+                        let d = unsafe { dst.rows_mut(i, lo, hi) };
+                        sparse_mix_node_rows(sw, src, i, lo, hi, d);
+                        if lo == 0 {
+                            // SAFETY: slot i is written only by the task
+                            // owning the first rows of node i.
+                            unsafe { *wd.get_mut(i) = sparse_mix_scalar(sw, ws, i) };
+                        }
+                    });
+                }
+                None => {
+                    pool.run_chunks2(n, &|_| mat_rows, &|i, lo, hi| {
+                        // SAFETY: rows [lo, hi) of node i belong to
+                        // exactly one task.
+                        let d = unsafe { dst.rows_mut(i, lo, hi) };
+                        sparse_mix_node_rows(sw, src, i, lo, hi, d);
+                    });
+                }
+            }
+        }
+        for i in 0..n {
+            // deg(i) is row i's stored-entry count — no graph needed.
+            counters.record_sends(i, (sw.off[i + 1] - sw.off[i]) as u64, elems);
+        }
+        std::mem::swap(z, next);
+        if let Some((w_src, w_dst)) = &mut scalar {
+            std::mem::swap(*w_src, *w_dst);
+        }
+    }
+    ConsensusOutcome { rounds }
+}
+
+/// Sparse faulty row kernel. `asw` holds the **active** weights
+/// ([`SparseWeights::refresh_active`]); dead neighbors are skipped via
+/// the alive mask exactly like the dense kernel — never by multiplying
+/// the stored zero through, which would break bit-parity (`d + 0.0·s`
+/// is not a no-op when `d == -0.0`). Rejoin rounds warm-start through
+/// the same [`rejoin_source`] rule as the dense kernel.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn sparse_mix_node_rows_faulty(
+    g: &Graph,
+    asw: &SparseWeights,
+    plan: &FaultPlan,
+    round: u64,
+    alive: &[bool],
+    src: &[Mat],
+    i: usize,
+    lo: usize,
+    hi: usize,
+    dst_rows: &mut [f64],
+) {
+    let cols = src[i].cols;
+    let (s0, s1) = (lo * cols, hi * cols);
+    dst_rows.copy_from_slice(&src[i].data[s0..s1]);
+    if !alive[i] {
+        return;
+    }
+    if let Some(from) = rejoin_source(g, plan, round, alive, i) {
+        dst_rows.copy_from_slice(&src[from].data[s0..s1]);
+        return;
+    }
+    let wii = asw.diag[i];
+    for v in dst_rows.iter_mut() {
+        *v *= wii;
+    }
+    let (ncols, nvals) = asw.row(i);
+    for (&j, &w) in ncols.iter().zip(nvals.iter()) {
+        if !alive[j] {
+            continue; // stored weight is 0 — skip, don't multiply through
+        }
+        let from = if plan.edge_cut(round, i, j) || plan.msg_lost(round, j, i) {
+            i // message j → i did not arrive: fold w_ij onto own value
+        } else {
+            j
+        };
+        for (d, &s) in dst_rows.iter_mut().zip(src[from].data[s0..s1].iter()) {
+            *d += w * s;
+        }
+    }
+}
+
+/// The matching sparse faulty update for the push-sum scalar channel.
+#[inline]
+fn sparse_mix_scalar_faulty(
+    g: &Graph,
+    asw: &SparseWeights,
+    plan: &FaultPlan,
+    round: u64,
+    alive: &[bool],
+    src: &[f64],
+    i: usize,
+) -> f64 {
+    if !alive[i] {
+        return src[i];
+    }
+    if let Some(from) = rejoin_source(g, plan, round, alive, i) {
+        return src[from];
+    }
+    let mut s = asw.diag[i] * src[i];
+    let (ncols, nvals) = asw.row(i);
+    for (&j, &w) in ncols.iter().zip(nvals.iter()) {
+        if !alive[j] {
+            continue;
+        }
+        let from =
+            if plan.edge_cut(round, i, j) || plan.msg_lost(round, j, i) { i } else { j };
+        s += w * src[from];
+    }
+    s
+}
+
+/// Sparse sibling of [`faulty_consensus_rounds`] — the event-driven
+/// fault path: membership is re-evaluated every round, but the active
+/// Metropolis–Hastings weights are re-derived **in place** (O(active
+/// edges), buffer-reusing) only at membership epochs, so steady rounds
+/// between epochs cost O(active edges) with no N² scan and no
+/// allocation beyond the first epoch's scratch growth. Bitwise identical
+/// to the dense faulty engine for every plan (same kernels, same
+/// verdicts, same weight values).
+///
+/// Returns the advanced round stamp (`start_round + rounds`).
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_faulty_consensus_rounds(
+    g: &Graph,
+    plan: &FaultPlan,
+    start_round: u64,
+    alive: &mut [bool],
+    asw: &mut SparseWeights,
+    z: &mut Vec<Mat>,
+    next: &mut Vec<Mat>,
+    mut scalar: Option<(&mut Vec<f64>, &mut Vec<f64>)>,
+    rounds: usize,
+    counters: &mut P2pCounters,
+    pool: &NodePool,
+    views: &mut MatRowsScratch,
+) -> u64 {
+    let n = g.n;
+    assert_eq!(z.len(), n);
+    assert_eq!(next.len(), n);
+    assert_eq!(alive.len(), n);
+    if n == 0 || rounds == 0 {
+        return start_round;
+    }
+    let elems = z[0].rows * z[0].cols + usize::from(scalar.is_some());
+    let mat_rows = z[0].rows;
+    for k in 0..rounds {
+        let round = start_round + k as u64;
+        plan.fill_alive_mask(round, alive);
+        if k == 0 || plan.membership_changes_at(round) {
+            asw.refresh_active(g, alive);
+        }
+        {
+            let src: &[Mat] = z.as_slice();
+            let dst = views.fill(next.as_mut_slice());
+            let (asw, alive): (&SparseWeights, &[bool]) = (asw, alive);
+            match &mut scalar {
+                Some((w_src, w_dst)) => {
+                    let ws: &[f64] = w_src.as_slice();
+                    let wd = DisjointSlice::new(w_dst.as_mut_slice());
+                    pool.run_chunks2(n, &|_| mat_rows, &|i, lo, hi| {
+                        // SAFETY: rows [lo, hi) of node i belong to
+                        // exactly one task; the scalar slot is written
+                        // only by the task owning the first rows.
+                        let d = unsafe { dst.rows_mut(i, lo, hi) };
+                        sparse_mix_node_rows_faulty(g, asw, plan, round, alive, src, i, lo, hi, d);
+                        if lo == 0 {
+                            // SAFETY: slot i is written only by the task
+                            // owning the first rows of node i.
+                            unsafe {
+                                *wd.get_mut(i) =
+                                    sparse_mix_scalar_faulty(g, asw, plan, round, alive, ws, i)
+                            };
+                        }
+                    });
+                }
+                None => {
+                    pool.run_chunks2(n, &|_| mat_rows, &|i, lo, hi| {
+                        // SAFETY: rows [lo, hi) of node i belong to
+                        // exactly one task.
+                        let d = unsafe { dst.rows_mut(i, lo, hi) };
+                        sparse_mix_node_rows_faulty(g, asw, plan, round, alive, src, i, lo, hi, d);
                     });
                 }
             }
@@ -628,5 +947,274 @@ mod tests {
             errs.push(worst);
         }
         assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    use crate::consensus::weights::sparse_local_degree_weights;
+
+    /// Tentpole contract: the sparse engine reproduces the dense engine
+    /// bit-for-bit — matrices, scalar channel, and counters — across
+    /// every `GroupTopo` family.
+    #[test]
+    fn sparse_rounds_bitwise_match_dense_all_topologies() {
+        let mut rng = Rng::new(13);
+        for spec in ["erdos", "ring", "star", "path", "complete", "grid"] {
+            let g = Graph::from_spec(spec, 16, 0.35, &mut rng);
+            let wm = local_degree_weights(&g);
+            let sw = sparse_local_degree_weights(&g);
+            let z0: Vec<Mat> = (0..g.n).map(|_| Mat::gauss(5, 3, &mut rng)).collect();
+            let rounds = 19;
+
+            let mut z_d = z0.clone();
+            let mut next_d: Vec<Mat> =
+                z_d.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+            let mut s_src_d = vec![0.0; g.n];
+            s_src_d[0] = 1.0;
+            let mut s_dst_d = vec![0.0; g.n];
+            let mut c_d = P2pCounters::new(g.n);
+            let mut views_d = MatRowsScratch::new();
+            consensus_rounds(
+                &g,
+                &wm,
+                &mut z_d,
+                &mut next_d,
+                Some((&mut s_src_d, &mut s_dst_d)),
+                rounds,
+                &mut c_d,
+                &NodePool::serial(),
+                &mut views_d,
+            );
+
+            let mut z_s = z0.clone();
+            let mut next_s: Vec<Mat> =
+                z_s.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+            let mut s_src_s = vec![0.0; g.n];
+            s_src_s[0] = 1.0;
+            let mut s_dst_s = vec![0.0; g.n];
+            let mut c_s = P2pCounters::new(g.n);
+            let mut views_s = MatRowsScratch::new();
+            sparse_consensus_rounds(
+                &sw,
+                &mut z_s,
+                &mut next_s,
+                Some((&mut s_src_s, &mut s_dst_s)),
+                rounds,
+                &mut c_s,
+                &NodePool::serial(),
+                &mut views_s,
+            );
+
+            for (a, b) in z_d.iter().zip(&z_s) {
+                for (x, y) in a.data.iter().zip(&b.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{spec}: matrix channel");
+                }
+            }
+            for (x, y) in s_src_d.iter().zip(&s_src_s) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{spec}: scalar channel");
+            }
+            assert_eq!(c_d.sent, c_s.sent, "{spec}");
+            assert_eq!(c_d.payload, c_s.payload, "{spec}");
+        }
+    }
+
+    /// Same contract under fault plans: loss coins, churn, and a
+    /// partition window all land on identical bits through the sparse
+    /// faulty engine (including the epoch-driven in-place weight
+    /// refresh).
+    #[test]
+    fn sparse_faulty_bitwise_matches_dense_all_topologies() {
+        let mut rng = Rng::new(17);
+        let plans = [
+            FaultPlan::none(),
+            FaultPlan::none().with_loss(0.25, 7),
+            FaultPlan::none().with_node_churn(2, 3, 9).with_loss(0.1, 11),
+            FaultPlan::none().with_partition(4, 10, vec![0, 1, 2]).with_node_down(5, 12),
+        ];
+        for spec in ["erdos", "ring", "star", "path", "complete", "grid"] {
+            let g = Graph::from_spec(spec, 16, 0.35, &mut rng);
+            let z0: Vec<Mat> = (0..g.n).map(|_| Mat::gauss(4, 2, &mut rng)).collect();
+            for (pi, plan) in plans.iter().enumerate() {
+                let rounds = 18;
+
+                let mut alive_d = vec![true; g.n];
+                let mut awm = local_degree_weights(&g);
+                let mut z_d = z0.clone();
+                let mut next_d: Vec<Mat> =
+                    z_d.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+                let mut c_d = P2pCounters::new(g.n);
+                let mut views_d = MatRowsScratch::new();
+                faulty_consensus_rounds(
+                    &g,
+                    plan,
+                    0,
+                    &mut alive_d,
+                    &mut awm,
+                    &mut z_d,
+                    &mut next_d,
+                    None,
+                    rounds,
+                    &mut c_d,
+                    &NodePool::serial(),
+                    &mut views_d,
+                );
+
+                let mut alive_s = vec![true; g.n];
+                let mut asw = sparse_local_degree_weights(&g);
+                let mut z_s = z0.clone();
+                let mut next_s: Vec<Mat> =
+                    z_s.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+                let mut c_s = P2pCounters::new(g.n);
+                let mut views_s = MatRowsScratch::new();
+                sparse_faulty_consensus_rounds(
+                    &g,
+                    plan,
+                    0,
+                    &mut alive_s,
+                    &mut asw,
+                    &mut z_s,
+                    &mut next_s,
+                    None,
+                    rounds,
+                    &mut c_s,
+                    &NodePool::serial(),
+                    &mut views_s,
+                );
+
+                for (a, b) in z_d.iter().zip(&z_s) {
+                    for (x, y) in a.data.iter().zip(&b.data) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{spec} plan {pi}");
+                    }
+                }
+                assert_eq!(c_d.sent, c_s.sent, "{spec} plan {pi}");
+                assert_eq!(alive_d, alive_s, "{spec} plan {pi}");
+            }
+        }
+    }
+
+    /// Satellite regression: a rejoining node adopts its lowest-rank
+    /// alive neighbor's estimate on the rejoin round instead of keeping
+    /// the frozen pre-drop value, and resumes normal mixing afterwards.
+    #[test]
+    fn rejoin_warm_starts_from_lowest_alive_neighbor() {
+        let mut rng = Rng::new(23);
+        let g = Graph::complete(6);
+        let z0: Vec<Mat> = (0..6).map(|_| Mat::gauss(4, 2, &mut rng)).collect();
+        let plan = FaultPlan::none().with_node_churn(2, 2, 5);
+        let mut alive = vec![true; 6];
+        let mut awm = local_degree_weights(&g);
+        let mut z = z0.clone();
+        let mut next: Vec<Mat> = z.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+        let mut c = P2pCounters::new(6);
+        let mut views = MatRowsScratch::new();
+        // Rounds 0..=4: node 2 is down from round 2 through round 4.
+        let stamp = faulty_consensus_rounds(
+            &g,
+            &plan,
+            0,
+            &mut alive,
+            &mut awm,
+            &mut z,
+            &mut next,
+            None,
+            5,
+            &mut c,
+            &NodePool::serial(),
+            &mut views,
+        );
+        assert_eq!(stamp, 5);
+        let frozen = z[2].clone();
+        // Lowest-rank alive neighbor of node 2 in a complete graph: 0.
+        let expected = z[0].clone();
+        // Round 5 is the rejoin round (down at 4, alive at 5).
+        faulty_consensus_rounds(
+            &g,
+            &plan,
+            stamp,
+            &mut alive,
+            &mut awm,
+            &mut z,
+            &mut next,
+            None,
+            1,
+            &mut c,
+            &NodePool::serial(),
+            &mut views,
+        );
+        assert!(alive[2]);
+        assert_eq!(z[2].data, expected.data, "warm-start copies neighbor 0's estimate");
+        assert_ne!(z[2].data, frozen.data, "rejoin must not keep the frozen estimate");
+        // After warm-start, everyone (no further faults) reaches the
+        // survivors' running average as usual.
+        faulty_consensus_rounds(
+            &g,
+            &plan,
+            6,
+            &mut alive,
+            &mut awm,
+            &mut z,
+            &mut next,
+            None,
+            300,
+            &mut c,
+            &NodePool::serial(),
+            &mut views,
+        );
+        let avg = exact_average(&z);
+        for (i, zi) in z.iter().enumerate() {
+            assert!(zi.dist_fro(&avg) < 1e-8, "node {i} converges after rejoin");
+        }
+    }
+
+    /// The rejoin fallback keeps the frozen value when no alive neighbor
+    /// exists (isolated survivor) — and stays bitwise across the sparse
+    /// engine.
+    #[test]
+    fn rejoin_with_no_alive_neighbor_keeps_frozen_value() {
+        let mut rng = Rng::new(29);
+        // Path 0-1-2: node 1 rejoins while both neighbors are down.
+        let g = Graph::path(3);
+        let z0: Vec<Mat> = (0..3).map(|_| Mat::gauss(3, 2, &mut rng)).collect();
+        let plan = FaultPlan::none()
+            .with_node_churn(1, 1, 3)
+            .with_node_down(0, 2)
+            .with_node_down(2, 2);
+        let mut alive = vec![true; 3];
+        let mut awm = local_degree_weights(&g);
+        let mut z = z0.clone();
+        let mut next: Vec<Mat> = z.iter().map(|m| Mat::zeros(m.rows, m.cols)).collect();
+        let mut c = P2pCounters::new(3);
+        let mut views = MatRowsScratch::new();
+        // Rounds 0..=2 freeze node 1 from round 1; capture its value.
+        faulty_consensus_rounds(
+            &g,
+            &plan,
+            0,
+            &mut alive,
+            &mut awm,
+            &mut z,
+            &mut next,
+            None,
+            3,
+            &mut c,
+            &NodePool::serial(),
+            &mut views,
+        );
+        let frozen = z[1].clone();
+        // Round 3: node 1 rejoins, neighbors 0 and 2 are both dead.
+        faulty_consensus_rounds(
+            &g,
+            &plan,
+            3,
+            &mut alive,
+            &mut awm,
+            &mut z,
+            &mut next,
+            None,
+            1,
+            &mut c,
+            &NodePool::serial(),
+            &mut views,
+        );
+        assert!(alive[1] && !alive[0] && !alive[2]);
+        assert_eq!(z[1].data, frozen.data, "no live neighbor: keep own estimate");
     }
 }

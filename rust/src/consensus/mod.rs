@@ -4,7 +4,13 @@ pub mod mixing;
 pub mod schedule;
 pub mod weights;
 
-pub use engine::{average_consensus, consensus_rounds, ConsensusOutcome};
+pub use engine::{
+    average_consensus, consensus_rounds, sparse_consensus_rounds,
+    sparse_faulty_consensus_rounds, ConsensusOutcome,
+};
 pub use mixing::{mixing_time, slem};
 pub use schedule::Schedule;
-pub use weights::{local_degree_weights, max_degree_weights, WeightMatrix};
+pub use weights::{
+    local_degree_weights, max_degree_weights, sparse_active_spectral_gap,
+    sparse_local_degree_weights, SparseWeights, WeightMatrix,
+};

@@ -11,6 +11,20 @@
 //! which is symmetric, doubly stochastic, and has positive diagonal —
 //! guaranteeing convergence of `W^t → (1/N)·11ᵀ` on connected, non-bipartite
 //! effective chains.
+//!
+//! Two representations share that arithmetic:
+//!
+//! * [`WeightMatrix`] — the dense `N×N` reference, fine for paper-sized
+//!   N ≤ ~20 and kept as the oracle the sparse path is parity-tested
+//!   against.
+//! * [`SparseWeights`] — CSR-style per-node `(neighbor, weight)` lists
+//!   built straight off `Graph::adj`, the production representation: a
+//!   consensus round over it costs O(edges), and at N = 10⁴ it stores
+//!   ~2|E| values instead of 10⁸. Because Metropolis weights are pure
+//!   functions of degrees and both builders subtract edge weights from
+//!   the diagonal in the same adjacency order, sparse and dense mixing
+//!   are **bitwise identical** (pinned by tests here and in
+//!   `consensus::engine`).
 
 use crate::graph::Graph;
 use crate::linalg::Mat;
@@ -81,6 +95,11 @@ pub fn active_local_degree_weights(g: &Graph, alive: &[bool]) -> WeightMatrix {
 /// `λ₂` is the modulus of the second-largest eigenvalue — estimated by
 /// power iteration on the consensus-deflated operator
 /// `W_S − (1/|S|)·11ᵀ`. Positive iff consensus mixes on the survivors.
+///
+/// Dense reference path: materializes the |S|×|S| deflated operator, so
+/// it is quadratic in survivors — use [`sparse_active_spectral_gap`] for
+/// anything beyond paper-sized N (it dispatches back here below
+/// [`DENSE_GAP_NODES`], bitwise identically).
 pub fn active_spectral_gap(wm: &WeightMatrix, alive: &[bool]) -> f64 {
     let idx: Vec<usize> = (0..wm.n()).filter(|&i| alive[i]).collect();
     let s = idx.len();
@@ -94,6 +113,119 @@ pub fn active_spectral_gap(wm: &WeightMatrix, alive: &[bool]) -> f64 {
         }
     }
     1.0 - b.spectral_norm(300)
+}
+
+/// Survivor-count threshold below which [`sparse_active_spectral_gap`]
+/// materializes the compact dense operator (bitwise equal to
+/// [`active_spectral_gap`]); above it the matrix-free estimate runs in
+/// O(iters · (edges + N)).
+pub const DENSE_GAP_NODES: usize = 128;
+
+/// Spectral gap `1 − λ₂` on the alive subset from **sparse** active
+/// weights (`sw` as produced by [`SparseWeights::refresh_active`]).
+///
+/// Below [`DENSE_GAP_NODES`] survivors this compacts the deflated
+/// operator `B = W_S − (1/|S|)·11ᵀ` into a dense matrix and reuses the
+/// reference power iteration — bitwise identical to
+/// [`active_spectral_gap`] on the matching dense matrix. Above the
+/// threshold it runs the same fixed-iteration (300-step) power scheme on
+/// `B²` matrix-free: the uniform start is annihilated by `B` up to the
+/// row-sum rounding residue, whose generic overlap with the λ₂
+/// eigenspace seeds the iteration — deterministic, same mechanism as the
+/// dense path, but with a different summation order, so large-N parity
+/// with the dense estimate is tolerance-level rather than bitwise.
+pub fn sparse_active_spectral_gap(sw: &SparseWeights, alive: &[bool]) -> f64 {
+    let n = sw.n();
+    assert_eq!(alive.len(), n);
+    let s = alive.iter().filter(|&&a| a).count();
+    if s <= 1 {
+        return 1.0;
+    }
+    let inv = 1.0 / s as f64;
+    if s <= DENSE_GAP_NODES {
+        // Compact position map: node id -> survivor index.
+        let mut pos = vec![usize::MAX; n];
+        let mut a = 0usize;
+        for (i, p) in pos.iter_mut().enumerate() {
+            if alive[i] {
+                *p = a;
+                a += 1;
+            }
+        }
+        let mut b = Mat::zeros(s, s);
+        for i in 0..n {
+            if !alive[i] {
+                continue;
+            }
+            let r = pos[i];
+            // `0.0 - inv == -inv` bitwise, so pre-filling the row and
+            // overwriting the structural entries reproduces the dense
+            // `w.get(i, j) - inv` construction bit-for-bit.
+            for c in 0..s {
+                b.set(r, c, -inv);
+            }
+            let (cols, vals) = sw.row(i);
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                if alive[j] {
+                    b.set(r, pos[j], v - inv);
+                }
+            }
+            b.set(r, r, sw.diag[i] - inv);
+        }
+        return 1.0 - b.spectral_norm(300);
+    }
+    // Matrix-free power iteration on B² over full-length masked vectors.
+    let mut v = vec![0.0; n];
+    let seed = 1.0 / (s as f64).sqrt();
+    for (i, x) in v.iter_mut().enumerate() {
+        if alive[i] {
+            *x = seed;
+        }
+    }
+    let mut bv = vec![0.0; n];
+    let mut w = vec![0.0; n];
+    let mut norm = 0.0;
+    for _ in 0..300 {
+        apply_deflated(sw, alive, inv, &v, &mut bv);
+        apply_deflated(sw, alive, inv, &bv, &mut w);
+        let wn = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if wn == 0.0 {
+            // B ≡ 0 on the survivors (exact-arithmetic complete graph):
+            // λ₂ = 0, maximal gap — mirrors `Mat::spectral_norm`'s zero
+            // return feeding `1.0 - 0.0` on the dense path.
+            return 1.0;
+        }
+        for x in w.iter_mut() {
+            *x /= wn;
+        }
+        std::mem::swap(&mut v, &mut w);
+        norm = wn;
+    }
+    1.0 - norm.sqrt()
+}
+
+/// `out = (W_S − (1/|S|)·11ᵀ) v` on the alive coordinates (dead
+/// coordinates of `v` are zero and stay zero in `out`).
+fn apply_deflated(sw: &SparseWeights, alive: &[bool], inv: f64, v: &[f64], out: &mut [f64]) {
+    let mut sum = 0.0;
+    for (i, &x) in v.iter().enumerate() {
+        if alive[i] {
+            sum += x;
+        }
+    }
+    let shift = inv * sum;
+    for (i, o) in out.iter_mut().enumerate() {
+        if !alive[i] {
+            *o = 0.0;
+            continue;
+        }
+        let (cols, vals) = sw.row(i);
+        let mut acc = sw.diag[i] * v[i];
+        for (&j, &wv) in cols.iter().zip(vals.iter()) {
+            acc += wv * v[j];
+        }
+        *o = acc - shift;
+    }
 }
 
 /// Max-degree weights: `w_ij = 1/(1+Δ)` for edges, uniform alternative.
@@ -167,6 +299,232 @@ impl WeightMatrix {
         }
         v
     }
+}
+
+/// CSR-style sparse consensus weights: per-node neighbor/weight lists in
+/// `Graph::adj` order plus a separate diagonal.
+///
+/// Invariants (all builders maintain them):
+/// * `off.len() == n + 1`, row `i` occupies `cols[off[i]..off[i+1]]` /
+///   `vals[off[i]..off[i+1]]`, mirroring `g.adj[i]` element-for-element
+///   (adjacency lists are sorted ascending by construction in
+///   `graph::Graph`).
+/// * A structurally present entry may hold `0.0` (a dead neighbor after
+///   [`SparseWeights::refresh_active`]); kernels that must match the
+///   dense *faulty* path bitwise skip dead neighbors via the alive mask
+///   instead of multiplying the stored zero through (`d + 0.0·s` is not
+///   a bitwise no-op when `d == -0.0`).
+#[derive(Clone, Debug, Default)]
+pub struct SparseWeights {
+    /// Row offsets; `off[i]..off[i+1]` is row `i`'s neighbor range.
+    pub off: Vec<usize>,
+    /// Neighbor ids, in adjacency (ascending) order.
+    pub cols: Vec<usize>,
+    /// Off-diagonal weights, aligned with `cols`.
+    pub vals: Vec<f64>,
+    /// Diagonal weights `w_ii`.
+    pub diag: Vec<f64>,
+    /// Alive-degree scratch reused across membership epochs.
+    deg: Vec<usize>,
+}
+
+impl SparseWeights {
+    /// Structure-only skeleton mirroring `g.adj` (all weights zero).
+    pub fn with_structure(g: &Graph) -> SparseWeights {
+        let n = g.n;
+        let mut off = Vec::with_capacity(n + 1);
+        off.push(0usize);
+        let mut cols = Vec::new();
+        for i in 0..n {
+            cols.extend_from_slice(&g.adj[i]);
+            off.push(cols.len());
+        }
+        let nnz = cols.len();
+        SparseWeights { off, cols, vals: vec![0.0; nnz], diag: vec![0.0; n], deg: Vec::new() }
+    }
+
+    /// Extract the graph-structured entries of a dense matrix (custom
+    /// weight designs enter the sparse engine here; the consensus kernels
+    /// only ever read adjacency entries plus the diagonal, so this loses
+    /// nothing for any `W` respecting the graph's sparsity pattern).
+    pub fn from_dense(g: &Graph, wm: &WeightMatrix) -> SparseWeights {
+        assert_eq!(wm.n(), g.n, "weight matrix shape must match the graph");
+        let mut sw = SparseWeights::with_structure(g);
+        for i in 0..g.n {
+            let lo = sw.off[i];
+            for (k, &j) in g.adj[i].iter().enumerate() {
+                sw.vals[lo + k] = wm.w.get(i, j);
+            }
+            sw.diag[i] = wm.w.get(i, i);
+        }
+        sw
+    }
+
+    /// Recover the sparse form from a dense matrix alone by scanning for
+    /// structural nonzeros (for call sites that hold only a
+    /// `WeightMatrix`, e.g. mixing diagnostics). Rows stay in ascending
+    /// column order, so the kernels' bitwise contracts hold whenever the
+    /// dense matrix respects some graph's sparsity pattern.
+    pub fn from_matrix(wm: &WeightMatrix) -> SparseWeights {
+        let n = wm.n();
+        let mut off = Vec::with_capacity(n + 1);
+        off.push(0usize);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        let mut diag = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                let v = wm.w.get(i, j);
+                if j == i {
+                    diag[i] = v;
+                } else if v != 0.0 {
+                    cols.push(j);
+                    vals.push(v);
+                }
+            }
+            off.push(cols.len());
+        }
+        SparseWeights { off, cols, vals, diag, deg: Vec::new() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.diag.len()
+    }
+
+    /// Stored off-diagonal entry count (2|E|).
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Row `i`'s `(neighbor ids, weights)` slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.off[i], self.off[i + 1]);
+        (&self.cols[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Recompute Metropolis–Hastings weights on the alive-induced
+    /// subgraph **in place** — the membership-epoch path: O(active edges)
+    /// instead of an N×N rebuild, and buffer-reusing after the first
+    /// call. Value-for-value (hence bitwise, via [`Self::to_dense`])
+    /// identical to [`active_local_degree_weights`]: same degree
+    /// recomputation, same per-row subtraction order. Dead rows get the
+    /// identity row (`diag = 1`); entries toward dead neighbors are
+    /// zeroed but remain structurally present.
+    pub fn refresh_active(&mut self, g: &Graph, alive: &[bool]) {
+        assert_eq!(alive.len(), g.n);
+        assert_eq!(self.n(), g.n, "sparse structure must match the graph");
+        let SparseWeights { off, cols, vals, diag, deg } = self;
+        deg.clear();
+        deg.resize(g.n, 0);
+        for i in 0..g.n {
+            if alive[i] {
+                deg[i] = g.adj[i].iter().filter(|&&j| alive[j]).count();
+            }
+        }
+        for i in 0..g.n {
+            let (lo, hi) = (off[i], off[i + 1]);
+            if !alive[i] {
+                for v in &mut vals[lo..hi] {
+                    *v = 0.0;
+                }
+                diag[i] = 1.0;
+                continue;
+            }
+            let mut d = 1.0;
+            for k in lo..hi {
+                let j = cols[k];
+                if !alive[j] {
+                    vals[k] = 0.0;
+                    continue;
+                }
+                let wij = 1.0 / (1.0 + deg[i].max(deg[j]) as f64);
+                vals[k] = wij;
+                d -= wij;
+            }
+            diag[i] = d;
+        }
+    }
+
+    /// Materialize the dense reference (tests and small-N diagnostics).
+    pub fn to_dense(&self) -> WeightMatrix {
+        let n = self.n();
+        let mut w = Mat::zeros(n, n);
+        for i in 0..n {
+            let (cols, vals) = self.row(i);
+            for (&j, &v) in cols.iter().zip(vals.iter()) {
+                w.set(i, j, v);
+            }
+            w.set(i, i, self.diag[i]);
+        }
+        WeightMatrix { w }
+    }
+
+    /// Sparse `W^t e_1` — **bitwise identical** to
+    /// [`WeightMatrix::pow_e1`] on the matching dense matrix. The dense
+    /// row dot accumulates over all `j` ascending; every structural zero
+    /// contributes an exact `±0.0` term, and the running sum is never
+    /// `-0.0` (it starts at `+0.0`, and `+0.0 + ±0.0 = +0.0` while exact
+    /// cancellation rounds to `+0.0`), so adding those terms is a bitwise
+    /// no-op. Skipping them and interleaving the diagonal at column `i`
+    /// therefore reproduces the dense bits while costing O(edges) per
+    /// step.
+    pub fn pow_e1(&self, t: usize) -> Vec<f64> {
+        let n = self.n();
+        let mut v = vec![0.0; n];
+        if n > 0 {
+            v[0] = 1.0;
+        }
+        let mut nv = vec![0.0; n];
+        for _ in 0..t {
+            self.apply(&v, &mut nv);
+            std::mem::swap(&mut v, &mut nv);
+        }
+        v
+    }
+
+    /// One application `dst = W · src` in O(nnz), with the interleaved
+    /// accumulation order that reproduces the dense row dot bitwise (see
+    /// [`Self::pow_e1`] for the zero-skip argument).
+    pub fn apply(&self, src: &[f64], dst: &mut [f64]) {
+        let n = self.n();
+        debug_assert_eq!(src.len(), n);
+        debug_assert_eq!(dst.len(), n);
+        for i in 0..n {
+            let (lo, hi) = (self.off[i], self.off[i + 1]);
+            let mut s = 0.0;
+            let mut k = lo;
+            while k < hi && self.cols[k] < i {
+                s += self.vals[k] * src[self.cols[k]];
+                k += 1;
+            }
+            s += self.diag[i] * src[i];
+            while k < hi {
+                s += self.vals[k] * src[self.cols[k]];
+                k += 1;
+            }
+            dst[i] = s;
+        }
+    }
+}
+
+/// Local-degree (Metropolis–Hastings) weights in sparse form — the same
+/// per-row arithmetic order as [`local_degree_weights`], so
+/// `sparse_local_degree_weights(g).to_dense()` is bitwise identical to
+/// the dense builder.
+pub fn sparse_local_degree_weights(g: &Graph) -> SparseWeights {
+    let mut sw = SparseWeights::with_structure(g);
+    for i in 0..g.n {
+        let lo = sw.off[i];
+        let mut diag = 1.0;
+        for (k, &j) in g.adj[i].iter().enumerate() {
+            let wij = 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+            sw.vals[lo + k] = wij;
+            diag -= wij;
+        }
+        sw.diag[i] = diag;
+    }
+    sw
 }
 
 #[cfg(test)]
@@ -325,5 +683,143 @@ mod tests {
         let v = wm.pow_e1(0);
         assert_eq!(v[0], 1.0);
         assert!(v[1..].iter().all(|&x| x == 0.0));
+    }
+
+    fn assert_bits_eq(a: &WeightMatrix, b: &WeightMatrix, what: &str) {
+        assert_eq!(a.n(), b.n(), "{what}: shape");
+        for (x, y) in a.w.data.iter().zip(&b.w.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: sparse≡dense bit contract");
+        }
+    }
+
+    #[test]
+    fn sparse_builder_bitwise_matches_dense() {
+        let mut rng = Rng::new(21);
+        for spec in ["erdos", "ring", "star", "path", "grid", "complete"] {
+            let g = Graph::from_spec(spec, 16, 0.4, &mut rng);
+            let dense = local_degree_weights(&g);
+            let sparse = sparse_local_degree_weights(&g);
+            assert_bits_eq(&sparse.to_dense(), &dense, spec);
+            // Round-trip through the dense extractor lands on the same bits.
+            let rt = SparseWeights::from_dense(&g, &dense);
+            assert_bits_eq(&rt.to_dense(), &dense, spec);
+            assert_eq!(sparse.nnz(), g.adj.iter().map(Vec::len).sum::<usize>());
+            // The graph-free nonzero scan recovers the same structure.
+            let scanned = SparseWeights::from_matrix(&dense);
+            assert_eq!(scanned.off, sparse.off, "{spec}");
+            assert_eq!(scanned.cols, sparse.cols, "{spec}");
+            assert_bits_eq(&scanned.to_dense(), &dense, spec);
+        }
+    }
+
+    #[test]
+    fn sparse_refresh_active_bitwise_matches_dense_active() {
+        let mut rng = Rng::new(31);
+        for spec in ["erdos", "ring", "star", "grid", "complete"] {
+            let g = Graph::from_spec(spec, 12, 0.35, &mut rng);
+            let mut sw = sparse_local_degree_weights(&g);
+            let mut alive = vec![true; g.n];
+            for _step in 0..40 {
+                let node = rng.next_below(g.n);
+                if alive[node] && alive.iter().filter(|&&a| a).count() > 1 {
+                    alive[node] = false;
+                } else {
+                    alive[node] = true;
+                }
+                sw.refresh_active(&g, &alive);
+                let dense = active_local_degree_weights(&g, &alive);
+                assert_bits_eq(&sw.to_dense(), &dense, spec);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_pow_e1_bitwise_matches_dense() {
+        let mut rng = Rng::new(41);
+        for spec in ["erdos", "ring", "star", "grid"] {
+            let g = Graph::from_spec(spec, 13, 0.4, &mut rng);
+            let dense = local_degree_weights(&g);
+            let sparse = sparse_local_degree_weights(&g);
+            for t in [0usize, 1, 7, 53] {
+                let dv = dense.pow_e1(t);
+                let sv = sparse.pow_e1(t);
+                for (a, b) in dv.iter().zip(&sv) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{spec} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_gap_small_n_bitwise_matches_dense_reference() {
+        let mut rng = Rng::new(51);
+        for spec in ["erdos", "ring", "star", "grid"] {
+            let g = Graph::from_spec(spec, 12, 0.4, &mut rng);
+            let mut sw = sparse_local_degree_weights(&g);
+            let mut alive = vec![true; g.n];
+            for _step in 0..20 {
+                let node = rng.next_below(g.n);
+                if alive[node] && alive.iter().filter(|&&a| a).count() > 2 {
+                    alive[node] = false;
+                } else {
+                    alive[node] = true;
+                }
+                sw.refresh_active(&g, &alive);
+                let dense = active_local_degree_weights(&g, &alive);
+                let gd = active_spectral_gap(&dense, &alive);
+                let gs = sparse_active_spectral_gap(&sw, &alive);
+                assert_eq!(gd.to_bits(), gs.to_bits(), "{spec}: sub-threshold gap dispatch");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_gap_parity_with_sym_eig_at_small_n() {
+        let mut rng = Rng::new(61);
+        for spec in ["erdos", "path", "ring"] {
+            let g = Graph::from_spec(spec, 14, 0.45, &mut rng);
+            let mut alive = vec![true; g.n];
+            alive[3] = false;
+            let dense = active_local_degree_weights(&g, &alive);
+            let mut sw = sparse_local_degree_weights(&g);
+            sw.refresh_active(&g, &alive);
+            // Exact λ₂ modulus from the compacted survivor matrix.
+            let idx: Vec<usize> = (0..g.n).filter(|&i| alive[i]).collect();
+            let s = idx.len();
+            let mut ws = Mat::zeros(s, s);
+            for (a, &i) in idx.iter().enumerate() {
+                for (c, &j) in idx.iter().enumerate() {
+                    ws.set(a, c, dense.w.get(i, j));
+                }
+            }
+            let (vals, _) = crate::linalg::eig::sym_eig(&ws);
+            let lam2 = vals[1].abs().max(vals[s - 1].abs());
+            let gap = sparse_active_spectral_gap(&sw, &alive);
+            assert!(
+                (gap - (1.0 - lam2)).abs() < 1e-5,
+                "{spec}: power estimate {gap} vs sym_eig {}",
+                1.0 - lam2
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_gap_matrix_free_parity_above_threshold() {
+        // 160 survivors > DENSE_GAP_NODES forces the matrix-free path;
+        // the dense reference stays feasible at this size, so the two
+        // estimates (same 300-iteration scheme, different summation
+        // order) must agree to tolerance.
+        let mut rng = Rng::new(71);
+        let g = Graph::erdos_renyi(160, 0.12, &mut rng);
+        let mut alive = vec![true; g.n];
+        alive[7] = false;
+        alive[93] = false;
+        let dense = active_local_degree_weights(&g, &alive);
+        let mut sw = sparse_local_degree_weights(&g);
+        sw.refresh_active(&g, &alive);
+        let gd = active_spectral_gap(&dense, &alive);
+        let gs = sparse_active_spectral_gap(&sw, &alive);
+        assert!(gs > 1e-6, "expander survivors must keep a gap, got {gs}");
+        assert!((gd - gs).abs() < 1e-5, "dense {gd} vs matrix-free {gs}");
     }
 }

@@ -24,6 +24,7 @@ pub mod figs_fdot;
 pub mod figs_real;
 pub mod figs_synth;
 pub mod real_tables;
+pub mod scale;
 pub mod straggler;
 pub mod synth_tables;
 pub mod topology_tables;
@@ -201,13 +202,14 @@ where
 /// — topology × straggler sweep on the virtual-clock MPI runtime; the
 /// async-gossip straggler ablation is emitted as the second table of
 /// `table5`; `churn` — drop-rate × topology fault-injection sweep with
-/// checkpoint/resume).
+/// checkpoint/resume; `scale` — N-scaling sweep of the sparse consensus
+/// path up to 10⁴ nodes).
 pub fn all_ids() -> Vec<&'static str> {
     vec![
         "table1", "table2", "table3", "table4", "table5", "table6", "table7",
         "table8", "table9", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6",
         "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "bdot_ext",
-        "topo_straggler", "churn",
+        "topo_straggler", "churn", "scale",
     ]
 }
 
@@ -238,6 +240,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<Vec<Table>> {
         "bdot_ext" => bdot_ext(ctx),
         "topo_straggler" => topology_tables::topo_straggler(ctx),
         "churn" => churn::churn(ctx),
+        "scale" => scale::scale(ctx),
         other => bail!("unknown experiment id '{other}' (see `dpsa list`)"),
     }?;
     let dir = ctx.out_dir.join(id);
@@ -314,7 +317,7 @@ mod tests {
     #[test]
     fn all_ids_covers_every_table_and_figure() {
         let ids = all_ids();
-        assert_eq!(ids.len(), 9 + 12 + 3);
+        assert_eq!(ids.len(), 9 + 12 + 4);
         for t in 1..=9 {
             assert!(ids.contains(&format!("table{t}").as_str()));
         }

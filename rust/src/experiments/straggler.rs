@@ -14,12 +14,15 @@
 use super::{par_map, ExpCtx};
 use crate::algorithms::SampleSetting;
 use crate::consensus::schedule::Schedule;
-use crate::consensus::weights::local_degree_weights;
+use crate::consensus::weights::sparse_local_degree_weights;
 use crate::data::spectrum::Spectrum;
 use crate::data::synthetic::SyntheticDataset;
 use crate::graph::Graph;
 use crate::linalg::Mat;
-use crate::network::mpi::{run_spmd, ClockMode, MpiConfig, StragglerSpec};
+use crate::network::mpi::{run_spmd, ClockMode, MpiConfig, MpiRun, StragglerSpec};
+use crate::runtime::qr_exec::SharedQr;
+use crate::runtime::workspace::node_scratch;
+use crate::runtime::{Backend, NativeBackend};
 use crate::util::rng::Rng;
 use crate::util::table::{fnum, p2p_k, Table};
 use anyhow::Result;
@@ -41,6 +44,71 @@ pub struct MpiStudy {
     pub max_err: f64,
 }
 
+/// One S-DOT run on the pooled runtime, returning the raw per-node
+/// results. This is the bit-parity surface against the simulator's
+/// [`run_sdot`](crate::algorithms::sdot::run_sdot): every numeric step
+/// mirrors the simulator's kernel exactly — the backend-dispatched
+/// covariance product, sparse-row Metropolis mixing in adjacency order,
+/// the thresholded `W^t e_1` rescale, and step 12 routed through the
+/// [`orthonormalize_nodes`](crate::runtime::qr_exec::orthonormalize_nodes)
+/// executor (via [`SharedQr`]) so MPI runs fan QR rows across cores like
+/// the simulator does.
+fn sdot_mpi_run(
+    setting: &SampleSetting,
+    graph: &Graph,
+    schedule: Schedule,
+    t_o: usize,
+    cfg: &MpiConfig,
+) -> MpiRun<Mat> {
+    let sw = Arc::new(sparse_local_degree_weights(graph));
+    let setting = Arc::new(setting.clone());
+    // Step-12 executor shared by all node bodies: calls serialize on a
+    // mutex, and each call row-fans one QR across the worker pool —
+    // bitwise the per-node serial factorization either way.
+    let shared_qr = Arc::new(SharedQr::new(crate::network::sim::default_threads()));
+
+    run_spmd(graph, cfg, move |ctx| {
+        let i = ctx.rank;
+        let backend = NativeBackend::default();
+        let mut scratch = node_scratch(1).pop().expect("one scratch slot");
+        let (cols, vals) = sw.row(i);
+        let mut q = setting.q_init.clone();
+        let mut z = Mat::zeros(0, 0);
+        let mut nz = Mat::zeros(0, 0);
+        for t in 1..=t_o {
+            // Step 5 through the same SIMD-dispatched kernel as the
+            // simulator (dispatch consistency: plain `apply` may round
+            // differently from the runtime backend).
+            backend.cov_apply_into(&setting.covs[i], &q, &mut z, &mut scratch.t0);
+            let rounds = schedule.rounds_at(t);
+            // Consensus inner loop with blocking neighbor exchanges;
+            // the inbox arrives in adjacency order, which is exactly the
+            // sparse row's column order.
+            for _ in 0..rounds {
+                nz.copy_from(&z);
+                nz.scale_inplace(sw.diag[i]);
+                for &(j, ref mj) in ctx.exchange(&z) {
+                    let k = cols.iter().position(|&c| c == j).expect("neighbor weight");
+                    nz.axpy(vals[k], mj);
+                }
+                std::mem::swap(&mut z, &mut nz);
+            }
+            // Step 11: rescale by [W^t e_1]_i with the simulator's
+            // underflow guard (deep consensus drives v_i toward 0).
+            let v = sw.pow_e1(rounds);
+            let s = v[i];
+            if s > 1e-9 {
+                z.scale_inplace(1.0 / s);
+            } else {
+                z.scale_inplace(ctx.n as f64);
+            }
+            // Step 12 through the pooled QR executor.
+            shared_qr.orthonormalize(&z, &mut q);
+        }
+        q
+    })
+}
+
 /// One S-DOT run on the pooled runtime with blocking exchanges.
 pub fn run_sdot_mpi(
     setting: &SampleSetting,
@@ -49,33 +117,8 @@ pub fn run_sdot_mpi(
     t_o: usize,
     cfg: &MpiConfig,
 ) -> MpiStudy {
-    let wm = Arc::new(local_degree_weights(graph));
-    let setting = Arc::new(setting.clone());
     let truth = setting.truth.clone();
-    let qr_policy = crate::linalg::qr::default_qr_policy();
-
-    let run = run_spmd(graph, cfg, move |ctx| {
-        let i = ctx.rank;
-        let mut q = setting.q_init.clone();
-        for t in 1..=t_o {
-            let mut z = setting.covs[i].apply(&q);
-            let rounds = schedule.rounds_at(t);
-            // Consensus inner loop with blocking neighbor exchanges.
-            for _ in 0..rounds {
-                let mut nz = z.scale(wm.w.get(i, i));
-                for &(j, ref mj) in ctx.exchange(&z) {
-                    nz.axpy(wm.w.get(i, j), mj);
-                }
-                z = nz;
-            }
-            // Rescale to a sum estimate and orthonormalize.
-            let v = wm.pow_e1(rounds);
-            z.scale_inplace(1.0 / v[i]);
-            q = crate::linalg::qr::orthonormalize_policy(&z, qr_policy);
-        }
-        q
-    });
-
+    let run = sdot_mpi_run(setting, graph, schedule, t_o, cfg);
     let max_err = run
         .results
         .iter()
@@ -102,13 +145,16 @@ pub fn run_sdot_mpi_async(
     t_o: usize,
     cfg: &MpiConfig,
 ) -> MpiStudy {
-    let wm = Arc::new(local_degree_weights(graph));
+    let sw = Arc::new(sparse_local_degree_weights(graph));
     let setting = Arc::new(setting.clone());
     let truth = setting.truth.clone();
-    let qr_policy = crate::linalg::qr::default_qr_policy();
+    let shared_qr = Arc::new(SharedQr::new(crate::network::sim::default_threads()));
 
     let run = run_spmd(graph, cfg, move |ctx| {
         let i = ctx.rank;
+        // Neighbor list order == sparse row column order, so the k-th
+        // neighbor's weight is the k-th stored value.
+        let (_cols, vals) = sw.row(i);
         let d = setting.d();
         let r = setting.q_init.cols;
         let mut q = setting.q_init.clone();
@@ -185,13 +231,13 @@ pub fn run_sdot_mpi_async(
                         cache[j] = Some(mj);
                     }
                 }
-                let mut nz = z.scale(wm.w.get(i, i));
-                for &j in &ctx.neighbors {
+                let mut nz = z.scale(sw.diag[i]);
+                for (k, &j) in ctx.neighbors.iter().enumerate() {
                     // Stale-tolerant mixing: the last same-phase value, or
                     // our own (w_ij mass stays local until j catches up).
                     match cache[j].as_ref() {
-                        Some(mj) => nz.axpy(wm.w.get(i, j), mj),
-                        None => nz.axpy(wm.w.get(i, j), &z),
+                        Some(mj) => nz.axpy(vals[k], mj),
+                        None => nz.axpy(vals[k], &z),
                     }
                 }
                 z = nz;
@@ -199,7 +245,7 @@ pub fn run_sdot_mpi_async(
             // No [W^T e_1] rescale: a positive scalar does not change the
             // QR Q-factor, and the synchronous rescale is biased under
             // asynchronous progress anyway.
-            q = crate::linalg::qr::orthonormalize_policy(&z, qr_policy);
+            shared_qr.orthonormalize(&z, &mut q);
         }
         q
     });
@@ -385,6 +431,33 @@ mod tests {
         assert!(st.p2p_avg > 0.0);
         // No straggler → no virtual time accrues.
         assert_eq!(st.secs, 0.0);
+    }
+
+    #[test]
+    fn mpi_sdot_bitwise_matches_simulator() {
+        // The MPI realization of S-DOT (threaded workers, blocking
+        // exchanges, SharedQr step 12) must reproduce the simulator's
+        // estimates bit-for-bit: same backend covariance kernel, same
+        // sparse mixing order, same rescale guard, same QR executor.
+        use crate::algorithms::sdot::{run_sdot, SdotConfig};
+        use crate::network::sim::SyncNetwork;
+
+        let (setting, g) = small_setting(4, 6);
+        let t_o = 6;
+        let sched = Schedule::fixed(15);
+        let run = sdot_mpi_run(&setting, &g, sched, t_o, &MpiConfig::virtual_clock());
+
+        let mut net = SyncNetwork::with_threads(g, 1);
+        let (q_sim, _) = run_sdot(&mut net, &setting, &SdotConfig::new(sched, t_o));
+
+        assert_eq!(run.results.len(), q_sim.len());
+        for (i, (a, b)) in run.results.iter().zip(q_sim.iter()).enumerate() {
+            assert_eq!(a.rows, b.rows);
+            assert_eq!(a.cols, b.cols);
+            for (x, y) in a.data.iter().zip(b.data.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "node {i} diverges");
+            }
+        }
     }
 
     #[test]

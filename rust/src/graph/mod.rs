@@ -31,25 +31,90 @@ impl Graph {
         Graph { n, adj, kind }
     }
 
+    /// Node count up to which [`Graph::erdos_renyi`] keeps the
+    /// historical pair-by-pair sampler, so every seed-pinned small-graph
+    /// sample in tests and experiments is bit-for-bit unchanged; above
+    /// it edges are drawn by geometric skipping in O(edges).
+    pub const ER_DENSE_SAMPLER_MAX: usize = 64;
+
     /// Erdős–Rényi G(n, p), resampled until connected.
-    /// Panics after 10_000 failed attempts (p too small for connectivity).
+    ///
+    /// Sampling is O(n²) per attempt only up to
+    /// [`Graph::ER_DENSE_SAMPLER_MAX`] nodes (RNG-stream compatibility
+    /// for paper-sized graphs); larger graphs use geometric skipping
+    /// over the linearized upper triangle (Batagelj–Brandes), one draw
+    /// per realized edge — the path that makes N = 10⁴ sweeps feasible.
+    ///
+    /// Panics after 10_000 failed connectivity resamples, reporting the
+    /// G(n, p) connectivity threshold `ln(n)/n` so the caller knows how
+    /// far below it the requested `p` sits.
     pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Graph {
         assert!(n >= 2);
-        for _attempt in 0..10_000 {
-            let mut edges = Vec::new();
-            for i in 0..n {
-                for j in (i + 1)..n {
-                    if rng.bernoulli(p) {
-                        edges.push((i, j));
-                    }
-                }
-            }
-            let g = Graph::from_edges(n, &edges, format!("erdos(p={p})"));
+        assert!((0.0..=1.0).contains(&p), "erdos_renyi: p={p} must lie in [0, 1]");
+        const ATTEMPTS: usize = 10_000;
+        for _attempt in 0..ATTEMPTS {
+            let g = if n <= Graph::ER_DENSE_SAMPLER_MAX {
+                Graph::er_sample_dense(n, p, rng)
+            } else {
+                Graph::er_sample_skip(n, p, rng)
+            };
             if g.is_connected() {
                 return g;
             }
         }
-        panic!("erdos_renyi(n={n}, p={p}): no connected sample in 10k attempts");
+        let threshold = (n as f64).ln() / n as f64;
+        panic!(
+            "erdos_renyi(n={n}, p={p}): no connected sample in {ATTEMPTS} attempts — \
+             G(n, p) is connected w.h.p. only for p \u{2273} ln(n)/n = {threshold:.4}; \
+             raise p toward or above that threshold (or pick a deterministic topology)"
+        );
+    }
+
+    /// Historical O(n²) pair-by-pair G(n, p) sampler.
+    fn er_sample_dense(n: usize, p: f64, rng: &mut Rng) -> Graph {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.bernoulli(p) {
+                    edges.push((i, j));
+                }
+            }
+        }
+        Graph::from_edges(n, &edges, format!("erdos(p={p})"))
+    }
+
+    /// Geometric-skipping G(n, p) sampler (Batagelj–Brandes): walk the
+    /// linearized upper triangle jumping a Geometric(p) gap per edge, so
+    /// one attempt costs O(n + edges) draws instead of n(n−1)/2.
+    fn er_sample_skip(n: usize, p: f64, rng: &mut Rng) -> Graph {
+        let mut edges = Vec::new();
+        if p >= 1.0 {
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    edges.push((i, j));
+                }
+            }
+        } else if p > 0.0 {
+            let lq = (1.0 - p).ln();
+            let mut v = 1usize;
+            let mut w = -1i64;
+            while v < n {
+                let r = rng.next_f64();
+                let skip = ((1.0 - r).ln() / lq).floor();
+                if !skip.is_finite() || skip >= (n * n) as f64 {
+                    break; // jumped past every remaining pair
+                }
+                w += 1 + skip as i64;
+                while v < n && w >= v as i64 {
+                    w -= v as i64;
+                    v += 1;
+                }
+                if v < n {
+                    edges.push((w as usize, v));
+                }
+            }
+        }
+        Graph::from_edges(n, &edges, format!("erdos(p={p})"))
     }
 
     /// Ring: node i ↔ (i+1) mod n.
@@ -110,7 +175,8 @@ impl Graph {
     }
 
     /// Parse a topology spec: "erdos" (needs p), "ring", "star", "path",
-    /// "complete", "grid" (n must be a perfect square).
+    /// "complete", "grid" (near-square mesh over n nodes; a perfect
+    /// square n keeps the exact √n × √n grid).
     pub fn from_spec(spec: &str, n: usize, p: f64, rng: &mut Rng) -> Graph {
         match spec {
             "erdos" | "er" => Graph::erdos_renyi(n, p, rng),
@@ -119,9 +185,8 @@ impl Graph {
             "path" => Graph::path(n),
             "complete" => Graph::complete(n),
             "grid" => {
-                let side = (n as f64).sqrt().round() as usize;
-                assert_eq!(side * side, n, "grid needs a square node count");
-                Graph::grid(side, side)
+                let (r, c) = near_square(n);
+                Graph::grid(r, c)
             }
             other => panic!("unknown topology '{other}'"),
         }
@@ -370,6 +435,53 @@ mod tests {
         assert_eq!(Graph::from_spec("star", 8, 0.0, &mut rng).kind, "star");
         assert_eq!(Graph::from_spec("grid", 9, 0.0, &mut rng).n, 9);
         assert!(Graph::from_spec("erdos", 10, 0.5, &mut rng).is_connected());
+    }
+
+    #[test]
+    fn from_spec_grid_accepts_non_square_counts() {
+        let mut rng = Rng::new(2);
+        // near_square(12) = (3, 4): same mesh GroupTopo::Grid builds.
+        let g = Graph::from_spec("grid", 12, 0.0, &mut rng);
+        assert_eq!(g.n, 12);
+        assert_eq!(g.adj, GroupTopo::Grid.build(12, 0).adj);
+        // Perfect squares keep the exact √n × √n grid.
+        let sq = Graph::from_spec("grid", 16, 0.0, &mut rng);
+        assert_eq!(sq.adj, Graph::grid(4, 4).adj);
+    }
+
+    #[test]
+    fn erdos_large_n_geometric_sampler_is_deterministic_and_plausible() {
+        let n = 300;
+        let p = 2.0 * (n as f64).ln() / n as f64;
+        let g1 = Graph::erdos_renyi(n, p, &mut Rng::new(42));
+        let g2 = Graph::erdos_renyi(n, p, &mut Rng::new(42));
+        assert_eq!(g1.adj, g2.adj);
+        assert!(g1.is_connected());
+        // E[deg] = p(n-1) ≈ 11.4; the sample mean over 300 nodes is tight.
+        let avg = 2.0 * g1.edge_count() as f64 / n as f64;
+        assert!(avg > 7.0 && avg < 16.0, "avg degree {avg}");
+    }
+
+    #[test]
+    fn erdos_samplers_agree_on_density_across_the_gate() {
+        // The two samplers draw different RNG streams, so graphs differ,
+        // but edge densities must agree statistically at the same (n, p).
+        let n = Graph::ER_DENSE_SAMPLER_MAX; // dense path
+        let m = n + 1; // skip path
+        let p = 0.25;
+        let dense = Graph::erdos_renyi(n, p, &mut Rng::new(5));
+        let skip = Graph::erdos_renyi(m, p, &mut Rng::new(5));
+        let d_dense = 2.0 * dense.edge_count() as f64 / (n * (n - 1)) as f64;
+        let d_skip = 2.0 * skip.edge_count() as f64 / (m * (m - 1)) as f64;
+        assert!((d_dense - p).abs() < 0.08, "dense density {d_dense}");
+        assert!((d_skip - p).abs() < 0.08, "skip density {d_skip}");
+    }
+
+    #[test]
+    #[should_panic(expected = "ln(n)/n")]
+    fn erdos_connectivity_failure_reports_threshold() {
+        // p far below ln(n)/n: nearly empty samples, never connected.
+        Graph::erdos_renyi(70, 0.001, &mut Rng::new(1));
     }
 
     #[test]

@@ -754,6 +754,73 @@ where
     }
 }
 
+/// Outcome of a multiplexed SPMD run ([`run_spmd_mux`]): final program
+/// states, the deterministic virtual time, and per-node algorithm
+/// counters (one message per neighbor per round, as in the blocking
+/// runtime).
+pub struct MuxRun<P> {
+    pub programs: Vec<P>,
+    /// Maximum final virtual clock across nodes (the straggler cascade).
+    pub vtime: Duration,
+    pub counters: P2pCounters,
+}
+
+/// Run `rounds` multiplexed SPMD rounds: N logical node programs share
+/// `workers` OS threads (deterministic contiguous node→worker chunks,
+/// round-robin within a chunk — see
+/// [`runtime::spmd::step_mux_round`](crate::runtime::spmd::step_mux_round)),
+/// so N = 10³–10⁴ no longer means an OS thread per node. Results are
+/// bitwise identical for every worker count, and — because a round
+/// publishes exactly what the blocking runtime's `exchange` puts on the
+/// wire — bitwise identical to one-worker-per-node mixing too.
+///
+/// Straggler injection requires [`ClockMode::Virtual`]: the delay is a
+/// clock bump threaded through the same `s_i`/`t_i` cascade recurrence
+/// as [`expected_sync_vtime`]. A real sleep would stall a whole worker's
+/// node chunk rather than one node, so `ClockMode::Real` + straggler is
+/// rejected.
+pub fn run_spmd_mux<P: crate::runtime::spmd::MuxProgram>(
+    graph: &Graph,
+    cfg: &MpiConfig,
+    workers: usize,
+    rounds: u64,
+    mut programs: Vec<P>,
+) -> MuxRun<P> {
+    use crate::runtime::pool::NodePool;
+    use crate::runtime::spmd::step_mux_round;
+    let n = graph.n;
+    assert_eq!(programs.len(), n, "one program per node");
+    assert!(
+        cfg.straggler.is_none() || cfg.clock == ClockMode::Virtual,
+        "run_spmd_mux: straggler injection requires ClockMode::Virtual"
+    );
+    let pool = NodePool::new(workers.max(1));
+    let mut board: Vec<Mat> = programs
+        .iter()
+        .map(|p| {
+            let (r, c) = p.dims();
+            Mat::zeros(r, c)
+        })
+        .collect();
+    let mut sv = vec![0u64; n];
+    let mut tv = vec![0u64; n];
+    for round in 1..=rounds {
+        let delay = cfg
+            .straggler
+            .map(|s| (s.node_for_round(round, n), s.delay.as_nanos() as u64));
+        step_mux_round(&pool, &graph.adj, round, delay, &mut programs, &mut board, &mut sv, &mut tv);
+    }
+    let mut counters = P2pCounters::new(n);
+    for i in 0..n {
+        let deg = graph.adj[i].len() as u64;
+        let (r, c) = programs[i].dims();
+        counters.sent[i] = rounds * deg;
+        counters.payload[i] = rounds * deg * (r * c) as u64;
+    }
+    let vmax = tv.into_iter().max().unwrap_or(0);
+    MuxRun { programs, vtime: Duration::from_nanos(vmax), counters }
+}
+
 /// Reference model of the synchronous straggler cascade in virtual time:
 /// round by round, `s_i = t_i + delay·[i == straggler(round)]` and
 /// `t_i ← max_{j ∈ N(i) ∪ {i}} s_j`. The pooled runtime's virtual clock
@@ -1123,6 +1190,18 @@ mod tests {
                         ctx.exchange(&z).iter().map(|(j, mat)| (*j, mat.clone())).collect();
                     if !alive[i] {
                         continue; // down: estimate frozen this round
+                    }
+                    if r > 0 && plan_arc.node_down(i, r - 1) {
+                        // Rejoin epoch: warm-start from the lowest-rank
+                        // alive neighbor's broadcast if it arrived, else
+                        // stay frozen — the simulator's deterministic
+                        // rejoin rule.
+                        if let Some(&j) = ctx.neighbors.iter().find(|&&j| alive[j]) {
+                            if let Some((_, mat)) = inbox.iter().find(|(p, _)| *p == j) {
+                                z = mat.clone();
+                            }
+                        }
+                        continue;
                     }
                     let mut nz = z.scale(wm.w.get(i, i));
                     for &j in &ctx.neighbors {

@@ -6,11 +6,17 @@
 //! consensus for the distributed QR inside F-DOT.
 //!
 //! Every mixing primitive routes through the shared engine kernel
-//! (`consensus::engine::consensus_rounds`): one double buffer, one P2P
-//! accounting site, and per-node mixing fanned across the network's
-//! [`NodePool`]. The network owns a persistent [`ConsensusWorkspace`]
-//! plus a cache of the `W^t e₁` rescaling vectors, so steady-state
-//! consensus rounds perform **zero heap allocations** after warm-up.
+//! (`consensus::engine::sparse_consensus_rounds`): one double buffer, one
+//! P2P accounting site, and per-node mixing fanned across the network's
+//! [`NodePool`]. Weights are held in CSR-style sparse form
+//! ([`SparseWeights`]) so a consensus round costs O(active edges), not
+//! O(N²) — the dense `WeightMatrix` remains a constructor-level input
+//! (`with_weights`) and a diagnostics-only reference. The network owns a
+//! persistent [`ConsensusWorkspace`] plus a cache of the `W^t e₁`
+//! rescaling vectors, so steady-state consensus rounds perform **zero
+//! heap allocations** after warm-up. Under a fault plan, membership
+//! changes re-derive the active weights **in place** at membership epochs
+//! only (`SparseWeights::refresh_active`), never per round.
 //!
 //! Thread count: `SyncNetwork::new` uses the process-wide default set by
 //! [`set_default_threads`] (1 unless configured — e.g. via the
@@ -21,10 +27,8 @@
 //! small networks still use every core. Results are bitwise identical
 //! for every thread count and either level (see `runtime::pool`).
 
-use crate::consensus::engine::{consensus_rounds, faulty_consensus_rounds};
-use crate::consensus::weights::{
-    active_local_degree_weights, local_degree_weights, WeightMatrix,
-};
+use crate::consensus::engine::{sparse_consensus_rounds, sparse_faulty_consensus_rounds};
+use crate::consensus::weights::{sparse_local_degree_weights, SparseWeights, WeightMatrix};
 use crate::fault::FaultPlan;
 use crate::graph::Graph;
 use crate::linalg::Mat;
@@ -55,7 +59,8 @@ pub struct FaultSession {
     plan: FaultPlan,
     round: u64,
     alive: Vec<bool>,
-    awm: WeightMatrix,
+    /// Active sparse weights; refreshed in place at membership epochs.
+    asw: SparseWeights,
     /// Double buffer for the push-sum `e₁` mass channel that replaces
     /// the static `W^{T_c} e₁` rescale under time-varying mixing.
     v: Vec<f64>,
@@ -65,7 +70,9 @@ pub struct FaultSession {
 /// A synchronous network: topology + weights + exact message accounting.
 pub struct SyncNetwork {
     pub graph: Graph,
-    pub weights: WeightMatrix,
+    /// Consensus weights in CSR-style sparse form (the hot-path
+    /// representation; see [`SyncNetwork::weights`]).
+    weights: SparseWeights,
     pub counters: P2pCounters,
     threads: usize,
     pool: NodePool,
@@ -81,12 +88,17 @@ pub struct SyncNetwork {
 
 impl SyncNetwork {
     pub fn new(graph: Graph) -> SyncNetwork {
-        let weights = local_degree_weights(&graph);
+        let weights = sparse_local_degree_weights(&graph);
         SyncNetwork::assemble(graph, weights, default_threads(), true)
     }
 
+    /// A network over a custom dense weight design. Only the
+    /// graph-structured entries (adjacency + diagonal) participate in
+    /// mixing — exactly the entries a doubly-stochastic consensus matrix
+    /// respecting the topology may populate.
     pub fn with_weights(graph: Graph, weights: WeightMatrix) -> SyncNetwork {
-        SyncNetwork::assemble(graph, weights, default_threads(), true)
+        let sparse = SparseWeights::from_dense(&graph, &weights);
+        SyncNetwork::assemble(graph, sparse, default_threads(), true)
     }
 
     /// A network with an explicit node-parallelism (1 = the serial path).
@@ -100,13 +112,13 @@ impl SyncNetwork {
     /// either way — the knob exists so `bench_parallel_scaling` can
     /// price the two levels separately.
     pub fn with_threads_split(graph: Graph, threads: usize, split_rows: bool) -> SyncNetwork {
-        let weights = local_degree_weights(&graph);
+        let weights = sparse_local_degree_weights(&graph);
         SyncNetwork::assemble(graph, weights, threads, split_rows)
     }
 
     fn assemble(
         graph: Graph,
-        weights: WeightMatrix,
+        weights: SparseWeights,
         threads: usize,
         split_rows: bool,
     ) -> SyncNetwork {
@@ -137,12 +149,13 @@ impl SyncNetwork {
         }
         let n = self.n();
         let alive = plan.alive_mask(n, 0);
-        let awm = active_local_degree_weights(&self.graph, &alive);
+        let mut asw = SparseWeights::with_structure(&self.graph);
+        asw.refresh_active(&self.graph, &alive);
         self.fault = Some(FaultSession {
             plan,
             round: 0,
             alive,
-            awm,
+            asw,
             v: vec![0.0; n],
             v_next: vec![0.0; n],
         });
@@ -167,7 +180,7 @@ impl SyncNetwork {
         if let Some(fs) = self.fault.as_mut() {
             fs.round = round;
             fs.plan.fill_alive_mask(round, &mut fs.alive);
-            fs.awm = active_local_degree_weights(graph, &fs.alive);
+            fs.asw.refresh_active(graph, &fs.alive);
         }
     }
 
@@ -179,6 +192,13 @@ impl SyncNetwork {
 
     pub fn n(&self) -> usize {
         self.graph.n
+    }
+
+    /// The consensus weights (sparse hot-path form). Diagnostics that
+    /// need the dense matrix can materialize it via
+    /// [`SparseWeights::to_dense`] — O(N²), small-N only.
+    pub fn weights(&self) -> &SparseWeights {
+        &self.weights
     }
 
     /// Node-parallelism of this network.
@@ -199,8 +219,7 @@ impl SyncNetwork {
             return;
         }
         self.ws.ensure_mats(z);
-        consensus_rounds(
-            &self.graph,
+        sparse_consensus_rounds(
             &self.weights,
             z,
             &mut self.ws.next,
@@ -246,12 +265,12 @@ impl SyncNetwork {
         } else {
             None
         };
-        fs.round = faulty_consensus_rounds(
+        fs.round = sparse_faulty_consensus_rounds(
             &self.graph,
             &fs.plan,
             fs.round,
             &mut fs.alive,
-            &mut fs.awm,
+            &mut fs.asw,
             z,
             &mut self.ws.next,
             scalar,
@@ -277,7 +296,8 @@ impl SyncNetwork {
     }
 
     /// Alg. 1 step 11 with a per-round-count cache of `W^{T_c} e₁`
-    /// (numerically identical to `consensus::engine::rescale_to_sum`).
+    /// (numerically identical to `consensus::engine::rescale_to_sum`; the
+    /// sparse `pow_e1` is bitwise identical to the dense one).
     fn rescale_to_sum_cached(&mut self, z: &mut [Mat], rounds: usize) {
         let weights = &self.weights;
         let v = self
@@ -309,8 +329,7 @@ impl SyncNetwork {
         assert_eq!(z.len(), n);
         self.ws.ensure_mats(z);
         self.ws.ensure_scalars(n, 1.0 / n as f64);
-        consensus_rounds(
-            &self.graph,
+        sparse_consensus_rounds(
             &self.weights,
             z,
             &mut self.ws.next,
@@ -363,6 +382,7 @@ impl std::fmt::Debug for SyncNetwork {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::consensus::weights::local_degree_weights;
     use crate::util::rng::Rng;
 
     #[test]

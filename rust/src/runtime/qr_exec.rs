@@ -31,8 +31,9 @@ use crate::linalg::qr::{
 };
 use crate::linalg::Mat;
 use crate::runtime::pool::{DisjointSlice, NodePool};
-use crate::runtime::workspace::{MatRowsScratch, NodeScratch};
-use crate::runtime::Backend;
+use crate::runtime::workspace::{node_scratch, MatRowsScratch, NodeScratch};
+use crate::runtime::{Backend, NativeBackend};
+use std::sync::Mutex;
 
 /// Reusable flat (node × leaf) workspace for the TSQR fan-out: node
 /// `i`'s leaves live at `leaves[i·lmax .. i·lmax + L_i]` (node-major),
@@ -164,12 +165,66 @@ pub fn orthonormalize_nodes(
     }
 }
 
+/// Shared step-12 executor for SPMD node bodies (`network::mpi`): one
+/// pool + backend + scratch set behind a mutex. SPMD node bodies run on
+/// their own persistent workers, so step-12 calls serialize across
+/// nodes, but each node's QR row-fans across the whole shared pool — so
+/// MPI runs saturate cores on the orthonormalization exactly like the
+/// simulator does. Because [`orthonormalize_nodes`] is bitwise the
+/// serial kernel for every thread count, routing a node body through the
+/// shared executor never changes its results.
+pub struct SharedQr {
+    inner: Mutex<SharedQrInner>,
+}
+
+struct SharedQrInner {
+    pool: NodePool,
+    backend: NativeBackend,
+    q: Vec<Mat>,
+    scratch: Vec<NodeScratch>,
+    fan: QrFanScratch,
+    views: MatRowsScratch,
+}
+
+impl SharedQr {
+    /// An executor over `threads` pool threads, snapshotting the
+    /// process-wide `--qr` policy (like `NativeBackend::default`).
+    pub fn new(threads: usize) -> SharedQr {
+        SharedQr {
+            inner: Mutex::new(SharedQrInner {
+                pool: NodePool::new(threads),
+                backend: NativeBackend::default(),
+                q: vec![Mat::zeros(0, 0)],
+                scratch: node_scratch(1),
+                fan: QrFanScratch::new(),
+                views: MatRowsScratch::new(),
+            }),
+        }
+    }
+
+    /// Orthonormalize `z` into `out` (Alg. 1 step 12) on the shared
+    /// pool. Scratch is reused across calls and callers, so the
+    /// steady-state cost is the factorization itself.
+    pub fn orthonormalize(&self, z: &Mat, out: &mut Mat) {
+        let mut guard = self.inner.lock().expect("SharedQr lock");
+        let inner = &mut *guard;
+        orthonormalize_nodes(
+            &inner.pool,
+            &inner.backend,
+            std::slice::from_ref(z),
+            &mut inner.q,
+            &mut inner.scratch,
+            &mut inner.fan,
+            &mut inner.views,
+        );
+        std::mem::swap(out, &mut inner.q[0]);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::qr::{tsqr_into, QrScratch};
-    use crate::runtime::workspace::node_scratch;
-    use crate::runtime::NativeBackend;
     use crate::util::rng::Rng;
 
     fn fanout_inputs(seed: u64, shapes: &[(usize, usize)]) -> Vec<Mat> {
@@ -246,6 +301,22 @@ mod tests {
         for qi in &q {
             let g = qi.t_matmul(qi);
             assert!(g.dist_fro(&Mat::eye(qi.cols)) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn shared_qr_matches_direct_backend_bitwise() {
+        let z = fanout_inputs(3, &[(300, 4), (40, 3)]);
+        let shared = SharedQr::new(4);
+        let backend = NativeBackend::default();
+        let mut scratch = node_scratch(1);
+        for (round, zi) in z.iter().cycle().take(4).enumerate() {
+            let mut got = Mat::zeros(0, 0);
+            shared.orthonormalize(zi, &mut got);
+            let mut want = Mat::zeros(0, 0);
+            backend.orthonormalize_into(zi, &mut want, &mut scratch[0].qr);
+            assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+            assert_eq!(got.data, want.data, "round {round}");
         }
     }
 }

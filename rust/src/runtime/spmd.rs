@@ -19,7 +19,22 @@
 //!
 //! Completion signalling is the caller's job (e.g. a results channel
 //! carrying one message per node); `dispatch` only enqueues.
+//!
+//! # Multiplexed nodes
+//!
+//! One worker per node caps N at the OS thread budget — N = 10³ would
+//! mean 10³ threads. The multiplexed schedule ([`MuxProgram`] +
+//! [`step_mux_round`]) instead runs M logical nodes per worker over a
+//! [`NodePool`](crate::runtime::pool::NodePool): nodes chunk across
+//! workers deterministically (`chunk_bounds`), each worker steps its
+//! chunk round-robin, and a round is two barrier phases — every node
+//! *publishes* its broadcast to a shared board, then every node *absorbs*
+//! its neighbors' slots. Because a node reads only values published in
+//! the same phase-separated round, the schedule is bitwise identical to
+//! the blocking one-worker-per-node exchange for any worker count.
 
+use crate::linalg::Mat;
+use crate::runtime::pool::{DisjointSlice, NodePool};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Mutex, OnceLock};
 
@@ -85,6 +100,96 @@ impl Default for SpmdPool {
 pub fn global() -> &'static Mutex<SpmdPool> {
     static GLOBAL: OnceLock<Mutex<SpmdPool>> = OnceLock::new();
     GLOBAL.get_or_init(|| Mutex::new(SpmdPool::new()))
+}
+
+/// One logical node's program in a multiplexed SPMD run (see the module
+/// docs): per round it *publishes* a broadcast matrix to its board slot
+/// and then *absorbs* the slots its neighbors published in the same
+/// round. Programs never block — the barrier between the two phases is
+/// the scheduler's job — so thousands of them share a handful of
+/// workers.
+pub trait MuxProgram: Send {
+    /// Shape of this node's board slot (constant over the run).
+    fn dims(&self) -> (usize, usize);
+    /// Write the round-`round` broadcast into this node's board slot.
+    fn publish(&self, round: u64, out: &mut Mat);
+    /// Fold the same round's published neighbor slots (`board[j]` for
+    /// `j ∈ neighbors`) into local state.
+    fn absorb(&mut self, round: u64, neighbors: &[usize], board: &[Mat]);
+}
+
+/// One barrier round of the multiplexed SPMD schedule.
+///
+/// Phase 1 publishes every node's broadcast and stamps its virtual send
+/// time `s_i = t_i + delay·[i == straggler]`; phase 2 absorbs and joins
+/// the clocks `t_i ← max_{j ∈ N(i) ∪ {i}} s_j` — the same synchronous
+/// cascade recurrence as `network::mpi::expected_sync_vtime`, so the
+/// multiplexed virtual time matches the one-worker-per-node runtime
+/// exactly. `delay` is `(straggler node, delay in ns)` for this round.
+///
+/// Both phases fan the node range across `pool` in deterministic
+/// contiguous chunks; each node's slot/state/clock entry is written by
+/// exactly one chunk, so results are bitwise identical for every worker
+/// count.
+pub fn step_mux_round<P: MuxProgram>(
+    pool: &NodePool,
+    adj: &[Vec<usize>],
+    round: u64,
+    delay: Option<(usize, u64)>,
+    progs: &mut [P],
+    board: &mut [Mat],
+    svclock: &mut [u64],
+    tvclock: &mut [u64],
+) {
+    let n = progs.len();
+    assert_eq!(adj.len(), n);
+    assert_eq!(board.len(), n);
+    assert_eq!(svclock.len(), n);
+    assert_eq!(tvclock.len(), n);
+    // Phase 1: publish + send stamps.
+    {
+        let progs_d = DisjointSlice::new(progs);
+        let board_d = DisjointSlice::new(board);
+        let sv_d = DisjointSlice::new(svclock);
+        let tv: &[u64] = tvclock;
+        pool.run_chunks(n, &|lo, hi| {
+            for i in lo..hi {
+                // SAFETY: `run_chunks` hands this chunk the exclusive
+                // contiguous range [lo, hi); no other chunk touches
+                // index `i` of any of the three slices.
+                let (p, out, s) = unsafe {
+                    (progs_d.get_mut(i), board_d.get_mut(i), sv_d.get_mut(i))
+                };
+                p.publish(round, out);
+                let d = match delay {
+                    Some((lag, d)) if lag == i => d,
+                    _ => 0,
+                };
+                *s = tv[i] + d;
+            }
+        });
+    }
+    // Phase 2: absorb + clock join.
+    {
+        let progs_d = DisjointSlice::new(progs);
+        let tv_d = DisjointSlice::new(tvclock);
+        let board_r: &[Mat] = board;
+        let sv: &[u64] = svclock;
+        pool.run_chunks(n, &|lo, hi| {
+            for i in lo..hi {
+                // SAFETY: as in phase 1 — [lo, hi) is exclusive to this
+                // chunk, so indices `i` of `progs`/`tvclock` are only
+                // accessed here; `board`/`svclock` are read-only now.
+                let (p, t) = unsafe { (progs_d.get_mut(i), tv_d.get_mut(i)) };
+                p.absorb(round, &adj[i], board_r);
+                let mut m = sv[i];
+                for &j in &adj[i] {
+                    m = m.max(sv[j]);
+                }
+                *t = m;
+            }
+        });
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +259,62 @@ mod tests {
         let mut got = vec![done_rx.recv().unwrap(), done_rx.recv().unwrap()];
         got.sort_unstable();
         assert_eq!(got, vec![12, 21]);
+    }
+
+    #[test]
+    fn mux_round_is_worker_count_invariant() {
+        use crate::graph::Graph;
+        struct Avg {
+            v: Mat,
+        }
+        impl MuxProgram for Avg {
+            fn dims(&self) -> (usize, usize) {
+                (1, 1)
+            }
+            fn publish(&self, _round: u64, out: &mut Mat) {
+                out.copy_from(&self.v);
+            }
+            fn absorb(&mut self, _round: u64, neighbors: &[usize], board: &[Mat]) {
+                let mut s = self.v.get(0, 0);
+                for &j in neighbors {
+                    s += board[j].get(0, 0);
+                }
+                self.v.set(0, 0, s / (neighbors.len() + 1) as f64);
+            }
+        }
+        let g = Graph::ring(8);
+        let run = |workers: usize| {
+            let pool = NodePool::new(workers);
+            let mut progs: Vec<Avg> =
+                (0..8).map(|i| Avg { v: Mat::eye(1).scale(i as f64) }).collect();
+            let mut board: Vec<Mat> = (0..8).map(|_| Mat::zeros(1, 1)).collect();
+            let (mut sv, mut tv) = (vec![0u64; 8], vec![0u64; 8]);
+            for r in 1..=5 {
+                step_mux_round(
+                    &pool,
+                    &g.adj,
+                    r,
+                    Some((3, 7)),
+                    &mut progs,
+                    &mut board,
+                    &mut sv,
+                    &mut tv,
+                );
+            }
+            let bits: Vec<u64> =
+                progs.iter().map(|p| p.v.get(0, 0).to_bits()).collect();
+            (bits, tv)
+        };
+        let (a, ta) = run(1);
+        let (b, tb) = run(4);
+        let (c, tc) = run(9);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert_eq!(ta, tb);
+        assert_eq!(ta, tc);
+        // A fixed per-round straggler bump reaches the whole ring within
+        // 5 rounds (max distance 4), so every clock advanced.
+        assert!(ta.iter().all(|&t| t > 0), "{ta:?}");
     }
 
     #[test]

@@ -108,10 +108,26 @@ fn real_figures_smoke() {
 }
 
 #[test]
+fn scale_smoke() {
+    let ctx = tiny_ctx("scale");
+    let tables = run("scale", &ctx).unwrap();
+    // Reduced scale sweeps N ∈ {100, 1000} × 3 topology families.
+    assert_eq!(tables[0].rows.len(), 6);
+    assert!(ctx.out_dir.join("scale").exists());
+    // Per-round message cost is O(edges): msgs/node/round equals the
+    // average degree, far below N for every sparse family.
+    for row in &tables[0].rows {
+        let n: f64 = row[0].parse().unwrap();
+        let msgs: f64 = row[6].parse().unwrap();
+        assert!(msgs < n / 4.0, "dense-like messaging: {msgs} msgs/node at N={n}");
+    }
+}
+
+#[test]
 fn all_ids_run_is_exhaustive() {
     // Guard: all_ids() and the dispatcher stay in sync (run() must not
     // error with "unknown id" for anything all_ids() lists). Uses the
     // cheapest possible scale; correctness checked by the other tests.
     let ids = all_ids();
-    assert_eq!(ids.len(), 24);
+    assert_eq!(ids.len(), 25);
 }

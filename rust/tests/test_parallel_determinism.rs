@@ -117,6 +117,29 @@ fn repeated_threaded_runs_are_reproducible() {
     assert_bitwise_eq(&qa, &qb);
 }
 
+#[test]
+fn large_n_sparse_consensus_bitwise_identical_across_thread_counts() {
+    // The N-scaling determinism cell: 10³ nodes on the sparse consensus
+    // path (far more nodes than workers — the regime the scalability
+    // rework targets) must stay bitwise thread-count-invariant,
+    // including the thresholded sum rescale.
+    let mut rng = Rng::new(13);
+    let n = 1_000usize;
+    let p = 2.0 * (n as f64).ln() / n as f64;
+    let g = Graph::erdos_renyi(n, p, &mut rng);
+    let z0: Vec<Mat> = (0..n).map(|_| Mat::gauss(3, 2, &mut rng)).collect();
+    let mut reference: Option<Vec<Mat>> = None;
+    for &threads in &[1usize, 4, 9] {
+        let mut net = SyncNetwork::with_threads(g.clone(), threads);
+        let mut z = z0.clone();
+        net.consensus_sum(&mut z, 25);
+        match &reference {
+            None => reference = Some(z),
+            Some(zr) => assert_bitwise_eq(zr, &z),
+        }
+    }
+}
+
 /// Large-d setting on a tiny network: N < threads, so the hierarchical
 /// pool engages the row-split level (d and n_i both exceed the
 /// MIN_SPLIT_ROWS threshold, and d > n_i keeps the covariances in the

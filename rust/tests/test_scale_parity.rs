@@ -1,0 +1,166 @@
+//! Scalability parity pins: the node-multiplexed SPMD runtime must be a
+//! bitwise-faithful realization of the simulator's sparse consensus and
+//! of the one-worker-per-node blocking runtime, for every worker count.
+
+use dpsa::consensus::weights::{sparse_local_degree_weights, SparseWeights};
+use dpsa::graph::Graph;
+use dpsa::linalg::Mat;
+use dpsa::network::mpi::{
+    expected_sync_vtime, run_spmd, run_spmd_mux, MpiConfig, StragglerSpec,
+};
+use dpsa::network::sim::SyncNetwork;
+use dpsa::runtime::spmd::MuxProgram;
+use dpsa::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One logical consensus node: publish the value, absorb the Metropolis
+/// mix of the published neighbor slots — the simulator's mixing kernel
+/// verbatim (copy, scale by the diagonal, axpy in stored column order).
+struct ConsProg {
+    i: usize,
+    sw: Arc<SparseWeights>,
+    z: Mat,
+    tmp: Mat,
+}
+
+impl MuxProgram for ConsProg {
+    fn dims(&self) -> (usize, usize) {
+        (self.z.rows, self.z.cols)
+    }
+
+    fn publish(&self, _round: u64, out: &mut Mat) {
+        out.copy_from(&self.z);
+    }
+
+    fn absorb(&mut self, _round: u64, _neighbors: &[usize], board: &[Mat]) {
+        self.tmp.copy_from(&self.z);
+        self.tmp.scale_inplace(self.sw.diag[self.i]);
+        let (cols, vals) = self.sw.row(self.i);
+        for (&j, &w) in cols.iter().zip(vals.iter()) {
+            self.tmp.axpy(w, &board[j]);
+        }
+        std::mem::swap(&mut self.z, &mut self.tmp);
+    }
+}
+
+/// Deterministic per-node initial value, shared by every realization.
+fn init_z(i: usize, d: usize, r: usize) -> Mat {
+    let mut rng = Rng::new(1_000 + i as u64);
+    Mat::gauss(d, r, &mut rng)
+}
+
+fn programs(g: &Graph, sw: &Arc<SparseWeights>, d: usize, r: usize) -> Vec<ConsProg> {
+    (0..g.n)
+        .map(|i| ConsProg { i, sw: sw.clone(), z: init_z(i, d, r), tmp: Mat::zeros(d, r) })
+        .collect()
+}
+
+fn assert_bits_eq(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    for (x, y) in a.data.iter().zip(b.data.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: value bits");
+    }
+}
+
+#[test]
+fn mux_consensus_matches_simulator_bitwise() {
+    let mut rng = Rng::new(5);
+    let g = Graph::erdos_renyi(30, 0.2, &mut rng);
+    let sw = Arc::new(sparse_local_degree_weights(&g));
+    let rounds = 12u64;
+
+    let run = run_spmd_mux(
+        &g,
+        &MpiConfig::virtual_clock(),
+        4,
+        rounds,
+        programs(&g, &sw, 4, 2),
+    );
+
+    let mut net = SyncNetwork::with_threads(g.clone(), 1);
+    let mut z: Vec<Mat> = (0..g.n).map(|i| init_z(i, 4, 2)).collect();
+    net.consensus(&mut z, rounds as usize);
+
+    for (i, p) in run.programs.iter().enumerate() {
+        assert_bits_eq(&p.z, &z[i], &format!("node {i}"));
+    }
+    // Message accounting: every round publishes one slot per edge end.
+    let sent: u64 = run.counters.sent.iter().sum();
+    let ends: u64 = g.adj.iter().map(|a| a.len() as u64).sum();
+    assert_eq!(sent, rounds * ends);
+}
+
+#[test]
+fn mux_consensus_is_worker_count_invariant() {
+    // The 10³-logical-node regime the rework targets: many more nodes
+    // than workers, bitwise-identical results for every worker count.
+    let mut rng = Rng::new(6);
+    let g = Graph::erdos_renyi(300, 2.0 * (300f64).ln() / 300.0, &mut rng);
+    let sw = Arc::new(sparse_local_degree_weights(&g));
+    let run_with = |workers: usize| {
+        run_spmd_mux(&g, &MpiConfig::virtual_clock(), workers, 8, programs(&g, &sw, 2, 2))
+    };
+    let base = run_with(1);
+    for workers in [4usize, 9] {
+        let run = run_with(workers);
+        assert_eq!(run.vtime, base.vtime, "workers={workers}");
+        for (i, (a, b)) in run.programs.iter().zip(base.programs.iter()).enumerate() {
+            assert_bits_eq(&a.z, &b.z, &format!("workers={workers} node {i}"));
+        }
+    }
+}
+
+#[test]
+fn mux_vtime_matches_reference_cascade() {
+    let mut rng = Rng::new(7);
+    let g = Graph::erdos_renyi(40, 0.15, &mut rng);
+    let sw = Arc::new(sparse_local_degree_weights(&g));
+    let spec = StragglerSpec { delay: Duration::from_millis(5), seed: 11 };
+    let rounds = 9u64;
+    let cfg = MpiConfig::virtual_clock().with_straggler(spec);
+    let run = run_spmd_mux(&g, &cfg, 4, rounds, programs(&g, &sw, 1, 1));
+    assert_eq!(run.vtime, expected_sync_vtime(&g, &spec, rounds));
+    assert!(run.vtime > Duration::ZERO);
+}
+
+#[test]
+fn mux_matches_one_worker_per_node_runtime_bitwise() {
+    // The multiplexed board round publishes exactly what the blocking
+    // runtime's `exchange` puts on the wire, so folding the same sparse
+    // row must land on identical bits.
+    let mut rng = Rng::new(8);
+    let g = Graph::erdos_renyi(12, 0.4, &mut rng);
+    let sw = Arc::new(sparse_local_degree_weights(&g));
+    let rounds = 10u64;
+
+    let mux = run_spmd_mux(
+        &g,
+        &MpiConfig::virtual_clock(),
+        3,
+        rounds,
+        programs(&g, &sw, 3, 2),
+    );
+
+    let sw2 = sw.clone();
+    let per_node = run_spmd(&g, &MpiConfig::virtual_clock(), move |ctx| {
+        let i = ctx.rank;
+        let (cols, vals) = sw2.row(i);
+        let mut z = init_z(i, 3, 2);
+        let mut tmp = Mat::zeros(3, 2);
+        for _ in 0..rounds {
+            tmp.copy_from(&z);
+            tmp.scale_inplace(sw2.diag[i]);
+            for &(j, ref mj) in ctx.exchange(&z) {
+                let k = cols.iter().position(|&c| c == j).expect("neighbor weight");
+                tmp.axpy(vals[k], mj);
+            }
+            std::mem::swap(&mut z, &mut tmp);
+        }
+        z
+    });
+
+    for (i, (p, q)) in mux.programs.iter().zip(per_node.results.iter()).enumerate() {
+        assert_bits_eq(&p.z, q, &format!("node {i}"));
+    }
+}
