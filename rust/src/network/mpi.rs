@@ -315,6 +315,8 @@ impl NodeCtx {
             return self.exchange_faulty(m);
         }
         self.recycle_inbox();
+        #[cfg(debug_assertions)]
+        let (lock_alive, lock_sent) = self.lockstep_snapshot();
         let stamp = self.vclock_ns;
         let elems = (m.rows * m.cols) as u64;
         let budget = self.peer_budget;
@@ -343,6 +345,8 @@ impl NodeCtx {
             }
         }
         self.vclock_ns = vclock;
+        #[cfg(debug_assertions)]
+        self.lockstep_blocking(lock_alive, lock_sent);
         &self.inbox
     }
 
@@ -358,10 +362,16 @@ impl NodeCtx {
         // Arc bump (not a deep clone) to end the borrow of `self.fault`.
         let plan = Arc::clone(self.fault.as_ref().expect("fault plan installed"));
         self.recycle_inbox();
+        #[cfg(debug_assertions)]
+        let (lock_alive, lock_sent) = self.lockstep_snapshot();
         let r = self.round - 1; // straggle() already advanced the round
         let me = self.rank;
         if plan.node_down(me, r) {
-            return &self.inbox; // a down node is silent this round
+            // A down node is silent this round; its inbox was just
+            // recycled, matching the model's zero obligations.
+            #[cfg(debug_assertions)]
+            self.lockstep_blocking(lock_alive, lock_sent);
+            return &self.inbox;
         }
         let stamp = self.vclock_ns;
         let elems = (m.rows * m.cols) as u64;
@@ -400,6 +410,8 @@ impl NodeCtx {
             }
         }
         self.vclock_ns = vclock;
+        #[cfg(debug_assertions)]
+        self.lockstep_blocking(lock_alive, lock_sent);
         &self.inbox
     }
 
@@ -548,6 +560,73 @@ impl NodeCtx {
     /// Snapshot of this node's counters and clock.
     pub fn stats(&self) -> NodeStats {
         NodeStats { vclock_ns: self.vclock_ns, ..self.stats }
+    }
+
+    /// Debug-build snapshot for the lockstep checker: live-link count and
+    /// send tally as a blocking phase starts.
+    #[cfg(debug_assertions)]
+    fn lockstep_snapshot(&self) -> (usize, u64) {
+        (self.links.iter().filter(|l| l.alive).count(), self.stats.sent)
+    }
+
+    /// Runtime half of the static protocol model (`xtask/protocol.toml`):
+    /// after a blocking exchange, re-derive this round's per-edge
+    /// send/recv obligations from the plan's verdicts and assert the
+    /// actual tallies match — the sender skipped exactly what the
+    /// receiver didn't wait for, per edge, per verdict class. Skipped
+    /// when the live-link set changed mid-phase: budget-based peer
+    /// removal is outside the plan's model, and both graceful primitives
+    /// mark the link dead on any such divergence.
+    #[cfg(debug_assertions)]
+    fn lockstep_blocking(&self, alive_before: usize, sent_before: u64) {
+        let alive_after = self.links.iter().filter(|l| l.alive).count();
+        if alive_after != alive_before {
+            return;
+        }
+        let r = self.round.saturating_sub(1);
+        let me = self.rank;
+        let plan = self.fault.as_deref();
+        let self_down = plan.is_some_and(|p| p.node_down(me, r));
+        let mut want_send = 0u64;
+        let mut k = 0usize; // inbox cursor; receives arrive in link order
+        for link in self.links.iter().filter(|l| l.alive) {
+            if self_down {
+                break; // a down node neither sends nor waits
+            }
+            let (skip_send, skip_recv) = match plan {
+                None => (false, false),
+                Some(p) => {
+                    let cut = p.node_down(link.peer, r) || p.edge_cut(r, me, link.peer);
+                    // A lost outbound message still counts as sent; the
+                    // matching skip on our recv side is the *peer's*
+                    // outbound loss verdict.
+                    (cut, cut || p.msg_lost(r, link.peer, me))
+                }
+            };
+            if !skip_send {
+                want_send += 1;
+            }
+            if !skip_recv {
+                assert!(
+                    k < self.inbox.len() && self.inbox[k].0 == link.peer,
+                    "lockstep: round {r} node {me}: expected a message from peer {} at \
+                     inbox slot {k}",
+                    link.peer
+                );
+                k += 1;
+            }
+        }
+        assert_eq!(
+            k,
+            self.inbox.len(),
+            "lockstep: round {r} node {me}: inbox holds messages the protocol model says \
+             nobody sent"
+        );
+        assert_eq!(
+            self.stats.sent - sent_before,
+            want_send,
+            "lockstep: round {r} node {me}: send tally diverges from the protocol model"
+        );
     }
 }
 

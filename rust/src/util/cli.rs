@@ -51,15 +51,15 @@ impl Args {
             if let Some((key, inline)) = split_flag(&a) {
                 if let Some(v) = inline {
                     out.flags.insert(key.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
-                {
-                    let v = it.next().unwrap();
-                    out.flags.insert(key.to_string(), v);
                 } else {
-                    out.flags.insert(key.to_string(), "true".to_string());
+                    // A following non-flag token is this flag's value;
+                    // otherwise it's a bare boolean flag. `next_if` keeps
+                    // the take-or-don't decision a single fallible step —
+                    // no unwrap on user input.
+                    let v = it
+                        .next_if(|n| !n.starts_with("--"))
+                        .unwrap_or_else(|| "true".to_string());
+                    out.flags.insert(key.to_string(), v);
                 }
             } else {
                 out.positional.push(a);

@@ -76,6 +76,43 @@ fn fault_plan_flag_is_bitwise_across_thread_budgets() {
 }
 
 #[test]
+fn cli_fault_plan_keeps_lockstep_checker_silent() {
+    // Debug builds run the cfg(debug_assertions) lockstep checker after
+    // every blocking exchange: it re-derives the round's per-edge
+    // send/recv obligations from the plan's verdicts and panics the node
+    // body on any sender/receiver divergence. A heavy plan — loss plus
+    // churn plus a permanent death — loaded through the CLI flag layer
+    // must complete with the checker silent on every topology the churn
+    // experiment sweeps.
+    let dir = std::env::temp_dir().join("dpsa_lockstep_cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let plan_path = dir.join("lockstep_plan.json");
+    FaultPlan::none()
+        .with_loss(0.25, 13)
+        .with_node_churn(1, 5, 40)
+        .with_node_down(3, 15)
+        .save(&plan_path)
+        .unwrap();
+    let threads = env_threads().to_string();
+    let ctx = load_ctx(&args(&[
+        "--fault-plan",
+        plan_path.to_str().unwrap(),
+        "--scale",
+        "0.02",
+        "--trials",
+        "1",
+        "--threads",
+        &threads,
+        "--out",
+        dir.join("out").to_str().unwrap(),
+    ]))
+    .unwrap();
+    let tables = run("churn", &ctx).unwrap();
+    assert_eq!(tables[0].rows.len(), 9, "3 topologies × 3 loss rates");
+    std::fs::remove_file(&plan_path).ok();
+}
+
+#[test]
 fn checkpoint_flags_kill_resume_end_to_end() {
     let dir = std::env::temp_dir().join("dpsa_ck_flags_e2e");
     std::fs::create_dir_all(&dir).unwrap();

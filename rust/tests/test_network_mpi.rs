@@ -203,6 +203,114 @@ fn spmd_deterministic_across_runs() {
 }
 
 #[test]
+fn lockstep_silent_across_topology_fault_matrix() {
+    // The cfg(debug_assertions) lockstep checker inside every blocking
+    // exchange re-derives the round's per-edge obligations from the
+    // fault plan and panics the node body on any sender/receiver
+    // divergence. This matrix — five topology families × {trivial,
+    // loss, loss+churn} plans × {blocking, async} runtimes — must run
+    // silent, and each cell must be bit-reproducible.
+    use dpsa::fault::FaultPlan;
+    use dpsa::network::mpi::run_spmd_with_faults;
+
+    let topologies = || {
+        vec![Graph::ring(6), Graph::star(6), Graph::path(6), Graph::complete(5), Graph::grid(2, 3)]
+    };
+    let plans: Vec<Option<Arc<FaultPlan>>> = vec![
+        None,
+        Some(Arc::new(FaultPlan::none().with_loss(0.2, 9))),
+        Some(Arc::new(FaultPlan::none().with_loss(0.2, 9).with_node_churn(2, 8, 20))),
+    ];
+    let rounds = 30usize;
+    for g in topologies() {
+        for (p, plan) in plans.iter().enumerate() {
+            let blocking = |g: &Graph, plan: Option<Arc<FaultPlan>>| {
+                run_spmd_with_faults(g, &MpiConfig::default(), plan, move |ctx| {
+                    let m = Mat::eye(3).scale((ctx.rank + 1) as f64);
+                    let mut acc = 0.0;
+                    for _ in 0..rounds {
+                        for &(_, ref mj) in ctx.exchange(&m) {
+                            acc += mj.get(0, 0);
+                        }
+                    }
+                    acc
+                })
+            };
+            let a = blocking(&g, plan.clone());
+            let b = blocking(&g, plan.clone());
+            assert_eq!(
+                a.results, b.results,
+                "topology {} plan {p}: faulty blocking exchange must be deterministic",
+                g.kind
+            );
+            // Async cells never block (no recv obligations at all), so
+            // the same plans must complete without stalls or panics.
+            let async_run = run_spmd_with_faults(&g, &MpiConfig::default(), plan.clone(), move |ctx| {
+                let m = Mat::eye(3).scale((ctx.rank + 1) as f64);
+                let mut acc = 0.0;
+                for _ in 0..rounds {
+                    for &(_, ref mj) in ctx.exchange_async(&m) {
+                        acc += mj.get(0, 0);
+                    }
+                }
+                acc
+            });
+            assert_eq!(async_run.results.len(), g.n, "topology {} plan {p}", g.kind);
+        }
+    }
+}
+
+#[test]
+fn lockstep_matrix_mux_matches_blocking_sum() {
+    // Third runtime of the matrix: the node-multiplexed scheduler. Its
+    // board rounds publish exactly what the blocking runtime puts on
+    // the wire, so the absorbed neighbor sum must match the blocking
+    // cell bit-for-bit on every topology family.
+    use dpsa::network::mpi::run_spmd_mux;
+    use dpsa::runtime::spmd::MuxProgram;
+
+    struct SumProg {
+        z: Mat,
+        acc: f64,
+    }
+    impl MuxProgram for SumProg {
+        fn dims(&self) -> (usize, usize) {
+            (self.z.rows, self.z.cols)
+        }
+        fn publish(&self, _round: u64, out: &mut Mat) {
+            out.copy_from(&self.z);
+        }
+        fn absorb(&mut self, _round: u64, neighbors: &[usize], board: &[Mat]) {
+            for &j in neighbors {
+                self.acc += board[j].get(0, 0);
+            }
+        }
+    }
+
+    let rounds = 30u64;
+    for g in [Graph::ring(6), Graph::star(6), Graph::path(6), Graph::complete(5), Graph::grid(2, 3)]
+    {
+        let programs: Vec<SumProg> = (0..g.n)
+            .map(|i| SumProg { z: Mat::eye(3).scale((i + 1) as f64), acc: 0.0 })
+            .collect();
+        let mux = run_spmd_mux(&g, &MpiConfig::default(), 3, rounds, programs);
+        let blocking = run_spmd(&g, &MpiConfig::default(), move |ctx| {
+            let m = Mat::eye(3).scale((ctx.rank + 1) as f64);
+            let mut acc = 0.0;
+            for _ in 0..rounds {
+                for &(_, ref mj) in ctx.exchange(&m) {
+                    acc += mj.get(0, 0);
+                }
+            }
+            acc
+        });
+        for (i, (p, r)) in mux.programs.iter().zip(blocking.results.iter()).enumerate() {
+            assert_eq!(p.acc, *r, "topology {} node {i}: mux vs blocking sum", g.kind);
+        }
+    }
+}
+
+#[test]
 fn spmd_pool_reuses_workers_across_runs() {
     // Prime the pool well past any node count used elsewhere in this
     // binary (the pool is process-global and sibling tests run

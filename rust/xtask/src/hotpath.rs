@@ -16,7 +16,8 @@
 //! A `[functions]` entry that no longer matches any fn is an error —
 //! the manifest must not rot as code moves.
 
-use crate::source::{find_word, next_token, SourceFile};
+use crate::source::SourceFile;
+use crate::spans::{fn_spans, in_spans, test_spans};
 use std::collections::BTreeMap;
 
 /// Allocating constructors banned in hot-path bodies. Substring match on
@@ -40,13 +41,6 @@ const BANNED: &[&str] = &[
     "Mat::gauss(",
 ];
 
-struct FnSpan {
-    name: String,
-    /// 0-based inclusive line range of `fn` keyword .. closing brace.
-    start: usize,
-    end: usize,
-}
-
 pub fn scan(
     files: &[SourceFile],
     functions: &BTreeMap<String, String>,
@@ -65,7 +59,7 @@ pub fn scan(
         for span in &spans {
             // In-file `#[cfg(test)]` modules are not shipped code; their
             // helper fns may share hot-path suffixes (e.g. prop tests).
-            if tests.iter().any(|&(lo, hi)| span.start >= lo && span.start <= hi) {
+            if in_spans(&tests, span.start) {
                 continue;
             }
             let key = format!("{}::{}", sf.rel, span.name);
@@ -119,85 +113,4 @@ pub fn scan(
         }
     }
     violations
-}
-
-/// Line spans of `#[cfg(test)] mod … { }` blocks, so the alloc ban only
-/// governs shipped code.
-fn test_spans(sf: &SourceFile) -> Vec<(usize, usize)> {
-    let mut out = Vec::new();
-    for (idx, line) in sf.lines.iter().enumerate() {
-        if !line.code.trim().starts_with("#[cfg(test)]") {
-            continue;
-        }
-        // The next code line should introduce the module.
-        for (j, follow) in sf.lines.iter().enumerate().skip(idx + 1) {
-            let t = follow.code.trim();
-            if t.is_empty() || follow.is_attribute() {
-                continue;
-            }
-            if find_word(t, "mod").first() == Some(&0) || t.starts_with("pub mod") {
-                if let Some((end, _)) = body_end(sf, j, 0) {
-                    out.push((j, end));
-                }
-            }
-            break;
-        }
-    }
-    out
-}
-
-/// All fn definitions in a file with their body line spans. Token-level:
-/// find the `fn` keyword, take the following identifier as the name, then
-/// brace-match the body on comment-stripped code. Declarations (`fn f();`)
-/// and fn-pointer types (`fn(usize)`) are skipped.
-fn fn_spans(sf: &SourceFile) -> Vec<FnSpan> {
-    let mut spans = Vec::new();
-    for (idx, line) in sf.lines.iter().enumerate() {
-        for at in find_word(&line.code, "fn") {
-            let after = at + "fn".len();
-            let Some(name) = next_token(&line.code, after) else { continue };
-            if !name.chars().next().is_some_and(|c| c.is_alphabetic() || c == '_') {
-                continue; // `fn(` pointer type or stray punctuation
-            }
-            if let Some((end, _)) = body_end(sf, idx, after) {
-                spans.push(FnSpan { name, start: idx, end });
-            }
-        }
-    }
-    spans
-}
-
-/// From the fn keyword, find the body-opening `{` (skipping the signature)
-/// and brace-match to the close. Returns None for bodyless declarations.
-fn body_end(sf: &SourceFile, line: usize, col: usize) -> Option<(usize, usize)> {
-    let mut depth: i32 = 0;
-    let mut brackets: i32 = 0; // `[f64; 4]` in a signature is not a decl-`;`
-    let mut in_body = false;
-    let mut l = line;
-    let mut c = col;
-    while l < sf.lines.len() {
-        let code = sf.lines[l].code.as_bytes();
-        while c < code.len() {
-            match code[c] {
-                b'{' => {
-                    depth += 1;
-                    in_body = true;
-                }
-                b'}' => {
-                    depth -= 1;
-                    if in_body && depth == 0 {
-                        return Some((l, c));
-                    }
-                }
-                b'[' => brackets += 1,
-                b']' => brackets -= 1,
-                b';' if !in_body && depth == 0 && brackets == 0 => return None,
-                _ => {}
-            }
-            c += 1;
-        }
-        l += 1;
-        c = 0;
-    }
-    None
 }

@@ -1,0 +1,348 @@
+//! Rule family 5: knob-surface drift.
+//!
+//! `xtask/knobs.toml` is the single declared table of experiment knobs.
+//! Each `[knob.<flag>]` entry names the knob's projection onto every
+//! surface it is reachable from, and the analyzer checks each projection
+//! *bidirectionally* against the code:
+//!
+//! 1. the `config::FLAGS` FlagSpec registry (CLI surface),
+//! 2. the JSON config keys accepted by `config::from_file`,
+//! 3. the `BENCH_*` env vars read anywhere in `src/`
+//!    (`[env_extra]` waives non-knob plumbing like `BENCH_JSON_OUT`),
+//! 4. the `ExpCtx` struct fields,
+//! 5. the "Ledger-pinned result-affecting policies:" marker line in
+//!    ROADMAP's determinism contracts (`pinned = "true"` knobs).
+//!
+//! A knob present in code but absent from the table — or declared but no
+//! longer reachable — is a `[knob-drift]` violation. Result-affecting
+//! policies (`--qr`, `--simd`, `--fault-plan`) must be declared pinned,
+//! and the ROADMAP ledger-pin list must match the pinned set exactly, so
+//! a new bit-changing knob cannot land without updating the contract
+//! reviewers pin perf comparisons on.
+//!
+//! Entry keys: `config_key`, `env`, `ctx_field` (each `"none"` when the
+//! knob has no such projection), `pinned` (`"true"`/`"false"`, default
+//! false). The section name *is* the CLI flag name.
+
+use crate::source::{find_word, SourceFile};
+use crate::spans::{body_end, fn_spans};
+use std::collections::{BTreeMap, BTreeSet};
+
+const FLAGS_FILE: &str = "src/config/mod.rs";
+const CTX_FILE: &str = "src/experiments/mod.rs";
+const MARKER: &str = "Ledger-pinned result-affecting policies:";
+
+pub fn scan(
+    files: &[SourceFile],
+    roadmap: &str,
+    knobs: &BTreeMap<String, BTreeMap<String, String>>,
+    env_extra: &BTreeMap<String, String>,
+) -> Vec<String> {
+    let mut violations = Vec::new();
+    let mut declared_config = BTreeSet::new();
+    let mut declared_env = BTreeSet::new();
+    let mut declared_ctx = BTreeSet::new();
+    let mut declared_pinned = BTreeSet::new();
+    for (flag, entry) in knobs {
+        for k in entry.keys() {
+            if !matches!(k.as_str(), "config_key" | "env" | "ctx_field" | "pinned") {
+                violations.push(format!(
+                    "knobs.toml: [knob.{flag}] unknown key \"{k}\" \
+                     (config_key|env|ctx_field|pinned)"
+                ));
+            }
+        }
+        let proj = |k: &str| entry.get(k).map(String::as_str).filter(|v| *v != "none");
+        if let Some(v) = proj("config_key") {
+            declared_config.insert(v.to_string());
+        }
+        if let Some(v) = proj("env") {
+            if env_extra.contains_key(v) {
+                violations.push(format!(
+                    "knobs.toml: [env_extra] \"{v}\" is already the env projection of \
+                     [knob.{flag}] — a knob env var cannot be waived as non-knob plumbing"
+                ));
+            }
+            declared_env.insert(v.to_string());
+        }
+        if let Some(v) = proj("ctx_field") {
+            declared_ctx.insert(v.to_string());
+        }
+        match entry.get("pinned").map(String::as_str) {
+            Some("true") => {
+                declared_pinned.insert(flag.clone());
+            }
+            Some("false") | None => {}
+            Some(other) => violations.push(format!(
+                "knobs.toml: [knob.{flag}] pinned=\"{other}\" — must be \"true\" or \"false\""
+            )),
+        }
+    }
+
+    check_flags(files, knobs, &mut violations);
+    check_config_keys(files, &declared_config, &mut violations);
+    check_env(files, &declared_env, env_extra, &mut violations);
+    check_ctx_fields(files, &declared_ctx, &mut violations);
+    check_pinned(roadmap, &declared_pinned, &mut violations);
+    violations
+}
+
+/// Projection 1: `config::FLAGS` names exactly the declared knobs, and
+/// every `args.get("…")` anywhere in src names a declared knob.
+fn check_flags(
+    files: &[SourceFile],
+    knobs: &BTreeMap<String, BTreeMap<String, String>>,
+    violations: &mut Vec<String>,
+) {
+    let Some(sf) = files.iter().find(|f| f.rel == FLAGS_FILE) else {
+        violations.push(format!(
+            "[knob-drift] {FLAGS_FILE} not found — the FLAGS registry moved, update xtask"
+        ));
+        return;
+    };
+    let Some(start) = sf
+        .lines
+        .iter()
+        .position(|l| l.code.contains("const") && !find_word(&l.code, "FLAGS").is_empty())
+    else {
+        violations.push(format!(
+            "[knob-drift] {FLAGS_FILE}: `const FLAGS` registry not found"
+        ));
+        return;
+    };
+    let mut in_code = BTreeSet::new();
+    for (idx, line) in sf.lines.iter().enumerate().skip(start) {
+        if line.code.contains("name:") {
+            if let Some(name) = line.strings.first() {
+                in_code.insert((name.clone(), idx + 1));
+            }
+        }
+        if line.code.contains("];") {
+            break;
+        }
+    }
+    for (name, ln) in &in_code {
+        if !knobs.contains_key(name) {
+            violations.push(format!(
+                "{FLAGS_FILE}:{ln}: [knob-drift] flag `--{name}` is not declared in \
+                 knobs.toml — extend the table, don't bypass it"
+            ));
+        }
+    }
+    for flag in knobs.keys() {
+        if !in_code.iter().any(|(n, _)| n == flag) {
+            violations.push(format!(
+                "knobs.toml: [knob-drift] [knob.{flag}] matches no FLAGS entry — \
+                 manifest rot, update the table"
+            ));
+        }
+    }
+    // Stray flag reads: `args.get("x")` must name a declared knob.
+    for f in files {
+        for (idx, line) in f.lines.iter().enumerate() {
+            if !line.code.contains("args.get(") {
+                continue;
+            }
+            for s in &line.strings {
+                if !knobs.contains_key(s) {
+                    violations.push(format!(
+                        "{}:{}: [knob-drift] reads undeclared flag \"{s}\"",
+                        f.rel,
+                        idx + 1
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// Projection 2: JSON config keys accepted by `config::from_file`.
+fn check_config_keys(
+    files: &[SourceFile],
+    declared: &BTreeSet<String>,
+    violations: &mut Vec<String>,
+) {
+    let Some(sf) = files.iter().find(|f| f.rel == FLAGS_FILE) else { return };
+    let Some(span) = fn_spans(sf).into_iter().find(|s| s.name == "from_file") else {
+        violations.push(format!(
+            "[knob-drift] {FLAGS_FILE}: fn `from_file` not found — config loader moved"
+        ));
+        return;
+    };
+    let mut in_code = BTreeSet::new();
+    for l in span.start..=span.end {
+        let line = &sf.lines[l];
+        if line.code.contains("json.get(") {
+            if let Some(key) = line.strings.first() {
+                in_code.insert((key.clone(), l + 1));
+            }
+        }
+    }
+    for (key, ln) in &in_code {
+        if !declared.contains(key) {
+            violations.push(format!(
+                "{FLAGS_FILE}:{ln}: [knob-drift] config key \"{key}\" has no \
+                 config_key projection in knobs.toml"
+            ));
+        }
+    }
+    for key in declared {
+        if !in_code.iter().any(|(k, _)| k == key) {
+            violations.push(format!(
+                "knobs.toml: [knob-drift] declared config_key \"{key}\" is not read by \
+                 `from_file` — manifest rot, update the table"
+            ));
+        }
+    }
+}
+
+/// Projection 3: every `BENCH_*` env var read in src is either a knob's
+/// declared env projection or an `[env_extra]` waiver — and both lists
+/// stay live.
+fn check_env(
+    files: &[SourceFile],
+    declared: &BTreeSet<String>,
+    env_extra: &BTreeMap<String, String>,
+    violations: &mut Vec<String>,
+) {
+    let is_env_name =
+        |s: &str| s.starts_with("BENCH_") && s.chars().all(|c| c.is_ascii_uppercase() || c == '_');
+    let mut in_code = BTreeSet::new();
+    for f in files {
+        for (idx, line) in f.lines.iter().enumerate() {
+            if !line.code.contains("env::var") {
+                continue;
+            }
+            for s in &line.strings {
+                if is_env_name(s) {
+                    in_code.insert((s.clone(), f.rel.clone(), idx + 1));
+                }
+            }
+        }
+    }
+    for (name, file, ln) in &in_code {
+        if !declared.contains(name) && !env_extra.contains_key(name) {
+            violations.push(format!(
+                "{file}:{ln}: [knob-drift] env var `{name}` is neither a knob env \
+                 projection nor an [env_extra] waiver in knobs.toml"
+            ));
+        }
+    }
+    for name in declared {
+        if !in_code.iter().any(|(n, _, _)| n == name) {
+            violations.push(format!(
+                "knobs.toml: [knob-drift] declared env `{name}` is never read — \
+                 manifest rot, update the table"
+            ));
+        }
+    }
+    for name in env_extra.keys() {
+        if !in_code.iter().any(|(n, _, _)| n == name) {
+            violations.push(format!(
+                "knobs.toml: [knob-drift] [env_extra] \"{name}\" waives an env var that is \
+                 never read — remove it (waivers must not rot)"
+            ));
+        }
+    }
+}
+
+/// Projection 4: `ExpCtx` struct fields.
+fn check_ctx_fields(
+    files: &[SourceFile],
+    declared: &BTreeSet<String>,
+    violations: &mut Vec<String>,
+) {
+    let Some(sf) = files.iter().find(|f| f.rel == CTX_FILE) else {
+        violations.push(format!(
+            "[knob-drift] {CTX_FILE} not found — ExpCtx moved, update xtask"
+        ));
+        return;
+    };
+    let Some(start) = sf.lines.iter().position(|l| {
+        !find_word(&l.code, "struct").is_empty() && !find_word(&l.code, "ExpCtx").is_empty()
+    }) else {
+        violations.push(format!("[knob-drift] {CTX_FILE}: `struct ExpCtx` not found"));
+        return;
+    };
+    let Some((end, _)) = body_end(sf, start, 0) else {
+        violations.push(format!("[knob-drift] {CTX_FILE}: `struct ExpCtx` body unreadable"));
+        return;
+    };
+    let mut in_code = BTreeSet::new();
+    for l in start + 1..=end {
+        let code = sf.lines[l].code.trim();
+        if let Some(rest) = code.strip_prefix("pub ") {
+            if let Some(colon) = rest.find(':') {
+                let name = rest[..colon].trim();
+                if !name.is_empty() && name.chars().all(|c| c.is_alphanumeric() || c == '_') {
+                    in_code.insert((name.to_string(), l + 1));
+                }
+            }
+        }
+    }
+    for (name, ln) in &in_code {
+        if !declared.contains(name) {
+            violations.push(format!(
+                "{CTX_FILE}:{ln}: [knob-drift] ExpCtx field `{name}` has no ctx_field \
+                 projection in knobs.toml"
+            ));
+        }
+    }
+    for name in declared {
+        if !in_code.iter().any(|(n, _)| n == name) {
+            violations.push(format!(
+                "knobs.toml: [knob-drift] declared ctx_field `{name}` is not an ExpCtx \
+                 field — manifest rot, update the table"
+            ));
+        }
+    }
+}
+
+/// Projection 5: ROADMAP's ledger-pin marker line lists exactly the
+/// `pinned = "true"` knobs.
+fn check_pinned(roadmap: &str, declared: &BTreeSet<String>, violations: &mut Vec<String>) {
+    // The marker may sit inside a markdown bullet; the flag list is
+    // everything after it on the same physical line.
+    let Some((ln, tail)) = roadmap
+        .lines()
+        .enumerate()
+        .find_map(|(i, l)| l.find(MARKER).map(|at| (i, &l[at + MARKER.len()..])))
+    else {
+        violations.push(format!(
+            "ROADMAP.md: [knob-drift] marker line \"{MARKER}\" not found in the \
+             determinism contracts — the ledger-pin list must stay machine-checkable"
+        ));
+        return;
+    };
+    let mut listed = BTreeSet::new();
+    let mut rest = tail;
+    while let Some(at) = rest.find("--") {
+        let tail = &rest[at + 2..];
+        let end = tail
+            .find(|c: char| !(c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-'))
+            .unwrap_or(tail.len());
+        if end > 0 {
+            listed.insert(tail[..end].to_string());
+        }
+        rest = &tail[end..];
+    }
+    for flag in &listed {
+        if !declared.contains(flag) {
+            violations.push(format!(
+                "ROADMAP.md:{}: [knob-drift] ledger-pin list names `--{flag}` but \
+                 knobs.toml does not declare it pinned",
+                ln + 1
+            ));
+        }
+    }
+    for flag in declared {
+        if !listed.contains(flag) {
+            violations.push(format!(
+                "ROADMAP.md:{}: [knob-drift] `--{flag}` is declared pinned in knobs.toml \
+                 but missing from the ledger-pin list — result-affecting policies must be \
+                 on the contract line reviewers pin",
+                ln + 1
+            ));
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Rule family 6: ledger key schemas.
+//!
+//! The seven `BENCH_*.json` perf ledgers anchor every performance claim
+//! in CI (the bench-smoke job asserts on specific keys). `xtask/
+//! ledgers.toml` declares, per ledger, the exact key patterns its bench
+//! binary may write; the analyzer extracts every `report.push(…)` /
+//! `report.push_timing(…)` key literal from the bench source (format
+//! placeholders `{d}`, `{}`, `{topo}` all normalize to `{}`) and checks
+//! both directions:
+//!
+//! * a written key matching no declared pattern is drift — CI assertions
+//!   downstream would silently stop seeing it ([ledger-schema]);
+//! * a declared pattern no bench writes is manifest rot;
+//! * the `report.save("BENCH_<name>.json")` target must match the
+//!   ledger's name, and every bench that saves a ledger must have a
+//!   `[ledger.<name>]` section — no bypass path for an eighth ledger.
+//!
+//! Manifest format (`ledgers.toml`):
+//!   [ledger.qr]
+//!   "__bench__" = "benches/bench_qr.rs"    # only when the path is not
+//!                                          # benches/bench_<name>.rs
+//!   "qr_{}_d{d}_r{r}_ns" = "per-policy QR latency at shape (d, r)"
+//!
+//! The declared schema set is emitted to
+//! `target/repolint/ledger_schemas.json` as a CI artifact.
+
+use crate::source::SourceFile;
+use std::collections::BTreeMap;
+
+pub struct LedgerReport {
+    pub violations: Vec<String>,
+    pub schema_json: String,
+}
+
+pub fn scan(
+    files: &[SourceFile],
+    ledgers: &BTreeMap<String, BTreeMap<String, String>>,
+) -> LedgerReport {
+    let mut violations = Vec::new();
+    for (name, entry) in ledgers {
+        check_ledger(name, entry, files, &mut violations);
+    }
+    // Reverse direction: a bench saving an undeclared ledger is drift.
+    for sf in files.iter().filter(|f| f.rel.starts_with("benches/")) {
+        for (idx, line) in sf.lines.iter().enumerate() {
+            if !line.code.contains("report.save(") {
+                continue;
+            }
+            let Some(target) = line.strings.first() else { continue };
+            let declared = target
+                .strip_prefix("BENCH_")
+                .and_then(|t| t.strip_suffix(".json"))
+                .is_some_and(|n| ledgers.contains_key(n));
+            if !declared {
+                violations.push(format!(
+                    "{}:{}: [ledger-schema] saves undeclared ledger \"{target}\" — add a \
+                     [ledger.*] schema to ledgers.toml, don't bypass the gate",
+                    sf.rel,
+                    idx + 1
+                ));
+            }
+        }
+    }
+    LedgerReport { violations, schema_json: schema_json(ledgers) }
+}
+
+fn check_ledger(
+    name: &str,
+    entry: &BTreeMap<String, String>,
+    files: &[SourceFile],
+    violations: &mut Vec<String>,
+) {
+    let default_bench = format!("benches/bench_{name}.rs");
+    let bench = entry.get("__bench__").cloned().unwrap_or(default_bench);
+    let Some(sf) = files.iter().find(|f| f.rel == bench) else {
+        violations.push(format!(
+            "ledgers.toml: [ledger.{name}] bench \"{bench}\" not found — manifest rot, \
+             update the entry"
+        ));
+        return;
+    };
+    // Declared patterns, keyed by normalized form.
+    let mut declared: BTreeMap<String, (String, bool)> = BTreeMap::new();
+    for key in entry.keys().filter(|k| *k != "__bench__") {
+        if let Some((prev, _)) = declared.insert(normalize(key), (key.clone(), false)) {
+            violations.push(format!(
+                "ledgers.toml: [ledger.{name}] \"{key}\" and \"{prev}\" normalize to the \
+                 same pattern — remove one"
+            ));
+        }
+    }
+    let mut saved = false;
+    for (idx, line) in sf.lines.iter().enumerate() {
+        if line.code.contains("report.save(") {
+            saved = true;
+            let want = format!("BENCH_{name}.json");
+            match line.strings.first() {
+                Some(t) if *t == want => {}
+                Some(t) => violations.push(format!(
+                    "{bench}:{}: [ledger-schema] saves to \"{t}\" but [ledger.{name}] \
+                     expects \"{want}\"",
+                    idx + 1
+                )),
+                None => {}
+            }
+            continue;
+        }
+        if !line.code.contains("report.push") {
+            continue;
+        }
+        // The key literal may sit on a following line (multi-line
+        // `report.push(\n    &format!("…"),` calls).
+        let key = (idx..sf.lines.len().min(idx + 4))
+            .find_map(|j| sf.lines[j].strings.first().cloned());
+        let Some(key) = key else {
+            violations.push(format!(
+                "{bench}:{}: [ledger-schema] report.push with no string key within reach — \
+                 keep the key literal next to the call so the schema gate can read it",
+                idx + 1
+            ));
+            continue;
+        };
+        match declared.get_mut(&normalize(&key)) {
+            Some((_, hit)) => *hit = true,
+            None => violations.push(format!(
+                "{bench}:{}: [ledger-schema] writes key \"{key}\" not in the \
+                 [ledger.{name}] schema — CI assertions can't see schema drift, extend \
+                 ledgers.toml",
+                idx + 1
+            )),
+        }
+    }
+    if !saved {
+        violations.push(format!(
+            "{bench}: [ledger-schema] never calls report.save — ledger \"{name}\" is \
+             declared but unwritten"
+        ));
+    }
+    for (spelled, hit) in declared.values() {
+        if !hit {
+            violations.push(format!(
+                "ledgers.toml: [ledger.{name}] \"{spelled}\" is never written by {bench} — \
+                 manifest rot, update the schema"
+            ));
+        }
+    }
+}
+
+/// Collapse every `{…}` format placeholder to `{}` so `qr_d{d}_ns`,
+/// `qr_d{}_ns`, and the runtime `qr_d784_ns` spelling in ledgers.toml
+/// all name the same pattern.
+fn normalize(key: &str) -> String {
+    let mut out = String::with_capacity(key.len());
+    let mut depth = 0u32;
+    for c in key.chars() {
+        match c {
+            '{' => {
+                if depth == 0 {
+                    out.push_str("{}");
+                }
+                depth += 1;
+            }
+            '}' => depth = depth.saturating_sub(1),
+            _ if depth == 0 => out.push(c),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// CI artifact: the declared schema per ledger, in manifest spelling.
+fn schema_json(ledgers: &BTreeMap<String, BTreeMap<String, String>>) -> String {
+    let mut out = String::from("{\n");
+    let mut first_ledger = true;
+    for (name, entry) in ledgers {
+        if !first_ledger {
+            out.push_str(",\n");
+        }
+        first_ledger = false;
+        let default_bench = format!("benches/bench_{name}.rs");
+        let bench = entry.get("__bench__").cloned().unwrap_or(default_bench);
+        out.push_str(&format!(
+            "  \"BENCH_{name}.json\": {{\n    \"bench\": \"{bench}\",\n    \"keys\": ["
+        ));
+        let keys: Vec<String> = entry
+            .keys()
+            .filter(|k| *k != "__bench__")
+            .map(|k| format!("\"{}\"", k.replace('\\', "\\\\").replace('"', "\\\"")))
+            .collect();
+        out.push_str(&keys.join(", "));
+        out.push_str("]\n  }");
+    }
+    out.push_str("\n}\n");
+    out
+}

@@ -1,0 +1,209 @@
+//! repolint as a library: `lint_root(root)` runs every rule family over
+//! an arbitrary crate root and returns the report instead of exiting.
+//! The `xtask` binary is a thin wrapper that adds artifact writing; the
+//! negative-fixture suite in `tests/` calls `lint_root` on miniature
+//! crate roots, each seeded with one known violation, and asserts the
+//! right rule id comes back — the analyzer's own tier-1 coverage.
+//!
+//! Rule families (ids in brackets, one per violation line):
+//!   1. [safety]        SAFETY coverage for `unsafe` (+ inventory JSON)
+//!   2. [hashmap] [wallclock] [randomness] [float-cmp]  determinism
+//!   3. [hotpath]       hot-path alloc bans (`xtask/hotpath.toml`)
+//!   4. [protocol] [deadlock] [buffer]  exchange-phase discipline
+//!                      (`xtask/protocol.toml`)
+//!   5. [knob-drift]    knob-surface projections (`xtask/knobs.toml`)
+//!   6. [ledger-schema] bench ledger key schemas (`xtask/ledgers.toml`)
+//!   7. [parse-panic]   no unwrap/expect on user-input parse paths
+//!
+//! A family whose manifest file is absent under `<root>/xtask/` is
+//! skipped — fixture roots opt into exactly the families they test. The
+//! real repo commits all three manifests, and the fixture suite pins
+//! that each family actually fires.
+
+pub mod config;
+pub mod determinism;
+pub mod hotpath;
+pub mod knobs;
+pub mod ledgers;
+pub mod parsepanic;
+pub mod protocol;
+pub mod safety;
+pub mod source;
+pub mod spans;
+
+use source::SourceFile;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub struct LintReport {
+    /// Sorted human-readable violations; empty means the tree is clean.
+    pub violations: Vec<String>,
+    pub files_scanned: usize,
+    /// Full unsafe census (also when justified) + its JSON artifact.
+    pub unsafe_sites: usize,
+    pub unsafe_inventory_json: String,
+    /// Extracted exchange-phase model, for the CI artifact diff.
+    pub protocol_model_json: String,
+    /// Declared ledger schemas, for the CI artifact upload.
+    pub ledger_schemas_json: String,
+}
+
+/// Run every rule family over the crate at `root` (the directory holding
+/// `src/` and `xtask/`). `Err` is a config/setup failure (exit 2 at the
+/// CLI), not a lint finding.
+pub fn lint_root(root: &Path) -> Result<LintReport, String> {
+    let load = |dirs: &[&str]| -> Result<Vec<SourceFile>, String> {
+        let mut out = Vec::new();
+        for dir in dirs {
+            for rel in source::collect_rs_files(root, dir) {
+                let text = std::fs::read_to_string(root.join(&rel))
+                    .map_err(|e| format!("cannot read {rel}: {e}"))?;
+                out.push(SourceFile::parse(&rel, &text));
+            }
+        }
+        Ok(out)
+    };
+    // Rule 1 audits everything that compiles into test/bench binaries;
+    // the other families govern shipped library/bench code as noted.
+    let all_files = load(&["src", "tests", "benches"])?;
+    let src_files = load(&["src"])?;
+
+    let mut allow = load_allow(&root.join("xtask/allow.toml"))?;
+    let parse_allow = allow.remove("parse-panic").unwrap_or_default();
+
+    let mut violations: Vec<String> = Vec::new();
+
+    // (1) SAFETY coverage + inventory.
+    let report = safety::scan(&all_files);
+    violations.extend(report.violations);
+    let unsafe_inventory_json = safety::inventory_json(&report.sites);
+
+    // (2) Determinism hygiene (src only).
+    violations.extend(determinism::scan(&src_files, &allow));
+
+    // (3) Hot-path alloc bans.
+    let mut protocol_model_json = String::from("[]\n");
+    let mut ledger_schemas_json = String::from("{}\n");
+    if let Some(manifest) = load_manifest(&root.join("xtask/hotpath.toml"))? {
+        violations.extend(hotpath::scan(
+            &src_files,
+            &manifest.section("functions"),
+            &manifest.section("suffixes"),
+            &manifest.section("warmup"),
+        ));
+    }
+
+    // (4) Protocol discipline for the exchange layer.
+    if let Some(manifest) = load_manifest(&root.join("xtask/protocol.toml"))? {
+        let mut phases = BTreeMap::new();
+        for (section, entries) in manifest.sections {
+            match section.strip_prefix("phase.") {
+                Some(name) => {
+                    phases.insert(name.to_string(), entries);
+                }
+                None => {
+                    return Err(format!(
+                        "protocol.toml: section [{section}] must be named [phase.<fn>]"
+                    ))
+                }
+            }
+        }
+        let rep = protocol::scan(&src_files, &phases);
+        violations.extend(rep.violations);
+        protocol_model_json = protocol::model_json(&rep.model);
+    }
+
+    // (5) Knob-surface drift.
+    if let Some(manifest) = load_manifest(&root.join("xtask/knobs.toml"))? {
+        let mut table = BTreeMap::new();
+        let mut env_extra = BTreeMap::new();
+        for (section, entries) in manifest.sections {
+            if section == "env_extra" {
+                env_extra = entries;
+            } else if let Some(name) = section.strip_prefix("knob.") {
+                table.insert(name.to_string(), entries);
+            } else {
+                return Err(format!(
+                    "knobs.toml: section [{section}] must be [knob.<flag>] or [env_extra]"
+                ));
+            }
+        }
+        let roadmap = read_roadmap(root);
+        violations.extend(knobs::scan(&src_files, &roadmap, &table, &env_extra));
+    }
+
+    // (6) Ledger key schemas (bench sources).
+    if let Some(manifest) = load_manifest(&root.join("xtask/ledgers.toml"))? {
+        let mut table = BTreeMap::new();
+        for (section, entries) in manifest.sections {
+            match section.strip_prefix("ledger.") {
+                Some(name) => {
+                    table.insert(name.to_string(), entries);
+                }
+                None => {
+                    return Err(format!(
+                        "ledgers.toml: section [{section}] must be named [ledger.<name>]"
+                    ))
+                }
+            }
+        }
+        let rep = ledgers::scan(&all_files, &table);
+        violations.extend(rep.violations);
+        ledger_schemas_json = rep.schema_json;
+    }
+
+    // (7) No panics on user-input parse paths.
+    parsepanic::scan(&src_files, &parse_allow, &mut violations);
+
+    violations.sort();
+    Ok(LintReport {
+        violations,
+        files_scanned: all_files.len(),
+        unsafe_sites: report.sites.len(),
+        unsafe_inventory_json,
+        protocol_model_json,
+        ledger_schemas_json,
+    })
+}
+
+/// The ledger-pin marker line lives in the repo-level ROADMAP (one dir
+/// above the crate root); fixture roots may carry their own copy.
+fn read_roadmap(root: &Path) -> String {
+    let local = root.join("ROADMAP.md");
+    let repo = root.parent().map(|p| p.join("ROADMAP.md"));
+    std::fs::read_to_string(&local)
+        .or_else(|_| std::fs::read_to_string(repo.as_deref().unwrap_or(&local)))
+        .unwrap_or_default()
+}
+
+/// A manifest is optional per root (fixtures opt in per family); a
+/// present-but-malformed manifest is still a hard config error.
+fn load_manifest(path: &Path) -> Result<Option<config::Config>, String> {
+    if !path.exists() {
+        return Ok(None);
+    }
+    config::Config::parse(path).map(Some)
+}
+
+/// `allow.toml` sections are `[allow.<rule>]`; strip the prefix so each
+/// pass keys by rule name. Absent file means an empty allowlist.
+fn load_allow(path: &Path) -> Result<BTreeMap<String, BTreeMap<String, String>>, String> {
+    let mut out = BTreeMap::new();
+    if !path.exists() {
+        return Ok(out);
+    }
+    let cfg = config::Config::parse(path)?;
+    for (section, entries) in cfg.sections {
+        match section.strip_prefix("allow.") {
+            Some(rule) => {
+                out.insert(rule.to_string(), entries);
+            }
+            None => {
+                return Err(format!(
+                    "allow.toml: section [{section}] must be named [allow.<rule>]"
+                ))
+            }
+        }
+    }
+    Ok(out)
+}

@@ -1,20 +1,14 @@
 //! `cargo run -p xtask -- lint` — repo-invariant analyzer ("repolint").
 //!
-//! Std-only static pass over the `dpsa` crate sources enforcing the three
-//! rule families documented in `xtask/README.md` and ROADMAP "Static
-//! invariants": SAFETY coverage, determinism hygiene, hot-path alloc
-//! bans. Always writes `target/repolint/unsafe_inventory.json`; exits
-//! nonzero when any violation is found.
+//! Std-only static pass over the `dpsa` crate sources enforcing the
+//! seven rule families documented in `xtask/README.md` and ROADMAP
+//! "Static invariants": SAFETY coverage, determinism hygiene, hot-path
+//! alloc bans, exchange-protocol discipline, knob-surface drift, ledger
+//! key schemas, and parse-path panic bans. Writes three artifacts under
+//! `target/repolint/` (unsafe inventory, protocol model, ledger
+//! schemas); exits nonzero when any violation is found.
 
-mod config;
-mod determinism;
-mod hotpath;
-mod safety;
-mod source;
-
-use source::SourceFile;
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -24,7 +18,8 @@ fn main() {
             eprintln!("usage: cargo run -p xtask -- lint");
             eprintln!();
             eprintln!("Runs the repolint pass: SAFETY coverage, determinism hygiene,");
-            eprintln!("hot-path alloc bans. Writes target/repolint/unsafe_inventory.json.");
+            eprintln!("hot-path alloc bans, protocol discipline, knob drift, ledger");
+            eprintln!("schemas, parse-panic bans. Writes target/repolint/ artifacts.");
             std::process::exit(2);
         }
     }
@@ -37,94 +32,44 @@ fn lint() -> i32 {
         .expect("xtask has a parent dir")
         .to_path_buf();
 
-    let load = |dirs: &[&str]| -> Vec<SourceFile> {
-        let mut out = Vec::new();
-        for dir in dirs {
-            for rel in source::collect_rs_files(&root, dir) {
-                match std::fs::read_to_string(root.join(&rel)) {
-                    Ok(text) => out.push(SourceFile::parse(&rel, &text)),
-                    Err(e) => {
-                        eprintln!("repolint: cannot read {rel}: {e}");
-                        std::process::exit(2);
-                    }
-                }
-            }
+    let report = match xtask::lint_root(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("repolint: {e}");
+            return 2;
         }
-        out
     };
-    // Rule 1 audits everything that compiles into test/bench binaries;
-    // rules 2-3 govern shipped library code only.
-    let all_files = load(&["src", "tests", "benches"]);
-    let src_files = load(&["src"]);
 
-    let allow = load_allow(&root.join("xtask/allow.toml"));
-    let manifest = config::Config::parse(&root.join("xtask/hotpath.toml"))
-        .unwrap_or_else(|e| fail_config(&e));
-
-    let mut violations: Vec<String> = Vec::new();
-
-    // (1) SAFETY coverage + inventory.
-    let report = safety::scan(&all_files);
-    violations.extend(report.violations);
-    let inv_dir = root.join("target/repolint");
-    if let Err(e) = std::fs::create_dir_all(&inv_dir) {
-        eprintln!("repolint: cannot create {}: {e}", inv_dir.display());
+    let art_dir = root.join("target/repolint");
+    if let Err(e) = std::fs::create_dir_all(&art_dir) {
+        eprintln!("repolint: cannot create {}: {e}", art_dir.display());
         return 2;
     }
-    let inv_path = inv_dir.join("unsafe_inventory.json");
-    if let Err(e) = std::fs::write(&inv_path, safety::inventory_json(&report.sites)) {
-        eprintln!("repolint: cannot write {}: {e}", inv_path.display());
-        return 2;
+    for (name, body) in [
+        ("unsafe_inventory.json", &report.unsafe_inventory_json),
+        ("protocol_model.json", &report.protocol_model_json),
+        ("ledger_schemas.json", &report.ledger_schemas_json),
+    ] {
+        let path = art_dir.join(name);
+        if let Err(e) = std::fs::write(&path, body) {
+            eprintln!("repolint: cannot write {}: {e}", path.display());
+            return 2;
+        }
     }
 
-    // (2) Determinism hygiene.
-    violations.extend(determinism::scan(&src_files, &allow));
-
-    // (3) Hot-path alloc bans.
-    violations.extend(hotpath::scan(
-        &src_files,
-        &manifest.section("functions"),
-        &manifest.section("suffixes"),
-        &manifest.section("warmup"),
-    ));
-
-    violations.sort();
-    for v in &violations {
+    for v in &report.violations {
         println!("repolint: {v}");
     }
     println!(
         "repolint: {} files scanned, {} unsafe sites inventoried ({}), {} violation(s)",
-        all_files.len(),
-        report.sites.len(),
-        inv_path.display(),
-        violations.len()
+        report.files_scanned,
+        report.unsafe_sites,
+        art_dir.join("unsafe_inventory.json").display(),
+        report.violations.len()
     );
-    if violations.is_empty() {
+    if report.violations.is_empty() {
         0
     } else {
         1
     }
-}
-
-/// `allow.toml` sections are `[allow.<rule>]`; strip the prefix so the
-/// determinism pass keys by rule name.
-fn load_allow(path: &Path) -> BTreeMap<String, BTreeMap<String, String>> {
-    let cfg = config::Config::parse(path).unwrap_or_else(|e| fail_config(&e));
-    let mut out = BTreeMap::new();
-    for (section, entries) in cfg.sections {
-        match section.strip_prefix("allow.") {
-            Some(rule) => {
-                out.insert(rule.to_string(), entries);
-            }
-            None => fail_config(&format!(
-                "allow.toml: section [{section}] must be named [allow.<rule>]"
-            )),
-        }
-    }
-    out
-}
-
-fn fail_config(msg: &str) -> ! {
-    eprintln!("repolint: {msg}");
-    std::process::exit(2);
 }

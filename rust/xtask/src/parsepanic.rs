@@ -1,0 +1,58 @@
+//! Rule family 7: no panics on user-input parse paths.
+//!
+//! CLI flags, JSON configs, and fault-plan files are user input; a typo
+//! must produce a named hard error (the `FlagSpec` style: which file,
+//! which key, which flag), never a panic with a library backtrace. This
+//! rule bans `.unwrap()` / `.expect(` in the parse-path modules outside
+//! `#[cfg(test)]` code and the reasoned `[allow.parse-panic]` allowlist
+//! in `xtask/allow.toml` (per-file, rots like every other allowlist).
+
+use crate::source::SourceFile;
+use crate::spans::{in_spans, test_spans};
+use std::collections::BTreeMap;
+
+/// Modules whose job is parsing user input.
+pub const PARSE_PATHS: &[&str] =
+    &["src/config/mod.rs", "src/util/cli.rs", "src/util/json.rs", "src/fault/mod.rs"];
+
+const NEEDLES: &[&str] = &[".unwrap()", ".expect("];
+
+pub fn scan(
+    files: &[SourceFile],
+    allow: &BTreeMap<String, String>,
+    violations: &mut Vec<String>,
+) {
+    let mut used: BTreeMap<&str, bool> = allow.keys().map(|k| (k.as_str(), false)).collect();
+    for sf in files.iter().filter(|f| PARSE_PATHS.contains(&f.rel.as_str())) {
+        let tests = test_spans(sf);
+        for (idx, line) in sf.lines.iter().enumerate() {
+            if in_spans(&tests, idx) {
+                continue;
+            }
+            for needle in NEEDLES {
+                if !line.code.contains(needle) {
+                    continue;
+                }
+                if allow.contains_key(&sf.rel) {
+                    used.insert(sf.rel.as_str(), true);
+                    continue;
+                }
+                violations.push(format!(
+                    "{}:{}: [parse-panic] `{}` on a user-input parse path — return a named \
+                     error (which file/key/flag) instead of panicking",
+                    sf.rel,
+                    idx + 1,
+                    needle.trim_end_matches('(')
+                ));
+            }
+        }
+    }
+    for (file, hit) in used {
+        if !hit {
+            violations.push(format!(
+                "allow.toml: unused entry [allow.parse-panic] \"{file}\" — remove it \
+                 (allowlist must not rot)"
+            ));
+        }
+    }
+}

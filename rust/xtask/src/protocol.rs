@@ -1,0 +1,688 @@
+//! Rule family 4: protocol discipline for the exchange layer.
+//!
+//! `xtask/protocol.toml` declares every exchange phase of the MPI fabric
+//! (`network/mpi.rs`) and the multiplexed scheduler (`runtime/spmd.rs`)
+//! together with its per-edge send/recv obligations under each
+//! fault-verdict class (`node_down` / `edge_cut` / `msg_lost`). The
+//! analyzer extracts the actual `send_graceful`/`recv_graceful`/
+//! `take_buf`/`give_back` call structure from the comment-stripped code
+//! view and checks, per phase kind:
+//!
+//! * **blocking** — every send completes before the first blocking
+//!   receive, both loops iterate live links only, and the extracted
+//!   sender-side skip guards are exactly the declared ones. The manifest
+//!   itself must be *mirror-symmetric*: the receiver skips precisely the
+//!   edges whose sender's verdict says nothing is coming
+//!   (`msg_lost(i→j)` on the send side ↔ `msg_lost(j→i)` on the recv
+//!   side, `node_down(peer)` and the symmetric `edge_cut` unchanged).
+//!   With symmetric verdicts, send-before-recv ordering, and per-round
+//!   channel capacity ≥ 1, the blocking-wait graph has no cycle — the
+//!   static form of PR 6's "the sender skips exactly what the receiver
+//!   doesn't wait for".
+//! * **nonblocking** — no blocking receive primitive may appear at all
+//!   (a non-blocking phase has no recv obligations, which is *why* it
+//!   cannot deadlock), and fault gating is sender-side only.
+//! * **delegate** — the phase is a thin wrapper: it calls its declared
+//!   target and never touches the wire primitives directly.
+//! * **barrier** — the two mux phases run as separate `run_chunks`
+//!   dispatches in declared order (`publish` strictly before `absorb`)
+//!   and contain no channel I/O: the scheduler is the barrier.
+//!
+//! Buffer discipline (`"bufs" = "recycled"`): the phase recycles its
+//! inbox before minting, and every `take_buf` window reaches a send with
+//! an `Err`-path reclaim (`spares.push` / `give_back`) — the static
+//! complement of the zero-allocation counters.
+//!
+//! Violation ids: `[protocol]` (structure / manifest drift / rot),
+//! `[deadlock]` (wait-graph obligations), `[buffer]` (buffer leaks).
+
+use crate::source::{find_word, SourceFile};
+use crate::spans::{fn_spans, FnSpan};
+use std::collections::BTreeMap;
+
+const VERDICTS: &[&str] = &["node_down", "edge_cut", "msg_lost"];
+
+/// Extracted model of one phase, emitted to
+/// `target/repolint/protocol_model.json` as a CI artifact.
+pub struct PhaseModel {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// 1-based source span of the fn body.
+    pub start: usize,
+    pub end: usize,
+    /// 1-based lines of send / blocking-recv primitive calls.
+    pub sends: Vec<usize>,
+    pub recvs: Vec<usize>,
+    /// class → direction, as extracted from the guards in the body.
+    pub send_skip: BTreeMap<String, String>,
+    pub recv_skip: BTreeMap<String, String>,
+}
+
+pub struct ProtocolReport {
+    pub violations: Vec<String>,
+    pub model: Vec<PhaseModel>,
+}
+
+/// One extracted guard call: 0-based line + verdict class + direction.
+struct Guard {
+    line: usize,
+    class: &'static str,
+    dir: String,
+}
+
+pub fn scan(
+    files: &[SourceFile],
+    phases: &BTreeMap<String, BTreeMap<String, String>>,
+) -> ProtocolReport {
+    let mut violations = Vec::new();
+    let mut model = Vec::new();
+    for (name, entry) in phases {
+        check_phase(name, entry, files, &mut violations, &mut model);
+    }
+    ProtocolReport { violations, model }
+}
+
+fn check_phase(
+    name: &str,
+    entry: &BTreeMap<String, String>,
+    files: &[SourceFile],
+    violations: &mut Vec<String>,
+    model: &mut Vec<PhaseModel>,
+) {
+    let get = |k: &str| entry.get(k).map(String::as_str);
+    let Some(file) = get("file") else {
+        violations.push(format!(
+            "protocol.toml: [phase.{name}] has no \"file\" key — declare where the phase lives"
+        ));
+        return;
+    };
+    let Some(kind) = get("kind") else {
+        violations.push(format!(
+            "protocol.toml: [phase.{name}] has no \"kind\" key (blocking|nonblocking|delegate|barrier)"
+        ));
+        return;
+    };
+    // Unknown keys are manifest drift: a typo'd obligation must not be
+    // silently ignored (same no-bypass rule as the flag registry).
+    let known: &[&str] = match kind {
+        "blocking" => &["file", "kind", "send", "recv", "bufs", "self_down"],
+        "nonblocking" => &["file", "kind", "send", "drain", "bufs", "self_down"],
+        "delegate" => &["file", "kind", "to", "via"],
+        "barrier" => &["file", "kind", "order"],
+        other => {
+            violations.push(format!(
+                "protocol.toml: [phase.{name}] unknown kind \"{other}\""
+            ));
+            return;
+        }
+    };
+    for k in entry.keys() {
+        let skip_key = k
+            .strip_prefix("send_skip.")
+            .or_else(|| k.strip_prefix("recv_skip."));
+        match skip_key {
+            Some(class) if matches!(kind, "blocking" | "nonblocking") => {
+                if !VERDICTS.contains(&class) {
+                    violations.push(format!(
+                        "protocol.toml: [phase.{name}] \"{k}\" names no fault-verdict class \
+                         (node_down|edge_cut|msg_lost)"
+                    ));
+                }
+                if kind == "nonblocking" && k.starts_with("recv_skip.") {
+                    violations.push(format!(
+                        "[deadlock] protocol.toml: [phase.{name}] declares \"{k}\" but a \
+                         non-blocking phase has no recv obligations to skip"
+                    ));
+                }
+            }
+            Some(_) => violations.push(format!(
+                "protocol.toml: [phase.{name}] \"{k}\" is meaningless for kind \"{kind}\""
+            )),
+            None if !known.contains(&k.as_str()) => violations.push(format!(
+                "protocol.toml: [phase.{name}] unknown key \"{k}\" for kind \"{kind}\""
+            )),
+            None => {}
+        }
+    }
+
+    let Some(sf) = files.iter().find(|f| f.rel == file) else {
+        violations.push(format!(
+            "protocol.toml: [phase.{name}] file \"{file}\" not found — manifest rot, update the entry"
+        ));
+        return;
+    };
+    let spans = fn_spans(sf);
+    let Some(span) = spans.iter().find(|s| s.name == name) else {
+        violations.push(format!(
+            "protocol.toml: [phase.{name}] fn `{name}` not found in {file} — manifest rot, \
+             update the entry"
+        ));
+        return;
+    };
+
+    let mut pm = PhaseModel {
+        name: name.to_string(),
+        file: file.to_string(),
+        kind: kind.to_string(),
+        start: span.start + 1,
+        end: span.end + 1,
+        sends: Vec::new(),
+        recvs: Vec::new(),
+        send_skip: BTreeMap::new(),
+        recv_skip: BTreeMap::new(),
+    };
+
+    match kind {
+        "blocking" | "nonblocking" => {
+            let blocking = kind == "blocking";
+            let send_tok = get("send").unwrap_or("send_graceful");
+            let recv_tok = if blocking {
+                get("recv").unwrap_or("recv_graceful")
+            } else {
+                get("drain").unwrap_or("try_recv")
+            };
+            let sends = call_lines(sf, span, send_tok);
+            let recvs = call_lines(sf, span, recv_tok);
+            pm.sends = sends.iter().map(|l| l + 1).collect();
+            pm.recvs = recvs.iter().map(|l| l + 1).collect();
+            if sends.is_empty() {
+                violations.push(format!(
+                    "{file}:{}: [protocol] phase `{name}` declares send primitive `{send_tok}` \
+                     but never calls it",
+                    span.start + 1
+                ));
+                return;
+            }
+            if recvs.is_empty() {
+                let id = if blocking { "deadlock" } else { "protocol" };
+                violations.push(format!(
+                    "{file}:{}: [{id}] phase `{name}` sends on every edge but has no matching \
+                     `{recv_tok}` — unmatched send obligations",
+                    span.start + 1
+                ));
+                return;
+            }
+            // Sends must all complete before the first blocking receive:
+            // a node that waits before it has sent can close a wait cycle
+            // on rendezvous channels.
+            if blocking && sends.iter().max() >= recvs.iter().min() {
+                violations.push(format!(
+                    "{file}:{}: [deadlock] phase `{name}` blocks on `{recv_tok}` before all \
+                     `{send_tok}` calls are issued",
+                    recvs[0] + 1
+                ));
+            }
+            if !blocking {
+                // A non-blocking phase must never wait on the wire.
+                for tok in ["recv_graceful(", "recv_timeout(", ".recv("] {
+                    for l in span.start..=span.end {
+                        if sf.lines[l].code.contains(tok) {
+                            violations.push(format!(
+                                "{file}:{}: [deadlock] non-blocking phase `{name}` calls \
+                                 blocking `{}` — it must never wait",
+                                l + 1,
+                                tok.trim_end_matches('(')
+                            ));
+                        }
+                    }
+                }
+            }
+            // Both wire loops may only visit live links.
+            for (&first, what) in [(sends[0], "send"), (recvs[0], "recv")].iter() {
+                check_live_loop(sf, span, first, name, what, violations);
+            }
+            // Fault-verdict guards: everything up to the last send call
+            // gates the send side; guards after it (the recv loop's own
+            // skip set, which sits above the first recv *call* line)
+            // gate the receive side.
+            let split = *sends.iter().max().expect("sends nonempty");
+            let guards = guard_calls(sf, span, file, name, violations);
+            let mut self_down_line = None;
+            for g in &guards {
+                if g.class == "node_down" && g.dir == "me" {
+                    self_down_line = Some(g.line);
+                    continue;
+                }
+                let side = if g.line <= split { &mut pm.send_skip } else { &mut pm.recv_skip };
+                if let Some(prev) = side.insert(g.class.to_string(), g.dir.clone()) {
+                    if prev != g.dir {
+                        violations.push(format!(
+                            "{file}:{}: [protocol] phase `{name}` guards `{}` with conflicting \
+                             directions `{prev}` and `{}` on the same side",
+                            g.line + 1,
+                            g.class,
+                            g.dir
+                        ));
+                    }
+                }
+            }
+            // self_down: a down node must go silent for the whole round.
+            match (get("self_down"), self_down_line) {
+                (Some("return"), Some(l)) => {
+                    // The `return` sits in the guard's short block — allow
+                    // a few lines of debug hooks/comments before it.
+                    let hit = (l..=span.end.min(l + 6))
+                        .any(|j| !find_word(&sf.lines[j].code, "return").is_empty());
+                    if !hit {
+                        violations.push(format!(
+                            "{file}:{}: [protocol] phase `{name}` checks node_down(me) but does \
+                             not return — a down node must stay silent",
+                            l + 1
+                        ));
+                    }
+                }
+                (Some("return"), None) => violations.push(format!(
+                    "{file}:{}: [protocol] phase `{name}` declares self_down=return but never \
+                     checks node_down(me, …)",
+                    span.start + 1
+                )),
+                (None, Some(l)) => violations.push(format!(
+                    "{file}:{}: [protocol] phase `{name}` checks node_down(me) but \
+                     protocol.toml declares no self_down behavior",
+                    l + 1
+                )),
+                (Some(other), _) => violations.push(format!(
+                    "protocol.toml: [phase.{name}] self_down=\"{other}\" — only \"return\" is a \
+                     known discipline"
+                )),
+                (None, None) => {}
+            }
+            // Extracted guards must equal the declared obligation sets.
+            for (side, declared_prefix, extracted) in [
+                ("send", "send_skip.", &pm.send_skip),
+                ("recv", "recv_skip.", &pm.recv_skip),
+            ] {
+                let declared: BTreeMap<String, String> = entry
+                    .iter()
+                    .filter_map(|(k, v)| {
+                        k.strip_prefix(declared_prefix).map(|c| (c.to_string(), v.clone()))
+                    })
+                    .collect();
+                for (class, dir) in &declared {
+                    match extracted.get(class) {
+                        Some(d) if d == dir => {}
+                        Some(d) => violations.push(format!(
+                            "{file}:{}: [protocol] phase `{name}` {side}-side `{class}` guard is \
+                             `{d}` but protocol.toml declares `{dir}`",
+                            span.start + 1
+                        )),
+                        None => violations.push(format!(
+                            "{file}:{}: [protocol] phase `{name}` declares {side}-side skip \
+                             `{class}` = `{dir}` but the code has no such guard — manifest rot",
+                            span.start + 1
+                        )),
+                    }
+                }
+                for (class, dir) in extracted {
+                    if !declared.contains_key(class) {
+                        violations.push(format!(
+                            "{file}:{}: [protocol] phase `{name}` has an undeclared {side}-side \
+                             `{class}` guard (`{dir}`) — extend protocol.toml, don't bypass it",
+                            span.start + 1
+                        ));
+                    }
+                }
+            }
+            // Deadlock-freedom: the declared obligations must mirror. The
+            // receiver's skip set is exactly the image of the sender's
+            // under direction reversal — any asymmetry is an edge where
+            // one endpoint waits forever (or a message nobody drains).
+            if blocking {
+                for class in VERDICTS {
+                    let s = entry.get(&format!("send_skip.{class}"));
+                    let r = entry.get(&format!("recv_skip.{class}"));
+                    match (s, r) {
+                        (None, None) => {}
+                        (Some(sd), Some(rd)) => {
+                            let want = mirror(class, sd);
+                            if !dir_eq(class, rd, &want) {
+                                violations.push(format!(
+                                    "[deadlock] protocol.toml: [phase.{name}] `{class}`: sender \
+                                     skips `{sd}` so the receiver must skip `{want}`, but it \
+                                     declares `{rd}` — the blocking-wait graph gains an edge \
+                                     nobody serves"
+                                ));
+                            }
+                        }
+                        (Some(sd), None) => violations.push(format!(
+                            "[deadlock] protocol.toml: [phase.{name}] sender skips `{class}` \
+                             (`{sd}`) but the receiver still waits for it — declare \
+                             recv_skip.{class}"
+                        )),
+                        (None, Some(rd)) => violations.push(format!(
+                            "[deadlock] protocol.toml: [phase.{name}] receiver skips `{class}` \
+                             (`{rd}`) but the sender still transmits — the message is never \
+                             drained"
+                        )),
+                    }
+                }
+            }
+            if get("bufs") == Some("recycled") {
+                check_buffers(sf, span, file, name, send_tok, violations);
+            }
+        }
+        "delegate" => {
+            let Some(to) = get("to") else {
+                violations.push(format!(
+                    "protocol.toml: [phase.{name}] kind delegate needs a \"to\" target"
+                ));
+                return;
+            };
+            if call_lines(sf, span, to).is_empty() {
+                violations.push(format!(
+                    "{file}:{}: [protocol] delegate phase `{name}` never calls `{to}`",
+                    span.start + 1
+                ));
+            }
+            if let Some(via) = get("via") {
+                if call_lines(sf, span, via).is_empty() {
+                    violations.push(format!(
+                        "{file}:{}: [protocol] delegate phase `{name}` skips its declared \
+                         `{via}` step",
+                        span.start + 1
+                    ));
+                }
+            }
+            for tok in ["send_graceful(", "recv_graceful(", "try_send(", "try_recv("] {
+                for l in span.start..=span.end {
+                    if sf.lines[l].code.contains(tok) {
+                        violations.push(format!(
+                            "{file}:{}: [protocol] delegate phase `{name}` touches the wire \
+                             primitive `{}` directly — route through `{to}`",
+                            l + 1,
+                            tok.trim_end_matches('(')
+                        ));
+                    }
+                }
+            }
+        }
+        "barrier" => {
+            let order = get("order").unwrap_or("publish,absorb");
+            let stages: Vec<&str> = order.split(',').map(str::trim).collect();
+            let chunks = call_lines(sf, span, "run_chunks");
+            if chunks.len() < stages.len() {
+                violations.push(format!(
+                    "{file}:{}: [protocol] barrier phase `{name}` dispatches {} run_chunks \
+                     pass(es) for {} declared stages ({order}) — phases must be separate \
+                     barriers",
+                    span.start + 1,
+                    chunks.len(),
+                    stages.len()
+                ));
+                return;
+            }
+            let mut prev = span.start;
+            for (i, stage) in stages.iter().enumerate() {
+                let lines = call_lines(sf, span, stage);
+                let Some(&at) = lines.iter().find(|&&l| l > chunks[i]) else {
+                    violations.push(format!(
+                        "{file}:{}: [protocol] barrier phase `{name}` stage `{stage}` is not \
+                         dispatched inside its run_chunks pass",
+                        span.start + 1
+                    ));
+                    return;
+                };
+                if at <= prev {
+                    violations.push(format!(
+                        "{file}:{}: [deadlock] barrier phase `{name}` runs `{stage}` out of \
+                         declared order ({order})",
+                        at + 1
+                    ));
+                }
+                if i + 1 < stages.len() && at >= chunks[i + 1] {
+                    violations.push(format!(
+                        "{file}:{}: [deadlock] barrier phase `{name}` folds `{stage}` into the \
+                         next dispatch — the inter-phase barrier is gone",
+                        at + 1
+                    ));
+                }
+                prev = at;
+            }
+            // Programs never block: no channel I/O between the barriers.
+            for tok in ["try_send(", "try_recv(", "send_graceful(", "recv_graceful("] {
+                for l in span.start..=span.end {
+                    if sf.lines[l].code.contains(tok) {
+                        violations.push(format!(
+                            "{file}:{}: [deadlock] barrier phase `{name}` does channel I/O \
+                             (`{}`) — mux programs must never touch the wire",
+                            l + 1,
+                            tok.trim_end_matches('(')
+                        ));
+                    }
+                }
+            }
+        }
+        _ => unreachable!("kind validated above"),
+    }
+    model.push(pm);
+}
+
+/// 0-based lines in `span` where `tok` is called (word boundary + `(`).
+fn call_lines(sf: &SourceFile, span: &FnSpan, tok: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for l in span.start..=span.end {
+        let code = &sf.lines[l].code;
+        for at in find_word(code, tok) {
+            let rest = code[at + tok.len()..].trim_start();
+            if rest.starts_with('(') {
+                out.push(l);
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// The wire loop feeding the call at `first` must iterate live links only.
+fn check_live_loop(
+    sf: &SourceFile,
+    span: &FnSpan,
+    first: usize,
+    name: &str,
+    what: &str,
+    violations: &mut Vec<String>,
+) {
+    let mut l = first;
+    while l > span.start {
+        let code = &sf.lines[l].code;
+        if !find_word(code, "for").is_empty() && code.contains("links") {
+            if !code.contains("alive") {
+                violations.push(format!(
+                    "{}:{}: [protocol] phase `{name}` {what} loop iterates dead links — filter \
+                     on `alive`",
+                    sf.rel,
+                    l + 1
+                ));
+            }
+            return;
+        }
+        l -= 1;
+    }
+    violations.push(format!(
+        "{}:{}: [protocol] phase `{name}` {what} at line {} is not inside a links loop",
+        sf.rel,
+        span.start + 1,
+        first + 1
+    ));
+}
+
+/// Extract every fault-verdict guard call in the span with its direction.
+fn guard_calls(
+    sf: &SourceFile,
+    span: &FnSpan,
+    file: &str,
+    name: &str,
+    violations: &mut Vec<String>,
+) -> Vec<Guard> {
+    let mut out = Vec::new();
+    for l in span.start..=span.end {
+        let code = &sf.lines[l].code;
+        for class in VERDICTS {
+            for at in find_word(code, class) {
+                let rest = &code[at + class.len()..];
+                let Some(open) = rest.find('(') else { continue };
+                if !rest[..open].trim().is_empty() {
+                    continue;
+                }
+                let Some(close) = rest[open + 1..].find(')') else {
+                    violations.push(format!(
+                        "{file}:{}: [protocol] phase `{name}` splits a `{class}` guard across \
+                         lines — keep verdict calls on one line so the analyzer can read them",
+                        l + 1
+                    ));
+                    continue;
+                };
+                let args: Vec<String> = rest[open + 1..open + 1 + close]
+                    .split(',')
+                    .map(norm_arg)
+                    .collect();
+                match direction(class, &args) {
+                    Some(dir) => out.push(Guard { line: l, class, dir }),
+                    None => violations.push(format!(
+                        "{file}:{}: [protocol] phase `{name}` calls `{class}({})` with \
+                         arguments the analyzer cannot orient (expected me/peer endpoints)",
+                        l + 1,
+                        args.join(",")
+                    )),
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Normalize one guard argument to its role: `link.peer` → `peer`,
+/// `self.rank` → `me`, whitespace dropped.
+fn norm_arg(a: &str) -> String {
+    let last = a.trim().rsplit('.').next().unwrap_or("").trim().to_string();
+    if last == "rank" {
+        "me".to_string()
+    } else {
+        last
+    }
+}
+
+/// Direction string for a verdict call: which endpoint(s) it names.
+fn direction(class: &str, args: &[String]) -> Option<String> {
+    let ep = |s: &String| s == "me" || s == "peer";
+    match class {
+        // node_down(node, round)
+        "node_down" if args.len() == 2 && ep(&args[0]) => Some(args[0].clone()),
+        // edge_cut(round, a, b) — symmetric
+        "edge_cut" if args.len() == 3 && ep(&args[1]) && ep(&args[2]) => {
+            Some(format!("{},{}", args[1], args[2]))
+        }
+        // msg_lost(round, from, to) — directed
+        "msg_lost" if args.len() == 3 && ep(&args[1]) && ep(&args[2]) => {
+            Some(format!("{}->{}", args[1], args[2]))
+        }
+        _ => None,
+    }
+}
+
+/// The receiver-side image of a sender-side skip direction.
+fn mirror(class: &str, dir: &str) -> String {
+    match class {
+        "msg_lost" => match dir {
+            "me->peer" => "peer->me".to_string(),
+            "peer->me" => "me->peer".to_string(),
+            other => other.to_string(),
+        },
+        _ => dir.to_string(),
+    }
+}
+
+/// Direction equality; `edge_cut` endpoints are an unordered pair.
+fn dir_eq(class: &str, a: &str, b: &str) -> bool {
+    if a == b {
+        return true;
+    }
+    if class == "edge_cut" {
+        let set = |s: &str| {
+            let mut v: Vec<&str> = s.split(',').collect();
+            v.sort_unstable();
+            v
+        };
+        return set(a) == set(b);
+    }
+    false
+}
+
+/// Buffer discipline: recycle first, and every `take_buf` reaches a send
+/// whose failure path reclaims the buffer.
+fn check_buffers(
+    sf: &SourceFile,
+    span: &FnSpan,
+    file: &str,
+    name: &str,
+    send_tok: &str,
+    violations: &mut Vec<String>,
+) {
+    let takes = call_lines(sf, span, "take_buf");
+    let recycles = call_lines(sf, span, "recycle_inbox");
+    match (recycles.first(), takes.first()) {
+        (None, _) => violations.push(format!(
+            "{file}:{}: [buffer] phase `{name}` never recycles its inbox — received buffers \
+             leak out of the pool",
+            span.start + 1
+        )),
+        (Some(&r), Some(&t)) if r > t => violations.push(format!(
+            "{file}:{}: [buffer] phase `{name}` mints via take_buf before recycle_inbox — \
+             last round's buffers are still checked out",
+            t + 1
+        )),
+        _ => {}
+    }
+    for (i, &t) in takes.iter().enumerate() {
+        let hi = takes.get(i + 1).map(|&n| n - 1).unwrap_or(span.end);
+        let window = t..=hi;
+        let has = |tok: &str| window.clone().any(|l| sf.lines[l].code.contains(tok));
+        if !has(&format!("{send_tok}(")) && !has("try_send(") {
+            violations.push(format!(
+                "{file}:{}: [buffer] phase `{name}` takes a buffer that never reaches a send",
+                t + 1
+            ));
+        }
+        if !(has("Err") && (has("spares.push(") || has("give_back(")) || has("give_back(")) {
+            violations.push(format!(
+                "{file}:{}: [buffer] phase `{name}` has a `take_buf` without a `give_back`/\
+                 reclaim on the send-failure path — the buffer leaks when the peer is gone",
+                t + 1
+            ));
+        }
+    }
+}
+
+/// JSON artifact mirroring what the analyzer extracted, so CI can diff
+/// the protocol surface per PR alongside the unsafe inventory.
+pub fn model_json(model: &[PhaseModel]) -> String {
+    let list = |m: &BTreeMap<String, String>| {
+        let inner: Vec<String> =
+            m.iter().map(|(k, v)| format!("\"{k}\": \"{v}\"")).collect();
+        format!("{{{}}}", inner.join(", "))
+    };
+    let nums = |v: &[usize]| {
+        let inner: Vec<String> = v.iter().map(usize::to_string).collect();
+        format!("[{}]", inner.join(", "))
+    };
+    let mut out = String::from("[\n");
+    for (i, p) in model.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"phase\": \"{}\", \"file\": \"{}\", \"kind\": \"{}\", \"lines\": [{}, {}], \
+             \"sends\": {}, \"recvs\": {}, \"send_skip\": {}, \"recv_skip\": {}}}{}\n",
+            p.name,
+            p.file,
+            p.kind,
+            p.start,
+            p.end,
+            nums(&p.sends),
+            nums(&p.recvs),
+            list(&p.send_skip),
+            list(&p.recv_skip),
+            if i + 1 < model.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    out
+}

@@ -34,7 +34,7 @@ pub fn scan(files: &[SourceFile]) -> SafetyReport {
                 let justification = find_justification(sf, idx, kind);
                 if justification.is_empty() {
                     violations.push(format!(
-                        "{}:{}: `unsafe` {} without a `// SAFETY:` comment",
+                        "{}:{}: [safety] `unsafe` {} without a `// SAFETY:` comment",
                         sf.rel,
                         idx + 1,
                         kind

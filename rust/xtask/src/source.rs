@@ -12,6 +12,11 @@
 pub struct Line {
     pub code: String,
     pub comment: String,
+    /// Contents of string literals that *close* on this line, in order.
+    /// The `code` view blanks them (so token searches stay honest); the
+    /// contract analyzers (ledger keys, knob names) read them from here
+    /// instead of re-lexing raw text.
+    pub strings: Vec<String>,
 }
 
 impl Line {
@@ -54,6 +59,8 @@ impl SourceFile {
         let mut lines: Vec<Line> = Vec::new();
         let mut cur = Line::default();
         let mut state = State::Normal;
+        // In-flight string literal content (attached to the closing line).
+        let mut lit = String::new();
         let chars: Vec<char> = text.chars().collect();
         let n = chars.len();
         let mut i = 0;
@@ -64,6 +71,9 @@ impl SourceFile {
                 // carries across (block comments, raw strings).
                 if matches!(state, State::LineComment) {
                     state = State::Normal;
+                }
+                if matches!(state, State::Str | State::RawStr(_)) {
+                    lit.push('\n');
                 }
                 lines.push(std::mem::take(&mut cur));
                 i += 1;
@@ -149,18 +159,22 @@ impl SourceFile {
                 State::Str => {
                     if c == '\\' {
                         cur.code.push(' ');
+                        lit.push(c);
                         if i + 1 < n && chars[i + 1] != '\n' {
                             cur.code.push(' ');
+                            lit.push(chars[i + 1]);
                             i += 2;
                         } else {
                             i += 1;
                         }
                     } else if c == '"' {
                         cur.code.push('"');
+                        cur.strings.push(std::mem::take(&mut lit));
                         state = State::Normal;
                         i += 1;
                     } else {
                         cur.code.push(' ');
+                        lit.push(c);
                         i += 1;
                     }
                 }
@@ -177,14 +191,17 @@ impl SourceFile {
                             for _ in 0..hashes {
                                 cur.code.push('#');
                             }
+                            cur.strings.push(std::mem::take(&mut lit));
                             state = State::Normal;
                             i = j;
                         } else {
                             cur.code.push(' ');
+                            lit.push(c);
                             i += 1;
                         }
                     } else {
                         cur.code.push(' ');
+                        lit.push(c);
                         i += 1;
                     }
                 }

@@ -1,0 +1,99 @@
+//! Shared span utilities: fn bodies, `#[cfg(test)]` module ranges, and
+//! brace matching over the comment-stripped code view. Used by the
+//! hot-path, protocol, and parse-panic rule families so they all agree
+//! on what "inside this function" and "test-only code" mean.
+
+use crate::source::{find_word, next_token, SourceFile};
+
+pub struct FnSpan {
+    pub name: String,
+    /// 0-based inclusive line range of `fn` keyword .. closing brace.
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Line spans of `#[cfg(test)] mod … { }` blocks, so shipped-code rules
+/// skip test-only code.
+pub fn test_spans(sf: &SourceFile) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in sf.lines.iter().enumerate() {
+        if !line.code.trim().starts_with("#[cfg(test)]") {
+            continue;
+        }
+        // The next code line should introduce the module.
+        for (j, follow) in sf.lines.iter().enumerate().skip(idx + 1) {
+            let t = follow.code.trim();
+            if t.is_empty() || follow.is_attribute() {
+                continue;
+            }
+            if find_word(t, "mod").first() == Some(&0) || t.starts_with("pub mod") {
+                if let Some((end, _)) = body_end(sf, j, 0) {
+                    out.push((j, end));
+                }
+            }
+            break;
+        }
+    }
+    out
+}
+
+/// True when 0-based `line` falls inside any of `spans`.
+pub fn in_spans(spans: &[(usize, usize)], line: usize) -> bool {
+    spans.iter().any(|&(lo, hi)| line >= lo && line <= hi)
+}
+
+/// All fn definitions in a file with their body line spans. Token-level:
+/// find the `fn` keyword, take the following identifier as the name, then
+/// brace-match the body on comment-stripped code. Declarations (`fn f();`)
+/// and fn-pointer types (`fn(usize)`) are skipped.
+pub fn fn_spans(sf: &SourceFile) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    for (idx, line) in sf.lines.iter().enumerate() {
+        for at in find_word(&line.code, "fn") {
+            let after = at + "fn".len();
+            let Some(name) = next_token(&line.code, after) else { continue };
+            if !name.chars().next().is_some_and(|c| c.is_alphabetic() || c == '_') {
+                continue; // `fn(` pointer type or stray punctuation
+            }
+            if let Some((end, _)) = body_end(sf, idx, after) {
+                spans.push(FnSpan { name, start: idx, end });
+            }
+        }
+    }
+    spans
+}
+
+/// From the fn keyword, find the body-opening `{` (skipping the signature)
+/// and brace-match to the close. Returns None for bodyless declarations.
+pub fn body_end(sf: &SourceFile, line: usize, col: usize) -> Option<(usize, usize)> {
+    let mut depth: i32 = 0;
+    let mut brackets: i32 = 0; // `[f64; 4]` in a signature is not a decl-`;`
+    let mut in_body = false;
+    let mut l = line;
+    let mut c = col;
+    while l < sf.lines.len() {
+        let code = sf.lines[l].code.as_bytes();
+        while c < code.len() {
+            match code[c] {
+                b'{' => {
+                    depth += 1;
+                    in_body = true;
+                }
+                b'}' => {
+                    depth -= 1;
+                    if in_body && depth == 0 {
+                        return Some((l, c));
+                    }
+                }
+                b'[' => brackets += 1,
+                b']' => brackets -= 1,
+                b';' if !in_body && depth == 0 && brackets == 0 => return None,
+                _ => {}
+            }
+            c += 1;
+        }
+        l += 1;
+        c = 0;
+    }
+    None
+}

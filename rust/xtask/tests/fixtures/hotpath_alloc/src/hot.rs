@@ -1,0 +1,9 @@
+//! Fixture: a registered hot-path fn that allocates per call.
+
+pub fn step(xs: &[f64]) -> Vec<f64> {
+    let mut out = Vec::new();
+    for x in xs {
+        out.push(x * 2.0);
+    }
+    out
+}

@@ -1,0 +1,18 @@
+//! Fixture: a CLI flag (`--rogue`) registered in FLAGS but missing from
+//! the declared knob table — knob-surface drift.
+
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+pub const FLAGS: &[FlagSpec] = &[
+    FlagSpec { name: "seed", takes_value: true, help: "RNG seed" },
+    FlagSpec { name: "rogue", takes_value: true, help: "undeclared knob" },
+];
+
+pub fn from_file(json: &Json) -> Cfg {
+    let seed = json.get("seed");
+    Cfg { seed }
+}

@@ -1,0 +1,5 @@
+//! Fixture ExpCtx: one field, matching the declared ctx projection.
+
+pub struct ExpCtx {
+    pub seed: u64,
+}

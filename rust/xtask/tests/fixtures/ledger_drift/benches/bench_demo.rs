@@ -1,0 +1,9 @@
+//! Fixture: a bench writing a key the declared ledger schema does not
+//! name — schema drift the CI assertions downstream cannot see.
+
+fn main() {
+    let mut report = BenchReport::new("demo");
+    report.push("demo_cell_ns", 1.0);
+    report.push("rogue_key_ns", 2.0);
+    report.save("BENCH_demo.json");
+}

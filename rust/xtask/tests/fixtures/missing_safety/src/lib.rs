@@ -1,0 +1,5 @@
+//! Fixture: an `unsafe` block with no `// SAFETY:` justification.
+
+pub fn peek(xs: &[f64]) -> f64 {
+    unsafe { *xs.get_unchecked(0) }
+}

@@ -1,0 +1,5 @@
+//! Fixture: `.unwrap()` on a user-input parse path.
+
+pub fn parse_seed(v: &str) -> u64 {
+    v.parse().unwrap()
+}

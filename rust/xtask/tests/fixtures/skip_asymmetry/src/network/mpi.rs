@@ -1,0 +1,24 @@
+//! Fixture: the sender skips `msg_lost` edges but the receiver still
+//! blocks on them — the manifest mirror condition catches the asymmetry.
+
+impl NodeCtx {
+    pub fn exchange_faulty(&mut self, r: u64) -> &Inbox {
+        self.recycle_inbox();
+        let me = self.rank;
+        for link in self.links.iter().filter(|l| l.alive) {
+            if self.plan.msg_lost(r, me, link.peer) {
+                continue;
+            }
+            let buf = self.take_buf();
+            if let Err(b) = link.send_graceful(buf) {
+                self.spares.push(b);
+            }
+        }
+        for link in self.links.iter_mut().filter(|l| l.alive) {
+            if let Ok(m) = link.recv_graceful() {
+                self.inbox.push(m);
+            }
+        }
+        &self.inbox
+    }
+}

@@ -1,0 +1,18 @@
+//! Fixture: a blocking exchange whose send failure path drops the taken
+//! buffer instead of reclaiming it — the pool leaks when a peer is gone.
+
+impl NodeCtx {
+    pub fn exchange(&mut self) -> &Inbox {
+        self.recycle_inbox();
+        for link in self.links.iter().filter(|l| l.alive) {
+            let buf = self.take_buf();
+            let _ = link.send_graceful(buf);
+        }
+        for link in self.links.iter_mut().filter(|l| l.alive) {
+            if let Ok(m) = link.recv_graceful() {
+                self.inbox.push(m);
+            }
+        }
+        &self.inbox
+    }
+}

@@ -1,0 +1,15 @@
+//! Fixture: a blocking exchange phase that sends on every live edge but
+//! never receives — unmatched send obligations (static deadlock shape).
+
+impl NodeCtx {
+    pub fn exchange(&mut self) -> &Inbox {
+        self.recycle_inbox();
+        for link in self.links.iter().filter(|l| l.alive) {
+            let buf = self.take_buf();
+            if let Err(b) = link.send_graceful(buf) {
+                self.spares.push(b);
+            }
+        }
+        &self.inbox
+    }
+}

@@ -1,0 +1,114 @@
+//! Negative-fixture suite: every rule family has a miniature crate root
+//! under `tests/fixtures/` seeded with exactly one known violation, and
+//! this suite asserts the analyzer still fires with the right rule id —
+//! the lint's own tier-1 regression coverage. The final test runs the
+//! full pass over the real repo tree and requires it clean, which makes
+//! `cargo test` a superset of `cargo run -p xtask -- lint`.
+
+use std::path::PathBuf;
+
+fn fixture_root(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// Lint one fixture root; config errors are test bugs, not findings.
+fn lint(name: &str) -> Vec<String> {
+    xtask::lint_root(&fixture_root(name))
+        .unwrap_or_else(|e| panic!("fixture {name} must be well-configured: {e}"))
+        .violations
+}
+
+/// The fixture must hit the rule (CLI exit 1) and *only* that rule — a
+/// stray second violation means the fixture drifted from its purpose.
+fn assert_fires_only(name: &str, rule: &str) {
+    let vs = lint(name);
+    assert!(!vs.is_empty(), "fixture {name}: expected violations, got none");
+    for v in &vs {
+        assert!(v.contains(rule), "fixture {name}: expected only {rule} violations, got: {vs:#?}");
+    }
+}
+
+#[test]
+fn missing_safety_fires() {
+    assert_fires_only("missing_safety", "[safety]");
+}
+
+#[test]
+fn hashmap_fires() {
+    assert_fires_only("hashmap", "[hashmap]");
+}
+
+#[test]
+fn hotpath_alloc_fires() {
+    assert_fires_only("hotpath_alloc", "[hotpath]");
+}
+
+#[test]
+fn unmatched_send_fires_deadlock() {
+    let vs = lint("unmatched_send");
+    assert!(
+        vs.iter().any(|v| v.contains("[deadlock]") && v.contains("unmatched send")),
+        "expected the unmatched-send deadlock violation, got: {vs:#?}"
+    );
+    assert!(vs.iter().all(|v| v.contains("[deadlock]")), "only [deadlock] expected: {vs:#?}");
+}
+
+#[test]
+fn takebuf_leak_fires_buffer() {
+    assert_fires_only("takebuf_leak", "[buffer]");
+}
+
+#[test]
+fn skip_asymmetry_fires_deadlock() {
+    let vs = lint("skip_asymmetry");
+    assert!(
+        vs.iter().any(|v| v.contains("[deadlock]") && v.contains("recv_skip.msg_lost")),
+        "expected the mirror-asymmetry deadlock violation, got: {vs:#?}"
+    );
+    assert!(vs.iter().all(|v| v.contains("[deadlock]")), "only [deadlock] expected: {vs:#?}");
+}
+
+#[test]
+fn knob_drift_fires() {
+    let vs = lint("knob_drift");
+    assert!(
+        vs.iter().any(|v| v.contains("[knob-drift]") && v.contains("--rogue")),
+        "expected the undeclared-flag drift violation, got: {vs:#?}"
+    );
+    assert!(vs.iter().all(|v| v.contains("[knob-drift]")), "only [knob-drift] expected: {vs:#?}");
+}
+
+#[test]
+fn ledger_drift_fires() {
+    let vs = lint("ledger_drift");
+    assert!(
+        vs.iter().any(|v| v.contains("[ledger-schema]") && v.contains("rogue_key_ns")),
+        "expected the undeclared-key schema violation, got: {vs:#?}"
+    );
+    assert!(
+        vs.iter().all(|v| v.contains("[ledger-schema]")),
+        "only [ledger-schema] expected: {vs:#?}"
+    );
+}
+
+#[test]
+fn parse_panic_fires() {
+    assert_fires_only("parse_panic", "[parse-panic]");
+}
+
+/// The real tree must lint clean: this is `cargo run -p xtask -- lint`
+/// as a test, so tier-1 `cargo test` already gates every rule family.
+#[test]
+fn real_tree_is_lint_clean() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask has a parent dir")
+        .to_path_buf();
+    let report = xtask::lint_root(&root).expect("repo lint manifests must parse");
+    assert!(
+        report.violations.is_empty(),
+        "repolint violations on the real tree:\n{}",
+        report.violations.join("\n")
+    );
+    assert!(report.unsafe_sites > 0, "the unsafe census should see the SIMD/pool core");
+}
