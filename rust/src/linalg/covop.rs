@@ -75,6 +75,7 @@ impl CovOp {
     }
 
     pub(crate) fn apply_into_t(&self, q: &Mat, out: &mut Mat, tmp: &mut Mat, tier: SimdTier) {
+        debug_assert_eq!(q.rows, self.dim());
         match self {
             CovOp::Dense(m) => m.matmul_into_t(q, out, tier),
             CovOp::Samples { x, scale } => {
@@ -292,6 +293,26 @@ mod tests {
             op.apply_out_rows(&q, &tmp, s1, s2, &mut out.data[s1 * r..s2 * r]);
             op.apply_out_rows(&q, &tmp, s2, d, &mut out.data[s2 * r..]);
             assert_eq!(out.data, want.data);
+        }
+    }
+
+    #[test]
+    fn apply_into_handles_rank_zero_q() {
+        // Degenerate shape the new dimension guard must admit: a d×0
+        // subspace produces the empty d×0 product for both
+        // representations, and the scratch buffers stay reusable.
+        let mut rng = Rng::new(9);
+        let x = Mat::gauss(150, 40, &mut rng);
+        let q0 = Mat::zeros(150, 0);
+        let mut out = Mat::zeros(0, 0);
+        let mut tmp = Mat::zeros(0, 0);
+        for op in [CovOp::Samples { x: x.clone(), scale: 1.0 / 40.0 }, CovOp::dense_from_samples(&x)] {
+            op.apply_into(&q0, &mut out, &mut tmp);
+            assert_eq!((out.rows, out.cols), (150, 0));
+            // Same buffers, real subspace: result matches the allocating path.
+            let q = Mat::gauss(150, 4, &mut rng);
+            op.apply_into(&q, &mut out, &mut tmp);
+            assert_eq!(out.data, op.apply(&q).data);
         }
     }
 

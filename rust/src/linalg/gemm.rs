@@ -118,6 +118,9 @@ pub(crate) fn matmul_blocked_rows(
     out_rows: &mut [f64],
     tier: SimdTier,
 ) {
+    debug_assert_eq!(b.rows, a.cols);
+    debug_assert!(lo <= hi && hi <= a.rows);
+    debug_assert_eq!(out_rows.len(), (hi - lo) * b.cols);
     blocked_rows_impl(a, b, false, lo, hi, out_rows, tier);
 }
 
@@ -134,6 +137,9 @@ pub(crate) fn matmul_t_blocked_rows(
     out_rows: &mut [f64],
     tier: SimdTier,
 ) {
+    debug_assert_eq!(b.cols, a.cols);
+    debug_assert!(lo <= hi && hi <= a.rows);
+    debug_assert_eq!(out_rows.len(), (hi - lo) * b.rows);
     blocked_rows_impl(a, b, true, lo, hi, out_rows, tier);
 }
 
@@ -493,6 +499,40 @@ mod tests {
             let mut out = Mat::zeros(40, 40);
             matmul_blocked_into(&a, &b, &mut out, tier);
             assert!(out.data.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn blocked_rows_empty_range_and_rank_zero() {
+        // Degenerate shapes the new dimension guards must admit: an empty
+        // row range writes nothing, and rank-0 operands (zero inner or
+        // outer dim) produce the empty product without touching scratch
+        // state in a way that corrupts the next real call.
+        let mut rng = Rng::new(9);
+        let a = Mat::gauss(12, 7, &mut rng);
+        let b = Mat::gauss(7, 5, &mut rng);
+        let bt = Mat::gauss(5, 7, &mut rng);
+        for (_, tier) in tiers() {
+            let mut empty: [f64; 0] = [];
+            matmul_blocked_rows(&a, &b, 4, 4, &mut empty, tier);
+            matmul_t_blocked_rows(&a, &bt, 12, 12, &mut empty, tier);
+
+            // 0-col b: every output row is empty.
+            let b0 = Mat::zeros(7, 0);
+            matmul_blocked_rows(&a, &b0, 0, 12, &mut empty, tier);
+            let bt0 = Mat::zeros(0, 7);
+            matmul_t_blocked_rows(&a, &bt0, 0, 12, &mut empty, tier);
+
+            // 0-dim a: no rows at all.
+            let a0 = Mat::zeros(0, 7);
+            matmul_blocked_rows(&a0, &b, 0, 0, &mut empty, tier);
+
+            // A real product still comes out right after the degenerate
+            // calls reused the thread-local scratch.
+            let want = naive(&a, &b);
+            let mut out = vec![0.0; 12 * 5];
+            matmul_blocked_rows(&a, &b, 0, 12, &mut out, tier);
+            assert!(Mat::from_vec(12, 5, out).dist_fro(&want) < 1e-12);
         }
     }
 }

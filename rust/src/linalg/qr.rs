@@ -182,6 +182,7 @@ pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
 /// those of [`householder_qr`] (which delegates here), so results are
 /// bitwise identical to the allocating path.
 pub fn householder_qr_into(a: &Mat, q: &mut Mat, rr: Option<&mut Mat>, ws: &mut QrScratch) {
+    debug_assert!(a.rows >= a.cols);
     householder_qr_slice_into(&a.data, a.rows, a.cols, q, rr, ws);
 }
 
@@ -898,6 +899,7 @@ pub fn orthonormalize(a: &Mat) -> Mat {
 /// the zero-allocation S-DOT inner step. Bitwise identical to
 /// [`orthonormalize`].
 pub fn orthonormalize_into(a: &Mat, q: &mut Mat, ws: &mut QrScratch) {
+    debug_assert!(a.rows >= a.cols);
     householder_qr_into(a, q, None, ws);
 }
 
@@ -1238,5 +1240,28 @@ mod tests {
         assert_eq!(q.data, q0.data);
         let q2 = orthonormalize_policy(&a, QrPolicy::Householder);
         assert_eq!(q2.data, q0.data);
+    }
+
+    #[test]
+    fn into_variants_handle_rank_zero_shapes() {
+        // Degenerate shapes the new thin-QR guards must admit: a matrix
+        // with zero columns (rows >= cols trivially) factors into an
+        // empty Q/R, and scratch reuse after the empty call is clean.
+        let mut ws = QrScratch::new();
+        let mut q = Mat::zeros(0, 0);
+        let mut r = Mat::zeros(0, 0);
+        let empty = Mat::zeros(5, 0);
+        householder_qr_into(&empty, &mut q, Some(&mut r), &mut ws);
+        assert_eq!((q.rows, q.cols), (5, 0));
+        assert_eq!((r.rows, r.cols), (0, 0));
+        orthonormalize_into(&empty, &mut q, &mut ws);
+        assert_eq!((q.rows, q.cols), (5, 0));
+
+        let mut rng = Rng::new(28);
+        let a = Mat::gauss(9, 3, &mut rng);
+        let (q0, r0) = householder_qr(&a);
+        householder_qr_into(&a, &mut q, Some(&mut r), &mut ws);
+        assert_eq!(q.data, q0.data);
+        assert_eq!(r.data, r0.data);
     }
 }

@@ -410,6 +410,35 @@ fn simd_policies_bitwise_identical_across_thread_matrix() {
     }
 }
 
+/// The pinned-fma repeatability cell: `--simd fma` changes bits relative
+/// to scalar *by design*, but it must still be a deterministic choice —
+/// the contract behind the `[det-taint]` seam declaration for the
+/// `SimdPolicy` dispatch. Re-running the same cell with a fresh backend
+/// must reproduce the estimates bit-for-bit, and the thread count must
+/// stay invisible, at threads ∈ {1, 4, 9}. (Scalar ≡ auto equivalence is
+/// pinned above; this locks the remaining, bit-changing tier. On
+/// hardware without FMA the policy resolves to the scalar tier, for
+/// which the same repeatability claim holds.)
+#[test]
+fn pinned_fma_runs_are_bitwise_repeatable_across_thread_counts() {
+    use dpsa::linalg::simd::SimdPolicy;
+    let (s, g) = tall_setting(14, 2);
+    let cfg = SdotConfig::new(Schedule::fixed(8), 6);
+    let mut reference: Option<Vec<Mat>> = None;
+    for &threads in &[1usize, 4, 9] {
+        for _run in 0..2 {
+            // A fresh backend per run: no warm scratch carries bits over.
+            let backend = NativeBackend::with_simd(SimdPolicy::Fma);
+            let mut net = SyncNetwork::with_threads(g.clone(), threads);
+            let (q, _) = run_sdot_with_backend(&mut net, &s, &cfg, &backend);
+            match &reference {
+                None => reference = Some(q),
+                Some(q0) => assert_bitwise_eq(q0, &q),
+            }
+        }
+    }
+}
+
 #[test]
 fn two_level_dispatch_panic_reraises_without_deadlock() {
     // A panic inside a row chunk of a two-level dispatch must surface to

@@ -1,0 +1,147 @@
+//! Rule family: determinism taint ([det-taint]).
+//!
+//! The repo's bitwise-determinism contract says: the bit-stable entry
+//! points (the S-DOT step loop, consensus round kernels, the SPMD
+//! multiplexed round, QR fan-out, the MPI exchange phases) produce
+//! byte-identical results at any `--threads`, and rounding-contracting
+//! instructions (fused multiply-add, `std::arch` SIMD) may only be
+//! reached through the declared policy seams (`SimdPolicy` dispatch,
+//! `QrPolicy` dispatch) — fma changes bits *by design*, but only behind
+//! a seam the user selects explicitly.
+//!
+//! This pass makes that reviewer-held rule machine-checked: BFS from
+//! every declared root over the call graph, refusing to descend into
+//! seams; any reachable fma intrinsic / `std::arch` path / float-ordering
+//! primitive is a violation with the full call path.
+//!
+//! Manifest format (`determinism_roots.toml`):
+//!   [roots]  "src/file.rs::fn_name" = "why it must be bit-stable"
+//!   [seams]  "src/file.rs::fn_name" = "why divergence is sanctioned here"
+//!
+//! Rot rules: a root/seam key matching no fn is a violation, and so is a
+//! seam no root can reach — a seam that guards nothing guards wrong.
+
+use crate::graph::CallGraph;
+use crate::source::SourceFile;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Bit-instability sinks: rounding-contracting intrinsics and the float
+/// total-ordering primitive (its NaN handling is a per-callsite policy
+/// decision that must sit behind a seam on bit-stable paths).
+const SINKS: &[&str] = &[
+    "std::arch",
+    "core::arch",
+    ".mul_add(",
+    "_mm256_",
+    "_mm_",
+    "vfmaq_f64",
+    ".partial_cmp(",
+];
+
+pub fn scan(
+    files: &[SourceFile],
+    graph: &CallGraph,
+    roots: &BTreeMap<String, String>,
+    seams: &BTreeMap<String, String>,
+) -> Vec<String> {
+    let by_rel: BTreeMap<&str, &SourceFile> =
+        files.iter().map(|sf| (sf.rel.as_str(), sf)).collect();
+    let mut violations = Vec::new();
+
+    let mut root_quals: BTreeSet<&str> = BTreeSet::new();
+    for key in roots.keys() {
+        match graph.by_key.get(key) {
+            Some(ids) => {
+                for &i in ids {
+                    root_quals.insert(&graph.defs[i].qual);
+                }
+            }
+            None => violations.push(format!(
+                "determinism_roots.toml: [roots] \"{key}\" matches no fn — manifest rot, update the entry"
+            )),
+        }
+    }
+    let mut seam_quals: BTreeSet<&str> = BTreeSet::new();
+    let mut seam_key_of: BTreeMap<&str, &str> = BTreeMap::new();
+    for key in seams.keys() {
+        match graph.by_key.get(key) {
+            Some(ids) => {
+                for &i in ids {
+                    seam_quals.insert(&graph.defs[i].qual);
+                    seam_key_of.insert(&graph.defs[i].qual, key);
+                }
+            }
+            None => violations.push(format!(
+                "determinism_roots.toml: [seams] \"{key}\" matches no fn — manifest rot, update the entry"
+            )),
+        }
+    }
+
+    let mut reported: BTreeSet<(String, usize, &str)> = BTreeSet::new();
+    let mut seams_hit: BTreeSet<&str> = BTreeSet::new();
+    for &root in &root_quals {
+        let mut seen: BTreeMap<&str, Option<&str>> = BTreeMap::new();
+        seen.insert(root, None);
+        let mut queue: VecDeque<&str> = VecDeque::new();
+        queue.push_back(root);
+        while let Some(cur) = queue.pop_front() {
+            let Some(ids) = graph.by_qual.get(cur) else { continue };
+            for &i in ids {
+                let d = &graph.defs[i];
+                let Some(sf) = by_rel.get(d.rel.as_str()) else { continue };
+                for li in d.start..=d.end {
+                    let code = &sf.lines[li].code;
+                    for tok in SINKS {
+                        if !code.contains(tok) {
+                            continue;
+                        }
+                        if !reported.insert((d.qual.clone(), li, tok)) {
+                            continue;
+                        }
+                        let mut path = vec![cur];
+                        let mut up = seen[cur];
+                        while let Some(p) = up {
+                            path.push(p);
+                            up = seen[p];
+                        }
+                        path.reverse();
+                        violations.push(format!(
+                            "{}:{}: [det-taint] `{}` in `{}` is reachable from bit-stable root `{}` outside any declared seam via {} — route it through a policy seam or declare one",
+                            d.rel,
+                            li + 1,
+                            tok.trim_end_matches('('),
+                            d.name,
+                            root,
+                            path.join(" -> ")
+                        ));
+                    }
+                }
+            }
+            let Some(tos) = graph.edges.get(cur) else { continue };
+            for to in tos {
+                if seam_quals.contains(to.as_str()) {
+                    seams_hit.insert(to);
+                    continue; // sanctioned divergence boundary
+                }
+                if let std::collections::btree_map::Entry::Vacant(e) = seen.entry(to) {
+                    e.insert(Some(cur));
+                    queue.push_back(to);
+                }
+            }
+        }
+    }
+
+    // A seam that exists but is unreachable from every root guards
+    // nothing — the dispatch moved and the manifest rotted.
+    let hit_keys: BTreeSet<&str> =
+        seams_hit.iter().filter_map(|q| seam_key_of.get(q).copied()).collect();
+    for key in seams.keys() {
+        if graph.by_key.contains_key(key) && !hit_keys.contains(key.as_str()) {
+            violations.push(format!(
+                "determinism_roots.toml: [seams] \"{key}\" is not reached from any root — manifest rot, remove or re-point it"
+            ));
+        }
+    }
+
+    violations
+}

@@ -1,0 +1,414 @@
+//! Interprocedural layer: a std-only call graph over the comment-stripped
+//! `SourceFile` view. Item parsing finds every fn definition and the
+//! impl/trait block (if any) that owns it; call extraction walks each fn
+//! body for `ident (` tokens and resolves them by identifier:
+//!
+//!   * `recv.f(…)`     → every *method* named `f` (any impl), unless `f`
+//!                       is in the declared ambiguous-methods waiver list
+//!                       (std collides: `.push`, `.load`, `.clone`, …);
+//!   * `Type::f(…)`    → methods of a local `impl Type`/`trait Type`,
+//!                       else fns in a file named `type.rs`, else fns in
+//!                       a same-file inline `mod type { … }`, else
+//!                       *nothing* (an external std/crate type — fanning
+//!                       out to same-named local fns is pure noise);
+//!   * `Self::f(…)`    → the enclosing impl's method;
+//!   * `self::`/`crate::`/`super::` paths → every candidate;
+//!   * bare `f(…)`     → free fns only.
+//!
+//! `#[cfg]`-variant definitions of the same fn (e.g. the x86 / aarch64 /
+//! scalar bodies of a SIMD kernel) share one graph node: their bodies and
+//! edges are unioned, so reachability sees every platform's code at once.
+//! Nested fns own their lines (no double attribution to the enclosing
+//! fn); `#[cfg(test)]` modules are excluded entirely.
+//!
+//! The graph is exported as `target/repolint/call_graph.json` and feeds
+//! the alloc-reachability ([hotpath]/[alloc-reach]) and determinism-taint
+//! ([det-taint]) rule families.
+
+use crate::source::{find_word, next_token, SourceFile};
+use crate::spans::{body_end, fn_spans, in_spans, test_spans};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One fn definition. `qual` (`file::Type::name` / `file::name`) is the
+/// graph-node id; `key` (`file::name`) is the manifest-facing id — the
+/// impl type is elided so `hotpath.toml` entries survive impl renames.
+pub struct FnDef {
+    pub rel: String,
+    pub name: String,
+    pub ty: Option<String>,
+    /// 0-based inclusive body line range.
+    pub start: usize,
+    pub end: usize,
+    pub qual: String,
+    pub key: String,
+}
+
+pub struct CallGraph {
+    pub defs: Vec<FnDef>,
+    /// Caller qual → callee quals (cfg variants merged per qual).
+    pub edges: BTreeMap<String, BTreeSet<String>>,
+    /// Qual → indices into `defs` (>1 entry means cfg variants).
+    pub by_qual: BTreeMap<String, Vec<usize>>,
+    /// Manifest key (`file::name`) → indices into `defs`.
+    pub by_key: BTreeMap<String, Vec<usize>>,
+}
+
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "loop", "return", "fn", "move", "in", "as", "let", "else",
+    "unsafe", "where", "impl", "dyn", "ref", "mut", "pub", "use", "mod", "struct", "enum", "trait",
+    "type", "const", "static", "crate", "self", "super", "Self", "break", "continue",
+];
+
+/// `(type_name, start, end)` for every `impl`/`trait` block. The header
+/// may span lines; `impl<T> Trait for Type` attributes methods to `Type`.
+fn impl_spans(sf: &SourceFile) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in sf.lines.iter().enumerate() {
+        for kw in ["impl", "trait"] {
+            for at in find_word(&line.code, kw) {
+                let mut header = line.code[at..].to_string();
+                let mut l = idx;
+                while !header.contains('{') && l + 1 < sf.lines.len() {
+                    l += 1;
+                    header.push(' ');
+                    header.push_str(&sf.lines[l].code);
+                }
+                let Some(brace) = header.find('{') else { continue };
+                let mut head = header[..brace].to_string();
+                if kw == "impl" {
+                    if let Some(pos) = head.find(" for ") {
+                        head = head[pos + " for ".len()..].to_string();
+                    } else {
+                        head = head["impl".len()..].to_string();
+                    }
+                } else {
+                    head = head["trait".len()..].to_string();
+                }
+                let mut head = head.trim();
+                // Strip leading generics: `<T: Foo>` before the type name.
+                if head.starts_with('<') {
+                    let mut depth = 0i32;
+                    for (i, ch) in head.char_indices() {
+                        match ch {
+                            '<' => depth += 1,
+                            '>' => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    head = &head[i + 1..];
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                let ty: String = head
+                    .chars()
+                    .skip_while(|c| !(c.is_alphabetic() || *c == '_'))
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if ty.is_empty() {
+                    continue;
+                }
+                if let Some((end, _)) = body_end(sf, idx, at) {
+                    out.push((ty, idx, end));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `(mod_name, start, end)` for every inline `mod name { … }` block —
+/// lets `imp::dot4_fma(…)` resolve into the SIMD kernels' arch modules.
+fn mod_spans(sf: &SourceFile) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in sf.lines.iter().enumerate() {
+        for at in find_word(&line.code, "mod") {
+            let Some(name) = next_token(&line.code, at + "mod".len()) else { continue };
+            if !name.chars().next().is_some_and(|c| c.is_alphabetic() || c == '_') {
+                continue;
+            }
+            if let Some((end, _)) = body_end(sf, idx, at) {
+                out.push((name, idx, end));
+            }
+        }
+    }
+    out
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+enum CallKind {
+    Free,
+    Method,
+    Qualified(Option<String>),
+}
+
+/// `ident (` occurrences on one code line: `(name, kind)`. The kind is
+/// read off the text before the identifier: `.` → method, `::` →
+/// qualified (with the qualifier identifier when one is present), else
+/// free. Definition sites (`fn name(`) are skipped.
+fn calls_on_line(code: &str) -> Vec<(String, CallKind)> {
+    let mut out = Vec::new();
+    let bytes = code.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        if !(c.is_alphabetic() || c == '_') || (i > 0 && is_ident(bytes[i - 1] as char)) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        while j < bytes.len() && is_ident(bytes[j] as char) {
+            j += 1;
+        }
+        let mut k = j;
+        while k < bytes.len() && (bytes[k] == b' ' || bytes[k] == b'\t') {
+            k += 1;
+        }
+        if k >= bytes.len() || bytes[k] != b'(' {
+            i = j;
+            continue;
+        }
+        let name = &code[i..j];
+        if KEYWORDS.contains(&name) {
+            i = j;
+            continue;
+        }
+        let pre = code[..i].trim_end();
+        if pre.ends_with("fn") && ends_at_word_boundary(pre, "fn") {
+            i = j;
+            continue; // its own definition line
+        }
+        let kind = if pre.ends_with('.') {
+            CallKind::Method
+        } else if pre.ends_with("::") {
+            CallKind::Qualified(trailing_ident(pre[..pre.len() - 2].trim_end()))
+        } else {
+            CallKind::Free
+        };
+        out.push((name.to_string(), kind));
+        i = j;
+    }
+    out
+}
+
+fn ends_at_word_boundary(s: &str, word: &str) -> bool {
+    s.len() == word.len() || !is_ident(s.as_bytes()[s.len() - word.len() - 1] as char)
+}
+
+/// Longest identifier (starting with a letter/underscore) ending `s`.
+fn trailing_ident(s: &str) -> Option<String> {
+    let bytes = s.as_bytes();
+    let mut start = bytes.len();
+    while start > 0 && is_ident(bytes[start - 1] as char) {
+        start -= 1;
+    }
+    // Trim any leading digits so the run starts like an identifier.
+    let run = &s[start..];
+    let at = run.find(|c: char| c.is_alphabetic() || c == '_')?;
+    Some(run[at..].to_string())
+}
+
+/// Build the graph over `files` (shipped `src` code; test modules are
+/// excluded). Method calls whose name is in `ambiguous_methods` resolve
+/// to nothing — the declared std-collision waiver list.
+pub fn build(files: &[&SourceFile], ambiguous_methods: &BTreeSet<String>) -> CallGraph {
+    let mut defs: Vec<FnDef> = Vec::new();
+    let mut fns_by_file: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    let mut mods_by_file: BTreeMap<String, Vec<(String, usize, usize)>> = BTreeMap::new();
+    for sf in files {
+        let tests = test_spans(sf);
+        let impls = impl_spans(sf);
+        mods_by_file.insert(sf.rel.clone(), mod_spans(sf));
+        let list = fns_by_file.entry(sf.rel.clone()).or_default();
+        for span in fn_spans(sf) {
+            if in_spans(&tests, span.start) {
+                continue;
+            }
+            // Innermost owning impl/trait block, if any.
+            let mut ty: Option<&(String, usize, usize)> = None;
+            for blk in &impls {
+                if blk.1 <= span.start && span.start <= blk.2 {
+                    match ty {
+                        Some(prev) if prev.1 >= blk.1 => {}
+                        _ => ty = Some(blk),
+                    }
+                }
+            }
+            let ty = ty.map(|t| t.0.clone());
+            let qual = match &ty {
+                Some(t) => format!("{}::{}::{}", sf.rel, t, span.name),
+                None => format!("{}::{}", sf.rel, span.name),
+            };
+            list.push(defs.len());
+            defs.push(FnDef {
+                rel: sf.rel.clone(),
+                name: span.name.clone(),
+                ty,
+                start: span.start,
+                end: span.end,
+                key: format!("{}::{}", sf.rel, span.name),
+                qual,
+            });
+        }
+    }
+
+    let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    let mut by_qual: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    let mut by_key: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    for (i, d) in defs.iter().enumerate() {
+        by_name.entry(&d.name).or_default().push(i);
+        by_qual.entry(d.qual.clone()).or_default().push(i);
+        by_key.entry(d.key.clone()).or_default().push(i);
+    }
+    let mut file_stems: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for sf in files {
+        let stem = sf.rel.rsplit('/').next().unwrap_or(&sf.rel).trim_end_matches(".rs");
+        file_stems.entry(stem.to_string()).or_default().insert(sf.rel.clone());
+    }
+
+    let mut edges: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for sf in files {
+        let Some(fn_ids) = fns_by_file.get(&sf.rel) else { continue };
+        for &fi in fn_ids {
+            let fd = &defs[fi];
+            let mut calls: BTreeSet<String> = BTreeSet::new();
+            for li in fd.start..=fd.end {
+                // Innermost ownership: a nested fn's lines are its own.
+                let nested = fn_ids.iter().any(|&oi| {
+                    oi != fi
+                        && fd.start <= defs[oi].start
+                        && defs[oi].end <= fd.end
+                        && defs[oi].start <= li
+                        && li <= defs[oi].end
+                });
+                if nested {
+                    continue;
+                }
+                for (name, kind) in calls_on_line(&sf.lines[li].code) {
+                    let Some(cands) = by_name.get(name.as_str()) else { continue };
+                    if matches!(kind, CallKind::Method) && ambiguous_methods.contains(&name) {
+                        continue;
+                    }
+                    for &ci in resolve(cands, &kind, &defs[fi], &defs, &file_stems, &mods_by_file) {
+                        if li == defs[fi].start && ci == fi {
+                            continue; // its own signature line
+                        }
+                        calls.insert(defs[ci].qual.clone());
+                    }
+                }
+            }
+            // cfg-variant defs share a qual: union their edges into one
+            // node so every platform's callees are visible at once.
+            edges.entry(defs[fi].qual.clone()).or_default().extend(calls);
+        }
+    }
+
+    CallGraph { defs, edges, by_qual, by_key }
+}
+
+fn resolve<'a>(
+    cands: &'a [usize],
+    kind: &CallKind,
+    caller: &FnDef,
+    defs: &[FnDef],
+    file_stems: &BTreeMap<String, BTreeSet<String>>,
+    mods_by_file: &BTreeMap<String, Vec<(String, usize, usize)>>,
+) -> Vec<&'a usize> {
+    match kind {
+        CallKind::Method => cands.iter().filter(|&&i| defs[i].ty.is_some()).collect(),
+        CallKind::Free => cands.iter().filter(|&&i| defs[i].ty.is_none()).collect(),
+        CallKind::Qualified(q) => {
+            let Some(q) = q else { return cands.iter().collect() };
+            if q == "self" || q == "crate" || q == "super" {
+                return cands.iter().collect();
+            }
+            if q == "Self" {
+                let own: Vec<&usize> =
+                    cands.iter().filter(|&&i| defs[i].ty == caller.ty).collect();
+                return if own.is_empty() { cands.iter().collect() } else { own };
+            }
+            let by_ty: Vec<&usize> =
+                cands.iter().filter(|&&i| defs[i].ty.as_deref() == Some(q.as_str())).collect();
+            if !by_ty.is_empty() {
+                return by_ty;
+            }
+            if let Some(rels) = file_stems.get(q) {
+                let by_file: Vec<&usize> =
+                    cands.iter().filter(|&&i| rels.contains(&defs[i].rel)).collect();
+                if !by_file.is_empty() {
+                    return by_file;
+                }
+            }
+            // Inline module in the caller's own file (`imp::dot4_fma(…)`).
+            let in_mod: Vec<&usize> = cands
+                .iter()
+                .filter(|&&i| {
+                    defs[i].rel == caller.rel
+                        && mods_by_file.get(&defs[i].rel).is_some_and(|mods| {
+                            mods.iter().any(|(m, lo, hi)| {
+                                m == q && *lo <= defs[i].start && defs[i].start <= *hi
+                            })
+                        })
+                })
+                .collect();
+            if !in_mod.is_empty() {
+                return in_mod;
+            }
+            // Unknown qualifier: an external (std / third-party) type.
+            // Resolving to same-named local fns would be pure noise
+            // (`Builder::new`, `Vec::with_capacity`, …).
+            Vec::new()
+        }
+    }
+}
+
+/// `target/repolint/call_graph.json`: one node per qual (cfg variants
+/// merged, first variant's location), one record per edge.
+pub fn call_graph_json(graph: &CallGraph) -> String {
+    let mut out = String::from("{\n  \"functions\": [\n");
+    let nodes: Vec<_> = graph.by_qual.iter().collect();
+    for (i, (qual, ids)) in nodes.iter().enumerate() {
+        let d = &graph.defs[ids[0]];
+        out.push_str(&format!(
+            "    {{\"qual\": \"{}\", \"file\": \"{}\", \"line\": {}, \"variants\": {}}}{}\n",
+            esc(qual),
+            esc(&d.rel),
+            d.start + 1,
+            ids.len(),
+            if i + 1 < nodes.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n  \"edges\": [\n");
+    let mut recs: Vec<String> = Vec::new();
+    for (from, tos) in &graph.edges {
+        for to in tos {
+            recs.push(format!("    {{\"from\": \"{}\", \"to\": \"{}\"}}", esc(from), esc(to)));
+        }
+    }
+    for (i, r) in recs.iter().enumerate() {
+        out.push_str(r);
+        out.push_str(if i + 1 < recs.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+pub(crate) fn esc(s: &str) -> String {
+    let mut o = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => o.push_str("\\\""),
+            '\\' => o.push_str("\\\\"),
+            '\n' => o.push_str("\\n"),
+            '\t' => o.push_str("\\t"),
+            c if (c as u32) < 0x20 => o.push_str(&format!("\\u{:04x}", c as u32)),
+            c => o.push(c),
+        }
+    }
+    o
+}

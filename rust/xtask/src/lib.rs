@@ -1,38 +1,52 @@
 //! repolint as a library: `lint_root(root)` runs every rule family over
 //! an arbitrary crate root and returns the report instead of exiting.
-//! The `xtask` binary is a thin wrapper that adds artifact writing; the
-//! negative-fixture suite in `tests/` calls `lint_root` on miniature
-//! crate roots, each seeded with one known violation, and asserts the
-//! right rule id comes back — the analyzer's own tier-1 coverage.
+//! The `xtask` binary is a thin wrapper that adds artifact writing and
+//! CLI filters; the negative-fixture suite in `tests/` calls `lint_root`
+//! on miniature crate roots, each seeded with one known violation, and
+//! asserts the right rule id comes back — the analyzer's own tier-1
+//! coverage.
 //!
 //! Rule families (ids in brackets, one per violation line):
 //!   1. [safety]        SAFETY coverage for `unsafe` (+ inventory JSON)
 //!   2. [hashmap] [wallclock] [randomness] [float-cmp]  determinism
-//!   3. [hotpath]       hot-path alloc bans (`xtask/hotpath.toml`)
+//!   3. [hotpath] [alloc-reach]  hot-path alloc bans, now transitive
+//!                      over the call graph (`xtask/hotpath.toml`;
+//!                      depth-0 hits keep the original [hotpath] id)
 //!   4. [protocol] [deadlock] [buffer]  exchange-phase discipline
 //!                      (`xtask/protocol.toml`)
 //!   5. [knob-drift]    knob-surface projections (`xtask/knobs.toml`)
 //!   6. [ledger-schema] bench ledger key schemas (`xtask/ledgers.toml`)
 //!   7. [parse-panic]   no unwrap/expect on user-input parse paths
+//!   8. [det-taint]     fma/`std::arch`/float-ordering reachable from a
+//!                      bit-stable root outside a declared policy seam
+//!                      (`xtask/determinism_roots.toml`)
+//!   9. [shape]         per-kernel dimension contracts: guard presence +
+//!                      literal call-site propagation (`xtask/shapes.toml`)
 //!
-//! A family whose manifest file is absent under `<root>/xtask/` is
-//! skipped — fixture roots opt into exactly the families they test. The
-//! real repo commits all three manifests, and the fixture suite pins
-//! that each family actually fires.
+//! Families 3 and 8 share the interprocedural call graph built by
+//! `graph.rs` (exported as `target/repolint/call_graph.json`); its
+//! resolution waivers live in `xtask/callgraph.toml`. A family whose
+//! manifest file is absent under `<root>/xtask/` is skipped — fixture
+//! roots opt into exactly the families they test. The real repo commits
+//! all the manifests, and the fixture suite pins that each family
+//! actually fires.
 
 pub mod config;
 pub mod determinism;
-pub mod hotpath;
+pub mod dettaint;
+pub mod graph;
 pub mod knobs;
 pub mod ledgers;
 pub mod parsepanic;
 pub mod protocol;
+pub mod reach;
 pub mod safety;
+pub mod shapes;
 pub mod source;
 pub mod spans;
 
 use source::SourceFile;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
 pub struct LintReport {
@@ -46,6 +60,11 @@ pub struct LintReport {
     pub protocol_model_json: String,
     /// Declared ledger schemas, for the CI artifact upload.
     pub ledger_schemas_json: String,
+    /// The interprocedural call graph (nodes + resolved edges).
+    pub call_graph_json: String,
+    /// Per-hot-root reachable-fn counts + waived edges, for the
+    /// committed-baseline diff (like the unsafe census).
+    pub reachability_json: String,
 }
 
 /// Run every rule family over the crate at `root` (the directory holding
@@ -81,19 +100,84 @@ pub fn lint_root(root: &Path) -> Result<LintReport, String> {
     // (2) Determinism hygiene (src only).
     violations.extend(determinism::scan(&src_files, &allow));
 
-    // (3) Hot-path alloc bans.
-    let mut protocol_model_json = String::from("[]\n");
-    let mut ledger_schemas_json = String::from("{}\n");
-    if let Some(manifest) = load_manifest(&root.join("xtask/hotpath.toml"))? {
-        violations.extend(hotpath::scan(
-            &src_files,
-            &manifest.section("functions"),
-            &manifest.section("suffixes"),
-            &manifest.section("warmup"),
-        ));
+    // Call-graph layer shared by families 3 and 8. `callgraph.toml`
+    // declares files outside the default build ([exclude-files]) and the
+    // method names whose `.name(` calls collide with std ([ambiguous-
+    // methods]); both sections are rot-checked.
+    let mut exclude: BTreeSet<String> = BTreeSet::new();
+    let mut ambiguous: BTreeSet<String> = BTreeSet::new();
+    let cg_manifest = load_manifest(&root.join("xtask/callgraph.toml"))?;
+    if let Some(m) = &cg_manifest {
+        for section in m.sections.keys() {
+            if section != "exclude-files" && section != "ambiguous-methods" {
+                return Err(format!(
+                    "callgraph.toml: section [{section}] must be [exclude-files] or [ambiguous-methods]"
+                ));
+            }
+        }
+        for rel in m.section("exclude-files").into_keys() {
+            if !root.join(&rel).exists() {
+                violations.push(format!(
+                    "callgraph.toml: [exclude-files] \"{rel}\" does not exist — manifest rot, remove the entry"
+                ));
+            }
+            exclude.insert(rel);
+        }
+        ambiguous = m.section("ambiguous-methods").into_keys().collect();
+    }
+
+    let hp_manifest = load_manifest(&root.join("xtask/hotpath.toml"))?;
+    let det_manifest = load_manifest(&root.join("xtask/determinism_roots.toml"))?;
+    let mut call_graph_json = String::from("{\"functions\": [], \"edges\": []}\n");
+    let mut reachability_json = String::from("{\"roots\": {}, \"waived_edges\": []}\n");
+    if cg_manifest.is_some() || hp_manifest.is_some() || det_manifest.is_some() {
+        let graph_files: Vec<&SourceFile> =
+            src_files.iter().filter(|sf| !exclude.contains(&sf.rel)).collect();
+        let graph = graph::build(&graph_files, &ambiguous);
+        call_graph_json = graph::call_graph_json(&graph);
+        for name in &ambiguous {
+            if !graph.defs.iter().any(|d| d.name == *name && d.ty.is_some()) {
+                violations.push(format!(
+                    "callgraph.toml: [ambiguous-methods] \"{name}\" matches no local method — manifest rot, remove the entry"
+                ));
+            }
+        }
+
+        // (3) Hot-path alloc bans, transitive over the graph.
+        if let Some(m) = &hp_manifest {
+            let rep = reach::scan(
+                &src_files,
+                &graph,
+                &m.section("functions"),
+                &m.section("suffixes"),
+                &m.section("warmup"),
+                &m.section("waived-edges"),
+            )?;
+            violations.extend(rep.violations);
+            reachability_json = rep.reachability_json;
+        }
+
+        // (8) Determinism taint: bit-stable roots vs policy seams.
+        if let Some(m) = &det_manifest {
+            for section in m.sections.keys() {
+                if section != "roots" && section != "seams" {
+                    return Err(format!(
+                        "determinism_roots.toml: section [{section}] must be [roots] or [seams]"
+                    ));
+                }
+            }
+            violations.extend(dettaint::scan(
+                &src_files,
+                &graph,
+                &m.section("roots"),
+                &m.section("seams"),
+            ));
+        }
     }
 
     // (4) Protocol discipline for the exchange layer.
+    let mut protocol_model_json = String::from("[]\n");
+    let mut ledger_schemas_json = String::from("{}\n");
     if let Some(manifest) = load_manifest(&root.join("xtask/protocol.toml"))? {
         let mut phases = BTreeMap::new();
         for (section, entries) in manifest.sections {
@@ -155,6 +239,26 @@ pub fn lint_root(root: &Path) -> Result<LintReport, String> {
     // (7) No panics on user-input parse paths.
     parsepanic::scan(&src_files, &parse_allow, &mut violations);
 
+    // (9) Shape contracts for the declared linalg kernels.
+    if let Some(manifest) = load_manifest(&root.join("xtask/shapes.toml"))? {
+        let mut contracts: BTreeMap<String, BTreeMap<String, String>> = BTreeMap::new();
+        for (section, entries) in manifest.sections {
+            match section.strip_prefix("shape.") {
+                Some(kernel) => {
+                    contracts.insert(kernel.to_string(), entries);
+                }
+                None => {
+                    return Err(format!(
+                        "shapes.toml: section [{section}] must be named [shape.<kernel>]"
+                    ))
+                }
+            }
+        }
+        let shape_files: Vec<&SourceFile> =
+            all_files.iter().filter(|sf| !exclude.contains(&sf.rel)).collect();
+        violations.extend(shapes::scan(&shape_files, &contracts)?);
+    }
+
     violations.sort();
     Ok(LintReport {
         violations,
@@ -163,6 +267,8 @@ pub fn lint_root(root: &Path) -> Result<LintReport, String> {
         unsafe_inventory_json,
         protocol_model_json,
         ledger_schemas_json,
+        call_graph_json,
+        reachability_json,
     })
 }
 

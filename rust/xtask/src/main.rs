@@ -1,31 +1,100 @@
 //! `cargo run -p xtask -- lint` — repo-invariant analyzer ("repolint").
 //!
-//! Std-only static pass over the `dpsa` crate sources enforcing the
-//! seven rule families documented in `xtask/README.md` and ROADMAP
-//! "Static invariants": SAFETY coverage, determinism hygiene, hot-path
-//! alloc bans, exchange-protocol discipline, knob-surface drift, ledger
-//! key schemas, and parse-path panic bans. Writes three artifacts under
-//! `target/repolint/` (unsafe inventory, protocol model, ledger
-//! schemas); exits nonzero when any violation is found.
+//! Std-only static pass over the `dpsa` crate sources enforcing the rule
+//! families documented in `xtask/README.md` and ROADMAP "Static
+//! invariants": SAFETY coverage, determinism hygiene, hot-path alloc
+//! bans (transitive over the call graph), exchange-protocol discipline,
+//! knob-surface drift, ledger key schemas, parse-path panic bans,
+//! determinism taint, and shape contracts. Writes five artifacts under
+//! `target/repolint/` (unsafe inventory, protocol model, ledger schemas,
+//! call graph, hot-path reachability census); exits nonzero when any
+//! violation is found.
+//!
+//! Flags:
+//!   --json            machine-readable violations on stdout (CI maps
+//!                     them to `::error file=…,line=…::` annotations)
+//!   --only <rule-id>  run everything but report only one rule family
+//!                     (repeatable); unknown ids are hard errors
+//!   --list-rules      print the rule-id table and exit
 
 use std::path::PathBuf;
 
+/// Every violation id a lint line can carry, with the family it belongs
+/// to — the vocabulary for `--only` / `--list-rules` and the JSON "rule"
+/// field.
+const RULES: &[(&str, &str)] = &[
+    ("safety", "SAFETY comment coverage for unsafe blocks/fns/impls"),
+    ("hashmap", "iteration-order hazard: HashMap/HashSet in shipped code"),
+    ("wallclock", "wall-clock time on deterministic paths"),
+    ("randomness", "ambient randomness outside the seeded Rng"),
+    ("float-cmp", "exact float equality in shipped code"),
+    ("hotpath", "allocating constructor in a registered hot fn's own body"),
+    ("alloc-reach", "allocation reachable from a hot fn through the call graph"),
+    ("det-taint", "fma/std::arch/float-ordering reachable from a bit-stable root outside a seam"),
+    ("shape", "kernel dimension contract: missing guard or literal call-site mismatch"),
+    ("protocol", "exchange-phase discipline (send/recv/skip shape)"),
+    ("deadlock", "unmatched or asymmetric exchange steps"),
+    ("buffer", "take_buf/give_back recycling discipline"),
+    ("knob-drift", "CLI/env knob surface drifted from knobs.toml"),
+    ("ledger-schema", "bench ledger keys drifted from ledgers.toml"),
+    ("parse-panic", "unwrap/expect on a user-input parse path"),
+];
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    match args.first().map(String::as_str) {
-        Some("lint") => std::process::exit(lint()),
-        _ => {
-            eprintln!("usage: cargo run -p xtask -- lint");
-            eprintln!();
-            eprintln!("Runs the repolint pass: SAFETY coverage, determinism hygiene,");
-            eprintln!("hot-path alloc bans, protocol discipline, knob drift, ledger");
-            eprintln!("schemas, parse-panic bans. Writes target/repolint/ artifacts.");
-            std::process::exit(2);
-        }
+    if args.first().map(String::as_str) != Some("lint") {
+        usage();
+        std::process::exit(2);
     }
+    let mut json = false;
+    let mut only: Vec<String> = Vec::new();
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => json = true,
+            "--list-rules" => {
+                for (id, what) in RULES {
+                    println!("{id:14} {what}");
+                }
+                std::process::exit(0);
+            }
+            "--only" => {
+                i += 1;
+                let Some(id) = args.get(i) else {
+                    eprintln!("repolint: --only needs a rule id; valid ids: {}", rule_ids());
+                    std::process::exit(2);
+                };
+                if !RULES.iter().any(|(r, _)| r == id) {
+                    eprintln!("repolint: unknown rule id `{id}`; valid ids: {}", rule_ids());
+                    std::process::exit(2);
+                }
+                only.push(id.clone());
+            }
+            other => {
+                eprintln!("repolint: unknown flag `{other}`");
+                usage();
+                std::process::exit(2);
+            }
+        }
+        i += 1;
+    }
+    std::process::exit(lint(json, &only));
 }
 
-fn lint() -> i32 {
+fn rule_ids() -> String {
+    RULES.iter().map(|(r, _)| *r).collect::<Vec<_>>().join(", ")
+}
+
+fn usage() {
+    eprintln!("usage: cargo run -p xtask -- lint [--json] [--only <rule-id>] [--list-rules]");
+    eprintln!();
+    eprintln!("Runs the repolint pass: SAFETY coverage, determinism hygiene,");
+    eprintln!("hot-path alloc reachability, protocol discipline, knob drift,");
+    eprintln!("ledger schemas, parse-panic bans, determinism taint, and shape");
+    eprintln!("contracts. Writes target/repolint/ artifacts.");
+}
+
+fn lint(json: bool, only: &[String]) -> i32 {
     // xtask lives at <crate root>/xtask; the scanned crate is the parent.
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .parent()
@@ -49,6 +118,8 @@ fn lint() -> i32 {
         ("unsafe_inventory.json", &report.unsafe_inventory_json),
         ("protocol_model.json", &report.protocol_model_json),
         ("ledger_schemas.json", &report.ledger_schemas_json),
+        ("call_graph.json", &report.call_graph_json),
+        ("hotpath_reachability.json", &report.reachability_json),
     ] {
         let path = art_dir.join(name);
         if let Err(e) = std::fs::write(&path, body) {
@@ -57,19 +128,112 @@ fn lint() -> i32 {
         }
     }
 
-    for v in &report.violations {
-        println!("repolint: {v}");
+    let shown: Vec<&String> = report
+        .violations
+        .iter()
+        .filter(|v| only.is_empty() || only.iter().any(|id| matches_rule(v, id)))
+        .collect();
+
+    if json {
+        println!("{}", violations_json(&shown));
+    } else {
+        for v in &shown {
+            println!("repolint: {v}");
+        }
     }
-    println!(
+    let mut summary = format!(
         "repolint: {} files scanned, {} unsafe sites inventoried ({}), {} violation(s)",
         report.files_scanned,
         report.unsafe_sites,
         art_dir.join("unsafe_inventory.json").display(),
-        report.violations.len()
+        shown.len()
     );
-    if report.violations.is_empty() {
+    if !only.is_empty() {
+        summary.push_str(&format!(" [--only {}]", only.join(",")));
+    }
+    if json {
+        eprintln!("{summary}");
+    } else {
+        println!("{summary}");
+    }
+    if shown.is_empty() {
         0
     } else {
         1
     }
+}
+
+/// `--only` keeps a line when it carries the `[id]` tag; manifest-rot
+/// lines (no file:line prefix) belong to the family whose manifest they
+/// name, and the shared `callgraph.toml` belongs to both graph families.
+fn matches_rule(v: &str, id: &str) -> bool {
+    if v.contains(&format!("[{id}]")) {
+        return true;
+    }
+    match id {
+        "hotpath" | "alloc-reach" => {
+            v.starts_with("hotpath.toml:") || v.starts_with("callgraph.toml:")
+        }
+        "det-taint" => {
+            v.starts_with("determinism_roots.toml:") || v.starts_with("callgraph.toml:")
+        }
+        "shape" => v.starts_with("shapes.toml:"),
+        _ => false,
+    }
+}
+
+/// Machine-readable violations: `[{"file", "line", "rule", "message"}]`.
+/// Manifest-rot lines map to the manifest path at line 1; the rule field
+/// is the first bracketed token that is a known rule id, else "config".
+fn violations_json(violations: &[&String]) -> String {
+    let mut out = String::from("[\n");
+    for (i, v) in violations.iter().enumerate() {
+        let (file, line, rule) = parse_violation(v);
+        out.push_str(&format!(
+            "  {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}{}\n",
+            esc(&file),
+            line,
+            rule,
+            esc(v),
+            if i + 1 < violations.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
+fn parse_violation(v: &str) -> (String, usize, String) {
+    let rule = v
+        .split('[')
+        .skip(1)
+        .filter_map(|rest| rest.split(']').next())
+        .find(|tag| RULES.iter().any(|(r, _)| r == tag))
+        .unwrap_or("config")
+        .to_string();
+    if let Some((head, _)) = v.split_once(": ") {
+        if let Some((file, line)) = head.rsplit_once(':') {
+            if let Ok(n) = line.parse::<usize>() {
+                return (file.to_string(), n, rule);
+            }
+        }
+        if head.ends_with(".toml") {
+            return (format!("xtask/{head}"), 1, rule);
+        }
+    }
+    (String::new(), 0, rule)
+}
+
+fn esc(s: &str) -> String {
+    let mut o = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => o.push_str("\\\""),
+            '\\' => o.push_str("\\\\"),
+            '\n' => o.push_str("\\n"),
+            '\t' => o.push_str("\\t"),
+            c if (c as u32) < 0x20 => o.push_str(&format!("\\u{:04x}", c as u32)),
+            c => o.push(c),
+        }
+    }
+    o
 }

@@ -1,0 +1,233 @@
+//! Rule family 3, interprocedural: hot-path alloc reachability.
+//!
+//! Functions registered in `xtask/hotpath.toml` form the steady-state
+//! inner loop. PR 7 banned allocating constructors in their *own* bodies;
+//! this pass walks the call graph so an allocation any number of calls
+//! deep is also a violation, with the full call path printed. Depth-0
+//! hits keep the original `[hotpath]` id (and message); transitive hits
+//! report as `[alloc-reach]`.
+//!
+//! Manifest format (`hotpath.toml`):
+//!   [functions]    "src/file.rs::fn_name" = "why it is hot"
+//!   [suffixes]     "_into" = "src/linalg"    # every *_into fn under dir
+//!   [warmup]       "src/file.rs::fn_name" = "Mat::zeros"
+//!       A documented warm-up mint: that one token is waived in that one
+//!       fn, and the fn is a BFS *boundary* — it amortizes, so its
+//!       callees are not steady-state code. Any other banned token in a
+//!       warm fn still fires.
+//!   [waived-edges] "caller_qual -> callee_qual" = "why it is legal"
+//!       An edge pruned from the alloc BFS only (cache fills, churn-time
+//!       rebuilds, trait-default fallbacks never taken by the shipped
+//!       backends). The determinism-taint pass still traverses it.
+//!
+//! Every manifest entry must stay live: a `[functions]`/`[warmup]` key
+//! matching nothing, or a `[waived-edges]` edge absent from the graph,
+//! is itself a violation — manifests must not rot as code moves.
+
+use crate::graph::CallGraph;
+use crate::source::SourceFile;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Allocating constructors banned on the hot path. Substring match on
+/// comment-stripped, string-blanked code. Grow-only calls (`resize`,
+/// `reserve`, `extend_from_slice`) are deliberately NOT banned — they are
+/// the sanctioned scratch idiom and are no-ops once warm.
+const BANNED: &[&str] = &[
+    "Vec::new(",
+    "vec!",
+    "with_capacity(",
+    ".to_vec()",
+    ".clone()",
+    ".to_owned()",
+    ".to_string()",
+    "String::from(",
+    "Box::new(",
+    "format!",
+    ".collect",
+    "Mat::zeros(",
+    "Mat::eye(",
+    "Mat::gauss(",
+];
+
+pub struct ReachReport {
+    pub violations: Vec<String>,
+    /// `target/repolint/hotpath_reachability.json`: per-root reachable-fn
+    /// counts + the waived edges — the committed-baseline census.
+    pub reachability_json: String,
+}
+
+pub fn scan(
+    files: &[SourceFile],
+    graph: &CallGraph,
+    functions: &BTreeMap<String, String>,
+    suffixes: &BTreeMap<String, String>,
+    warmup: &BTreeMap<String, String>,
+    waived_edges: &BTreeMap<String, String>,
+) -> Result<ReachReport, String> {
+    let by_rel: BTreeMap<&str, &SourceFile> =
+        files.iter().map(|sf| (sf.rel.as_str(), sf)).collect();
+    let mut violations = Vec::new();
+
+    // Parse + rot-check the waived edges up front.
+    let mut waived: BTreeSet<(String, String)> = BTreeSet::new();
+    let mut waived_recs: Vec<(String, String, String)> = Vec::new();
+    for (key, reason) in waived_edges {
+        let Some((from, to)) = key.split_once(" -> ") else {
+            return Err(format!(
+                "hotpath.toml: [waived-edges] key \"{key}\" must be \"caller_qual -> callee_qual\""
+            ));
+        };
+        let live = graph.edges.get(from).is_some_and(|tos| tos.contains(to));
+        if !live {
+            violations.push(format!(
+                "hotpath.toml: [waived-edges] \"{key}\" names an edge not in the call graph — manifest rot, update the entry"
+            ));
+        }
+        waived.insert((from.to_string(), to.to_string()));
+        waived_recs.push((from.to_string(), to.to_string(), reason.clone()));
+    }
+
+    // Roots: explicit [functions] entries (rot-checked) + [suffixes].
+    let mut root_quals: BTreeSet<&str> = BTreeSet::new();
+    for key in functions.keys() {
+        match graph.by_key.get(key) {
+            Some(ids) => {
+                for &i in ids {
+                    root_quals.insert(&graph.defs[i].qual);
+                }
+            }
+            None => violations.push(format!(
+                "hotpath.toml: [functions] \"{key}\" matches no fn — manifest rot, update the entry"
+            )),
+        }
+    }
+    for (suf, dir) in suffixes {
+        for d in &graph.defs {
+            if d.name.ends_with(suf.as_str()) && d.rel.starts_with(dir.as_str()) {
+                root_quals.insert(&d.qual);
+            }
+        }
+    }
+
+    let mut seen_warm: BTreeMap<&str, bool> =
+        warmup.keys().map(|k| (k.as_str(), false)).collect();
+    let mut reported: BTreeSet<(String, usize, &str)> = BTreeSet::new();
+    let mut reach_counts: BTreeMap<&str, usize> = BTreeMap::new();
+
+    for &root in &root_quals {
+        // BFS over quals; parent links reconstruct the call path.
+        let mut seen: BTreeMap<&str, Option<&str>> = BTreeMap::new();
+        seen.insert(root, None);
+        let mut queue: VecDeque<&str> = VecDeque::new();
+        queue.push_back(root);
+        while let Some(cur) = queue.pop_front() {
+            let Some(ids) = graph.by_qual.get(cur) else { continue };
+            let key = graph.defs[ids[0]].key.as_str();
+            let waiver = warmup.get(key);
+            for &i in ids {
+                let d = &graph.defs[i];
+                let Some(sf) = by_rel.get(d.rel.as_str()) else { continue };
+                for li in d.start..=d.end {
+                    let code = &sf.lines[li].code;
+                    for tok in BANNED {
+                        if !code.contains(tok) {
+                            continue;
+                        }
+                        if let Some(w) = waiver {
+                            if tok.starts_with(w.as_str()) || w.starts_with(tok) {
+                                seen_warm.insert(key, true);
+                                continue;
+                            }
+                        }
+                        if !reported.insert((d.qual.clone(), li, tok)) {
+                            continue;
+                        }
+                        // Path root..=cur via parent links.
+                        let mut path = vec![cur];
+                        let mut up = seen[cur];
+                        while let Some(p) = up {
+                            path.push(p);
+                            up = seen[p];
+                        }
+                        path.reverse();
+                        if path.len() == 1 {
+                            violations.push(format!(
+                                "{}:{}: [hotpath] `{}` allocates inside hot fn `{}` — use a grow-only scratch",
+                                d.rel,
+                                li + 1,
+                                tok.trim_end_matches('('),
+                                d.name
+                            ));
+                        } else {
+                            violations.push(format!(
+                                "{}:{}: [alloc-reach] `{}` allocates in `{}`, reached from hot fn `{}` via {} — use a grow-only scratch",
+                                d.rel,
+                                li + 1,
+                                tok.trim_end_matches('('),
+                                d.name,
+                                root,
+                                path.join(" -> ")
+                            ));
+                        }
+                    }
+                }
+            }
+            if warmup.contains_key(key) {
+                continue; // warm-up boundary: amortized, don't descend
+            }
+            let Some(tos) = graph.edges.get(cur) else { continue };
+            for to in tos {
+                if waived.contains(&(cur.to_string(), to.clone())) {
+                    continue;
+                }
+                if let std::collections::btree_map::Entry::Vacant(e) = seen.entry(to) {
+                    e.insert(Some(cur));
+                    queue.push_back(to);
+                }
+            }
+        }
+        reach_counts.insert(root, seen.len());
+    }
+
+    for (key, hit) in seen_warm {
+        if !hit {
+            violations.push(format!(
+                "hotpath.toml: [warmup] \"{key}\" waived a token that no longer appears — remove it"
+            ));
+        }
+    }
+
+    Ok(ReachReport {
+        violations,
+        reachability_json: reachability_json(&reach_counts, &waived_recs),
+    })
+}
+
+fn reachability_json(
+    reach_counts: &BTreeMap<&str, usize>,
+    waived: &[(String, String, String)],
+) -> String {
+    use crate::graph::esc;
+    let mut out = String::from("{\n  \"roots\": {\n");
+    let n = reach_counts.len();
+    for (i, (qual, count)) in reach_counts.iter().enumerate() {
+        out.push_str(&format!(
+            "    \"{}\": {}{}\n",
+            esc(qual),
+            count,
+            if i + 1 < n { "," } else { "" }
+        ));
+    }
+    out.push_str("  },\n  \"waived_edges\": [\n");
+    for (i, (from, to, reason)) in waived.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"from\": \"{}\", \"to\": \"{}\", \"reason\": \"{}\"}}{}\n",
+            esc(from),
+            esc(to),
+            esc(reason),
+            if i + 1 < waived.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}

@@ -1,0 +1,410 @@
+//! Rule family: per-kernel shape contracts ([shape]).
+//!
+//! `xtask/shapes.toml` declares the dimension algebra of the `*_into` /
+//! `*_rows_into` linalg kernels:
+//!
+//!   [shape.matmul_into]
+//!   "file"     = "src/linalg/mat.rs"
+//!   "params"   = "self[m x k], b[k x n], out[set m x n]"
+//!   "guard.mk" = "self.cols == b.rows"
+//!
+//! and the pass checks it two ways:
+//!
+//!   1. *Guard presence* — every declared kernel body must contain each
+//!      `guard.*` expression as an opening assertion. Matching is on
+//!      whitespace-stripped code and accepts `assert!(expr…`,
+//!      `debug_assert!(expr…` and (for plain `a == b` guards) the
+//!      `assert_eq!(a, b…` / `debug_assert_eq!(a, b…` forms.
+//!   2. *Call-site propagation* — inside every fn, `let`-bound
+//!      `Mat::zeros/eye/gauss/random_orthonormal` dimensions are tracked
+//!      symbolically; at a call of a declared kernel whose arguments are
+//!      plain identifiers, each dim symbol is unified across parameters
+//!      and a conflict between two *integer literals* is a violation
+//!      (`dim k = 3 from a but 7 from b`). `set`-marked params are the
+//!      dims the kernel itself establishes (grow-only reshape) and are
+//!      skipped; rebinding or `reshape_in_place` drops a tracked binding.
+//!
+//! Inequality guards (`m >= n`, range guards) are presence-checked only —
+//! call sites never prove them. A contract whose kernel no longer exists
+//! in its declared file is manifest rot.
+
+use crate::source::SourceFile;
+use crate::spans::fn_spans;
+use std::collections::BTreeMap;
+
+struct Param {
+    name: String,
+    /// Dims the kernel establishes itself (skipped at call sites).
+    set: bool,
+    dims: [String; 2],
+}
+
+struct Contract {
+    kernel: String,
+    file: String,
+    params: Vec<Param>,
+    /// (tag, expr) from the `guard.*` keys, sorted by tag.
+    guards: Vec<(String, String)>,
+}
+
+pub fn scan(
+    files: &[&SourceFile],
+    contracts: &BTreeMap<String, BTreeMap<String, String>>,
+) -> Result<Vec<String>, String> {
+    let mut parsed: Vec<Contract> = Vec::new();
+    for (kernel, entries) in contracts {
+        let Some(file) = entries.get("file") else {
+            return Err(format!("shapes.toml: [shape.{kernel}] is missing the \"file\" key"));
+        };
+        let params = match entries.get("params") {
+            Some(spec) => parse_params(kernel, spec)?,
+            None => Vec::new(),
+        };
+        let mut guards: Vec<(String, String)> = entries
+            .iter()
+            .filter_map(|(k, v)| k.strip_prefix("guard.").map(|t| (t.to_string(), v.clone())))
+            .collect();
+        guards.sort();
+        parsed.push(Contract { kernel: kernel.clone(), file: file.clone(), params, guards });
+    }
+
+    let mut violations = Vec::new();
+    let spans_by_file: BTreeMap<&str, Vec<crate::spans::FnSpan>> =
+        files.iter().map(|sf| (sf.rel.as_str(), fn_spans(sf))).collect();
+    let by_rel: BTreeMap<&str, &SourceFile> =
+        files.iter().map(|sf| (sf.rel.as_str(), *sf)).collect();
+
+    // (1) Guard presence, per contract, in the declared file.
+    for c in &parsed {
+        let defs: Vec<&crate::spans::FnSpan> = spans_by_file
+            .get(c.file.as_str())
+            .map(|spans| spans.iter().filter(|s| s.name == c.kernel).collect())
+            .unwrap_or_default();
+        if defs.is_empty() {
+            violations.push(format!(
+                "shapes.toml: [shape.{}] matches no fn in {} — manifest rot, update the entry",
+                c.kernel, c.file
+            ));
+            continue;
+        }
+        let sf = by_rel[c.file.as_str()];
+        for fd in defs {
+            let body_ws = strip_ws(&body_text(sf, fd.start, fd.end));
+            for (tag, expr) in &c.guards {
+                if !guard_satisfied(&body_ws, expr) {
+                    violations.push(format!(
+                        "{}:{}: [shape] `{}` missing dimension guard `{}` (guard.{})",
+                        c.file,
+                        fd.start + 1,
+                        c.kernel,
+                        expr,
+                        tag
+                    ));
+                }
+            }
+        }
+    }
+
+    // (2) Call-site propagation over every fn body.
+    for sf in files {
+        for fd in &spans_by_file[sf.rel.as_str()] {
+            let body = body_text(sf, fd.start, fd.end);
+            let binds = ctor_bindings(&body);
+            if binds.is_empty() {
+                continue;
+            }
+            for c in &parsed {
+                if c.params.is_empty() {
+                    continue;
+                }
+                check_call_sites(sf, fd.start, &body, &binds, c, &mut violations);
+            }
+        }
+    }
+
+    Ok(violations)
+}
+
+/// `"self[m x k], b[k x n], out[set m x n]"` → params.
+fn parse_params(kernel: &str, spec: &str) -> Result<Vec<Param>, String> {
+    let mut out = Vec::new();
+    for part in split_args(spec) {
+        let bad = || format!("shapes.toml: [shape.{kernel}] bad params entry `{part}`");
+        let part = part.trim();
+        let Some(open) = part.find('[') else { return Err(bad()) };
+        let Some(inner) = part[open + 1..].strip_suffix(']') else { return Err(bad()) };
+        let name = part[..open].trim();
+        if name.is_empty() || !name.chars().all(|c| c.is_alphanumeric() || c == '_') {
+            return Err(bad());
+        }
+        let mut dims = inner.trim();
+        let set = dims.starts_with("set ");
+        if set {
+            dims = dims["set ".len()..].trim();
+        }
+        let ds: Vec<&str> = dims.split(" x ").map(str::trim).collect();
+        if ds.len() != 2 {
+            return Err(bad());
+        }
+        out.push(Param {
+            name: name.to_string(),
+            set,
+            dims: [ds[0].to_string(), ds[1].to_string()],
+        });
+    }
+    Ok(out)
+}
+
+fn body_text(sf: &SourceFile, start: usize, end: usize) -> String {
+    let mut out = String::new();
+    for line in &sf.lines[start..=end] {
+        out.push_str(&line.code);
+        out.push('\n');
+    }
+    out
+}
+
+fn strip_ws(s: &str) -> String {
+    s.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+fn guard_satisfied(body_ws: &str, expr: &str) -> bool {
+    let e = strip_ws(expr);
+    let mut forms = Vec::new();
+    if !e.contains("&&") {
+        if let Some((lhs, rhs)) = e.split_once("==") {
+            forms.push(format!("assert_eq!({lhs},{rhs}"));
+            forms.push(format!("debug_assert_eq!({lhs},{rhs}"));
+        }
+    }
+    forms.push(format!("assert!({e}"));
+    forms.push(format!("debug_assert!({e}"));
+    forms.iter().any(|f| body_ws.contains(f.as_str()))
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Longest trailing identifier of `s` (empty when `s` doesn't end in one).
+fn trailing_ident(s: &str) -> &str {
+    let bytes = s.as_bytes();
+    let mut start = bytes.len();
+    while start > 0 && is_ident(bytes[start - 1] as char) && bytes[start - 1].is_ascii() {
+        start -= 1;
+    }
+    let run = &s[start..];
+    match run.find(|c: char| c.is_alphabetic() || c == '_') {
+        Some(at) if at == 0 => run,
+        _ => "",
+    }
+}
+
+/// Inner text of the paren group opening at `open` (byte index of `(`).
+fn balanced_args(text: &str, open: usize) -> Option<&str> {
+    let bytes = text.as_bytes();
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&text[open + 1..i]);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Split a balanced argument string on top-level commas.
+fn split_args(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut from = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '[' | '{' => depth += 1,
+            ')' | ']' | '}' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(s[from..i].trim());
+                from = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let last = s[from..].trim();
+    if !last.is_empty() {
+        out.push(last);
+    }
+    out
+}
+
+const CTORS: &[&str] = &["zeros", "eye", "gauss", "random_orthonormal"];
+
+/// `let [mut] id [: Mat] = Mat::<ctor>(r, c, …)` bindings: id → (rows,
+/// cols) text. A rebinding with different dims or any later
+/// `id.reshape_in_place(…)` drops the binding.
+fn ctor_bindings(body: &str) -> BTreeMap<String, [String; 2]> {
+    let mut binds: BTreeMap<String, [String; 2]> = BTreeMap::new();
+    let mut dropped: Vec<String> = Vec::new();
+    for at in crate::source::find_word(body, "Mat") {
+        let rest = &body[at + "Mat".len()..];
+        let Some(rest) = rest.strip_prefix("::") else { continue };
+        let ctor_len = rest.find(|c: char| !is_ident(c)).unwrap_or(rest.len());
+        let ctor = &rest[..ctor_len];
+        if !CTORS.contains(&ctor) {
+            continue;
+        }
+        let after = &rest[ctor_len..];
+        let ws = after.len() - after.trim_start().len();
+        if !after[ws..].starts_with('(') {
+            continue;
+        }
+        let open = at + "Mat".len() + 2 + ctor_len + ws;
+        // Backtrack: `let [mut] id [: Mat] =` must precede `Mat::ctor(`.
+        let mut pre = body[..at].trim_end();
+        let Some(p) = pre.strip_suffix('=') else { continue };
+        if p.ends_with(['=', '!', '<', '>']) {
+            continue; // `==`, `!=`, `<=`, `>=` comparisons, not a binding
+        }
+        pre = p.trim_end();
+        if let Some(p) = pre.strip_suffix("Mat") {
+            let p = p.trim_end();
+            let Some(p) = p.strip_suffix(':') else { continue };
+            pre = p.trim_end();
+        }
+        let ident = trailing_ident(pre);
+        if ident.is_empty() {
+            continue;
+        }
+        let mut head = pre[..pre.len() - ident.len()].trim_end();
+        if let Some(p) = head.strip_suffix("mut") {
+            if p.ends_with(char::is_whitespace) {
+                head = p.trim_end();
+            }
+        }
+        if trailing_ident(head) != "let" {
+            continue;
+        }
+        let Some(args) = balanced_args(body, open) else { continue };
+        let parts = split_args(args);
+        let dims = if ctor == "eye" {
+            match parts.first() {
+                Some(d) => [d.to_string(), d.to_string()],
+                None => continue,
+            }
+        } else if parts.len() >= 2 {
+            [parts[0].to_string(), parts[1].to_string()]
+        } else {
+            continue;
+        };
+        if let Some(prev) = binds.get(ident) {
+            if *prev != dims {
+                dropped.push(ident.to_string());
+            }
+        }
+        binds.insert(ident.to_string(), dims);
+    }
+    for id in dropped {
+        binds.remove(&id);
+    }
+    // `id.reshape_in_place(…)` invalidates the tracked dims.
+    let mut from = 0;
+    while let Some(pos) = body[from..].find("reshape_in_place") {
+        let at = from + pos;
+        from = at + "reshape_in_place".len();
+        let pre = body[..at].trim_end();
+        let Some(pre) = pre.strip_suffix('.') else { continue };
+        let ident = trailing_ident(pre.trim_end());
+        if !ident.is_empty() {
+            binds.remove(ident);
+        }
+    }
+    binds
+}
+
+fn check_call_sites(
+    sf: &SourceFile,
+    fn_start: usize,
+    body: &str,
+    binds: &BTreeMap<String, [String; 2]>,
+    c: &Contract,
+    violations: &mut Vec<String>,
+) {
+    let is_method = c.params[0].name == "self";
+    for at in crate::source::find_word(body, &c.kernel) {
+        let after = &body[at + c.kernel.len()..];
+        let ws = after.len() - after.trim_start().len();
+        if !after[ws..].starts_with('(') {
+            continue;
+        }
+        let open = at + c.kernel.len() + ws;
+        let pre = body[..at].trim_end();
+        if pre.ends_with("fn") && trailing_ident(pre) == "fn" {
+            continue; // the kernel's own definition
+        }
+        // Align plain-identifier arguments with the declared params.
+        let mut pairs: Vec<(&Param, &str)> = Vec::new();
+        let positional: &[Param];
+        if is_method {
+            let Some(p) = pre.strip_suffix('.') else { continue };
+            let recv = trailing_ident(p.trim_end());
+            if recv.is_empty() {
+                continue; // chained/indexed receiver: not resolvable
+            }
+            pairs.push((&c.params[0], recv));
+            positional = &c.params[1..];
+        } else {
+            positional = &c.params[..];
+        }
+        let Some(args) = balanced_args(body, open) else { continue };
+        let argv = split_args(args);
+        for (p, a) in positional.iter().zip(argv.iter()) {
+            let mut a = a.trim();
+            a = a.strip_prefix('&').unwrap_or(a).trim_start();
+            if let Some(rest) = a.strip_prefix("mut ") {
+                a = rest.trim_start();
+            }
+            if !a.is_empty() && a.chars().all(is_ident) && !a.starts_with(|c: char| c.is_ascii_digit())
+            {
+                pairs.push((p, a));
+            }
+        }
+        // Unify dim symbols; two conflicting *integer literals* fire.
+        let mut sym: BTreeMap<&str, (&str, &str)> = BTreeMap::new();
+        let mut conflict: Option<(&str, (&str, &str), (&str, &str))> = None;
+        for &(p, ident) in &pairs {
+            if p.set {
+                continue;
+            }
+            let Some(dims) = binds.get(ident) else { continue };
+            for (s, v) in p.dims.iter().zip(dims.iter()) {
+                match sym.get(s.as_str()) {
+                    Some(&(v0, i0)) if v0 != v.as_str() => {
+                        if v0.chars().all(|c| c.is_ascii_digit())
+                            && v.chars().all(|c| c.is_ascii_digit())
+                        {
+                            conflict = Some((s.as_str(), (v0, i0), (v.as_str(), ident)));
+                        }
+                    }
+                    Some(_) => {}
+                    None => {
+                        sym.insert(s.as_str(), (v.as_str(), ident));
+                    }
+                }
+            }
+        }
+        if let Some((s, (v0, i0), (v1, i1))) = conflict {
+            let line = fn_start + body[..at].matches('\n').count() + 1;
+            violations.push(format!(
+                "{}:{}: [shape] call to `{}`: dim `{}` = {} (from `{}`) but {} (from `{}`)",
+                sf.rel, line, c.kernel, s, v0, i0, v1, i1
+            ));
+        }
+    }
+}

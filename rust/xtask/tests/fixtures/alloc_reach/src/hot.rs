@@ -1,0 +1,11 @@
+//! Fixture: a registered hot-path fn whose own body is clean but whose
+//! callee allocates — only the transitive [alloc-reach] family sees it.
+
+pub fn step(out: &mut Vec<f64>) {
+    refill(out);
+}
+
+fn refill(out: &mut Vec<f64>) {
+    let tmp = vec![0.0; 4];
+    out.extend_from_slice(&tmp);
+}

@@ -1,0 +1,20 @@
+//! Fixture: a bit-stable root that reaches an fma both through the
+//! declared policy seam (legal) and through a rogue helper (the
+//! [det-taint] violation).
+
+pub fn run(xs: &mut [f64]) {
+    dispatch(xs);
+    rogue(xs);
+}
+
+pub fn dispatch(xs: &mut [f64]) {
+    for x in xs.iter_mut() {
+        *x = x.mul_add(2.0, 1.0);
+    }
+}
+
+fn rogue(xs: &mut [f64]) {
+    for x in xs.iter_mut() {
+        *x = x.mul_add(0.5, 0.25);
+    }
+}

@@ -1,0 +1,11 @@
+//! Fixture: literal dims at the call site contradict the kernel's
+//! declared contract — `a` says k = 3, `b` says k = 7.
+
+use crate::mat::Mat;
+
+pub fn demo() {
+    let a = Mat::zeros(4, 3);
+    let b = Mat::zeros(7, 2);
+    let mut out = Mat::zeros(4, 2);
+    a.matmul_into(&b, &mut out);
+}

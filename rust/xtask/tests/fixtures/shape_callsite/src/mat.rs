@@ -1,0 +1,27 @@
+//! Fixture: a miniature Mat with a contracted matmul kernel. The kernel
+//! itself is guard-free by contract; the violation lives at the call
+//! site in driver.rs.
+
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn matmul_into(&self, b: &Mat, out: &mut Mat) {
+        for i in 0..self.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for p in 0..self.cols {
+                    s += self.data[i * self.cols + p] * b.data[p * b.cols + j];
+                }
+                out.data[i * out.cols + j] = s;
+            }
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Fixture: a kernel with a declared length contract and no opening
+//! guard in the body — the [shape] guard-presence violation.
+
+pub fn scale_into(xs: &[f64], out: &mut [f64]) {
+    for (o, x) in out.iter_mut().zip(xs) {
+        *o = 2.0 * x;
+    }
+}

@@ -40,7 +40,55 @@ fn hashmap_fires() {
 
 #[test]
 fn hotpath_alloc_fires() {
+    // Depth-0 allocation in the hot fn's own body: the call-graph engine
+    // must keep reporting it under the original [hotpath] id.
     assert_fires_only("hotpath_alloc", "[hotpath]");
+}
+
+#[test]
+fn alloc_reach_fires() {
+    let vs = lint("alloc_reach");
+    assert!(
+        vs.iter().any(|v| {
+            v.contains("[alloc-reach]") && v.contains("reached from hot fn") && v.contains("refill")
+        }),
+        "expected the transitive alloc violation with its call path, got: {vs:#?}"
+    );
+    assert!(vs.iter().all(|v| v.contains("[alloc-reach]")), "only [alloc-reach] expected: {vs:#?}");
+}
+
+#[test]
+fn det_taint_fires() {
+    let vs = lint("det_taint");
+    assert!(
+        vs.iter().any(|v| v.contains("[det-taint]") && v.contains("rogue")),
+        "expected the out-of-seam fma violation, got: {vs:#?}"
+    );
+    // The seam-guarded fma in `dispatch` must NOT fire, and the seam
+    // itself must count as reached (no manifest-rot noise).
+    assert!(vs.iter().all(|v| v.contains("[det-taint]") && !v.contains("dispatch")), "{vs:#?}");
+}
+
+#[test]
+fn shape_guard_fires() {
+    let vs = lint("shape_guard");
+    assert!(
+        vs.iter().any(|v| v.contains("[shape]") && v.contains("missing dimension guard")),
+        "expected the missing-guard violation, got: {vs:#?}"
+    );
+    assert!(vs.iter().all(|v| v.contains("[shape]")), "only [shape] expected: {vs:#?}");
+}
+
+#[test]
+fn shape_callsite_fires() {
+    let vs = lint("shape_callsite");
+    assert!(
+        vs.iter().any(|v| {
+            v.contains("[shape]") && v.contains("dim `k`") && v.contains("3") && v.contains("7")
+        }),
+        "expected the call-site dim conflict, got: {vs:#?}"
+    );
+    assert!(vs.iter().all(|v| v.contains("[shape]")), "only [shape] expected: {vs:#?}");
 }
 
 #[test]
@@ -111,4 +159,15 @@ fn real_tree_is_lint_clean() {
         report.violations.join("\n")
     );
     assert!(report.unsafe_sites > 0, "the unsafe census should see the SIMD/pool core");
+    // The call-graph engine must actually see the tree: the artifact
+    // carries the hot entry points and the reachability census is
+    // non-trivial for the S-DOT driver.
+    assert!(
+        report.call_graph_json.contains("src/algorithms/sdot.rs::SdotRun::step"),
+        "call graph artifact should contain the S-DOT step node"
+    );
+    assert!(
+        report.reachability_json.contains("src/algorithms/sdot.rs::SdotRun::step"),
+        "reachability census should have the S-DOT step root"
+    );
 }
